@@ -1,0 +1,48 @@
+//! Quickstart: simulate the paper's 4-stream L2 microbenchmark with
+//! per-stream stats and print the breakdown the paper's §4 describes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use streamsim::config::SimConfig;
+use streamsim::sim::GpuSim;
+use streamsim::stats::print as stat_print;
+use streamsim::workloads;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a config preset (the paper validates on a TITAN V) and
+    //    make sure concurrent kernels + per-stream stats are on —
+    //    paper §4 step 1: `-gpgpu_concurrent_kernel_sm 1`.
+    let mut cfg = SimConfig::preset("sm7_titanv_mini")?;
+    cfg.concurrent_kernel_sm = true;
+    cfg.stat_mode = streamsim::stats::StatMode::PerStream;
+    println!("config: {}\n", cfg.summary());
+
+    // 2. Generate the paper's §5.1 workload: 4 streams running the
+    //    same pointer-chase kernel over one shared array.
+    let g = workloads::generate("l2_lat")?;
+    println!("workload: {} ({} kernels on streams {:?})\n",
+             g.name, g.workload.kernels.len(), g.workload.streams());
+
+    // 3. Simulate.
+    let mut sim = GpuSim::new(cfg)?;
+    sim.enqueue_workload(&g.workload)?;
+    sim.run()?;
+    let stats = sim.stats();
+    println!("simulated {} cycles, {} kernels retired\n",
+             stats.total_cycles, stats.kernels_done);
+
+    // 4. Per-stream breakdowns — the paper's headline output
+    //    ("L2_cache_stats_breakdown", §4 step 4).
+    print!("{}", stat_print::print_all_streams(
+        &stats.l2, "L2_cache_stats_breakdown"));
+
+    // 5. Per-kernel launch/exit windows (§3.2) + the timeline.
+    for (stream, uid, _) in stats.kernel_times.finished() {
+        print!("{}", stat_print::print_kernel_time(
+            &stats.kernel_times, stream, uid));
+    }
+    println!("\n{}", sim.render_timeline(72));
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Figure 1 reproduction: two kernels on different streams overlap and
+//! update the same stat cell in the same cycle — the clean (unpatched)
+//! counter under-counts, the per-stream (tip) counters don't.
+//!
+//! ```bash
+//! cargo run --release --example timeline_demo
+//! ```
+
+use streamsim::config::SimConfig;
+use streamsim::sim::GpuSim;
+use streamsim::stats::StatMode;
+use streamsim::trace::{Dim3, KernelTrace, MemInstr, MemSpace, TbTrace,
+                       TraceOp, Workload};
+
+/// Two identical kernels on two streams, disjoint footprints, enough
+/// parallel warps that both cores bump `GLOBAL_ACC_R/MISS` in the same
+/// cycle.
+fn workload() -> Workload {
+    let mk = |stream: u64, base: u64| KernelTrace {
+        name: format!("overlap_k{stream}"),
+        kernel_id: 1,
+        grid: Dim3::linear(8),
+        block: Dim3::linear(64),
+        stream_id: stream,
+        shared_mem_bytes: 0,
+        tbs: (0..8)
+            .map(|tb| TbTrace {
+                warps: (0..2)
+                    .map(|w| {
+                        vec![TraceOp::Mem(MemInstr {
+                            pc: 0,
+                            space: MemSpace::Global,
+                            is_write: false,
+                            size: 4,
+                            base_addr: base
+                                + (tb * 2 + w) as u64 * 0x80,
+                            stride: 4,
+                            active_mask: u32::MAX,
+                            l1_bypass: false,
+                        })]
+                    })
+                    .collect(),
+            })
+            .collect(),
+    };
+    Workload {
+        kernels: vec![mk(1, 0x10_0000), mk(2, 0x80_0000)],
+        memcpys: vec![],
+    }
+}
+
+fn run(mode: StatMode) -> (u64, u64, String) {
+    let mut cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+    cfg.stat_mode = mode;
+    let mut sim = GpuSim::new(cfg).unwrap();
+    sim.enqueue_workload(&workload()).unwrap();
+    sim.run().unwrap();
+    let total = sim.stats().l1.total_table().total()
+        + sim.stats().l2.total_table().total();
+    let dropped =
+        sim.stats().l1.dropped() + sim.stats().l2.dropped();
+    (total, dropped, sim.render_timeline(72))
+}
+
+fn main() {
+    println!("=== Figure 1: overlapping kernels and the stat \
+              under-count ===\n");
+    let (tip_total, _, gantt) = run(StatMode::PerStream);
+    let (clean_total, dropped, _) = run(StatMode::AggregateBuggy);
+    let (exact_total, _, _) = run(StatMode::AggregateExact);
+
+    println!("timeline (concurrent, per-stream tracking):\n{gantt}");
+    println!("total stat increments:");
+    println!("  tip (per-stream, patched):   {tip_total}");
+    println!("  exact oracle:                {exact_total}");
+    println!("  clean (unpatched, flat):     {clean_total}   \
+              <- lost {dropped} same-cycle cross-stream increments");
+    assert_eq!(tip_total, exact_total);
+    assert!(clean_total <= exact_total);
+    if dropped > 0 {
+        println!("\nThe unpatched counter under-counted by {} — the \
+                  inaccuracy the paper's Figure 1 illustrates.",
+                 exact_total - clean_total);
+    }
+}

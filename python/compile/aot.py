@@ -1,0 +1,69 @@
+"""AOT: lower every L2 model to HLO *text* for the Rust runtime.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+``HloModuleProto`` — is the interchange format: the image's xla_extension
+0.5.1 rejects jax>=0.5 protos (64-bit instruction ids fail its
+``proto.id() <= INT_MAX`` check), while the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Lowering goes through stablehlo -> XlaComputation with
+``return_tuple=True`` so every artifact returns a tuple; the Rust side
+unwraps with ``to_tuple()``.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+Also writes ``manifest.txt`` (name, num inputs/outputs, shapes) consumed
+by rust/src/runtime tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, example_args) in model.MODELS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        args_desc = ";".join(
+            f"{a.dtype}{list(a.shape)}" for a in example_args)
+        n_out = len(lowered.out_info)
+        manifest.append(f"{name} inputs={len(example_args)} "
+                        f"outputs={n_out} args={args_desc}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    # kept for Makefile back-compat: --out FILE writes the manifest marker
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = p.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    lower_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

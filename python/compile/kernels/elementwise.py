@@ -1,0 +1,83 @@
+"""Fused elementwise Pallas kernel for the paper's §5.2 microbenchmarks.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA benchmarks
+launch one 256/1024-thread block per 256/1024 elements; on TPU the natural
+unit is a VPU tile of (8, 128) lanes streamed through VMEM. We fuse the
+whole 4-kernel stream program into ONE kernel so XLA sees a single
+pallas_call — x is read once instead of twice, and y's intermediate
+(saxpy→scale) never round-trips to HBM. The per-element select in
+``add_half`` is expressed with an iota mask instead of divergent branches
+(TPU has no warp divergence; predication is free on the VPU).
+
+All kernels use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see DESIGN.md §7), and interpret-mode lowers to plain
+HLO that the Rust runtime executes byte-identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VPU-friendly block: 8 sublanes x 128 lanes x 8 rows = 8192 elements.
+# For the paper's N = 1<<18 .. 1<<20 this gives a 32..128-step grid; each
+# block's working set (4 arrays x 8192 x 4B = 128 KiB) sits well inside a
+# TPU core's ~16 MiB VMEM with room for double buffering.
+BLOCK = 8192
+
+
+def _stream_program_kernel(x_ref, y_ref, z_ref, a_ref,
+                           yo_ref, zo_ref, ao_ref, *, alpha, beta, s, n):
+    """One fused block of the 4-kernel program.
+
+    Grid is 1-D over ceil(n / BLOCK); BlockSpec slices each operand into
+    (BLOCK,) windows resident in VMEM. ``n`` is the *logical* length —
+    the trailing block is masked (inputs are zero-padded by the caller,
+    and add_half's index test uses global positions from program_id).
+    """
+    pid = pl.program_id(0)
+    base = pid * BLOCK
+    x = x_ref[...]
+    y = y_ref[...]
+    z = z_ref[...]
+    a = a_ref[...]
+
+    y1 = alpha * x + y          # kernel 1: saxpy (stream 0)
+    y2 = s * y1                 # kernel 2: scale (stream 0, dep on k1)
+    z1 = beta * x + z           # kernel 3: saxpy (stream 1, independent)
+    # kernel 4: add_half — global index decides the branch.
+    gidx = base + jax.lax.iota(jnp.int32, BLOCK)
+    a1 = jnp.where(gidx < n // 2, y2 + a, 2.0 * a)
+
+    yo_ref[...] = y2
+    zo_ref[...] = z1
+    ao_ref[...] = a1
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "s"))
+def stream_program(x, y, z, a, *, alpha=2.0, beta=3.0, s=2.0):
+    """Fused benchmark_{1,3}_stream program. 1-D f32 arrays, any length."""
+    n = x.shape[0]
+    padded = pl.cdiv(n, BLOCK) * BLOCK
+    pad = padded - n
+
+    def p(v):
+        return jnp.pad(v, (0, pad)) if pad else v
+
+    xp, yp, zp, ap = p(x), p(y), p(z), p(a)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    out_shape = [jax.ShapeDtypeStruct((padded,), x.dtype)] * 3
+    kern = functools.partial(
+        _stream_program_kernel, alpha=alpha, beta=beta, s=s, n=n)
+    yo, zo, ao = pl.pallas_call(
+        kern,
+        grid=(padded // BLOCK,),
+        in_specs=[spec] * 4,
+        out_specs=[spec] * 3,
+        out_shape=out_shape,
+        interpret=True,
+    )(xp, yp, zp, ap)
+    return yo[:n], zo[:n], ao[:n]

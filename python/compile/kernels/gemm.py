@@ -1,0 +1,80 @@
+"""MXU-tiled Pallas GEMM for the DeepBench workload (paper §5.3).
+
+DeepBench's ``inference_half_35_1500_2560_0_0`` is an fp16 GEMM with
+M=35, N=1500, K=2560, no transposes. The paper runs it through cuBLAS on a
+simulated TITAN V; here it is both (a) the *functional* compute the Rust
+simulator validates against and (b) the source of the synthetic memory
+trace (`rust/src/workloads/deepbench.rs` mirrors this exact tiling).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation):
+  CUDA HGEMM tiles a threadblock over shared memory and issues tensor-core
+  WMMA fragments. The TPU analogue tiles for the 128x128 MXU systolic
+  array: BlockSpec carves (TM, K) x (K, TN) panels into VMEM, the kernel
+  runs a fori_loop over K-chunks feeding (TM, TK) @ (TK, TN) matmuls with
+  fp32 accumulation (``preferred_element_type``), and writes the fp16
+  result once. M=35 is padded to TM=128 — the same padding a tensor-core
+  HGEMM performs to fill its 16x16 fragments; utilization implications are
+  documented in DESIGN.md §8.
+
+VMEM per grid step (defaults TM=TN=128, TK=512):
+  A panel 128*512*2B = 128 KiB, B panel 512*128*2B = 128 KiB,
+  acc 128*128*4B = 64 KiB -> ~320 KiB << 16 MiB, leaving headroom for
+  double-buffered HBM->VMEM prefetch of the next K chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TM, TN, TK = 128, 128, 512
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, k_steps):
+    """One (TM, TN) output tile: accumulate over K in TK chunks.
+
+    a_ref: (TM, K) panel, b_ref: (K, TN) panel — both VMEM-resident for
+    this grid step; o_ref: (TM, TN).
+    """
+    def body(ki, acc):
+        a = a_ref[:, pl.dslice(ki * TK, TK)]
+        b = b_ref[pl.dslice(ki * TK, TK), :]
+        return acc + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(
+        0, k_steps, body, jnp.zeros((TM, TN), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@jax.jit
+def gemm(a, b):
+    """``a @ b`` with fp32 accumulation; fp16/bf16/f32 in, same dtype out.
+
+    Shapes are padded up to the (TM, TN, TK) tile grid and the result is
+    sliced back — matching cuBLAS's internal padding for odd M like 35.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    mp = pl.cdiv(m, TM) * TM
+    np_ = pl.cdiv(n, TN) * TN
+    kp = pl.cdiv(k, TK) * TK
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    kern = functools.partial(_gemm_kernel, k_steps=kp // TK)
+    out = pl.pallas_call(
+        kern,
+        grid=(mp // TM, np_ // TN),
+        in_specs=[
+            pl.BlockSpec((TM, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, TN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

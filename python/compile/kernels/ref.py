@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contracts: every Pallas kernel in this package
+must match its oracle to float tolerance (checked by ``python/tests``).
+They are deliberately written in the most obvious jnp style — no tiling,
+no tricks — so a reviewer can audit them against the paper's benchmark
+source in §5 directly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Microbenchmark bodies (paper §5.2: benchmark_{1,3}_stream.cu)
+# ---------------------------------------------------------------------------
+
+def saxpy(a, x, y):
+    """``y[i] = a*x[i] + y[i]`` (kernels 1 and 3 of the paper's bench)."""
+    return a * x + y
+
+
+def scale(s, a):
+    """``a[i] = s*a[i]`` (kernel 2)."""
+    return s * a
+
+
+def add_half(a, b):
+    """Kernel 4: ``b[i] = i < n/2 ? a[i]+b[i] : 2*b[i]``."""
+    n = b.shape[0]
+    i = jnp.arange(n)
+    return jnp.where(i < n // 2, a + b, 2.0 * b)
+
+
+def stream_program(x, y, z, a_arr, *, alpha=2.0, beta=3.0, s=2.0):
+    """The full 4-kernel program of benchmark_{1,3}_stream.cu.
+
+    Stream 0: saxpy(y ← αx+y) → scale(y ← s·y) → add(a ← f(y,a))
+    Stream 1: saxpy(z ← βx+z) (independent)
+
+    Returns (y', z', a') — the final contents of the three mutated arrays.
+    """
+    y1 = saxpy(alpha, x, y)        # kernel 1
+    y2 = scale(s, y1)              # kernel 2 (dependent on k1)
+    z1 = saxpy(beta, x, z)         # kernel 3 (independent, stream_1)
+    a1 = add_half(y2, a_arr)       # kernel 4 (dependent on k2)
+    return y2, z1, a1
+
+
+# ---------------------------------------------------------------------------
+# DeepBench GEMM (paper §5.3: inference_half_35_1500_2560_0_0)
+# ---------------------------------------------------------------------------
+
+def gemm(a, b):
+    """fp16 in, fp32 accumulate, fp16 out — cuBLAS HGEMM semantics."""
+    acc = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    return acc.astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-stream stat aggregation (the paper's contribution, batched form)
+# ---------------------------------------------------------------------------
+
+def stats_aggregate(stream_ids, types, outcomes, valid,
+                    *, num_streams, num_types, num_outcomes):
+    """Count events into a dense per-stream stat cube.
+
+    Inputs are flat i32 event records ``(stream, access_type, outcome)``
+    with a validity mask; output is ``counts[S, T, O]`` in f32 (counts are
+    exactly representable well past any realistic batch size).
+
+    This is the oracle for the MXU scatter-add formulation in
+    ``stats_agg.py`` and mirrors GPGPU-Sim's ``inc_stats(type, outcome,
+    streamID)`` hot path, batched.
+    """
+    flat = (stream_ids * num_types + types) * num_outcomes + outcomes
+    flat = jnp.where(valid.astype(bool), flat, -1)
+    n_bins = num_streams * num_types * num_outcomes
+    counts = jnp.zeros((n_bins,), jnp.float32).at[flat].add(
+        valid.astype(jnp.float32), mode="drop")
+    return counts.reshape(num_streams, num_types, num_outcomes)

@@ -1,0 +1,90 @@
+"""Per-stream stat aggregation as an MXU-friendly Pallas kernel.
+
+This is the paper's hot path — GPGPU-Sim's ``inc_stats(access_type,
+access_outcome, streamID)`` — batched: given N event records
+``(stream, type, outcome)``, produce the dense per-stream stat cube
+``counts[S, T, O]`` that §4 of the paper prints as
+``Total_core_cache_stats_breakdown``.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): a CUDA port would
+use an ``atomicAdd`` histogram in shared memory; the TPU has no scatter
+atomics, so scatter-add is re-expressed as a matmul: build a one-hot
+matrix ``H[N, S*T*O]`` per block and compute ``ones[1,N] @ H`` on the MXU.
+Comparisons + a broadcasted iota build H entirely on the VPU; the
+reduction over N runs on the MXU at full systolic throughput. Events are
+processed in (EVENTS_BLOCK,) chunks accumulated across a 1-D grid —
+Pallas guarantees sequential grid order on TPU, so the in-place
+accumulation into ``o_ref`` is race-free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EVENTS_BLOCK = 2048
+
+
+def _stats_kernel(flat_ref, valid_ref, o_ref, *, n_bins):
+    """Accumulate one EVENTS_BLOCK chunk of flattened bin ids into o_ref.
+
+    flat_ref: (EVENTS_BLOCK,) i32 flattened (stream*T + type)*O + outcome;
+    valid_ref: (EVENTS_BLOCK,) f32 0/1 mask; o_ref: (1, n_bins) f32.
+    """
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    flat = flat_ref[...]
+    valid = valid_ref[...]
+    # One-hot H[N, n_bins] via broadcasted compare; invalid rows are all-0
+    # because their flat id is forced to -1 by the caller.
+    bins = jax.lax.iota(jnp.int32, n_bins)
+    onehot = (flat[:, None] == bins[None, :]).astype(jnp.float32)
+    onehot = onehot * valid[:, None]
+    # MXU reduction: ones[1, N] @ H[N, n_bins] -> [1, n_bins].
+    ones = jnp.ones((1, EVENTS_BLOCK), jnp.float32)
+    o_ref[...] += jnp.dot(ones, onehot, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_streams", "num_types", "num_outcomes"))
+def stats_aggregate(stream_ids, types, outcomes, valid,
+                    *, num_streams, num_types, num_outcomes):
+    """Dense per-stream stat cube from flat event records.
+
+    Same contract as ``ref.stats_aggregate``; f32 counts (exact for any
+    realistic batch), shape (num_streams, num_types, num_outcomes).
+    """
+    n = stream_ids.shape[0]
+    n_bins = num_streams * num_types * num_outcomes
+    flat = (stream_ids * num_types + types) * num_outcomes + outcomes
+    flat = jnp.where(valid.astype(bool), flat, -1).astype(jnp.int32)
+
+    padded = pl.cdiv(n, EVENTS_BLOCK) * EVENTS_BLOCK
+    pad = padded - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad), constant_values=-1)
+        valid = jnp.pad(valid.astype(jnp.float32), (0, pad))
+    else:
+        valid = valid.astype(jnp.float32)
+
+    kern = functools.partial(_stats_kernel, n_bins=n_bins)
+    out = pl.pallas_call(
+        kern,
+        grid=(padded // EVENTS_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((EVENTS_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((EVENTS_BLOCK,), lambda i: (i,)),
+        ],
+        # every grid step accumulates into the same (1, n_bins) window
+        out_specs=pl.BlockSpec((1, n_bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_bins), jnp.float32),
+        interpret=True,
+    )(flat, valid)
+    return out.reshape(num_streams, num_types, num_outcomes)

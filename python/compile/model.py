@@ -1,0 +1,87 @@
+"""L2 — the jitted compute graphs the Rust runtime executes.
+
+Each entry in ``MODELS`` is one AOT artifact: a pure function plus the
+example arguments it is lowered against. ``aot.py`` lowers every entry to
+HLO text in ``artifacts/``; the Rust side (`rust/src/runtime`) compiles
+them once on the PJRT CPU client and executes them from the coordinator.
+
+Python never runs at simulation time — these graphs exist so the Rust
+simulator can (a) functionally execute the very kernels whose *timing* it
+simulates (paper §5 workloads) and (b) offload batched per-stream stat
+aggregation (the paper's contribution, expressed as data-parallel compute).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import elementwise, gemm, stats_agg
+
+# Stat-cube geometry shared with rust/src/stats/mod.rs. Keep in sync:
+# NUM_TYPES == AccessType::COUNT, NUM_OUTCOMES == AccessOutcome::COUNT.
+NUM_STREAMS = 8
+NUM_TYPES = 10
+NUM_OUTCOMES = 6
+EVENTS_N = 16384
+
+# Paper workload sizes.
+BENCH1_N = 1 << 20          # benchmark_1_stream.cu: N = 1<<20
+BENCH3_N = 1 << 18          # benchmark_3_stream.cu: N = 1<<18
+DEEPBENCH_M, DEEPBENCH_N, DEEPBENCH_K = 35, 1500, 2560
+MINI_M, MINI_N, MINI_K = 35, 256, 512   # CI-speed variant
+
+
+def stream_program_fn(x, y, z, a):
+    """benchmark_{1,3}_stream program (alpha=2, beta=3, s=2 per paper)."""
+    return elementwise.stream_program(x, y, z, a, alpha=2.0, beta=3.0, s=2.0)
+
+
+def deepbench_gemm_fn(a, b):
+    """DeepBench inference_half GEMM, fp16 with fp32 accumulate."""
+    return (gemm.gemm(a, b),)
+
+
+def stats_aggregate_fn(stream_ids, types, outcomes, valid):
+    """Per-stream stat cube over a fixed-size event batch."""
+    return (stats_agg.stats_aggregate(
+        stream_ids, types, outcomes, valid,
+        num_streams=NUM_STREAMS, num_types=NUM_TYPES,
+        num_outcomes=NUM_OUTCOMES),)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _f16(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float16)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# name -> (fn, example_args). One HLO artifact per entry.
+MODELS = {
+    "stream_program_b1": (
+        stream_program_fn,
+        (_f32(BENCH1_N), _f32(BENCH1_N), _f32(BENCH1_N), _f32(BENCH1_N)),
+    ),
+    "stream_program_b3": (
+        stream_program_fn,
+        (_f32(BENCH3_N), _f32(BENCH3_N), _f32(BENCH3_N), _f32(BENCH3_N)),
+    ),
+    "deepbench_gemm": (
+        deepbench_gemm_fn,
+        (_f16(DEEPBENCH_M, DEEPBENCH_K), _f16(DEEPBENCH_K, DEEPBENCH_N)),
+    ),
+    "deepbench_gemm_mini": (
+        deepbench_gemm_fn,
+        (_f16(MINI_M, MINI_K), _f16(MINI_K, MINI_N)),
+    ),
+    "stats_aggregate": (
+        stats_aggregate_fn,
+        (_i32(EVENTS_N), _i32(EVENTS_N), _i32(EVENTS_N), _i32(EVENTS_N)),
+    ),
+}

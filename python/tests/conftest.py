@@ -1,0 +1,8 @@
+"""Make `pytest python/tests/` work from the repo root (and anywhere):
+the `compile` package lives in `python/`, which must be importable."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))

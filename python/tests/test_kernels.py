@@ -1,0 +1,200 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+The CORE correctness signal for the compile path. Shapes/dtypes are swept
+hypothesis-style with a seeded PRNG (the image has no `hypothesis`
+package; the sweep below is an explicit deterministic equivalent — many
+random shapes, odd sizes, edge cases — run on every `make test`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import elementwise, gemm, ref, stats_agg
+
+RNG = np.random.default_rng(0xACCE1)
+
+
+def rand_f32(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# elementwise.stream_program vs ref.stream_program
+# ---------------------------------------------------------------------------
+
+# Odd, block-straddling, tiny, and paper-exact sizes.
+STREAM_SIZES = [1, 2, 7, 255, 256, 257, 8191, 8192, 8193,
+                20000, 1 << 14, (1 << 18), 3 * 8192 + 17]
+
+
+@pytest.mark.parametrize("n", STREAM_SIZES)
+def test_stream_program_matches_ref(n):
+    x, y, z, a = (rand_f32(n) for _ in range(4))
+    got = elementwise.stream_program(x, y, z, a)
+    want = ref.stream_program(x, y, z, a)
+    for g, w, name in zip(got, want, ["y", "z", "a"]):
+        np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"array {name}, n={n}")
+
+
+@pytest.mark.parametrize("alpha,beta,s", [
+    (2.0, 3.0, 2.0),       # the paper's constants
+    (0.0, 1.0, -1.0),
+    (-2.5, 0.5, 10.0),
+])
+def test_stream_program_constants(alpha, beta, s):
+    n = 4097
+    x, y, z, a = (rand_f32(n) for _ in range(4))
+    got = elementwise.stream_program(x, y, z, a, alpha=alpha, beta=beta, s=s)
+    want = ref.stream_program(x, y, z, a, alpha=alpha, beta=beta, s=s)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6)
+
+
+def test_add_half_branch_boundary():
+    """Kernel 4's predicate flips exactly at n//2 (paper line 16)."""
+    n = 10
+    y = jnp.ones(n, jnp.float32)
+    a = jnp.full(n, 3.0, jnp.float32)
+    x = jnp.zeros(n, jnp.float32)
+    z = jnp.zeros(n, jnp.float32)
+    # alpha=0,s=1 -> y2 == y == 1; first half a+y2=4, second half 2a=6
+    _, _, a1 = elementwise.stream_program(x, y, z, a, alpha=0.0, beta=1.0,
+                                          s=1.0)
+    np.testing.assert_array_equal(np.asarray(a1[:n // 2]), 4.0)
+    np.testing.assert_array_equal(np.asarray(a1[n // 2:]), 6.0)
+
+
+def test_stream_program_random_shape_sweep():
+    """Hypothesis-style sweep: 25 random lengths in [1, 3*BLOCK)."""
+    for _ in range(25):
+        n = int(RNG.integers(1, 3 * elementwise.BLOCK))
+        x, y, z, a = (rand_f32(n) for _ in range(4))
+        got = elementwise.stream_program(x, y, z, a)
+        want = ref.stream_program(x, y, z, a)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"n={n}")
+
+
+# ---------------------------------------------------------------------------
+# gemm vs ref.gemm
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [
+    (1, 1, 1), (3, 5, 7), (35, 64, 96),
+    (128, 128, 512),                     # exactly one tile
+    (129, 130, 513),                     # straddles every tile dim
+    (35, 256, 512),                      # the mini deepbench artifact
+]
+
+
+@pytest.mark.parametrize("m,n,k", GEMM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16])
+def test_gemm_matches_ref(m, n, k, dtype):
+    a = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    b = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+    got = gemm.gemm(a, b)
+    want = ref.gemm(a, b)
+    assert got.dtype == a.dtype
+    # f32 tolerance allows K-chunked accumulation-order differences
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_gemm_deepbench_shape_fp16():
+    """The paper's exact DeepBench GEMM shape (scaled tolerance for fp16)."""
+    m, n, k = 35, 1500, 2560
+    a = jnp.asarray(RNG.standard_normal((m, k)) * 0.05, jnp.float16)
+    b = jnp.asarray(RNG.standard_normal((k, n)) * 0.05, jnp.float16)
+    got = gemm.gemm(a, b)
+    want = ref.gemm(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_gemm_fp32_accumulation_not_fp16():
+    """K large + alternating +1/-1 would collapse under fp16 accumulate."""
+    k = 4096
+    a = jnp.ones((1, k), jnp.float16)
+    sign = jnp.asarray(np.tile([1.0, -1.0], k // 2), jnp.float16)
+    b = (sign * 1e-2)[:, None]
+    got = np.asarray(gemm.gemm(a, b), np.float32)
+    np.testing.assert_allclose(got, [[0.0]], atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# stats_agg vs ref.stats_aggregate
+# ---------------------------------------------------------------------------
+
+S, T, O = 8, 10, 6
+
+
+def rand_events(n, n_streams=S):
+    return (
+        jnp.asarray(RNG.integers(0, n_streams, n), jnp.int32),
+        jnp.asarray(RNG.integers(0, T, n), jnp.int32),
+        jnp.asarray(RNG.integers(0, O, n), jnp.int32),
+        jnp.asarray(RNG.integers(0, 2, n), jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("n", [1, 7, 2048, 2049, 16384, 5000])
+def test_stats_aggregate_matches_ref(n):
+    sid, typ, out, valid = rand_events(n)
+    got = stats_agg.stats_aggregate(sid, typ, out, valid,
+                                    num_streams=S, num_types=T,
+                                    num_outcomes=O)
+    want = ref.stats_aggregate(sid, typ, out, valid,
+                               num_streams=S, num_types=T, num_outcomes=O)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stats_aggregate_total_equals_valid_count():
+    """Σ counts == number of valid events (conservation invariant)."""
+    sid, typ, out, valid = rand_events(8192)
+    got = stats_agg.stats_aggregate(sid, typ, out, valid,
+                                    num_streams=S, num_types=T,
+                                    num_outcomes=O)
+    assert float(jnp.sum(got)) == float(jnp.sum(valid))
+
+
+def test_stats_aggregate_single_bin():
+    """All events in one (stream,type,outcome) bin -> one hot cell."""
+    n = 4096
+    one = jnp.ones(n, jnp.int32)
+    got = stats_agg.stats_aggregate(3 * one, 2 * one, 4 * one, one,
+                                    num_streams=S, num_types=T,
+                                    num_outcomes=O)
+    g = np.asarray(got)
+    assert g[3, 2, 4] == n
+    assert g.sum() == n
+
+
+def test_stats_aggregate_all_invalid():
+    sid, typ, out, _ = rand_events(2048)
+    zero = jnp.zeros(2048, jnp.int32)
+    got = stats_agg.stats_aggregate(sid, typ, out, zero,
+                                    num_streams=S, num_types=T,
+                                    num_outcomes=O)
+    assert float(jnp.sum(got)) == 0.0
+
+
+def test_stats_aggregate_per_stream_sum_property():
+    """Paper's core invariant: aggregate == Σ over streams of per-stream."""
+    sid, typ, out, valid = rand_events(16384)
+    cube = np.asarray(stats_agg.stats_aggregate(
+        sid, typ, out, valid, num_streams=S, num_types=T, num_outcomes=O))
+    # aggregate by ignoring stream id (all events -> stream 0)
+    agg = np.asarray(stats_agg.stats_aggregate(
+        jnp.zeros_like(sid), typ, out, valid,
+        num_streams=1, num_types=T, num_outcomes=O))
+    np.testing.assert_array_equal(cube.sum(axis=0, keepdims=True), agg)

@@ -1,0 +1,117 @@
+"""Property-level tests of the per-stream stat semantics, Python side.
+
+The Rust simulator and the Pallas aggregation kernel must agree on the
+paper's invariants; these tests pin the *kernel-side* half with
+hypothesis-style randomized sweeps (deterministic seeds — the image has
+no `hypothesis`):
+
+  1. Σ over streams of the per-stream cube == the aggregate cube
+     (the paper's `clean == Σ tip` claim, Fig. 2);
+  2. permuting events never changes the cube (scatter-add is
+     order-independent — unlike the buggy clean counter!);
+  3. splitting one batch into two and summing the cubes is exact
+     (the streaming deployment over >16384-event runs);
+  4. the cube is invariant to padding with invalid events.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import ref, stats_agg
+
+S, T, O = 8, 10, 6
+RNG = np.random.default_rng(0x5EED)
+
+
+def rand_events(n):
+    return (
+        jnp.asarray(RNG.integers(0, S, n), jnp.int32),
+        jnp.asarray(RNG.integers(0, T, n), jnp.int32),
+        jnp.asarray(RNG.integers(0, O, n), jnp.int32),
+        jnp.asarray(RNG.integers(0, 2, n), jnp.int32),
+    )
+
+
+def cube(sid, typ, out, valid):
+    return np.asarray(stats_agg.stats_aggregate(
+        sid, typ, out, valid, num_streams=S, num_types=T,
+        num_outcomes=O))
+
+
+@pytest.mark.parametrize("n", [512, 4096, 10000])
+def test_sum_over_streams_equals_aggregate(n):
+    sid, typ, out, valid = rand_events(n)
+    per_stream = cube(sid, typ, out, valid)
+    agg = np.asarray(stats_agg.stats_aggregate(
+        jnp.zeros_like(sid), typ, out, valid,
+        num_streams=1, num_types=T, num_outcomes=O))
+    np.testing.assert_array_equal(per_stream.sum(axis=0), agg[0])
+
+
+def test_permutation_invariance():
+    """Order independence — the property the clean counter VIOLATES
+    (its same-cycle drop depends on which stream goes first)."""
+    n = 4096
+    sid, typ, out, valid = rand_events(n)
+    base = cube(sid, typ, out, valid)
+    for seed in range(5):
+        perm = np.random.default_rng(seed).permutation(n)
+        permuted = cube(jnp.asarray(np.asarray(sid)[perm]),
+                        jnp.asarray(np.asarray(typ)[perm]),
+                        jnp.asarray(np.asarray(out)[perm]),
+                        jnp.asarray(np.asarray(valid)[perm]))
+        np.testing.assert_array_equal(base, permuted, err_msg=f"{seed=}")
+
+
+def test_batch_splitting_is_exact():
+    n = 8192
+    sid, typ, out, valid = rand_events(n)
+    whole = cube(sid, typ, out, valid)
+    half = n // 2
+    part = (cube(sid[:half], typ[:half], out[:half], valid[:half])
+            + cube(sid[half:], typ[half:], out[half:], valid[half:]))
+    np.testing.assert_array_equal(whole, part)
+
+
+@pytest.mark.parametrize("pad", [1, 100, 2048])
+def test_invalid_padding_is_identity(pad):
+    n = 1000
+    sid, typ, out, valid = rand_events(n)
+    base = cube(sid, typ, out, valid)
+    z = jnp.zeros(pad, jnp.int32)
+    padded = cube(jnp.concatenate([sid, z]),
+                  jnp.concatenate([typ, z]),
+                  jnp.concatenate([out, z]),
+                  jnp.concatenate([valid, z]))
+    np.testing.assert_array_equal(base, padded)
+
+
+def test_random_shape_sweep_vs_ref():
+    """20 random (n, stream-skew) cases against the jnp oracle."""
+    for case in range(20):
+        rng = np.random.default_rng(case)
+        n = int(rng.integers(1, 6000))
+        nstreams = int(rng.integers(1, S + 1))
+        sid = jnp.asarray(rng.integers(0, nstreams, n), jnp.int32)
+        typ = jnp.asarray(rng.integers(0, T, n), jnp.int32)
+        out = jnp.asarray(rng.integers(0, O, n), jnp.int32)
+        valid = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+        got = cube(sid, typ, out, valid)
+        want = np.asarray(ref.stats_aggregate(
+            sid, typ, out, valid, num_streams=S, num_types=T,
+            num_outcomes=O))
+        np.testing.assert_array_equal(got, want, err_msg=f"{case=}")
+
+
+def test_counts_are_exact_integers():
+    """f32 counts must be exact for realistic batch sizes."""
+    n = 16384
+    one = jnp.ones(n, jnp.int32)
+    c = cube(jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32),
+             jnp.zeros(n, jnp.int32), one)
+    assert c[0, 0, 0] == float(n)
+    assert float(c[0, 0, 0]).is_integer()

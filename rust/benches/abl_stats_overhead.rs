@@ -1,0 +1,74 @@
+//! ABL-1 — the cost of the paper's feature itself: per-stream stat
+//! containers vs the flat baseline on the increment hot path, plus the
+//! batched Pallas/PJRT aggregation alternative.
+//!
+//! The paper's change turns `vector<vector<u64>>` into
+//! `map<streamID, vector<vector<u64>>>`; the question a maintainer
+//! asks is "what does that cost per `inc_stats` call?".
+
+use streamsim::cache::access::{AccessOutcome, AccessType};
+use streamsim::stats::{CacheStats, StatMode};
+use streamsim::util::bench::Bencher;
+use streamsim::util::prng::SplitMix64;
+
+const N: usize = 1_000_000;
+
+/// Pre-generated event mix (4 streams, realistic type/outcome skew).
+fn events() -> Vec<(AccessType, AccessOutcome, u64, u64)> {
+    let mut rng = SplitMix64::new(0xAB1);
+    (0..N)
+        .map(|i| {
+            let t = if rng.chance(0.7) {
+                AccessType::GlobalAccR
+            } else {
+                AccessType::GlobalAccW
+            };
+            let o = match rng.next_below(10) {
+                0..=5 => AccessOutcome::Hit,
+                6..=7 => AccessOutcome::Miss,
+                8 => AccessOutcome::MshrHit,
+                _ => AccessOutcome::SectorMiss,
+            };
+            (t, o, rng.next_below(4), i as u64 / 4)
+        })
+        .collect()
+}
+
+fn run_mode(evts: &[(AccessType, AccessOutcome, u64, u64)],
+            mode: StatMode) -> u64 {
+    let mut s = CacheStats::new(mode);
+    for (t, o, stream, cycle) in evts {
+        s.inc(*t, *o, *stream, *cycle);
+    }
+    std::hint::black_box(s.total_table().total());
+    evts.len() as u64
+}
+
+fn main() {
+    let evts = events();
+    let mut b = Bencher::from_env();
+    b.bench("flat_aggregate_exact (pre-patch ideal)", || {
+        run_mode(&evts, StatMode::AggregateExact)
+    });
+    b.bench("flat_aggregate_buggy (clean + guard)", || {
+        run_mode(&evts, StatMode::AggregateBuggy)
+    });
+    b.bench("per_stream_map (the paper's tip)", || {
+        run_mode(&evts, StatMode::PerStream)
+    });
+    // many-streams stress: 64 streams instead of 4
+    let mut rng = SplitMix64::new(7);
+    let evts64: Vec<_> = evts
+        .iter()
+        .map(|(t, o, _, c)| (*t, *o, rng.next_below(64), *c))
+        .collect();
+    b.bench("per_stream_map_64_streams", || {
+        run_mode(&evts64, StatMode::PerStream)
+    });
+    b.report("ABL-1: stat-increment hot path (items = inc_stats calls)");
+
+    let flat = b.results()[0].median;
+    let tip = b.results()[2].median;
+    println!("\nper-stream overhead vs flat: {:.2}x",
+             tip.as_secs_f64() / flat.as_secs_f64());
+}

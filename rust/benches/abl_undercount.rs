@@ -1,0 +1,61 @@
+//! ABL-2 — magnitude of the clean-mode under-count as concurrency
+//! grows: sweep the number of parallel streams running identical
+//! kernels and report how many increments the flat counter loses
+//! (paper §1/Fig. 1's inaccuracy, quantified).
+
+use streamsim::config::SimConfig;
+use streamsim::sim::GpuSim;
+use streamsim::stats::StatMode;
+use streamsim::util::bench::Bencher;
+use streamsim::workloads::l2_lat;
+use streamsim::workloads::stream_bench;
+
+fn run(bench_workload: &streamsim::trace::Workload, mode: StatMode)
+    -> (u64, u64) {
+    let mut cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+    cfg.stat_mode = mode;
+    let mut sim = GpuSim::new(cfg).unwrap();
+    sim.enqueue_workload(bench_workload).unwrap();
+    sim.run().unwrap();
+    let total = sim.stats().l1.total_table().total()
+        + sim.stats().l2.total_table().total();
+    let dropped = sim.stats().l1.dropped() + sim.stats().l2.dropped();
+    (total, dropped)
+}
+
+fn main() {
+    println!("\n== ABL-2: clean-mode under-count vs stream count ==");
+    println!("{:<10} {:>14} {:>14} {:>12} {:>10}",
+             "streams", "exact_total", "clean_total", "lost", "lost%");
+    let mut b = Bencher::from_env();
+    for nstreams in [1u32, 2, 4, 8] {
+        let p = l2_lat::Params {
+            num_streams: nstreams,
+            iters: 64,
+            array_size: 16,
+            ..l2_lat::Params::default()
+        };
+        let g = l2_lat::generate(&p);
+        let (exact, _) = run(&g.workload, StatMode::AggregateExact);
+        let (clean, dropped) = run(&g.workload,
+                                   StatMode::AggregateBuggy);
+        println!("{:<10} {:>14} {:>14} {:>12} {:>9.2}%",
+                 nstreams, exact, clean, dropped,
+                 100.0 * dropped as f64 / exact.max(1) as f64);
+        assert_eq!(exact - clean, dropped);
+        b.bench(&format!("l2_lat_{nstreams}streams_sim"), || {
+            run(&g.workload, StatMode::PerStream).0
+        });
+    }
+
+    // the Figs. 3-4 style workload
+    let g = stream_bench::generate(&stream_bench::Params::mini());
+    let (exact, _) = run(&g.workload, StatMode::AggregateExact);
+    let (clean, dropped) = run(&g.workload, StatMode::AggregateBuggy);
+    println!("{:<10} {:>14} {:>14} {:>12} {:>9.2}%",
+             "bench1m", exact, clean, dropped,
+             100.0 * dropped as f64 / exact.max(1) as f64);
+
+    b.report("ABL-2: simulation time per stream count (items = stat \
+              increments)");
+}

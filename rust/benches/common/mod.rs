@@ -1,0 +1,48 @@
+//! Shared bench driver: run a paper figure's three-config comparison,
+//! print the figure table + validation verdicts + timing, so each
+//! `cargo bench` target regenerates one table/figure of the paper.
+
+use streamsim::config::SimConfig;
+use streamsim::harness::{all_passed, render_checks, run_three_configs};
+use streamsim::util::bench::{fmt_duration, Bencher};
+use streamsim::workloads;
+
+/// Regenerate one figure: simulate the three configs (timed), print the
+/// comparison table, the check verdicts, and throughput.
+pub fn run_figure(title: &str, bench: &str, preset: &str) {
+    println!("\n######## {title} ########");
+    let g = workloads::generate(bench).expect("workload");
+    let cfg = SimConfig::preset(preset).expect("preset");
+    println!("workload {}: {} kernels, {} mem instrs, streams {:?}",
+             g.name, g.workload.kernels.len(),
+             g.workload.mem_instr_count(), g.workload.streams());
+
+    let mut b = Bencher::from_env();
+    // timed: the tip (patched, concurrent) run — the paper's feature
+    let mut last = None;
+    b.bench("tip_concurrent_run", || {
+        let tw = run_three_configs(&cfg, &g).expect("three-way");
+        let accesses = tw.tip.stats.total_accesses();
+        last = Some(tw);
+        accesses
+    });
+    let tw = last.unwrap();
+    b.report(&format!("{title} — simulation wall time (all 4 configs)"));
+
+    println!("\n{}", tw.figure(title).render_table());
+    let checks = tw.validate(&g);
+    println!("checks:\n{}", render_checks(&checks));
+    println!("tip cycles: {} | serialized cycles: {} | speedup from \
+              concurrency: {:.2}x",
+             tw.tip.stats.total_cycles,
+             tw.tip_serialized.stats.total_cycles,
+             tw.tip_serialized.stats.total_cycles as f64
+                 / tw.tip.stats.total_cycles as f64);
+    println!("clean dropped increments: L1={} L2={}",
+             tw.clean.stats.l1.dropped(), tw.clean.stats.l2.dropped());
+    let ok = all_passed(&checks);
+    println!("figure validation: {}",
+             if ok { "PASS" } else { "FAIL" });
+    assert!(ok, "{title} failed validation");
+    let _ = fmt_duration; // re-export warmers for targets that want it
+}

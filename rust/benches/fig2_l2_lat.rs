@@ -1,0 +1,9 @@
+//! FIG2 — paper Figure 2: `l2_lat_4stream` under tip / clean /
+//! tip_serialized. Regenerates the per-stream cache-stat bars and the
+//! timeline panels.
+mod common;
+
+fn main() {
+    common::run_figure("Figure 2: l2_lat_4stream (4 streams, shared \
+                        pointer-chase array)", "l2_lat", "minimal");
+}

@@ -1,0 +1,10 @@
+//! FIG3 — paper Figure 3: `benchmark_1_stream.cu` (N = 1<<20, 256
+//! threads/block; saxpy -> scale || saxpy -> add across 2 streams).
+mod common;
+
+fn main() {
+    let bench = if std::env::var("STREAMSIM_BENCH_FAST").as_deref()
+        == Ok("1") { "bench1_mini" } else { "bench1" };
+    common::run_figure("Figure 3: benchmark_1_stream", bench,
+                       "sm7_titanv_mini");
+}

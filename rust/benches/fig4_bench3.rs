@@ -1,0 +1,8 @@
+//! FIG4 — paper Figure 4: `benchmark_3_stream.cu` (N = 1<<18, 1024
+//! threads/block).
+mod common;
+
+fn main() {
+    common::run_figure("Figure 4: benchmark_3_stream", "bench3",
+                       "sm7_titanv_mini");
+}

@@ -1,0 +1,32 @@
+//! FIG5 — paper Figure 5: DeepBench `inference_half_35_1500_2560_0_0`
+//! as a 2-stream tiled-GEMM trace, plus the functional GEMM through the
+//! AOT Pallas artifact when `artifacts/` is built.
+mod common;
+
+use streamsim::functional;
+use streamsim::runtime::{default_artifact_dir, Runtime};
+
+fn main() {
+    let bench = if std::env::var("STREAMSIM_BENCH_FAST").as_deref()
+        == Ok("1") { "deepbench_mini" } else { "deepbench" };
+    common::run_figure("Figure 5: DeepBench inference_half_35_1500_2560",
+                       bench, "sm7_titanv_mini");
+
+    // functional half: the same GEMM, numerically, through PJRT
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("\n(skipping functional GEMM: run `make artifacts`)");
+        return;
+    }
+    let mut rt = Runtime::new().expect("PJRT");
+    rt.load_dir(&dir).expect("artifacts");
+    let mut b = streamsim::util::bench::Bencher::from_env();
+    b.bench("pallas_gemm_35x2560x1500_fp16", || {
+        let r = functional::check_gemm(&rt, "deepbench_gemm", 35, 2560,
+                                       1500).expect("gemm");
+        assert!(r.passed);
+        (35 * 2560 * 1500) as u64 // MACs per run
+    });
+    b.report("Figure 5 — functional GEMM (PJRT CPU, interpret-mode \
+              Pallas artifact; items = MACs)");
+}

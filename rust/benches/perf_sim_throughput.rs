@@ -1,0 +1,57 @@
+//! PERF-L3 — end-to-end simulator throughput: simulated cycles/s and
+//! cache accesses/s on the paper's workloads, across presets and stat
+//! modes. This is the §Perf baseline/tracking bench for EXPERIMENTS.md.
+
+use streamsim::config::SimConfig;
+use streamsim::sim::GpuSim;
+use streamsim::stats::StatMode;
+use streamsim::util::bench::Bencher;
+use streamsim::workloads;
+
+fn sim_once(bench: &str, preset: &str, mode: StatMode) -> (u64, u64) {
+    let g = workloads::generate(bench).unwrap();
+    let mut cfg = SimConfig::preset(preset).unwrap();
+    cfg.stat_mode = mode;
+    let mut sim = GpuSim::new(cfg).unwrap();
+    sim.enqueue_workload(&g.workload).unwrap();
+    sim.run().unwrap();
+    (sim.stats().total_cycles, sim.stats().total_accesses())
+}
+
+fn main() {
+    let fast = std::env::var("STREAMSIM_BENCH_FAST").as_deref()
+        == Ok("1");
+    let bench1 = if fast { "bench1_mini" } else { "bench1" };
+    let deepb = if fast { "deepbench_mini" } else { "deepbench" };
+
+    let mut b = Bencher::from_env();
+    // throughput in simulated cycles/s
+    for (bench, preset) in [
+        (bench1, "sm7_titanv_mini"),
+        ("bench3", "sm7_titanv_mini"),
+        (deepb, "sm7_titanv_mini"),
+        ("l2_lat", "minimal"),
+    ] {
+        b.bench(&format!("{bench}/{preset} cycles"), || {
+            sim_once(bench, preset, StatMode::PerStream).0
+        });
+    }
+    b.report("PERF-L3: simulated cycles/s (items = GPU cycles)");
+
+    let mut b2 = Bencher::from_env();
+    for mode in [StatMode::PerStream, StatMode::AggregateExact,
+                 StatMode::AggregateBuggy] {
+        b2.bench(&format!("{bench1} accesses ({})", mode.label()), || {
+            sim_once(bench1, "sm7_titanv_mini", mode).1
+        });
+    }
+    b2.report("PERF-L3: cache accesses/s by stat mode (items = \
+               accesses)");
+
+    // the full TITAN V geometry (80 SMs) on bench3
+    let mut b3 = Bencher::new(1, 3);
+    b3.bench("bench3/sm7_titanv (80 SMs) cycles", || {
+        sim_once("bench3", "sm7_titanv", StatMode::PerStream).0
+    });
+    b3.report("PERF-L3: full TITAN V preset");
+}

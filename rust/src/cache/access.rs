@@ -1,0 +1,277 @@
+//! Access-type / outcome vocabulary, mirroring GPGPU-Sim's enums.
+//!
+//! `mem_access_type` and `cache_request_status` in
+//! `src/gpgpu-sim/gpu-cache.h` index the stat tables the paper re-keys by
+//! stream; we keep the same names (and the same table geometry) so the
+//! printed breakdowns line up with Accel-Sim output. The L2/L1 stat cube
+//! geometry (`NUM_TYPES` × `NUM_OUTCOMES`) is shared with the Pallas
+//! aggregation kernel — keep in sync with `python/compile/model.py`.
+
+use std::fmt;
+
+/// What kind of memory access a fetch is (GPGPU-Sim `mem_access_type`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum AccessType {
+    /// Global load.
+    GlobalAccR = 0,
+    /// Local (spill) load.
+    LocalAccR = 1,
+    /// Constant load.
+    ConstAccR = 2,
+    /// Texture load.
+    TextureAccR = 3,
+    /// Global store.
+    GlobalAccW = 4,
+    /// Local (spill) store.
+    LocalAccW = 5,
+    /// L1 writeback to L2.
+    L1WrbkAcc = 6,
+    /// L2 writeback to DRAM.
+    L2WrbkAcc = 7,
+    /// Instruction fetch.
+    InstAccR = 8,
+    /// L2 write-allocate read.
+    L2WrAllocR = 9,
+}
+
+impl AccessType {
+    /// Number of access types (outer stat-table dimension).
+    pub const COUNT: usize = 10;
+
+    /// All variants in table order.
+    pub const ALL: [AccessType; Self::COUNT] = [
+        AccessType::GlobalAccR,
+        AccessType::LocalAccR,
+        AccessType::ConstAccR,
+        AccessType::TextureAccR,
+        AccessType::GlobalAccW,
+        AccessType::LocalAccW,
+        AccessType::L1WrbkAcc,
+        AccessType::L2WrbkAcc,
+        AccessType::InstAccR,
+        AccessType::L2WrAllocR,
+    ];
+
+    /// GPGPU-Sim's printed name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            AccessType::GlobalAccR => "GLOBAL_ACC_R",
+            AccessType::LocalAccR => "LOCAL_ACC_R",
+            AccessType::ConstAccR => "CONST_ACC_R",
+            AccessType::TextureAccR => "TEXTURE_ACC_R",
+            AccessType::GlobalAccW => "GLOBAL_ACC_W",
+            AccessType::LocalAccW => "LOCAL_ACC_W",
+            AccessType::L1WrbkAcc => "L1_WRBK_ACC",
+            AccessType::L2WrbkAcc => "L2_WRBK_ACC",
+            AccessType::InstAccR => "INST_ACC_R",
+            AccessType::L2WrAllocR => "L2_WR_ALLOC_R",
+        }
+    }
+
+    /// Whether this access writes (drives write-policy paths).
+    pub const fn is_write(self) -> bool {
+        matches!(
+            self,
+            AccessType::GlobalAccW
+                | AccessType::LocalAccW
+                | AccessType::L1WrbkAcc
+                | AccessType::L2WrbkAcc
+        )
+    }
+
+    /// Table index.
+    #[inline]
+    pub const fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`AccessType::idx`]; panics on out-of-range.
+    pub fn from_idx(i: usize) -> Self {
+        Self::ALL[i]
+    }
+}
+
+impl fmt::Display for AccessType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Result of a cache probe (GPGPU-Sim `cache_request_status`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum AccessOutcome {
+    /// Sector present and valid.
+    Hit = 0,
+    /// Line reserved and this sector's fill is already in flight;
+    /// the access piggy-backs on the reservation.
+    HitReserved = 1,
+    /// Sector absent; a new fill was issued.
+    Miss = 2,
+    /// Structural stall: no line allocatable / MSHR or queue full
+    /// (details in [`FailOutcome`]).
+    ReservationFail = 3,
+    /// Line present but the requested sector is not (sectored caches).
+    SectorMiss = 4,
+    /// Miss merged into an existing MSHR entry for the same block.
+    MshrHit = 5,
+}
+
+impl AccessOutcome {
+    /// Number of outcomes (inner stat-table dimension).
+    pub const COUNT: usize = 6;
+
+    /// All variants in table order.
+    pub const ALL: [AccessOutcome; Self::COUNT] = [
+        AccessOutcome::Hit,
+        AccessOutcome::HitReserved,
+        AccessOutcome::Miss,
+        AccessOutcome::ReservationFail,
+        AccessOutcome::SectorMiss,
+        AccessOutcome::MshrHit,
+    ];
+
+    /// GPGPU-Sim's printed name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            AccessOutcome::Hit => "HIT",
+            AccessOutcome::HitReserved => "HIT_RESERVED",
+            AccessOutcome::Miss => "MISS",
+            AccessOutcome::ReservationFail => "RESERVATION_FAIL",
+            AccessOutcome::SectorMiss => "SECTOR_MISS",
+            AccessOutcome::MshrHit => "MSHR_HIT",
+        }
+    }
+
+    /// Table index.
+    #[inline]
+    pub const fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`AccessOutcome::idx`]; panics on out-of-range.
+    pub fn from_idx(i: usize) -> Self {
+        Self::ALL[i]
+    }
+
+    /// Outcomes that consumed the access (i.e. not a structural replay).
+    pub const fn is_serviced(self) -> bool {
+        !matches!(self, AccessOutcome::ReservationFail)
+    }
+}
+
+impl fmt::Display for AccessOutcome {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Why a [`AccessOutcome::ReservationFail`] happened
+/// (GPGPU-Sim `cache_reservation_fail_reason`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum FailOutcome {
+    /// No victim line could be allocated (all reserved).
+    LineAllocFail = 0,
+    /// Miss queue to the lower level is full.
+    MissQueueFull = 1,
+    /// MSHR table is full.
+    MshrEntryFail = 2,
+    /// MSHR merge limit for the block reached.
+    MshrMergeEntryFail = 3,
+    /// Read conflicts with a pending write (or vice versa).
+    MshrRwPending = 4,
+}
+
+impl FailOutcome {
+    /// Number of fail reasons.
+    pub const COUNT: usize = 5;
+
+    /// All variants in table order.
+    pub const ALL: [FailOutcome; Self::COUNT] = [
+        FailOutcome::LineAllocFail,
+        FailOutcome::MissQueueFull,
+        FailOutcome::MshrEntryFail,
+        FailOutcome::MshrMergeEntryFail,
+        FailOutcome::MshrRwPending,
+    ];
+
+    /// GPGPU-Sim's printed name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            FailOutcome::LineAllocFail => "LINE_ALLOC_FAIL",
+            FailOutcome::MissQueueFull => "MISS_QUEUE_FULL",
+            FailOutcome::MshrEntryFail => "MSHR_ENTRY_FAIL",
+            FailOutcome::MshrMergeEntryFail => "MSHR_MERGE_ENTRY_FAIL",
+            FailOutcome::MshrRwPending => "MSHR_RW_PENDING",
+        }
+    }
+
+    /// Table index.
+    #[inline]
+    pub const fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`FailOutcome::idx`]; panics on out-of-range.
+    pub fn from_idx(i: usize) -> Self {
+        Self::ALL[i]
+    }
+}
+
+impl fmt::Display for FailOutcome {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_roundtrip() {
+        for (i, t) in AccessType::ALL.iter().enumerate() {
+            assert_eq!(t.idx(), i);
+            assert_eq!(AccessType::from_idx(i), *t);
+        }
+        for (i, o) in AccessOutcome::ALL.iter().enumerate() {
+            assert_eq!(o.idx(), i);
+            assert_eq!(AccessOutcome::from_idx(i), *o);
+        }
+        for (i, f) in FailOutcome::ALL.iter().enumerate() {
+            assert_eq!(f.idx(), i);
+            assert_eq!(FailOutcome::from_idx(i), *f);
+        }
+    }
+
+    #[test]
+    fn counts_match_python_model() {
+        // python/compile/model.py NUM_TYPES / NUM_OUTCOMES
+        assert_eq!(AccessType::COUNT, 10);
+        assert_eq!(AccessOutcome::COUNT, 6);
+    }
+
+    #[test]
+    fn write_classification() {
+        assert!(AccessType::GlobalAccW.is_write());
+        assert!(AccessType::L1WrbkAcc.is_write());
+        assert!(!AccessType::GlobalAccR.is_write());
+        assert!(!AccessType::InstAccR.is_write());
+    }
+
+    #[test]
+    fn names_match_gpgpusim() {
+        assert_eq!(AccessType::GlobalAccR.name(), "GLOBAL_ACC_R");
+        assert_eq!(AccessOutcome::MshrHit.name(), "MSHR_HIT");
+        assert_eq!(FailOutcome::MshrEntryFail.name(), "MSHR_ENTRY_FAIL");
+    }
+
+    #[test]
+    fn reservation_fail_not_serviced() {
+        for o in AccessOutcome::ALL {
+            assert_eq!(o.is_serviced(), o != AccessOutcome::ReservationFail);
+        }
+    }
+}

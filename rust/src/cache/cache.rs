@@ -1,0 +1,658 @@
+//! Sectored cache engine: tag array + MSHR + miss queue.
+//!
+//! Outcome semantics (deterministic; DESIGN.md §5 documents the mapping
+//! to GPGPU-Sim):
+//!
+//! * sector **valid** → `HIT`.
+//! * sector **reserved** (fill in flight) → read merges into the pending
+//!   MSHR entry → `MSHR_HIT`; a write under write-allocate merges too
+//!   but reports `HIT_RESERVED` (data applied at fill). If the merge
+//!   limit is hit → `RESERVATION_FAIL` / `MSHR_MERGE_ENTRY_FAIL`.
+//!   This is precisely the paper's Fig. 2 effect: under concurrent
+//!   streams the later kernels' would-be `HIT`s become `MSHR_HIT`s.
+//! * line present, sector invalid → `SECTOR_MISS` (allocate + fill).
+//! * no line → `MISS` (allocate victim + fill), possibly evicting a
+//!   dirty line (write-back fetch to the lower level).
+//! * structural hazards (no victim / MSHR full / miss queue full) →
+//!   `RESERVATION_FAIL` with a [`FailOutcome`] detail; the access must
+//!   be replayed by the issuer.
+//!
+//! The cache does **not** own stat counters: [`Cache::access`] returns
+//! the outcome and the caller (core / memory partition) records it into
+//! the per-stream [`crate::stats::CacheStats`] with the fetch's
+//! `stream_id` — mirroring how the paper threads `streamID` into
+//! `inc_stats` at every call site.
+
+use std::collections::VecDeque;
+
+use crate::cache::access::{AccessOutcome, AccessType, FailOutcome};
+use crate::cache::mshr::{MshrProbe, MshrTable};
+use crate::cache::tag_array::{Probe, TagArray};
+use crate::config::cache_cfg::{
+    CacheConfig, WriteAllocatePolicy, WritePolicy,
+};
+#[cfg(test)]
+use crate::config::cache_cfg::SECTOR_SIZE;
+use crate::mem::fetch::MemFetch;
+use crate::Cycle;
+
+/// Result of one access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessResult {
+    pub outcome: AccessOutcome,
+    /// Present iff `outcome == ReservationFail`.
+    pub fail: Option<FailOutcome>,
+}
+
+impl AccessResult {
+    fn ok(outcome: AccessOutcome) -> Self {
+        Self { outcome, fail: None }
+    }
+
+    fn fail(reason: FailOutcome) -> Self {
+        Self {
+            outcome: AccessOutcome::ReservationFail,
+            fail: Some(reason),
+        }
+    }
+}
+
+/// A sectored (or normal) cache instance.
+#[derive(Debug)]
+pub struct Cache {
+    pub name: String,
+    cfg: CacheConfig,
+    tags: TagArray,
+    mshr: MshrTable,
+    /// Outgoing fetches to the lower level (misses, write-throughs,
+    /// write-allocate reads, writebacks).
+    miss_queue: VecDeque<MemFetch>,
+    /// Keys whose in-flight fill re-fetches a `ModifiedPartial` sector —
+    /// the fill must land dirty (merge-with-dirty-bytes semantics).
+    dirty_refetch: std::collections::BTreeSet<(u64, u32)>,
+    /// Total dirty-line writebacks generated (observability).
+    pub writebacks: u64,
+}
+
+impl Cache {
+    /// Build a cache.
+    pub fn new(name: impl Into<String>, cfg: CacheConfig) -> Self {
+        Self {
+            name: name.into(),
+            tags: TagArray::new(cfg.clone()),
+            mshr: MshrTable::new(cfg.mshr_entries as usize,
+                                 cfg.mshr_max_merge as usize),
+            miss_queue: VecDeque::new(),
+            dirty_refetch: std::collections::BTreeSet::new(),
+            cfg,
+            writebacks: 0,
+        }
+    }
+
+    /// Geometry in use.
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    fn mshr_key(&self, addr: u64) -> (u64, u32) {
+        (self.cfg.block_addr(addr), self.cfg.sector_of(addr))
+    }
+
+    fn miss_queue_full(&self) -> bool {
+        self.miss_queue.len() >= self.cfg.miss_queue_size as usize
+    }
+
+    /// Service one access. The caller records `result.outcome` (and
+    /// `result.fail`) into the per-stream stats keyed by
+    /// `fetch.stream_id`, then:
+    /// * `HIT` — respond to the issuer after the hit latency;
+    /// * `MISS`/`SECTOR_MISS`/`MSHR_HIT`/`HIT_RESERVED` — the response
+    ///   comes via [`Cache::fill`] → [`Cache::pop_ready`];
+    /// * `RESERVATION_FAIL` — replay the access next cycle.
+    pub fn access(&mut self, fetch: &MemFetch, cycle: Cycle)
+        -> AccessResult {
+        if fetch.is_write {
+            self.access_write(fetch, cycle)
+        } else {
+            self.access_read(fetch, cycle)
+        }
+    }
+
+    fn access_read(&mut self, fetch: &MemFetch, cycle: Cycle)
+        -> AccessResult {
+        let key = self.mshr_key(fetch.addr);
+        match self.tags.probe(fetch.addr) {
+            Probe::Hit { way } => {
+                self.tags.touch(fetch.addr, way, cycle, false);
+                AccessResult::ok(AccessOutcome::Hit)
+            }
+            Probe::HitReserved { .. } => {
+                // fill in flight: merge (the cross-stream MSHR_HIT the
+                // paper's validation discusses)
+                match self.mshr.probe(key) {
+                    MshrProbe::Mergeable => {
+                        self.mshr.add(key, fetch.clone());
+                        AccessResult::ok(AccessOutcome::MshrHit)
+                    }
+                    MshrProbe::MergeFull => {
+                        AccessResult::fail(FailOutcome::MshrMergeEntryFail)
+                    }
+                    // sector reserved without an MSHR entry would be a
+                    // bookkeeping bug:
+                    _ => unreachable!("reserved sector without MSHR"),
+                }
+            }
+            Probe::PartialHit { way } => {
+                // lazy-fetch-on-read: the sector holds dirty bytes but
+                // is unreadable — fetch now, land the fill dirty
+                let probe = Probe::SectorMiss { way };
+                let res = self.start_fill(fetch, key, probe, cycle,
+                                          false);
+                if res.outcome.is_serviced() {
+                    self.dirty_refetch.insert(key);
+                }
+                res
+            }
+            probe @ (Probe::SectorMiss { .. } | Probe::Miss { .. }) => {
+                self.start_fill(fetch, key, probe, cycle, false)
+            }
+            Probe::ReservationFail => {
+                AccessResult::fail(FailOutcome::LineAllocFail)
+            }
+        }
+    }
+
+    fn access_write(&mut self, fetch: &MemFetch, cycle: Cycle)
+        -> AccessResult {
+        match self.cfg.write_policy {
+            WritePolicy::WriteThrough | WritePolicy::LocalWbGlobalWt => {
+                self.write_through(fetch, cycle)
+            }
+            WritePolicy::WriteBack => self.write_back(fetch, cycle),
+        }
+    }
+
+    /// L1 path: update on hit, never allocate, always forward the write
+    /// to the lower level.
+    fn write_through(&mut self, fetch: &MemFetch, cycle: Cycle)
+        -> AccessResult {
+        if self.miss_queue_full() {
+            return AccessResult::fail(FailOutcome::MissQueueFull);
+        }
+        let outcome = match self.tags.probe(fetch.addr) {
+            Probe::Hit { way } | Probe::PartialHit { way } => {
+                // write-through: data updated in place, stays clean
+                self.tags.touch(fetch.addr, way, cycle, false);
+                AccessOutcome::Hit
+            }
+            Probe::HitReserved { .. } => AccessOutcome::HitReserved,
+            Probe::SectorMiss { .. } => AccessOutcome::SectorMiss,
+            Probe::Miss { .. } => AccessOutcome::Miss,
+            Probe::ReservationFail => AccessOutcome::Miss,
+        };
+        // no-write-allocate: the write itself travels down
+        let mut down = fetch.clone();
+        down.ret = None;
+        self.miss_queue.push_back(down);
+        AccessResult::ok(outcome)
+    }
+
+    /// L2 path: write-back with write-allocate (or lazy-fetch-on-read).
+    fn write_back(&mut self, fetch: &MemFetch, cycle: Cycle)
+        -> AccessResult {
+        let key = self.mshr_key(fetch.addr);
+        match self.tags.probe(fetch.addr) {
+            Probe::Hit { way } => {
+                self.tags.touch(fetch.addr, way, cycle, true);
+                AccessResult::ok(AccessOutcome::Hit)
+            }
+            Probe::PartialHit { way } => {
+                // another write onto a lazily-allocated sector: hits
+                self.tags.touch(fetch.addr, way, cycle, true);
+                AccessResult::ok(AccessOutcome::Hit)
+            }
+            Probe::HitReserved { .. } => match self.mshr.probe(key) {
+                MshrProbe::Mergeable => {
+                    self.mshr.add(key, fetch.clone());
+                    AccessResult::ok(AccessOutcome::HitReserved)
+                }
+                MshrProbe::MergeFull => {
+                    AccessResult::fail(FailOutcome::MshrMergeEntryFail)
+                }
+                _ => unreachable!("reserved sector without MSHR"),
+            },
+            probe @ (Probe::SectorMiss { .. } | Probe::Miss { .. }) => {
+                match self.cfg.write_allocate {
+                    WriteAllocatePolicy::WriteAllocate => {
+                        // fetch-on-write: read the sector, apply the
+                        // write at fill
+                        self.start_fill(fetch, key, probe, cycle, true)
+                    }
+                    WriteAllocatePolicy::LazyFetchOnRead => {
+                        self.lazy_write_allocate(fetch, probe, cycle)
+                    }
+                    WriteAllocatePolicy::NoWriteAllocate => {
+                        if self.miss_queue_full() {
+                            return AccessResult::fail(
+                                FailOutcome::MissQueueFull);
+                        }
+                        let mut down = fetch.clone();
+                        down.ret = None;
+                        self.miss_queue.push_back(down);
+                        AccessResult::ok(probe.outcome())
+                    }
+                }
+            }
+            Probe::ReservationFail => {
+                AccessResult::fail(FailOutcome::LineAllocFail)
+            }
+        }
+    }
+
+    /// Common miss path: reserve line+sector, allocate MSHR, enqueue the
+    /// fill request. `write_allocate` turns a write miss into a
+    /// lower-level *read* (`L2_WR_ALLOC_R`).
+    fn start_fill(&mut self, fetch: &MemFetch, key: (u64, u32),
+                  probe: Probe, cycle: Cycle, write_allocate: bool)
+        -> AccessResult {
+        if self.miss_queue_full() {
+            return AccessResult::fail(FailOutcome::MissQueueFull);
+        }
+        match self.mshr.probe(key) {
+            MshrProbe::Available => {}
+            MshrProbe::Mergeable | MshrProbe::MergeFull => {
+                // A sector can't be Invalid while its fill is pending —
+                // reserved lines are never victims.
+                unreachable!("invalid sector with live MSHR entry");
+            }
+            MshrProbe::TableFull => {
+                return AccessResult::fail(FailOutcome::MshrEntryFail);
+            }
+        }
+        let way = match probe {
+            Probe::SectorMiss { way } => way,
+            Probe::Miss { way, evict_dirty, evict_tag } => {
+                if evict_dirty {
+                    self.push_writeback(evict_tag, fetch);
+                }
+                way
+            }
+            _ => unreachable!(),
+        };
+        self.tags.allocate(fetch.addr, way, cycle);
+        self.mshr.add(key, fetch.clone());
+        // NOTE: the down copy keeps `ret` — at the L1 level the lower
+        // level's response is routed back to the issuing core by it (the
+        // parked MSHR copies then fan out to the waiting warps).
+        let down = if write_allocate {
+            fetch.retyped(AccessType::L2WrAllocR, false)
+        } else {
+            fetch.clone()
+        };
+        self.miss_queue.push_back(down);
+        AccessResult::ok(probe.outcome())
+    }
+
+    /// Lazy-fetch-on-read (`L` policy): allocate the sector as
+    /// written-but-unreadable; the backing fetch is deferred until a
+    /// read needs the sector (GPGPU-Sim's TITAN V L2 behaviour).
+    fn lazy_write_allocate(&mut self, fetch: &MemFetch, probe: Probe,
+                           cycle: Cycle) -> AccessResult {
+        let way = match probe {
+            Probe::SectorMiss { way } => way,
+            Probe::Miss { way, evict_dirty, evict_tag } => {
+                if evict_dirty {
+                    if self.miss_queue_full() {
+                        return AccessResult::fail(
+                            FailOutcome::MissQueueFull);
+                    }
+                    self.push_writeback(evict_tag, fetch);
+                }
+                way
+            }
+            _ => unreachable!(),
+        };
+        self.tags.write_partial(fetch.addr, way, cycle);
+        AccessResult::ok(probe.outcome())
+    }
+
+    /// Emit a dirty-line writeback to the lower level. Attribution keeps
+    /// the *evicting* fetch's stream, as the patched GPGPU-Sim does.
+    fn push_writeback(&mut self, line_tag: u64, cause: &MemFetch) {
+        self.writebacks += 1;
+        self.miss_queue.push_back(MemFetch {
+            id: cause.id,
+            addr: line_tag,
+            bytes: self.cfg.line_size,
+            access_type: AccessType::L2WrbkAcc,
+            is_write: true,
+            stream_id: cause.stream_id,
+            kernel_uid: cause.kernel_uid,
+            l1_bypass: false,
+            ret: None,
+        });
+    }
+
+    /// Fill response from the lower level for `addr`. Marks the sector
+    /// valid, drains the MSHR, applies merged writes (sector → dirty)
+    /// and returns the loads that can now be answered to their issuers.
+    pub fn fill(&mut self, addr: u64, cycle: Cycle) -> Vec<MemFetch> {
+        let key = self.mshr_key(addr);
+        let dirty = self.dirty_refetch.remove(&key);
+        self.tags.fill(addr, cycle, dirty);
+        self.mshr.mark_ready(key);
+        let mut responses = Vec::new();
+        while let Some(f) = self.mshr.next_ready() {
+            if f.is_write {
+                // merged write applies now; sector becomes dirty
+                self.tags.fill(addr, cycle, true);
+            } else {
+                responses.push(f);
+            }
+        }
+        responses
+    }
+
+    /// Next outgoing fetch to the lower level (None if queue empty).
+    pub fn pop_miss(&mut self) -> Option<MemFetch> {
+        self.miss_queue.pop_front()
+    }
+
+    /// Peek the outgoing queue length.
+    pub fn miss_queue_len(&self) -> usize {
+        self.miss_queue.len()
+    }
+
+    /// In-flight MSHR entries.
+    pub fn mshr_len(&self) -> usize {
+        self.mshr.len()
+    }
+
+    /// Kernel-boundary invalidate (L1 flush).
+    pub fn flush(&mut self) {
+        debug_assert!(self.mshr.is_empty(),
+                      "flush with fills in flight");
+        self.tags.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::access::AccessType;
+    use crate::mem::fetch::ReturnPath;
+
+    fn l2_cfg() -> CacheConfig {
+        // 4 sets, 2 ways, sectored, WB+write-allocate
+        CacheConfig::parse("S:4:128:2,L:B:m:W:L,A:8:4,8:0,32").unwrap()
+    }
+
+    fn l1_cfg() -> CacheConfig {
+        CacheConfig::parse("S:4:128:2,L:L:m:N:L,A:8:4,8:0,32").unwrap()
+    }
+
+    fn rd(id: u64, addr: u64, stream: u64) -> MemFetch {
+        MemFetch {
+            id,
+            addr,
+            bytes: SECTOR_SIZE,
+            access_type: AccessType::GlobalAccR,
+            is_write: false,
+            stream_id: stream,
+            kernel_uid: 1,
+            l1_bypass: false,
+            ret: Some(ReturnPath { core_id: 0, tb_slot: 0, warp_idx: 0 }),
+        }
+    }
+
+    fn wr(id: u64, addr: u64, stream: u64) -> MemFetch {
+        MemFetch {
+            id,
+            addr,
+            bytes: SECTOR_SIZE,
+            access_type: AccessType::GlobalAccW,
+            is_write: true,
+            stream_id: stream,
+            kernel_uid: 1,
+            l1_bypass: false,
+            ret: None,
+        }
+    }
+
+    #[test]
+    fn read_miss_fill_hit_sequence() {
+        let mut c = Cache::new("l2", l2_cfg());
+        let r = c.access(&rd(1, 0x1000, 1), 1);
+        assert_eq!(r.outcome, AccessOutcome::Miss);
+        // fill request went down
+        let down = c.pop_miss().unwrap();
+        assert_eq!(down.addr, 0x1000);
+        assert!(!down.is_write);
+        // response comes back
+        let resp = c.fill(0x1000, 10);
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].id, 1);
+        // now a hit
+        let r2 = c.access(&rd(2, 0x1000, 1), 11);
+        assert_eq!(r2.outcome, AccessOutcome::Hit);
+    }
+
+    #[test]
+    fn concurrent_readers_merge_as_mshr_hit() {
+        // The paper's Fig. 2 story: stream 2's access while stream 1's
+        // fill is in flight is MSHR_HIT; serialized it would be HIT.
+        let mut c = Cache::new("l2", l2_cfg());
+        assert_eq!(c.access(&rd(1, 0x1000, 1), 1).outcome,
+                   AccessOutcome::Miss);
+        assert_eq!(c.access(&rd(2, 0x1000, 2), 2).outcome,
+                   AccessOutcome::MshrHit);
+        assert_eq!(c.access(&rd(3, 0x1000, 3), 2).outcome,
+                   AccessOutcome::MshrHit);
+        // one fill answers all three
+        let resp = c.fill(0x1000, 10);
+        assert_eq!(resp.iter().map(|f| f.id).collect::<Vec<_>>(),
+                   vec![1, 2, 3]);
+        // and only ONE request went down
+        assert!(c.pop_miss().is_some());
+        assert!(c.pop_miss().is_none());
+    }
+
+    #[test]
+    fn sector_miss_within_resident_line() {
+        let mut c = Cache::new("l2", l2_cfg());
+        c.access(&rd(1, 0x1000, 1), 1);
+        c.pop_miss();
+        c.fill(0x1000, 5);
+        // sector 2 of the same line
+        let r = c.access(&rd(2, 0x1040, 1), 6);
+        assert_eq!(r.outcome, AccessOutcome::SectorMiss);
+    }
+
+    #[test]
+    fn write_back_hit_dirties_then_eviction_writes_back() {
+        let mut c = Cache::new("l2", l2_cfg());
+        // load 0x000, fill, then dirty it with a write hit
+        c.access(&rd(1, 0x0, 1), 1);
+        c.pop_miss();
+        c.fill(0x0, 2);
+        assert_eq!(c.access(&wr(2, 0x0, 1), 3).outcome,
+                   AccessOutcome::Hit);
+        // conflict-evict: 4 sets -> addrs 0x0, 0x200, 0x400 share set 0
+        c.access(&rd(3, 0x200, 1), 4);
+        c.pop_miss();
+        c.fill(0x200, 5);
+        let r = c.access(&rd(4, 0x400, 1), 6);
+        assert_eq!(r.outcome, AccessOutcome::Miss);
+        // dirty line 0x0 must have produced a writeback + the new fill
+        let outs: Vec<MemFetch> =
+            std::iter::from_fn(|| c.pop_miss()).collect();
+        assert!(outs.iter().any(|f| f.access_type == AccessType::L2WrbkAcc
+                                    && f.addr == 0x0));
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn write_allocate_issues_wr_alloc_read() {
+        let mut c = Cache::new("l2", l2_cfg());
+        let r = c.access(&wr(1, 0x3000, 7), 1);
+        assert_eq!(r.outcome, AccessOutcome::Miss);
+        let down = c.pop_miss().unwrap();
+        assert_eq!(down.access_type, AccessType::L2WrAllocR);
+        assert!(!down.is_write);
+        assert_eq!(down.stream_id, 7); // attribution preserved
+        // fill applies the merged write -> dirty -> later eviction
+        let resp = c.fill(0x3000, 5);
+        assert!(resp.is_empty()); // writes don't respond
+        assert_eq!(c.access(&rd(2, 0x3000, 7), 6).outcome,
+                   AccessOutcome::Hit);
+    }
+
+    #[test]
+    fn write_to_reserved_sector_is_hit_reserved() {
+        let mut c = Cache::new("l2", l2_cfg());
+        c.access(&rd(1, 0x1000, 1), 1);
+        let r = c.access(&wr(2, 0x1000, 2), 2);
+        assert_eq!(r.outcome, AccessOutcome::HitReserved);
+        // fill: read answered, write applied (dirty)
+        let resp = c.fill(0x1000, 5);
+        assert_eq!(resp.len(), 1);
+    }
+
+    #[test]
+    fn lazy_fetch_on_read_defers_the_fetch_to_first_read() {
+        let cfg = CacheConfig::parse("S:4:128:2,L:B:m:L:L,A:8:4,8:0,32")
+            .unwrap();
+        let mut c = Cache::new("l2", cfg);
+        // write allocates without any DRAM traffic
+        let r = c.access(&wr(1, 0x1000, 1), 1);
+        assert_eq!(r.outcome, AccessOutcome::Miss);
+        assert!(c.pop_miss().is_none(), "no fetch on lazy write");
+        // a second write still hits the partial sector
+        assert_eq!(c.access(&wr(2, 0x1000, 2), 2).outcome,
+                   AccessOutcome::Hit);
+        // the first READ triggers the lazy fetch (SECTOR_MISS) ...
+        assert_eq!(c.access(&rd(3, 0x1000, 1), 3).outcome,
+                   AccessOutcome::SectorMiss);
+        let down = c.pop_miss().unwrap();
+        assert!(!down.is_write);
+        // ... and a concurrent reader from another stream MSHR-merges —
+        // the paper's §5.1 mechanism
+        assert_eq!(c.access(&rd(4, 0x1000, 2), 3).outcome,
+                   AccessOutcome::MshrHit);
+        let resp = c.fill(0x1000, 10);
+        assert_eq!(resp.len(), 2);
+        // after the fill the sector is readable AND still dirty:
+        // evicting it must write back
+        assert_eq!(c.access(&rd(5, 0x1000, 1), 11).outcome,
+                   AccessOutcome::Hit);
+    }
+
+    #[test]
+    fn lazy_partial_sector_evicts_with_writeback() {
+        let cfg = CacheConfig::parse("S:4:128:2,L:B:m:L:L,A:8:4,8:0,32")
+            .unwrap();
+        let mut c = Cache::new("l2", cfg);
+        c.access(&wr(1, 0x0, 1), 1); // partial, dirty
+        // conflict-evict set 0 (stride 4 sets * 128 = 0x200)
+        c.access(&rd(2, 0x200, 1), 2);
+        c.pop_miss();
+        c.fill(0x200, 3);
+        let r = c.access(&rd(3, 0x400, 1), 4);
+        assert_eq!(r.outcome, AccessOutcome::Miss);
+        let outs: Vec<MemFetch> =
+            std::iter::from_fn(|| c.pop_miss()).collect();
+        assert!(outs.iter().any(|f| f.access_type
+                                    == AccessType::L2WrbkAcc),
+                "dirty partial line must write back: {outs:?}");
+    }
+
+    #[test]
+    fn write_through_l1_forwards_everything() {
+        let mut c = Cache::new("l1", l1_cfg());
+        assert_eq!(c.access(&wr(1, 0x0, 1), 1).outcome,
+                   AccessOutcome::Miss);
+        // forwarded down, NOT allocated
+        assert!(c.pop_miss().is_some());
+        assert_eq!(c.access(&rd(2, 0x0, 1), 2).outcome,
+                   AccessOutcome::Miss);
+    }
+
+    #[test]
+    fn mshr_full_is_reservation_fail() {
+        let cfg = CacheConfig::parse("S:4:128:2,L:B:m:W:L,A:1:1,8:0,32")
+            .unwrap(); // 1 MSHR entry, merge 1
+        let mut c = Cache::new("l2", cfg);
+        assert_eq!(c.access(&rd(1, 0x0, 1), 1).outcome,
+                   AccessOutcome::Miss);
+        // same sector: merge limit 1 exhausted
+        let r = c.access(&rd(2, 0x0, 2), 1);
+        assert_eq!(r.outcome, AccessOutcome::ReservationFail);
+        assert_eq!(r.fail, Some(FailOutcome::MshrMergeEntryFail));
+        // different block: table full
+        let r2 = c.access(&rd(3, 0x1000, 2), 1);
+        assert_eq!(r2.outcome, AccessOutcome::ReservationFail);
+        assert_eq!(r2.fail, Some(FailOutcome::MshrEntryFail));
+    }
+
+    #[test]
+    fn miss_queue_full_is_reservation_fail() {
+        let cfg = CacheConfig::parse("S:4:128:2,L:B:m:W:L,A:8:4,1:0,32")
+            .unwrap(); // miss queue depth 1
+        let mut c = Cache::new("l2", cfg);
+        assert_eq!(c.access(&rd(1, 0x0, 1), 1).outcome,
+                   AccessOutcome::Miss);
+        let r = c.access(&rd(2, 0x2000, 1), 1);
+        assert_eq!(r.fail, Some(FailOutcome::MissQueueFull));
+        // drain and replay succeeds
+        c.pop_miss();
+        assert_eq!(c.access(&rd(2, 0x2000, 1), 2).outcome,
+                   AccessOutcome::Miss);
+    }
+
+    #[test]
+    fn line_alloc_fail_when_all_ways_pending() {
+        let mut c = Cache::new("l2", l2_cfg()); // 2 ways
+        // set 0 addrs: 0x0, 0x200, 0x400 (stride nsets*line = 512)
+        assert_eq!(c.access(&rd(1, 0x0, 1), 1).outcome,
+                   AccessOutcome::Miss);
+        assert_eq!(c.access(&rd(2, 0x200, 1), 1).outcome,
+                   AccessOutcome::Miss);
+        let r = c.access(&rd(3, 0x400, 1), 1);
+        assert_eq!(r.fail, Some(FailOutcome::LineAllocFail));
+        // fill one way; replay allocates
+        c.fill(0x0, 2);
+        assert_eq!(c.access(&rd(3, 0x400, 1), 3).outcome,
+                   AccessOutcome::Miss);
+    }
+
+    #[test]
+    fn property_one_fill_per_miss() {
+        use crate::util::proptest_lite::{default_cases, run_cases};
+        // #(fetches sent down, reads) == #(MISS + SECTOR_MISS) outcomes;
+        // MSHR_HITs never send a duplicate fill.
+        run_cases("cache-fill-dedup", 0xCAFE, default_cases(), |g| {
+            let mut c = Cache::new("l2", l2_cfg());
+            let mut misses = 0usize;
+            let mut down_reads = 0usize;
+            let mut id = 0;
+            for step in 0..g.range(10, 120) {
+                id += 1;
+                let addr = g.below(8) * 0x40; // 8 sectors, 2 lines
+                let f = rd(id, addr, g.below(4));
+                match c.access(&f, step).outcome {
+                    AccessOutcome::Miss | AccessOutcome::SectorMiss => {
+                        misses += 1;
+                    }
+                    _ => {}
+                }
+                while let Some(d) = c.pop_miss() {
+                    if !d.is_write {
+                        down_reads += 1;
+                        c.fill(d.addr, step + 1);
+                    }
+                }
+            }
+            assert_eq!(misses, down_reads);
+        });
+    }
+}

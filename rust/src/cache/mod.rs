@@ -1,0 +1,21 @@
+//! Sectored caches with MSHRs — the GPGPU-Sim `gpu-cache.{h,cc}`
+//! substrate the paper patches.
+//!
+//! * [`access`] — the access-type / outcome / fail-reason vocabulary
+//!   (stat table axes).
+//! * [`tag_array`] — per-sector line states + probe/allocate/fill.
+//! * [`mshr`] — miss-status holding registers with cross-stream merging
+//!   (the source of the paper's `MSHR_HIT` vs `HIT` shift).
+//! * [`cache`] — the engine combining the above with a miss queue and
+//!   write policies (write-through L1, write-back write-allocate L2).
+
+pub mod access;
+#[allow(clippy::module_inception)]
+pub mod cache;
+pub mod mshr;
+pub mod tag_array;
+
+pub use access::{AccessOutcome, AccessType, FailOutcome};
+pub use cache::{AccessResult, Cache};
+pub use mshr::{MshrProbe, MshrTable};
+pub use tag_array::{Probe, SectorState, TagArray};

@@ -1,0 +1,234 @@
+//! MSHR (miss-status holding register) table.
+//!
+//! Mirrors GPGPU-Sim's `mshr_table`: misses to the same block+sector
+//! merge into one in-flight fill; a merged access is the `MSHR_HIT`
+//! outcome the paper's Fig. 2 discussion hinges on ("the missing HIT
+//! counts under concurrent execution were counted as MSHR_HIT due to
+//! load dependencies among different streams").
+
+use std::collections::BTreeMap;
+
+use crate::mem::fetch::MemFetch;
+
+/// Key: (block address, sector index).
+pub type MshrKey = (u64, u32);
+
+/// One in-flight fill and the accesses waiting on it.
+#[derive(Debug, Default)]
+struct MshrEntry {
+    waiting: Vec<MemFetch>,
+    /// Fill response arrived; entry drains via `next_ready`.
+    ready: bool,
+}
+
+/// Structural outcome of an MSHR reservation attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MshrProbe {
+    /// No entry for this key; a new one can be allocated.
+    Available,
+    /// Entry exists and can merge one more access.
+    Mergeable,
+    /// Table full (new entry impossible).
+    TableFull,
+    /// Entry exists but merge limit reached.
+    MergeFull,
+}
+
+/// The table.
+#[derive(Debug)]
+pub struct MshrTable {
+    entries: BTreeMap<MshrKey, MshrEntry>,
+    max_entries: usize,
+    max_merge: usize,
+}
+
+impl MshrTable {
+    /// `entries` slots, each merging up to `max_merge` accesses.
+    pub fn new(max_entries: usize, max_merge: usize) -> Self {
+        Self { entries: BTreeMap::new(), max_entries, max_merge }
+    }
+
+    /// What would happen if we tried to track `key`.
+    pub fn probe(&self, key: MshrKey) -> MshrProbe {
+        match self.entries.get(&key) {
+            Some(e) if e.waiting.len() < self.max_merge => {
+                MshrProbe::Mergeable
+            }
+            Some(_) => MshrProbe::MergeFull,
+            None if self.entries.len() < self.max_entries => {
+                MshrProbe::Available
+            }
+            None => MshrProbe::TableFull,
+        }
+    }
+
+    /// Whether an in-flight entry exists for `key`.
+    pub fn has_entry(&self, key: MshrKey) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Track `fetch` under `key`. Returns `true` if this *merged* into an
+    /// existing entry (the caller records `MSHR_HIT`), `false` if it
+    /// allocated a new one (the caller records `MISS`/`SECTOR_MISS` and
+    /// must send the fill request down). Panics if `probe` was not
+    /// consulted (structural hazard).
+    pub fn add(&mut self, key: MshrKey, fetch: MemFetch) -> bool {
+        match self.probe(key) {
+            MshrProbe::Available => {
+                self.entries.entry(key).or_default().waiting.push(fetch);
+                false
+            }
+            MshrProbe::Mergeable => {
+                self.entries.get_mut(&key).unwrap().waiting.push(fetch);
+                true
+            }
+            hazard => panic!("MSHR add on structural hazard {hazard:?}"),
+        }
+    }
+
+    /// Fill response for `key` arrived: mark ready.
+    pub fn mark_ready(&mut self, key: MshrKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.ready = true;
+        }
+    }
+
+    /// Pop one serviced access (drains ready entries FIFO per entry,
+    /// entries in key order — deterministic).
+    pub fn next_ready(&mut self) -> Option<MemFetch> {
+        let key = *self
+            .entries
+            .iter()
+            .find(|(_, e)| e.ready && !e.waiting.is_empty())?
+            .0;
+        let e = self.entries.get_mut(&key).unwrap();
+        let fetch = e.waiting.remove(0);
+        if e.waiting.is_empty() {
+            self.entries.remove(&key);
+        }
+        Some(fetch)
+    }
+
+    /// In-flight entry count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no fills are in flight.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total accesses parked in the table.
+    pub fn waiting_accesses(&self) -> usize {
+        self.entries.values().map(|e| e.waiting.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::access::AccessType;
+
+    fn fetch(id: u64, stream: u64) -> MemFetch {
+        MemFetch {
+            id,
+            addr: 0x100,
+            bytes: 32,
+            access_type: AccessType::GlobalAccR,
+            is_write: false,
+            stream_id: stream,
+            kernel_uid: 1,
+            l1_bypass: false,
+            ret: None,
+        }
+    }
+
+    #[test]
+    fn first_add_allocates_second_merges() {
+        let mut m = MshrTable::new(4, 4);
+        let key = (0x100, 0);
+        assert_eq!(m.probe(key), MshrProbe::Available);
+        assert!(!m.add(key, fetch(1, 1))); // new entry
+        assert_eq!(m.probe(key), MshrProbe::Mergeable);
+        assert!(m.add(key, fetch(2, 2))); // MSHR_HIT (cross-stream!)
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.waiting_accesses(), 2);
+    }
+
+    #[test]
+    fn table_and_merge_capacity() {
+        let mut m = MshrTable::new(1, 2);
+        let k1 = (0x100, 0);
+        let k2 = (0x200, 0);
+        m.add(k1, fetch(1, 1));
+        assert_eq!(m.probe(k2), MshrProbe::TableFull);
+        m.add(k1, fetch(2, 1));
+        assert_eq!(m.probe(k1), MshrProbe::MergeFull);
+    }
+
+    #[test]
+    fn ready_drains_in_fifo_order() {
+        let mut m = MshrTable::new(4, 4);
+        let key = (0x100, 1);
+        m.add(key, fetch(1, 1));
+        m.add(key, fetch(2, 2));
+        assert!(m.next_ready().is_none()); // not filled yet
+        m.mark_ready(key);
+        assert_eq!(m.next_ready().unwrap().id, 1);
+        assert_eq!(m.next_ready().unwrap().id, 2);
+        assert!(m.next_ready().is_none());
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn distinct_sectors_are_distinct_entries() {
+        let mut m = MshrTable::new(4, 4);
+        assert!(!m.add((0x100, 0), fetch(1, 1)));
+        assert!(!m.add((0x100, 1), fetch(2, 1))); // other sector: new fill
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "structural hazard")]
+    fn add_on_full_table_panics() {
+        let mut m = MshrTable::new(1, 1);
+        m.add((0x100, 0), fetch(1, 1));
+        m.add((0x200, 0), fetch(2, 1));
+    }
+
+    #[test]
+    fn property_conservation() {
+        use crate::util::proptest_lite::{default_cases, run_cases};
+        // Every added fetch comes out exactly once after mark_ready.
+        run_cases("mshr-conservation", 0xA11, default_cases(), |g| {
+            let mut m = MshrTable::new(8, 4);
+            let mut added = Vec::new();
+            let mut id = 0u64;
+            for _ in 0..g.range(1, 40) {
+                let key = (g.below(4) * 0x100, g.below(4) as u32);
+                match m.probe(key) {
+                    MshrProbe::Available | MshrProbe::Mergeable => {
+                        id += 1;
+                        m.add(key, fetch(id, g.below(4)));
+                        added.push(id);
+                    }
+                    _ => {}
+                }
+            }
+            for b in 0..4u64 {
+                for s in 0..4u32 {
+                    m.mark_ready((b * 0x100, s));
+                }
+            }
+            let mut drained = Vec::new();
+            while let Some(f) = m.next_ready() {
+                drained.push(f.id);
+            }
+            drained.sort_unstable();
+            added.sort_unstable();
+            assert_eq!(drained, added);
+            assert!(m.is_empty());
+        });
+    }
+}

@@ -1,0 +1,424 @@
+//! Tag array with per-sector state — GPGPU-Sim's `tag_array` +
+//! `sector_cache_block`.
+//!
+//! Lines hold up to 4 × 32 B sectors (for `CacheKind::Sectored`; normal
+//! caches are the 1-sector special case). Probing classifies an access
+//! into the [`AccessOutcome`] vocabulary; allocation reserves a line +
+//! sector until the fill returns.
+
+use crate::cache::access::AccessOutcome;
+use crate::config::cache_cfg::{CacheConfig, ReplacementPolicy};
+use crate::Cycle;
+
+/// Per-sector state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SectorState {
+    #[default]
+    Invalid,
+    /// Fill in flight.
+    Reserved,
+    Valid,
+    /// Valid + dirty (write-back caches).
+    Modified,
+    /// Written under lazy-fetch-on-read without a backing fill: dirty
+    /// bytes only, **not readable**. Writes hit it; a read triggers the
+    /// lazy fetch (GPGPU-Sim's `L` write-allocate policy — the paper's
+    /// TITAN V L2). This is what turns the §5.1 pointer-chase loads
+    /// into misses that MSHR-merge across streams.
+    ModifiedPartial,
+}
+
+impl SectorState {
+    /// Readable data present.
+    pub fn is_valid(self) -> bool {
+        matches!(self, SectorState::Valid | SectorState::Modified)
+    }
+}
+
+/// One cache line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// Block address (tag); meaningful only when any sector != Invalid.
+    pub tag: u64,
+    pub sectors: [SectorState; 4],
+    /// LRU stamp.
+    pub last_use: Cycle,
+    /// FIFO stamp (allocation time).
+    pub alloc_time: Cycle,
+}
+
+impl Line {
+    fn empty() -> Self {
+        Self {
+            tag: 0,
+            sectors: [SectorState::Invalid; 4],
+            last_use: 0,
+            alloc_time: 0,
+        }
+    }
+
+    /// Any sector holds or awaits data.
+    pub fn in_use(&self) -> bool {
+        self.sectors.iter().any(|s| *s != SectorState::Invalid)
+    }
+
+    /// Any fill in flight.
+    pub fn has_reserved(&self) -> bool {
+        self.sectors.iter().any(|s| *s == SectorState::Reserved)
+    }
+
+    /// Any dirty sector.
+    pub fn is_dirty(&self) -> bool {
+        self.sectors.iter().any(|s| {
+            matches!(s, SectorState::Modified
+                        | SectorState::ModifiedPartial)
+        })
+    }
+}
+
+/// Probe classification (what the access *would* do).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    /// Sector valid in `way`.
+    Hit { way: usize },
+    /// Sector fill already in flight in `way`.
+    HitReserved { way: usize },
+    /// Sector written-but-unreadable in `way` (lazy fetch pending on
+    /// first read). Writes treat this as a hit; reads as a sector miss
+    /// whose fill must preserve dirtiness.
+    PartialHit { way: usize },
+    /// Line present (tag match) but sector invalid — sectored miss.
+    SectorMiss { way: usize },
+    /// No tag match; `way` is the victim to allocate.
+    Miss { way: usize, evict_dirty: bool, evict_tag: u64 },
+    /// No allocatable way (all lines reserved).
+    ReservationFail,
+}
+
+impl Probe {
+    /// The [`AccessOutcome`] this probe maps to (before MSHR merging —
+    /// the cache layer may upgrade `SectorMiss`/`Miss` to `MshrHit`).
+    pub fn outcome(&self) -> AccessOutcome {
+        match self {
+            Probe::Hit { .. } => AccessOutcome::Hit,
+            Probe::HitReserved { .. } => AccessOutcome::HitReserved,
+            Probe::PartialHit { .. } | Probe::SectorMiss { .. } => {
+                AccessOutcome::SectorMiss
+            }
+            Probe::Miss { .. } => AccessOutcome::Miss,
+            Probe::ReservationFail => AccessOutcome::ReservationFail,
+        }
+    }
+}
+
+/// The tag array.
+#[derive(Debug)]
+pub struct TagArray {
+    cfg: CacheConfig,
+    /// `sets[set][way]`.
+    sets: Vec<Vec<Line>>,
+}
+
+impl TagArray {
+    /// Build for a config.
+    pub fn new(cfg: CacheConfig) -> Self {
+        let sets = (0..cfg.nsets)
+            .map(|_| (0..cfg.assoc).map(|_| Line::empty()).collect())
+            .collect();
+        Self { cfg, sets }
+    }
+
+    /// The geometry in use.
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Classify an access to `addr` without mutating state.
+    pub fn probe(&self, addr: u64) -> Probe {
+        let set = self.cfg.set_of(addr) as usize;
+        let tag = self.cfg.tag_of(addr);
+        let sector = self.cfg.sector_of(addr) as usize;
+        let ways = &self.sets[set];
+
+        for (w, line) in ways.iter().enumerate() {
+            if line.in_use() && line.tag == tag {
+                return match line.sectors[sector] {
+                    SectorState::Valid | SectorState::Modified => {
+                        Probe::Hit { way: w }
+                    }
+                    SectorState::Reserved => Probe::HitReserved { way: w },
+                    SectorState::ModifiedPartial => {
+                        Probe::PartialHit { way: w }
+                    }
+                    SectorState::Invalid => Probe::SectorMiss { way: w },
+                };
+            }
+        }
+        // victim selection: prefer an unused way, else the
+        // LRU/FIFO-oldest line that is not mid-fill.
+        if let Some(w) = ways.iter().position(|l| !l.in_use()) {
+            return Probe::Miss { way: w, evict_dirty: false, evict_tag: 0 };
+        }
+        let candidate = ways
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !l.has_reserved())
+            .min_by_key(|(_, l)| match self.cfg.replacement {
+                ReplacementPolicy::Lru => l.last_use,
+                ReplacementPolicy::Fifo => l.alloc_time,
+            });
+        match candidate {
+            Some((w, line)) => Probe::Miss {
+                way: w,
+                evict_dirty: line.is_dirty(),
+                evict_tag: line.tag,
+            },
+            None => Probe::ReservationFail,
+        }
+    }
+
+    /// Reserve `addr`'s sector in `way` (miss path; caller sends fill).
+    /// For a tag change, the whole line is recycled (sectors invalidated).
+    pub fn allocate(&mut self, addr: u64, way: usize, cycle: Cycle) {
+        let set = self.cfg.set_of(addr) as usize;
+        let tag = self.cfg.tag_of(addr);
+        let sector = self.cfg.sector_of(addr) as usize;
+        let line = &mut self.sets[set][way];
+        if !line.in_use() || line.tag != tag {
+            debug_assert!(!line.has_reserved(),
+                          "evicting a line with an in-flight fill");
+            *line = Line::empty();
+            line.tag = tag;
+            line.alloc_time = cycle;
+        }
+        line.sectors[sector] = SectorState::Reserved;
+        line.last_use = cycle;
+    }
+
+    /// Complete a fill for `addr` (sector becomes Valid / Modified if
+    /// `dirty`). No-op if the line was since recycled (can't happen with
+    /// reserved-line pinning, asserted in debug).
+    pub fn fill(&mut self, addr: u64, cycle: Cycle, dirty: bool) {
+        let set = self.cfg.set_of(addr) as usize;
+        let tag = self.cfg.tag_of(addr);
+        let sector = self.cfg.sector_of(addr) as usize;
+        if let Some(line) = self.sets[set]
+            .iter_mut()
+            .find(|l| l.in_use() && l.tag == tag)
+        {
+            line.sectors[sector] = if dirty {
+                SectorState::Modified
+            } else {
+                SectorState::Valid
+            };
+            line.last_use = cycle;
+        } else {
+            debug_assert!(false, "fill for non-resident line {addr:#x}");
+        }
+    }
+
+    /// Record a hit access (LRU update; marks dirty on write for
+    /// write-back caches). A write to a `ModifiedPartial` sector keeps
+    /// it partial (still unreadable until the lazy fetch).
+    pub fn touch(&mut self, addr: u64, way: usize, cycle: Cycle,
+                 mark_dirty: bool) {
+        let set = self.cfg.set_of(addr) as usize;
+        let sector = self.cfg.sector_of(addr) as usize;
+        let line = &mut self.sets[set][way];
+        line.last_use = cycle;
+        if mark_dirty
+            && line.sectors[sector] != SectorState::ModifiedPartial
+        {
+            line.sectors[sector] = SectorState::Modified;
+        }
+    }
+
+    /// Lazy write-allocate: mark `addr`'s sector written-but-unreadable
+    /// (recycling the line first on a tag change).
+    pub fn write_partial(&mut self, addr: u64, way: usize, cycle: Cycle) {
+        let set = self.cfg.set_of(addr) as usize;
+        let tag = self.cfg.tag_of(addr);
+        let sector = self.cfg.sector_of(addr) as usize;
+        let line = &mut self.sets[set][way];
+        if !line.in_use() || line.tag != tag {
+            debug_assert!(!line.has_reserved(),
+                          "evicting a line with an in-flight fill");
+            *line = Line::empty();
+            line.tag = tag;
+            line.alloc_time = cycle;
+        }
+        line.sectors[sector] = SectorState::ModifiedPartial;
+        line.last_use = cycle;
+    }
+
+    /// Invalidate everything (kernel-boundary flush for L1).
+    pub fn flush(&mut self) {
+        for set in &mut self.sets {
+            for line in set {
+                *line = Line::empty();
+            }
+        }
+    }
+
+    /// Occupied (valid or reserved) sector count — observability.
+    pub fn sectors_in_use(&self) -> usize {
+        self.sets
+            .iter()
+            .flatten()
+            .flat_map(|l| l.sectors.iter())
+            .filter(|s| **s != SectorState::Invalid)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cache_cfg::CacheConfig;
+
+    fn small() -> TagArray {
+        // 2 sets, 2 ways, 128B sectored lines
+        TagArray::new(
+            CacheConfig::parse("S:2:128:2,L:B:m:W:L,A:16:4,8:0,32")
+                .unwrap())
+    }
+
+    #[test]
+    fn cold_miss_then_hit_after_fill() {
+        let mut t = small();
+        let addr = 0x1000;
+        let p = t.probe(addr);
+        let Probe::Miss { way, evict_dirty: false, .. } = p else {
+            panic!("want cold miss, got {p:?}");
+        };
+        t.allocate(addr, way, 1);
+        assert!(matches!(t.probe(addr), Probe::HitReserved { .. }));
+        t.fill(addr, 5, false);
+        assert!(matches!(t.probe(addr), Probe::Hit { .. }));
+    }
+
+    #[test]
+    fn sector_miss_same_line() {
+        let mut t = small();
+        let s0 = 0x1000; // sector 0
+        let s2 = 0x1040; // sector 2, same 128B line
+        let Probe::Miss { way, .. } = t.probe(s0) else { panic!() };
+        t.allocate(s0, way, 1);
+        t.fill(s0, 2, false);
+        let p = t.probe(s2);
+        assert!(matches!(p, Probe::SectorMiss { .. }), "{p:?}");
+        // after filling sector 2, both hit
+        t.allocate(s2, way, 3);
+        t.fill(s2, 4, false);
+        assert!(matches!(t.probe(s0), Probe::Hit { .. }));
+        assert!(matches!(t.probe(s2), Probe::Hit { .. }));
+    }
+
+    #[test]
+    fn lru_eviction_of_dirty_line_reports_writeback() {
+        let mut t = small();
+        // three lines mapping to the same set (stride = nsets*line =
+        // 2*128 = 256 with linear hash on 2 sets -> same set)
+        let a = 0x0000;
+        let b = 0x0100;
+        let c = 0x0200;
+        for (i, addr) in [a, b].iter().enumerate() {
+            let Probe::Miss { way, .. } = t.probe(*addr) else { panic!() };
+            t.allocate(*addr, way, i as u64);
+            t.fill(*addr, i as u64, false);
+        }
+        // dirty `a` via a write touch
+        let Probe::Hit { way } = t.probe(a) else { panic!() };
+        t.touch(a, way, 10, true);
+        // touch b later so `a`... a is MRU now; make b older -> victim=b
+        let Probe::Hit { way: wb } = t.probe(b) else { panic!() };
+        t.touch(b, wb, 3, false);
+        let p = t.probe(c);
+        let Probe::Miss { evict_dirty, evict_tag, .. } = p else {
+            panic!("{p:?}")
+        };
+        assert!(!evict_dirty); // victim is clean b (older)
+        assert_eq!(evict_tag, b);
+        // age a below b: re-touch b newer, a older -> victim=a, dirty
+        t.touch(b, wb, 20, false);
+        let Probe::Hit { way: wa } = t.probe(a) else { panic!() };
+        t.touch(a, wa, 11, true);
+        let Probe::Miss { evict_dirty, evict_tag, .. } = t.probe(c) else {
+            panic!()
+        };
+        assert!(evict_dirty);
+        assert_eq!(evict_tag, a);
+    }
+
+    #[test]
+    fn reservation_fail_when_all_ways_reserved() {
+        let mut t = small();
+        let a = 0x0000;
+        let b = 0x0100;
+        let c = 0x0200; // same set as a, b
+        for addr in [a, b] {
+            let Probe::Miss { way, .. } = t.probe(addr) else { panic!() };
+            t.allocate(addr, way, 1);
+        }
+        assert_eq!(t.probe(c), Probe::ReservationFail);
+    }
+
+    #[test]
+    fn flush_empties_everything() {
+        let mut t = small();
+        let Probe::Miss { way, .. } = t.probe(0x40) else { panic!() };
+        t.allocate(0x40, way, 1);
+        t.fill(0x40, 1, false);
+        assert!(t.sectors_in_use() > 0);
+        t.flush();
+        assert_eq!(t.sectors_in_use(), 0);
+        assert!(matches!(t.probe(0x40), Probe::Miss { .. }));
+    }
+
+    #[test]
+    fn property_probe_allocate_fill_consistency() {
+        use crate::util::proptest_lite::{default_cases, run_cases};
+        run_cases("tag-array", 0x7A6, default_cases(), |g| {
+            let mut t = small();
+            let mut cycle = 0u64;
+            for _ in 0..g.range(1, 60) {
+                cycle += 1;
+                let addr = g.below(16) * 0x40; // 16 sectors over 4 lines
+                match t.probe(addr) {
+                    Probe::Hit { way } => {
+                        t.touch(addr, way, cycle, g.chance(0.3));
+                        // hit must remain a hit
+                        assert!(matches!(t.probe(addr), Probe::Hit { .. }));
+                    }
+                    Probe::HitReserved { .. } => {
+                        if g.chance(0.5) {
+                            t.fill(addr, cycle, false);
+                            assert!(matches!(t.probe(addr),
+                                             Probe::Hit { .. }));
+                        }
+                    }
+                    Probe::SectorMiss { way } | Probe::Miss { way, .. } => {
+                        t.allocate(addr, way, cycle);
+                        assert!(matches!(t.probe(addr),
+                                         Probe::HitReserved { .. }));
+                        if g.chance(0.7) {
+                            t.fill(addr, cycle, false);
+                        }
+                    }
+                    Probe::PartialHit { way } => {
+                        // lazy refetch path: reserve + fill dirty
+                        t.allocate(addr, way, cycle);
+                        t.fill(addr, cycle, true);
+                        assert!(matches!(t.probe(addr),
+                                         Probe::Hit { .. }));
+                    }
+                    Probe::ReservationFail => {
+                        // fill something reserved to unblock
+                    }
+                }
+                // invariant: sectors_in_use never exceeds capacity
+                assert!(t.sectors_in_use() <= 2 * 2 * 4);
+            }
+        });
+    }
+}

@@ -1,0 +1,420 @@
+//! Hand-rolled CLI (`clap` is unavailable offline — DESIGN.md §7).
+//!
+//! ```text
+//! streamsim run      --bench l2_lat | --trace kernelslist.g
+//!                    [--preset sm7_titanv_mini] [--stat-mode tip]
+//!                    [--serialize] [--config FILE] [-o key value]...
+//!                    [--timeline] [--csv PATH] [--verbose]
+//! streamsim validate --bench l2_lat [--preset ...] [--figure]
+//! streamsim trace-gen --bench bench1 --out DIR
+//! streamsim functional [--artifacts DIR]
+//! streamsim report   --bench l2_lat [--preset ...]  (figure table only)
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SimConfig;
+use crate::harness;
+use crate::sim::GpuSim;
+use crate::stats::print as stat_print;
+use crate::workloads;
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Run(RunArgs),
+    Validate { bench: String, preset: String, figure: bool },
+    TraceGen { bench: String, out: PathBuf },
+    Functional { artifacts: PathBuf },
+    Report { bench: String, preset: String },
+    Help,
+}
+
+/// Arguments of `streamsim run`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunArgs {
+    pub bench: Option<String>,
+    pub trace: Option<PathBuf>,
+    pub preset: String,
+    pub stat_mode: Option<String>,
+    pub serialize: bool,
+    pub config_file: Option<PathBuf>,
+    pub overrides: BTreeMap<String, String>,
+    pub timeline: bool,
+    pub csv: Option<PathBuf>,
+    pub verbose: bool,
+    /// Print the per-stream energy breakdown (§6 extension).
+    pub power: bool,
+    /// Write a machine-readable result document.
+    pub json: Option<PathBuf>,
+}
+
+impl Default for RunArgs {
+    fn default() -> Self {
+        Self {
+            bench: None,
+            trace: None,
+            preset: "sm7_titanv_mini".into(),
+            stat_mode: None,
+            serialize: false,
+            config_file: None,
+            overrides: BTreeMap::new(),
+            timeline: false,
+            csv: None,
+            verbose: false,
+            power: false,
+            json: None,
+        }
+    }
+}
+
+/// Usage text.
+pub const USAGE: &str = "\
+streamsim — per-stream stat tracking for a trace-driven GPU simulator
+
+USAGE:
+  streamsim run       --bench NAME | --trace kernelslist.g
+                      [--preset NAME] [--stat-mode tip|clean|exact]
+                      [--serialize] [--config FILE] [-o KEY VALUE]...
+                      [--timeline] [--power] [--csv PATH]
+                      [--json PATH] [--verbose]
+  streamsim validate  --bench NAME [--preset NAME] [--figure]
+  streamsim trace-gen --bench NAME --out DIR
+  streamsim functional [--artifacts DIR]
+  streamsim report    --bench NAME [--preset NAME]
+  streamsim help
+
+BENCHES: l2_lat bench1 bench3 bench1_mini deepbench deepbench_mini
+PRESETS: sm7_titanv sm7_titanv_mini minimal
+";
+
+/// Parse an argv (without the program name).
+pub fn parse(args: &[String]) -> Result<Command> {
+    let Some((cmd, rest)) = args.split_first() else {
+        return Ok(Command::Help);
+    };
+    let mut it = rest.iter().peekable();
+    let next_val = |flag: &str,
+                        it: &mut std::iter::Peekable<
+                            std::slice::Iter<String>>|
+     -> Result<String> {
+        it.next()
+            .map(|s| s.to_string())
+            .with_context(|| format!("flag {flag} needs a value"))
+    };
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => Ok(Command::Help),
+        "run" => {
+            let mut a = RunArgs::default();
+            while let Some(flag) = it.next() {
+                match flag.as_str() {
+                    "--bench" => a.bench = Some(next_val("--bench",
+                                                         &mut it)?),
+                    "--trace" => {
+                        a.trace =
+                            Some(next_val("--trace", &mut it)?.into());
+                    }
+                    "--preset" => a.preset = next_val("--preset",
+                                                      &mut it)?,
+                    "--stat-mode" => {
+                        a.stat_mode =
+                            Some(next_val("--stat-mode", &mut it)?);
+                    }
+                    "--serialize" => a.serialize = true,
+                    "--config" => {
+                        a.config_file =
+                            Some(next_val("--config", &mut it)?.into());
+                    }
+                    "-o" => {
+                        let k = next_val("-o", &mut it)?;
+                        let v = next_val("-o", &mut it)?;
+                        a.overrides.insert(k, v);
+                    }
+                    "--timeline" => a.timeline = true,
+                    "--power" => a.power = true,
+                    "--json" => {
+                        a.json =
+                            Some(next_val("--json", &mut it)?.into());
+                    }
+                    "--csv" => {
+                        a.csv = Some(next_val("--csv", &mut it)?.into());
+                    }
+                    "--verbose" => a.verbose = true,
+                    other => bail!("unknown flag '{other}' for run"),
+                }
+            }
+            if a.bench.is_none() && a.trace.is_none() {
+                bail!("run needs --bench or --trace");
+            }
+            Ok(Command::Run(a))
+        }
+        "validate" | "report" => {
+            let mut bench = None;
+            let mut preset = "sm7_titanv_mini".to_string();
+            let mut figure = false;
+            while let Some(flag) = it.next() {
+                match flag.as_str() {
+                    "--bench" => bench = Some(next_val("--bench",
+                                                       &mut it)?),
+                    "--preset" => preset = next_val("--preset",
+                                                    &mut it)?,
+                    "--figure" => figure = true,
+                    other => bail!("unknown flag '{other}'"),
+                }
+            }
+            let bench = bench.context("--bench is required")?;
+            if cmd == "validate" {
+                Ok(Command::Validate { bench, preset, figure })
+            } else {
+                Ok(Command::Report { bench, preset })
+            }
+        }
+        "trace-gen" => {
+            let mut bench = None;
+            let mut out = None;
+            while let Some(flag) = it.next() {
+                match flag.as_str() {
+                    "--bench" => bench = Some(next_val("--bench",
+                                                       &mut it)?),
+                    "--out" => {
+                        out = Some(PathBuf::from(next_val("--out",
+                                                          &mut it)?));
+                    }
+                    other => bail!("unknown flag '{other}'"),
+                }
+            }
+            Ok(Command::TraceGen {
+                bench: bench.context("--bench is required")?,
+                out: out.context("--out is required")?,
+            })
+        }
+        "functional" => {
+            let mut artifacts =
+                crate::runtime::default_artifact_dir();
+            while let Some(flag) = it.next() {
+                match flag.as_str() {
+                    "--artifacts" => {
+                        artifacts =
+                            next_val("--artifacts", &mut it)?.into();
+                    }
+                    other => bail!("unknown flag '{other}'"),
+                }
+            }
+            Ok(Command::Functional { artifacts })
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+/// Execute a parsed command; returns the text to print.
+pub fn execute(cmd: Command) -> Result<String> {
+    use std::fmt::Write as _;
+    match cmd {
+        Command::Help => Ok(USAGE.to_string()),
+        Command::Run(a) => {
+            let mut cfg = SimConfig::preset(&a.preset)?;
+            if let Some(f) = &a.config_file {
+                cfg.apply_file(f)?;
+            }
+            if let Some(m) = &a.stat_mode {
+                let mut kv = BTreeMap::new();
+                kv.insert("stat_mode".to_string(), m.clone());
+                cfg.apply_overrides(&kv)?;
+            }
+            cfg.serialize_streams |= a.serialize;
+            cfg.apply_overrides(&a.overrides)?;
+
+            let workload = if let Some(b) = &a.bench {
+                workloads::generate(b)?.workload
+            } else {
+                crate::trace::io::load_workload(a.trace.as_ref()
+                                                 .unwrap())?
+            };
+            let mut sim = GpuSim::new(cfg)?;
+            sim.verbose = a.verbose;
+            sim.enqueue_workload(&workload)?;
+            sim.run()?;
+            let stats = sim.stats();
+            let mut out = String::new();
+            let _ = writeln!(out, "config: {}", sim.config().summary());
+            let _ = writeln!(out, "cycles: {}", stats.total_cycles);
+            let _ = writeln!(out, "kernels: {}", stats.kernels_done);
+            out.push_str(&stat_print::print_all_streams(
+                &stats.l1, "Total_core_cache_stats_breakdown"));
+            out.push_str(&stat_print::print_all_streams(
+                &stats.l2, "L2_cache_stats_breakdown"));
+            if a.timeline {
+                out.push_str(&sim.render_timeline(72));
+            }
+            if a.power {
+                let p = crate::stats::PowerStats::from_counters(
+                    &crate::stats::EnergyModel::default(),
+                    &stats.l1, &stats.l2,
+                    &sim.dram_per_stream(), &sim.icnt_per_stream());
+                out.push_str(&p.render());
+            }
+            if let Some(csv) = &a.csv {
+                std::fs::write(csv, stat_print::to_csv(&stats.l2))?;
+                let _ = writeln!(out, "wrote {}", csv.display());
+            }
+            if let Some(json) = &a.json {
+                let doc = crate::stats::export::to_json(
+                    sim.config().stat_mode.label(), stats,
+                    &sim.dram_per_stream(), &sim.icnt_per_stream());
+                std::fs::write(json, doc)?;
+                let _ = writeln!(out, "wrote {}", json.display());
+            }
+            Ok(out)
+        }
+        Command::Validate { bench, preset, figure } => {
+            let g = workloads::generate(&bench)?;
+            let cfg = SimConfig::preset(&preset)?;
+            let tw = harness::run_three_configs(&cfg, &g)?;
+            let checks = tw.validate(&g);
+            let mut out = format!("validation of {} on {}:\n", g.name,
+                                  preset);
+            out.push_str(&harness::render_checks(&checks));
+            if figure {
+                out.push_str(&tw.figure(&g.name).render_table());
+            }
+            if !harness::all_passed(&checks) {
+                bail!("{out}\nVALIDATION FAILED");
+            }
+            out.push_str("ALL CHECKS PASSED\n");
+            Ok(out)
+        }
+        Command::Report { bench, preset } => {
+            let g = workloads::generate(&bench)?;
+            let cfg = SimConfig::preset(&preset)?;
+            let tw = harness::run_three_configs(&cfg, &g)?;
+            Ok(tw.figure(&g.name).render_table())
+        }
+        Command::TraceGen { bench, out } => {
+            let g = workloads::generate(&bench)?;
+            let list = crate::trace::io::write_workload(&g.workload,
+                                                        &out)?;
+            Ok(format!("wrote {} ({} kernels)\n", list.display(),
+                       g.workload.kernels.len()))
+        }
+        Command::Functional { artifacts } => {
+            let mut rt = crate::runtime::Runtime::new()?;
+            let names = rt.load_dir(&artifacts)?;
+            let mut out = format!("loaded {} artifacts on {}\n",
+                                  names.len(), rt.platform());
+            let reports = vec![
+                crate::functional::check_stream_program(
+                    &rt, "stream_program_b3", 1 << 18)?,
+                crate::functional::check_gemm(
+                    &rt, "deepbench_gemm_mini", 35, 512, 256)?,
+                crate::functional::check_stats_aggregate(&rt, 10_000)?,
+            ];
+            for r in &reports {
+                let _ = writeln!(
+                    out,
+                    "  [{}] {:<24} n={:<8} max_err={:.2e} \
+                     checksum={:.4}",
+                    if r.passed { "PASS" } else { "FAIL" }, r.artifact,
+                    r.elements, r.max_abs_err, r.checksum);
+            }
+            if reports.iter().any(|r| !r.passed) {
+                bail!("{out}\nFUNCTIONAL VALIDATION FAILED");
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_run_flags() {
+        let cmd = parse(&sv(&["run", "--bench", "l2_lat", "--preset",
+                              "minimal", "--stat-mode", "clean",
+                              "--serialize", "-o", "num_cores", "2",
+                              "--timeline"])).unwrap();
+        let Command::Run(a) = cmd else { panic!() };
+        assert_eq!(a.bench.as_deref(), Some("l2_lat"));
+        assert_eq!(a.preset, "minimal");
+        assert_eq!(a.stat_mode.as_deref(), Some("clean"));
+        assert!(a.serialize);
+        assert!(a.timeline);
+        assert_eq!(a.overrides["num_cores"], "2");
+    }
+
+    #[test]
+    fn run_requires_bench_or_trace() {
+        assert!(parse(&sv(&["run"])).is_err());
+        assert!(parse(&sv(&["run", "--trace", "x/kernelslist.g"]))
+            .is_ok());
+    }
+
+    #[test]
+    fn parses_other_commands() {
+        assert_eq!(parse(&sv(&["help"])).unwrap(), Command::Help);
+        assert_eq!(parse(&sv(&[])).unwrap(), Command::Help);
+        assert!(matches!(
+            parse(&sv(&["validate", "--bench", "l2_lat"])).unwrap(),
+            Command::Validate { figure: false, .. }));
+        assert!(matches!(
+            parse(&sv(&["trace-gen", "--bench", "bench1", "--out",
+                        "/tmp/x"])).unwrap(),
+            Command::TraceGen { .. }));
+        assert!(parse(&sv(&["bogus"])).is_err());
+        assert!(parse(&sv(&["validate"])).is_err()); // missing --bench
+    }
+
+    #[test]
+    fn execute_run_l2_lat_end_to_end() {
+        let out = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "minimal".into(),
+            timeline: true,
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(out.contains("L2_cache_stats_breakdown"));
+        assert!(out.contains("GLOBAL_ACC_R"));
+        assert!(out.contains("stream"));
+    }
+
+    #[test]
+    fn execute_validate_l2_lat() {
+        let out = execute(Command::Validate {
+            bench: "l2_lat".into(),
+            preset: "minimal".into(),
+            figure: true,
+        })
+        .unwrap();
+        assert!(out.contains("ALL CHECKS PASSED"), "{out}");
+    }
+
+    #[test]
+    fn execute_trace_gen_roundtrip() {
+        let dir = std::env::temp_dir().join("streamsim_cli_tracegen");
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = execute(Command::TraceGen {
+            bench: "l2_lat".into(),
+            out: dir.clone(),
+        })
+        .unwrap();
+        assert!(out.contains("kernelslist.g"));
+        // and the generated trace runs
+        let run = execute(Command::Run(RunArgs {
+            trace: Some(dir.join("kernelslist.g")),
+            preset: "minimal".into(),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(run.contains("kernels: 4"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

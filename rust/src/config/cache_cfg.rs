@@ -1,0 +1,332 @@
+//! GPGPU-Sim cache-geometry string parser.
+//!
+//! Accel-Sim configs describe each cache with a compact string, e.g. the
+//! TITAN V L1D `S:4:128:64,L:L:m:N:L,A:512:8,8:0,32` — this module parses
+//! the subset of that grammar the simulator models:
+//!
+//! ```text
+//! <ct>:<nsets>:<line>:<assoc>,<repl>:<wr>:<alloc>:<wralloc>:<six>,
+//! <mshr>:<entries>:<merge>,<miss_queue>:<result_fifo>,<data_port>
+//! ```
+//!
+//! * `ct` — `N` normal or `S` sectored (4×32 B sectors per 128 B line)
+//! * `repl` — `L` LRU / `F` FIFO
+//! * `wr` — `L` local-WB/global-WT / `B` write-back / `T` write-through
+//! * `alloc` — `m` on-miss / `f` on-fill / `s` stream-fetch
+//! * `wralloc` — `N` no-write-allocate / `W` write-allocate /
+//!   `L` lazy-fetch-on-read
+//! * `six` — set-index function: `L` linear / `P` (h)polynomial /
+//!   `X` bitwise-xor (we model L and X; P falls back to X)
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::is_pow2;
+
+/// Sectored or normal line organisation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheKind {
+    /// Whole-line fills.
+    Normal,
+    /// 32-byte sector fills within the line.
+    Sectored,
+}
+
+/// Replacement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplacementPolicy {
+    Lru,
+    Fifo,
+}
+
+/// Write-hit policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WritePolicy {
+    /// Write-back (L2).
+    WriteBack,
+    /// Write-through (L1 global).
+    WriteThrough,
+    /// GPGPU-Sim `L`: local write-back, global write-through — for our
+    /// workloads (global only) this behaves as write-through.
+    LocalWbGlobalWt,
+}
+
+/// Write-miss policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteAllocatePolicy {
+    /// Write miss does not allocate (forwarded to the next level).
+    NoWriteAllocate,
+    /// Write miss allocates the line (fetch-on-write).
+    WriteAllocate,
+    /// GPGPU-Sim `L`: lazy fetch on read (allocate, fill sectors on
+    /// demand). Modeled as allocate-without-fetch.
+    LazyFetchOnRead,
+}
+
+/// Set-index hash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetIndexFunction {
+    /// Plain modulo.
+    Linear,
+    /// XOR-fold of higher address bits (decorrelates power-of-two
+    /// strides; stands in for GPGPU-Sim's `P`/`H` hashes as well).
+    BitwiseXor,
+}
+
+/// Parsed cache geometry + policies.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheConfig {
+    pub kind: CacheKind,
+    pub nsets: u32,
+    pub line_size: u32,
+    pub assoc: u32,
+    pub replacement: ReplacementPolicy,
+    pub write_policy: WritePolicy,
+    pub write_allocate: WriteAllocatePolicy,
+    pub set_index: SetIndexFunction,
+    pub mshr_entries: u32,
+    pub mshr_max_merge: u32,
+    pub miss_queue_size: u32,
+    pub result_fifo_size: u32,
+    pub data_port_width: u32,
+}
+
+/// Fixed GPU sector size (bytes), as in GPGPU-Sim.
+pub const SECTOR_SIZE: u32 = 32;
+
+impl CacheConfig {
+    /// Parse an Accel-Sim cache-geometry string.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(',').collect();
+        if parts.len() != 5 {
+            bail!("cache config '{s}': want 5 comma groups, got {}",
+                  parts.len());
+        }
+        let geo: Vec<&str> = parts[0].split(':').collect();
+        if geo.len() != 4 {
+            bail!("cache config '{s}': geometry group needs \
+                   ct:nsets:line:assoc");
+        }
+        let kind = match geo[0] {
+            "N" => CacheKind::Normal,
+            "S" => CacheKind::Sectored,
+            other => bail!("unknown cache type '{other}'"),
+        };
+        let nsets: u32 = geo[1].parse().context("nsets")?;
+        let line_size: u32 = geo[2].parse().context("line size")?;
+        let assoc: u32 = geo[3].parse().context("assoc")?;
+
+        let pol: Vec<&str> = parts[1].split(':').collect();
+        if pol.len() != 5 {
+            bail!("cache config '{s}': policy group needs 5 fields");
+        }
+        let replacement = match pol[0] {
+            "L" => ReplacementPolicy::Lru,
+            "F" => ReplacementPolicy::Fifo,
+            other => bail!("unknown replacement '{other}'"),
+        };
+        let write_policy = match pol[1] {
+            "B" => WritePolicy::WriteBack,
+            "T" => WritePolicy::WriteThrough,
+            "L" => WritePolicy::LocalWbGlobalWt,
+            other => bail!("unknown write policy '{other}'"),
+        };
+        // pol[2] (alloc on miss/fill) does not change stat semantics at
+        // our fidelity; accepted and ignored.
+        let write_allocate = match pol[3] {
+            "N" => WriteAllocatePolicy::NoWriteAllocate,
+            "W" => WriteAllocatePolicy::WriteAllocate,
+            "L" => WriteAllocatePolicy::LazyFetchOnRead,
+            other => bail!("unknown write-allocate '{other}'"),
+        };
+        let set_index = match pol[4] {
+            "L" => SetIndexFunction::Linear,
+            "X" | "P" | "H" => SetIndexFunction::BitwiseXor,
+            other => bail!("unknown set-index fn '{other}'"),
+        };
+
+        let mshr: Vec<&str> = parts[2].split(':').collect();
+        if mshr.len() != 3 {
+            bail!("cache config '{s}': mshr group needs type:entries:merge");
+        }
+        // mshr[0] type (A/B/S) — assoc table either way at our fidelity.
+        let mshr_entries: u32 = mshr[1].parse().context("mshr entries")?;
+        let mshr_max_merge: u32 = mshr[2].parse().context("mshr merge")?;
+
+        let mq: Vec<&str> = parts[3].split(':').collect();
+        if mq.len() != 2 {
+            bail!("cache config '{s}': queue group needs mq:result_fifo");
+        }
+        let miss_queue_size: u32 = mq[0].parse().context("miss queue")?;
+        let result_fifo_size: u32 = mq[1].parse().context("result fifo")?;
+        let data_port_width: u32 = parts[4].parse().context("data port")?;
+
+        let cfg = Self {
+            kind,
+            nsets,
+            line_size,
+            assoc,
+            replacement,
+            write_policy,
+            write_allocate,
+            set_index,
+            mshr_entries,
+            mshr_max_merge,
+            miss_queue_size,
+            result_fifo_size,
+            data_port_width,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks shared by parse and programmatic construction.
+    pub fn validate(&self) -> Result<()> {
+        if !is_pow2(self.nsets as u64) {
+            bail!("nsets {} not a power of two", self.nsets);
+        }
+        if !is_pow2(self.line_size as u64) || self.line_size < SECTOR_SIZE {
+            bail!("line size {} invalid", self.line_size);
+        }
+        if self.assoc == 0 || self.mshr_entries == 0
+            || self.miss_queue_size == 0 {
+            bail!("zero-sized structural resource");
+        }
+        Ok(())
+    }
+
+    /// Total data capacity in bytes.
+    pub fn capacity(&self) -> u64 {
+        self.nsets as u64 * self.assoc as u64 * self.line_size as u64
+    }
+
+    /// Sectors per line (1 for normal caches).
+    pub fn sectors_per_line(&self) -> u32 {
+        match self.kind {
+            CacheKind::Normal => 1,
+            CacheKind::Sectored => self.line_size / SECTOR_SIZE,
+        }
+    }
+
+    /// Block (line) address of `addr`.
+    #[inline]
+    pub fn block_addr(&self, addr: u64) -> u64 {
+        addr & !(self.line_size as u64 - 1)
+    }
+
+    /// Sector index of `addr` within its line.
+    #[inline]
+    pub fn sector_of(&self, addr: u64) -> u32 {
+        match self.kind {
+            CacheKind::Normal => 0,
+            CacheKind::Sectored => {
+                ((addr & (self.line_size as u64 - 1)) / SECTOR_SIZE as u64)
+                    as u32
+            }
+        }
+    }
+
+    /// Set index of `addr`.
+    #[inline]
+    pub fn set_of(&self, addr: u64) -> u32 {
+        let block = addr >> self.line_size.trailing_zeros();
+        let mask = self.nsets as u64 - 1;
+        match self.set_index {
+            SetIndexFunction::Linear => (block & mask) as u32,
+            SetIndexFunction::BitwiseXor => {
+                let upper = block >> self.nsets.trailing_zeros();
+                ((block ^ upper) & mask) as u32
+            }
+        }
+    }
+
+    /// Tag of `addr` (full block address, as GPGPU-Sim does — tags are
+    /// compared on block addresses so set-hash collisions stay distinct).
+    #[inline]
+    pub fn tag_of(&self, addr: u64) -> u64 {
+        self.block_addr(addr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // TITAN V-like L1D and L2 strings used by the presets.
+    const L1: &str = "S:4:128:64,L:L:m:N:L,A:512:8,8:0,32";
+    const L2: &str = "S:32:128:24,L:B:m:W:L,A:192:4,32:0,32";
+
+    #[test]
+    fn parses_l1_string() {
+        let c = CacheConfig::parse(L1).unwrap();
+        assert_eq!(c.kind, CacheKind::Sectored);
+        assert_eq!(c.nsets, 4);
+        assert_eq!(c.line_size, 128);
+        assert_eq!(c.assoc, 64);
+        assert_eq!(c.write_policy, WritePolicy::LocalWbGlobalWt);
+        assert_eq!(c.write_allocate, WriteAllocatePolicy::NoWriteAllocate);
+        assert_eq!(c.mshr_entries, 512);
+        assert_eq!(c.mshr_max_merge, 8);
+        assert_eq!(c.miss_queue_size, 8);
+        assert_eq!(c.capacity(), 4 * 64 * 128);
+        assert_eq!(c.sectors_per_line(), 4);
+    }
+
+    #[test]
+    fn parses_l2_string() {
+        let c = CacheConfig::parse(L2).unwrap();
+        assert_eq!(c.write_policy, WritePolicy::WriteBack);
+        assert_eq!(c.write_allocate, WriteAllocatePolicy::WriteAllocate);
+        assert_eq!(c.assoc, 24);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(CacheConfig::parse("garbage").is_err());
+        assert!(CacheConfig::parse("Z:4:128:64,L:L:m:N:L,A:512:8,8:0,32")
+            .is_err());
+        // nsets not a power of two
+        assert!(CacheConfig::parse("S:3:128:64,L:L:m:N:L,A:512:8,8:0,32")
+            .is_err());
+        // zero mshr entries
+        assert!(CacheConfig::parse("S:4:128:64,L:L:m:N:L,A:0:8,8:0,32")
+            .is_err());
+    }
+
+    #[test]
+    fn address_decomposition() {
+        let c = CacheConfig::parse(L2).unwrap();
+        let addr = 0xDEAD_BEEF_u64;
+        assert_eq!(c.block_addr(addr), addr & !127);
+        assert!(c.sector_of(addr) < 4);
+        assert!(c.set_of(addr) < c.nsets);
+        // same line -> same set regardless of sector
+        assert_eq!(c.set_of(addr), c.set_of(c.block_addr(addr)));
+        // consecutive lines spread across sets (linear or xor)
+        let s0 = c.set_of(0);
+        let s1 = c.set_of(128);
+        assert_ne!(s0, s1);
+    }
+
+    #[test]
+    fn normal_cache_single_sector() {
+        let c = CacheConfig::parse("N:64:128:8,L:B:m:W:L,A:64:8,16:0,32")
+            .unwrap();
+        assert_eq!(c.sectors_per_line(), 1);
+        assert_eq!(c.sector_of(96), 0);
+    }
+
+    #[test]
+    fn xor_hash_differs_from_linear_somewhere() {
+        let lin =
+            CacheConfig::parse("S:32:128:24,L:B:m:W:L,A:192:4,32:0,32")
+                .unwrap();
+        let xor =
+            CacheConfig::parse("S:32:128:24,L:B:m:W:X,A:192:4,32:0,32")
+                .unwrap();
+        let diff = (0..1024u64)
+            .map(|i| i * 128 * 32) // stride hitting one linear set
+            .filter(|&a| lin.set_of(a) != xor.set_of(a))
+            .count();
+        assert!(diff > 0, "xor hash never diverged from linear");
+    }
+}

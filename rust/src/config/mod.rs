@@ -1,0 +1,389 @@
+//! Accel-Sim-style configuration system.
+//!
+//! A [`SimConfig`] is built from (in precedence order) a preset, a
+//! `gpgpusim.config`-style file (`-key value` lines, `#` comments), and
+//! CLI `-key value` overrides — the same layering Accel-Sim gets from
+//! `-config` files plus command-line flags.
+
+pub mod cache_cfg;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use cache_cfg::{
+    CacheConfig, CacheKind, ReplacementPolicy, SetIndexFunction,
+    WriteAllocatePolicy, WritePolicy, SECTOR_SIZE,
+};
+
+use crate::stats::StatMode;
+
+/// Full simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Preset name this config was derived from.
+    pub preset: String,
+
+    // ---- execution model -------------------------------------------------
+    /// Number of SIMT cores (SMs).
+    pub num_cores: u32,
+    /// `-gpgpu_concurrent_kernel_sm`: kernels from different streams may
+    /// be resident simultaneously (paper §4 step 1 requires 1).
+    pub concurrent_kernel_sm: bool,
+    /// The paper's §5.1 serialization patch: only launch a kernel when no
+    /// stream is busy (`busy_streams.size() == 0`).
+    pub serialize_streams: bool,
+    /// Stat semantics (tip / clean / exact) — see [`StatMode`].
+    pub stat_mode: StatMode,
+    /// Max thread blocks resident per core.
+    pub max_tbs_per_core: u32,
+    /// Max warps resident per core.
+    pub max_warps_per_core: u32,
+    /// Warp size (threads).
+    pub warp_size: u32,
+    /// Warp instructions issued per core per cycle.
+    pub issue_width: u32,
+    /// Fixed latency (cycles) of a non-memory instruction.
+    pub alu_latency: u32,
+
+    // ---- memory system ---------------------------------------------------
+    /// L1 data cache geometry (None = no L1D, all global goes to L2).
+    pub l1d: Option<CacheConfig>,
+    /// L1 hit latency (cycles).
+    pub l1_latency: u32,
+    /// L2 geometry (per sub-partition slice).
+    pub l2: CacheConfig,
+    /// Number of L2/memory sub-partitions.
+    pub num_l2_partitions: u32,
+    /// L2 hit latency (cycles).
+    pub l2_latency: u32,
+    /// Interconnect one-way latency (cycles).
+    pub icnt_latency: u32,
+    /// Interconnect per-direction flit bandwidth (fetches/cycle).
+    pub icnt_flit_per_cycle: u32,
+    /// DRAM access latency on top of L2 miss (cycles).
+    pub dram_latency: u32,
+    /// DRAM serviced requests per partition per cycle (throughput cap).
+    pub dram_per_cycle: u32,
+
+    // ---- limits ----------------------------------------------------------
+    /// Safety valve for runaway simulations.
+    pub max_cycles: u64,
+    /// Kernel-launch window size (Accel-Sim reads this many trace
+    /// commands ahead).
+    pub launch_window: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        presets::sm7_titanv_mini()
+    }
+}
+
+impl SimConfig {
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Result<Self> {
+        match name {
+            "sm7_titanv" => Ok(presets::sm7_titanv()),
+            "sm7_titanv_mini" => Ok(presets::sm7_titanv_mini()),
+            "minimal" => Ok(presets::minimal()),
+            other => bail!(
+                "unknown preset '{other}' (have: sm7_titanv, \
+                 sm7_titanv_mini, minimal)"),
+        }
+    }
+
+    /// Apply `-key value` overrides (from a config file or the CLI).
+    pub fn apply_overrides(&mut self, kv: &BTreeMap<String, String>)
+        -> Result<()> {
+        for (k, v) in kv {
+            self.apply_one(k, v)
+                .with_context(|| format!("option '-{k} {v}'"))?;
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, key: &str, val: &str) -> Result<()> {
+        fn b(v: &str) -> Result<bool> {
+            match v {
+                "1" | "true" => Ok(true),
+                "0" | "false" => Ok(false),
+                _ => bail!("expected 0/1, got '{v}'"),
+            }
+        }
+        match key {
+            "gpgpu_n_clusters" | "num_cores" => {
+                self.num_cores = val.parse()?;
+            }
+            "gpgpu_concurrent_kernel_sm" | "concurrent_kernel_sm" => {
+                self.concurrent_kernel_sm = b(val)?;
+            }
+            "serialize_streams" => self.serialize_streams = b(val)?,
+            "stat_mode" => {
+                self.stat_mode = match val {
+                    "tip" | "per_stream" => StatMode::PerStream,
+                    "clean" | "aggregate" => StatMode::AggregateBuggy,
+                    "exact" => StatMode::AggregateExact,
+                    _ => bail!("unknown stat_mode '{val}'"),
+                };
+            }
+            "gpgpu_max_cta_per_core" | "max_tbs_per_core" => {
+                self.max_tbs_per_core = val.parse()?;
+            }
+            "max_warps_per_core" => self.max_warps_per_core = val.parse()?,
+            "warp_size" => self.warp_size = val.parse()?,
+            "issue_width" => self.issue_width = val.parse()?,
+            "alu_latency" => self.alu_latency = val.parse()?,
+            "gpgpu_cache:dl1" | "l1d" => {
+                self.l1d = if val == "none" {
+                    None
+                } else {
+                    Some(CacheConfig::parse(val)?)
+                };
+            }
+            "l1_latency" => self.l1_latency = val.parse()?,
+            "gpgpu_cache:dl2" | "l2" => {
+                self.l2 = CacheConfig::parse(val)?;
+            }
+            "gpgpu_n_mem" | "num_l2_partitions" => {
+                self.num_l2_partitions = val.parse()?;
+            }
+            "l2_latency" => self.l2_latency = val.parse()?,
+            "icnt_latency" => self.icnt_latency = val.parse()?,
+            "icnt_flit_per_cycle" => {
+                self.icnt_flit_per_cycle = val.parse()?;
+            }
+            "dram_latency" => self.dram_latency = val.parse()?,
+            "dram_per_cycle" => self.dram_per_cycle = val.parse()?,
+            "max_cycles" => self.max_cycles = val.parse()?,
+            "launch_window" => self.launch_window = val.parse()?,
+            other => bail!("unknown config option '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a `gpgpusim.config`-style file into overrides and apply.
+    pub fn apply_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let kv = parse_config_text(&text)?;
+        self.apply_overrides(&kv)
+    }
+
+    /// Internal consistency checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_cores == 0 || self.num_l2_partitions == 0 {
+            bail!("need at least one core and one partition");
+        }
+        if self.warp_size == 0 || self.max_warps_per_core == 0 {
+            bail!("warp geometry must be non-zero");
+        }
+        if let Some(l1) = &self.l1d {
+            l1.validate()?;
+        }
+        self.l2.validate()?;
+        if self.serialize_streams && self.concurrent_kernel_sm {
+            // legal (the paper's tip_serialized config does exactly this)
+        }
+        Ok(())
+    }
+
+    /// Human-readable summary printed at simulation start.
+    pub fn summary(&self) -> String {
+        format!(
+            "preset={} cores={} l2_parts={} concurrent_kernel_sm={} \
+             serialize_streams={} stat_mode={} l1d={} l2_capacity={}KiB",
+            self.preset,
+            self.num_cores,
+            self.num_l2_partitions,
+            self.concurrent_kernel_sm as u8,
+            self.serialize_streams as u8,
+            self.stat_mode.label(),
+            self.l1d.as_ref().map_or("none".into(),
+                |c| format!("{}KiB", c.capacity() / 1024)),
+            self.l2.capacity() * self.num_l2_partitions as u64 / 1024,
+        )
+    }
+}
+
+/// Parse `-key value` lines (Accel-Sim style); `#` starts a comment;
+/// bare `key value` (no dash) and `key = value` are also accepted.
+pub fn parse_config_text(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut kv = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let line = line.strip_prefix('-').unwrap_or(line);
+        let (k, v) = if let Some((k, v)) = line.split_once('=') {
+            (k.trim(), v.trim())
+        } else if let Some((k, v)) = line.split_once(char::is_whitespace) {
+            (k.trim(), v.trim())
+        } else {
+            bail!("config line {}: '{raw}' has no value", lineno + 1);
+        };
+        if k.is_empty() || v.is_empty() {
+            bail!("config line {}: empty key or value", lineno + 1);
+        }
+        kv.insert(k.to_string(), v.to_string());
+    }
+    Ok(kv)
+}
+
+/// Built-in configuration presets.
+pub mod presets {
+    use super::*;
+
+    /// TITAN V (SM7) — the paper's validation target: 80 SMs, sectored
+    /// 128 KiB L1D per SM, 4.5 MiB L2 in 24 partitions.
+    pub fn sm7_titanv() -> SimConfig {
+        SimConfig {
+            preset: "sm7_titanv".into(),
+            num_cores: 80,
+            concurrent_kernel_sm: true,
+            serialize_streams: false,
+            stat_mode: StatMode::PerStream,
+            max_tbs_per_core: 32,
+            max_warps_per_core: 64,
+            warp_size: 32,
+            issue_width: 4,
+            alu_latency: 4,
+            l1d: Some(
+                CacheConfig::parse("S:4:128:64,L:L:m:N:L,A:512:8,8:0,32")
+                    .unwrap()),
+            l1_latency: 28,
+            // 24 partitions x 64 sets x 24 ways x 128 B = 4.5 MiB;
+            // lazy-fetch-on-read write allocate, as the real TITAN V
+            // config (`..,L:B:m:L:P,..`) — required for the paper's
+            // §5.1 HIT/MSHR_HIT behaviour
+            l2: CacheConfig::parse("S:64:128:24,L:B:m:L:L,A:192:4,32:0,32")
+                .unwrap(),
+            num_l2_partitions: 24,
+            l2_latency: 180,
+            icnt_latency: 8,
+            icnt_flit_per_cycle: 32,
+            dram_latency: 160,
+            dram_per_cycle: 2,
+            max_cycles: 200_000_000,
+            launch_window: 16,
+        }
+    }
+
+    /// Scaled-down TITAN V for unit/integration tests: same policies and
+    /// stat semantics, 4 SMs, small caches so microbenchmarks exercise
+    /// misses and MSHR merging quickly.
+    pub fn sm7_titanv_mini() -> SimConfig {
+        let mut c = sm7_titanv();
+        c.preset = "sm7_titanv_mini".into();
+        c.num_cores = 4;
+        c.max_tbs_per_core = 8;
+        c.max_warps_per_core = 32; // fits 1024-thread TBs (bench3)
+        c.l1d = Some(
+            CacheConfig::parse("S:4:128:8,L:L:m:N:L,A:64:8,8:0,32")
+                .unwrap());
+        c.l2 = CacheConfig::parse("S:16:128:8,L:B:m:L:L,A:64:4,16:0,32")
+            .unwrap();
+        c.num_l2_partitions = 4;
+        c.l2_latency = 60;
+        c.dram_latency = 60;
+        c.max_cycles = 20_000_000;
+        c
+    }
+
+    /// Smallest functional config (1 core, 1 partition, tiny L2) for
+    /// deterministic hand-counted tests like the Fig. 2 microbenchmark.
+    pub fn minimal() -> SimConfig {
+        let mut c = sm7_titanv_mini();
+        c.preset = "minimal".into();
+        c.num_cores = 1;
+        c.num_l2_partitions = 1;
+        c.l1d = None;
+        c.l2 = CacheConfig::parse("S:4:128:4,L:B:m:L:L,A:16:4,8:0,32")
+            .unwrap();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for name in ["sm7_titanv", "sm7_titanv_mini", "minimal"] {
+            let c = SimConfig::preset(name).unwrap();
+            c.validate().unwrap();
+            assert_eq!(c.preset, name);
+        }
+        assert!(SimConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn parse_config_text_formats() {
+        let text = "\
+# a comment
+-gpgpu_concurrent_kernel_sm 1
+num_cores = 8
+l2_latency 99   # trailing comment
+";
+        let kv = parse_config_text(text).unwrap();
+        assert_eq!(kv["gpgpu_concurrent_kernel_sm"], "1");
+        assert_eq!(kv["num_cores"], "8");
+        assert_eq!(kv["l2_latency"], "99");
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = SimConfig::default();
+        let kv = parse_config_text(
+            "-gpgpu_concurrent_kernel_sm 0\n-stat_mode clean\n\
+             -num_cores 2\n").unwrap();
+        c.apply_overrides(&kv).unwrap();
+        assert!(!c.concurrent_kernel_sm);
+        assert_eq!(c.stat_mode, StatMode::AggregateBuggy);
+        assert_eq!(c.num_cores, 2);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SimConfig::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("bogus_option".to_string(), "1".to_string());
+        assert!(c.apply_overrides(&kv).is_err());
+    }
+
+    #[test]
+    fn cache_override_roundtrip() {
+        let mut c = SimConfig::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("gpgpu_cache:dl1".to_string(), "none".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert!(c.l1d.is_none());
+        kv.insert("gpgpu_cache:dl1".to_string(),
+                  "S:4:128:64,L:L:m:N:L,A:512:8,8:0,32".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.l1d.as_ref().unwrap().assoc, 64);
+    }
+
+    #[test]
+    fn apply_file_roundtrip() {
+        let dir = std::env::temp_dir().join("streamsim_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.config");
+        std::fs::write(&path,
+            "-gpgpu_n_clusters 3\n-stat_mode exact\n").unwrap();
+        let mut c = SimConfig::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.num_cores, 3);
+        assert_eq!(c.stat_mode, StatMode::AggregateExact);
+    }
+
+    #[test]
+    fn summary_mentions_key_fields() {
+        let s = SimConfig::preset("sm7_titanv").unwrap().summary();
+        assert!(s.contains("cores=80"));
+        assert!(s.contains("stat_mode=tip"));
+    }
+}

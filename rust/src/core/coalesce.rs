@@ -1,0 +1,128 @@
+//! Memory coalescer: warp instruction → sector transactions.
+//!
+//! GPGPU-Sim's `memory_coalescing_arch` merges the 32 lanes' addresses
+//! into the minimal set of 32-byte sector transactions (for sectored
+//! caches). Each unique touched sector becomes one [`MemFetch`]-sized
+//! access; fully-coalesced fp32 warps therefore produce 4 sector
+//! accesses per 128 B line, matching GPGPU-Sim's counted accesses.
+
+use crate::config::cache_cfg::SECTOR_SIZE;
+use crate::trace::MemInstr;
+
+/// Unique sector-aligned addresses touched by a warp instruction,
+/// ascending. Each lane covers `[addr, addr + size)` and may straddle a
+/// sector boundary.
+pub fn coalesce_sectors(mi: &MemInstr) -> Vec<u64> {
+    let mut sectors: Vec<u64> = Vec::with_capacity(8);
+    for lane_addr in mi.lane_addrs() {
+        let first = lane_addr & !(SECTOR_SIZE as u64 - 1);
+        let last = (lane_addr + mi.size as u64 - 1)
+            & !(SECTOR_SIZE as u64 - 1);
+        let mut s = first;
+        loop {
+            sectors.push(s);
+            if s >= last {
+                break;
+            }
+            s += SECTOR_SIZE as u64;
+        }
+    }
+    sectors.sort_unstable();
+    sectors.dedup();
+    sectors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::MemSpace;
+
+    fn mi(base: u64, stride: i64, mask: u32, size: u8) -> MemInstr {
+        MemInstr {
+            pc: 0,
+            space: MemSpace::Global,
+            is_write: false,
+            size,
+            base_addr: base,
+            stride,
+            active_mask: mask,
+            l1_bypass: false,
+        }
+    }
+
+    #[test]
+    fn fully_coalesced_fp32_warp_is_4_sectors() {
+        // 32 lanes x 4B consecutive = 128B = 4 sectors
+        let s = coalesce_sectors(&mi(0x1000, 4, u32::MAX, 4));
+        assert_eq!(s, vec![0x1000, 0x1020, 0x1040, 0x1060]);
+    }
+
+    #[test]
+    fn single_lane_single_sector() {
+        let s = coalesce_sectors(&mi(0x1008, 0, 1, 8));
+        assert_eq!(s, vec![0x1000]);
+    }
+
+    #[test]
+    fn same_address_all_lanes_coalesces_to_one() {
+        let s = coalesce_sectors(&mi(0x2000, 0, u32::MAX, 4));
+        assert_eq!(s, vec![0x2000]);
+    }
+
+    #[test]
+    fn strided_access_explodes() {
+        // stride 128: every lane a different line -> 32 sectors
+        let s = coalesce_sectors(&mi(0x0, 128, u32::MAX, 4));
+        assert_eq!(s.len(), 32);
+        assert_eq!(s[1] - s[0], 128);
+    }
+
+    #[test]
+    fn lane_straddling_sector_boundary_takes_two() {
+        // one lane, 8B at 0x101C crosses into 0x1020
+        let s = coalesce_sectors(&mi(0x101C, 0, 1, 8));
+        assert_eq!(s, vec![0x1000, 0x1020]);
+    }
+
+    #[test]
+    fn unaligned_warp_takes_extra_sector() {
+        // 32 x 4B starting at 0x1010: spans 0x1010..0x1090 -> 5 sectors
+        let s = coalesce_sectors(&mi(0x1010, 4, u32::MAX, 4));
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[0], 0x1000);
+        assert_eq!(*s.last().unwrap(), 0x1080);
+    }
+
+    #[test]
+    fn partial_mask_covers_only_active_lanes() {
+        // lanes 0..16 of fp32: 64B -> 2 sectors
+        let s = coalesce_sectors(&mi(0x1000, 4, 0x0000_FFFF, 4));
+        assert_eq!(s, vec![0x1000, 0x1020]);
+    }
+
+    #[test]
+    fn property_sector_count_bounds() {
+        use crate::util::proptest_lite::{default_cases, run_cases};
+        run_cases("coalesce-bounds", 0xC0A1, default_cases(), |g| {
+            let m = mi(
+                g.below(1 << 20) * 4,
+                [0i64, 4, 8, 32, 128][g.index(5)],
+                g.u64() as u32,
+                [4u8, 8][g.index(2)],
+            );
+            let s = coalesce_sectors(&m);
+            let lanes = m.active_lanes() as usize;
+            // each lane touches at most 2 sectors; dedup only shrinks
+            assert!(s.len() <= lanes * 2);
+            if lanes > 0 {
+                assert!(!s.is_empty());
+            } else {
+                assert!(s.is_empty());
+            }
+            // sorted unique
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            // all sector-aligned
+            assert!(s.iter().all(|a| a % SECTOR_SIZE as u64 == 0));
+        });
+    }
+}

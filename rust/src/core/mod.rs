@@ -1,0 +1,10 @@
+//! SIMT core model: warp scheduling, coalescing, L1 access.
+//!
+//! * [`coalesce`] — warp instruction → sector transactions.
+//! * [`simt_core`] — the per-SM timing model with resident TBs.
+
+pub mod coalesce;
+pub mod simt_core;
+
+pub use coalesce::coalesce_sectors;
+pub use simt_core::{FinishedTb, SimtCore};

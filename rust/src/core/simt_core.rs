@@ -1,0 +1,574 @@
+//! SIMT core timing model.
+//!
+//! Each core hosts up to `max_tbs_per_core` thread blocks; each warp
+//! replays its trace ops in order. Memory instructions are coalesced
+//! into sector transactions ([`crate::core::coalesce`]) that flow
+//! through the L1D (unless `.cg`-bypassed) and on to the interconnect.
+//! Loads block their warp until every sector returns (latency tolerance
+//! comes from multithreading across warps, as on real SMs); stores are
+//! fire-and-forget.
+//!
+//! Every L1 access records a per-stream stat with the issuing kernel's
+//! `stream_id` — the L1 side of the paper's
+//! `Total_core_cache_stats_breakdown`.
+
+use std::collections::VecDeque;
+
+use crate::cache::access::{AccessOutcome, AccessType};
+use crate::cache::Cache;
+use crate::config::SimConfig;
+use crate::core::coalesce::coalesce_sectors;
+use crate::mem::fetch::{FetchIdAlloc, MemFetch, ReturnPath};
+use crate::mem::icnt::DelayQueue;
+use crate::stats::CacheStats;
+use crate::trace::{MemInstr, MemSpace, TbTrace, TraceOp};
+use crate::{Cycle, KernelUid, StreamId};
+
+/// One resident warp.
+#[derive(Debug)]
+struct WarpCtx {
+    ops: VecDeque<TraceOp>,
+    /// Pipeline-busy until this cycle (ALU batches).
+    busy_until: Cycle,
+    /// Outstanding load sectors for the current (blocking) instruction.
+    pending_loads: u32,
+}
+
+impl WarpCtx {
+    fn finished(&self) -> bool {
+        self.ops.is_empty() && self.pending_loads == 0
+    }
+
+    fn ready(&self, now: Cycle) -> bool {
+        !self.ops.is_empty() && self.pending_loads == 0
+            && self.busy_until <= now
+    }
+}
+
+/// One resident thread block.
+#[derive(Debug)]
+struct ResidentTb {
+    kernel_uid: KernelUid,
+    stream_id: StreamId,
+    tb_index: usize,
+    warps: Vec<WarpCtx>,
+}
+
+impl ResidentTb {
+    fn finished(&self) -> bool {
+        self.warps.iter().all(|w| w.finished())
+    }
+}
+
+/// A finished TB notification: `(kernel_uid, tb_index)`.
+pub type FinishedTb = (KernelUid, usize);
+
+/// One SIMT core (SM).
+#[derive(Debug)]
+pub struct SimtCore {
+    pub id: u32,
+    slots: Vec<Option<ResidentTb>>,
+    l1: Option<Cache>,
+    issue_width: u32,
+    alu_latency: u32,
+    max_warps: u32,
+    /// Coalesced transactions awaiting L1/interconnect issue.
+    ldst_queue: VecDeque<MemFetch>,
+    /// L1 hits serving out their latency.
+    hit_queue: DelayQueue<MemFetch>,
+    /// Outbound to the interconnect (drained by the top level).
+    to_icnt: Vec<MemFetch>,
+    /// Retired TBs (drained by the top level).
+    finished: Vec<FinishedTb>,
+    /// Round-robin scheduler cursor.
+    rr: usize,
+    /// Cached resident-warp count (kept in sync by accept/retire).
+    resident: u32,
+    /// Flattened (slot, warp) list for the scheduler; rebuilt lazily
+    /// when residency changes instead of every cycle.
+    warp_refs: Vec<(usize, usize)>,
+    warp_refs_dirty: bool,
+}
+
+impl SimtCore {
+    /// Build core `id` from the config.
+    pub fn new(id: u32, cfg: &SimConfig) -> Self {
+        Self {
+            id,
+            slots: (0..cfg.max_tbs_per_core).map(|_| None).collect(),
+            l1: cfg
+                .l1d
+                .as_ref()
+                .map(|c| Cache::new(format!("L1D{id}"), c.clone())),
+            issue_width: cfg.issue_width,
+            alu_latency: cfg.alu_latency,
+            max_warps: cfg.max_warps_per_core,
+            ldst_queue: VecDeque::new(),
+            hit_queue: DelayQueue::new(cfg.l1_latency),
+            to_icnt: Vec::new(),
+            finished: Vec::new(),
+            rr: 0,
+            resident: 0,
+            warp_refs: Vec::new(),
+            warp_refs_dirty: true,
+        }
+    }
+
+    /// Warps currently resident.
+    pub fn resident_warps(&self) -> u32 {
+        self.resident
+    }
+
+    /// Whether a TB with `warps` warps can be accepted.
+    pub fn can_accept(&self, warps: u32) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+            && self.resident_warps() + warps <= self.max_warps
+    }
+
+    /// Place a TB on this core. Panics if `can_accept` was false.
+    pub fn accept_tb(&mut self, kernel_uid: KernelUid, stream_id: StreamId,
+                     tb_index: usize, trace: &TbTrace) {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .expect("accept_tb without free slot");
+        self.resident += trace.warps.len() as u32;
+        self.warp_refs_dirty = true;
+        self.slots[slot] = Some(ResidentTb {
+            kernel_uid,
+            stream_id,
+            tb_index,
+            warps: trace
+                .warps
+                .iter()
+                .map(|ops| WarpCtx {
+                    ops: ops.iter().copied().collect(),
+                    busy_until: 0,
+                    pending_loads: 0,
+                })
+                .collect(),
+        });
+    }
+
+    /// Advance one cycle. L1 stats land in `l1_stats` keyed by each
+    /// fetch's stream.
+    pub fn cycle(&mut self, now: Cycle, l1_stats: &mut CacheStats,
+                 ids: &mut FetchIdAlloc) {
+        // fast path: nothing resident and nothing in flight
+        if self.resident == 0
+            && self.ldst_queue.is_empty()
+            && self.hit_queue.is_empty()
+        {
+            return;
+        }
+        // 1. L1 hits that served their latency wake their warps.
+        while let Some(f) = self.hit_queue.pop_ready(now) {
+            self.wake(&f);
+        }
+
+        // 2. LDST unit: up to issue_width transactions per cycle.
+        self.ldst_cycle(now, l1_stats);
+
+        // 3. Warp issue: up to issue_width ready warps, round-robin.
+        self.issue_cycle(now, ids);
+
+        // 4. Retire finished TBs.
+        for slot in &mut self.slots {
+            if slot.as_ref().is_some_and(|tb| tb.finished()) {
+                let tb = slot.take().unwrap();
+                self.resident -= tb.warps.len() as u32;
+                self.warp_refs_dirty = true;
+                self.finished.push((tb.kernel_uid, tb.tb_index));
+            }
+        }
+    }
+
+    fn ldst_cycle(&mut self, now: Cycle, l1_stats: &mut CacheStats) {
+        for _ in 0..self.issue_width {
+            let Some(front) = self.ldst_queue.front() else { break };
+            // L1 bypass (`.cg`) or no L1: straight to the interconnect.
+            if front.l1_bypass || self.l1.is_none() {
+                let f = self.ldst_queue.pop_front().unwrap();
+                self.to_icnt.push(f);
+                continue;
+            }
+            let l1 = self.l1.as_mut().unwrap();
+            let f = front.clone();
+            let res = l1.access(&f, now);
+            l1_stats.inc(f.access_type, res.outcome, f.stream_id, now);
+            if res.outcome == AccessOutcome::ReservationFail {
+                l1_stats.inc_fail(f.access_type,
+                                  res.fail.expect("fail reason"),
+                                  f.stream_id, now);
+                break; // structural stall: retry same txn next cycle
+            }
+            self.ldst_queue.pop_front();
+            if res.outcome == AccessOutcome::Hit && f.needs_response() {
+                self.hit_queue.push(now, f);
+            }
+            // drain write-throughs / fill requests
+            while let Some(down) = l1.pop_miss() {
+                self.to_icnt.push(down);
+            }
+        }
+    }
+
+    fn issue_cycle(&mut self, now: Cycle, ids: &mut FetchIdAlloc) {
+        // flatten resident warps for round-robin (rebuilt only when
+        // residency changed — the per-cycle allocation was the #1
+        // profile entry, see EXPERIMENTS.md §Perf)
+        if self.warp_refs_dirty {
+            self.warp_refs.clear();
+            for (s, slot) in self.slots.iter().enumerate() {
+                if let Some(tb) = slot {
+                    for w in 0..tb.warps.len() {
+                        self.warp_refs.push((s, w));
+                    }
+                }
+            }
+            self.warp_refs_dirty = false;
+        }
+        if self.warp_refs.is_empty() {
+            return;
+        }
+        let n = self.warp_refs.len();
+        let mut issued = 0;
+        for k in 0..n {
+            if issued >= self.issue_width {
+                break;
+            }
+            let (s, w) = self.warp_refs[(self.rr + k) % n];
+            let core_id = self.id;
+            let alu_latency = self.alu_latency;
+            let tb = self.slots[s].as_mut().unwrap();
+            let (uid, stream) = (tb.kernel_uid, tb.stream_id);
+            let warp = &mut tb.warps[w];
+            if !warp.ready(now) {
+                continue;
+            }
+            match warp.ops.pop_front().unwrap() {
+                TraceOp::Alu { count } => {
+                    warp.busy_until =
+                        now + (count as u64) * alu_latency as u64;
+                }
+                TraceOp::Mem(mi) => {
+                    warp.busy_until = now + 1;
+                    let fetches = Self::expand_mem(
+                        &mi, core_id, s as u32, w as u32, uid, stream, ids);
+                    if !mi.is_write {
+                        warp.pending_loads += fetches.len() as u32;
+                    }
+                    self.ldst_queue.extend(fetches);
+                }
+            }
+            issued += 1;
+        }
+        self.rr = (self.rr + 1) % n;
+    }
+
+    /// Coalesce a warp memory instruction into sector fetches.
+    fn expand_mem(mi: &MemInstr, core_id: u32, tb_slot: u32, warp_idx: u32,
+                  uid: KernelUid, stream: StreamId, ids: &mut FetchIdAlloc)
+        -> Vec<MemFetch> {
+        let access_type = match (mi.space, mi.is_write) {
+            (MemSpace::Global, false) => AccessType::GlobalAccR,
+            (MemSpace::Global, true) => AccessType::GlobalAccW,
+            (MemSpace::Local, false) => AccessType::LocalAccR,
+            (MemSpace::Local, true) => AccessType::LocalAccW,
+            (MemSpace::Const, _) => AccessType::ConstAccR,
+            (MemSpace::Texture, _) => AccessType::TextureAccR,
+        };
+        coalesce_sectors(mi)
+            .into_iter()
+            .map(|addr| MemFetch {
+                id: ids.next(),
+                addr,
+                bytes: crate::config::SECTOR_SIZE,
+                access_type,
+                is_write: mi.is_write,
+                stream_id: stream,
+                kernel_uid: uid,
+                l1_bypass: mi.l1_bypass,
+                ret: (!mi.is_write).then_some(ReturnPath {
+                    core_id,
+                    tb_slot,
+                    warp_idx,
+                }),
+            })
+            .collect()
+    }
+
+    /// Interconnect delivered a response to this core.
+    pub fn receive_response(&mut self, f: MemFetch, now: Cycle) {
+        if self.l1.is_some() && !f.l1_bypass {
+            let responses = self.l1.as_mut().unwrap().fill(f.addr, now);
+            for r in responses {
+                self.wake(&r);
+            }
+        } else {
+            self.wake(&f);
+        }
+    }
+
+    fn wake(&mut self, f: &MemFetch) {
+        let Some(ret) = f.ret else { return };
+        debug_assert_eq!(ret.core_id, self.id);
+        if let Some(tb) = self.slots[ret.tb_slot as usize].as_mut() {
+            let w = &mut tb.warps[ret.warp_idx as usize];
+            debug_assert!(w.pending_loads > 0, "spurious wake");
+            w.pending_loads -= 1;
+        }
+    }
+
+    /// Outbound fetches for the interconnect.
+    pub fn drain_to_icnt(&mut self) -> Vec<MemFetch> {
+        std::mem::take(&mut self.to_icnt)
+    }
+
+    /// Allocation-free drain: append outbound fetches to `out` (the
+    /// top-level reuses one scratch buffer across cores and cycles).
+    pub fn drain_to_icnt_into(&mut self, out: &mut Vec<MemFetch>) {
+        out.append(&mut self.to_icnt);
+    }
+
+    /// Retired TBs since the last call.
+    pub fn take_finished(&mut self) -> Vec<FinishedTb> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Any work left on this core?
+    pub fn busy(&self) -> bool {
+        self.slots.iter().any(|s| s.is_some())
+            || !self.ldst_queue.is_empty()
+            || !self.hit_queue.is_empty()
+            || !self.to_icnt.is_empty()
+            || self.l1.as_ref().is_some_and(|l1| l1.mshr_len() > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::StatMode;
+    use crate::trace::{Dim3, KernelTrace};
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::preset("sm7_titanv_mini").unwrap();
+        c.issue_width = 2;
+        c
+    }
+
+    fn mem_op(base: u64, is_write: bool, bypass: bool) -> TraceOp {
+        TraceOp::Mem(MemInstr {
+            pc: 0,
+            space: MemSpace::Global,
+            is_write,
+            size: 4,
+            base_addr: base,
+            stride: 4,
+            active_mask: u32::MAX,
+            l1_bypass: bypass,
+        })
+    }
+
+    fn one_warp_tb(ops: Vec<TraceOp>) -> TbTrace {
+        TbTrace { warps: vec![ops] }
+    }
+
+    /// Cycle the core + echo fetches straight back as responses (a
+    /// zero-latency perfect memory) until idle.
+    fn run_to_idle(core: &mut SimtCore, stats: &mut CacheStats) -> Cycle {
+        let mut ids = FetchIdAlloc::default();
+        let mut now = 0;
+        while core.busy() && now < 100_000 {
+            core.cycle(now, stats, &mut ids);
+            for f in core.drain_to_icnt() {
+                if f.needs_response() || (!f.is_write) {
+                    core.receive_response(f, now);
+                }
+            }
+            now += 1;
+        }
+        assert!(now < 100_000, "core deadlocked");
+        now
+    }
+
+    #[test]
+    fn tb_lifecycle_and_retire() {
+        let mut core = SimtCore::new(0, &cfg());
+        assert!(core.can_accept(1));
+        core.accept_tb(1, 5, 0, &one_warp_tb(vec![
+            TraceOp::Alu { count: 3 },
+            mem_op(0x1000, false, false),
+        ]));
+        assert_eq!(core.resident_warps(), 1);
+        let mut stats = CacheStats::new(StatMode::PerStream);
+        run_to_idle(&mut core, &mut stats);
+        assert_eq!(core.take_finished(), vec![(1, 0)]);
+        assert_eq!(core.resident_warps(), 0);
+    }
+
+    #[test]
+    fn coalesced_load_counts_4_sector_accesses() {
+        let mut core = SimtCore::new(0, &cfg());
+        core.accept_tb(1, 5, 0,
+                       &one_warp_tb(vec![mem_op(0x1000, false, false)]));
+        let mut stats = CacheStats::new(StatMode::PerStream);
+        run_to_idle(&mut core, &mut stats);
+        let table = stats.stream_table(5).unwrap();
+        assert_eq!(table.total_for_type(AccessType::GlobalAccR), 4);
+    }
+
+    #[test]
+    fn cg_load_bypasses_l1_entirely() {
+        let mut core = SimtCore::new(0, &cfg());
+        core.accept_tb(1, 5, 0,
+                       &one_warp_tb(vec![mem_op(0x1000, false, true)]));
+        let mut stats = CacheStats::new(StatMode::PerStream);
+        let mut ids = FetchIdAlloc::default();
+        let mut now = 0;
+        let mut bypassed = Vec::new();
+        while core.busy() && now < 10_000 {
+            core.cycle(now, &mut stats, &mut ids);
+            for f in core.drain_to_icnt() {
+                assert!(f.l1_bypass);
+                bypassed.push(f.clone());
+                core.receive_response(f, now);
+            }
+            now += 1;
+        }
+        assert_eq!(bypassed.len(), 4);
+        // no L1 stats recorded at all
+        assert!(stats.streams().is_empty());
+    }
+
+    #[test]
+    fn store_is_fire_and_forget_write_through() {
+        let mut core = SimtCore::new(0, &cfg());
+        core.accept_tb(1, 5, 0,
+                       &one_warp_tb(vec![mem_op(0x2000, true, false)]));
+        let mut stats = CacheStats::new(StatMode::PerStream);
+        let mut ids = FetchIdAlloc::default();
+        let mut down_writes = 0;
+        let mut now = 0;
+        while core.busy() && now < 10_000 {
+            core.cycle(now, &mut stats, &mut ids);
+            for f in core.drain_to_icnt() {
+                assert!(f.is_write);
+                down_writes += 1;
+            }
+            now += 1;
+        }
+        // 4 sectors written through
+        assert_eq!(down_writes, 4);
+        assert_eq!(stats.stream_table(5).unwrap()
+                        .total_for_type(AccessType::GlobalAccW), 4);
+        // TB retired without any response
+        assert_eq!(core.take_finished(), vec![(1, 0)]);
+    }
+
+    #[test]
+    fn l1_hit_after_fill() {
+        let mut core = SimtCore::new(0, &cfg());
+        // two identical loads: first misses, second hits in L1
+        core.accept_tb(1, 5, 0, &one_warp_tb(vec![
+            mem_op(0x1000, false, false),
+            mem_op(0x1000, false, false),
+        ]));
+        let mut stats = CacheStats::new(StatMode::PerStream);
+        run_to_idle(&mut core, &mut stats);
+        let t = stats.stream_table(5).unwrap();
+        // first load: 1 line MISS + 3 SECTOR_MISSes; second load: 4 HITs
+        assert_eq!(t.get(AccessType::GlobalAccR, AccessOutcome::Miss), 1);
+        assert_eq!(t.get(AccessType::GlobalAccR,
+                         AccessOutcome::SectorMiss), 3);
+        assert_eq!(t.get(AccessType::GlobalAccR, AccessOutcome::Hit), 4);
+    }
+
+    #[test]
+    fn two_tbs_from_different_streams_attribute_separately() {
+        let mut core = SimtCore::new(0, &cfg());
+        core.accept_tb(1, 10, 0,
+                       &one_warp_tb(vec![mem_op(0x1000, false, false)]));
+        core.accept_tb(2, 20, 0,
+                       &one_warp_tb(vec![mem_op(0x8000, false, false)]));
+        let mut stats = CacheStats::new(StatMode::PerStream);
+        run_to_idle(&mut core, &mut stats);
+        assert_eq!(stats.stream_table(10).unwrap()
+                        .total_for_type(AccessType::GlobalAccR), 4);
+        assert_eq!(stats.stream_table(20).unwrap()
+                        .total_for_type(AccessType::GlobalAccR), 4);
+    }
+
+    #[test]
+    fn capacity_limits_respected() {
+        let mut c = cfg();
+        c.max_tbs_per_core = 2;
+        c.max_warps_per_core = 3;
+        let mut core = SimtCore::new(0, &c);
+        core.accept_tb(1, 0, 0, &TbTrace {
+            warps: vec![vec![TraceOp::Alu { count: 1 }]; 2],
+        });
+        assert!(core.can_accept(1));
+        assert!(!core.can_accept(2)); // warp limit
+        core.accept_tb(1, 0, 1, &one_warp_tb(vec![]));
+        assert!(!core.can_accept(1)); // slot limit
+    }
+
+    #[test]
+    fn kernel_trace_smoke_through_core() {
+        // run a small real KernelTrace shape end-to-end
+        let k = KernelTrace {
+            name: "mini".into(),
+            kernel_id: 1,
+            grid: Dim3::linear(3),
+            block: Dim3::linear(64),
+            stream_id: 2,
+            shared_mem_bytes: 0,
+            tbs: (0..3)
+                .map(|tb| TbTrace {
+                    warps: (0..2)
+                        .map(|w| vec![
+                            mem_op(0x10_0000 + tb * 0x100 + w * 0x80,
+                                   false, false),
+                            TraceOp::Alu { count: 2 },
+                            mem_op(0x20_0000 + tb * 0x100 + w * 0x80,
+                                   true, false),
+                        ])
+                        .collect(),
+                })
+                .collect(),
+        };
+        k.validate().unwrap();
+        let mut core = SimtCore::new(0, &cfg());
+        let mut stats = CacheStats::new(StatMode::PerStream);
+        let mut ids = FetchIdAlloc::default();
+        let mut now = 0;
+        let mut pending: Vec<usize> = (0..3).collect();
+        let mut done = 0;
+        // run past TB retirement until the LDST queue drains (stores are
+        // fire-and-forget and may outlive their TB)
+        while (done < 3 || core.busy()) && now < 100_000 {
+            if let Some(tb) = pending.first().copied() {
+                if core.can_accept(2) {
+                    core.accept_tb(1, 2, tb, &k.tbs[tb]);
+                    pending.remove(0);
+                }
+            }
+            core.cycle(now, &mut stats, &mut ids);
+            for f in core.drain_to_icnt() {
+                if !f.is_write {
+                    core.receive_response(f, now);
+                }
+            }
+            done += core.take_finished().len();
+            now += 1;
+        }
+        assert_eq!(done, 3);
+        let t = stats.stream_table(2).unwrap();
+        // 3 TBs x 2 warps x 4 sectors reads + same writes
+        assert_eq!(t.total_for_type(AccessType::GlobalAccR), 24);
+        assert_eq!(t.total_for_type(AccessType::GlobalAccW), 24);
+    }
+}

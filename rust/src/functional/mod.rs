@@ -1,0 +1,268 @@
+//! Functional layer — executes the *actual computation* of the
+//! simulated workloads through the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The timing simulator replays memory traces; this module proves the
+//! other half: the very kernels whose timing is simulated produce
+//! correct numbers when run through `python/compile/` → PJRT. Each
+//! function builds deterministic inputs, executes the artifact, and
+//! verifies against a host-side Rust oracle (an independent,
+//! cross-language check on the compile path).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+
+/// Outcome of one functional validation.
+#[derive(Debug, Clone)]
+pub struct FunctionalReport {
+    pub artifact: String,
+    pub elements: usize,
+    pub max_abs_err: f64,
+    pub checksum: f64,
+    pub passed: bool,
+}
+
+impl FunctionalReport {
+    fn check(artifact: &str, got: &[f32], want: &[f32], tol: f64)
+        -> Self {
+        let max_abs_err = got
+            .iter()
+            .zip(want)
+            .map(|(g, w)| (g - w).abs() as f64)
+            .fold(0.0, f64::max);
+        FunctionalReport {
+            artifact: artifact.to_string(),
+            elements: got.len(),
+            max_abs_err,
+            checksum: got.iter().map(|v| *v as f64).sum(),
+            passed: max_abs_err <= tol && got.len() == want.len(),
+        }
+    }
+}
+
+/// Deterministic pseudo-data (same values on every run/platform).
+fn input(n: usize, salt: u64) -> Vec<f32> {
+    let mut rng = crate::util::prng::SplitMix64::new(0xF00D ^ salt);
+    (0..n).map(|_| (rng.next_f64() as f32) * 2.0 - 1.0).collect()
+}
+
+/// Run the §5.2 stream program artifact and verify against the Rust
+/// oracle (`y' = s(αx + y)`, `z' = βx + z`, `a' = i<n/2 ? y'+a : 2a`).
+pub fn check_stream_program(rt: &Runtime, artifact: &str, n: usize)
+    -> Result<FunctionalReport> {
+    let x = input(n, 1);
+    let y = input(n, 2);
+    let z = input(n, 3);
+    let a = input(n, 4);
+    let mk = |v: &[f32]| HostTensor::F32 { data: v.to_vec(),
+                                           dims: vec![n] };
+    let out = rt
+        .execute(artifact, &[mk(&x), mk(&y), mk(&z), mk(&a)])
+        .with_context(|| format!("functional run of {artifact}"))?;
+    ensure!(out.len() == 3, "want 3 outputs, got {}", out.len());
+    let (alpha, beta, s) = (2.0f32, 3.0f32, 2.0f32);
+    let yw: Vec<f32> =
+        (0..n).map(|i| s * (alpha * x[i] + y[i])).collect();
+    let zw: Vec<f32> = (0..n).map(|i| beta * x[i] + z[i]).collect();
+    let aw: Vec<f32> = (0..n)
+        .map(|i| if i < n / 2 { yw[i] + a[i] } else { 2.0 * a[i] })
+        .collect();
+    let got: Vec<f32> = out[0]
+        .as_f32()
+        .into_iter()
+        .chain(out[1].as_f32())
+        .chain(out[2].as_f32())
+        .collect();
+    let want: Vec<f32> =
+        yw.into_iter().chain(zw).chain(aw).collect();
+    Ok(FunctionalReport::check(artifact, &got, &want, 1e-4))
+}
+
+/// Run the DeepBench GEMM artifact and verify against a host GEMM with
+/// fp16 input quantization (the oracle quantizes inputs exactly as the
+/// F16 literal conversion does, then accumulates in f64).
+pub fn check_gemm(rt: &Runtime, artifact: &str, m: usize, k: usize,
+                  n: usize) -> Result<FunctionalReport> {
+    // scaled-down magnitudes keep fp16 rounding well inside tolerance
+    let a: Vec<f32> = input(m * k, 5).iter().map(|v| v * 0.05).collect();
+    let b: Vec<f32> = input(k * n, 6).iter().map(|v| v * 0.05).collect();
+    let af16: Vec<f32> = a.iter().map(|&v| f16_round(v)).collect();
+    let bf16: Vec<f32> = b.iter().map(|&v| f16_round(v)).collect();
+    let out = rt.execute(
+        artifact,
+        &[
+            HostTensor::F16 { data: a, dims: vec![m, k] },
+            HostTensor::F16 { data: b, dims: vec![k, n] },
+        ],
+    )?;
+    ensure!(out.len() == 1);
+    ensure!(out[0].dims() == [m, n], "bad dims {:?}", out[0].dims());
+    let got = out[0].as_f32();
+    let mut want = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for kk in 0..k {
+                acc += af16[i * k + kk] as f64 * bf16[kk * n + j] as f64;
+            }
+            want[i * n + j] = f16_round(acc as f32);
+        }
+    }
+    Ok(FunctionalReport::check(artifact, &got, &want, 5e-2))
+}
+
+/// Run the stats-aggregation artifact against a host histogram.
+pub fn check_stats_aggregate(rt: &Runtime, events: usize)
+    -> Result<FunctionalReport> {
+    let (s, t, o) = (8usize, 10usize, 6usize);
+    let n = 16384usize; // artifact's fixed batch
+    ensure!(events <= n, "artifact batch is {n}");
+    let mut rng = crate::util::prng::SplitMix64::new(0x57A7);
+    let mut sid = vec![0i32; n];
+    let mut typ = vec![0i32; n];
+    let mut outc = vec![0i32; n];
+    let mut valid = vec![0i32; n];
+    for i in 0..events {
+        sid[i] = rng.next_below(s as u64) as i32;
+        typ[i] = rng.next_below(t as u64) as i32;
+        outc[i] = rng.next_below(o as u64) as i32;
+        valid[i] = 1;
+    }
+    let mk = |v: &[i32]| HostTensor::I32 { data: v.to_vec(),
+                                           dims: vec![n] };
+    let out = rt.execute(
+        "stats_aggregate",
+        &[mk(&sid), mk(&typ), mk(&outc), mk(&valid)],
+    )?;
+    let got = out[0].as_f32();
+    let mut want = vec![0f32; s * t * o];
+    for i in 0..events {
+        want[(sid[i] as usize * t + typ[i] as usize) * o
+             + outc[i] as usize] += 1.0;
+    }
+    Ok(FunctionalReport::check("stats_aggregate", &got, &want, 0.0))
+}
+
+/// Round an f32 to the nearest f16 value (software emulation; the xla
+/// literal conversion does the same rounding on the real path).
+pub fn f16_round(v: f32) -> f32 {
+    f16_to_f32(f32_to_f16(v))
+}
+
+/// IEEE 754 binary32 → binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // inf/nan
+        return sign | 0x7C00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal f16
+        let mut mant = frac >> 13;
+        let round = frac & 0x1FFF;
+        if round > 0x1000 || (round == 0x1000 && (mant & 1) == 1) {
+            mant += 1;
+        }
+        let mut e16 = (unbiased + 15) as u32;
+        if mant == 0x400 {
+            mant = 0;
+            e16 += 1;
+            if e16 >= 0x1F {
+                return sign | 0x7C00;
+            }
+        }
+        sign | ((e16 as u16) << 10) | mant as u16
+    } else if unbiased >= -25 {
+        // subnormal f16: value = m * 2^-24 with
+        // m = round(significand * 2^(unbiased+1))
+        let sh = (-unbiased - 1) as u32; // 14..=24
+        let full = frac | 0x80_0000; // 24-bit significand
+        let mant = full >> sh;
+        let rem = full & ((1u32 << sh) - 1);
+        let half = 1u32 << (sh - 1);
+        let mut m = mant;
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        // m == 0x400 carries into the exponent field and correctly
+        // encodes the smallest normal 2^-14
+        sign | m as u16
+    } else {
+        sign // underflow -> 0
+    }
+}
+
+/// IEEE 754 binary16 → binary32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: value = mant * 2^-24; normalize the leading 1
+            // into the implicit position (m has p = 11 + e leading-bit
+            // position after the loop, so exp32 = 127 + p - 24)
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            let exp32 = (114 + e) as u32;
+            sign | (exp32 << 23) | ((m & 0x3FF) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 512.0, -0.25, 65504.0] {
+            assert_eq!(f16_round(v), v, "{v} should be f16-exact");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_inexact_values() {
+        // 1/3 is not f16-representable
+        let r = f16_round(1.0 / 3.0);
+        assert!((r - 1.0 / 3.0).abs() < 1e-3);
+        assert_ne!(r, 1.0 / 3.0);
+        // overflow
+        assert_eq!(f16_round(1e6), f32::INFINITY);
+        // subnormal range survives approximately
+        let tiny = 3.0e-6f32;
+        assert!((f16_round(tiny) - tiny).abs() < 1e-6);
+    }
+
+    #[test]
+    fn f16_bits_match_reference_samples() {
+        // spot-check against known encodings
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0x7C00), f32::INFINITY);
+    }
+
+    // PJRT-backed checks live in rust/tests/functional.rs (they need
+    // `make artifacts`).
+}

@@ -1,0 +1,185 @@
+//! Figure data — the `graph.py` replacement.
+//!
+//! The paper's Figs. 2–5 plot, for every `(access_type, outcome)`
+//! combination with non-zero counts, three bar groups: `tip_serialized`
+//! (blue), `clean` (orange), and per-stream `tip` bars (green). We emit
+//! the same series as an aligned text table + CSV, with the per-stream
+//! tip bars and their sum next to the clean aggregate.
+
+use std::fmt::Write as _;
+
+use crate::cache::access::{AccessOutcome, AccessType};
+use crate::stats::cache_stats::CacheStats;
+use crate::StreamId;
+
+use super::ThreeWay;
+
+/// One plotted row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FigureRow {
+    pub cache: &'static str,
+    pub access_type: AccessType,
+    pub outcome: AccessOutcome,
+    pub serialized: u64,
+    pub clean: u64,
+    /// (stream, count) green bars.
+    pub tip_per_stream: Vec<(StreamId, u64)>,
+}
+
+impl FigureRow {
+    /// Σ of the green bars.
+    pub fn tip_sum(&self) -> u64 {
+        self.tip_per_stream.iter().map(|(_, c)| c).sum()
+    }
+}
+
+/// A figure's full data (both cache levels + the timelines).
+#[derive(Debug, Clone)]
+pub struct FigureData {
+    pub title: String,
+    pub rows: Vec<FigureRow>,
+    pub tip_gantt: String,
+    pub serialized_gantt: String,
+}
+
+/// Collect the rows for one cache level.
+fn rows_for(cache: &'static str, tip: &CacheStats, clean: &CacheStats,
+            serialized: &CacheStats) -> Vec<FigureRow> {
+    let streams: Vec<StreamId> = tip
+        .streams()
+        .into_iter()
+        .filter(|s| *s != CacheStats::AGG_KEY)
+        .collect();
+    let tip_total = tip.total_table();
+    let clean_total = clean.total_table();
+    let ser_total = serialized.total_table();
+    let mut rows = Vec::new();
+    for t in AccessType::ALL {
+        for o in AccessOutcome::ALL {
+            let any = tip_total.get(t, o) != 0
+                || clean_total.get(t, o) != 0
+                || ser_total.get(t, o) != 0;
+            if !any {
+                continue;
+            }
+            rows.push(FigureRow {
+                cache,
+                access_type: t,
+                outcome: o,
+                serialized: ser_total.get(t, o),
+                clean: clean_total.get(t, o),
+                tip_per_stream: streams
+                    .iter()
+                    .map(|s| (*s, tip.get(*s, t, o)))
+                    .collect(),
+            });
+        }
+    }
+    rows
+}
+
+/// Build a [`FigureData`] from a three-way run.
+pub fn build(title: &str, tw: &ThreeWay) -> FigureData {
+    let mut rows = rows_for("L1", &tw.tip.stats.l1, &tw.clean.stats.l1,
+                            &tw.tip_serialized.stats.l1);
+    rows.extend(rows_for("L2", &tw.tip.stats.l2, &tw.clean.stats.l2,
+                         &tw.tip_serialized.stats.l2));
+    FigureData {
+        title: title.to_string(),
+        rows,
+        tip_gantt: tw.tip.gantt.clone(),
+        serialized_gantt: tw.tip_serialized.gantt.clone(),
+    }
+}
+
+impl FigureData {
+    /// Aligned text table (what EXPERIMENTS.md embeds).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let streams: Vec<StreamId> = self
+            .rows
+            .first()
+            .map(|r| r.tip_per_stream.iter().map(|(s, _)| *s).collect())
+            .unwrap_or_default();
+        let _ = write!(out, "{:<4} {:<14} {:<17} {:>12} {:>12} {:>12}",
+                       "lvl", "access_type", "outcome", "serialized",
+                       "clean", "tip_sum");
+        for s in &streams {
+            let _ = write!(out, " {:>9}", format!("tip_s{s}"));
+        }
+        let _ = writeln!(out);
+        for r in &self.rows {
+            let _ = write!(out,
+                           "{:<4} {:<14} {:<17} {:>12} {:>12} {:>12}",
+                           r.cache, r.access_type.name(),
+                           r.outcome.name(), r.serialized, r.clean,
+                           r.tip_sum());
+            for (_, c) in &r.tip_per_stream {
+                let _ = write!(out, " {c:>9}");
+            }
+            let _ = writeln!(out);
+        }
+        let _ = writeln!(out, "\n-- timeline (tip, concurrent) --\n{}",
+                         self.tip_gantt);
+        let _ = writeln!(out, "-- timeline (tip_serialized) --\n{}",
+                         self.serialized_gantt);
+        out
+    }
+
+    /// CSV export (`figure.csv` artifact per experiment).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "cache,access_type,outcome,config,stream,count\n");
+        for r in &self.rows {
+            let _ = writeln!(out, "{},{},{},tip_serialized,all,{}",
+                             r.cache, r.access_type.name(),
+                             r.outcome.name(), r.serialized);
+            let _ = writeln!(out, "{},{},{},clean,all,{}", r.cache,
+                             r.access_type.name(), r.outcome.name(),
+                             r.clean);
+            for (s, c) in &r.tip_per_stream {
+                let _ = writeln!(out, "{},{},{},tip,{s},{c}", r.cache,
+                                 r.access_type.name(), r.outcome.name());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SimConfig;
+    use crate::harness::run_three_configs;
+    use crate::workloads;
+
+    #[test]
+    fn figure_table_renders_l2_lat() {
+        let g = workloads::generate("l2_lat").unwrap();
+        let cfg = SimConfig::preset("minimal").unwrap();
+        let tw = run_three_configs(&cfg, &g).unwrap();
+        let fig = tw.figure("Figure 2: l2_lat_4stream");
+        let table = fig.render_table();
+        assert!(table.contains("GLOBAL_ACC_R"));
+        assert!(table.contains("tip_s1"));
+        assert!(table.contains("timeline (tip, concurrent)"));
+        // all four stream columns present
+        for s in 1..=4 {
+            assert!(table.contains(&format!("tip_s{s}")), "{table}");
+        }
+    }
+
+    #[test]
+    fn rows_expose_green_equals_orange_for_symmetric_workload() {
+        let g = workloads::generate("l2_lat").unwrap();
+        let cfg = SimConfig::preset("minimal").unwrap();
+        let tw = run_three_configs(&cfg, &g).unwrap();
+        let fig = tw.figure("fig2");
+        // Fig. 2's headline: green (tip per-stream sums) == orange
+        // (clean) for every row of this symmetric workload
+        for r in fig.rows.iter().filter(|r| r.cache == "L2") {
+            assert_eq!(r.tip_sum(), r.clean,
+                       "row {:?}/{:?}", r.access_type, r.outcome);
+        }
+    }
+}

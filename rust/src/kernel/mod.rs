@@ -1,0 +1,211 @@
+//! Kernel launch metadata — the `kernel_info_t` / `trace_kernel_info_t`
+//! analogue.
+//!
+//! The paper's key plumbing change (§3.1): `trace_kernel_info_t` knew the
+//! CUDA stream id (`get_cuda_stream_id()`), but plain `kernel_info_t` —
+//! the type visible inside GPGPU-Sim — did not, so stats could not be
+//! attributed. The patch passes `cuda_stream_id` down through the
+//! constructor. Here [`KernelInfo`] carries `stream_id` from birth and
+//! every [`crate::mem::MemFetch`] inherits it.
+
+use std::collections::VecDeque;
+
+use crate::trace::{KernelTrace, TbTrace};
+use crate::{Cycle, KernelUid, StreamId};
+
+/// Launch-time state of one kernel (`kernel_info_t`).
+#[derive(Debug)]
+pub struct KernelInfo {
+    /// Runtime-unique launch id (`uid`), assigned by the launcher.
+    pub uid: KernelUid,
+    /// CUDA stream — the field the paper threads through GPGPU-Sim.
+    pub stream_id: StreamId,
+    pub name: String,
+    /// The trace this launch executes.
+    pub trace: KernelTrace,
+    /// Next TB index to dispatch.
+    next_tb: usize,
+    /// TBs still running on cores.
+    running_tbs: u32,
+    /// True once `launch()` was called (`was_launched` in main.cc).
+    pub launched: bool,
+    /// Launch cycle (0 until launched).
+    pub launch_cycle: Cycle,
+}
+
+impl KernelInfo {
+    /// Wrap a trace for launch.
+    pub fn new(uid: KernelUid, trace: KernelTrace) -> Self {
+        Self {
+            uid,
+            stream_id: trace.stream_id,
+            name: trace.name.clone(),
+            trace,
+            next_tb: 0,
+            running_tbs: 0,
+            launched: false,
+            launch_cycle: 0,
+        }
+    }
+
+    /// `get_cuda_stream_id()`.
+    pub fn cuda_stream_id(&self) -> StreamId {
+        self.stream_id
+    }
+
+    /// Total thread blocks.
+    pub fn total_tbs(&self) -> u64 {
+        self.trace.grid.count()
+    }
+
+    /// TBs not yet dispatched.
+    pub fn remaining_tbs(&self) -> u64 {
+        self.total_tbs() - self.next_tb as u64
+    }
+
+    /// Dispatch the next TB trace to a core, if any remain.
+    pub fn dispatch_tb(&mut self) -> Option<(usize, &TbTrace)> {
+        if self.next_tb >= self.trace.tbs.len() {
+            return None;
+        }
+        let idx = self.next_tb;
+        self.next_tb += 1;
+        self.running_tbs += 1;
+        Some((idx, &self.trace.tbs[idx]))
+    }
+
+    /// A dispatched TB finished all its warps.
+    pub fn tb_done(&mut self) {
+        debug_assert!(self.running_tbs > 0);
+        self.running_tbs -= 1;
+    }
+
+    /// All TBs dispatched and retired.
+    pub fn done(&mut self) -> bool {
+        self.remaining_tbs() == 0 && self.running_tbs == 0
+    }
+
+    /// TBs currently resident on cores.
+    pub fn running_tbs(&self) -> u32 {
+        self.running_tbs
+    }
+}
+
+/// FIFO of kernels pending launch plus the launch window, mirroring the
+/// `kernels_info` vector in Accel-Sim's `main.cc` loop.
+#[derive(Debug, Default)]
+pub struct KernelQueue {
+    pending: VecDeque<KernelInfo>,
+    next_uid: KernelUid,
+}
+
+impl KernelQueue {
+    /// Empty queue; uids start at 1 (GPGPU-Sim convention).
+    pub fn new() -> Self {
+        Self { pending: VecDeque::new(), next_uid: 1 }
+    }
+
+    /// Enqueue a trace; assigns the runtime uid.
+    pub fn push(&mut self, trace: KernelTrace) -> KernelUid {
+        let uid = self.next_uid;
+        self.next_uid += 1;
+        self.pending.push_back(KernelInfo::new(uid, trace));
+        uid
+    }
+
+    /// Kernels waiting (launch window view).
+    pub fn pending(&self) -> impl Iterator<Item = &KernelInfo> {
+        self.pending.iter()
+    }
+
+    /// True if nothing is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Number waiting.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Remove and return the first pending kernel satisfying `pred`
+    /// within the first `window` entries (Accel-Sim launches any
+    /// launchable kernel inside its command window, not strictly FIFO
+    /// across streams).
+    pub fn take_first(
+        &mut self,
+        window: usize,
+        mut pred: impl FnMut(&KernelInfo) -> bool,
+    ) -> Option<KernelInfo> {
+        let idx = self
+            .pending
+            .iter()
+            .take(window)
+            .position(|k| pred(k))?;
+        self.pending.remove(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Dim3;
+
+    fn trace(stream: StreamId, tbs: usize) -> KernelTrace {
+        KernelTrace {
+            name: "k".into(),
+            kernel_id: 1,
+            grid: Dim3::linear(tbs as u32),
+            block: Dim3::linear(32),
+            stream_id: stream,
+            shared_mem_bytes: 0,
+            tbs: vec![TbTrace { warps: vec![vec![]] }; tbs],
+        }
+    }
+
+    #[test]
+    fn dispatch_and_retire_lifecycle() {
+        let mut k = KernelInfo::new(1, trace(5, 3));
+        assert_eq!(k.cuda_stream_id(), 5);
+        assert_eq!(k.total_tbs(), 3);
+        assert!(!k.done());
+
+        let mut seen = Vec::new();
+        while let Some((idx, _)) = k.dispatch_tb() {
+            seen.push(idx);
+        }
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(k.remaining_tbs(), 0);
+        assert!(!k.done()); // still running
+        for _ in 0..3 {
+            k.tb_done();
+        }
+        assert!(k.done());
+    }
+
+    #[test]
+    fn queue_assigns_increasing_uids() {
+        let mut q = KernelQueue::new();
+        let u1 = q.push(trace(0, 1));
+        let u2 = q.push(trace(1, 1));
+        assert_eq!((u1, u2), (1, 2));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn take_first_respects_window_and_pred() {
+        let mut q = KernelQueue::new();
+        q.push(trace(0, 1)); // uid 1
+        q.push(trace(1, 1)); // uid 2
+        q.push(trace(2, 1)); // uid 3
+
+        // stream-1 kernel findable inside window 2
+        let k = q.take_first(2, |k| k.stream_id == 1).unwrap();
+        assert_eq!(k.uid, 2);
+        // stream-2 kernel NOT findable inside window 1 (head is uid 1)
+        assert!(q.take_first(1, |k| k.stream_id == 2).is_none());
+        // but findable inside window 2
+        assert_eq!(q.take_first(2, |k| k.stream_id == 2).unwrap().uid, 3);
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,60 @@
+//! # streamsim
+//!
+//! A trace-driven, cycle-level GPU simulator with **per-stream statistic
+//! tracking** — a from-scratch Rust reproduction of *"Integrating
+//! Per-Stream Stat Tracking into Accel-Sim"* (Qiao, Su, Sinclair, 2023),
+//! including the Accel-Sim/GPGPU-Sim substrate the paper patches.
+//!
+//! The paper's observation: Accel-Sim keeps one flat
+//! `vector<vector<u64>>` of cache statistics shared by every concurrently
+//! resident CUDA stream, so (a) statistics cannot be attributed to a
+//! kernel/stream and (b) same-cycle updates from different streams are
+//! under-counted. The fix re-keys every stat container by `streamID` and
+//! threads the stream id through the whole simulator.
+//!
+//! Layout (see DESIGN.md for the full inventory):
+//!
+//! * [`config`] — Accel-Sim-style configuration system + presets.
+//! * [`trace`] — `kernelslist.g`-compatible trace model and parsers.
+//! * [`workloads`] — generators for the paper's §5 benchmarks.
+//! * [`kernel`], [`stream`] — kernel metadata and the stream launch gate
+//!   (concurrent vs. the paper's serialized `busy_streams` patch).
+//! * [`core`] — SIMT core timing model (warps, scheduler, coalescer).
+//! * [`cache`] — sectored caches with MSHRs (L1D / L2).
+//! * [`mem`] — memory fetches, interconnect, DRAM partitions.
+//! * [`stats`] — **the contribution**: per-stream stat containers,
+//!   kernel launch/exit cycle tracking, Accel-Sim-format printers.
+//! * [`timeline`] — per-stream kernel timelines (the paper's figures).
+//! * [`sim`] — the top-level [`sim::GpuSim`] clock loop.
+//! * [`harness`] — tip / clean / tip_serialized comparison harness.
+//! * [`runtime`], [`functional`] — PJRT execution of the AOT-compiled
+//!   JAX/Pallas artifacts (functional layer; Python never runs here).
+//! * [`util`] — offline-friendly helpers (PRNG, micro-bench, proptest-lite).
+
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod core;
+pub mod functional;
+pub mod harness;
+pub mod kernel;
+pub mod mem;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod stream;
+pub mod timeline;
+pub mod trace;
+pub mod util;
+pub mod workloads;
+
+/// CUDA stream identifier, as carried by `trace_kernel_info_t` in
+/// Accel-Sim (`unsigned long long` there; the paper threads it through
+/// `kernel_info_t`, `mem_fetch` and `warp_inst_t`).
+pub type StreamId = u64;
+
+/// Monotonically increasing kernel launch id (`uid` in GPGPU-Sim).
+pub type KernelUid = u32;
+
+/// Simulation cycle count (GPU core clock domain).
+pub type Cycle = u64;

@@ -1,0 +1,15 @@
+//! `streamsim` CLI entry point — see [`streamsim::cli`] for the
+//! commands. Exit code 1 on any failure, with the error chain printed.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = streamsim::cli::parse(&args)
+        .and_then(streamsim::cli::execute);
+    match result {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! DRAM channel model: FCFS service with fixed latency and a per-cycle
+//! service-rate cap.
+//!
+//! Deliberately simple (no banks/rows): the paper's claims are about
+//! stat *attribution*, which needs realistic queueing and latency, not
+//! bank-level fidelity. Carries per-stream read/write counters — the
+//! paper's §6 "main memory" extension.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::mem::fetch::MemFetch;
+use crate::{Cycle, StreamId};
+
+/// Per-stream DRAM traffic (extension; paper §6).
+#[derive(Debug, Default, Clone)]
+pub struct DramStats {
+    pub reads: u64,
+    pub writes: u64,
+    /// streamID → serviced requests.
+    pub per_stream: BTreeMap<StreamId, u64>,
+}
+
+/// One DRAM channel behind a memory partition.
+#[derive(Debug)]
+pub struct Dram {
+    queue: VecDeque<(Cycle, MemFetch)>,
+    latency: u32,
+    per_cycle: u32,
+    pub stats: DramStats,
+}
+
+impl Dram {
+    /// Channel with `latency` cycles access time servicing up to
+    /// `per_cycle` requests per cycle.
+    pub fn new(latency: u32, per_cycle: u32) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            latency,
+            per_cycle,
+            stats: DramStats::default(),
+        }
+    }
+
+    /// Enqueue a request at `now`.
+    pub fn push(&mut self, now: Cycle, f: MemFetch) {
+        self.queue.push_back((now + self.latency as u64, f));
+    }
+
+    /// Service up to the per-cycle cap of ready requests; returns
+    /// completed *reads* (fills). Writes retire silently.
+    pub fn cycle(&mut self, now: Cycle) -> Vec<MemFetch> {
+        let mut fills = Vec::new();
+        for _ in 0..self.per_cycle {
+            let Some((ready, _)) = self.queue.front() else { break };
+            if *ready > now {
+                break;
+            }
+            let (_, f) = self.queue.pop_front().unwrap();
+            *self.stats.per_stream.entry(f.stream_id).or_default() += 1;
+            if f.is_write {
+                self.stats.writes += 1;
+            } else {
+                self.stats.reads += 1;
+                fills.push(f);
+            }
+        }
+        fills
+    }
+
+    /// Requests still queued.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::access::AccessType;
+
+    fn f(id: u64, is_write: bool, stream: u64) -> MemFetch {
+        MemFetch {
+            id,
+            addr: id * 32,
+            bytes: 32,
+            access_type: if is_write {
+                AccessType::L2WrbkAcc
+            } else {
+                AccessType::GlobalAccR
+            },
+            is_write,
+            stream_id: stream,
+            kernel_uid: 1,
+            l1_bypass: false,
+            ret: None,
+        }
+    }
+
+    #[test]
+    fn latency_and_fifo() {
+        let mut d = Dram::new(100, 2);
+        d.push(0, f(1, false, 1));
+        d.push(0, f(2, false, 1));
+        assert!(d.cycle(99).is_empty());
+        let fills = d.cycle(100);
+        assert_eq!(fills.iter().map(|x| x.id).collect::<Vec<_>>(),
+                   vec![1, 2]);
+        assert_eq!(d.pending(), 0);
+    }
+
+    #[test]
+    fn service_rate_cap() {
+        let mut d = Dram::new(0, 1);
+        for i in 0..3 {
+            d.push(0, f(i, false, 1));
+        }
+        assert_eq!(d.cycle(0).len(), 1);
+        assert_eq!(d.cycle(1).len(), 1);
+        assert_eq!(d.cycle(2).len(), 1);
+    }
+
+    #[test]
+    fn writes_retire_silently_but_are_counted() {
+        let mut d = Dram::new(0, 4);
+        d.push(0, f(1, true, 5));
+        d.push(0, f(2, false, 5));
+        let fills = d.cycle(0);
+        assert_eq!(fills.len(), 1);
+        assert_eq!(d.stats.writes, 1);
+        assert_eq!(d.stats.reads, 1);
+        assert_eq!(d.stats.per_stream[&5], 2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Memory fetch — the `mem_fetch` analogue.
+//!
+//! The paper's change: `mem_fetch` (and `warp_inst_t`) now carry
+//! `streamID`, propagated from the kernel object, "which allowed us to
+//! identify which stream a given statistic should be updating throughout
+//! GPGPU-Sim". [`MemFetch::stream_id`] is that field; every stat
+//! increment in the simulator reads it.
+
+use crate::cache::access::AccessType;
+use crate::{KernelUid, StreamId};
+
+/// Where a fetch should be returned to once serviced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReturnPath {
+    /// Issuing core.
+    pub core_id: u32,
+    /// Resident-TB slot on that core.
+    pub tb_slot: u32,
+    /// Warp index within the TB.
+    pub warp_idx: u32,
+}
+
+/// A sector-granularity memory transaction traveling through the
+/// hierarchy (core → L1 → interconnect → L2 partition → DRAM and back).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemFetch {
+    /// Globally unique id (allocation order; debug/merging).
+    pub id: u64,
+    /// Sector-aligned address.
+    pub addr: u64,
+    /// Transaction size in bytes (a 32 B sector at our granularity).
+    pub bytes: u32,
+    pub access_type: AccessType,
+    pub is_write: bool,
+    /// **The paper's field**: the CUDA stream of the issuing kernel.
+    pub stream_id: StreamId,
+    /// Issuing kernel's runtime uid.
+    pub kernel_uid: KernelUid,
+    /// Whether this fetch skips L1 (`ld.global.cg`).
+    pub l1_bypass: bool,
+    /// Wake-up routing for loads (None for writes/writebacks).
+    pub ret: Option<ReturnPath>,
+}
+
+impl MemFetch {
+    /// A load needs a response; writes are fire-and-forget at our
+    /// fidelity (write-ack queues don't change stat attribution).
+    pub fn needs_response(&self) -> bool {
+        !self.is_write && self.ret.is_some()
+    }
+
+    /// Re-type this fetch for the next level (e.g. the L2 write-allocate
+    /// read issued on a write miss).
+    pub fn retyped(&self, t: AccessType, is_write: bool) -> MemFetch {
+        MemFetch {
+            access_type: t,
+            is_write,
+            ret: if is_write { None } else { self.ret },
+            ..self.clone()
+        }
+    }
+}
+
+/// Monotonic fetch-id allocator.
+#[derive(Debug, Default)]
+pub struct FetchIdAlloc(u64);
+
+impl FetchIdAlloc {
+    /// Next id.
+    pub fn next(&mut self) -> u64 {
+        self.0 += 1;
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fetch(is_write: bool) -> MemFetch {
+        MemFetch {
+            id: 1,
+            addr: 0x80,
+            bytes: 32,
+            access_type: if is_write {
+                AccessType::GlobalAccW
+            } else {
+                AccessType::GlobalAccR
+            },
+            is_write,
+            stream_id: 3,
+            kernel_uid: 9,
+            l1_bypass: false,
+            ret: Some(ReturnPath { core_id: 0, tb_slot: 1, warp_idx: 2 }),
+        }
+    }
+
+    #[test]
+    fn loads_need_response_writes_dont() {
+        assert!(fetch(false).needs_response());
+        assert!(!fetch(true).needs_response());
+    }
+
+    #[test]
+    fn retyped_preserves_stream() {
+        let f = fetch(true);
+        let r = f.retyped(AccessType::L2WrAllocR, false);
+        assert_eq!(r.access_type, AccessType::L2WrAllocR);
+        assert!(!r.is_write);
+        assert_eq!(r.stream_id, 3); // the paper's invariant
+        assert_eq!(r.kernel_uid, 9);
+    }
+
+    #[test]
+    fn id_alloc_monotonic() {
+        let mut a = FetchIdAlloc::default();
+        assert!(a.next() < a.next());
+    }
+}

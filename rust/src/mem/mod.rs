@@ -1,0 +1,16 @@
+//! Memory system: fetches, interconnect, DRAM, partitions.
+//!
+//! * [`fetch`] — [`fetch::MemFetch`] carrying the paper's `streamID`.
+//! * [`icnt`] — latency/BW-bounded crossbar with per-stream flit stats.
+//! * [`dram`] — FCFS DRAM channels with per-stream traffic stats.
+//! * [`partition`] — L2 slice + DRAM channel pairs.
+
+pub mod dram;
+pub mod fetch;
+pub mod icnt;
+pub mod partition;
+
+pub use dram::{Dram, DramStats};
+pub use fetch::{FetchIdAlloc, MemFetch, ReturnPath};
+pub use icnt::{DelayQueue, Icnt, IcntStats};
+pub use partition::{partition_of, MemPartition};

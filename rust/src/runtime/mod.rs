@@ -1,0 +1,316 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! artifacts from Rust. Python never runs here.
+//!
+//! The interchange format is **HLO text** (`artifacts/*.hlo.txt`),
+//! produced once by `python/compile/aot.py`:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Serialized protos are *not* used —
+//! the image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction
+//! ids (DESIGN.md §7).
+//!
+//! Artifacts are compiled once at load and cached; execution is
+//! synchronous on the CPU PJRT client.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Typed host-side tensor passed to / returned from an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    /// fp16 travels as f32 host-side; converted at the literal boundary.
+    F16 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl HostTensor {
+    /// Element count implied by dims.
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    /// Empty tensor?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. }
+            | HostTensor::F16 { dims, .. }
+            | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    /// f32 view of the data (I32 converted).
+    pub fn as_f32(&self) -> Vec<f32> {
+        match self {
+            HostTensor::F32 { data, .. } | HostTensor::F16 { data, .. } => {
+                data.clone()
+            }
+            HostTensor::I32 { data, .. } => {
+                data.iter().map(|&v| v as f32).collect()
+            }
+        }
+    }
+
+    fn to_literal(&self) -> Result<Literal> {
+        let dims_i64: Vec<i64> =
+            self.dims().iter().map(|&d| d as i64).collect();
+        match self {
+            HostTensor::F32 { data, .. } => {
+                Ok(Literal::vec1(data).reshape(&dims_i64)?)
+            }
+            HostTensor::F16 { data, .. } => {
+                let f32lit = Literal::vec1(data).reshape(&dims_i64)?;
+                Ok(f32lit.convert(ElementType::F16.primitive_type())?)
+            }
+            HostTensor::I32 { data, .. } => {
+                Ok(Literal::vec1(data).reshape(&dims_i64)?)
+            }
+        }
+    }
+
+    fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match lit.ty()? {
+            ElementType::F32 => Ok(HostTensor::F32 {
+                data: lit.to_vec::<f32>()?,
+                dims,
+            }),
+            ElementType::F16 => {
+                let f32lit =
+                    lit.convert(ElementType::F32.primitive_type())?;
+                Ok(HostTensor::F16 { data: f32lit.to_vec::<f32>()?, dims })
+            }
+            ElementType::S32 => Ok(HostTensor::I32 {
+                data: lit.to_vec::<i32>()?,
+                dims,
+            }),
+            other => bail!("unsupported artifact output type {other:?}"),
+        }
+    }
+}
+
+/// The PJRT runtime holding compiled executables.
+pub struct Runtime {
+    client: PjRtClient,
+    executables: BTreeMap<String, PjRtLoadedExecutable>,
+    artifact_dir: Option<PathBuf>,
+}
+
+impl Runtime {
+    /// CPU PJRT client, no artifacts loaded.
+    pub fn new() -> Result<Self> {
+        let client =
+            PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            executables: BTreeMap::new(),
+            artifact_dir: None,
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact under `name`.
+    pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in `dir`; returns the loaded names.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifact dir {}", dir.display()))?;
+        let mut paths: Vec<PathBuf> =
+            entries.filter_map(|e| Some(e.ok()?.path())).collect();
+        paths.sort();
+        for p in paths {
+            let fname = p.file_name().and_then(|f| f.to_str());
+            if let Some(name) =
+                fname.and_then(|f| f.strip_suffix(".hlo.txt"))
+            {
+                self.load_artifact(name, &p)?;
+                names.push(name.to_string());
+            }
+        }
+        if names.is_empty() {
+            bail!("no *.hlo.txt artifacts in {} — run `make artifacts`",
+                  dir.display());
+        }
+        self.artifact_dir = Some(dir.to_path_buf());
+        Ok(names)
+    }
+
+    /// Loaded artifact names.
+    pub fn names(&self) -> Vec<String> {
+        self.executables.keys().cloned().collect()
+    }
+
+    /// Whether `name` is loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute artifact `name`. Every artifact returns a tuple
+    /// (`return_tuple=True` at lowering); the members come back as
+    /// [`HostTensor`]s.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor])
+        -> Result<Vec<HostTensor>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded \
+                                      (have: {:?})", self.names()))?;
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<Literal>(&literals)
+            .with_context(|| format!("executing '{name}'"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        let members = out.to_tuple().context("untupling result")?;
+        members.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// Default artifacts directory (crate-relative, for tests/examples).
+pub fn default_artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_with_artifacts() -> Option<Runtime> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let mut rt = Runtime::new().expect("PJRT client");
+        rt.load_dir(&dir).expect("load artifacts");
+        Some(rt)
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let Some(rt) = runtime_with_artifacts() else { return };
+        for name in ["stream_program_b1", "stream_program_b3",
+                     "deepbench_gemm", "deepbench_gemm_mini",
+                     "stats_aggregate"] {
+            assert!(rt.has(name), "missing artifact {name}");
+        }
+    }
+
+    #[test]
+    fn executes_stream_program_b3() {
+        let Some(rt) = runtime_with_artifacts() else { return };
+        let n = 1 << 18;
+        let x: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+        let y = vec![1.0f32; n];
+        let z = vec![2.0f32; n];
+        let a = vec![3.0f32; n];
+        let mk = |v: Vec<f32>| HostTensor::F32 { data: v, dims: vec![n] };
+        let out = rt
+            .execute("stream_program_b3",
+                     &[mk(x.clone()), mk(y), mk(z), mk(a)])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let yo = out[0].as_f32();
+        let zo = out[1].as_f32();
+        let ao = out[2].as_f32();
+        // y' = 2*(2x + 1); z' = 3x + 2; a' = first half y'+3, rest 6
+        for i in [0usize, 1, 1234, n - 1] {
+            let xf = (i % 7) as f32;
+            assert!((yo[i] - 2.0 * (2.0 * xf + 1.0)).abs() < 1e-5);
+            assert!((zo[i] - (3.0 * xf + 2.0)).abs() < 1e-5);
+            let want_a = if i < n / 2 { yo[i] + 3.0 } else { 6.0 };
+            assert!((ao[i] - want_a).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn executes_gemm_mini_fp16() {
+        let Some(rt) = runtime_with_artifacts() else { return };
+        let (m, k, n) = (35usize, 512usize, 256usize);
+        // a = all 0.5, b = all 2.0 -> c[i][j] = k * 1.0 = 512
+        let a = HostTensor::F16 { data: vec![0.5; m * k],
+                                  dims: vec![m, k] };
+        let b = HostTensor::F16 { data: vec![2.0; k * n],
+                                  dims: vec![k, n] };
+        let out = rt.execute("deepbench_gemm_mini", &[a, b]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims(), &[m, n]);
+        let c = out[0].as_f32();
+        for v in [c[0], c[m * n / 2], c[m * n - 1]] {
+            assert_eq!(v, 512.0, "fp16 gemm of constants must be exact");
+        }
+    }
+
+    #[test]
+    fn executes_stats_aggregate_matches_host() {
+        let Some(rt) = runtime_with_artifacts() else { return };
+        let n = 16384usize;
+        let (s, t, o) = (8usize, 10usize, 6usize);
+        let mut rng = crate::util::prng::SplitMix64::new(42);
+        let sid: Vec<i32> =
+            (0..n).map(|_| rng.next_below(s as u64) as i32).collect();
+        let typ: Vec<i32> =
+            (0..n).map(|_| rng.next_below(t as u64) as i32).collect();
+        let out_: Vec<i32> =
+            (0..n).map(|_| rng.next_below(o as u64) as i32).collect();
+        let valid: Vec<i32> =
+            (0..n).map(|_| rng.next_below(2) as i32).collect();
+        let mk = |v: &[i32]| HostTensor::I32 {
+            data: v.to_vec(),
+            dims: vec![n],
+        };
+        let out = rt
+            .execute("stats_aggregate",
+                     &[mk(&sid), mk(&typ), mk(&out_), mk(&valid)])
+            .unwrap();
+        assert_eq!(out[0].dims(), &[s, t, o]);
+        let cube = out[0].as_f32();
+        // host-side oracle
+        let mut want = vec![0f32; s * t * o];
+        for i in 0..n {
+            if valid[i] == 1 {
+                let idx = (sid[i] as usize * t + typ[i] as usize) * o
+                    + out_[i] as usize;
+                want[idx] += 1.0;
+            }
+        }
+        assert_eq!(cube, want);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let Some(rt) = runtime_with_artifacts() else { return };
+        assert!(rt.execute("nonexistent", &[]).is_err());
+    }
+}

@@ -1,0 +1,583 @@
+//! `GpuSim` — the clock loop tying cores, interconnect and partitions
+//! together, plus the kernel launch logic of Accel-Sim's
+//! `gpu-simulator/main.cc` (including the paper's serialization patch).
+//!
+//! Launch gating:
+//! * stock (`concurrent_kernel_sm = 1`): a kernel launches when its
+//!   stream is idle — kernels from *different* streams overlap;
+//! * `serialize_streams = 1` (the paper's §5.1 patch): a kernel launches
+//!   only when **no** stream is busy (`busy_streams.size() == 0`);
+//! * `concurrent_kernel_sm = 0`: the GPU runs one kernel at a time —
+//!   behaviourally the serialized gate.
+//!
+//! On each kernel exit the simulator prints that kernel's stream's stats
+//! (the paper's §3.1 print fix) into [`GpuStats::exit_log`].
+
+use anyhow::{bail, Result};
+
+use crate::config::SimConfig;
+use crate::core::SimtCore;
+use crate::kernel::{KernelInfo, KernelQueue};
+use crate::mem::{partition_of, FetchIdAlloc, Icnt, MemPartition};
+use crate::sim::GpuStats;
+use crate::stats::print as stat_print;
+use crate::stream::{LaunchGate, StreamTable};
+use crate::timeline;
+use crate::trace::Workload;
+use crate::Cycle;
+
+/// Maximum kernels resident on the GPU at once (`can_start_kernel`).
+const MAX_RUNNING_KERNELS: usize = 32;
+
+/// The simulator.
+pub struct GpuSim {
+    cfg: SimConfig,
+    cores: Vec<SimtCore>,
+    partitions: Vec<MemPartition>,
+    icnt: Icnt,
+    queue: KernelQueue,
+    streams: StreamTable,
+    running: Vec<KernelInfo>,
+    ids: FetchIdAlloc,
+    now: Cycle,
+    stats: GpuStats,
+    dispatch_rr: usize,
+    /// Reused per-cycle scratch buffer (allocation-free step loop).
+    scratch: Vec<crate::mem::MemFetch>,
+    /// Echo kernel launch/exit lines to stdout.
+    pub verbose: bool,
+}
+
+impl GpuSim {
+    /// Build a simulator for `cfg`.
+    pub fn new(cfg: SimConfig) -> Result<Self> {
+        cfg.validate()?;
+        let cores = (0..cfg.num_cores)
+            .map(|i| SimtCore::new(i, &cfg))
+            .collect();
+        let partitions = (0..cfg.num_l2_partitions)
+            .map(|i| MemPartition::new(i, &cfg))
+            .collect();
+        let icnt = Icnt::new(cfg.icnt_latency, cfg.icnt_flit_per_cycle);
+        let stats = GpuStats::new(cfg.stat_mode);
+        Ok(Self {
+            cfg,
+            cores,
+            partitions,
+            icnt,
+            queue: KernelQueue::new(),
+            streams: StreamTable::new(),
+            running: Vec::new(),
+            ids: FetchIdAlloc::default(),
+            now: 0,
+            stats,
+            dispatch_rr: 0,
+            scratch: Vec::new(),
+            verbose: false,
+        })
+    }
+
+    /// Configuration in use.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Queue every kernel of a workload (memcpys are functional-only and
+    /// cost nothing in the timing model, as in Accel-Sim trace replay).
+    pub fn enqueue_workload(&mut self, w: &Workload) -> Result<()> {
+        w.validate()?;
+        for k in &w.kernels {
+            // a TB that can never fit would deadlock the dispatcher —
+            // reject it up front, like the CUDA launch-config check
+            let warps = k.block.count().div_ceil(32);
+            if warps > self.cfg.max_warps_per_core as u64 {
+                bail!("kernel '{}': {} warps/TB exceeds \
+                       max_warps_per_core = {}",
+                      k.name, warps, self.cfg.max_warps_per_core);
+            }
+            self.queue.push(k.clone());
+        }
+        Ok(())
+    }
+
+    /// The effective launch gate for this config.
+    fn gate(&self) -> LaunchGate {
+        if self.cfg.serialize_streams || !self.cfg.concurrent_kernel_sm {
+            LaunchGate::Serialized
+        } else {
+            LaunchGate::Concurrent
+        }
+    }
+
+    /// Run to completion (or `max_cycles`). Returns the final stats.
+    pub fn run(&mut self) -> Result<&GpuStats> {
+        while !self.idle() {
+            self.step()?;
+            if self.now >= self.cfg.max_cycles {
+                bail!("simulation exceeded max_cycles = {} \
+                       (queue={}, running={})",
+                      self.cfg.max_cycles, self.queue.len(),
+                      self.running.len());
+            }
+        }
+        self.stats.total_cycles = self.now;
+        Ok(&self.stats)
+    }
+
+    /// Everything drained? Cheap checks first — while kernels are in
+    /// flight (the common case) this is two length comparisons, not a
+    /// scan over 80 cores.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+            && self.running.is_empty()
+            && !self.icnt.busy()
+            && self.cores.iter().all(|c| !c.busy())
+            && self.partitions.iter().all(|p| !p.busy())
+    }
+
+    /// One clock tick.
+    pub fn step(&mut self) -> Result<()> {
+        self.launch_kernels();
+        self.dispatch_tbs();
+
+        // cores issue + L1
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for core in &mut self.cores {
+            core.cycle(self.now, &mut self.stats.l1, &mut self.ids);
+            core.drain_to_icnt_into(&mut scratch);
+        }
+        for f in scratch.drain(..) {
+            self.icnt.push_to_mem(self.now, f);
+        }
+        self.scratch = scratch;
+
+        // interconnect: core -> partitions
+        let line = self.cfg.l2.line_size;
+        let nparts = self.cfg.num_l2_partitions;
+        for f in self.icnt.drain_to_mem(self.now) {
+            let p = partition_of(f.addr, line, nparts) as usize;
+            self.partitions[p].push_request(f);
+        }
+
+        // partitions: L2 + DRAM (skip quiescent partitions)
+        for p in &mut self.partitions {
+            if !p.busy() {
+                continue;
+            }
+            p.cycle(self.now, &mut self.stats.l2);
+            for resp in p.drain_responses() {
+                self.icnt.push_to_core(self.now, resp);
+            }
+        }
+
+        // interconnect: partitions -> cores
+        for f in self.icnt.drain_to_core(self.now) {
+            let core = f.ret.map(|r| r.core_id as usize).unwrap_or(0);
+            self.cores[core].receive_response(f, self.now);
+        }
+
+        self.retire_tbs();
+        self.now += 1;
+        Ok(())
+    }
+
+    /// Accel-Sim's launch window loop (+ the paper's serialized gate).
+    fn launch_kernels(&mut self) {
+        loop {
+            if self.running.len() >= MAX_RUNNING_KERNELS {
+                return;
+            }
+            let gate = self.gate();
+            let streams = &self.streams;
+            let Some(mut k) = self.queue.take_first(
+                self.cfg.launch_window,
+                |k| streams.can_launch(gate, k.stream_id),
+            ) else {
+                return;
+            };
+            k.launched = true;
+            k.launch_cycle = self.now;
+            self.streams.launch(k.stream_id, k.uid);
+            self.stats
+                .kernel_times
+                .record_launch(k.stream_id, k.uid, self.now);
+            self.stats.kernels_launched += 1;
+            if self.verbose {
+                println!("launching kernel name: {} uid: {} stream: {} \
+                          cycle: {}",
+                         k.name, k.uid, k.stream_id, self.now);
+            }
+            self.running.push(k);
+        }
+    }
+
+    /// Issue TBs of running kernels to cores. Kernel selection rotates
+    /// across running kernels per issued TB — GPGPU-Sim's
+    /// `select_kernel()` behaviour — so concurrent kernels interleave
+    /// over the SMs instead of draining in launch order (this is also
+    /// what makes different streams update stats in the same cycle,
+    /// the collision behind the paper's Fig. 1 under-count).
+    fn dispatch_tbs(&mut self) {
+        let ncores = self.cores.len();
+        let nkernels = self.running.len();
+        if nkernels == 0 {
+            return;
+        }
+        let mut kernel_rr = 0usize;
+        loop {
+            // next kernel (rotating) that still has TBs to dispatch
+            let Some(koff) = (0..nkernels).find(|off| {
+                self.running[(kernel_rr + off) % nkernels]
+                    .remaining_tbs() > 0
+            }) else {
+                return; // nothing left to dispatch
+            };
+            let ki = (kernel_rr + koff) % nkernels;
+            let warps = self.running[ki].trace.warps_per_tb();
+            let Some(coff) = (0..ncores).find(|off| {
+                self.cores[(self.dispatch_rr + off) % ncores]
+                    .can_accept(warps)
+            }) else {
+                return; // GPU full this cycle
+            };
+            let core = (self.dispatch_rr + coff) % ncores;
+            let k = &mut self.running[ki];
+            let (uid, stream) = (k.uid, k.stream_id);
+            let (tb_idx, trace) = k.dispatch_tb().unwrap();
+            self.cores[core].accept_tb(uid, stream, tb_idx, trace);
+            self.dispatch_rr = (core + 1) % ncores;
+            kernel_rr = (ki + 1) % nkernels;
+        }
+    }
+
+    /// Collect finished TBs; retire kernels whose TBs all completed.
+    fn retire_tbs(&mut self) {
+        for core in &mut self.cores {
+            for (uid, _tb) in core.take_finished() {
+                if let Some(k) =
+                    self.running.iter_mut().find(|k| k.uid == uid)
+                {
+                    k.tb_done();
+                }
+            }
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].done() {
+                let k = self.running.remove(i);
+                self.on_kernel_exit(&k);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// The paper's §3.1/§3.2 exit path: record the end cycle, print only
+    /// the exiting kernel's stream's stats, reset that stream's
+    /// per-window tables.
+    fn on_kernel_exit(&mut self, k: &KernelInfo) {
+        self.streams.finish(k.stream_id, k.uid);
+        self.stats
+            .kernel_times
+            .record_done(k.stream_id, k.uid, self.now);
+        self.stats.kernels_done += 1;
+
+        let mut log = String::new();
+        log.push_str(&format!(
+            "kernel '{}' uid {} finished on stream {}\n",
+            k.name, k.uid, k.stream_id));
+        log.push_str(&stat_print::print_kernel_time(
+            &self.stats.kernel_times, k.stream_id, k.uid));
+        log.push_str(&stat_print::print_stats(
+            &self.stats.l1, k.stream_id,
+            "Total_core_cache_stats_breakdown"));
+        log.push_str(&stat_print::print_stats(
+            &self.stats.l2, k.stream_id, "L2_cache_stats_breakdown"));
+        if self.verbose {
+            print!("{log}");
+        }
+        self.stats.exit_log.push(log);
+        self.stats.l1.clear_pw(k.stream_id);
+        self.stats.l2.clear_pw(k.stream_id);
+    }
+
+    /// Final stats (after [`GpuSim::run`]).
+    pub fn stats(&self) -> &GpuStats {
+        &self.stats
+    }
+
+    /// Mutable stats access (the harness moves results out of finished
+    /// simulations).
+    pub fn stats_mut(&mut self) -> &mut GpuStats {
+        &mut self.stats
+    }
+
+    /// ASCII timeline of the finished simulation.
+    pub fn render_timeline(&self, width: usize) -> String {
+        timeline::render_gantt(&self.stats.kernel_times, width)
+    }
+
+    /// Per-stream DRAM totals across partitions (extension, paper §6).
+    pub fn dram_per_stream(&self)
+        -> std::collections::BTreeMap<crate::StreamId, u64> {
+        let mut m = std::collections::BTreeMap::new();
+        for p in &self.partitions {
+            for (s, n) in &p.dram_stats().per_stream {
+                *m.entry(*s).or_default() += n;
+            }
+        }
+        m
+    }
+
+    /// Per-stream interconnect flit totals (extension, paper §6).
+    pub fn icnt_per_stream(&self)
+        -> std::collections::BTreeMap<crate::StreamId, u64> {
+        let mut m = std::collections::BTreeMap::new();
+        for (s, n) in &self.icnt.stats.to_mem_flits {
+            *m.entry(*s).or_default() += n;
+        }
+        for (s, n) in &self.icnt.stats.to_core_flits {
+            *m.entry(*s).or_default() += n;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::access::{AccessOutcome, AccessType};
+    use crate::stats::StatMode;
+    use crate::trace::{Dim3, KernelTrace, MemInstr, MemSpace, TbTrace,
+                       TraceOp};
+
+    fn load_op(base: u64, bypass: bool) -> TraceOp {
+        TraceOp::Mem(MemInstr {
+            pc: 0,
+            space: MemSpace::Global,
+            is_write: false,
+            size: 4,
+            base_addr: base,
+            stride: 4,
+            active_mask: u32::MAX,
+            l1_bypass: bypass,
+        })
+    }
+
+    fn kernel(stream: u64, base: u64, tbs: u32) -> KernelTrace {
+        KernelTrace {
+            name: format!("k_s{stream}"),
+            kernel_id: 1,
+            grid: Dim3::linear(tbs),
+            block: Dim3::linear(32),
+            stream_id: stream,
+            shared_mem_bytes: 0,
+            tbs: (0..tbs)
+                .map(|i| TbTrace {
+                    warps: vec![vec![
+                        load_op(base + i as u64 * 0x80, false),
+                        TraceOp::Alu { count: 2 },
+                    ]],
+                })
+                .collect(),
+        }
+    }
+
+    fn mini_cfg(mode: StatMode, serialized: bool) -> SimConfig {
+        let mut c = SimConfig::preset("sm7_titanv_mini").unwrap();
+        c.stat_mode = mode;
+        c.serialize_streams = serialized;
+        c
+    }
+
+    #[test]
+    fn single_kernel_runs_to_completion() {
+        let mut sim = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        let w = Workload { kernels: vec![kernel(0, 0x1000, 4)],
+                           memcpys: vec![] };
+        sim.enqueue_workload(&w).unwrap();
+        let stats = sim.run().unwrap();
+        assert_eq!(stats.kernels_done, 1);
+        assert!(stats.total_cycles > 0);
+        // 4 TBs x 4 sectors read at L1
+        assert_eq!(stats.l1.stream_table(0).unwrap()
+                        .total_for_type(AccessType::GlobalAccR), 16);
+        assert_eq!(stats.exit_log.len(), 1);
+        assert!(stats.exit_log[0].contains("stream 0"));
+    }
+
+    #[test]
+    fn concurrent_streams_overlap_serialized_dont() {
+        let w = Workload {
+            kernels: (0..4).map(|s| kernel(s, 0x40_0000, 8)).collect(),
+            memcpys: vec![],
+        };
+        let mut conc = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        conc.enqueue_workload(&w).unwrap();
+        conc.run().unwrap();
+        assert!(conc.stats().kernel_times.cross_stream_overlaps() > 0,
+                "concurrent run must overlap");
+
+        let mut ser = GpuSim::new(mini_cfg(StatMode::PerStream, true))
+            .unwrap();
+        ser.enqueue_workload(&w).unwrap();
+        ser.run().unwrap();
+        assert_eq!(ser.stats().kernel_times.cross_stream_overlaps(), 0,
+                   "serialized run must not overlap");
+    }
+
+    #[test]
+    fn same_stream_kernels_serialize() {
+        let w = Workload {
+            kernels: vec![kernel(3, 0x1000, 2), kernel(3, 0x9000, 2)],
+            memcpys: vec![],
+        };
+        let mut sim = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        sim.enqueue_workload(&w).unwrap();
+        sim.run().unwrap();
+        let t = &sim.stats().kernel_times;
+        let k1 = t.get(3, 1).unwrap();
+        let k2 = t.get(3, 2).unwrap();
+        assert!(k2.start_cycle >= k1.end_cycle,
+                "stream order violated: {k1:?} {k2:?}");
+    }
+
+    #[test]
+    fn per_stream_sum_matches_exact_aggregate() {
+        // The paper's core invariant at system level.
+        let w = Workload {
+            kernels: (0..4).map(|s| kernel(s, 0x40_0000, 8)).collect(),
+            memcpys: vec![],
+        };
+        let mut tip = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        tip.enqueue_workload(&w).unwrap();
+        tip.run().unwrap();
+        let mut exact =
+            GpuSim::new(mini_cfg(StatMode::AggregateExact, false)).unwrap();
+        exact.enqueue_workload(&w).unwrap();
+        exact.run().unwrap();
+
+        assert_eq!(tip.stats().l2.total_table(),
+                   exact.stats().l2.total_table());
+        assert_eq!(tip.stats().l1.total_table(),
+                   exact.stats().l1.total_table());
+    }
+
+    #[test]
+    fn clean_mode_undercounts_or_equals() {
+        let w = Workload {
+            kernels: (0..4).map(|s| kernel(s, 0x40_0000, 8)).collect(),
+            memcpys: vec![],
+        };
+        let mut tip = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        tip.enqueue_workload(&w).unwrap();
+        tip.run().unwrap();
+        let mut clean =
+            GpuSim::new(mini_cfg(StatMode::AggregateBuggy, false)).unwrap();
+        clean.enqueue_workload(&w).unwrap();
+        clean.run().unwrap();
+
+        // tip >= clean cell-wise (the paper's Figs. 3-4 observation)
+        assert!(tip.stats().l1.total_table()
+                   .dominates(&clean.stats().l1.total_table()));
+        assert!(tip.stats().l2.total_table()
+                   .dominates(&clean.stats().l2.total_table()));
+    }
+
+    #[test]
+    fn shared_addresses_produce_cross_stream_mshr_hits() {
+        // all 4 streams pointer-chase the SAME address with .cg
+        let mk = |s| KernelTrace {
+            name: format!("l2lat_s{s}"),
+            kernel_id: 1,
+            grid: Dim3::linear(1),
+            block: Dim3::linear(32),
+            stream_id: s,
+            shared_mem_bytes: 0,
+            tbs: vec![TbTrace {
+                warps: vec![vec![TraceOp::Mem(MemInstr {
+                    pc: 0,
+                    space: MemSpace::Global,
+                    is_write: false,
+                    size: 8,
+                    base_addr: 0x10_0000,
+                    stride: 0,
+                    active_mask: 1,
+                    l1_bypass: true,
+                })]],
+            }],
+        };
+        let w = Workload { kernels: (0..4).map(mk).collect(),
+                           memcpys: vec![] };
+        let mut sim = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        sim.enqueue_workload(&w).unwrap();
+        sim.run().unwrap();
+        let l2 = &sim.stats().l2;
+        let misses: u64 = (0..4).map(|s| l2.get(s, AccessType::GlobalAccR,
+            AccessOutcome::Miss)).sum();
+        let mshr: u64 = (0..4).map(|s| l2.get(s, AccessType::GlobalAccR,
+            AccessOutcome::MshrHit)).sum();
+        let hits: u64 = (0..4).map(|s| l2.get(s, AccessType::GlobalAccR,
+            AccessOutcome::Hit)).sum();
+        assert_eq!(misses + mshr + hits, 4);
+        assert_eq!(misses, 1);
+        assert!(mshr >= 1, "concurrent streams must merge in MSHR");
+    }
+
+    #[test]
+    fn exit_log_prints_only_exiting_stream() {
+        let w = Workload {
+            kernels: vec![kernel(1, 0x1000, 2), kernel(2, 0x10_0000, 2)],
+            memcpys: vec![],
+        };
+        let mut sim = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        sim.enqueue_workload(&w).unwrap();
+        sim.run().unwrap();
+        for log in &sim.stats().exit_log {
+            // a log block mentions exactly one stream id in its header
+            let first = log.lines().next().unwrap();
+            if first.contains("stream 1") {
+                assert!(!log.contains("(stream 2)"));
+            } else {
+                assert!(!log.contains("(stream 1)"));
+            }
+        }
+    }
+
+    #[test]
+    fn max_cycles_guard_trips() {
+        let mut cfg = mini_cfg(StatMode::PerStream, false);
+        cfg.max_cycles = 3;
+        let mut sim = GpuSim::new(cfg).unwrap();
+        let w = Workload { kernels: vec![kernel(0, 0x0, 64)],
+                           memcpys: vec![] };
+        sim.enqueue_workload(&w).unwrap();
+        assert!(sim.run().is_err());
+    }
+
+    #[test]
+    fn dram_and_icnt_per_stream_extensions_populate() {
+        // disjoint footprints so BOTH streams generate DRAM traffic
+        let w = Workload {
+            kernels: (0..2)
+                .map(|s| kernel(s, 0x40_0000 + s * 0x10_0000, 4))
+                .collect(),
+            memcpys: vec![],
+        };
+        let mut sim = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        sim.enqueue_workload(&w).unwrap();
+        sim.run().unwrap();
+        let dram = sim.dram_per_stream();
+        let icnt = sim.icnt_per_stream();
+        assert!(dram.contains_key(&0) && dram.contains_key(&1));
+        assert!(icnt[&0] > 0 && icnt[&1] > 0);
+    }
+}

@@ -1,0 +1,59 @@
+//! GPU-level stat aggregation — what the simulation reports.
+
+use crate::stats::{CacheStats, KernelTimeTracker, StatMode};
+use crate::Cycle;
+
+/// Everything the simulator measures in one place.
+#[derive(Debug)]
+pub struct GpuStats {
+    /// Aggregated L1D stats across all cores
+    /// (`Total_core_cache_stats_breakdown`).
+    pub l1: CacheStats,
+    /// Aggregated L2 stats across all partitions
+    /// (`L2_cache_stats_breakdown`).
+    pub l2: CacheStats,
+    /// Per-stream, per-kernel launch/exit windows (§3.2).
+    pub kernel_times: KernelTimeTracker,
+    /// Total simulated cycles.
+    pub total_cycles: Cycle,
+    /// Kernels launched.
+    pub kernels_launched: u32,
+    /// Kernels retired.
+    pub kernels_done: u32,
+    /// Per-kernel-exit printed output, in exit order (the paper's §3.1
+    /// print-behaviour change is observable here).
+    pub exit_log: Vec<String>,
+}
+
+impl GpuStats {
+    /// Fresh container with the given stat semantics.
+    pub fn new(mode: StatMode) -> Self {
+        Self {
+            l1: CacheStats::new(mode),
+            l2: CacheStats::new(mode),
+            kernel_times: KernelTimeTracker::new(),
+            total_cycles: 0,
+            kernels_launched: 0,
+            kernels_done: 0,
+            exit_log: Vec::new(),
+        }
+    }
+
+    /// Total cache accesses recorded (throughput denominators).
+    pub fn total_accesses(&self) -> u64 {
+        self.l1.total_table().total() + self.l2.total_table().total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_stats_are_empty() {
+        let s = GpuStats::new(StatMode::PerStream);
+        assert_eq!(s.total_accesses(), 0);
+        assert_eq!(s.total_cycles, 0);
+        assert!(s.exit_log.is_empty());
+    }
+}

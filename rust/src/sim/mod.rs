@@ -1,0 +1,7 @@
+//! The top-level GPU simulator.
+
+pub mod gpu_sim;
+pub mod gpu_stats;
+
+pub use gpu_sim::GpuSim;
+pub use gpu_stats::GpuStats;

@@ -1,0 +1,408 @@
+//! Per-stream cache statistics — the paper's §3.1 contribution.
+//!
+//! GPGPU-Sim before the patch:
+//! `std::vector<std::vector<unsigned long long>> m_stats` — one flat
+//! table shared by every stream. After the patch:
+//! `std::map<unsigned long long, vector<vector<unsigned long long>>>`
+//! keyed by `streamID`, and `inc_stats(type, outcome, streamID)`.
+//!
+//! [`CacheStats`] implements both behaviours behind [`StatMode`]:
+//!
+//! * [`StatMode::PerStream`] — the patched (`tip`) semantics.
+//! * [`StatMode::AggregateBuggy`] — the `clean` baseline **including the
+//!   same-cycle under-count** the paper describes in §1/Fig. 1: when two
+//!   different streams bump the same `(type, outcome)` cell in the same
+//!   cycle, the second increment is lost. (In real GPGPU-Sim this loss
+//!   is an artifact of how per-cycle stat deltas were latched; we model
+//!   it explicitly so the `clean` bars of Figs. 3–4 are reproducible.)
+//! * [`StatMode::AggregateExact`] — a loss-free aggregate, used as the
+//!   oracle for the `Σ_streams per_stream == exact` invariant.
+//!
+//! Every increment carries `(stream_id, cycle)`; the mode decides what is
+//! retained. This mirrors how the paper threads `streamID` through
+//! `mem_fetch`/`warp_inst_t` into every `inc_stats` call site.
+
+use crate::cache::access::{AccessOutcome, AccessType, FailOutcome};
+use crate::stats::table::{FailTable, StatTable};
+use crate::{Cycle, StreamId};
+
+/// Which statistics semantics a cache instance uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StatMode {
+    /// Patched per-stream tracking (the paper's feature, `tip`).
+    #[default]
+    PerStream,
+    /// Unpatched flat counters with the same-cycle cross-stream
+    /// under-count (`clean`).
+    AggregateBuggy,
+    /// Loss-free flat counters (oracle; not a real Accel-Sim config).
+    AggregateExact,
+}
+
+impl StatMode {
+    /// Label used in harness output / figures.
+    pub const fn label(self) -> &'static str {
+        match self {
+            StatMode::PerStream => "tip",
+            StatMode::AggregateBuggy => "clean",
+            StatMode::AggregateExact => "exact",
+        }
+    }
+}
+
+/// Guard reproducing the clean-mode same-cycle collision loss: remembers,
+/// for the current cycle, which `(type, outcome)` cells were already
+/// bumped and by which stream. A second bump of the same cell in the same
+/// cycle by a *different* stream is dropped (bumps by the same stream are
+/// kept — the flat counter is "owned" by one updater per cell per cycle).
+#[derive(Debug, Clone, Default)]
+struct CycleGuard {
+    cycle: Cycle,
+    /// `Some(stream)` = first stream to touch the cell this cycle.
+    owner: [[Option<StreamId>; AccessOutcome::COUNT]; AccessType::COUNT],
+}
+
+impl CycleGuard {
+    /// Returns `true` if this increment should be counted.
+    fn admit(&mut self, t: AccessType, o: AccessOutcome, stream: StreamId,
+             cycle: Cycle) -> bool {
+        if cycle != self.cycle {
+            self.cycle = cycle;
+            self.owner =
+                [[None; AccessOutcome::COUNT]; AccessType::COUNT];
+        }
+        match self.owner[t.idx()][o.idx()] {
+            None => {
+                self.owner[t.idx()][o.idx()] = Some(stream);
+                true
+            }
+            Some(owner) => owner == stream,
+        }
+    }
+}
+
+/// Per-stream slot: the tables of one stream, stored in a small sorted
+/// vec — a handful of streams exist in practice, so a linear scan with
+/// a last-hit memo beats a `BTreeMap` on the `inc_stats` hot path
+/// (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+struct StreamSlot {
+    stream: StreamId,
+    stats: StatTable,
+    stats_pw: StatTable,
+    fail: FailTable,
+}
+
+/// The stat container attached to each cache (and mirrored at the GPU
+/// level as `Total_core_cache_stats`).
+#[derive(Debug, Clone)]
+pub struct CacheStats {
+    mode: StatMode,
+    /// `m_stats` / `m_stats_pw` / `m_fail_stats`, keyed by stream
+    /// (sorted ascending). In aggregate modes everything lands under
+    /// [`CacheStats::AGG_KEY`].
+    slots: Vec<StreamSlot>,
+    /// Index of the most recently touched slot (hot-path memo).
+    last_idx: usize,
+    guard: CycleGuard,
+    /// Increments dropped by the clean-mode guard (observability for
+    /// ABL-2; not part of the printed Accel-Sim output).
+    dropped: u64,
+}
+
+impl CacheStats {
+    /// Stream key used by the aggregate modes.
+    pub const AGG_KEY: StreamId = u64::MAX;
+
+    /// New container with the given semantics.
+    pub fn new(mode: StatMode) -> Self {
+        Self {
+            mode,
+            slots: Vec::new(),
+            last_idx: 0,
+            guard: CycleGuard::default(),
+            dropped: 0,
+        }
+    }
+
+    /// Index of `stream`'s slot, creating it if needed (kept sorted).
+    #[inline]
+    fn slot_idx(&mut self, stream: StreamId) -> usize {
+        if let Some(slot) = self.slots.get(self.last_idx) {
+            if slot.stream == stream {
+                return self.last_idx;
+            }
+        }
+        match self.slots.binary_search_by_key(&stream, |s| s.stream) {
+            Ok(i) => {
+                self.last_idx = i;
+                i
+            }
+            Err(i) => {
+                self.slots.insert(i, StreamSlot {
+                    stream,
+                    stats: StatTable::new(),
+                    stats_pw: StatTable::new(),
+                    fail: FailTable::new(),
+                });
+                self.last_idx = i;
+                i
+            }
+        }
+    }
+
+    #[inline]
+    fn find(&self, stream: StreamId) -> Option<&StreamSlot> {
+        self.slots
+            .binary_search_by_key(&stream, |s| s.stream)
+            .ok()
+            .map(|i| &self.slots[i])
+    }
+
+    /// Semantics in use.
+    pub fn mode(&self) -> StatMode {
+        self.mode
+    }
+
+    /// `inc_stats(type, outcome, streamID)` + `inc_stats_pw`.
+    #[inline]
+    pub fn inc(&mut self, t: AccessType, o: AccessOutcome,
+               stream: StreamId, cycle: Cycle) {
+        let key = match self.mode {
+            StatMode::PerStream => stream,
+            StatMode::AggregateExact => Self::AGG_KEY,
+            StatMode::AggregateBuggy => {
+                if !self.guard.admit(t, o, stream, cycle) {
+                    self.dropped += 1;
+                    return;
+                }
+                Self::AGG_KEY
+            }
+        };
+        let i = self.slot_idx(key);
+        self.slots[i].stats.inc(t, o);
+        self.slots[i].stats_pw.inc(t, o);
+    }
+
+    /// `inc_fail_stats(type, reason, streamID)`.
+    #[inline]
+    pub fn inc_fail(&mut self, t: AccessType, f: FailOutcome,
+                    stream: StreamId, _cycle: Cycle) {
+        let key = match self.mode {
+            StatMode::PerStream => stream,
+            _ => Self::AGG_KEY,
+        };
+        let i = self.slot_idx(key);
+        self.slots[i].fail.inc(t, f);
+    }
+
+    /// Cumulative count for one cell of one stream
+    /// (the patched `operator()(type, outcome, false, streamID)`).
+    pub fn get(&self, stream: StreamId, t: AccessType, o: AccessOutcome)
+        -> u64 {
+        self.find(stream).map_or(0, |s| s.stats.get(t, o))
+    }
+
+    /// Fail count for one cell of one stream.
+    pub fn get_fail(&self, stream: StreamId, t: AccessType, f: FailOutcome)
+        -> u64 {
+        self.find(stream).map_or(0, |s| s.fail.get(t, f))
+    }
+
+    /// Streams that have recorded any stat.
+    pub fn streams(&self) -> Vec<StreamId> {
+        self.slots.iter().map(|s| s.stream).collect()
+    }
+
+    /// Per-stream table (cumulative), if present.
+    pub fn stream_table(&self, stream: StreamId) -> Option<&StatTable> {
+        self.find(stream).map(|s| &s.stats)
+    }
+
+    /// Per-stream per-window table, if present.
+    pub fn stream_table_pw(&self, stream: StreamId) -> Option<&StatTable> {
+        self.find(stream).map(|s| &s.stats_pw)
+    }
+
+    /// Per-stream fail table, if present.
+    pub fn stream_fail_table(&self, stream: StreamId) -> Option<&FailTable> {
+        self.find(stream).map(|s| &s.fail)
+    }
+
+    /// Sum over all streams (what `clean` *should* report; equals the
+    /// single table in aggregate modes).
+    pub fn total_table(&self) -> StatTable {
+        let mut total = StatTable::new();
+        for s in &self.slots {
+            total.add(&s.stats);
+        }
+        total
+    }
+
+    /// Sum over all streams of the fail tables.
+    pub fn total_fail_table(&self) -> FailTable {
+        let mut total = FailTable::new();
+        for s in &self.slots {
+            total.add(&s.fail);
+        }
+        total
+    }
+
+    /// Increments lost to the clean-mode guard (0 in other modes).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Clear the per-window tables for `stream` — GPGPU-Sim clears
+    /// `m_stats_pw` after printing a kernel's stats; the patched version
+    /// clears only the exiting kernel's stream.
+    pub fn clear_pw(&mut self, stream: StreamId) {
+        match self.mode {
+            StatMode::PerStream => {
+                if let Ok(i) = self
+                    .slots
+                    .binary_search_by_key(&stream, |s| s.stream)
+                {
+                    self.slots[i].stats_pw.clear();
+                }
+            }
+            _ => {
+                // unpatched: every stream's window is wiped together
+                for s in &mut self.slots {
+                    s.stats_pw.clear();
+                }
+            }
+        }
+    }
+
+    /// Merge another container (e.g. per-core L1 stats into the GPU
+    /// total). Keeps per-stream keys.
+    pub fn merge(&mut self, other: &CacheStats) {
+        for o in &other.slots {
+            let i = self.slot_idx(o.stream);
+            self.slots[i].stats.add(&o.stats);
+            self.slots[i].stats_pw.add(&o.stats_pw);
+            self.slots[i].fail.add(&o.fail);
+        }
+        self.dropped += other.dropped;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GR: AccessType = AccessType::GlobalAccR;
+    const GW: AccessType = AccessType::GlobalAccW;
+    const HIT: AccessOutcome = AccessOutcome::Hit;
+    const MISS: AccessOutcome = AccessOutcome::Miss;
+
+    #[test]
+    fn per_stream_attributes_by_stream() {
+        let mut s = CacheStats::new(StatMode::PerStream);
+        s.inc(GR, HIT, 1, 100);
+        s.inc(GR, HIT, 2, 100);
+        s.inc(GR, MISS, 1, 101);
+        assert_eq!(s.get(1, GR, HIT), 1);
+        assert_eq!(s.get(2, GR, HIT), 1);
+        assert_eq!(s.get(1, GR, MISS), 1);
+        assert_eq!(s.get(2, GR, MISS), 0);
+        assert_eq!(s.streams(), vec![1, 2]);
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn aggregate_exact_sums_everything() {
+        let mut s = CacheStats::new(StatMode::AggregateExact);
+        s.inc(GR, HIT, 1, 100);
+        s.inc(GR, HIT, 2, 100); // same cycle, same cell: kept
+        assert_eq!(s.get(CacheStats::AGG_KEY, GR, HIT), 2);
+        assert_eq!(s.total_table().get(GR, HIT), 2);
+    }
+
+    #[test]
+    fn buggy_drops_same_cycle_cross_stream_collision() {
+        let mut s = CacheStats::new(StatMode::AggregateBuggy);
+        s.inc(GR, HIT, 1, 100);
+        s.inc(GR, HIT, 2, 100); // dropped: other stream, same cell+cycle
+        s.inc(GR, HIT, 2, 101); // new cycle: kept
+        assert_eq!(s.total_table().get(GR, HIT), 2);
+        assert_eq!(s.dropped(), 1);
+    }
+
+    #[test]
+    fn buggy_keeps_same_stream_same_cycle() {
+        let mut s = CacheStats::new(StatMode::AggregateBuggy);
+        s.inc(GR, HIT, 1, 100);
+        s.inc(GR, HIT, 1, 100); // same stream: kept
+        assert_eq!(s.total_table().get(GR, HIT), 2);
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn buggy_different_cells_dont_collide() {
+        let mut s = CacheStats::new(StatMode::AggregateBuggy);
+        s.inc(GR, HIT, 1, 100);
+        s.inc(GR, MISS, 2, 100); // different outcome cell: kept
+        s.inc(GW, HIT, 2, 100);  // different type cell: kept
+        assert_eq!(s.total_table().total(), 3);
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn per_stream_sum_equals_exact() {
+        // The paper's Fig. 2 invariant, micro version.
+        let mut tip = CacheStats::new(StatMode::PerStream);
+        let mut exact = CacheStats::new(StatMode::AggregateExact);
+        let events = [(1u64, GR, HIT, 10u64), (2, GR, HIT, 10),
+                      (3, GW, MISS, 10), (1, GR, HIT, 11),
+                      (2, GR, MISS, 11)];
+        for (stream, t, o, cyc) in events {
+            tip.inc(t, o, stream, cyc);
+            exact.inc(t, o, stream, cyc);
+        }
+        assert_eq!(tip.total_table(), exact.total_table());
+    }
+
+    #[test]
+    fn fail_stats_tracked_per_stream() {
+        let mut s = CacheStats::new(StatMode::PerStream);
+        s.inc_fail(GR, FailOutcome::MshrEntryFail, 5, 1);
+        s.inc_fail(GR, FailOutcome::MshrEntryFail, 5, 2);
+        assert_eq!(s.get_fail(5, GR, FailOutcome::MshrEntryFail), 2);
+        assert_eq!(s.get_fail(6, GR, FailOutcome::MshrEntryFail), 0);
+    }
+
+    #[test]
+    fn pw_clears_only_target_stream_when_per_stream() {
+        let mut s = CacheStats::new(StatMode::PerStream);
+        s.inc(GR, HIT, 1, 1);
+        s.inc(GR, HIT, 2, 1);
+        s.clear_pw(1);
+        assert_eq!(s.stream_table_pw(1).unwrap().total(), 0);
+        assert_eq!(s.stream_table_pw(2).unwrap().total(), 1);
+        // cumulative untouched
+        assert_eq!(s.get(1, GR, HIT), 1);
+    }
+
+    #[test]
+    fn pw_clears_all_streams_when_aggregate() {
+        let mut s = CacheStats::new(StatMode::AggregateExact);
+        s.inc(GR, HIT, 1, 1);
+        s.clear_pw(99); // any stream wipes the shared window
+        assert_eq!(
+            s.stream_table_pw(CacheStats::AGG_KEY).unwrap().total(), 0);
+    }
+
+    #[test]
+    fn merge_accumulates_per_stream() {
+        let mut a = CacheStats::new(StatMode::PerStream);
+        let mut b = CacheStats::new(StatMode::PerStream);
+        a.inc(GR, HIT, 1, 1);
+        b.inc(GR, HIT, 1, 2);
+        b.inc(GR, HIT, 2, 2);
+        a.merge(&b);
+        assert_eq!(a.get(1, GR, HIT), 2);
+        assert_eq!(a.get(2, GR, HIT), 1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Per-stream, per-kernel launch/exit cycle tracking — paper §3.2.
+//!
+//! Mirrors the structures added to `gpu-sim.h`:
+//!
+//! ```c++
+//! typedef struct { unsigned long long start_cycle, end_cycle; }
+//!     kernel_time_t;
+//! std::map<unsigned long long, std::map<unsigned, kernel_time_t>>
+//!     gpu_kernel_time;           // streamID -> uid -> window
+//! unsigned long long last_streamID;
+//! unsigned long long last_uid;
+//! ```
+//!
+//! Updated from `gpgpu_sim::launch` / `set_kernel_done` equivalents in
+//! [`crate::sim`], printed at the end of each kernel's statistics, and
+//! the data source for the timeline figures.
+
+use std::collections::BTreeMap;
+
+use crate::{Cycle, KernelUid, StreamId};
+
+/// `kernel_time_t`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelTime {
+    /// Cycle the kernel was launched on the GPU.
+    pub start_cycle: Cycle,
+    /// Cycle the kernel retired (0 while still running).
+    pub end_cycle: Cycle,
+}
+
+impl KernelTime {
+    /// Wall cycles, if finished.
+    pub fn duration(&self) -> Option<Cycle> {
+        (self.end_cycle >= self.start_cycle && self.end_cycle != 0)
+            .then(|| self.end_cycle - self.start_cycle)
+    }
+
+    /// Whether two kernel windows overlap in time (both finished).
+    pub fn overlaps(&self, other: &KernelTime) -> bool {
+        match (self.duration(), other.duration()) {
+            (Some(_), Some(_)) => {
+                self.start_cycle < other.end_cycle
+                    && other.start_cycle < self.end_cycle
+            }
+            _ => false,
+        }
+    }
+}
+
+/// `gpu_kernel_time` + the `last_*` bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct KernelTimeTracker {
+    /// streamID → uid → window.
+    pub per_stream: BTreeMap<StreamId, BTreeMap<KernelUid, KernelTime>>,
+    /// Stream of the most recently retired kernel.
+    pub last_stream_id: StreamId,
+    /// Uid of the most recently retired kernel.
+    pub last_uid: KernelUid,
+}
+
+impl KernelTimeTracker {
+    /// New, empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a launch (`gpgpu_sim::launch`).
+    pub fn record_launch(&mut self, stream: StreamId, uid: KernelUid,
+                         cycle: Cycle) {
+        self.per_stream.entry(stream).or_default().insert(
+            uid,
+            KernelTime { start_cycle: cycle, end_cycle: 0 },
+        );
+    }
+
+    /// Record retirement (`gpgpu_sim::set_kernel_done`).
+    pub fn record_done(&mut self, stream: StreamId, uid: KernelUid,
+                       cycle: Cycle) {
+        if let Some(k) = self
+            .per_stream
+            .get_mut(&stream)
+            .and_then(|m| m.get_mut(&uid))
+        {
+            k.end_cycle = cycle;
+        }
+        self.last_stream_id = stream;
+        self.last_uid = uid;
+    }
+
+    /// Window for one kernel.
+    pub fn get(&self, stream: StreamId, uid: KernelUid)
+        -> Option<KernelTime> {
+        self.per_stream.get(&stream).and_then(|m| m.get(&uid)).copied()
+    }
+
+    /// All finished kernels as `(stream, uid, window)`, launch order.
+    pub fn finished(&self) -> Vec<(StreamId, KernelUid, KernelTime)> {
+        let mut v: Vec<_> = self
+            .per_stream
+            .iter()
+            .flat_map(|(s, m)| {
+                m.iter().filter_map(move |(u, k)| {
+                    k.duration().map(|_| (*s, *u, *k))
+                })
+            })
+            .collect();
+        v.sort_by_key(|(_, u, _)| *u);
+        v
+    }
+
+    /// Number of pairs of kernels on *different* streams whose execution
+    /// windows overlap — the concurrency evidence of the paper's
+    /// timelines (0 in serialized mode).
+    pub fn cross_stream_overlaps(&self) -> usize {
+        let all = self.finished();
+        let mut n = 0;
+        for i in 0..all.len() {
+            for j in (i + 1)..all.len() {
+                if all[i].0 != all[j].0 && all[i].2.overlaps(&all[j].2) {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_then_done_roundtrip() {
+        let mut t = KernelTimeTracker::new();
+        t.record_launch(7, 1, 100);
+        assert_eq!(t.get(7, 1).unwrap().start_cycle, 100);
+        assert_eq!(t.get(7, 1).unwrap().duration(), None);
+        t.record_done(7, 1, 250);
+        assert_eq!(t.get(7, 1).unwrap().duration(), Some(150));
+        assert_eq!(t.last_stream_id, 7);
+        assert_eq!(t.last_uid, 1);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let a = KernelTime { start_cycle: 0, end_cycle: 100 };
+        let b = KernelTime { start_cycle: 50, end_cycle: 150 };
+        let c = KernelTime { start_cycle: 100, end_cycle: 200 };
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c)); // touching, not overlapping
+        let unfinished = KernelTime { start_cycle: 10, end_cycle: 0 };
+        assert!(!a.overlaps(&unfinished));
+    }
+
+    #[test]
+    fn cross_stream_overlap_count() {
+        let mut t = KernelTimeTracker::new();
+        // stream 1: [0,100); stream 2: [50,150) -> overlap
+        // stream 1: [100,200) vs stream 2 [50,150) -> overlap
+        t.record_launch(1, 1, 0);
+        t.record_done(1, 1, 100);
+        t.record_launch(2, 2, 50);
+        t.record_done(2, 2, 150);
+        t.record_launch(1, 3, 100);
+        t.record_done(1, 3, 200);
+        assert_eq!(t.cross_stream_overlaps(), 2);
+    }
+
+    #[test]
+    fn serialized_windows_have_no_overlap() {
+        let mut t = KernelTimeTracker::new();
+        for (i, s) in [1u64, 2, 3, 4].iter().enumerate() {
+            let base = i as u64 * 100;
+            t.record_launch(*s, i as u32 + 1, base);
+            t.record_done(*s, i as u32 + 1, base + 100);
+        }
+        assert_eq!(t.cross_stream_overlaps(), 0);
+    }
+
+    #[test]
+    fn finished_sorted_by_uid() {
+        let mut t = KernelTimeTracker::new();
+        t.record_launch(2, 2, 10);
+        t.record_done(2, 2, 20);
+        t.record_launch(1, 1, 0);
+        t.record_done(1, 1, 30);
+        let f = t.finished();
+        assert_eq!(f.iter().map(|(_, u, _)| *u).collect::<Vec<_>>(),
+                   vec![1, 2]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Per-stream statistics — the paper's contribution (§3).
+//!
+//! * [`table`] — dense `(type, outcome)` count tables (the inner
+//!   `vector<vector<u64>>` of GPGPU-Sim).
+//! * [`cache_stats`] — [`cache_stats::CacheStats`], the per-stream map
+//!   keyed by `streamID` with the three stat modes (`tip` / `clean` /
+//!   `exact`) the validation harness compares.
+//! * [`kernel_time`] — per-stream per-kernel launch/exit cycles (§3.2).
+//! * [`print`] — Accel-Sim-format breakdown printers + CSV export (§4).
+//! * [`power`] — per-stream energy accounting (the §6 `power_stats.cc`
+//!   extension the paper leaves as future work).
+
+pub mod cache_stats;
+pub mod export;
+pub mod kernel_time;
+pub mod power;
+pub mod print;
+pub mod table;
+
+pub use cache_stats::{CacheStats, StatMode};
+pub use kernel_time::{KernelTime, KernelTimeTracker};
+pub use power::{EnergyModel, PowerStats};
+pub use table::{FailTable, StatTable};

@@ -1,0 +1,205 @@
+//! Accel-Sim-format stat printers — paper §3.1 (print changes) and §4.
+//!
+//! The patched `print_stats(FILE*, unsigned long long streamID, ...)`
+//! prints only the exiting kernel's stream (the unpatched version dumped
+//! every stream's stats after *any* kernel exit). Output format follows
+//! Accel-Sim's `Total_core_cache_stats_breakdown` / `L2_cache_stats
+//! breakdown` lines so downstream log scrapers (like the paper's
+//! `graph.py`) keep working.
+
+use std::fmt::Write as _;
+
+use crate::cache::access::{AccessOutcome, AccessType};
+use crate::stats::cache_stats::{CacheStats, StatMode};
+use crate::stats::kernel_time::KernelTimeTracker;
+use crate::StreamId;
+
+/// Render one stream's breakdown of `stats` under `cache_name`, matching
+/// the `<name>[<TYPE>][<OUTCOME>] = <count>` Accel-Sim line format.
+/// In per-stream mode the requested `stream` is printed; aggregate modes
+/// ignore `stream` (they only have the combined table) — exactly the
+/// unpatched behaviour the paper replaces.
+pub fn print_stats(stats: &CacheStats, stream: StreamId,
+                   cache_name: &str) -> String {
+    let mut out = String::new();
+    match stats.mode() {
+        StatMode::PerStream => {
+            let _ = writeln!(out, "{cache_name} (stream {stream}):");
+            render_stream(&mut out, stats, stream, cache_name);
+        }
+        _ => {
+            let _ = writeln!(out, "{cache_name} (all streams):");
+            render_stream(&mut out, stats, CacheStats::AGG_KEY, cache_name);
+        }
+    }
+    out
+}
+
+/// Render every stream's breakdown (end-of-simulation summary).
+pub fn print_all_streams(stats: &CacheStats, cache_name: &str) -> String {
+    let mut out = String::new();
+    for stream in stats.streams() {
+        let label = if stream == CacheStats::AGG_KEY {
+            format!("{cache_name} (all streams):")
+        } else {
+            format!("{cache_name} (stream {stream}):")
+        };
+        let _ = writeln!(out, "{label}");
+        render_stream(&mut out, stats, stream, cache_name);
+    }
+    out
+}
+
+fn render_stream(out: &mut String, stats: &CacheStats, stream: StreamId,
+                 cache_name: &str) {
+    let Some(table) = stats.stream_table(stream) else {
+        let _ = writeln!(out, "\t{cache_name}[NO DATA]");
+        return;
+    };
+    for (t, o, c) in table.iter_nonzero() {
+        let _ = writeln!(
+            out, "\t{cache_name}[{}][{}] = {c}", t.name(), o.name());
+    }
+    if let Some(fail) = stats.stream_fail_table(stream) {
+        for (t, f, c) in fail.iter_nonzero() {
+            let _ = writeln!(
+                out, "\t{cache_name}_fail[{}][{}] = {c}",
+                t.name(), f.name());
+        }
+    }
+}
+
+/// Paper §3.2: the per-kernel time line printed "at the end of each
+/// kernel's statistics".
+pub fn print_kernel_time(times: &KernelTimeTracker, stream: StreamId,
+                         uid: crate::KernelUid) -> String {
+    match times.get(stream, uid) {
+        Some(k) if k.duration().is_some() => format!(
+            "kernel uid {uid} on stream {stream}: start_cycle = {}, \
+             end_cycle = {}, duration = {} cycles\n",
+            k.start_cycle, k.end_cycle, k.duration().unwrap()),
+        Some(k) => format!(
+            "kernel uid {uid} on stream {stream}: start_cycle = {}, \
+             still running\n", k.start_cycle),
+        None => format!(
+            "kernel uid {uid} on stream {stream}: never launched\n"),
+    }
+}
+
+/// CSV export of a stat container: `stream,access_type,outcome,count`.
+/// (The paper's `graph.py` replacement — see `harness::figure`.)
+pub fn to_csv(stats: &CacheStats) -> String {
+    let mut out = String::from("stream,access_type,outcome,count\n");
+    for stream in stats.streams() {
+        let label = if stream == CacheStats::AGG_KEY {
+            "all".to_string()
+        } else {
+            stream.to_string()
+        };
+        if let Some(t) = stats.stream_table(stream) {
+            for (ty, o, c) in t.iter_nonzero() {
+                let _ = writeln!(out, "{label},{},{},{c}",
+                                 ty.name(), o.name());
+            }
+        }
+    }
+    out
+}
+
+/// Full stat-cube dump (incl. zero cells) for one stream, as the dense
+/// `counts[type][outcome]` rows — used by tests comparing with the
+/// Pallas aggregation artifact.
+pub fn dense_rows(stats: &CacheStats, stream: StreamId) -> Vec<Vec<u64>> {
+    let table = stats.stream_table(stream);
+    AccessType::ALL
+        .iter()
+        .map(|t| {
+            AccessOutcome::ALL
+                .iter()
+                .map(|o| table.map_or(0, |tb| tb.get(*t, *o)))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::access::FailOutcome;
+
+    fn sample() -> CacheStats {
+        let mut s = CacheStats::new(StatMode::PerStream);
+        s.inc(AccessType::GlobalAccR, AccessOutcome::Hit, 1, 10);
+        s.inc(AccessType::GlobalAccR, AccessOutcome::Miss, 1, 11);
+        s.inc(AccessType::GlobalAccW, AccessOutcome::Hit, 2, 12);
+        s.inc_fail(AccessType::GlobalAccR, FailOutcome::MissQueueFull, 1, 13);
+        s
+    }
+
+    #[test]
+    fn print_stats_selects_single_stream() {
+        let s = sample();
+        let out = print_stats(&s, 1, "L2_cache_stats_breakdown");
+        assert!(out.contains("stream 1"));
+        assert!(out.contains(
+            "L2_cache_stats_breakdown[GLOBAL_ACC_R][HIT] = 1"));
+        assert!(out.contains(
+            "L2_cache_stats_breakdown[GLOBAL_ACC_R][MISS] = 1"));
+        // the other stream's rows must NOT leak (the paper's fix)
+        assert!(!out.contains("GLOBAL_ACC_W"));
+        // fail stats included
+        assert!(out.contains(
+            "L2_cache_stats_breakdown_fail[GLOBAL_ACC_R][MISS_QUEUE_FULL] \
+             = 1"));
+    }
+
+    #[test]
+    fn aggregate_mode_prints_combined() {
+        let mut s = CacheStats::new(StatMode::AggregateExact);
+        s.inc(AccessType::GlobalAccR, AccessOutcome::Hit, 1, 10);
+        s.inc(AccessType::GlobalAccW, AccessOutcome::Hit, 2, 10);
+        let out = print_stats(&s, 1, "Total_core_cache_stats_breakdown");
+        assert!(out.contains("all streams"));
+        assert!(out.contains("[GLOBAL_ACC_R][HIT] = 1"));
+        assert!(out.contains("[GLOBAL_ACC_W][HIT] = 1"));
+    }
+
+    #[test]
+    fn print_all_streams_lists_each() {
+        let s = sample();
+        let out = print_all_streams(&s, "X");
+        assert!(out.contains("stream 1"));
+        assert!(out.contains("stream 2"));
+    }
+
+    #[test]
+    fn csv_rows() {
+        let s = sample();
+        let csv = to_csv(&s);
+        assert!(csv.starts_with("stream,access_type,outcome,count\n"));
+        assert!(csv.contains("1,GLOBAL_ACC_R,HIT,1"));
+        assert!(csv.contains("2,GLOBAL_ACC_W,HIT,1"));
+    }
+
+    #[test]
+    fn dense_rows_shape_matches_python_cube() {
+        let s = sample();
+        let rows = dense_rows(&s, 1);
+        assert_eq!(rows.len(), AccessType::COUNT);
+        assert_eq!(rows[0].len(), AccessOutcome::COUNT);
+        assert_eq!(rows[AccessType::GlobalAccR.idx()]
+                       [AccessOutcome::Hit.idx()], 1);
+    }
+
+    #[test]
+    fn kernel_time_line() {
+        let mut t = KernelTimeTracker::new();
+        t.record_launch(3, 9, 100);
+        t.record_done(3, 9, 400);
+        let line = print_kernel_time(&t, 3, 9);
+        assert!(line.contains("start_cycle = 100"));
+        assert!(line.contains("end_cycle = 400"));
+        assert!(line.contains("duration = 300"));
+        assert!(print_kernel_time(&t, 3, 10).contains("never launched"));
+    }
+}

@@ -1,0 +1,226 @@
+//! Dense `(access_type, outcome)` stat tables.
+//!
+//! The inner `vector<vector<unsigned long long>>` of GPGPU-Sim's
+//! `cache_stats`, as a fixed-size 2-D array (the dimensions are the enum
+//! counts, known at compile time — this is also what makes the per-stream
+//! hot path cheap, see `cache_stats.rs`).
+
+use crate::cache::access::{AccessOutcome, AccessType, FailOutcome};
+
+/// `counts[access_type][access_outcome]`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StatTable {
+    counts: [[u64; AccessOutcome::COUNT]; AccessType::COUNT],
+}
+
+impl StatTable {
+    /// Zeroed table.
+    pub const fn new() -> Self {
+        Self { counts: [[0; AccessOutcome::COUNT]; AccessType::COUNT] }
+    }
+
+    /// Increment one cell.
+    #[inline]
+    pub fn inc(&mut self, t: AccessType, o: AccessOutcome) {
+        self.counts[t.idx()][o.idx()] += 1;
+    }
+
+    /// Read one cell.
+    #[inline]
+    pub fn get(&self, t: AccessType, o: AccessOutcome) -> u64 {
+        self.counts[t.idx()][o.idx()]
+    }
+
+    /// Add another table cell-wise (used for Σ-over-streams checks).
+    pub fn add(&mut self, other: &StatTable) {
+        for t in 0..AccessType::COUNT {
+            for o in 0..AccessOutcome::COUNT {
+                self.counts[t][o] += other.counts[t][o];
+            }
+        }
+    }
+
+    /// Sum of every cell.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().flatten().sum()
+    }
+
+    /// Sum over outcomes for one access type.
+    pub fn total_for_type(&self, t: AccessType) -> u64 {
+        self.counts[t.idx()].iter().sum()
+    }
+
+    /// Sum over *serviced* outcomes for one access type —
+    /// `RESERVATION_FAIL` is a structural replay, not an access, so
+    /// deterministic-count validation (paper §5.1) excludes it.
+    pub fn total_serviced_for_type(&self, t: AccessType) -> u64 {
+        AccessOutcome::ALL
+            .iter()
+            .filter(|o| o.is_serviced())
+            .map(|o| self.get(t, *o))
+            .sum()
+    }
+
+    /// Sum over types for one outcome.
+    pub fn total_for_outcome(&self, o: AccessOutcome) -> u64 {
+        self.counts.iter().map(|row| row[o.idx()]).sum()
+    }
+
+    /// Reset all cells to zero (per-window stats).
+    pub fn clear(&mut self) {
+        self.counts = [[0; AccessOutcome::COUNT]; AccessType::COUNT];
+    }
+
+    /// True if every cell is zero.
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().flatten().all(|&c| c == 0)
+    }
+
+    /// Iterate non-zero cells as `(type, outcome, count)`.
+    pub fn iter_nonzero(
+        &self,
+    ) -> impl Iterator<Item = (AccessType, AccessOutcome, u64)> + '_ {
+        AccessType::ALL.into_iter().flat_map(move |t| {
+            AccessOutcome::ALL.into_iter().filter_map(move |o| {
+                let c = self.get(t, o);
+                (c > 0).then_some((t, o, c))
+            })
+        })
+    }
+
+    /// Cell-wise `self >= other`.
+    pub fn dominates(&self, other: &StatTable) -> bool {
+        for t in 0..AccessType::COUNT {
+            for o in 0..AccessOutcome::COUNT {
+                if self.counts[t][o] < other.counts[t][o] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// `counts[access_type][fail_reason]` — the `m_fail_stats` analogue.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FailTable {
+    counts: [[u64; FailOutcome::COUNT]; AccessType::COUNT],
+}
+
+impl FailTable {
+    /// Zeroed table.
+    pub const fn new() -> Self {
+        Self { counts: [[0; FailOutcome::COUNT]; AccessType::COUNT] }
+    }
+
+    /// Increment one cell.
+    #[inline]
+    pub fn inc(&mut self, t: AccessType, f: FailOutcome) {
+        self.counts[t.idx()][f.idx()] += 1;
+    }
+
+    /// Read one cell.
+    #[inline]
+    pub fn get(&self, t: AccessType, f: FailOutcome) -> u64 {
+        self.counts[t.idx()][f.idx()]
+    }
+
+    /// Add another table cell-wise.
+    pub fn add(&mut self, other: &FailTable) {
+        for t in 0..AccessType::COUNT {
+            for f in 0..FailOutcome::COUNT {
+                self.counts[t][f] += other.counts[t][f];
+            }
+        }
+    }
+
+    /// Sum of every cell.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().flatten().sum()
+    }
+
+    /// Reset to zero.
+    pub fn clear(&mut self) {
+        self.counts = [[0; FailOutcome::COUNT]; AccessType::COUNT];
+    }
+
+    /// Iterate non-zero cells.
+    pub fn iter_nonzero(
+        &self,
+    ) -> impl Iterator<Item = (AccessType, FailOutcome, u64)> + '_ {
+        AccessType::ALL.into_iter().flat_map(move |t| {
+            FailOutcome::ALL.into_iter().filter_map(move |f| {
+                let c = self.get(t, f);
+                (c > 0).then_some((t, f, c))
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_get_total() {
+        let mut t = StatTable::new();
+        t.inc(AccessType::GlobalAccR, AccessOutcome::Hit);
+        t.inc(AccessType::GlobalAccR, AccessOutcome::Hit);
+        t.inc(AccessType::GlobalAccW, AccessOutcome::Miss);
+        assert_eq!(t.get(AccessType::GlobalAccR, AccessOutcome::Hit), 2);
+        assert_eq!(t.get(AccessType::GlobalAccW, AccessOutcome::Miss), 1);
+        assert_eq!(t.get(AccessType::GlobalAccW, AccessOutcome::Hit), 0);
+        assert_eq!(t.total(), 3);
+        assert_eq!(t.total_for_type(AccessType::GlobalAccR), 2);
+        assert_eq!(t.total_for_outcome(AccessOutcome::Miss), 1);
+    }
+
+    #[test]
+    fn add_is_cellwise() {
+        let mut a = StatTable::new();
+        let mut b = StatTable::new();
+        a.inc(AccessType::GlobalAccR, AccessOutcome::Hit);
+        b.inc(AccessType::GlobalAccR, AccessOutcome::Hit);
+        b.inc(AccessType::InstAccR, AccessOutcome::Miss);
+        a.add(&b);
+        assert_eq!(a.get(AccessType::GlobalAccR, AccessOutcome::Hit), 2);
+        assert_eq!(a.get(AccessType::InstAccR, AccessOutcome::Miss), 1);
+    }
+
+    #[test]
+    fn iter_nonzero_only_lists_nonzero() {
+        let mut t = StatTable::new();
+        t.inc(AccessType::ConstAccR, AccessOutcome::MshrHit);
+        let cells: Vec<_> = t.iter_nonzero().collect();
+        assert_eq!(cells,
+                   vec![(AccessType::ConstAccR, AccessOutcome::MshrHit, 1)]);
+    }
+
+    #[test]
+    fn dominates_and_clear() {
+        let mut a = StatTable::new();
+        let mut b = StatTable::new();
+        a.inc(AccessType::GlobalAccR, AccessOutcome::Hit);
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        b.inc(AccessType::GlobalAccR, AccessOutcome::Hit);
+        assert!(a.dominates(&b) && b.dominates(&a));
+        a.clear();
+        assert!(a.is_empty());
+        assert!(!b.dominates(&a) || a.total() == 0);
+    }
+
+    #[test]
+    fn fail_table_basics() {
+        let mut f = FailTable::new();
+        f.inc(AccessType::GlobalAccR, FailOutcome::MshrEntryFail);
+        f.inc(AccessType::GlobalAccR, FailOutcome::MshrEntryFail);
+        assert_eq!(f.get(AccessType::GlobalAccR, FailOutcome::MshrEntryFail),
+                   2);
+        assert_eq!(f.total(), 2);
+        let cells: Vec<_> = f.iter_nonzero().collect();
+        assert_eq!(cells.len(), 1);
+        f.clear();
+        assert_eq!(f.total(), 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Stream table and launch gate.
+//!
+//! Reproduces the launch loop of Accel-Sim's `gpu-simulator/main.cc`:
+//! a kernel may launch iff its stream has no kernel already running
+//! (`busy_streams` scan) and the GPU can start one. The paper's §5.1
+//! serialization patch strengthens the condition to
+//! `busy_streams.size() == 0` — i.e. *no* stream busy — which we expose
+//! as [`LaunchGate::Serialized`]; Accel-Sim's stock behaviour is
+//! [`LaunchGate::Concurrent`]. Within a stream, launch order (trace
+//! order) is preserved — CUDA stream semantics.
+
+use std::collections::BTreeSet;
+
+use crate::{KernelUid, StreamId};
+
+/// Launch gating policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchGate {
+    /// One kernel per stream may run (stock Accel-Sim).
+    Concurrent,
+    /// A kernel may launch only when no stream is busy (the paper's
+    /// `tip_serialized` patch).
+    Serialized,
+}
+
+/// Tracks which streams are busy (`busy_streams` in main.cc).
+#[derive(Debug, Default)]
+pub struct StreamTable {
+    busy: BTreeSet<StreamId>,
+    /// (stream, uid) of running kernels, for bookkeeping and asserts.
+    running: Vec<(StreamId, KernelUid)>,
+}
+
+impl StreamTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether `k` may launch under `gate`.
+    pub fn can_launch(&self, gate: LaunchGate, stream: StreamId) -> bool {
+        match gate {
+            LaunchGate::Concurrent => !self.busy.contains(&stream),
+            LaunchGate::Serialized => self.busy.is_empty(),
+        }
+    }
+
+    /// Mark a kernel launched (`busy_streams.push_back`).
+    pub fn launch(&mut self, stream: StreamId, uid: KernelUid) {
+        debug_assert!(!self.busy.contains(&stream),
+                      "stream {stream} double-launch");
+        self.busy.insert(stream);
+        self.running.push((stream, uid));
+    }
+
+    /// Mark a kernel finished; frees its stream.
+    pub fn finish(&mut self, stream: StreamId, uid: KernelUid) {
+        self.busy.remove(&stream);
+        self.running.retain(|&(s, u)| !(s == stream && u == uid));
+    }
+
+    /// Streams currently busy.
+    pub fn busy_streams(&self) -> Vec<StreamId> {
+        self.busy.iter().copied().collect()
+    }
+
+    /// Number of kernels in flight.
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// True if nothing is running.
+    pub fn idle(&self) -> bool {
+        self.running.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_gate_per_stream() {
+        let mut t = StreamTable::new();
+        assert!(t.can_launch(LaunchGate::Concurrent, 1));
+        t.launch(1, 10);
+        // same stream blocked, other stream free
+        assert!(!t.can_launch(LaunchGate::Concurrent, 1));
+        assert!(t.can_launch(LaunchGate::Concurrent, 2));
+        t.launch(2, 11);
+        assert_eq!(t.busy_streams(), vec![1, 2]);
+        assert_eq!(t.running_count(), 2);
+        t.finish(1, 10);
+        assert!(t.can_launch(LaunchGate::Concurrent, 1));
+        assert!(!t.idle());
+        t.finish(2, 11);
+        assert!(t.idle());
+    }
+
+    #[test]
+    fn serialized_gate_blocks_everything() {
+        let mut t = StreamTable::new();
+        assert!(t.can_launch(LaunchGate::Serialized, 1));
+        t.launch(1, 10);
+        // the paper's patch: busy_streams.size() == 0 required
+        assert!(!t.can_launch(LaunchGate::Serialized, 2));
+        assert!(!t.can_launch(LaunchGate::Serialized, 1));
+        t.finish(1, 10);
+        assert!(t.can_launch(LaunchGate::Serialized, 2));
+    }
+
+    #[test]
+    fn finish_only_removes_matching_uid() {
+        let mut t = StreamTable::new();
+        t.launch(1, 10);
+        t.finish(1, 99); // wrong uid: stream freed (busy is by stream)...
+        // ...but the running list still holds (1,10)
+        assert_eq!(t.running_count(), 1);
+        t.finish(1, 10);
+        assert_eq!(t.running_count(), 0);
+    }
+
+    #[test]
+    fn property_gate_invariants() {
+        use crate::util::proptest_lite::{default_cases, run_cases};
+        run_cases("stream-gate", 0xBEEF, default_cases(), |g| {
+            let mut t = StreamTable::new();
+            let mut uid = 0;
+            for _ in 0..g.range(1, 50) {
+                let stream = g.below(4);
+                if t.can_launch(LaunchGate::Concurrent, stream) {
+                    uid += 1;
+                    t.launch(stream, uid);
+                }
+                if g.chance(0.4) {
+                    if let Some(&(s, u)) =
+                        t.running.iter().min_by_key(|_| g.u64()) {
+                        t.finish(s, u);
+                    }
+                }
+                // Invariant 1: busy set == set of running streams
+                let mut running_streams: Vec<_> =
+                    t.running.iter().map(|&(s, _)| s).collect();
+                running_streams.sort_unstable();
+                running_streams.dedup();
+                assert_eq!(t.busy_streams(), running_streams);
+                // Invariant 2: at most one kernel per stream
+                let mut by_stream: Vec<_> =
+                    t.running.iter().map(|&(s, _)| s).collect();
+                by_stream.sort_unstable();
+                let len_before = by_stream.len();
+                by_stream.dedup();
+                assert_eq!(by_stream.len(), len_before,
+                           "two kernels on one stream");
+                // Invariant 3: serialized gate implies idle
+                for s in 0..4 {
+                    if t.can_launch(LaunchGate::Serialized, s) {
+                        assert!(t.idle());
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,126 @@
+//! Per-stream kernel timelines — the timing diagrams of the paper's
+//! Figs. 2–5, rendered as ASCII Gantt charts and CSV.
+//!
+//! Data comes straight from [`crate::stats::KernelTimeTracker`]
+//! (`gpu_kernel_time`), i.e. the §3.2 structures; the renderer is the
+//! `graph.py` replacement for the timeline panels.
+
+use std::fmt::Write as _;
+
+use crate::stats::KernelTimeTracker;
+
+/// Render one row per stream; each kernel is a `[uid###]` bar scaled to
+/// `width` characters over the full simulated interval.
+pub fn render_gantt(t: &KernelTimeTracker, width: usize) -> String {
+    let finished = t.finished();
+    let Some(end) = finished.iter().map(|(_, _, k)| k.end_cycle).max()
+    else {
+        return "(no finished kernels)\n".to_string();
+    };
+    let start = finished
+        .iter()
+        .map(|(_, _, k)| k.start_cycle)
+        .min()
+        .unwrap_or(0);
+    let span = (end - start).max(1);
+    let scale = |c: u64| -> usize {
+        (((c - start) as f64 / span as f64) * (width as f64 - 1.0)).round()
+            as usize
+    };
+
+    let mut out = String::new();
+    let _ = writeln!(out, "cycles {start}..{end} ({span} total)");
+    let mut streams: Vec<_> = t.per_stream.keys().copied().collect();
+    streams.sort_unstable();
+    for s in streams {
+        let mut row = vec![b'.'; width];
+        for (stream, uid, k) in &finished {
+            if *stream != s {
+                continue;
+            }
+            let a = scale(k.start_cycle);
+            let b = scale(k.end_cycle).max(a + 1).min(width);
+            for (i, cell) in row[a..b].iter_mut().enumerate() {
+                *cell = if i == 0 {
+                    b'['
+                } else if i == b - a - 1 {
+                    b']'
+                } else {
+                    b'#'
+                };
+            }
+            // stamp the uid into the bar when it fits
+            let label = format!("k{uid}");
+            if b - a > label.len() + 1 {
+                row[a + 1..a + 1 + label.len()]
+                    .copy_from_slice(label.as_bytes());
+            }
+        }
+        let _ = writeln!(out, "stream {s:>3} |{}|",
+                         String::from_utf8_lossy(&row));
+    }
+    let overlaps = t.cross_stream_overlaps();
+    let _ = writeln!(out, "cross-stream overlapping kernel pairs: \
+                          {overlaps}");
+    out
+}
+
+/// CSV export: `stream,uid,start_cycle,end_cycle,duration`.
+pub fn to_csv(t: &KernelTimeTracker) -> String {
+    let mut out = String::from("stream,uid,start_cycle,end_cycle,duration\n");
+    for (stream, uid, k) in t.finished() {
+        let _ = writeln!(out, "{stream},{uid},{},{},{}",
+                         k.start_cycle, k.end_cycle,
+                         k.duration().unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker() -> KernelTimeTracker {
+        let mut t = KernelTimeTracker::new();
+        t.record_launch(0, 1, 0);
+        t.record_done(0, 1, 500);
+        t.record_launch(1, 2, 100);
+        t.record_done(1, 2, 600);
+        t.record_launch(0, 3, 500);
+        t.record_done(0, 3, 1000);
+        t
+    }
+
+    #[test]
+    fn gantt_has_one_row_per_stream() {
+        let g = render_gantt(&tracker(), 60);
+        assert!(g.contains("stream   0 |"));
+        assert!(g.contains("stream   1 |"));
+        assert!(g.contains("k1"));
+        assert!(g.contains("k3"));
+        assert!(g.contains("overlapping kernel pairs: 2"));
+    }
+
+    #[test]
+    fn gantt_empty_tracker() {
+        let t = KernelTimeTracker::new();
+        assert!(render_gantt(&t, 40).contains("no finished kernels"));
+    }
+
+    #[test]
+    fn csv_rows_and_duration() {
+        let csv = to_csv(&tracker());
+        assert!(csv.contains("0,1,0,500,500"));
+        assert!(csv.contains("1,2,100,600,500"));
+        assert!(csv.contains("0,3,500,1000,500"));
+    }
+
+    #[test]
+    fn bars_scale_within_width() {
+        let g = render_gantt(&tracker(), 40);
+        for line in g.lines().filter(|l| l.starts_with("stream")) {
+            let bar = line.split('|').nth(1).unwrap();
+            assert_eq!(bar.len(), 40);
+        }
+    }
+}

@@ -1,0 +1,427 @@
+//! Trace (de)serialization — the `kernelslist.g` / `.traceg` analogue.
+//!
+//! Command list format (one command per line, `#` comments):
+//!
+//! ```text
+//! MemcpyHtoD,0x00007f0000000000,4194304
+//! kernel-1.traceg
+//! kernel-2.traceg
+//! ```
+//!
+//! Kernel trace format (header then per-TB, per-warp op lines):
+//!
+//! ```text
+//! -kernel name = saxpy
+//! -kernel id = 1
+//! -grid dim = (4096,1,1)
+//! -block dim = (256,1,1)
+//! -cuda stream id = 0
+//! -shmem = 0
+//! #BEGIN_TB 0
+//! #warp 0
+//! mem R global 4 0x7f0000000000 4 0xffffffff cg=0
+//! alu 2
+//! mem W global 4 0x7f0000100000 4 0xffffffff cg=0
+//! #END_TB
+//! ```
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{
+    Dim3, KernelTrace, MemInstr, MemSpace, TbTrace, TraceCommand, TraceOp,
+    Workload,
+};
+
+// ---------------------------------------------------------------------------
+// command list
+// ---------------------------------------------------------------------------
+
+/// Render a command list.
+pub fn write_commands(cmds: &[TraceCommand]) -> String {
+    let mut out = String::new();
+    for c in cmds {
+        match c {
+            TraceCommand::MemcpyHtoD { dst, bytes } => {
+                let _ = writeln!(out, "MemcpyHtoD,{dst:#x},{bytes}");
+            }
+            TraceCommand::Kernel { file } => {
+                let _ = writeln!(out, "{file}");
+            }
+        }
+    }
+    out
+}
+
+/// Parse a command list.
+pub fn parse_commands(text: &str) -> Result<Vec<TraceCommand>> {
+    let mut cmds = Vec::new();
+    for (n, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("MemcpyHtoD,") {
+            let (dst, bytes) = rest
+                .split_once(',')
+                .with_context(|| format!("line {}: bad memcpy", n + 1))?;
+            cmds.push(TraceCommand::MemcpyHtoD {
+                dst: parse_u64(dst.trim())?,
+                bytes: bytes.trim().parse()?,
+            });
+        } else {
+            cmds.push(TraceCommand::Kernel { file: line.to_string() });
+        }
+    }
+    Ok(cmds)
+}
+
+fn parse_u64(s: &str) -> Result<u64> {
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).context("hex literal")
+    } else {
+        s.parse().context("decimal literal")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// kernel trace
+// ---------------------------------------------------------------------------
+
+/// Render one kernel trace.
+pub fn write_kernel(k: &KernelTrace) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "-kernel name = {}", k.name);
+    let _ = writeln!(out, "-kernel id = {}", k.kernel_id);
+    let _ = writeln!(out, "-grid dim = ({},{},{})",
+                     k.grid.x, k.grid.y, k.grid.z);
+    let _ = writeln!(out, "-block dim = ({},{},{})",
+                     k.block.x, k.block.y, k.block.z);
+    let _ = writeln!(out, "-cuda stream id = {}", k.stream_id);
+    let _ = writeln!(out, "-shmem = {}", k.shared_mem_bytes);
+    for (i, tb) in k.tbs.iter().enumerate() {
+        let _ = writeln!(out, "#BEGIN_TB {i}");
+        for (w, ops) in tb.warps.iter().enumerate() {
+            let _ = writeln!(out, "#warp {w}");
+            for op in ops {
+                match op {
+                    TraceOp::Alu { count } => {
+                        let _ = writeln!(out, "alu {count}");
+                    }
+                    TraceOp::Mem(m) => {
+                        let _ = writeln!(
+                            out,
+                            "mem {} {} {} {:#x} {} {:#010x} cg={}",
+                            if m.is_write { "W" } else { "R" },
+                            m.space.token(),
+                            m.size,
+                            m.base_addr,
+                            m.stride,
+                            m.active_mask,
+                            m.l1_bypass as u8,
+                        );
+                    }
+                }
+            }
+        }
+        let _ = writeln!(out, "#END_TB");
+    }
+    out
+}
+
+/// Parse one kernel trace.
+pub fn parse_kernel(text: &str) -> Result<KernelTrace> {
+    let mut name = None;
+    let mut kernel_id = None;
+    let mut grid = None;
+    let mut block = None;
+    let mut stream_id = None;
+    let mut shmem = 0u32;
+    let mut tbs: Vec<TbTrace> = Vec::new();
+    let mut cur_tb: Option<TbTrace> = None;
+    let mut pc = 0u32;
+
+    for (n, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let err = |msg: &str| format!("trace line {}: {msg}", n + 1);
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('-') {
+            let (k, v) = rest
+                .split_once('=')
+                .with_context(|| err("header missing '='"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "kernel name" => name = Some(v.to_string()),
+                "kernel id" => kernel_id = Some(v.parse()?),
+                "grid dim" => grid = Some(parse_dim3(v)?),
+                "block dim" => block = Some(parse_dim3(v)?),
+                "cuda stream id" => stream_id = Some(v.parse()?),
+                "shmem" => shmem = v.parse()?,
+                other => bail!(err(&format!("unknown header '{other}'"))),
+            }
+        } else if let Some(_idx) = line.strip_prefix("#BEGIN_TB") {
+            if cur_tb.is_some() {
+                bail!(err("nested BEGIN_TB"));
+            }
+            cur_tb = Some(TbTrace::default());
+        } else if line == "#END_TB" {
+            tbs.push(cur_tb.take().with_context(|| err("stray END_TB"))?);
+        } else if line.strip_prefix("#warp").is_some() {
+            cur_tb
+                .as_mut()
+                .with_context(|| err("warp outside TB"))?
+                .warps
+                .push(Vec::new());
+        } else if let Some(rest) = line.strip_prefix("alu ") {
+            let ops = &mut cur_tb
+                .as_mut()
+                .and_then(|tb| tb.warps.last_mut())
+                .with_context(|| err("op outside warp"))?;
+            ops.push(TraceOp::Alu { count: rest.trim().parse()? });
+        } else if let Some(rest) = line.strip_prefix("mem ") {
+            let f: Vec<&str> = rest.split_whitespace().collect();
+            if f.len() != 7 {
+                bail!(err("mem line needs 7 fields: \
+                           dir space size base stride mask cg="));
+            }
+            let is_write = match f[0] {
+                "R" => false,
+                "W" => true,
+                _ => bail!(err("mem dir must be R or W")),
+            };
+            let space = MemSpace::from_token(f[1])
+                .with_context(|| err("bad mem space"))?;
+            let l1_bypass = match f[6] {
+                "cg=0" => false,
+                "cg=1" => true,
+                _ => bail!(err("last mem field must be cg=0|1")),
+            };
+            let instr = MemInstr {
+                pc,
+                space,
+                is_write,
+                size: f[2].parse()?,
+                base_addr: parse_u64(f[3])?,
+                stride: f[4].parse()?,
+                active_mask: parse_mask(f[5])?,
+                l1_bypass,
+            };
+            cur_tb
+                .as_mut()
+                .and_then(|tb| tb.warps.last_mut())
+                .with_context(|| err("op outside warp"))?
+                .push(TraceOp::Mem(instr));
+        } else if line.starts_with('#') {
+            continue; // comment
+        } else {
+            bail!(err(&format!("unrecognized line '{line}'")));
+        }
+        pc += 1;
+    }
+    if cur_tb.is_some() {
+        bail!("unterminated BEGIN_TB");
+    }
+    let k = KernelTrace {
+        name: name.context("missing kernel name")?,
+        kernel_id: kernel_id.context("missing kernel id")?,
+        grid: grid.context("missing grid dim")?,
+        block: block.context("missing block dim")?,
+        stream_id: stream_id.context("missing stream id")?,
+        shared_mem_bytes: shmem,
+        tbs,
+    };
+    k.validate()?;
+    Ok(k)
+}
+
+fn parse_dim3(s: &str) -> Result<Dim3> {
+    let inner = s
+        .trim()
+        .strip_prefix('(')
+        .and_then(|x| x.strip_suffix(')'))
+        .with_context(|| format!("dim3 '{s}' not parenthesized"))?;
+    let parts: Vec<&str> = inner.split(',').collect();
+    if parts.len() != 3 {
+        bail!("dim3 '{s}' needs 3 components");
+    }
+    Ok(Dim3 {
+        x: parts[0].trim().parse()?,
+        y: parts[1].trim().parse()?,
+        z: parts[2].trim().parse()?,
+    })
+}
+
+fn parse_mask(s: &str) -> Result<u32> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x") {
+        u32::from_str_radix(hex, 16).context("mask literal")
+    } else {
+        s.parse().context("mask literal")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// workload-level helpers
+// ---------------------------------------------------------------------------
+
+/// Write a whole [`Workload`] to `dir` as `kernelslist.g` + one trace
+/// file per kernel. Returns the command-list path.
+pub fn write_workload(w: &Workload, dir: &Path) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let mut cmds = Vec::new();
+    for (dst, bytes) in &w.memcpys {
+        cmds.push(TraceCommand::MemcpyHtoD { dst: *dst, bytes: *bytes });
+    }
+    for (i, k) in w.kernels.iter().enumerate() {
+        let file = format!("kernel-{}.traceg", i + 1);
+        std::fs::write(dir.join(&file), write_kernel(k))
+            .with_context(|| format!("writing {file}"))?;
+        cmds.push(TraceCommand::Kernel { file });
+    }
+    let list = dir.join("kernelslist.g");
+    std::fs::write(&list, write_commands(&cmds))?;
+    Ok(list)
+}
+
+/// Load a workload from a `kernelslist.g` path.
+pub fn load_workload(list_path: &Path) -> Result<Workload> {
+    let dir = list_path.parent().unwrap_or(Path::new("."));
+    let cmds = parse_commands(&std::fs::read_to_string(list_path)
+        .with_context(|| format!("reading {}", list_path.display()))?)?;
+    let mut w = Workload::default();
+    for c in cmds {
+        match c {
+            TraceCommand::MemcpyHtoD { dst, bytes } => {
+                w.memcpys.push((dst, bytes));
+            }
+            TraceCommand::Kernel { file } => {
+                let text = std::fs::read_to_string(dir.join(&file))
+                    .with_context(|| format!("reading {file}"))?;
+                w.kernels.push(parse_kernel(&text)
+                    .with_context(|| format!("parsing {file}"))?);
+            }
+        }
+    }
+    w.validate()?;
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_kernel() -> KernelTrace {
+        KernelTrace {
+            name: "saxpy".into(),
+            kernel_id: 3,
+            grid: Dim3::linear(2),
+            block: Dim3::linear(64),
+            stream_id: 7,
+            shared_mem_bytes: 0,
+            tbs: vec![
+                TbTrace {
+                    warps: vec![
+                        vec![
+                            TraceOp::Mem(MemInstr {
+                                pc: 0,
+                                space: MemSpace::Global,
+                                is_write: false,
+                                size: 4,
+                                base_addr: 0x7f00_0000_0000,
+                                stride: 4,
+                                active_mask: u32::MAX,
+                                l1_bypass: false,
+                            }),
+                            TraceOp::Alu { count: 2 },
+                            TraceOp::Mem(MemInstr {
+                                pc: 2,
+                                space: MemSpace::Global,
+                                is_write: true,
+                                size: 4,
+                                base_addr: 0x7f00_0010_0000,
+                                stride: 4,
+                                active_mask: 0x0000_FFFF,
+                                l1_bypass: true,
+                            }),
+                        ],
+                        vec![TraceOp::Alu { count: 1 }],
+                    ],
+                },
+                TbTrace { warps: vec![vec![], vec![]] },
+            ],
+        }
+    }
+
+    #[test]
+    fn kernel_roundtrip() {
+        let k = sample_kernel();
+        let text = write_kernel(&k);
+        let parsed = parse_kernel(&text).unwrap();
+        // pc is re-assigned by line order; compare modulo pc
+        assert_eq!(parsed.name, k.name);
+        assert_eq!(parsed.kernel_id, k.kernel_id);
+        assert_eq!(parsed.grid, k.grid);
+        assert_eq!(parsed.block, k.block);
+        assert_eq!(parsed.stream_id, k.stream_id);
+        assert_eq!(parsed.tbs.len(), k.tbs.len());
+        let ops = &parsed.tbs[0].warps[0];
+        match (&ops[0], &ops[2]) {
+            (TraceOp::Mem(a), TraceOp::Mem(b)) => {
+                assert_eq!(a.base_addr, 0x7f00_0000_0000);
+                assert!(!a.is_write && !a.l1_bypass);
+                assert_eq!(b.active_mask, 0x0000_FFFF);
+                assert!(b.is_write && b.l1_bypass);
+            }
+            other => panic!("unexpected ops {other:?}"),
+        }
+    }
+
+    #[test]
+    fn commands_roundtrip() {
+        let cmds = vec![
+            TraceCommand::MemcpyHtoD { dst: 0x7f00_0000_0000, bytes: 4096 },
+            TraceCommand::Kernel { file: "kernel-1.traceg".into() },
+            TraceCommand::Kernel { file: "kernel-2.traceg".into() },
+        ];
+        let text = write_commands(&cmds);
+        assert_eq!(parse_commands(&text).unwrap(), cmds);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_kernel() {
+        assert!(parse_kernel("").is_err());
+        assert!(parse_kernel("-kernel name = x\n").is_err());
+        // mem op outside a warp
+        let bad = "-kernel name = x\n-kernel id = 1\n\
+                   -grid dim = (1,1,1)\n-block dim = (32,1,1)\n\
+                   -cuda stream id = 0\n-shmem = 0\n\
+                   mem R global 4 0x0 4 0xffffffff cg=0\n";
+        assert!(parse_kernel(bad).is_err());
+        // unterminated TB
+        let bad2 = "-kernel name = x\n-kernel id = 1\n\
+                    -grid dim = (1,1,1)\n-block dim = (32,1,1)\n\
+                    -cuda stream id = 0\n-shmem = 0\n#BEGIN_TB 0\n#warp 0\n";
+        assert!(parse_kernel(bad2).is_err());
+    }
+
+    #[test]
+    fn workload_write_load_roundtrip() {
+        let w = Workload {
+            kernels: vec![sample_kernel()],
+            memcpys: vec![(0x10_0000, 8192)],
+        };
+        let dir = std::env::temp_dir().join("streamsim_trace_io_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let list = write_workload(&w, &dir).unwrap();
+        let loaded = load_workload(&list).unwrap();
+        assert_eq!(loaded.kernels.len(), 1);
+        assert_eq!(loaded.memcpys, vec![(0x10_0000, 8192)]);
+        assert_eq!(loaded.kernels[0].name, "saxpy");
+        assert_eq!(loaded.kernels[0].mem_instr_count(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

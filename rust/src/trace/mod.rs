@@ -1,0 +1,335 @@
+//! Trace model — the Accel-Sim front-end substrate.
+//!
+//! Accel-Sim drives GPGPU-Sim from NVBit SASS traces: a `kernelslist.g`
+//! command file naming memcpy commands and per-kernel trace files. We
+//! reproduce that shape with a compact, deterministic text format:
+//!
+//! * [`TraceCommand`] — one `kernelslist.g` line (memcpy or kernel).
+//! * [`KernelTrace`] — grid/block geometry, stream id, and per-warp
+//!   instruction lists ([`TraceOp`]).
+//! * [`MemInstr`] — a warp-level memory instruction in base+stride form
+//!   (lane *i* accesses `base + i*stride`), which keeps the paper's
+//!   coalesced microbenchmarks exact while staying compact.
+//!
+//! [`io`] serializes/parses both file kinds; [`crate::workloads`]
+//! generates them programmatically.
+
+pub mod io;
+
+use crate::{KernelUid, StreamId};
+
+/// CUDA `dim3`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dim3 {
+    pub x: u32,
+    pub y: u32,
+    pub z: u32,
+}
+
+impl Dim3 {
+    /// 1-D helper.
+    pub const fn linear(x: u32) -> Self {
+        Self { x, y: 1, z: 1 }
+    }
+
+    /// Total element count.
+    pub const fn count(&self) -> u64 {
+        self.x as u64 * self.y as u64 * self.z as u64
+    }
+}
+
+/// Memory space of an access (drives which cache hierarchy it uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemSpace {
+    Global,
+    Local,
+    Const,
+    Texture,
+}
+
+impl MemSpace {
+    /// Trace-file token.
+    pub const fn token(self) -> &'static str {
+        match self {
+            MemSpace::Global => "global",
+            MemSpace::Local => "local",
+            MemSpace::Const => "const",
+            MemSpace::Texture => "texture",
+        }
+    }
+
+    /// Parse a trace-file token.
+    pub fn from_token(s: &str) -> Option<Self> {
+        match s {
+            "global" => Some(MemSpace::Global),
+            "local" => Some(MemSpace::Local),
+            "const" => Some(MemSpace::Const),
+            "texture" => Some(MemSpace::Texture),
+            _ => None,
+        }
+    }
+}
+
+/// A warp-level memory instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemInstr {
+    /// Program counter (for dedup/debug only).
+    pub pc: u32,
+    pub space: MemSpace,
+    pub is_write: bool,
+    /// Bytes accessed per thread (4 for float, 8 for u64 ...).
+    pub size: u8,
+    /// Address accessed by the lowest active lane.
+    pub base_addr: u64,
+    /// Byte stride between consecutive lanes (0 = all lanes same addr).
+    pub stride: i64,
+    /// Active lane mask.
+    pub active_mask: u32,
+    /// `ld.global.cg` — cache only in L2, bypass L1 (paper §5.1 uses
+    /// this to make the pointer-chase L2-deterministic).
+    pub l1_bypass: bool,
+}
+
+impl MemInstr {
+    /// Addresses touched by active lanes.
+    pub fn lane_addrs(&self) -> impl Iterator<Item = u64> + '_ {
+        (0..32u32).filter_map(move |lane| {
+            (self.active_mask >> lane & 1 == 1).then(|| {
+                (self.base_addr as i64 + lane as i64 * self.stride) as u64
+            })
+        })
+    }
+
+    /// Number of active lanes.
+    pub fn active_lanes(&self) -> u32 {
+        self.active_mask.count_ones()
+    }
+}
+
+/// One warp-level instruction slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOp {
+    /// Memory instruction.
+    Mem(MemInstr),
+    /// `count` back-to-back non-memory instructions (run-length encoded;
+    /// each costs `SimConfig::alu_latency` pipeline occupancy).
+    Alu { count: u32 },
+}
+
+/// Instruction list of one warp within one thread block.
+pub type WarpOps = Vec<TraceOp>;
+
+/// Per-TB trace: one op list per warp.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TbTrace {
+    pub warps: Vec<WarpOps>,
+}
+
+/// A full kernel trace (the `.traceg` analogue).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelTrace {
+    pub name: String,
+    /// Trace-local kernel id (Accel-Sim's `kernel id`); the simulator
+    /// assigns the runtime uid at launch.
+    pub kernel_id: KernelUid,
+    pub grid: Dim3,
+    pub block: Dim3,
+    /// CUDA stream this launch was captured on.
+    pub stream_id: StreamId,
+    pub shared_mem_bytes: u32,
+    /// One entry per thread block, in dispatch order.
+    pub tbs: Vec<TbTrace>,
+}
+
+impl KernelTrace {
+    /// Warps per thread block (ceil of threads/32).
+    pub fn warps_per_tb(&self) -> u32 {
+        self.block.count().div_ceil(32) as u32
+    }
+
+    /// Total memory instructions in the trace.
+    pub fn mem_instr_count(&self) -> u64 {
+        self.tbs
+            .iter()
+            .flat_map(|tb| tb.warps.iter())
+            .flatten()
+            .filter(|op| matches!(op, TraceOp::Mem(_)))
+            .count() as u64
+    }
+
+    /// Consistency checks (TB count matches grid, warp counts match
+    /// block dims).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        ensure!(
+            self.tbs.len() as u64 == self.grid.count(),
+            "kernel '{}': {} TB traces for grid of {}",
+            self.name, self.tbs.len(), self.grid.count()
+        );
+        let wpt = self.warps_per_tb() as usize;
+        for (i, tb) in self.tbs.iter().enumerate() {
+            ensure!(
+                tb.warps.len() == wpt,
+                "kernel '{}': TB {i} has {} warps, want {wpt}",
+                self.name, tb.warps.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One `kernelslist.g` command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceCommand {
+    /// `MemcpyHtoD,<dst>,<bytes>` — modeled as a bulk DRAM write that
+    /// warms nothing (matches Accel-Sim, which replays memcpys only to
+    /// populate functional state).
+    MemcpyHtoD { dst: u64, bytes: u64 },
+    /// A kernel launch, by trace file name.
+    Kernel { file: String },
+}
+
+/// A fully-loaded workload: the command list with kernel traces resolved.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    /// Launch-ordered kernels.
+    pub kernels: Vec<KernelTrace>,
+    /// Host-to-device copies preceding the kernels.
+    pub memcpys: Vec<(u64, u64)>,
+}
+
+impl Workload {
+    /// Distinct stream ids, ascending.
+    pub fn streams(&self) -> Vec<StreamId> {
+        let mut s: Vec<_> = self.kernels.iter().map(|k| k.stream_id)
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+
+    /// Total memory instructions across kernels.
+    pub fn mem_instr_count(&self) -> u64 {
+        self.kernels.iter().map(|k| k.mem_instr_count()).sum()
+    }
+
+    /// Validate every kernel.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for k in &self.kernels {
+            k.validate()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mi(base: u64, stride: i64, mask: u32) -> MemInstr {
+        MemInstr {
+            pc: 0,
+            space: MemSpace::Global,
+            is_write: false,
+            size: 4,
+            base_addr: base,
+            stride,
+            active_mask: mask,
+            l1_bypass: false,
+        }
+    }
+
+    #[test]
+    fn dim3_count() {
+        assert_eq!(Dim3::linear(7).count(), 7);
+        assert_eq!(Dim3 { x: 2, y: 3, z: 4 }.count(), 24);
+    }
+
+    #[test]
+    fn lane_addrs_full_mask() {
+        let m = mi(0x1000, 4, u32::MAX);
+        let addrs: Vec<u64> = m.lane_addrs().collect();
+        assert_eq!(addrs.len(), 32);
+        assert_eq!(addrs[0], 0x1000);
+        assert_eq!(addrs[31], 0x1000 + 31 * 4);
+        assert_eq!(m.active_lanes(), 32);
+    }
+
+    #[test]
+    fn lane_addrs_partial_mask() {
+        let m = mi(0x2000, 8, 0b101);
+        let addrs: Vec<u64> = m.lane_addrs().collect();
+        assert_eq!(addrs, vec![0x2000, 0x2000 + 16]);
+    }
+
+    #[test]
+    fn lane_addrs_zero_stride() {
+        let m = mi(0x3000, 0, 0xF);
+        let addrs: Vec<u64> = m.lane_addrs().collect();
+        assert_eq!(addrs, vec![0x3000; 4]);
+    }
+
+    #[test]
+    fn kernel_trace_validation() {
+        let k = KernelTrace {
+            name: "k".into(),
+            kernel_id: 1,
+            grid: Dim3::linear(2),
+            block: Dim3::linear(64),
+            stream_id: 0,
+            shared_mem_bytes: 0,
+            tbs: vec![
+                TbTrace { warps: vec![vec![], vec![]] },
+                TbTrace { warps: vec![vec![], vec![]] },
+            ],
+        };
+        k.validate().unwrap();
+        assert_eq!(k.warps_per_tb(), 2);
+
+        let mut bad = k.clone();
+        bad.tbs.pop();
+        assert!(bad.validate().is_err());
+
+        let mut bad2 = k;
+        bad2.tbs[0].warps.pop();
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn workload_streams_sorted_dedup() {
+        let mk = |sid| KernelTrace {
+            name: "k".into(),
+            kernel_id: 1,
+            grid: Dim3::linear(1),
+            block: Dim3::linear(32),
+            stream_id: sid,
+            shared_mem_bytes: 0,
+            tbs: vec![TbTrace { warps: vec![vec![]] }],
+        };
+        let w = Workload {
+            kernels: vec![mk(3), mk(1), mk(3)],
+            memcpys: vec![],
+        };
+        assert_eq!(w.streams(), vec![1, 3]);
+    }
+
+    #[test]
+    fn mem_instr_count_counts_only_mem() {
+        let k = KernelTrace {
+            name: "k".into(),
+            kernel_id: 1,
+            grid: Dim3::linear(1),
+            block: Dim3::linear(32),
+            stream_id: 0,
+            shared_mem_bytes: 0,
+            tbs: vec![TbTrace {
+                warps: vec![vec![
+                    TraceOp::Alu { count: 5 },
+                    TraceOp::Mem(mi(0, 4, u32::MAX)),
+                    TraceOp::Mem(mi(128, 4, u32::MAX)),
+                ]],
+            }],
+        };
+        assert_eq!(k.mem_instr_count(), 2);
+    }
+}

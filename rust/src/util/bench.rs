@@ -1,0 +1,178 @@
+//! Micro-benchmark harness for the `cargo bench` targets.
+//!
+//! `criterion` is unavailable offline (DESIGN.md §7); this is the subset
+//! the figure/ablation benches need: warmup, N timed samples, median /
+//! mean / p10-p90 spread, and throughput reporting, with aligned table
+//! output that the EXPERIMENTS.md tables are pasted from.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Wall time of one iteration.
+    pub time: Duration,
+    /// Optional item count for throughput (accesses, cycles, elements).
+    pub items: u64,
+}
+
+/// Aggregated result for a named benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// Items/second at the median, when items were reported.
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    /// `items/s` rendered with an SI suffix.
+    pub fn throughput_str(&self) -> String {
+        match self.throughput {
+            None => "-".to_string(),
+            Some(t) if t >= 1e9 => format!("{:.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("{:.2} M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("{:.2} K/s", t / 1e3),
+            Some(t) => format!("{t:.2} /s"),
+        }
+    }
+}
+
+/// Format a `Duration` compactly (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner: fixed warmup iterations + fixed timed samples.
+pub struct Bencher {
+    warmup: usize,
+    samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(2, 10)
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Self { warmup, samples, results: Vec::new() }
+    }
+
+    /// Honour `STREAMSIM_BENCH_FAST=1` (CI) by dropping to 1 warmup +
+    /// 3 samples.
+    pub fn from_env() -> Self {
+        if std::env::var("STREAMSIM_BENCH_FAST").as_deref() == Ok("1") {
+            Self::new(1, 3)
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Run `f` repeatedly; it returns the item count of one iteration.
+    pub fn bench<F: FnMut() -> u64>(&mut self, name: &str, mut f: F)
+        -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            let items = std::hint::black_box(f());
+            samples.push(Sample { time: t0.elapsed(), items });
+        }
+        let mut times: Vec<Duration> = samples.iter().map(|s| s.time).collect();
+        times.sort_unstable();
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let p10 = times[times.len() / 10];
+        let p90 = times[(times.len() * 9) / 10];
+        let items = samples[0].items;
+        let throughput = (items > 0).then(|| {
+            items as f64 / median.as_secs_f64()
+        });
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples: samples.len(),
+            median,
+            mean,
+            p10,
+            p90,
+            throughput,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print an aligned results table.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!("{:<44} {:>12} {:>12} {:>12} {:>14}",
+                 "case", "median", "p10", "p90", "throughput");
+        for r in &self.results {
+            println!("{:<44} {:>12} {:>12} {:>12} {:>14}",
+                     r.name,
+                     fmt_duration(r.median),
+                     fmt_duration(r.p10),
+                     fmt_duration(r.p90),
+                     r.throughput_str());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::new(1, 5);
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+            10_000
+        });
+        assert_eq!(r.samples, 5);
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.throughput.unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(12)), "12.00 µs");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.00 ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
+    }
+
+    #[test]
+    fn zero_items_means_no_throughput() {
+        let mut b = Bencher::new(0, 3);
+        let r = b.bench("noop", || 0);
+        assert!(r.throughput.is_none());
+        assert_eq!(r.throughput_str(), "-");
+    }
+}

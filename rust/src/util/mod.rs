@@ -1,0 +1,64 @@
+//! Offline-friendly utilities.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure (DESIGN.md §7), so the usual ecosystem crates (`rand`,
+//! `criterion`, `proptest`) are hand-rolled here at the scale this
+//! project needs: a SplitMix64 PRNG, a micro-benchmark harness used by
+//! the `cargo bench` targets, and a tiny property-testing driver.
+
+pub mod bench;
+pub mod prng;
+pub mod proptest_lite;
+
+/// Integer ceiling division.
+#[inline]
+pub const fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b` (`b > 0`).
+#[inline]
+pub const fn round_up(a: u64, b: u64) -> u64 {
+    ceil_div(a, b) * b
+}
+
+/// `true` iff `v` is a power of two (and non-zero).
+#[inline]
+pub const fn is_pow2(v: u64) -> bool {
+    v != 0 && v & (v - 1) == 0
+}
+
+/// log2 of a power of two.
+#[inline]
+pub const fn log2(v: u64) -> u32 {
+    v.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_remainder() {
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(ceil_div(9, 4), 3);
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(35, 128), 128);
+        assert_eq!(round_up(128, 128), 128);
+        assert_eq!(round_up(129, 128), 256);
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(128));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(96));
+        assert_eq!(log2(128), 7);
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal property-testing driver (`proptest` is unavailable offline).
+//!
+//! A property is a closure over a [`SplitMix64`]-backed [`Gen`]; the
+//! driver runs it for `cases` seeds and, on failure, re-runs the failing
+//! seed with panic output so the case is reproducible by seed alone
+//! (no shrinking — generators here are small enough to eyeball).
+//!
+//! Used by the invariant tests on the stats containers, MSHR, tag array,
+//! launch gate, and trace round-trips.
+
+use super::prng::SplitMix64;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Seed of this case, for the failure report.
+    pub seed: u64,
+}
+
+impl Gen {
+    /// u64 in `[0, bound)`.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        self.rng.next_below(bound)
+    }
+
+    /// u64 in `[lo, hi)`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.next_range(lo, hi)
+    }
+
+    /// usize in `[0, bound)`.
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.rng.next_below(bound as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// f64 in `[0,1)`.
+    pub fn unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// A vector of `len` values drawn by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T)
+        -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Raw u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+/// Run `prop` for `cases` deterministic cases derived from `base_seed`.
+/// Panics with the failing seed on the first violated property.
+pub fn run_cases(name: &str, base_seed: u64, cases: u64,
+                 mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        // decorrelate case seeds
+        let seed = SplitMix64::new(base_seed ^ case).next_u64();
+        let mut g = Gen { rng: SplitMix64::new(seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut g),
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>()
+                    .map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed \
+                 {seed:#018x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Default case count, overridable via `STREAMSIM_PROPTEST_CASES`.
+pub fn default_cases() -> u64 {
+    std::env::var("STREAMSIM_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_cases("trivial", 1, 32, |g| {
+            count += 1;
+            assert!(g.below(10) < 10);
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            run_cases("fails", 2, 16, |g| {
+                assert!(g.below(100) < 50, "drew a big one");
+            });
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("property 'fails' failed"), "{msg}");
+        assert!(msg.contains("seed 0x"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = Vec::new();
+        run_cases("det", 3, 8, |g| a.push(g.u64()));
+        let mut b = Vec::new();
+        run_cases("det", 3, 8, |g| b.push(g.u64()));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,187 @@
+//! §5.1 `12_lat.cu`, modified to N parallel streams (the paper's
+//! `l2_lat_4stream`).
+//!
+//! The CUDA source (paper §5.1): one thread initializes a
+//! pointer-chasing array of `ARRAY_SIZE` u64 slots (that is `ARRAY_SIZE`
+//! global 8 B stores), then chases `ITERS` loads with
+//! `ld.global.cg.u64` — cached in L2 only, L1 bypassed. The paper runs
+//! the *same* kernel on 4 streams over the *same* `posArray`, which is
+//! exactly what turns serialized `HIT`s into concurrent `MSHR_HIT`s.
+//!
+//! All counts are deterministic: per kernel, `ARRAY_SIZE` L2 write
+//! accesses and `ITERS` L2 read accesses (one slot touches one sector).
+
+use crate::trace::{Dim3, KernelTrace, MemInstr, MemSpace, TbTrace,
+                   TraceOp, Workload};
+use crate::workloads::{Expected, GeneratedWorkload};
+use crate::StreamId;
+
+/// Generator parameters (paper defaults).
+#[derive(Debug, Clone)]
+pub struct Params {
+    /// Parallel streams running the identical kernel (paper: 4).
+    pub num_streams: u32,
+    /// Pointer-chase iterations (paper: 1).
+    pub iters: u32,
+    /// Array slots, 8 B each (paper: 1).
+    pub array_size: u32,
+    /// Device address of `posArray` (shared by every stream!).
+    pub pos_array: u64,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Self {
+            num_streams: 4,
+            iters: 1,
+            array_size: 1,
+            pos_array: 0x7f00_0000_0000,
+        }
+    }
+}
+
+/// Build the workload + expectations.
+pub fn generate(p: &Params) -> GeneratedWorkload {
+    let mut kernels = Vec::new();
+    let mut expected = Expected::default();
+    for s in 0..p.num_streams {
+        let stream = s as StreamId + 1; // streams 1..=N, like cudaStreams
+        kernels.push(kernel(p, stream));
+        // init loop: ARRAY_SIZE u64 stores; each slot is within one
+        // sector (8 B aligned) -> array_size write accesses at L1
+        // (write-through) and L2.
+        expected.l1_writes.insert(stream, slots_sectors(p) );
+        expected.l2_writes.insert(stream, slots_sectors(p));
+        // chase: ITERS cg loads -> L2 only.
+        expected.l1_reads.insert(stream, 0);
+        expected.l2_reads.insert(stream, p.iters as u64);
+    }
+    expected.deterministic_l2_traffic = true;
+    expected.check_hit_shift = true; // tiny shared array, fits L2
+    GeneratedWorkload {
+        name: format!("l2_lat_{}stream", p.num_streams),
+        workload: Workload {
+            kernels,
+            memcpys: vec![(p.pos_array, p.array_size as u64 * 8)],
+        },
+        expected,
+    }
+}
+
+/// Unique sectors covered by the init stores (8 B slots, 32 B sectors).
+fn slots_sectors(p: &Params) -> u64 {
+    // Each store is a separate access in the trace; GPGPU-Sim counts per
+    // access, not per unique sector.
+    p.array_size as u64
+}
+
+fn kernel(p: &Params, stream: StreamId) -> KernelTrace {
+    let mut ops = Vec::new();
+    // init: for i in 0..ARRAY_SIZE: posArray[i] = &posArray[i+1]
+    // (one active lane — tid == 0)
+    for i in 0..p.array_size {
+        ops.push(TraceOp::Mem(MemInstr {
+            pc: i,
+            space: MemSpace::Global,
+            is_write: true,
+            size: 8,
+            base_addr: p.pos_array + i as u64 * 8,
+            stride: 0,
+            active_mask: 0x1,
+            l1_bypass: false,
+        }));
+    }
+    ops.push(TraceOp::Alu { count: 2 }); // loop setup
+    // chase: ITERS dependent cg loads; with ARRAY_SIZE slots the chase
+    // walks i -> i+1 -> ... -> wraps (pointer values, modeled by index).
+    for it in 0..p.iters {
+        let slot = (it % p.array_size) as u64;
+        ops.push(TraceOp::Mem(MemInstr {
+            pc: p.array_size + 1 + it,
+            space: MemSpace::Global,
+            is_write: false,
+            size: 8,
+            base_addr: p.pos_array + slot * 8,
+            stride: 0,
+            active_mask: 0x1,
+            l1_bypass: true, // ld.global.cg
+        }));
+        ops.push(TraceOp::Alu { count: 1 }); // ptr swap
+    }
+    KernelTrace {
+        name: "l2_lat".into(),
+        kernel_id: stream as u32,
+        grid: Dim3::linear(1),
+        block: Dim3::linear(1), // THREADS_NUM = 1
+        stream_id: stream,
+        shared_mem_bytes: 0,
+        tbs: vec![TbTrace { warps: vec![ops] }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_shape() {
+        let g = generate(&Params::default());
+        assert_eq!(g.workload.kernels.len(), 4);
+        assert_eq!(g.workload.streams(), vec![1, 2, 3, 4]);
+        for k in &g.workload.kernels {
+            k.validate().unwrap();
+            assert_eq!(k.grid.count(), 1);
+            assert_eq!(k.block.count(), 1);
+            // ops: 1 store + 1 cg load (+ alu)
+            assert_eq!(k.mem_instr_count(), 2);
+        }
+        // deterministic counts: 1 read + 1 write per stream at L2
+        for s in 1..=4u64 {
+            assert_eq!(g.expected.l2_reads[&s], 1);
+            assert_eq!(g.expected.l2_writes[&s], 1);
+            assert_eq!(g.expected.l1_reads[&s], 0);
+        }
+    }
+
+    #[test]
+    fn all_streams_share_the_array() {
+        let g = generate(&Params::default());
+        let base = |k: &KernelTrace| match &k.tbs[0].warps[0][0] {
+            TraceOp::Mem(m) => m.base_addr,
+            _ => panic!(),
+        };
+        let b0 = base(&g.workload.kernels[0]);
+        assert!(g.workload.kernels.iter().all(|k| base(k) == b0));
+    }
+
+    #[test]
+    fn chase_loads_bypass_l1() {
+        let g = generate(&Params::default());
+        for k in &g.workload.kernels {
+            let loads: Vec<_> = k.tbs[0].warps[0]
+                .iter()
+                .filter_map(|op| match op {
+                    TraceOp::Mem(m) if !m.is_write => Some(m),
+                    _ => None,
+                })
+                .collect();
+            assert!(!loads.is_empty());
+            assert!(loads.iter().all(|m| m.l1_bypass),
+                    "cg loads must bypass L1");
+            assert!(loads.iter().all(|m| m.size == 8));
+        }
+    }
+
+    #[test]
+    fn scaled_params_scale_counts() {
+        let p = Params { iters: 16, array_size: 8, ..Params::default() };
+        let g = generate(&p);
+        for s in 1..=4u64 {
+            assert_eq!(g.expected.l2_reads[&s], 16);
+            assert_eq!(g.expected.l2_writes[&s], 8);
+        }
+        for k in &g.workload.kernels {
+            assert_eq!(k.mem_instr_count(), 24);
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Integration: full-size paper workloads through the complete stack
+//! (trace generation → simulation → stats → timeline), on the mini GPU
+//! preset. These are the heavyweight runs; `cargo test --release`
+//! keeps them in seconds.
+
+use streamsim::cache::access::AccessType;
+use streamsim::config::SimConfig;
+use streamsim::sim::GpuSim;
+use streamsim::workloads;
+
+fn run(bench: &str, preset: &str) -> GpuSim {
+    let g = workloads::generate(bench).unwrap();
+    let cfg = SimConfig::preset(preset).unwrap();
+    let mut sim = GpuSim::new(cfg).unwrap();
+    sim.enqueue_workload(&g.workload).unwrap();
+    sim.run().unwrap();
+    sim
+}
+
+#[test]
+fn benchmark_1_stream_full_size() {
+    // the paper's N = 1<<20, 256 thr/blk — 4096 TBs per kernel
+    let g = workloads::generate("bench1").unwrap();
+    let cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+    let mut sim = GpuSim::new(cfg).unwrap();
+    sim.enqueue_workload(&g.workload).unwrap();
+    sim.run().unwrap();
+    let stats = sim.stats();
+    assert_eq!(stats.kernels_done, 4);
+    // analytic L1 totals hold at full size
+    for (s, want) in &g.expected.l1_reads {
+        let got = stats.l1.stream_table(*s).unwrap()
+            .total_serviced_for_type(AccessType::GlobalAccR);
+        assert_eq!(got, *want, "stream {s} reads");
+    }
+    for (s, want) in &g.expected.l1_writes {
+        let got = stats.l1.stream_table(*s).unwrap()
+            .total_serviced_for_type(AccessType::GlobalAccW);
+        assert_eq!(got, *want, "stream {s} writes");
+    }
+    // L2 write-through totals
+    for (s, want) in &g.expected.l2_writes {
+        let got = stats.l2.stream_table(*s).unwrap()
+            .total_serviced_for_type(AccessType::GlobalAccW);
+        assert_eq!(got, *want, "stream {s} L2 writes");
+    }
+}
+
+#[test]
+fn deepbench_full_trace_runs() {
+    let sim = run("deepbench", "sm7_titanv_mini");
+    let stats = sim.stats();
+    assert_eq!(stats.kernels_done, 4); // 2 streams x (gemm + bias)
+    assert!(stats.total_cycles > 0);
+    // the bias kernel depends on the gemm within each stream
+    for s in [1u64, 2] {
+        let f: Vec<_> = stats.kernel_times.finished().into_iter()
+            .filter(|(st, _, _)| *st == s).collect();
+        assert_eq!(f.len(), 2);
+        assert!(f[0].2.end_cycle <= f[1].2.start_cycle);
+    }
+}
+
+#[test]
+fn titanv_full_preset_runs_l2_lat() {
+    // the real 80-SM TITAN V geometry on the small workload
+    let sim = run("l2_lat", "sm7_titanv");
+    let stats = sim.stats();
+    assert_eq!(stats.kernels_done, 4);
+    for s in 1..=4u64 {
+        let t = stats.l2.stream_table(s).unwrap();
+        assert_eq!(t.total_serviced_for_type(AccessType::GlobalAccR), 1);
+        assert_eq!(t.total_serviced_for_type(AccessType::GlobalAccW), 1);
+    }
+}
+
+#[test]
+fn cli_end_to_end_validate_all_benches() {
+    use streamsim::cli::{execute, Command};
+    for bench in ["l2_lat", "bench1_mini", "deepbench_mini"] {
+        let out = execute(Command::Validate {
+            bench: bench.into(),
+            preset: if bench == "l2_lat" { "minimal" }
+                    else { "sm7_titanv_mini" }.into(),
+            figure: false,
+        })
+        .unwrap_or_else(|e| panic!("{bench}: {e:#}"));
+        assert!(out.contains("ALL CHECKS PASSED"), "{bench}:\n{out}");
+    }
+}
+
+#[test]
+fn timeline_renders_for_full_runs() {
+    let sim = run("bench1_mini", "sm7_titanv_mini");
+    let gantt = sim.render_timeline(64);
+    assert!(gantt.contains("stream   0"));
+    assert!(gantt.contains("stream   1"));
+    let csv = streamsim::timeline::to_csv(&sim.stats().kernel_times);
+    assert_eq!(csv.lines().count(), 5); // header + 4 kernels
+}
+
+#[test]
+fn per_stream_dram_icnt_extensions_end_to_end() {
+    let sim = run("deepbench_mini", "sm7_titanv_mini");
+    let dram = sim.dram_per_stream();
+    let icnt = sim.icnt_per_stream();
+    assert!(dram.keys().any(|s| *s == 1) && dram.keys().any(|s| *s == 2),
+            "both streams must reach DRAM: {dram:?}");
+    assert!(icnt[&1] > 0 && icnt[&2] > 0);
+}

@@ -1,0 +1,106 @@
+//! Integration: trace serialization round-trips and the disk-trace run
+//! path (`streamsim run --trace`) matches the in-memory path exactly.
+
+use streamsim::config::SimConfig;
+use streamsim::sim::GpuSim;
+use streamsim::trace::io;
+use streamsim::workloads;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("streamsim_it_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn every_generator_roundtrips_through_disk() {
+    for bench in workloads::BENCHES {
+        if bench == "deepbench" || bench == "bench1" || bench == "bench3" {
+            continue; // large traces; covered by the mini variants
+        }
+        let g = workloads::generate(bench).unwrap();
+        let dir = tmp(bench);
+        let list = io::write_workload(&g.workload, &dir).unwrap();
+        let loaded = io::load_workload(&list).unwrap();
+        assert_eq!(loaded.kernels.len(), g.workload.kernels.len(),
+                   "{bench}");
+        for (a, b) in loaded.kernels.iter().zip(&g.workload.kernels) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.stream_id, b.stream_id);
+            assert_eq!(a.grid, b.grid);
+            assert_eq!(a.block, b.block);
+            assert_eq!(a.mem_instr_count(), b.mem_instr_count());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn disk_trace_simulation_matches_in_memory() {
+    let g = workloads::generate("l2_lat").unwrap();
+    let dir = tmp("sim_equiv");
+    let list = io::write_workload(&g.workload, &dir).unwrap();
+    let loaded = io::load_workload(&list).unwrap();
+
+    let run = |w: &streamsim::trace::Workload| {
+        let cfg = SimConfig::preset("minimal").unwrap();
+        let mut sim = GpuSim::new(cfg).unwrap();
+        sim.enqueue_workload(w).unwrap();
+        sim.run().unwrap();
+        (sim.stats().l2.total_table(), sim.stats().total_cycles)
+    };
+    let (mem_table, mem_cycles) = run(&g.workload);
+    let (disk_table, disk_cycles) = run(&loaded);
+    assert_eq!(mem_table, disk_table,
+               "stats must be identical for identical traces");
+    assert_eq!(mem_cycles, disk_cycles, "timing must be deterministic");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn determinism_across_repeated_runs() {
+    let g = workloads::generate("bench1_mini").unwrap();
+    let run = || {
+        let cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+        let mut sim = GpuSim::new(cfg).unwrap();
+        sim.enqueue_workload(&g.workload).unwrap();
+        sim.run().unwrap();
+        (
+            sim.stats().l1.total_table(),
+            sim.stats().l2.total_table(),
+            sim.stats().total_cycles,
+            streamsim::timeline::to_csv(&sim.stats().kernel_times),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0);
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2, "cycle-exact determinism");
+    assert_eq!(a.3, b.3, "timeline determinism");
+}
+
+#[test]
+fn config_file_layering_matches_cli_overrides() {
+    let dir = tmp("cfg_layering");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("gpgpusim.config");
+    std::fs::write(&cfg_path,
+        "# paper §4 usage\n-gpgpu_concurrent_kernel_sm 1\n\
+         -gpgpu_n_clusters 2\n-stat_mode tip\n").unwrap();
+    let mut from_file = SimConfig::preset("sm7_titanv_mini").unwrap();
+    from_file.apply_file(&cfg_path).unwrap();
+
+    let mut from_cli = SimConfig::preset("sm7_titanv_mini").unwrap();
+    let mut kv = std::collections::BTreeMap::new();
+    kv.insert("gpgpu_concurrent_kernel_sm".into(), "1".into());
+    kv.insert("gpgpu_n_clusters".into(), "2".into());
+    kv.insert("stat_mode".into(), "tip".into());
+    from_cli.apply_overrides(&kv).unwrap();
+
+    assert_eq!(from_file.num_cores, from_cli.num_cores);
+    assert_eq!(from_file.concurrent_kernel_sm,
+               from_cli.concurrent_kernel_sm);
+    assert_eq!(from_file.stat_mode, from_cli.stat_mode);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
