@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     // takes fixed 16384-event batches, so deterministically downsample
     // each cell by a common stride (the batched-aggregation deployment
     // would simply loop over batches)
-    let l2 = &tw.tip.stats.l2;
+    let l2 = tw.tip.stats.l2();
     let n = 16384usize;
     let grand_total: u64 = l2
         .streams()

@@ -30,12 +30,12 @@ fn main() -> anyhow::Result<()> {
             failures += 1;
         }
         // the paper's green-vs-orange observation, summarized:
-        let tip = tw.tip.stats.l2.total_table().total()
-            + tw.tip.stats.l1.total_table().total();
-        let clean = tw.clean.stats.l2.total_table().total()
-            + tw.clean.stats.l1.total_table().total();
-        let lost = tw.clean.stats.l1.dropped()
-            + tw.clean.stats.l2.dropped();
+        let tip = tw.tip.stats.l2().total_table().total()
+            + tw.tip.stats.l1().total_table().total();
+        let clean = tw.clean.stats.l2().total_table().total()
+            + tw.clean.stats.l1().total_table().total();
+        let lost = tw.clean.stats.l1().dropped()
+            + tw.clean.stats.l2().dropped();
         println!("tip total = {tip}, clean total = {clean} \
                   (clean lost {lost} increments)\n{}\n",
                  "=".repeat(72));

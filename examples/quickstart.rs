@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     // 4. Per-stream breakdowns — the paper's headline output
     //    ("L2_cache_stats_breakdown", §4 step 4).
     print!("{}", stat_print::print_all_streams(
-        &stats.l2, "L2_cache_stats_breakdown"));
+        stats.l2(), "L2_cache_stats_breakdown"));
 
     // 5. Per-kernel launch/exit windows (§3.2) + the timeline.
     for (stream, uid, _) in stats.kernel_times.finished() {

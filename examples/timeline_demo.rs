@@ -55,10 +55,10 @@ fn run(mode: StatMode) -> (u64, u64, String) {
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(&workload()).unwrap();
     sim.run().unwrap();
-    let total = sim.stats().l1.total_table().total()
-        + sim.stats().l2.total_table().total();
+    let total = sim.stats().l1().total_table().total()
+        + sim.stats().l2().total_table().total();
     let dropped =
-        sim.stats().l1.dropped() + sim.stats().l2.dropped();
+        sim.stats().l1().dropped() + sim.stats().l2().dropped();
     (total, dropped, sim.render_timeline(72))
 }
 

@@ -1,20 +1,31 @@
 //! ABL-1 — the cost of the paper's feature itself: per-stream stat
-//! containers vs the flat baseline on the increment hot path, plus the
-//! batched Pallas/PJRT aggregation alternative.
+//! tracking on the increment hot path.
 //!
 //! The paper's change turns `vector<vector<u64>>` into
 //! `map<streamID, vector<vector<u64>>>`; the question a maintainer
-//! asks is "what does that cost per `inc_stats` call?".
+//! asks is "what does that cost per `inc_stats` call?". The engine
+//! answers with interned dense slots: stream ids are interned once and
+//! every increment afterwards is array indexing. This bench compares:
+//!
+//! * the engine by stat mode (flat exact / flat buggy / per-stream),
+//!   driven through `inc(stream_id, ...)` (memo + binary search);
+//! * the slot-indexed fast path the simulator actually uses
+//!   (`inc_slot`), where interning happened once up front;
+//! * a `BTreeMap<StreamId, table>` strawman — the structure the seed
+//!   used for its DRAM/interconnect counters.
+
+use std::collections::BTreeMap;
 
 use streamsim::cache::access::{AccessOutcome, AccessType};
-use streamsim::stats::{CacheStats, StatMode};
+use streamsim::stats::{StatDomain, StatMode, StatsEngine};
 use streamsim::util::bench::Bencher;
 use streamsim::util::prng::SplitMix64;
+use streamsim::StreamSlot;
 
 const N: usize = 1_000_000;
 
 /// Pre-generated event mix (4 streams, realistic type/outcome skew).
-fn events() -> Vec<(AccessType, AccessOutcome, u64, u64)> {
+fn events(nstreams: u64) -> Vec<(AccessType, AccessOutcome, u64, u64)> {
     let mut rng = SplitMix64::new(0xAB1);
     (0..N)
         .map(|i| {
@@ -29,23 +40,51 @@ fn events() -> Vec<(AccessType, AccessOutcome, u64, u64)> {
                 8 => AccessOutcome::MshrHit,
                 _ => AccessOutcome::SectorMiss,
             };
-            (t, o, rng.next_below(4), i as u64 / 4)
+            (t, o, rng.next_below(nstreams), i as u64 / 4)
         })
         .collect()
 }
 
 fn run_mode(evts: &[(AccessType, AccessOutcome, u64, u64)],
             mode: StatMode) -> u64 {
-    let mut s = CacheStats::new(mode);
+    let mut e = StatsEngine::new(mode);
     for (t, o, stream, cycle) in evts {
-        s.inc(*t, *o, *stream, *cycle);
+        e.inc(StatDomain::L2, *stream, *t, *o, *cycle);
     }
-    std::hint::black_box(s.total_table().total());
+    std::hint::black_box(
+        e.cache(StatDomain::L2).total_table().total());
+    evts.len() as u64
+}
+
+/// The simulator's actual hot path: slots interned once, increments are
+/// array indexing.
+fn run_slot_indexed(evts: &[(AccessType, AccessOutcome, StreamSlot, u64)])
+    -> u64 {
+    let mut e = StatsEngine::new(StatMode::PerStream);
+    for s in 0..64u64 {
+        e.intern_stream(s);
+    }
+    for (t, o, slot, cycle) in evts {
+        e.inc_slot(StatDomain::L2, *slot, *t, *o, *cycle);
+    }
+    std::hint::black_box(
+        e.cache(StatDomain::L2).total_table().total());
+    evts.len() as u64
+}
+
+/// The seed's DRAM/icnt structure: a `BTreeMap` entry per increment.
+fn run_btreemap_strawman(evts: &[(AccessType, AccessOutcome, u64, u64)])
+    -> u64 {
+    let mut m: BTreeMap<u64, u64> = BTreeMap::new();
+    for (_, _, stream, _) in evts {
+        *m.entry(*stream).or_default() += 1;
+    }
+    std::hint::black_box(m.values().sum::<u64>());
     evts.len() as u64
 }
 
 fn main() {
-    let evts = events();
+    let evts = events(4);
     let mut b = Bencher::from_env();
     b.bench("flat_aggregate_exact (pre-patch ideal)", || {
         run_mode(&evts, StatMode::AggregateExact)
@@ -53,22 +92,36 @@ fn main() {
     b.bench("flat_aggregate_buggy (clean + guard)", || {
         run_mode(&evts, StatMode::AggregateBuggy)
     });
-    b.bench("per_stream_map (the paper's tip)", || {
+    b.bench("per_stream_by_id (intern memo + search)", || {
         run_mode(&evts, StatMode::PerStream)
     });
-    // many-streams stress: 64 streams instead of 4
-    let mut rng = SplitMix64::new(7);
-    let evts64: Vec<_> = evts
-        .iter()
-        .map(|(t, o, _, c)| (*t, *o, rng.next_below(64), *c))
-        .collect();
-    b.bench("per_stream_map_64_streams", || {
+    // many-streams stress: 64 streams instead of 4 — the alternating
+    // pattern defeats any single-entry memo, which is exactly where
+    // interned slots pay off
+    let evts64 = events(64);
+    b.bench("per_stream_by_id_64_streams", || {
         run_mode(&evts64, StatMode::PerStream)
+    });
+    let evts64_slots: Vec<_> = evts64
+        .iter()
+        .map(|(t, o, s, c)| (*t, *o, *s as StreamSlot, *c))
+        .collect();
+    b.bench("per_stream_slot_indexed_64_streams", || {
+        run_slot_indexed(&evts64_slots)
+    });
+    b.bench("btreemap_strawman_64_streams (seed dram/icnt)", || {
+        run_btreemap_strawman(&evts64)
     });
     b.report("ABL-1: stat-increment hot path (items = inc_stats calls)");
 
     let flat = b.results()[0].median;
     let tip = b.results()[2].median;
-    println!("\nper-stream overhead vs flat: {:.2}x",
+    let by_id64 = b.results()[3].median;
+    let slot64 = b.results()[4].median;
+    // like-for-like ratios: tip-vs-flat on the 4-stream mix, and the
+    // interning win (slot-indexed vs by-id) on the 64-stream mix
+    println!("\nper-stream overhead vs flat (4 streams): {:.2}x",
              tip.as_secs_f64() / flat.as_secs_f64());
+    println!("slot-indexed speedup vs by-id (64 streams): {:.2}x",
+             by_id64.as_secs_f64() / slot64.as_secs_f64());
 }

@@ -17,9 +17,10 @@ fn run(bench_workload: &streamsim::trace::Workload, mode: StatMode)
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(bench_workload).unwrap();
     sim.run().unwrap();
-    let total = sim.stats().l1.total_table().total()
-        + sim.stats().l2.total_table().total();
-    let dropped = sim.stats().l1.dropped() + sim.stats().l2.dropped();
+    let total = sim.stats().l1().total_table().total()
+        + sim.stats().l2().total_table().total();
+    let dropped =
+        sim.stats().l1().dropped() + sim.stats().l2().dropped();
     (total, dropped)
 }
 

@@ -39,7 +39,8 @@ pub fn run_figure(title: &str, bench: &str, preset: &str) {
              tw.tip_serialized.stats.total_cycles as f64
                  / tw.tip.stats.total_cycles as f64);
     println!("clean dropped increments: L1={} L2={}",
-             tw.clean.stats.l1.dropped(), tw.clean.stats.l2.dropped());
+             tw.clean.stats.l1().dropped(),
+             tw.clean.stats.l2().dropped());
     let ok = all_passed(&checks);
     println!("figure validation: {}",
              if ok { "PASS" } else { "FAIL" });

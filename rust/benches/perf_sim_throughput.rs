@@ -1,6 +1,10 @@
 //! PERF-L3 — end-to-end simulator throughput: simulated cycles/s and
 //! cache accesses/s on the paper's workloads, across presets and stat
 //! modes. This is the §Perf baseline/tracking bench for EXPERIMENTS.md.
+//!
+//! Set `STREAMSIM_BENCH_JSON=<path>` to also write the results as a
+//! JSON document — `scripts/ci.sh` uses this to record the perf
+//! trajectory in `BENCH_stats.json` at the repo root.
 
 use streamsim::config::SimConfig;
 use streamsim::sim::GpuSim;
@@ -16,6 +20,25 @@ fn sim_once(bench: &str, preset: &str, mode: StatMode) -> (u64, u64) {
     sim.enqueue_workload(&g.workload).unwrap();
     sim.run().unwrap();
     (sim.stats().total_cycles, sim.stats().total_accesses())
+}
+
+fn write_json(sections: &[(&str, &Bencher)]) {
+    let Ok(path) = std::env::var("STREAMSIM_BENCH_JSON") else {
+        return;
+    };
+    let mut doc = String::from(
+        "{\"bench\":\"perf_sim_throughput\",\"sections\":{");
+    for (i, (name, b)) in sections.iter().enumerate() {
+        if i > 0 {
+            doc.push(',');
+        }
+        doc.push_str(&format!("\"{name}\":{}", b.results_json()));
+    }
+    doc.push_str("}}");
+    match std::fs::write(&path, doc) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }
 
 fn main() {
@@ -54,4 +77,7 @@ fn main() {
         sim_once("bench3", "sm7_titanv", StatMode::PerStream).0
     });
     b3.report("PERF-L3: full TITAN V preset");
+
+    write_json(&[("cycles", &b), ("accesses_by_mode", &b2),
+                 ("titanv_full", &b3)]);
 }

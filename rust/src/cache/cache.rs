@@ -19,9 +19,9 @@
 //!
 //! The cache does **not** own stat counters: [`Cache::access`] returns
 //! the outcome and the caller (core / memory partition) records it into
-//! the per-stream [`crate::stats::CacheStats`] with the fetch's
-//! `stream_id` — mirroring how the paper threads `streamID` into
-//! `inc_stats` at every call site.
+//! the per-stream [`crate::stats::StatsEngine`] with the fetch's
+//! interned `stream_slot` — mirroring how the paper threads `streamID`
+//! into `inc_stats` at every call site.
 
 use std::collections::VecDeque;
 
@@ -327,6 +327,7 @@ impl Cache {
             access_type: AccessType::L2WrbkAcc,
             is_write: true,
             stream_id: cause.stream_id,
+            stream_slot: cause.stream_slot,
             kernel_uid: cause.kernel_uid,
             l1_bypass: false,
             ret: None,
@@ -399,6 +400,7 @@ mod tests {
             access_type: AccessType::GlobalAccR,
             is_write: false,
             stream_id: stream,
+            stream_slot: stream as u32,
             kernel_uid: 1,
             l1_bypass: false,
             ret: Some(ReturnPath { core_id: 0, tb_slot: 0, warp_idx: 0 }),
@@ -413,6 +415,7 @@ mod tests {
             access_type: AccessType::GlobalAccW,
             is_write: true,
             stream_id: stream,
+            stream_slot: stream as u32,
             kernel_uid: 1,
             l1_bypass: false,
             ret: None,

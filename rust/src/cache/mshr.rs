@@ -138,6 +138,7 @@ mod tests {
             access_type: AccessType::GlobalAccR,
             is_write: false,
             stream_id: stream,
+            stream_slot: stream as u32,
             kernel_uid: 1,
             l1_bypass: false,
             ret: None,

@@ -4,7 +4,8 @@
 //! streamsim run      --bench l2_lat | --trace kernelslist.g
 //!                    [--preset sm7_titanv_mini] [--stat-mode tip]
 //!                    [--serialize] [--config FILE] [-o key value]...
-//!                    [--timeline] [--csv PATH] [--verbose]
+//!                    [--timeline] [--csv PATH] [--stats-json PATH]
+//!                    [--verbose]
 //! streamsim validate --bench l2_lat [--preset ...] [--figure]
 //! streamsim trace-gen --bench bench1 --out DIR
 //! streamsim functional [--artifacts DIR]
@@ -48,7 +49,8 @@ pub struct RunArgs {
     pub verbose: bool,
     /// Print the per-stream energy breakdown (§6 extension).
     pub power: bool,
-    /// Write a machine-readable result document.
+    /// Write a machine-readable result document
+    /// (`--stats-json` / `--json`).
     pub json: Option<PathBuf>,
 }
 
@@ -80,7 +82,7 @@ USAGE:
                       [--preset NAME] [--stat-mode tip|clean|exact]
                       [--serialize] [--config FILE] [-o KEY VALUE]...
                       [--timeline] [--power] [--csv PATH]
-                      [--json PATH] [--verbose]
+                      [--stats-json PATH] [--verbose]
   streamsim validate  --bench NAME [--preset NAME] [--figure]
   streamsim trace-gen --bench NAME --out DIR
   streamsim functional [--artifacts DIR]
@@ -135,9 +137,9 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     }
                     "--timeline" => a.timeline = true,
                     "--power" => a.power = true,
-                    "--json" => {
-                        a.json =
-                            Some(next_val("--json", &mut it)?.into());
+                    "--stats-json" | "--json" => {
+                        a.json = Some(
+                            next_val(flag.as_str(), &mut it)?.into());
                     }
                     "--csv" => {
                         a.csv = Some(next_val("--csv", &mut it)?.into());
@@ -238,32 +240,41 @@ pub fn execute(cmd: Command) -> Result<String> {
             sim.enqueue_workload(&workload)?;
             sim.run()?;
             let stats = sim.stats();
+            let engine = &stats.engine;
             let mut out = String::new();
             let _ = writeln!(out, "config: {}", sim.config().summary());
             let _ = writeln!(out, "cycles: {}", stats.total_cycles);
             let _ = writeln!(out, "kernels: {}", stats.kernels_done);
             out.push_str(&stat_print::print_all_streams(
-                &stats.l1, "Total_core_cache_stats_breakdown"));
+                stats.l1(), "Total_core_cache_stats_breakdown"));
             out.push_str(&stat_print::print_all_streams(
-                &stats.l2, "L2_cache_stats_breakdown"));
+                stats.l2(), "L2_cache_stats_breakdown"));
+            // the §6 extension domains, straight from the engine
+            let _ = writeln!(out, "DRAM/ICNT per-stream totals:");
+            out.push_str(&stat_print::print_scalar_per_stream(
+                "DRAM_accesses",
+                &engine.per_stream(crate::stats::StatDomain::Dram)));
+            out.push_str(&stat_print::print_scalar_per_stream(
+                "ICNT_flits",
+                &engine.per_stream(crate::stats::StatDomain::Icnt)));
+            if engine.dropped_responses() > 0 {
+                let _ = writeln!(out, "WARNING: {} responses dropped \
+                                       (no return path)",
+                                 engine.dropped_responses());
+            }
             if a.timeline {
                 out.push_str(&sim.render_timeline(72));
             }
             if a.power {
-                let p = crate::stats::PowerStats::from_counters(
-                    &crate::stats::EnergyModel::default(),
-                    &stats.l1, &stats.l2,
-                    &sim.dram_per_stream(), &sim.icnt_per_stream());
-                out.push_str(&p.render());
+                out.push_str(&engine.power_stats().render());
             }
             if let Some(csv) = &a.csv {
-                std::fs::write(csv, stat_print::to_csv(&stats.l2))?;
+                std::fs::write(csv, stat_print::to_csv(stats.l2()))?;
                 let _ = writeln!(out, "wrote {}", csv.display());
             }
             if let Some(json) = &a.json {
                 let doc = crate::stats::export::to_json(
-                    sim.config().stat_mode.label(), stats,
-                    &sim.dram_per_stream(), &sim.icnt_per_stream());
+                    sim.config().stat_mode.label(), stats);
                 std::fs::write(json, doc)?;
                 let _ = writeln!(out, "wrote {}", json.display());
             }
@@ -373,17 +384,53 @@ mod tests {
     }
 
     #[test]
+    fn parses_stats_json_alias() {
+        for flag in ["--stats-json", "--json"] {
+            let cmd = parse(&sv(&["run", "--bench", "l2_lat", flag,
+                                  "/tmp/x.json"])).unwrap();
+            let Command::Run(a) = cmd else { panic!() };
+            assert_eq!(a.json.as_deref(),
+                       Some(std::path::Path::new("/tmp/x.json")));
+        }
+    }
+
+    #[test]
     fn execute_run_l2_lat_end_to_end() {
         let out = execute(Command::Run(RunArgs {
             bench: Some("l2_lat".into()),
             preset: "minimal".into(),
             timeline: true,
+            power: true,
             ..RunArgs::default()
         }))
         .unwrap();
         assert!(out.contains("L2_cache_stats_breakdown"));
         assert!(out.contains("GLOBAL_ACC_R"));
         assert!(out.contains("stream"));
+        // the engine-backed extension sections
+        assert!(out.contains("DRAM_accesses["), "{out}");
+        assert!(out.contains("ICNT_flits["), "{out}");
+        assert!(out.contains("Per_stream_power_breakdown"), "{out}");
+    }
+
+    #[test]
+    fn execute_run_writes_stats_json() {
+        let path = std::env::temp_dir()
+            .join("streamsim_cli_stats.json");
+        let _ = std::fs::remove_file(&path);
+        let out = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "minimal".into(),
+            json: Some(path.clone()),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(out.contains("wrote"));
+        let doc = std::fs::read_to_string(&path).unwrap();
+        assert!(doc.contains("\"dram_per_stream\""));
+        assert!(doc.contains("\"power_per_stream_fj\""));
+        assert!(doc.contains("\"dropped_responses\":0"));
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -8,9 +8,13 @@
 //! comes from multithreading across warps, as on real SMs); stores are
 //! fire-and-forget.
 //!
-//! Every L1 access records a per-stream stat with the issuing kernel's
-//! `stream_id` — the L1 side of the paper's
-//! `Total_core_cache_stats_breakdown`.
+//! Every L1 access records a per-stream stat — the L1 side of the
+//! paper's `Total_core_cache_stats_breakdown` — via
+//! [`StatsEngine::inc_core`]: the increment is admitted centrally
+//! (mode/guard) and accumulated in this core's
+//! [`crate::stats::CoreStatShard`], merged on kernel exit. The stream
+//! slot carried by each TB was interned once at kernel launch, so the
+//! whole path is array indexing.
 
 use std::collections::VecDeque;
 
@@ -20,9 +24,9 @@ use crate::config::SimConfig;
 use crate::core::coalesce::coalesce_sectors;
 use crate::mem::fetch::{FetchIdAlloc, MemFetch, ReturnPath};
 use crate::mem::icnt::DelayQueue;
-use crate::stats::CacheStats;
+use crate::stats::StatsEngine;
 use crate::trace::{MemInstr, MemSpace, TbTrace, TraceOp};
-use crate::{Cycle, KernelUid, StreamId};
+use crate::{Cycle, KernelUid, StreamId, StreamSlot};
 
 /// One resident warp.
 #[derive(Debug)]
@@ -50,6 +54,8 @@ impl WarpCtx {
 struct ResidentTb {
     kernel_uid: KernelUid,
     stream_id: StreamId,
+    /// Interned slot of `stream_id` (assigned at kernel launch).
+    stream_slot: StreamSlot,
     tb_index: usize,
     warps: Vec<WarpCtx>,
 }
@@ -125,8 +131,10 @@ impl SimtCore {
             && self.resident_warps() + warps <= self.max_warps
     }
 
-    /// Place a TB on this core. Panics if `can_accept` was false.
-    pub fn accept_tb(&mut self, kernel_uid: KernelUid, stream_id: StreamId,
+    /// Place a TB on this core. `stream_slot` is the launch-time
+    /// interned slot of `stream_id`. Panics if `can_accept` was false.
+    pub fn accept_tb(&mut self, kernel_uid: KernelUid,
+                     stream_id: StreamId, stream_slot: StreamSlot,
                      tb_index: usize, trace: &TbTrace) {
         let slot = self
             .slots
@@ -138,6 +146,7 @@ impl SimtCore {
         self.slots[slot] = Some(ResidentTb {
             kernel_uid,
             stream_id,
+            stream_slot,
             tb_index,
             warps: trace
                 .warps
@@ -151,9 +160,9 @@ impl SimtCore {
         });
     }
 
-    /// Advance one cycle. L1 stats land in `l1_stats` keyed by each
-    /// fetch's stream.
-    pub fn cycle(&mut self, now: Cycle, l1_stats: &mut CacheStats,
+    /// Advance one cycle. L1 stats land in the engine keyed by each
+    /// fetch's interned stream slot.
+    pub fn cycle(&mut self, now: Cycle, engine: &mut StatsEngine,
                  ids: &mut FetchIdAlloc) {
         // fast path: nothing resident and nothing in flight
         if self.resident == 0
@@ -168,7 +177,7 @@ impl SimtCore {
         }
 
         // 2. LDST unit: up to issue_width transactions per cycle.
-        self.ldst_cycle(now, l1_stats);
+        self.ldst_cycle(now, engine);
 
         // 3. Warp issue: up to issue_width ready warps, round-robin.
         self.issue_cycle(now, ids);
@@ -184,7 +193,7 @@ impl SimtCore {
         }
     }
 
-    fn ldst_cycle(&mut self, now: Cycle, l1_stats: &mut CacheStats) {
+    fn ldst_cycle(&mut self, now: Cycle, engine: &mut StatsEngine) {
         for _ in 0..self.issue_width {
             let Some(front) = self.ldst_queue.front() else { break };
             // L1 bypass (`.cg`) or no L1: straight to the interconnect.
@@ -196,11 +205,13 @@ impl SimtCore {
             let l1 = self.l1.as_mut().unwrap();
             let f = front.clone();
             let res = l1.access(&f, now);
-            l1_stats.inc(f.access_type, res.outcome, f.stream_id, now);
+            engine.inc_core(self.id, f.stream_slot, f.access_type,
+                            res.outcome, now);
             if res.outcome == AccessOutcome::ReservationFail {
-                l1_stats.inc_fail(f.access_type,
-                                  res.fail.expect("fail reason"),
-                                  f.stream_id, now);
+                engine.inc_core_fail(self.id, f.stream_slot,
+                                     f.access_type,
+                                     res.fail.expect("fail reason"),
+                                     now);
                 break; // structural stall: retry same txn next cycle
             }
             self.ldst_queue.pop_front();
@@ -242,7 +253,8 @@ impl SimtCore {
             let core_id = self.id;
             let alu_latency = self.alu_latency;
             let tb = self.slots[s].as_mut().unwrap();
-            let (uid, stream) = (tb.kernel_uid, tb.stream_id);
+            let (uid, stream, slot) =
+                (tb.kernel_uid, tb.stream_id, tb.stream_slot);
             let warp = &mut tb.warps[w];
             if !warp.ready(now) {
                 continue;
@@ -255,7 +267,8 @@ impl SimtCore {
                 TraceOp::Mem(mi) => {
                     warp.busy_until = now + 1;
                     let fetches = Self::expand_mem(
-                        &mi, core_id, s as u32, w as u32, uid, stream, ids);
+                        &mi, core_id, s as u32, w as u32, uid, stream,
+                        slot, ids);
                     if !mi.is_write {
                         warp.pending_loads += fetches.len() as u32;
                     }
@@ -268,8 +281,10 @@ impl SimtCore {
     }
 
     /// Coalesce a warp memory instruction into sector fetches.
-    fn expand_mem(mi: &MemInstr, core_id: u32, tb_slot: u32, warp_idx: u32,
-                  uid: KernelUid, stream: StreamId, ids: &mut FetchIdAlloc)
+    #[allow(clippy::too_many_arguments)]
+    fn expand_mem(mi: &MemInstr, core_id: u32, tb_slot: u32,
+                  warp_idx: u32, uid: KernelUid, stream: StreamId,
+                  stream_slot: StreamSlot, ids: &mut FetchIdAlloc)
         -> Vec<MemFetch> {
         let access_type = match (mi.space, mi.is_write) {
             (MemSpace::Global, false) => AccessType::GlobalAccR,
@@ -288,6 +303,7 @@ impl SimtCore {
                 access_type,
                 is_write: mi.is_write,
                 stream_id: stream,
+                stream_slot,
                 kernel_uid: uid,
                 l1_bypass: mi.l1_bypass,
                 ret: (!mi.is_write).then_some(ReturnPath {
@@ -350,8 +366,10 @@ impl SimtCore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stats::StatMode;
+    use crate::stats::{StatDomain, StatMode};
     use crate::trace::{Dim3, KernelTrace};
+
+    const L1: StatDomain = StatDomain::L1;
 
     fn cfg() -> SimConfig {
         let mut c = SimConfig::preset("sm7_titanv_mini").unwrap();
@@ -376,13 +394,23 @@ mod tests {
         TbTrace { warps: vec![ops] }
     }
 
+    /// `accept_tb` with the stream interned through the engine, as the
+    /// dispatcher does.
+    fn accept(core: &mut SimtCore, engine: &mut StatsEngine,
+              uid: KernelUid, stream: StreamId, tb_index: usize,
+              trace: &TbTrace) {
+        let slot = engine.intern_stream(stream);
+        core.accept_tb(uid, stream, slot, tb_index, trace);
+    }
+
     /// Cycle the core + echo fetches straight back as responses (a
-    /// zero-latency perfect memory) until idle.
-    fn run_to_idle(core: &mut SimtCore, stats: &mut CacheStats) -> Cycle {
+    /// zero-latency perfect memory) until idle, then flush shards.
+    fn run_to_idle(core: &mut SimtCore, engine: &mut StatsEngine)
+        -> Cycle {
         let mut ids = FetchIdAlloc::default();
         let mut now = 0;
         while core.busy() && now < 100_000 {
-            core.cycle(now, stats, &mut ids);
+            core.cycle(now, engine, &mut ids);
             for f in core.drain_to_icnt() {
                 if f.needs_response() || (!f.is_write) {
                     core.receive_response(f, now);
@@ -391,20 +419,21 @@ mod tests {
             now += 1;
         }
         assert!(now < 100_000, "core deadlocked");
+        engine.flush_shards();
         now
     }
 
     #[test]
     fn tb_lifecycle_and_retire() {
         let mut core = SimtCore::new(0, &cfg());
+        let mut e = StatsEngine::new(StatMode::PerStream);
         assert!(core.can_accept(1));
-        core.accept_tb(1, 5, 0, &one_warp_tb(vec![
+        accept(&mut core, &mut e, 1, 5, 0, &one_warp_tb(vec![
             TraceOp::Alu { count: 3 },
             mem_op(0x1000, false, false),
         ]));
         assert_eq!(core.resident_warps(), 1);
-        let mut stats = CacheStats::new(StatMode::PerStream);
-        run_to_idle(&mut core, &mut stats);
+        run_to_idle(&mut core, &mut e);
         assert_eq!(core.take_finished(), vec![(1, 0)]);
         assert_eq!(core.resident_warps(), 0);
     }
@@ -412,25 +441,25 @@ mod tests {
     #[test]
     fn coalesced_load_counts_4_sector_accesses() {
         let mut core = SimtCore::new(0, &cfg());
-        core.accept_tb(1, 5, 0,
-                       &one_warp_tb(vec![mem_op(0x1000, false, false)]));
-        let mut stats = CacheStats::new(StatMode::PerStream);
-        run_to_idle(&mut core, &mut stats);
-        let table = stats.stream_table(5).unwrap();
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        accept(&mut core, &mut e, 1, 5, 0,
+               &one_warp_tb(vec![mem_op(0x1000, false, false)]));
+        run_to_idle(&mut core, &mut e);
+        let table = e.cache(L1).stream_table(5).unwrap();
         assert_eq!(table.total_for_type(AccessType::GlobalAccR), 4);
     }
 
     #[test]
     fn cg_load_bypasses_l1_entirely() {
         let mut core = SimtCore::new(0, &cfg());
-        core.accept_tb(1, 5, 0,
-                       &one_warp_tb(vec![mem_op(0x1000, false, true)]));
-        let mut stats = CacheStats::new(StatMode::PerStream);
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        accept(&mut core, &mut e, 1, 5, 0,
+               &one_warp_tb(vec![mem_op(0x1000, false, true)]));
         let mut ids = FetchIdAlloc::default();
         let mut now = 0;
         let mut bypassed = Vec::new();
         while core.busy() && now < 10_000 {
-            core.cycle(now, &mut stats, &mut ids);
+            core.cycle(now, &mut e, &mut ids);
             for f in core.drain_to_icnt() {
                 assert!(f.l1_bypass);
                 bypassed.push(f.clone());
@@ -440,20 +469,21 @@ mod tests {
         }
         assert_eq!(bypassed.len(), 4);
         // no L1 stats recorded at all
-        assert!(stats.streams().is_empty());
+        e.flush_shards();
+        assert!(e.cache(L1).streams().is_empty());
     }
 
     #[test]
     fn store_is_fire_and_forget_write_through() {
         let mut core = SimtCore::new(0, &cfg());
-        core.accept_tb(1, 5, 0,
-                       &one_warp_tb(vec![mem_op(0x2000, true, false)]));
-        let mut stats = CacheStats::new(StatMode::PerStream);
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        accept(&mut core, &mut e, 1, 5, 0,
+               &one_warp_tb(vec![mem_op(0x2000, true, false)]));
         let mut ids = FetchIdAlloc::default();
         let mut down_writes = 0;
         let mut now = 0;
         while core.busy() && now < 10_000 {
-            core.cycle(now, &mut stats, &mut ids);
+            core.cycle(now, &mut e, &mut ids);
             for f in core.drain_to_icnt() {
                 assert!(f.is_write);
                 down_writes += 1;
@@ -462,8 +492,9 @@ mod tests {
         }
         // 4 sectors written through
         assert_eq!(down_writes, 4);
-        assert_eq!(stats.stream_table(5).unwrap()
-                        .total_for_type(AccessType::GlobalAccW), 4);
+        e.flush_shards();
+        assert_eq!(e.cache(L1).stream_table(5).unwrap()
+                    .total_for_type(AccessType::GlobalAccW), 4);
         // TB retired without any response
         assert_eq!(core.take_finished(), vec![(1, 0)]);
     }
@@ -471,14 +502,14 @@ mod tests {
     #[test]
     fn l1_hit_after_fill() {
         let mut core = SimtCore::new(0, &cfg());
+        let mut e = StatsEngine::new(StatMode::PerStream);
         // two identical loads: first misses, second hits in L1
-        core.accept_tb(1, 5, 0, &one_warp_tb(vec![
+        accept(&mut core, &mut e, 1, 5, 0, &one_warp_tb(vec![
             mem_op(0x1000, false, false),
             mem_op(0x1000, false, false),
         ]));
-        let mut stats = CacheStats::new(StatMode::PerStream);
-        run_to_idle(&mut core, &mut stats);
-        let t = stats.stream_table(5).unwrap();
+        run_to_idle(&mut core, &mut e);
+        let t = e.cache(L1).stream_table(5).unwrap();
         // first load: 1 line MISS + 3 SECTOR_MISSes; second load: 4 HITs
         assert_eq!(t.get(AccessType::GlobalAccR, AccessOutcome::Miss), 1);
         assert_eq!(t.get(AccessType::GlobalAccR,
@@ -489,16 +520,16 @@ mod tests {
     #[test]
     fn two_tbs_from_different_streams_attribute_separately() {
         let mut core = SimtCore::new(0, &cfg());
-        core.accept_tb(1, 10, 0,
-                       &one_warp_tb(vec![mem_op(0x1000, false, false)]));
-        core.accept_tb(2, 20, 0,
-                       &one_warp_tb(vec![mem_op(0x8000, false, false)]));
-        let mut stats = CacheStats::new(StatMode::PerStream);
-        run_to_idle(&mut core, &mut stats);
-        assert_eq!(stats.stream_table(10).unwrap()
-                        .total_for_type(AccessType::GlobalAccR), 4);
-        assert_eq!(stats.stream_table(20).unwrap()
-                        .total_for_type(AccessType::GlobalAccR), 4);
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        accept(&mut core, &mut e, 1, 10, 0,
+               &one_warp_tb(vec![mem_op(0x1000, false, false)]));
+        accept(&mut core, &mut e, 2, 20, 0,
+               &one_warp_tb(vec![mem_op(0x8000, false, false)]));
+        run_to_idle(&mut core, &mut e);
+        assert_eq!(e.cache(L1).stream_table(10).unwrap()
+                    .total_for_type(AccessType::GlobalAccR), 4);
+        assert_eq!(e.cache(L1).stream_table(20).unwrap()
+                    .total_for_type(AccessType::GlobalAccR), 4);
     }
 
     #[test]
@@ -507,12 +538,13 @@ mod tests {
         c.max_tbs_per_core = 2;
         c.max_warps_per_core = 3;
         let mut core = SimtCore::new(0, &c);
-        core.accept_tb(1, 0, 0, &TbTrace {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        accept(&mut core, &mut e, 1, 0, 0, &TbTrace {
             warps: vec![vec![TraceOp::Alu { count: 1 }]; 2],
         });
         assert!(core.can_accept(1));
         assert!(!core.can_accept(2)); // warp limit
-        core.accept_tb(1, 0, 1, &one_warp_tb(vec![]));
+        accept(&mut core, &mut e, 1, 0, 1, &one_warp_tb(vec![]));
         assert!(!core.can_accept(1)); // slot limit
     }
 
@@ -542,7 +574,7 @@ mod tests {
         };
         k.validate().unwrap();
         let mut core = SimtCore::new(0, &cfg());
-        let mut stats = CacheStats::new(StatMode::PerStream);
+        let mut e = StatsEngine::new(StatMode::PerStream);
         let mut ids = FetchIdAlloc::default();
         let mut now = 0;
         let mut pending: Vec<usize> = (0..3).collect();
@@ -552,11 +584,11 @@ mod tests {
         while (done < 3 || core.busy()) && now < 100_000 {
             if let Some(tb) = pending.first().copied() {
                 if core.can_accept(2) {
-                    core.accept_tb(1, 2, tb, &k.tbs[tb]);
+                    accept(&mut core, &mut e, 1, 2, tb, &k.tbs[tb]);
                     pending.remove(0);
                 }
             }
-            core.cycle(now, &mut stats, &mut ids);
+            core.cycle(now, &mut e, &mut ids);
             for f in core.drain_to_icnt() {
                 if !f.is_write {
                     core.receive_response(f, now);
@@ -566,7 +598,8 @@ mod tests {
             now += 1;
         }
         assert_eq!(done, 3);
-        let t = stats.stream_table(2).unwrap();
+        e.flush_shards();
+        let t = e.cache(L1).stream_table(2).unwrap();
         // 3 TBs x 2 warps x 4 sectors reads + same writes
         assert_eq!(t.total_for_type(AccessType::GlobalAccR), 24);
         assert_eq!(t.total_for_type(AccessType::GlobalAccW), 24);

@@ -9,7 +9,7 @@
 use std::fmt::Write as _;
 
 use crate::cache::access::{AccessOutcome, AccessType};
-use crate::stats::cache_stats::CacheStats;
+use crate::stats::engine::{CacheView, StatsEngine};
 use crate::StreamId;
 
 use super::ThreeWay;
@@ -43,12 +43,13 @@ pub struct FigureData {
 }
 
 /// Collect the rows for one cache level.
-fn rows_for(cache: &'static str, tip: &CacheStats, clean: &CacheStats,
-            serialized: &CacheStats) -> Vec<FigureRow> {
+fn rows_for(cache: &'static str, tip: CacheView<'_>,
+            clean: CacheView<'_>, serialized: CacheView<'_>)
+    -> Vec<FigureRow> {
     let streams: Vec<StreamId> = tip
         .streams()
         .into_iter()
-        .filter(|s| *s != CacheStats::AGG_KEY)
+        .filter(|s| *s != StatsEngine::AGG_KEY)
         .collect();
     let tip_total = tip.total_table();
     let clean_total = clean.total_table();
@@ -80,10 +81,11 @@ fn rows_for(cache: &'static str, tip: &CacheStats, clean: &CacheStats,
 
 /// Build a [`FigureData`] from a three-way run.
 pub fn build(title: &str, tw: &ThreeWay) -> FigureData {
-    let mut rows = rows_for("L1", &tw.tip.stats.l1, &tw.clean.stats.l1,
-                            &tw.tip_serialized.stats.l1);
-    rows.extend(rows_for("L2", &tw.tip.stats.l2, &tw.clean.stats.l2,
-                         &tw.tip_serialized.stats.l2));
+    let mut rows = rows_for("L1", tw.tip.stats.l1(),
+                            tw.clean.stats.l1(),
+                            tw.tip_serialized.stats.l1());
+    rows.extend(rows_for("L2", tw.tip.stats.l2(), tw.clean.stats.l2(),
+                         tw.tip_serialized.stats.l2()));
     FigureData {
         title: title.to_string(),
         rows,

@@ -23,7 +23,7 @@ use anyhow::{Context, Result};
 use crate::cache::access::{AccessOutcome, AccessType};
 use crate::config::SimConfig;
 use crate::sim::{GpuSim, GpuStats};
-use crate::stats::{StatMode, StatTable};
+use crate::stats::{StatDomain, StatMode, StatTable};
 use crate::workloads::GeneratedWorkload;
 
 pub use figure::FigureData;
@@ -99,28 +99,44 @@ impl ThreeWay {
         };
 
         // 1. Σ_streams tip == exact aggregate (L1 and L2)
-        let tip_l2 = self.tip.stats.l2.total_table();
-        let exact_l2 = self.exact.stats.l2.total_table();
+        let tip_l2 = self.tip.stats.l2().total_table();
+        let exact_l2 = self.exact.stats.l2().total_table();
         push("sum_tip_equals_exact_l2", tip_l2 == exact_l2,
              format!("tip Σ={} exact={}", tip_l2.total(),
                      exact_l2.total()));
-        let tip_l1 = self.tip.stats.l1.total_table();
-        let exact_l1 = self.exact.stats.l1.total_table();
+        let tip_l1 = self.tip.stats.l1().total_table();
+        let exact_l1 = self.exact.stats.l1().total_table();
         push("sum_tip_equals_exact_l1", tip_l1 == exact_l1,
              format!("tip Σ={} exact={}", tip_l1.total(),
                      exact_l1.total()));
 
+        // 1b. the same Σ-invariant in the engine's extension domains
+        // (DRAM, interconnect, power) — the unified-engine guarantee
+        for d in [StatDomain::Dram, StatDomain::Icnt, StatDomain::Power] {
+            let tip_total = self.tip.stats.engine.domain_total(d);
+            let exact_total = self.exact.stats.engine.domain_total(d);
+            push(&format!("sum_tip_equals_exact_{}", d.name()),
+                 tip_total == exact_total,
+                 format!("tip Σ={tip_total} exact={exact_total}"));
+        }
+
+        // 1c. no memory response was ever dropped for lack of a
+        // return path
+        let dropped_resp = self.tip.stats.engine.dropped_responses();
+        push("no_dropped_responses", dropped_resp == 0,
+             format!("dropped={dropped_resp}"));
+
         // 2. tip >= clean cell-wise (under-count)
-        let clean_l2 = self.clean.stats.l2.total_table();
+        let clean_l2 = self.clean.stats.l2().total_table();
         push("tip_dominates_clean_l2", tip_l2.dominates(&clean_l2),
              format!("tip Σ={} clean Σ={} (dropped={})",
                      tip_l2.total(), clean_l2.total(),
-                     self.clean.stats.l2.dropped()));
-        let clean_l1 = self.clean.stats.l1.total_table();
+                     self.clean.stats.l2().dropped()));
+        let clean_l1 = self.clean.stats.l1().total_table();
         push("tip_dominates_clean_l1", tip_l1.dominates(&clean_l1),
              format!("tip Σ={} clean Σ={} (dropped={})",
                      tip_l1.total(), clean_l1.total(),
-                     self.clean.stats.l1.dropped()));
+                     self.clean.stats.l1().dropped()));
 
         // 3. serviced accesses conserved across launch gatings — only
         // guaranteed when the generator declares its L2 traffic
@@ -134,7 +150,7 @@ impl ThreeWay {
                 .map(|o| t.total_for_outcome(*o))
                 .sum::<u64>()
         };
-        let ser_l2 = self.tip_serialized.stats.l2.total_table();
+        let ser_l2 = self.tip_serialized.stats.l2().total_table();
         if g.expected.deterministic_l2_traffic {
             push("serviced_conserved_l2",
                  serviced(&tip_l2) == serviced(&ser_l2),
@@ -183,14 +199,14 @@ impl ThreeWay {
         // apply when the config has an L1 at all.
         if self.has_l1 {
             for (stream, want) in &g.expected.l1_reads {
-                let got = self.tip.stats.l1.stream_table(*stream)
+                let got = self.tip.stats.l1().stream_table(*stream)
                     .map_or(0, |t| t.total_serviced_for_type(
                         AccessType::GlobalAccR));
                 push(&format!("l1_reads_stream{stream}"), got == *want,
                      format!("got={got} want={want}"));
             }
             for (stream, want) in &g.expected.l1_writes {
-                let got = self.tip.stats.l1.stream_table(*stream)
+                let got = self.tip.stats.l1().stream_table(*stream)
                     .map_or(0, |t| t.total_serviced_for_type(
                         AccessType::GlobalAccW));
                 push(&format!("l1_writes_stream{stream}"), got == *want,
@@ -198,14 +214,14 @@ impl ThreeWay {
             }
         }
         for (stream, want) in &g.expected.l2_reads {
-            let got = self.tip.stats.l2.stream_table(*stream)
+            let got = self.tip.stats.l2().stream_table(*stream)
                 .map_or(0, |t| t.total_serviced_for_type(
                     AccessType::GlobalAccR));
             push(&format!("l2_reads_stream{stream}"), got == *want,
                  format!("got={got} want={want}"));
         }
         for (stream, want) in &g.expected.l2_writes {
-            let got = self.tip.stats.l2.stream_table(*stream)
+            let got = self.tip.stats.l2().stream_table(*stream)
                 .map_or(0, |t| t.total_serviced_for_type(
                     AccessType::GlobalAccW));
             push(&format!("l2_writes_stream{stream}"), got == *want,

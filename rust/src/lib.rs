@@ -22,8 +22,10 @@
 //! * [`core`] — SIMT core timing model (warps, scheduler, coalescer).
 //! * [`cache`] — sectored caches with MSHRs (L1D / L2).
 //! * [`mem`] — memory fetches, interconnect, DRAM partitions.
-//! * [`stats`] — **the contribution**: per-stream stat containers,
-//!   kernel launch/exit cycle tracking, Accel-Sim-format printers.
+//! * [`stats`] — **the contribution**: the unified per-stream
+//!   [`stats::StatsEngine`] (one sink for L1/L2/DRAM/interconnect/power
+//!   counters, dense interned stream slots, per-core shards), kernel
+//!   launch/exit cycle tracking, Accel-Sim-format printers.
 //! * [`timeline`] — per-stream kernel timelines (the paper's figures).
 //! * [`sim`] — the top-level [`sim::GpuSim`] clock loop.
 //! * [`harness`] — tip / clean / tip_serialized comparison harness.
@@ -52,6 +54,11 @@ pub mod workloads;
 /// Accel-Sim (`unsigned long long` there; the paper threads it through
 /// `kernel_info_t`, `mem_fetch` and `warp_inst_t`).
 pub type StreamId = u64;
+
+/// Dense slot index a [`StreamId`] is interned to by
+/// [`stats::StreamIntern`]. Interning happens once (at kernel launch);
+/// every stat increment afterwards is plain array indexing on this.
+pub type StreamSlot = u32;
 
 /// Monotonically increasing kernel launch id (`uid` in GPGPU-Sim).
 pub type KernelUid = u32;

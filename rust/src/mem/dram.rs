@@ -3,21 +3,24 @@
 //!
 //! Deliberately simple (no banks/rows): the paper's claims are about
 //! stat *attribution*, which needs realistic queueing and latency, not
-//! bank-level fidelity. Carries per-stream read/write counters — the
-//! paper's §6 "main memory" extension.
+//! bank-level fidelity. Per-stream accounting (the paper's §6 "main
+//! memory" extension) is reported straight into the
+//! [`crate::stats::StatsEngine`]'s DRAM domain, slot-indexed by each
+//! fetch's interned stream; the channel itself keeps only cheap local
+//! read/write totals for per-channel observability.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::mem::fetch::MemFetch;
-use crate::{Cycle, StreamId};
+use crate::stats::StatsEngine;
+use crate::Cycle;
 
-/// Per-stream DRAM traffic (extension; paper §6).
+/// Per-channel DRAM traffic totals (not per-stream — the per-stream
+/// breakdown lives in the engine's DRAM domain).
 #[derive(Debug, Default, Clone)]
 pub struct DramStats {
     pub reads: u64,
     pub writes: u64,
-    /// streamID → serviced requests.
-    pub per_stream: BTreeMap<StreamId, u64>,
 }
 
 /// One DRAM channel behind a memory partition.
@@ -47,8 +50,10 @@ impl Dram {
     }
 
     /// Service up to the per-cycle cap of ready requests; returns
-    /// completed *reads* (fills). Writes retire silently.
-    pub fn cycle(&mut self, now: Cycle) -> Vec<MemFetch> {
+    /// completed *reads* (fills). Writes retire silently. Every
+    /// serviced request records a per-stream stat in the engine.
+    pub fn cycle(&mut self, now: Cycle, engine: &mut StatsEngine)
+        -> Vec<MemFetch> {
         let mut fills = Vec::new();
         for _ in 0..self.per_cycle {
             let Some((ready, _)) = self.queue.front() else { break };
@@ -56,7 +61,7 @@ impl Dram {
                 break;
             }
             let (_, f) = self.queue.pop_front().unwrap();
-            *self.stats.per_stream.entry(f.stream_id).or_default() += 1;
+            engine.inc_dram_slot(f.stream_slot);
             if f.is_write {
                 self.stats.writes += 1;
             } else {
@@ -77,8 +82,10 @@ impl Dram {
 mod tests {
     use super::*;
     use crate::cache::access::AccessType;
+    use crate::stats::{StatDomain, StatMode};
 
-    fn f(id: u64, is_write: bool, stream: u64) -> MemFetch {
+    fn f(engine: &mut StatsEngine, id: u64, is_write: bool, stream: u64)
+        -> MemFetch {
         MemFetch {
             id,
             addr: id * 32,
@@ -90,6 +97,7 @@ mod tests {
             },
             is_write,
             stream_id: stream,
+            stream_slot: engine.intern_stream(stream),
             kernel_uid: 1,
             l1_bypass: false,
             ret: None,
@@ -98,11 +106,13 @@ mod tests {
 
     #[test]
     fn latency_and_fifo() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
         let mut d = Dram::new(100, 2);
-        d.push(0, f(1, false, 1));
-        d.push(0, f(2, false, 1));
-        assert!(d.cycle(99).is_empty());
-        let fills = d.cycle(100);
+        let (a, b) = (f(&mut e, 1, false, 1), f(&mut e, 2, false, 1));
+        d.push(0, a);
+        d.push(0, b);
+        assert!(d.cycle(99, &mut e).is_empty());
+        let fills = d.cycle(100, &mut e);
         assert_eq!(fills.iter().map(|x| x.id).collect::<Vec<_>>(),
                    vec![1, 2]);
         assert_eq!(d.pending(), 0);
@@ -110,24 +120,31 @@ mod tests {
 
     #[test]
     fn service_rate_cap() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
         let mut d = Dram::new(0, 1);
         for i in 0..3 {
-            d.push(0, f(i, false, 1));
+            let x = f(&mut e, i, false, 1);
+            d.push(0, x);
         }
-        assert_eq!(d.cycle(0).len(), 1);
-        assert_eq!(d.cycle(1).len(), 1);
-        assert_eq!(d.cycle(2).len(), 1);
+        assert_eq!(d.cycle(0, &mut e).len(), 1);
+        assert_eq!(d.cycle(1, &mut e).len(), 1);
+        assert_eq!(d.cycle(2, &mut e).len(), 1);
     }
 
     #[test]
     fn writes_retire_silently_but_are_counted() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
         let mut d = Dram::new(0, 4);
-        d.push(0, f(1, true, 5));
-        d.push(0, f(2, false, 5));
-        let fills = d.cycle(0);
+        let w = f(&mut e, 1, true, 5);
+        let r = f(&mut e, 2, false, 5);
+        d.push(0, w);
+        d.push(0, r);
+        let fills = d.cycle(0, &mut e);
         assert_eq!(fills.len(), 1);
         assert_eq!(d.stats.writes, 1);
         assert_eq!(d.stats.reads, 1);
-        assert_eq!(d.stats.per_stream[&5], 2);
+        // both serviced requests attributed to stream 5 in the engine
+        assert_eq!(e.dram_accesses(5), 2);
+        assert_eq!(e.per_stream(StatDomain::Dram), vec![(5, 2)]);
     }
 }

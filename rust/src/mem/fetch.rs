@@ -3,11 +3,14 @@
 //! The paper's change: `mem_fetch` (and `warp_inst_t`) now carry
 //! `streamID`, propagated from the kernel object, "which allowed us to
 //! identify which stream a given statistic should be updating throughout
-//! GPGPU-Sim". [`MemFetch::stream_id`] is that field; every stat
-//! increment in the simulator reads it.
+//! GPGPU-Sim". [`MemFetch::stream_id`] is that field. Alongside it,
+//! [`MemFetch::stream_slot`] carries the stream's dense
+//! [`crate::stats::StreamIntern`] slot (assigned once at kernel
+//! launch), so every stat increment downstream is array indexing in the
+//! [`crate::stats::StatsEngine`], never a map lookup.
 
 use crate::cache::access::AccessType;
-use crate::{KernelUid, StreamId};
+use crate::{KernelUid, StreamId, StreamSlot};
 
 /// Where a fetch should be returned to once serviced.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,6 +37,9 @@ pub struct MemFetch {
     pub is_write: bool,
     /// **The paper's field**: the CUDA stream of the issuing kernel.
     pub stream_id: StreamId,
+    /// `stream_id`'s interned dense slot (see
+    /// [`crate::stats::StatsEngine::intern_stream`]).
+    pub stream_slot: StreamSlot,
     /// Issuing kernel's runtime uid.
     pub kernel_uid: KernelUid,
     /// Whether this fetch skips L1 (`ld.global.cg`).
@@ -89,6 +95,7 @@ mod tests {
             },
             is_write,
             stream_id: 3,
+            stream_slot: 0,
             kernel_uid: 9,
             l1_bypass: false,
             ret: Some(ReturnPath { core_id: 0, tb_slot: 1, warp_idx: 2 }),

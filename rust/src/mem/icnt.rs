@@ -3,14 +3,17 @@
 //!
 //! Modeled as two delay queues (core→mem, mem→core) with a per-cycle
 //! flit budget each way — enough fidelity for stat attribution and
-//! contention-induced timing shifts. Carries **per-stream traffic
-//! counters**: the paper's §6 names the interconnect as the next
-//! component to get per-stream stats; we implement that extension.
+//! contention-induced timing shifts. Per-stream flit accounting (the
+//! paper's §6 names the interconnect as the next component to get
+//! per-stream stats) is reported straight into the
+//! [`crate::stats::StatsEngine`]'s Icnt domain, slot-indexed by each
+//! fetch's interned stream.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::mem::fetch::MemFetch;
-use crate::{Cycle, StreamId};
+use crate::stats::{IcntDir, StatsEngine};
+use crate::Cycle;
 
 /// FIFO whose entries become visible `latency` cycles after push.
 #[derive(Debug)]
@@ -50,22 +53,12 @@ impl<T> DelayQueue<T> {
     }
 }
 
-/// Direction-tagged per-stream flit counters (extension; paper §6).
-#[derive(Debug, Default, Clone)]
-pub struct IcntStats {
-    /// streamID → flits toward memory.
-    pub to_mem_flits: BTreeMap<StreamId, u64>,
-    /// streamID → flits toward cores.
-    pub to_core_flits: BTreeMap<StreamId, u64>,
-}
-
 /// The crossbar.
 #[derive(Debug)]
 pub struct Icnt {
     to_mem: DelayQueue<MemFetch>,
     to_core: DelayQueue<MemFetch>,
     flits_per_cycle: u32,
-    pub stats: IcntStats,
 }
 
 impl Icnt {
@@ -75,19 +68,20 @@ impl Icnt {
             to_mem: DelayQueue::new(latency),
             to_core: DelayQueue::new(latency),
             flits_per_cycle,
-            stats: IcntStats::default(),
         }
     }
 
     /// Core side: send a request toward the partitions.
-    pub fn push_to_mem(&mut self, now: Cycle, f: MemFetch) {
-        *self.stats.to_mem_flits.entry(f.stream_id).or_default() += 1;
+    pub fn push_to_mem(&mut self, now: Cycle, f: MemFetch,
+                       engine: &mut StatsEngine) {
+        engine.inc_icnt_slot(IcntDir::ToMem, f.stream_slot);
         self.to_mem.push(now, f);
     }
 
     /// Partition side: send a response toward the cores.
-    pub fn push_to_core(&mut self, now: Cycle, f: MemFetch) {
-        *self.stats.to_core_flits.entry(f.stream_id).or_default() += 1;
+    pub fn push_to_core(&mut self, now: Cycle, f: MemFetch,
+                        engine: &mut StatsEngine) {
+        engine.inc_icnt_slot(IcntDir::ToCore, f.stream_slot);
         self.to_core.push(now, f);
     }
 
@@ -125,8 +119,9 @@ impl Icnt {
 mod tests {
     use super::*;
     use crate::cache::access::AccessType;
+    use crate::stats::StatMode;
 
-    fn f(id: u64, stream: u64) -> MemFetch {
+    fn f(engine: &mut StatsEngine, id: u64, stream: u64) -> MemFetch {
         MemFetch {
             id,
             addr: id * 32,
@@ -134,6 +129,7 @@ mod tests {
             access_type: AccessType::GlobalAccR,
             is_write: false,
             stream_id: stream,
+            stream_slot: engine.intern_stream(stream),
             kernel_uid: 1,
             l1_bypass: false,
             ret: None,
@@ -159,9 +155,11 @@ mod tests {
 
     #[test]
     fn bandwidth_cap_per_cycle() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
         let mut icnt = Icnt::new(0, 2);
         for i in 0..5 {
-            icnt.push_to_mem(0, f(i, 0));
+            let x = f(&mut e, i, 0);
+            icnt.push_to_mem(0, x, &mut e);
         }
         assert_eq!(icnt.drain_to_mem(0).len(), 2);
         assert_eq!(icnt.drain_to_mem(0).len(), 2); // next cycle's budget
@@ -171,8 +169,10 @@ mod tests {
 
     #[test]
     fn latency_delays_delivery() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
         let mut icnt = Icnt::new(8, 32);
-        icnt.push_to_core(100, f(1, 3));
+        let x = f(&mut e, 1, 3);
+        icnt.push_to_core(100, x, &mut e);
         assert!(icnt.drain_to_core(107).is_empty());
         let got = icnt.drain_to_core(108);
         assert_eq!(got.len(), 1);
@@ -181,12 +181,16 @@ mod tests {
 
     #[test]
     fn per_stream_flit_accounting() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
         let mut icnt = Icnt::new(0, 32);
-        icnt.push_to_mem(0, f(1, 7));
-        icnt.push_to_mem(0, f(2, 7));
-        icnt.push_to_core(0, f(3, 9));
-        assert_eq!(icnt.stats.to_mem_flits[&7], 2);
-        assert_eq!(icnt.stats.to_core_flits[&9], 1);
-        assert!(icnt.stats.to_mem_flits.get(&9).is_none());
+        let (a, b, c) =
+            (f(&mut e, 1, 7), f(&mut e, 2, 7), f(&mut e, 3, 9));
+        icnt.push_to_mem(0, a, &mut e);
+        icnt.push_to_mem(0, b, &mut e);
+        icnt.push_to_core(0, c, &mut e);
+        assert_eq!(e.icnt_flits(IcntDir::ToMem, 7), 2);
+        assert_eq!(e.icnt_flits(IcntDir::ToCore, 9), 1);
+        assert_eq!(e.icnt_flits(IcntDir::ToMem, 9), 0);
+        assert_eq!(e.icnt_flits(IcntDir::ToCore, 7), 0);
     }
 }

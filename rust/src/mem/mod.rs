@@ -1,8 +1,11 @@
 //! Memory system: fetches, interconnect, DRAM, partitions.
 //!
-//! * [`fetch`] — [`fetch::MemFetch`] carrying the paper's `streamID`.
-//! * [`icnt`] — latency/BW-bounded crossbar with per-stream flit stats.
-//! * [`dram`] — FCFS DRAM channels with per-stream traffic stats.
+//! * [`fetch`] — [`fetch::MemFetch`] carrying the paper's `streamID`
+//!   plus its interned dense stream slot.
+//! * [`icnt`] — latency/BW-bounded crossbar; flits are attributed
+//!   per-stream in the [`crate::stats::StatsEngine`].
+//! * [`dram`] — FCFS DRAM channels; serviced requests are attributed
+//!   per-stream in the engine.
 //! * [`partition`] — L2 slice + DRAM channel pairs.
 
 pub mod dram;
@@ -12,5 +15,5 @@ pub mod partition;
 
 pub use dram::{Dram, DramStats};
 pub use fetch::{FetchIdAlloc, MemFetch, ReturnPath};
-pub use icnt::{DelayQueue, Icnt, IcntStats};
+pub use icnt::{DelayQueue, Icnt};
 pub use partition::{partition_of, MemPartition};

@@ -5,8 +5,9 @@
 //! 1. replayed (previously `RESERVATION_FAIL`ed) accesses retry first —
 //!    GPGPU-Sim's ICNT→L2 queue head-of-line semantics;
 //! 2. new requests from the interconnect probe the L2; every probe
-//!    records a per-stream stat with the fetch's `stream_id` (the
-//!    paper's instrumented `inc_stats` path);
+//!    records a per-stream stat in the engine's L2 domain, indexed by
+//!    the fetch's interned stream slot (the paper's instrumented
+//!    `inc_stats` path);
 //! 3. L2 miss traffic drains to DRAM; DRAM fills flow back into the L2
 //!    ([`crate::cache::Cache::fill`]) and release merged accesses;
 //! 4. hits leave through a latency queue, misses leave when filled.
@@ -19,7 +20,7 @@ use crate::config::SimConfig;
 use crate::mem::dram::Dram;
 use crate::mem::fetch::MemFetch;
 use crate::mem::icnt::DelayQueue;
-use crate::stats::CacheStats;
+use crate::stats::{StatDomain, StatsEngine};
 use crate::Cycle;
 
 /// One L2 sub-partition + DRAM channel.
@@ -69,11 +70,10 @@ impl MemPartition {
         self.incoming.push_back(f);
     }
 
-    /// Advance one cycle; stats go into the shared per-stream L2
-    /// container.
-    pub fn cycle(&mut self, now: Cycle, l2_stats: &mut CacheStats) {
+    /// Advance one cycle; L2 and DRAM stats go into the unified engine.
+    pub fn cycle(&mut self, now: Cycle, engine: &mut StatsEngine) {
         // 3a. DRAM fills -> L2 -> merged responses
-        for fill in self.dram.cycle(now) {
+        for fill in self.dram.cycle(now, engine) {
             for resp in self.l2.fill(fill.addr, now) {
                 self.outgoing.push(resp);
             }
@@ -92,13 +92,15 @@ impl MemPartition {
             };
             budget -= 1;
             let res = self.l2.access(&f, now);
-            l2_stats.inc(f.access_type, res.outcome, f.stream_id, now);
+            engine.inc_slot(StatDomain::L2, f.stream_slot,
+                            f.access_type, res.outcome, now);
             match res.outcome {
                 AccessOutcome::ReservationFail => {
-                    l2_stats.inc_fail(
+                    engine.inc_fail_slot(
+                        StatDomain::L2,
+                        f.stream_slot,
                         f.access_type,
                         res.fail.expect("fail reason"),
-                        f.stream_id,
                         now,
                     );
                     // head-of-line replay next cycle
@@ -143,7 +145,8 @@ impl MemPartition {
             || self.l2.miss_queue_len() > 0
     }
 
-    /// DRAM-side statistics (per-stream extension).
+    /// This channel's local read/write totals (per-stream DRAM stats
+    /// live in the engine's DRAM domain).
     pub fn dram_stats(&self) -> &crate::mem::dram::DramStats {
         &self.dram.stats
     }
@@ -168,7 +171,8 @@ mod tests {
         SimConfig::preset("minimal").unwrap()
     }
 
-    fn rd(id: u64, addr: u64, stream: u64) -> MemFetch {
+    fn rd(engine: &mut StatsEngine, id: u64, addr: u64, stream: u64)
+        -> MemFetch {
         MemFetch {
             id,
             addr,
@@ -176,6 +180,7 @@ mod tests {
             access_type: AccessType::GlobalAccR,
             is_write: false,
             stream_id: stream,
+            stream_slot: engine.intern_stream(stream),
             kernel_uid: 1,
             l1_bypass: true,
             ret: Some(ReturnPath { core_id: 0, tb_slot: 0, warp_idx: 0 }),
@@ -183,12 +188,12 @@ mod tests {
     }
 
     /// Run the partition until idle, collecting responses.
-    fn run_until_idle(p: &mut MemPartition, stats: &mut CacheStats,
+    fn run_until_idle(p: &mut MemPartition, engine: &mut StatsEngine,
                       start: Cycle) -> (Vec<MemFetch>, Cycle) {
         let mut out = Vec::new();
         let mut now = start;
         while p.busy() && now < start + 10_000 {
-            p.cycle(now, stats);
+            p.cycle(now, engine);
             out.extend(p.drain_responses());
             now += 1;
         }
@@ -198,49 +203,56 @@ mod tests {
     #[test]
     fn miss_goes_to_dram_and_returns() {
         let mut p = MemPartition::new(0, &cfg());
-        let mut stats = CacheStats::new(StatMode::PerStream);
-        p.push_request(rd(1, 0x1000, 3));
-        let (resp, _) = run_until_idle(&mut p, &mut stats, 0);
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        let f = rd(&mut e, 1, 0x1000, 3);
+        p.push_request(f);
+        let (resp, _) = run_until_idle(&mut p, &mut e, 0);
         assert_eq!(resp.len(), 1);
         assert_eq!(resp[0].id, 1);
-        assert_eq!(stats.get(3, AccessType::GlobalAccR,
-                             AccessOutcome::Miss), 1);
+        assert_eq!(e.cache(StatDomain::L2).get(
+            3, AccessType::GlobalAccR, AccessOutcome::Miss), 1);
         assert_eq!(p.dram_stats().reads, 1);
+        // per-stream DRAM attribution flows into the engine
+        assert_eq!(e.dram_accesses(3), 1);
     }
 
     #[test]
     fn hit_is_faster_than_miss() {
         let mut p = MemPartition::new(0, &cfg());
-        let mut stats = CacheStats::new(StatMode::PerStream);
-        p.push_request(rd(1, 0x1000, 1));
-        let (_, t_miss) = run_until_idle(&mut p, &mut stats, 0);
-        p.push_request(rd(2, 0x1000, 1));
-        let (resp, t_hit) = run_until_idle(&mut p, &mut stats, t_miss);
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        let f1 = rd(&mut e, 1, 0x1000, 1);
+        p.push_request(f1);
+        let (_, t_miss) = run_until_idle(&mut p, &mut e, 0);
+        let f2 = rd(&mut e, 2, 0x1000, 1);
+        p.push_request(f2);
+        let (resp, t_hit) = run_until_idle(&mut p, &mut e, t_miss);
         assert_eq!(resp.len(), 1);
-        assert_eq!(stats.get(1, AccessType::GlobalAccR,
-                             AccessOutcome::Hit), 1);
+        assert_eq!(e.cache(StatDomain::L2).get(
+            1, AccessType::GlobalAccR, AccessOutcome::Hit), 1);
         assert!(t_hit - t_miss < t_miss, "hit {t_hit} vs miss {t_miss}");
     }
 
     #[test]
     fn cross_stream_mshr_merge_single_dram_read() {
         let mut p = MemPartition::new(0, &cfg());
-        let mut stats = CacheStats::new(StatMode::PerStream);
+        let mut e = StatsEngine::new(StatMode::PerStream);
         // 4 streams hit the same sector in the same window — Fig. 2
         for s in 0..4u64 {
-            p.push_request(rd(s + 1, 0x2000, s));
+            let f = rd(&mut e, s + 1, 0x2000, s);
+            p.push_request(f);
         }
-        let (resp, _) = run_until_idle(&mut p, &mut stats, 0);
+        let (resp, _) = run_until_idle(&mut p, &mut e, 0);
         assert_eq!(resp.len(), 4);
         assert_eq!(p.dram_stats().reads, 1, "one fill services all");
         // first stream missed; some of the rest merged (MSHR_HIT)
+        let v = e.cache(StatDomain::L2);
         let misses: u64 = (0..4)
-            .map(|s| stats.get(s, AccessType::GlobalAccR,
-                               AccessOutcome::Miss))
+            .map(|s| v.get(s, AccessType::GlobalAccR,
+                           AccessOutcome::Miss))
             .sum();
         let mshr_hits: u64 = (0..4)
-            .map(|s| stats.get(s, AccessType::GlobalAccR,
-                               AccessOutcome::MshrHit))
+            .map(|s| v.get(s, AccessType::GlobalAccR,
+                           AccessOutcome::MshrHit))
             .sum();
         assert_eq!(misses, 1);
         assert_eq!(mshr_hits, 3);
@@ -261,25 +273,26 @@ mod tests {
     #[test]
     fn write_through_traffic_counts_dram_writes() {
         let mut p = MemPartition::new(0, &cfg());
-        let mut stats = CacheStats::new(StatMode::PerStream);
-        let mut w = rd(1, 0x3000, 2);
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        let mut w = rd(&mut e, 1, 0x3000, 2);
         w.is_write = true;
         w.access_type = AccessType::GlobalAccW;
         w.ret = None;
         p.push_request(w);
-        let (resp, _) = run_until_idle(&mut p, &mut stats, 0);
+        let (resp, _) = run_until_idle(&mut p, &mut e, 0);
         assert!(resp.is_empty());
         // lazy-fetch-on-read L2 (minimal preset): the write allocates a
         // partial sector with NO DRAM traffic until a read needs it
-        assert_eq!(stats.get(2, AccessType::GlobalAccW,
-                             AccessOutcome::Miss), 1);
+        assert_eq!(e.cache(StatDomain::L2).get(
+            2, AccessType::GlobalAccW, AccessOutcome::Miss), 1);
         assert_eq!(p.dram_stats().reads, 0, "lazy: no fetch on write");
         // the first read triggers the deferred fetch
-        p.push_request(rd(2, 0x3000, 2));
-        let (resp2, _) = run_until_idle(&mut p, &mut stats, 10_000);
+        let r = rd(&mut e, 2, 0x3000, 2);
+        p.push_request(r);
+        let (resp2, _) = run_until_idle(&mut p, &mut e, 10_000);
         assert_eq!(resp2.len(), 1);
-        assert_eq!(stats.get(2, AccessType::GlobalAccR,
-                             AccessOutcome::SectorMiss), 1);
+        assert_eq!(e.cache(StatDomain::L2).get(
+            2, AccessType::GlobalAccR, AccessOutcome::SectorMiss), 1);
         assert_eq!(p.dram_stats().reads, 1);
     }
 }

@@ -10,8 +10,14 @@
 //! * `concurrent_kernel_sm = 0`: the GPU runs one kernel at a time —
 //!   behaviourally the serialized gate.
 //!
+//! All statistics flow into one [`crate::stats::StatsEngine`]
+//! (`self.stats.engine`), threaded as a single `&mut` through cores,
+//! interconnect and partitions. Stream ids are interned to dense slots
+//! when a TB is dispatched; every fetch carries the slot from then on.
+//!
 //! On each kernel exit the simulator prints that kernel's stream's stats
-//! (the paper's §3.1 print fix) into [`GpuStats::exit_log`].
+//! (the paper's §3.1 print fix) into [`GpuStats::exit_log`], then clears
+//! that stream's per-window counters in **every** domain.
 
 use anyhow::{bail, Result};
 
@@ -120,6 +126,7 @@ impl GpuSim {
                       self.running.len());
             }
         }
+        self.stats.engine.flush_shards();
         self.stats.total_cycles = self.now;
         Ok(&self.stats)
     }
@@ -140,14 +147,14 @@ impl GpuSim {
         self.launch_kernels();
         self.dispatch_tbs();
 
-        // cores issue + L1
+        // cores issue + L1 (stats land in each core's engine shard)
         let mut scratch = std::mem::take(&mut self.scratch);
         for core in &mut self.cores {
-            core.cycle(self.now, &mut self.stats.l1, &mut self.ids);
+            core.cycle(self.now, &mut self.stats.engine, &mut self.ids);
             core.drain_to_icnt_into(&mut scratch);
         }
         for f in scratch.drain(..) {
-            self.icnt.push_to_mem(self.now, f);
+            self.icnt.push_to_mem(self.now, f, &mut self.stats.engine);
         }
         self.scratch = scratch;
 
@@ -164,15 +171,32 @@ impl GpuSim {
             if !p.busy() {
                 continue;
             }
-            p.cycle(self.now, &mut self.stats.l2);
+            p.cycle(self.now, &mut self.stats.engine);
             for resp in p.drain_responses() {
-                self.icnt.push_to_core(self.now, resp);
+                self.icnt.push_to_core(self.now, resp,
+                                       &mut self.stats.engine);
             }
         }
 
-        // interconnect: partitions -> cores
+        // interconnect: partitions -> cores. A response without a valid
+        // return path cannot be delivered; dropping it (with a counter)
+        // beats the old behaviour of silently misdelivering to core 0.
         for f in self.icnt.drain_to_core(self.now) {
-            let core = f.ret.map(|r| r.core_id as usize).unwrap_or(0);
+            let Some(ret) = f.ret else {
+                self.stats.engine.note_dropped_response();
+                debug_assert!(false,
+                              "response without return path (fetch {})",
+                              f.id);
+                continue;
+            };
+            let core = ret.core_id as usize;
+            if core >= self.cores.len() {
+                self.stats.engine.note_dropped_response();
+                debug_assert!(false,
+                              "response routed to nonexistent core \
+                               {core} (fetch {})", f.id);
+                continue;
+            }
             self.cores[core].receive_response(f, self.now);
         }
 
@@ -182,6 +206,8 @@ impl GpuSim {
     }
 
     /// Accel-Sim's launch window loop (+ the paper's serialized gate).
+    /// Interning the stream here is the "interned once" moment: every
+    /// stat increment this kernel causes is array indexing afterwards.
     fn launch_kernels(&mut self) {
         loop {
             if self.running.len() >= MAX_RUNNING_KERNELS {
@@ -197,6 +223,7 @@ impl GpuSim {
             };
             k.launched = true;
             k.launch_cycle = self.now;
+            self.stats.engine.intern_stream(k.stream_id);
             self.streams.launch(k.stream_id, k.uid);
             self.stats
                 .kernel_times
@@ -244,7 +271,8 @@ impl GpuSim {
             let k = &mut self.running[ki];
             let (uid, stream) = (k.uid, k.stream_id);
             let (tb_idx, trace) = k.dispatch_tb().unwrap();
-            self.cores[core].accept_tb(uid, stream, tb_idx, trace);
+            let slot = self.stats.engine.intern_stream(stream);
+            self.cores[core].accept_tb(uid, stream, slot, tb_idx, trace);
             self.dispatch_rr = (core + 1) % ncores;
             kernel_rr = (ki + 1) % nkernels;
         }
@@ -274,7 +302,8 @@ impl GpuSim {
 
     /// The paper's §3.1/§3.2 exit path: record the end cycle, print only
     /// the exiting kernel's stream's stats, reset that stream's
-    /// per-window tables.
+    /// per-window counters across every domain. Core shards merge here
+    /// (the shard merge point a parallel core loop would also use).
     fn on_kernel_exit(&mut self, k: &KernelInfo) {
         self.streams.finish(k.stream_id, k.uid);
         self.stats
@@ -282,6 +311,7 @@ impl GpuSim {
             .record_done(k.stream_id, k.uid, self.now);
         self.stats.kernels_done += 1;
 
+        self.stats.engine.flush_shards();
         let mut log = String::new();
         log.push_str(&format!(
             "kernel '{}' uid {} finished on stream {}\n",
@@ -289,16 +319,15 @@ impl GpuSim {
         log.push_str(&stat_print::print_kernel_time(
             &self.stats.kernel_times, k.stream_id, k.uid));
         log.push_str(&stat_print::print_stats(
-            &self.stats.l1, k.stream_id,
+            self.stats.l1(), k.stream_id,
             "Total_core_cache_stats_breakdown"));
         log.push_str(&stat_print::print_stats(
-            &self.stats.l2, k.stream_id, "L2_cache_stats_breakdown"));
+            self.stats.l2(), k.stream_id, "L2_cache_stats_breakdown"));
         if self.verbose {
             print!("{log}");
         }
         self.stats.exit_log.push(log);
-        self.stats.l1.clear_pw(k.stream_id);
-        self.stats.l2.clear_pw(k.stream_id);
+        self.stats.engine.clear_pw(k.stream_id);
     }
 
     /// Final stats (after [`GpuSim::run`]).
@@ -316,38 +345,13 @@ impl GpuSim {
     pub fn render_timeline(&self, width: usize) -> String {
         timeline::render_gantt(&self.stats.kernel_times, width)
     }
-
-    /// Per-stream DRAM totals across partitions (extension, paper §6).
-    pub fn dram_per_stream(&self)
-        -> std::collections::BTreeMap<crate::StreamId, u64> {
-        let mut m = std::collections::BTreeMap::new();
-        for p in &self.partitions {
-            for (s, n) in &p.dram_stats().per_stream {
-                *m.entry(*s).or_default() += n;
-            }
-        }
-        m
-    }
-
-    /// Per-stream interconnect flit totals (extension, paper §6).
-    pub fn icnt_per_stream(&self)
-        -> std::collections::BTreeMap<crate::StreamId, u64> {
-        let mut m = std::collections::BTreeMap::new();
-        for (s, n) in &self.icnt.stats.to_mem_flits {
-            *m.entry(*s).or_default() += n;
-        }
-        for (s, n) in &self.icnt.stats.to_core_flits {
-            *m.entry(*s).or_default() += n;
-        }
-        m
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cache::access::{AccessOutcome, AccessType};
-    use crate::stats::StatMode;
+    use crate::stats::{StatDomain, StatMode};
     use crate::trace::{Dim3, KernelTrace, MemInstr, MemSpace, TbTrace,
                        TraceOp};
 
@@ -401,10 +405,12 @@ mod tests {
         assert_eq!(stats.kernels_done, 1);
         assert!(stats.total_cycles > 0);
         // 4 TBs x 4 sectors read at L1
-        assert_eq!(stats.l1.stream_table(0).unwrap()
+        assert_eq!(stats.l1().stream_table(0).unwrap()
                         .total_for_type(AccessType::GlobalAccR), 16);
         assert_eq!(stats.exit_log.len(), 1);
         assert!(stats.exit_log[0].contains("stream 0"));
+        // nothing was misrouted
+        assert_eq!(stats.engine.dropped_responses(), 0);
     }
 
     #[test]
@@ -447,7 +453,8 @@ mod tests {
 
     #[test]
     fn per_stream_sum_matches_exact_aggregate() {
-        // The paper's core invariant at system level.
+        // The paper's core invariant at system level — now checked for
+        // EVERY engine domain, not just L1/L2.
         let w = Workload {
             kernels: (0..4).map(|s| kernel(s, 0x40_0000, 8)).collect(),
             memcpys: vec![],
@@ -461,10 +468,17 @@ mod tests {
         exact.enqueue_workload(&w).unwrap();
         exact.run().unwrap();
 
-        assert_eq!(tip.stats().l2.total_table(),
-                   exact.stats().l2.total_table());
-        assert_eq!(tip.stats().l1.total_table(),
-                   exact.stats().l1.total_table());
+        assert_eq!(tip.stats().l2().total_table(),
+                   exact.stats().l2().total_table());
+        assert_eq!(tip.stats().l1().total_table(),
+                   exact.stats().l1().total_table());
+        for d in [StatDomain::Dram, StatDomain::Icnt, StatDomain::Power] {
+            assert_eq!(tip.stats().engine.domain_total(d),
+                       exact.stats().engine.domain_total(d),
+                       "Σ per-stream != exact in domain {}", d.name());
+            assert!(tip.stats().engine.domain_total(d) > 0,
+                    "domain {} recorded nothing", d.name());
+        }
     }
 
     #[test]
@@ -483,10 +497,10 @@ mod tests {
         clean.run().unwrap();
 
         // tip >= clean cell-wise (the paper's Figs. 3-4 observation)
-        assert!(tip.stats().l1.total_table()
-                   .dominates(&clean.stats().l1.total_table()));
-        assert!(tip.stats().l2.total_table()
-                   .dominates(&clean.stats().l2.total_table()));
+        assert!(tip.stats().l1().total_table()
+                   .dominates(&clean.stats().l1().total_table()));
+        assert!(tip.stats().l2().total_table()
+                   .dominates(&clean.stats().l2().total_table()));
     }
 
     #[test]
@@ -518,7 +532,7 @@ mod tests {
             .unwrap();
         sim.enqueue_workload(&w).unwrap();
         sim.run().unwrap();
-        let l2 = &sim.stats().l2;
+        let l2 = sim.stats().l2();
         let misses: u64 = (0..4).map(|s| l2.get(s, AccessType::GlobalAccR,
             AccessOutcome::Miss)).sum();
         let mshr: u64 = (0..4).map(|s| l2.get(s, AccessType::GlobalAccR,
@@ -563,7 +577,7 @@ mod tests {
     }
 
     #[test]
-    fn dram_and_icnt_per_stream_extensions_populate() {
+    fn dram_icnt_power_domains_populate_per_stream() {
         // disjoint footprints so BOTH streams generate DRAM traffic
         let w = Workload {
             kernels: (0..2)
@@ -575,9 +589,43 @@ mod tests {
             .unwrap();
         sim.enqueue_workload(&w).unwrap();
         sim.run().unwrap();
-        let dram = sim.dram_per_stream();
-        let icnt = sim.icnt_per_stream();
-        assert!(dram.contains_key(&0) && dram.contains_key(&1));
-        assert!(icnt[&0] > 0 && icnt[&1] > 0);
+        let engine = &sim.stats().engine;
+        let dram = engine.per_stream(StatDomain::Dram);
+        let icnt = engine.per_stream(StatDomain::Icnt);
+        assert!(dram.iter().any(|(s, n)| *s == 0 && *n > 0)
+                && dram.iter().any(|(s, n)| *s == 1 && *n > 0),
+                "both streams must reach DRAM: {dram:?}");
+        assert!(icnt.iter().any(|(s, n)| *s == 0 && *n > 0)
+                && icnt.iter().any(|(s, n)| *s == 1 && *n > 0),
+                "both streams must cross the icnt: {icnt:?}");
+        // power attribution covers both streams and sums consistently
+        let p = engine.power_stats();
+        assert!(p.per_stream[&0].total_pj() > 0.0);
+        assert!(p.per_stream[&1].total_pj() > 0.0);
+        let fj = engine.domain_total(StatDomain::Power);
+        assert!((fj as f64 / 1e3 - p.total_pj()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kernel_exit_clears_windows_in_every_domain() {
+        let w = Workload {
+            kernels: vec![kernel(7, 0x40_0000, 4)],
+            memcpys: vec![],
+        };
+        let mut sim = GpuSim::new(mini_cfg(StatMode::PerStream, false))
+            .unwrap();
+        sim.enqueue_workload(&w).unwrap();
+        sim.run().unwrap();
+        let engine = &sim.stats().engine;
+        // the kernel exited -> its per-window counters were reset in
+        // every domain, while cumulative totals survive
+        for d in [StatDomain::L1, StatDomain::L2, StatDomain::Dram,
+                  StatDomain::Icnt, StatDomain::Power] {
+            let pw: u64 = engine.per_stream_pw(d).iter()
+                .map(|(_, n)| n).sum();
+            assert_eq!(pw, 0, "domain {} window not cleared", d.name());
+        }
+        assert!(engine.domain_total(StatDomain::Dram) > 0);
+        assert!(engine.domain_total(StatDomain::Icnt) > 0);
     }
 }

@@ -1,17 +1,19 @@
 //! GPU-level stat aggregation — what the simulation reports.
+//!
+//! All per-stream counters live in one [`StatsEngine`]; this struct
+//! adds the simulation-level bookkeeping (cycles, kernel counts, the
+//! §3.1 exit log, §3.2 kernel windows).
 
-use crate::stats::{CacheStats, KernelTimeTracker, StatMode};
+use crate::stats::{CacheView, KernelTimeTracker, StatDomain, StatMode,
+                   StatsEngine};
 use crate::Cycle;
 
 /// Everything the simulator measures in one place.
 #[derive(Debug)]
 pub struct GpuStats {
-    /// Aggregated L1D stats across all cores
-    /// (`Total_core_cache_stats_breakdown`).
-    pub l1: CacheStats,
-    /// Aggregated L2 stats across all partitions
-    /// (`L2_cache_stats_breakdown`).
-    pub l2: CacheStats,
+    /// The unified per-stream statistics sink (L1, L2, DRAM,
+    /// interconnect, power).
+    pub engine: StatsEngine,
     /// Per-stream, per-kernel launch/exit windows (§3.2).
     pub kernel_times: KernelTimeTracker,
     /// Total simulated cycles.
@@ -29,8 +31,7 @@ impl GpuStats {
     /// Fresh container with the given stat semantics.
     pub fn new(mode: StatMode) -> Self {
         Self {
-            l1: CacheStats::new(mode),
-            l2: CacheStats::new(mode),
+            engine: StatsEngine::new(mode),
             kernel_times: KernelTimeTracker::new(),
             total_cycles: 0,
             kernels_launched: 0,
@@ -39,15 +40,34 @@ impl GpuStats {
         }
     }
 
+    /// View of the aggregated L1D stats across all cores
+    /// (`Total_core_cache_stats_breakdown`).
+    pub fn l1(&self) -> CacheView<'_> {
+        self.engine.cache(StatDomain::L1)
+    }
+
+    /// View of the aggregated L2 stats across all partitions
+    /// (`L2_cache_stats_breakdown`).
+    pub fn l2(&self) -> CacheView<'_> {
+        self.engine.cache(StatDomain::L2)
+    }
+
     /// Total cache accesses recorded (throughput denominators).
+    /// Includes fail-table entries (reservation failures): a replayed
+    /// access re-probes the tag array, and Accel-Sim's access
+    /// accounting counts each probe.
     pub fn total_accesses(&self) -> u64 {
-        self.l1.total_table().total() + self.l2.total_table().total()
+        self.l1().total_table().total()
+            + self.l1().total_fail_table().total()
+            + self.l2().total_table().total()
+            + self.l2().total_fail_table().total()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::access::{AccessOutcome, AccessType, FailOutcome};
 
     #[test]
     fn fresh_stats_are_empty() {
@@ -55,5 +75,26 @@ mod tests {
         assert_eq!(s.total_accesses(), 0);
         assert_eq!(s.total_cycles, 0);
         assert!(s.exit_log.is_empty());
+    }
+
+    #[test]
+    fn total_accesses_includes_fail_table_entries() {
+        // regression: reservation failures must count toward the
+        // throughput denominator (they re-probe the tag array)
+        let mut s = GpuStats::new(StatMode::PerStream);
+        s.engine.inc(StatDomain::L2, 1, AccessType::GlobalAccR,
+                     AccessOutcome::Hit, 1);
+        s.engine.inc(StatDomain::L2, 1, AccessType::GlobalAccR,
+                     AccessOutcome::ReservationFail, 2);
+        s.engine.inc_fail(StatDomain::L2, 1, AccessType::GlobalAccR,
+                          FailOutcome::MissQueueFull, 2);
+        s.engine.inc(StatDomain::L1, 2, AccessType::GlobalAccW,
+                     AccessOutcome::Miss, 3);
+        // 3 outcome cells + 1 fail cell
+        assert_eq!(s.total_accesses(), 4);
+        // the stat tables alone under-count by exactly the fails
+        let tables_only = s.l1().total_table().total()
+            + s.l2().total_table().total();
+        assert_eq!(s.total_accesses() - tables_only, 1);
     }
 }

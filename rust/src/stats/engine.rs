@@ -1,0 +1,1269 @@
+//! The unified per-stream statistics engine — one sink for every
+//! counter the simulator keeps.
+//!
+//! The paper (§3) threads `streamID` through GPGPU-Sim so each cache
+//! keeps a `map<streamID, vector<vector<u64>>>`. The seed reproduced
+//! that per *component*: L1/L2 had proper per-stream containers, but
+//! DRAM and interconnect counts were ad-hoc `BTreeMap`s scraped
+//! together at the top level and power was recomputed post-hoc. This
+//! module centralizes all of it:
+//!
+//! * [`StreamIntern`] — stream ids are interned **once** (at kernel
+//!   launch) to dense [`StreamSlot`] indices; hot-path increments are
+//!   plain array indexing, not sorted-vec scans or `BTreeMap` lookups.
+//! * [`StatDomain`] — L1 / L2 / DRAM / interconnect / power, all served
+//!   by the same engine with the same per-kernel-window (`clear_pw`,
+//!   §3.1) semantics.
+//! * [`StatsEngine`] — the sink. Components report via
+//!   `inc(domain, stream, type, outcome, cycle)` (or the slot-indexed
+//!   fast paths the simulator uses), and the engine also accumulates
+//!   per-stream energy (femtojoules, integral) as events arrive, so
+//!   `Σ_streams per_stream == exact` holds in **every** domain.
+//! * [`CoreStatShard`] — per-core L1 accumulators merged into the main
+//!   tables on kernel exit. A future parallel core loop can hand each
+//!   core its own shard and never contend on a shared counter (cf.
+//!   *Parallelizing a modern GPU simulator*, Huerta 2025). Merging is
+//!   pure cell-wise addition, so sequential results are bit-identical.
+//!
+//! [`StatMode`] keeps the paper's three semantics (`tip` / `clean` /
+//! `exact`) including the clean-mode same-cycle cross-stream under-count
+//! ([`CycleGuard`]): admission decisions happen centrally, in arrival
+//! order, *before* storage is routed to a shard — so Figs. 1–5 of the
+//! paper reproduce bit-identically regardless of sharding.
+
+use crate::cache::access::{AccessOutcome, AccessType, FailOutcome};
+use crate::stats::power::{EnergyModel, PowerComponent, PowerStats,
+                          StreamEnergy};
+use crate::stats::table::{FailTable, StatTable};
+use crate::{Cycle, StreamId, StreamSlot};
+
+/// Which statistics semantics the engine uses (the paper's §5.1
+/// configurations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StatMode {
+    /// Patched per-stream tracking (the paper's feature, `tip`).
+    #[default]
+    PerStream,
+    /// Unpatched flat counters with the same-cycle cross-stream
+    /// under-count (`clean`).
+    AggregateBuggy,
+    /// Loss-free flat counters (oracle; not a real Accel-Sim config).
+    AggregateExact,
+}
+
+impl StatMode {
+    /// Label used in harness output / figures.
+    pub const fn label(self) -> &'static str {
+        match self {
+            StatMode::PerStream => "tip",
+            StatMode::AggregateBuggy => "clean",
+            StatMode::AggregateExact => "exact",
+        }
+    }
+}
+
+/// A statistics domain served by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatDomain {
+    /// Per-core L1D accesses (`Total_core_cache_stats_breakdown`).
+    L1,
+    /// L2 slice accesses (`L2_cache_stats_breakdown`).
+    L2,
+    /// DRAM channel serviced requests (paper §6 extension).
+    Dram,
+    /// Interconnect flits, both directions (paper §6 extension).
+    Icnt,
+    /// Accumulated per-stream energy (paper §6 `power_stats` extension).
+    Power,
+}
+
+impl StatDomain {
+    /// Number of domains.
+    pub const COUNT: usize = 5;
+
+    /// All domains.
+    pub const ALL: [StatDomain; Self::COUNT] = [
+        StatDomain::L1,
+        StatDomain::L2,
+        StatDomain::Dram,
+        StatDomain::Icnt,
+        StatDomain::Power,
+    ];
+
+    /// Display name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            StatDomain::L1 => "l1",
+            StatDomain::L2 => "l2",
+            StatDomain::Dram => "dram",
+            StatDomain::Icnt => "icnt",
+            StatDomain::Power => "power",
+        }
+    }
+}
+
+/// Interconnect traffic direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IcntDir {
+    /// Core → memory partition (requests).
+    ToMem,
+    /// Memory partition → core (responses).
+    ToCore,
+}
+
+/// Stream-id interner: `StreamId` → dense `u32` slot, assigned in first
+/// touch order. A one-entry memo covers bursts from the same stream;
+/// the cold path is a binary search over the sorted index. The sim
+/// interns at kernel launch and carries the slot on every
+/// [`crate::mem::MemFetch`], so steady-state increments never search.
+#[derive(Debug, Clone, Default)]
+pub struct StreamIntern {
+    /// slot → stream id (insertion order; the slot is the index).
+    ids: Vec<StreamId>,
+    /// Sorted `(stream id, slot)` pairs for the cold-path lookup.
+    index: Vec<(StreamId, StreamSlot)>,
+    /// Most recent `(stream id, slot)` (hot-path memo).
+    last: Option<(StreamId, StreamSlot)>,
+}
+
+impl StreamIntern {
+    /// Slot of `id`, interning it if new.
+    #[inline]
+    pub fn intern(&mut self, id: StreamId) -> StreamSlot {
+        if let Some((lid, lslot)) = self.last {
+            if lid == id {
+                return lslot;
+            }
+        }
+        let slot = match self.index.binary_search_by_key(&id, |e| e.0) {
+            Ok(i) => self.index[i].1,
+            Err(i) => {
+                let slot = self.ids.len() as StreamSlot;
+                self.ids.push(id);
+                self.index.insert(i, (id, slot));
+                slot
+            }
+        };
+        self.last = Some((id, slot));
+        slot
+    }
+
+    /// Slot of `id` if already interned.
+    #[inline]
+    pub fn lookup(&self, id: StreamId) -> Option<StreamSlot> {
+        self.index
+            .binary_search_by_key(&id, |e| e.0)
+            .ok()
+            .map(|i| self.index[i].1)
+    }
+
+    /// Stream id of an interned slot.
+    #[inline]
+    pub fn stream_of(&self, slot: StreamSlot) -> StreamId {
+        self.ids[slot as usize]
+    }
+
+    /// Number of interned streams.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// No streams interned yet?
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// Guard reproducing the clean-mode same-cycle collision loss: for the
+/// current cycle, remembers which `(type, outcome)` cells were bumped
+/// and by which stream slot. A second bump of the same cell in the same
+/// cycle by a *different* stream is dropped (bumps by the same stream
+/// are kept — the flat counter is "owned" by one updater per cell per
+/// cycle). One guard per cache domain, matching the per-container
+/// guards of the unpatched simulator.
+#[derive(Debug, Clone)]
+struct CycleGuard {
+    cycle: Cycle,
+    /// `Some(slot)` = first stream to touch the cell this cycle.
+    owner: [[Option<StreamSlot>; AccessOutcome::COUNT]; AccessType::COUNT],
+}
+
+impl Default for CycleGuard {
+    fn default() -> Self {
+        Self {
+            cycle: 0,
+            owner: [[None; AccessOutcome::COUNT]; AccessType::COUNT],
+        }
+    }
+}
+
+impl CycleGuard {
+    /// Returns `true` if this increment should be counted.
+    #[inline]
+    fn admit(&mut self, t: AccessType, o: AccessOutcome, slot: StreamSlot,
+             cycle: Cycle) -> bool {
+        if cycle != self.cycle {
+            self.cycle = cycle;
+            self.owner =
+                [[None; AccessOutcome::COUNT]; AccessType::COUNT];
+        }
+        match self.owner[t.idx()][o.idx()] {
+            None => {
+                self.owner[t.idx()][o.idx()] = Some(slot);
+                true
+            }
+            Some(owner) => owner == slot,
+        }
+    }
+}
+
+/// One stream slot of a cache domain: cumulative, per-window and fail
+/// tables (GPGPU-Sim's `m_stats` / `m_stats_pw` / `m_fail_stats`).
+#[derive(Debug, Clone, Default)]
+struct CacheSlot {
+    /// Whether this slot ever recorded in this domain (untouched slots
+    /// exist because the intern table is shared across domains).
+    touched: bool,
+    stats: StatTable,
+    stats_pw: StatTable,
+    fail: FailTable,
+}
+
+/// A full `(type, outcome)` cube domain (L1, L2), slot-indexed.
+#[derive(Debug, Default)]
+struct CacheDomain {
+    slots: Vec<CacheSlot>,
+    guard: CycleGuard,
+    /// Increments lost to the clean-mode guard.
+    dropped: u64,
+}
+
+impl CacheDomain {
+    #[inline]
+    fn slot_mut(&mut self, slot: StreamSlot) -> &mut CacheSlot {
+        let i = slot as usize;
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, CacheSlot::default);
+        }
+        &mut self.slots[i]
+    }
+}
+
+/// One stream slot of a scalar domain (DRAM requests, icnt flits).
+#[derive(Debug, Clone, Copy, Default)]
+struct ScalarSlot {
+    touched: bool,
+    total: u64,
+    /// Per-kernel-window count (cleared by [`StatsEngine::clear_pw`]).
+    pw: u64,
+}
+
+/// A per-stream scalar counter domain, slot-indexed.
+#[derive(Debug, Default)]
+struct ScalarDomain {
+    slots: Vec<ScalarSlot>,
+}
+
+impl ScalarDomain {
+    #[inline]
+    fn bump(&mut self, slot: StreamSlot) {
+        let i = slot as usize;
+        if i >= self.slots.len() {
+            self.slots.resize(i + 1, ScalarSlot::default());
+        }
+        let s = &mut self.slots[i];
+        s.touched = true;
+        s.total += 1;
+        s.pw += 1;
+    }
+}
+
+/// One stream slot of the power domain: femtojoules per component.
+/// Integral fJ keep the Σ-over-streams invariant exact.
+#[derive(Debug, Clone, Copy)]
+struct PowerSlot {
+    touched: bool,
+    fj: [u64; PowerComponent::COUNT],
+    fj_pw: [u64; PowerComponent::COUNT],
+}
+
+impl Default for PowerSlot {
+    fn default() -> Self {
+        Self {
+            touched: false,
+            fj: [0; PowerComponent::COUNT],
+            fj_pw: [0; PowerComponent::COUNT],
+        }
+    }
+}
+
+/// The per-stream energy domain, slot-indexed.
+#[derive(Debug, Default)]
+struct PowerDomain {
+    slots: Vec<PowerSlot>,
+}
+
+impl PowerDomain {
+    #[inline]
+    fn bill(&mut self, slot: StreamSlot, comp: PowerComponent, fj: u64) {
+        let i = slot as usize;
+        if i >= self.slots.len() {
+            self.slots.resize(i + 1, PowerSlot::default());
+        }
+        let s = &mut self.slots[i];
+        s.touched = true;
+        s.fj[comp.idx()] += fj;
+        s.fj_pw[comp.idx()] += fj;
+    }
+}
+
+/// Per-core L1 accumulator: the core's stat increments land here (after
+/// central mode/guard admission) and merge into the engine's L1 domain
+/// on kernel exit. Merging is cell-wise addition, so results are
+/// bit-identical to direct accumulation — but a parallel core loop can
+/// own its shard exclusively, with no shared-counter locking.
+#[derive(Debug, Clone, Default)]
+pub struct CoreStatShard {
+    slots: Vec<ShardSlot>,
+    dirty: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+struct ShardSlot {
+    stats: StatTable,
+    fail: FailTable,
+}
+
+impl CoreStatShard {
+    #[inline]
+    fn slot_mut(&mut self, slot: StreamSlot) -> &mut ShardSlot {
+        let i = slot as usize;
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, ShardSlot::default);
+        }
+        &mut self.slots[i]
+    }
+
+    #[inline]
+    fn inc(&mut self, slot: StreamSlot, t: AccessType, o: AccessOutcome) {
+        self.dirty = true;
+        self.slot_mut(slot).stats.inc(t, o);
+    }
+
+    #[inline]
+    fn inc_fail(&mut self, slot: StreamSlot, t: AccessType,
+                f: FailOutcome) {
+        self.dirty = true;
+        self.slot_mut(slot).fail.inc(t, f);
+    }
+}
+
+/// Read-only view of one cache domain (L1 or L2) of a [`StatsEngine`].
+/// Cheap to copy; all returned references borrow the engine, not the
+/// view. For the L1 domain, call [`StatsEngine::flush_shards`] first if
+/// core shards may hold unmerged increments (the simulator flushes on
+/// every kernel exit and at end of run).
+#[derive(Clone, Copy)]
+pub struct CacheView<'a> {
+    intern: &'a StreamIntern,
+    dom: &'a CacheDomain,
+    mode: StatMode,
+}
+
+impl<'a> CacheView<'a> {
+    /// Semantics in use.
+    pub fn mode(&self) -> StatMode {
+        self.mode
+    }
+
+    #[inline]
+    fn slot_of(&self, stream: StreamId) -> Option<usize> {
+        let slot = self.intern.lookup(stream)? as usize;
+        let cs = self.dom.slots.get(slot)?;
+        cs.touched.then_some(slot)
+    }
+
+    /// Streams that have recorded any stat in this domain (ascending).
+    pub fn streams(&self) -> Vec<StreamId> {
+        let mut v: Vec<StreamId> = self
+            .dom
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.touched)
+            .map(|(i, _)| self.intern.stream_of(i as StreamSlot))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Per-stream cumulative table, if the stream recorded here.
+    pub fn stream_table(&self, stream: StreamId) -> Option<&'a StatTable> {
+        self.slot_of(stream).map(|i| &self.dom.slots[i].stats)
+    }
+
+    /// Per-stream per-window table, if present.
+    pub fn stream_table_pw(&self, stream: StreamId)
+        -> Option<&'a StatTable> {
+        self.slot_of(stream).map(|i| &self.dom.slots[i].stats_pw)
+    }
+
+    /// Per-stream fail table, if present.
+    pub fn stream_fail_table(&self, stream: StreamId)
+        -> Option<&'a FailTable> {
+        self.slot_of(stream).map(|i| &self.dom.slots[i].fail)
+    }
+
+    /// Cumulative count for one cell of one stream.
+    pub fn get(&self, stream: StreamId, t: AccessType, o: AccessOutcome)
+        -> u64 {
+        self.stream_table(stream).map_or(0, |tb| tb.get(t, o))
+    }
+
+    /// Fail count for one cell of one stream.
+    pub fn get_fail(&self, stream: StreamId, t: AccessType,
+                    f: FailOutcome) -> u64 {
+        self.stream_fail_table(stream).map_or(0, |tb| tb.get(t, f))
+    }
+
+    /// Sum over all streams (equals the single table in aggregate
+    /// modes).
+    pub fn total_table(&self) -> StatTable {
+        let mut total = StatTable::new();
+        for s in self.dom.slots.iter().filter(|s| s.touched) {
+            total.add(&s.stats);
+        }
+        total
+    }
+
+    /// Sum over all streams of the fail tables.
+    pub fn total_fail_table(&self) -> FailTable {
+        let mut total = FailTable::new();
+        for s in self.dom.slots.iter().filter(|s| s.touched) {
+            total.add(&s.fail);
+        }
+        total
+    }
+
+    /// Increments lost to the clean-mode guard (0 in other modes).
+    pub fn dropped(&self) -> u64 {
+        self.dom.dropped
+    }
+}
+
+/// The unified statistics sink.
+#[derive(Debug)]
+pub struct StatsEngine {
+    mode: StatMode,
+    intern: StreamIntern,
+    /// Interned slot of [`StatsEngine::AGG_KEY`] in aggregate modes.
+    agg_slot: Option<StreamSlot>,
+    l1: CacheDomain,
+    l2: CacheDomain,
+    dram: ScalarDomain,
+    icnt_to_mem: ScalarDomain,
+    icnt_to_core: ScalarDomain,
+    power: PowerDomain,
+    shards: Vec<CoreStatShard>,
+    shards_dirty: bool,
+    energy: EnergyModel,
+    /// Precomputed per-event costs in femtojoules, by component.
+    energy_fj: [u64; PowerComponent::COUNT],
+    /// Responses that could not be routed back to a core (satellite
+    /// observability; should stay 0).
+    dropped_responses: u64,
+}
+
+impl StatsEngine {
+    /// Stream key used by the aggregate modes.
+    pub const AGG_KEY: StreamId = u64::MAX;
+
+    /// Display label for a stream key: the id, or `"all"` for the
+    /// aggregate key. Every printer/exporter uses this one mapping.
+    pub fn stream_label(stream: StreamId) -> String {
+        if stream == Self::AGG_KEY {
+            "all".to_string()
+        } else {
+            stream.to_string()
+        }
+    }
+
+    /// New engine with the given semantics and the default energy model.
+    pub fn new(mode: StatMode) -> Self {
+        Self::with_energy_model(mode, EnergyModel::default())
+    }
+
+    /// New engine with an explicit energy model.
+    pub fn with_energy_model(mode: StatMode, energy: EnergyModel) -> Self {
+        let energy_fj = energy.cost_fj();
+        Self {
+            mode,
+            intern: StreamIntern::default(),
+            agg_slot: None,
+            l1: CacheDomain::default(),
+            l2: CacheDomain::default(),
+            dram: ScalarDomain::default(),
+            icnt_to_mem: ScalarDomain::default(),
+            icnt_to_core: ScalarDomain::default(),
+            power: PowerDomain::default(),
+            shards: Vec::new(),
+            shards_dirty: false,
+            energy,
+            energy_fj,
+            dropped_responses: 0,
+        }
+    }
+
+    /// Semantics in use.
+    pub fn mode(&self) -> StatMode {
+        self.mode
+    }
+
+    /// The energy model used for power attribution.
+    pub fn energy_model(&self) -> &EnergyModel {
+        &self.energy
+    }
+
+    /// Intern a stream id (idempotent). The simulator calls this at
+    /// kernel launch and threads the returned slot through every fetch.
+    #[inline]
+    pub fn intern_stream(&mut self, stream: StreamId) -> StreamSlot {
+        self.intern.intern(stream)
+    }
+
+    /// The interner (for tests / tooling).
+    pub fn intern(&self) -> &StreamIntern {
+        &self.intern
+    }
+
+    #[inline]
+    fn agg(&mut self) -> StreamSlot {
+        match self.agg_slot {
+            Some(s) => s,
+            None => {
+                let s = self.intern.intern(Self::AGG_KEY);
+                self.agg_slot = Some(s);
+                s
+            }
+        }
+    }
+
+    /// Storage slot for a (guard-free) increment by `slot`.
+    #[inline]
+    fn storage(&mut self, slot: StreamSlot) -> StreamSlot {
+        match self.mode {
+            StatMode::PerStream => slot,
+            _ => self.agg(),
+        }
+    }
+
+    /// Mode/guard admission for a cache-domain increment. Returns the
+    /// storage slot, or `None` when the clean-mode guard drops it.
+    #[inline]
+    fn admit(&mut self, d: StatDomain, slot: StreamSlot, t: AccessType,
+             o: AccessOutcome, cycle: Cycle) -> Option<StreamSlot> {
+        match self.mode {
+            StatMode::PerStream => Some(slot),
+            StatMode::AggregateExact => Some(self.agg()),
+            StatMode::AggregateBuggy => {
+                let agg = self.agg();
+                let dom = match d {
+                    StatDomain::L1 => &mut self.l1,
+                    StatDomain::L2 => &mut self.l2,
+                    _ => return Some(agg),
+                };
+                if dom.guard.admit(t, o, slot, cycle) {
+                    Some(agg)
+                } else {
+                    dom.dropped += 1;
+                    None
+                }
+            }
+        }
+    }
+
+    /// `inc_stats(type, outcome, streamID)` + `inc_stats_pw`, by stream
+    /// id (interns on the fly; the sim uses [`StatsEngine::inc_slot`]).
+    /// Valid for the cache domains (L1, L2).
+    #[inline]
+    pub fn inc(&mut self, d: StatDomain, stream: StreamId, t: AccessType,
+               o: AccessOutcome, cycle: Cycle) {
+        let slot = self.intern.intern(stream);
+        self.inc_slot(d, slot, t, o, cycle);
+    }
+
+    /// Slot-indexed cache-domain increment (the hot path: array
+    /// indexing only).
+    #[inline]
+    pub fn inc_slot(&mut self, d: StatDomain, slot: StreamSlot,
+                    t: AccessType, o: AccessOutcome, cycle: Cycle) {
+        debug_assert!((slot as usize) < self.intern.len(),
+                      "stat increment with uninterned stream slot");
+        let Some(store) = self.admit(d, slot, t, o, cycle) else {
+            return;
+        };
+        let dom = match d {
+            StatDomain::L1 => &mut self.l1,
+            StatDomain::L2 => &mut self.l2,
+            _ => {
+                debug_assert!(false, "inc() is for cache domains");
+                return;
+            }
+        };
+        let cs = dom.slot_mut(store);
+        cs.touched = true;
+        cs.stats.inc(t, o);
+        cs.stats_pw.inc(t, o);
+        if o.is_serviced() {
+            let comp = if matches!(d, StatDomain::L1) {
+                PowerComponent::L1
+            } else {
+                PowerComponent::L2
+            };
+            let fj = self.energy_fj[comp.idx()];
+            self.power.bill(store, comp, fj);
+        }
+    }
+
+    /// `inc_fail_stats(type, reason, streamID)` for a cache domain, by
+    /// stream id.
+    #[inline]
+    pub fn inc_fail(&mut self, d: StatDomain, stream: StreamId,
+                    t: AccessType, f: FailOutcome, cycle: Cycle) {
+        let slot = self.intern.intern(stream);
+        self.inc_fail_slot(d, slot, t, f, cycle);
+    }
+
+    /// Slot-indexed fail increment (no guard — fail stats were never
+    /// subject to the clean-mode collision, matching the seed).
+    #[inline]
+    pub fn inc_fail_slot(&mut self, d: StatDomain, slot: StreamSlot,
+                         t: AccessType, f: FailOutcome, _cycle: Cycle) {
+        let store = self.storage(slot);
+        let dom = match d {
+            StatDomain::L1 => &mut self.l1,
+            StatDomain::L2 => &mut self.l2,
+            _ => {
+                debug_assert!(false, "inc_fail() is for cache domains");
+                return;
+            }
+        };
+        let cs = dom.slot_mut(store);
+        cs.touched = true;
+        cs.fail.inc(t, f);
+    }
+
+    /// L1 increment from core `core_id`, routed into that core's shard.
+    /// Admission (mode/guard) happens here, centrally and in arrival
+    /// order, so clean-mode results stay bit-identical under sharding.
+    #[inline]
+    pub fn inc_core(&mut self, core_id: u32, slot: StreamSlot,
+                    t: AccessType, o: AccessOutcome, cycle: Cycle) {
+        debug_assert!((slot as usize) < self.intern.len(),
+                      "stat increment with uninterned stream slot");
+        let Some(store) = self.admit(StatDomain::L1, slot, t, o, cycle)
+        else {
+            return;
+        };
+        if o.is_serviced() {
+            let fj = self.energy_fj[PowerComponent::L1.idx()];
+            self.power.bill(store, PowerComponent::L1, fj);
+        }
+        let shard = self.shard_mut(core_id);
+        shard.inc(store, t, o);
+        self.shards_dirty = true;
+    }
+
+    /// L1 fail increment from core `core_id` (sharded).
+    #[inline]
+    pub fn inc_core_fail(&mut self, core_id: u32, slot: StreamSlot,
+                         t: AccessType, f: FailOutcome, _cycle: Cycle) {
+        let store = self.storage(slot);
+        let shard = self.shard_mut(core_id);
+        shard.inc_fail(store, t, f);
+        self.shards_dirty = true;
+    }
+
+    #[inline]
+    fn shard_mut(&mut self, core_id: u32) -> &mut CoreStatShard {
+        let i = core_id as usize;
+        if i >= self.shards.len() {
+            self.shards.resize_with(i + 1, CoreStatShard::default);
+        }
+        &mut self.shards[i]
+    }
+
+    /// Merge every core shard into the L1 domain. Called on kernel exit
+    /// and at end of run; idempotent and cheap when nothing is pending.
+    pub fn flush_shards(&mut self) {
+        if !self.shards_dirty {
+            return;
+        }
+        let l1 = &mut self.l1;
+        for shard in &mut self.shards {
+            if !shard.dirty {
+                continue;
+            }
+            for (slot, ss) in shard.slots.iter_mut().enumerate() {
+                if ss.stats.is_empty() && ss.fail.total() == 0 {
+                    continue;
+                }
+                let cs = l1.slot_mut(slot as StreamSlot);
+                cs.touched = true;
+                cs.stats.add(&ss.stats);
+                cs.stats_pw.add(&ss.stats);
+                cs.fail.add(&ss.fail);
+                ss.stats.clear();
+                ss.fail.clear();
+            }
+            shard.dirty = false;
+        }
+        self.shards_dirty = false;
+    }
+
+    /// One DRAM serviced request for `slot`'s stream.
+    #[inline]
+    pub fn inc_dram_slot(&mut self, slot: StreamSlot) {
+        let store = self.storage(slot);
+        self.dram.bump(store);
+        let fj = self.energy_fj[PowerComponent::Dram.idx()];
+        self.power.bill(store, PowerComponent::Dram, fj);
+    }
+
+    /// One DRAM serviced request, by stream id.
+    #[inline]
+    pub fn inc_dram(&mut self, stream: StreamId) {
+        let slot = self.intern.intern(stream);
+        self.inc_dram_slot(slot);
+    }
+
+    /// One interconnect flit for `slot`'s stream.
+    #[inline]
+    pub fn inc_icnt_slot(&mut self, dir: IcntDir, slot: StreamSlot) {
+        let store = self.storage(slot);
+        match dir {
+            IcntDir::ToMem => self.icnt_to_mem.bump(store),
+            IcntDir::ToCore => self.icnt_to_core.bump(store),
+        }
+        let fj = self.energy_fj[PowerComponent::Icnt.idx()];
+        self.power.bill(store, PowerComponent::Icnt, fj);
+    }
+
+    /// One interconnect flit, by stream id.
+    #[inline]
+    pub fn inc_icnt(&mut self, dir: IcntDir, stream: StreamId) {
+        let slot = self.intern.intern(stream);
+        self.inc_icnt_slot(dir, slot);
+    }
+
+    /// A memory response had no (or an invalid) return path and was
+    /// dropped instead of being misdelivered to core 0.
+    pub fn note_dropped_response(&mut self) {
+        self.dropped_responses += 1;
+    }
+
+    /// Responses dropped for lack of a return path (should be 0).
+    pub fn dropped_responses(&self) -> u64 {
+        self.dropped_responses
+    }
+
+    /// View of a cache domain. Panics on non-cache domains.
+    pub fn cache(&self, d: StatDomain) -> CacheView<'_> {
+        let dom = match d {
+            StatDomain::L1 => &self.l1,
+            StatDomain::L2 => &self.l2,
+            _ => panic!("cache() is for the L1/L2 domains"),
+        };
+        CacheView { intern: &self.intern, dom, mode: self.mode }
+    }
+
+    fn scalar_per_stream(&self, dom: &ScalarDomain, pw: bool)
+        -> Vec<(StreamId, u64)> {
+        dom.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.touched)
+            .map(|(i, s)| {
+                (self.intern.stream_of(i as StreamSlot),
+                 if pw { s.pw } else { s.total })
+            })
+            .collect()
+    }
+
+    fn gather_per_stream(&self, d: StatDomain, pw: bool)
+        -> Vec<(StreamId, u64)> {
+        let mut v: Vec<(StreamId, u64)> = match d {
+            StatDomain::L1 | StatDomain::L2 => {
+                let view = self.cache(d);
+                view.streams()
+                    .into_iter()
+                    .map(|s| {
+                        let tb = if pw {
+                            view.stream_table_pw(s)
+                        } else {
+                            view.stream_table(s)
+                        };
+                        (s, tb.map_or(0, |t| t.total()))
+                    })
+                    .collect()
+            }
+            StatDomain::Dram => self.scalar_per_stream(&self.dram, pw),
+            StatDomain::Icnt => {
+                let n = self
+                    .icnt_to_mem
+                    .slots
+                    .len()
+                    .max(self.icnt_to_core.slots.len());
+                (0..n)
+                    .filter_map(|i| {
+                        let a = self
+                            .icnt_to_mem
+                            .slots
+                            .get(i)
+                            .copied()
+                            .unwrap_or_default();
+                        let b = self
+                            .icnt_to_core
+                            .slots
+                            .get(i)
+                            .copied()
+                            .unwrap_or_default();
+                        if !(a.touched || b.touched) {
+                            return None;
+                        }
+                        let (x, y) = if pw {
+                            (a.pw, b.pw)
+                        } else {
+                            (a.total, b.total)
+                        };
+                        Some((self.intern.stream_of(i as StreamSlot),
+                              x + y))
+                    })
+                    .collect()
+            }
+            StatDomain::Power => self
+                .power
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.touched)
+                .map(|(i, s)| {
+                    let src = if pw { &s.fj_pw } else { &s.fj };
+                    (self.intern.stream_of(i as StreamSlot),
+                     src.iter().sum())
+                })
+                .collect(),
+        };
+        v.sort_unstable_by_key(|e| e.0);
+        v
+    }
+
+    /// Per-stream cumulative totals for a domain, sorted by stream id.
+    /// Units: table-cell increments (L1/L2), serviced requests (DRAM),
+    /// flits (Icnt), femtojoules (Power).
+    pub fn per_stream(&self, d: StatDomain) -> Vec<(StreamId, u64)> {
+        self.gather_per_stream(d, false)
+    }
+
+    /// Per-stream *per-window* totals for a domain (the §3.1 window,
+    /// generalized to every layer).
+    pub fn per_stream_pw(&self, d: StatDomain) -> Vec<(StreamId, u64)> {
+        self.gather_per_stream(d, true)
+    }
+
+    /// Total over all streams for a domain.
+    pub fn domain_total(&self, d: StatDomain) -> u64 {
+        self.per_stream(d).iter().map(|(_, n)| n).sum()
+    }
+
+    /// Per-direction interconnect flit count for one stream.
+    pub fn icnt_flits(&self, dir: IcntDir, stream: StreamId) -> u64 {
+        let Some(slot) = self.intern.lookup(stream) else { return 0 };
+        let dom = match dir {
+            IcntDir::ToMem => &self.icnt_to_mem,
+            IcntDir::ToCore => &self.icnt_to_core,
+        };
+        dom.slots
+            .get(slot as usize)
+            .filter(|s| s.touched)
+            .map_or(0, |s| s.total)
+    }
+
+    /// DRAM serviced-request count for one stream.
+    pub fn dram_accesses(&self, stream: StreamId) -> u64 {
+        let Some(slot) = self.intern.lookup(stream) else { return 0 };
+        self.dram
+            .slots
+            .get(slot as usize)
+            .filter(|s| s.touched)
+            .map_or(0, |s| s.total)
+    }
+
+    /// Per-stream energy report from the power domain (picojoules).
+    pub fn power_stats(&self) -> PowerStats {
+        let mut per_stream = std::collections::BTreeMap::new();
+        for (i, s) in self.power.slots.iter().enumerate() {
+            if !s.touched {
+                continue;
+            }
+            per_stream.insert(
+                self.intern.stream_of(i as StreamSlot),
+                StreamEnergy {
+                    l1_pj: s.fj[PowerComponent::L1.idx()] as f64 / 1e3,
+                    l2_pj: s.fj[PowerComponent::L2.idx()] as f64 / 1e3,
+                    dram_pj: s.fj[PowerComponent::Dram.idx()] as f64
+                        / 1e3,
+                    icnt_pj: s.fj[PowerComponent::Icnt.idx()] as f64
+                        / 1e3,
+                },
+            );
+        }
+        PowerStats { per_stream }
+    }
+
+    fn clear_pw_slot(&mut self, slot: StreamSlot) {
+        let i = slot as usize;
+        if let Some(cs) = self.l1.slots.get_mut(i) {
+            cs.stats_pw.clear();
+        }
+        if let Some(cs) = self.l2.slots.get_mut(i) {
+            cs.stats_pw.clear();
+        }
+        if let Some(s) = self.dram.slots.get_mut(i) {
+            s.pw = 0;
+        }
+        if let Some(s) = self.icnt_to_mem.slots.get_mut(i) {
+            s.pw = 0;
+        }
+        if let Some(s) = self.icnt_to_core.slots.get_mut(i) {
+            s.pw = 0;
+        }
+        if let Some(p) = self.power.slots.get_mut(i) {
+            p.fj_pw = [0; PowerComponent::COUNT];
+        }
+    }
+
+    /// Clear the per-window counters for `stream` in **every** domain —
+    /// the paper's §3.1 kernel-exit window reset, generalized. In
+    /// per-stream mode only the exiting kernel's stream is cleared; in
+    /// aggregate modes the shared window is wiped (the unpatched
+    /// behaviour). Flushes core shards first so pending increments land
+    /// in the window they belong to.
+    pub fn clear_pw(&mut self, stream: StreamId) {
+        self.flush_shards();
+        match self.mode {
+            StatMode::PerStream => {
+                if let Some(slot) = self.intern.lookup(stream) {
+                    self.clear_pw_slot(slot);
+                }
+            }
+            _ => {
+                for slot in 0..self.intern.len() {
+                    self.clear_pw_slot(slot as StreamSlot);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GR: AccessType = AccessType::GlobalAccR;
+    const GW: AccessType = AccessType::GlobalAccW;
+    const HIT: AccessOutcome = AccessOutcome::Hit;
+    const MISS: AccessOutcome = AccessOutcome::Miss;
+    const L1: StatDomain = StatDomain::L1;
+    const L2: StatDomain = StatDomain::L2;
+
+    #[test]
+    fn intern_assigns_dense_slots_in_first_touch_order() {
+        let mut it = StreamIntern::default();
+        assert_eq!(it.intern(42), 0);
+        assert_eq!(it.intern(7), 1);
+        assert_eq!(it.intern(42), 0); // memoized
+        assert_eq!(it.intern(7), 1); // cold path after memo miss
+        assert_eq!(it.intern(1000), 2);
+        assert_eq!(it.len(), 3);
+        assert_eq!(it.lookup(7), Some(1));
+        assert_eq!(it.lookup(8), None);
+        assert_eq!(it.stream_of(2), 1000);
+    }
+
+    #[test]
+    fn per_stream_attributes_by_stream() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        e.inc(L2, 1, GR, HIT, 100);
+        e.inc(L2, 2, GR, HIT, 100);
+        e.inc(L2, 1, GR, MISS, 101);
+        let v = e.cache(L2);
+        assert_eq!(v.get(1, GR, HIT), 1);
+        assert_eq!(v.get(2, GR, HIT), 1);
+        assert_eq!(v.get(1, GR, MISS), 1);
+        assert_eq!(v.get(2, GR, MISS), 0);
+        assert_eq!(v.streams(), vec![1, 2]);
+        assert_eq!(v.dropped(), 0);
+        // L1 untouched even though the streams are interned
+        assert!(e.cache(L1).streams().is_empty());
+    }
+
+    #[test]
+    fn aggregate_exact_sums_everything() {
+        let mut e = StatsEngine::new(StatMode::AggregateExact);
+        e.inc(L2, 1, GR, HIT, 100);
+        e.inc(L2, 2, GR, HIT, 100); // same cycle, same cell: kept
+        let v = e.cache(L2);
+        assert_eq!(v.get(StatsEngine::AGG_KEY, GR, HIT), 2);
+        assert_eq!(v.total_table().get(GR, HIT), 2);
+        assert_eq!(v.streams(), vec![StatsEngine::AGG_KEY]);
+    }
+
+    #[test]
+    fn buggy_drops_same_cycle_cross_stream_collision() {
+        let mut e = StatsEngine::new(StatMode::AggregateBuggy);
+        e.inc(L2, 1, GR, HIT, 100);
+        e.inc(L2, 2, GR, HIT, 100); // dropped: other stream, same cell
+        e.inc(L2, 2, GR, HIT, 101); // new cycle: kept
+        let v = e.cache(L2);
+        assert_eq!(v.total_table().get(GR, HIT), 2);
+        assert_eq!(v.dropped(), 1);
+        // guards are per-domain: L1 unaffected
+        assert_eq!(e.cache(L1).dropped(), 0);
+    }
+
+    #[test]
+    fn buggy_keeps_same_stream_same_cycle() {
+        let mut e = StatsEngine::new(StatMode::AggregateBuggy);
+        e.inc(L2, 1, GR, HIT, 100);
+        e.inc(L2, 1, GR, HIT, 100); // same stream: kept
+        assert_eq!(e.cache(L2).total_table().get(GR, HIT), 2);
+        assert_eq!(e.cache(L2).dropped(), 0);
+    }
+
+    #[test]
+    fn buggy_different_cells_dont_collide() {
+        let mut e = StatsEngine::new(StatMode::AggregateBuggy);
+        e.inc(L2, 1, GR, HIT, 100);
+        e.inc(L2, 2, GR, MISS, 100); // different outcome cell: kept
+        e.inc(L2, 2, GW, HIT, 100); // different type cell: kept
+        assert_eq!(e.cache(L2).total_table().total(), 3);
+        assert_eq!(e.cache(L2).dropped(), 0);
+    }
+
+    #[test]
+    fn per_stream_sum_equals_exact() {
+        let mut tip = StatsEngine::new(StatMode::PerStream);
+        let mut exact = StatsEngine::new(StatMode::AggregateExact);
+        let events = [(1u64, GR, HIT, 10u64), (2, GR, HIT, 10),
+                      (3, GW, MISS, 10), (1, GR, HIT, 11),
+                      (2, GR, MISS, 11)];
+        for (stream, t, o, cyc) in events {
+            tip.inc(L2, stream, t, o, cyc);
+            exact.inc(L2, stream, t, o, cyc);
+        }
+        assert_eq!(tip.cache(L2).total_table(),
+                   exact.cache(L2).total_table());
+    }
+
+    #[test]
+    fn fail_stats_tracked_per_stream() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        e.inc_fail(L2, 5, GR, FailOutcome::MshrEntryFail, 1);
+        e.inc_fail(L2, 5, GR, FailOutcome::MshrEntryFail, 2);
+        let v = e.cache(L2);
+        assert_eq!(v.get_fail(5, GR, FailOutcome::MshrEntryFail), 2);
+        assert_eq!(v.get_fail(6, GR, FailOutcome::MshrEntryFail), 0);
+        assert_eq!(v.total_fail_table().total(), 2);
+    }
+
+    #[test]
+    fn pw_clears_only_target_stream_when_per_stream() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        e.inc(L2, 1, GR, HIT, 1);
+        e.inc(L2, 2, GR, HIT, 1);
+        e.clear_pw(1);
+        let v = e.cache(L2);
+        assert_eq!(v.stream_table_pw(1).unwrap().total(), 0);
+        assert_eq!(v.stream_table_pw(2).unwrap().total(), 1);
+        // cumulative untouched
+        assert_eq!(v.get(1, GR, HIT), 1);
+    }
+
+    #[test]
+    fn pw_clears_all_streams_when_aggregate() {
+        let mut e = StatsEngine::new(StatMode::AggregateExact);
+        e.inc(L2, 1, GR, HIT, 1);
+        e.clear_pw(99); // any stream wipes the shared window
+        assert_eq!(e.cache(L2)
+                    .stream_table_pw(StatsEngine::AGG_KEY)
+                    .unwrap()
+                    .total(), 0);
+    }
+
+    #[test]
+    fn window_semantics_cover_every_domain() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        let s1 = e.intern_stream(1);
+        let s2 = e.intern_stream(2);
+        e.inc_slot(L2, s1, GR, HIT, 5);
+        e.inc_dram_slot(s1);
+        e.inc_dram_slot(s2);
+        e.inc_icnt_slot(IcntDir::ToMem, s1);
+        e.inc_icnt_slot(IcntDir::ToCore, s1);
+        assert_eq!(e.per_stream_pw(StatDomain::Dram),
+                   vec![(1, 1), (2, 1)]);
+        assert_eq!(e.per_stream_pw(StatDomain::Icnt), vec![(1, 2)]);
+        assert!(e.per_stream_pw(StatDomain::Power)[0].1 > 0);
+        e.clear_pw(1);
+        // stream 1's windows cleared in every domain...
+        assert_eq!(e.per_stream_pw(StatDomain::Dram),
+                   vec![(1, 0), (2, 1)]);
+        assert_eq!(e.per_stream_pw(StatDomain::Icnt), vec![(1, 0)]);
+        assert_eq!(e.per_stream_pw(StatDomain::Power)
+                    .iter()
+                    .find(|(s, _)| *s == 1)
+                    .unwrap()
+                    .1, 0);
+        // ...while the cumulative totals survive
+        assert_eq!(e.per_stream(StatDomain::Dram), vec![(1, 1), (2, 1)]);
+        assert_eq!(e.per_stream(StatDomain::Icnt), vec![(1, 2)]);
+        assert_eq!(e.dram_accesses(1), 1);
+        assert_eq!(e.icnt_flits(IcntDir::ToMem, 1), 1);
+        assert_eq!(e.icnt_flits(IcntDir::ToCore, 1), 1);
+    }
+
+    #[test]
+    fn sharded_core_incs_merge_on_flush() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        let s1 = e.intern_stream(1);
+        let s2 = e.intern_stream(2);
+        e.inc_core(0, s1, GR, HIT, 1);
+        e.inc_core(3, s1, GR, HIT, 1); // different core, same stream
+        e.inc_core(3, s2, GR, MISS, 2);
+        e.inc_core_fail(0, s1, GR, FailOutcome::MissQueueFull, 3);
+        // nothing visible until the shards merge
+        assert!(e.cache(L1).streams().is_empty());
+        e.flush_shards();
+        let v = e.cache(L1);
+        assert_eq!(v.get(1, GR, HIT), 2);
+        assert_eq!(v.get(2, GR, MISS), 1);
+        assert_eq!(v.get_fail(1, GR, FailOutcome::MissQueueFull), 1);
+        assert_eq!(v.stream_table_pw(1).unwrap().total(), 2);
+        // flush is idempotent
+        e.flush_shards();
+        assert_eq!(e.cache(L1).get(1, GR, HIT), 2);
+    }
+
+    #[test]
+    fn sharded_l1_matches_direct_inc_semantics() {
+        // sharded accumulation must be bit-identical to direct incs,
+        // in every mode
+        for mode in [StatMode::PerStream, StatMode::AggregateExact,
+                     StatMode::AggregateBuggy] {
+            let mut sharded = StatsEngine::new(mode);
+            let mut direct = StatsEngine::new(mode);
+            let events = [(1u64, GR, HIT, 1u64), (2, GR, HIT, 1),
+                          (1, GR, MISS, 1), (2, GR, MISS, 2),
+                          (1, GR, HIT, 2), (1, GW, HIT, 2)];
+            for (i, (stream, t, o, cyc)) in events.iter().enumerate() {
+                let slot = sharded.intern_stream(*stream);
+                sharded.inc_core((i % 4) as u32, slot, *t, *o, *cyc);
+                direct.inc(L1, *stream, *t, *o, *cyc);
+            }
+            sharded.flush_shards();
+            assert_eq!(sharded.cache(L1).total_table(),
+                       direct.cache(L1).total_table(),
+                       "mode {:?}", mode);
+            assert_eq!(sharded.cache(L1).dropped(),
+                       direct.cache(L1).dropped(), "mode {:?}", mode);
+        }
+    }
+
+    #[test]
+    fn power_accumulates_per_stream_and_skips_fails() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        e.inc(L1, 1, GR, HIT, 1);
+        e.inc(L1, 1, GR, AccessOutcome::ReservationFail, 2); // not billed
+        e.inc(L2, 1, GR, MISS, 3);
+        e.inc_dram(1);
+        e.inc_icnt(IcntDir::ToMem, 1);
+        let m = EnergyModel::default();
+        let p = e.power_stats();
+        let e1 = &p.per_stream[&1];
+        assert_eq!(e1.l1_pj, m.l1_access_pj);
+        assert_eq!(e1.l2_pj, m.l2_access_pj);
+        assert_eq!(e1.dram_pj, m.dram_access_pj);
+        assert_eq!(e1.icnt_pj, m.icnt_flit_pj);
+        assert_eq!(e.domain_total(StatDomain::Power),
+                   ((m.l1_access_pj + m.l2_access_pj + m.dram_access_pj
+                     + m.icnt_flit_pj) * 1e3).round() as u64);
+    }
+
+    #[test]
+    fn dropped_response_counter() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        assert_eq!(e.dropped_responses(), 0);
+        e.note_dropped_response();
+        e.note_dropped_response();
+        assert_eq!(e.dropped_responses(), 2);
+    }
+
+    #[test]
+    fn sum_invariant_holds_in_every_domain_randomized() {
+        // satellite: proptest-lite case randomizing stream counts and
+        // interleavings across all domains
+        use crate::util::proptest_lite::{default_cases, run_cases};
+        run_cases("engine-sum-all-domains", 0xE9612E, default_cases(),
+                  |g| {
+            let mut tip = StatsEngine::new(StatMode::PerStream);
+            let mut exact = StatsEngine::new(StatMode::AggregateExact);
+            let nstreams = g.range(1, 8);
+            for i in 0..g.range(10, 300) {
+                let stream = g.below(nstreams);
+                let cycle = i / 3;
+                match g.index(5) {
+                    0 | 1 => {
+                        let d = if g.chance(0.5) { L1 } else { L2 };
+                        let t = AccessType::from_idx(
+                            g.index(AccessType::COUNT));
+                        let o = AccessOutcome::from_idx(
+                            g.index(AccessOutcome::COUNT));
+                        tip.inc(d, stream, t, o, cycle);
+                        exact.inc(d, stream, t, o, cycle);
+                    }
+                    2 => {
+                        tip.inc_dram(stream);
+                        exact.inc_dram(stream);
+                    }
+                    3 => {
+                        let dir = if g.chance(0.5) {
+                            IcntDir::ToMem
+                        } else {
+                            IcntDir::ToCore
+                        };
+                        tip.inc_icnt(dir, stream);
+                        exact.inc_icnt(dir, stream);
+                    }
+                    _ => {
+                        let slot = tip.intern_stream(stream);
+                        tip.inc_core((stream % 4) as u32, slot,
+                                     GR, HIT, cycle);
+                        exact.inc(L1, stream, GR, HIT, cycle);
+                    }
+                }
+            }
+            tip.flush_shards();
+            // Σ_streams tip == exact, per domain
+            assert_eq!(tip.cache(L1).total_table(),
+                       exact.cache(L1).total_table());
+            assert_eq!(tip.cache(L2).total_table(),
+                       exact.cache(L2).total_table());
+            for d in [StatDomain::Dram, StatDomain::Icnt,
+                      StatDomain::Power] {
+                assert_eq!(tip.domain_total(d), exact.domain_total(d),
+                           "domain {}", d.name());
+            }
+        });
+    }
+}

@@ -1,15 +1,14 @@
 //! JSON export of full simulation results — the machine-readable
 //! counterpart of the §4 text breakdowns (what the paper's `graph.py`
 //! would consume today). Hand-rolled writer (no serde offline,
-//! DESIGN.md §7); covers per-stream stat cubes, kernel windows, and the
-//! §6 extension counters.
+//! DESIGN.md §7). Everything is read from the unified
+//! [`crate::stats::StatsEngine`]: per-stream stat cubes, kernel
+//! windows, and the §6 extension domains (DRAM, interconnect, power).
 
-use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use crate::cache::access::{AccessOutcome, AccessType};
 use crate::sim::GpuStats;
-use crate::stats::cache_stats::CacheStats;
+use crate::stats::engine::{CacheView, StatDomain, StatsEngine};
 use crate::StreamId;
 
 /// Escape a JSON string value.
@@ -30,34 +29,27 @@ fn esc(s: &str) -> String {
     out
 }
 
-fn cache_json(stats: &CacheStats) -> String {
+fn stream_key(s: StreamId) -> String {
+    StatsEngine::stream_label(s)
+}
+
+fn cache_json(view: CacheView<'_>) -> String {
     let mut out = String::from("{");
     let mut first_s = true;
-    for s in stats.streams() {
+    for s in view.streams() {
         if !first_s {
             out.push(',');
         }
         first_s = false;
-        let label = if s == CacheStats::AGG_KEY {
-            "all".to_string()
-        } else {
-            s.to_string()
-        };
-        let _ = write!(out, "\"{label}\":{{");
-        let table = stats.stream_table(s).unwrap();
+        let _ = write!(out, "\"{}\":{{", stream_key(s));
+        let table = view.stream_table(s).unwrap();
         let mut first_c = true;
-        for t in AccessType::ALL {
-            for o in AccessOutcome::ALL {
-                let v = table.get(t, o);
-                if v == 0 {
-                    continue;
-                }
-                if !first_c {
-                    out.push(',');
-                }
-                first_c = false;
-                let _ = write!(out, "\"{}.{}\":{v}", t.name(), o.name());
+        for (t, o, v) in table.iter_nonzero() {
+            if !first_c {
+                out.push(',');
             }
+            first_c = false;
+            let _ = write!(out, "\"{}.{}\":{v}", t.name(), o.name());
         }
         out.push('}');
     }
@@ -65,31 +57,27 @@ fn cache_json(stats: &CacheStats) -> String {
     out
 }
 
-fn map_json(m: &BTreeMap<StreamId, u64>) -> String {
+fn per_stream_json(per_stream: &[(StreamId, u64)]) -> String {
     let mut out = String::from("{");
-    for (i, (s, v)) in m.iter().enumerate() {
+    for (i, (s, v)) in per_stream.iter().enumerate() {
         if i > 0 {
             out.push(',');
         }
-        let _ = write!(out, "\"{s}\":{v}");
+        let _ = write!(out, "\"{}\":{v}", stream_key(*s));
     }
     out.push('}');
     out
 }
 
 /// Full result document for one simulation.
-pub fn to_json(
-    label: &str,
-    stats: &GpuStats,
-    dram_per_stream: &BTreeMap<StreamId, u64>,
-    icnt_per_stream: &BTreeMap<StreamId, u64>,
-) -> String {
+pub fn to_json(label: &str, stats: &GpuStats) -> String {
+    let engine = &stats.engine;
     let mut out = String::from("{");
     let _ = write!(out, "\"config\":\"{}\",", esc(label));
     let _ = write!(out, "\"total_cycles\":{},", stats.total_cycles);
     let _ = write!(out, "\"kernels_done\":{},", stats.kernels_done);
-    let _ = write!(out, "\"l1\":{},", cache_json(&stats.l1));
-    let _ = write!(out, "\"l2\":{},", cache_json(&stats.l2));
+    let _ = write!(out, "\"l1\":{},", cache_json(stats.l1()));
+    let _ = write!(out, "\"l2\":{},", cache_json(stats.l2()));
     // kernel windows
     out.push_str("\"kernels\":[");
     for (i, (stream, uid, k)) in
@@ -106,9 +94,16 @@ pub fn to_json(
     }
     out.push_str("],");
     let _ = write!(out, "\"dram_per_stream\":{},",
-                   map_json(dram_per_stream));
-    let _ = write!(out, "\"icnt_per_stream\":{}",
-                   map_json(icnt_per_stream));
+                   per_stream_json(&engine.per_stream(StatDomain::Dram)));
+    let _ = write!(out, "\"icnt_per_stream\":{},",
+                   per_stream_json(&engine.per_stream(StatDomain::Icnt)));
+    // integral femtojoules (divide by 1000 for pJ) keep the document
+    // deterministic and float-free
+    let _ = write!(
+        out, "\"power_per_stream_fj\":{},",
+        per_stream_json(&engine.per_stream(StatDomain::Power)));
+    let _ = write!(out, "\"dropped_responses\":{}",
+                   engine.dropped_responses());
     out.push('}');
     out
 }
@@ -126,8 +121,7 @@ mod tests {
             GpuSim::new(SimConfig::preset("minimal").unwrap()).unwrap();
         sim.enqueue_workload(&g.workload).unwrap();
         sim.run().unwrap();
-        let json = to_json("tip", sim.stats(), &sim.dram_per_stream(),
-                           &sim.icnt_per_stream());
+        let json = to_json("tip", sim.stats());
         (sim, json)
     }
 
@@ -136,7 +130,9 @@ mod tests {
         let (_, json) = run();
         for key in ["\"config\":\"tip\"", "\"total_cycles\":",
                     "\"l1\":", "\"l2\":", "\"kernels\":[",
-                    "\"dram_per_stream\":", "\"icnt_per_stream\":"] {
+                    "\"dram_per_stream\":", "\"icnt_per_stream\":",
+                    "\"power_per_stream_fj\":",
+                    "\"dropped_responses\":0"] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
         // per-stream L2 cells present
@@ -170,6 +166,17 @@ mod tests {
             assert!(json.contains(
                 &format!("{{\"stream\":{stream},\"uid\":{uid},")),
                 "kernel {uid} missing");
+        }
+    }
+
+    #[test]
+    fn extension_domains_populated_from_engine() {
+        let (sim, json) = run();
+        let dram = sim.stats().engine.per_stream(StatDomain::Dram);
+        assert!(!dram.is_empty(), "l2_lat must reach DRAM");
+        for (s, n) in &dram {
+            assert!(json.contains(&format!("\"{s}\":{n}")),
+                    "dram entry for stream {s} missing in {json}");
         }
     }
 }

@@ -1,23 +1,59 @@
-//! Per-stream statistics — the paper's contribution (§3).
+//! Per-stream statistics — the paper's contribution (§3), served by one
+//! unified engine.
 //!
+//! # Architecture
+//!
+//! ```text
+//!  SimtCore ──inc_core──▶ ┌──────────────────────────────┐
+//!  MemPartition ──inc───▶ │          StatsEngine         │
+//!  Dram ──inc_dram──────▶ │  StreamIntern (id → slot)    │
+//!  Icnt ──inc_icnt──────▶ │  CacheDomain  L1, L2         │──▶ print
+//!  GpuSim ──clear_pw────▶ │  ScalarDomain Dram, Icnt     │──▶ export
+//!                         │  PowerDomain  (fJ/stream)    │──▶ figures
+//!                         │  CoreStatShard × num_cores   │
+//!                         └──────────────────────────────┘
+//! ```
+//!
+//! * **One sink** — every per-stream counter in the simulator (L1, L2,
+//!   DRAM, interconnect, power) lives in [`engine::StatsEngine`],
+//!   threaded through the clock loop as a single `&mut`. There is no
+//!   per-component stat plumbing and no top-level `BTreeMap` scraping.
+//! * **Interning** — stream ids are interned once, at kernel launch, to
+//!   dense [`crate::StreamSlot`] indices carried on every
+//!   [`crate::mem::MemFetch`]; hot-path increments are array indexing
+//!   ([`engine::StreamIntern`]).
+//! * **Shards** — each core's L1 increments accumulate in a
+//!   [`engine::CoreStatShard`], merged (cell-wise add) on kernel exit.
+//!   Mode/guard admission stays central and ordered, so results are
+//!   bit-identical to unsharded accumulation while a future parallel
+//!   core loop can own shards exclusively, lock-free.
+//! * **Window semantics** — the §3.1 per-kernel window (`m_stats_pw`,
+//!   cleared after the exiting kernel's stream is printed) generalizes
+//!   to every domain via [`engine::StatsEngine::clear_pw`].
+//!
+//! # Modules
+//!
+//! * [`engine`] — the unified [`engine::StatsEngine`] described above,
+//!   plus [`engine::StatMode`] (`tip` / `clean` / `exact`) with the
+//!   clean-mode same-cycle under-count model the paper's Fig. 1 shows.
 //! * [`table`] — dense `(type, outcome)` count tables (the inner
 //!   `vector<vector<u64>>` of GPGPU-Sim).
-//! * [`cache_stats`] — [`cache_stats::CacheStats`], the per-stream map
-//!   keyed by `streamID` with the three stat modes (`tip` / `clean` /
-//!   `exact`) the validation harness compares.
 //! * [`kernel_time`] — per-stream per-kernel launch/exit cycles (§3.2).
 //! * [`print`] — Accel-Sim-format breakdown printers + CSV export (§4).
-//! * [`power`] — per-stream energy accounting (the §6 `power_stats.cc`
-//!   extension the paper leaves as future work).
+//! * [`export`] — machine-readable JSON result documents.
+//! * [`power`] — the energy model and per-stream energy report (the §6
+//!   `power_stats.cc` extension the paper leaves as future work; the
+//!   engine accumulates energy as events arrive).
 
-pub mod cache_stats;
+pub mod engine;
 pub mod export;
 pub mod kernel_time;
 pub mod power;
 pub mod print;
 pub mod table;
 
-pub use cache_stats::{CacheStats, StatMode};
+pub use engine::{CacheView, CoreStatShard, IcntDir, StatDomain, StatMode,
+                 StatsEngine, StreamIntern};
 pub use kernel_time::{KernelTime, KernelTimeTracker};
-pub use power::{EnergyModel, PowerStats};
+pub use power::{EnergyModel, PowerComponent, PowerStats, StreamEnergy};
 pub use table::{FailTable, StatTable};

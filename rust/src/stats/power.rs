@@ -2,10 +2,13 @@
 //!
 //! §6: "since the `print_stats` function now requires a streamID input
 //! argument, `power_stats.cc` [...] could be affected. These modules are
-//! currently unaware of streamID". This module closes that gap: an
-//! event-energy model (AccelWattch-style constants, scaled) driven by
-//! the per-stream stat cubes, producing a per-stream energy breakdown —
-//! the feature expansion the paper leaves as future work.
+//! currently unaware of streamID". This module closes that gap: the
+//! [`crate::stats::StatsEngine`] bills an event energy (AccelWattch-style
+//! constants, scaled) into its per-stream power domain as each serviced
+//! access / DRAM request / interconnect flit is recorded — no post-hoc
+//! recomputation from scraped counter maps. Energy is accumulated in
+//! integral femtojoules so `Σ_streams per_stream == exact` holds exactly
+//! in the power domain, like every other domain.
 //!
 //! The model is intentionally simple (per-event energies, no
 //! voltage/frequency scaling): its purpose is demonstrating that the
@@ -15,9 +18,39 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use crate::cache::access::{AccessOutcome, AccessType};
-use crate::stats::cache_stats::CacheStats;
 use crate::StreamId;
+
+/// A component the engine's power domain attributes energy to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerComponent {
+    /// L1 tag+data access (serviced outcomes only).
+    L1 = 0,
+    /// L2 slice access (serviced outcomes only).
+    L2 = 1,
+    /// DRAM sector transfer.
+    Dram = 2,
+    /// Interconnect flit hop.
+    Icnt = 3,
+}
+
+impl PowerComponent {
+    /// Number of components.
+    pub const COUNT: usize = 4;
+
+    /// All components in index order.
+    pub const ALL: [PowerComponent; Self::COUNT] = [
+        PowerComponent::L1,
+        PowerComponent::L2,
+        PowerComponent::Dram,
+        PowerComponent::Icnt,
+    ];
+
+    /// Array index.
+    #[inline]
+    pub const fn idx(self) -> usize {
+        self as usize
+    }
+}
 
 /// Energy cost per event, in picojoules (order-of-magnitude constants
 /// from public CACTI/AccelWattch tables for ~12 nm).
@@ -44,6 +77,20 @@ impl Default for EnergyModel {
     }
 }
 
+impl EnergyModel {
+    /// Per-event costs in femtojoules, by [`PowerComponent`] index —
+    /// what the engine adds per billed event. Integral femtojoules keep
+    /// per-stream sums exact.
+    pub fn cost_fj(&self) -> [u64; PowerComponent::COUNT] {
+        [
+            (self.l1_access_pj * 1e3).round() as u64,
+            (self.l2_access_pj * 1e3).round() as u64,
+            (self.dram_access_pj * 1e3).round() as u64,
+            (self.icnt_flit_pj * 1e3).round() as u64,
+        ]
+    }
+}
+
 /// Per-stream energy breakdown (picojoules).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StreamEnergy {
@@ -60,60 +107,14 @@ impl StreamEnergy {
     }
 }
 
-/// Per-stream power/energy report.
+/// Per-stream power/energy report, produced by
+/// [`crate::stats::StatsEngine::power_stats`].
 #[derive(Debug, Clone, Default)]
 pub struct PowerStats {
     pub per_stream: BTreeMap<StreamId, StreamEnergy>,
 }
 
 impl PowerStats {
-    /// Build from the simulation's per-stream counters.
-    ///
-    /// `l1`/`l2` are the cache stat containers; `dram`/`icnt` the
-    /// per-stream request/flit totals from the memory system
-    /// (`GpuSim::dram_per_stream` / `icnt_per_stream`).
-    pub fn from_counters(
-        model: &EnergyModel,
-        l1: &CacheStats,
-        l2: &CacheStats,
-        dram: &BTreeMap<StreamId, u64>,
-        icnt: &BTreeMap<StreamId, u64>,
-    ) -> Self {
-        let mut per_stream: BTreeMap<StreamId, StreamEnergy> =
-            BTreeMap::new();
-        let serviced = |stats: &CacheStats, s: StreamId| -> u64 {
-            stats.stream_table(s).map_or(0, |t| {
-                AccessType::ALL
-                    .iter()
-                    .map(|ty| {
-                        AccessOutcome::ALL
-                            .iter()
-                            .filter(|o| o.is_serviced())
-                            .map(|o| t.get(*ty, *o))
-                            .sum::<u64>()
-                    })
-                    .sum()
-            })
-        };
-        for s in l1.streams() {
-            per_stream.entry(s).or_default().l1_pj =
-                serviced(l1, s) as f64 * model.l1_access_pj;
-        }
-        for s in l2.streams() {
-            per_stream.entry(s).or_default().l2_pj =
-                serviced(l2, s) as f64 * model.l2_access_pj;
-        }
-        for (s, n) in dram {
-            per_stream.entry(*s).or_default().dram_pj =
-                *n as f64 * model.dram_access_pj;
-        }
-        for (s, n) in icnt {
-            per_stream.entry(*s).or_default().icnt_pj =
-                *n as f64 * model.icnt_flit_pj;
-        }
-        Self { per_stream }
-    }
-
     /// Total energy over all streams.
     pub fn total_pj(&self) -> f64 {
         self.per_stream.values().map(|e| e.total_pj()).sum()
@@ -139,28 +140,40 @@ impl PowerStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stats::StatMode;
+    use crate::cache::access::{AccessOutcome, AccessType};
+    use crate::stats::engine::{IcntDir, StatDomain, StatMode,
+                               StatsEngine};
 
-    fn counters() -> (CacheStats, CacheStats, BTreeMap<StreamId, u64>,
-                      BTreeMap<StreamId, u64>) {
-        let mut l1 = CacheStats::new(StatMode::PerStream);
-        let mut l2 = CacheStats::new(StatMode::PerStream);
-        l1.inc(AccessType::GlobalAccR, AccessOutcome::Hit, 1, 1);
-        l1.inc(AccessType::GlobalAccR, AccessOutcome::Miss, 1, 2);
-        l1.inc(AccessType::GlobalAccR, AccessOutcome::ReservationFail,
-               1, 3); // must NOT be billed
-        l2.inc(AccessType::GlobalAccR, AccessOutcome::Miss, 1, 4);
-        l2.inc(AccessType::GlobalAccW, AccessOutcome::Hit, 2, 5);
-        let dram = BTreeMap::from([(1u64, 3u64)]);
-        let icnt = BTreeMap::from([(1u64, 10u64), (2, 4)]);
-        (l1, l2, dram, icnt)
+    fn engine() -> StatsEngine {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        e.inc(StatDomain::L1, 1, AccessType::GlobalAccR,
+              AccessOutcome::Hit, 1);
+        e.inc(StatDomain::L1, 1, AccessType::GlobalAccR,
+              AccessOutcome::Miss, 2);
+        // a reservation fail must NOT be billed
+        e.inc(StatDomain::L1, 1, AccessType::GlobalAccR,
+              AccessOutcome::ReservationFail, 3);
+        e.inc(StatDomain::L2, 1, AccessType::GlobalAccR,
+              AccessOutcome::Miss, 4);
+        e.inc(StatDomain::L2, 2, AccessType::GlobalAccW,
+              AccessOutcome::Hit, 5);
+        for _ in 0..3 {
+            e.inc_dram(1);
+        }
+        for _ in 0..10 {
+            e.inc_icnt(IcntDir::ToMem, 1);
+        }
+        for _ in 0..4 {
+            e.inc_icnt(IcntDir::ToCore, 2);
+        }
+        e
     }
 
     #[test]
     fn energy_attributed_per_stream() {
-        let (l1, l2, dram, icnt) = counters();
+        let e = engine();
         let m = EnergyModel::default();
-        let p = PowerStats::from_counters(&m, &l1, &l2, &dram, &icnt);
+        let p = e.power_stats();
         let e1 = &p.per_stream[&1];
         // stream 1: 2 serviced L1 accesses (fail excluded)
         assert_eq!(e1.l1_pj, 2.0 * m.l1_access_pj);
@@ -170,15 +183,14 @@ mod tests {
         let e2 = &p.per_stream[&2];
         assert_eq!(e2.l1_pj, 0.0);
         assert_eq!(e2.l2_pj, m.l2_access_pj);
+        assert_eq!(e2.icnt_pj, 4.0 * m.icnt_flit_pj);
         assert!((p.total_pj()
                  - (e1.total_pj() + e2.total_pj())).abs() < 1e-9);
     }
 
     #[test]
     fn render_contains_streams_and_total() {
-        let (l1, l2, dram, icnt) = counters();
-        let p = PowerStats::from_counters(&EnergyModel::default(), &l1,
-                                          &l2, &dram, &icnt);
+        let p = engine().power_stats();
         let r = p.render();
         assert!(r.contains("Per_stream_power_breakdown"));
         assert!(r.contains("total ="));
@@ -186,29 +198,40 @@ mod tests {
     }
 
     #[test]
+    fn component_indices_roundtrip() {
+        for (i, c) in PowerComponent::ALL.iter().enumerate() {
+            assert_eq!(c.idx(), i);
+        }
+        let fj = EnergyModel::default().cost_fj();
+        assert_eq!(fj[PowerComponent::L1.idx()], 25_000);
+        assert_eq!(fj[PowerComponent::Dram.idx()], 470_000);
+    }
+
+    #[test]
     fn sum_over_streams_equals_total_invariant() {
         use crate::util::proptest_lite::{default_cases, run_cases};
         run_cases("power-sum", 0x9A9A, default_cases(), |g| {
-            let mut l1 = CacheStats::new(StatMode::PerStream);
-            let mut l2 = CacheStats::new(StatMode::PerStream);
+            let mut e = StatsEngine::new(StatMode::PerStream);
             for _ in 0..g.range(1, 100) {
                 let t = AccessType::from_idx(
                     g.index(AccessType::COUNT));
                 let o = AccessOutcome::from_idx(
                     g.index(AccessOutcome::COUNT));
                 let s = g.below(6);
-                if g.chance(0.5) {
-                    l1.inc(t, o, s, 0);
+                let d = if g.chance(0.5) {
+                    StatDomain::L1
                 } else {
-                    l2.inc(t, o, s, 0);
-                }
+                    StatDomain::L2
+                };
+                e.inc(d, s, t, o, 0);
             }
-            let p = PowerStats::from_counters(
-                &EnergyModel::default(), &l1, &l2, &BTreeMap::new(),
-                &BTreeMap::new());
+            let p = e.power_stats();
             let sum: f64 = p.per_stream.values()
                 .map(|e| e.total_pj()).sum();
             assert!((sum - p.total_pj()).abs() < 1e-6);
+            // the engine's fJ total agrees with the pJ report
+            let fj = e.domain_total(StatDomain::Power);
+            assert!((fj as f64 / 1e3 - p.total_pj()).abs() < 1e-6);
         });
     }
 }

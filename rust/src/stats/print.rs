@@ -5,54 +5,57 @@
 //! every stream's stats after *any* kernel exit). Output format follows
 //! Accel-Sim's `Total_core_cache_stats_breakdown` / `L2_cache_stats
 //! breakdown` lines so downstream log scrapers (like the paper's
-//! `graph.py`) keep working.
+//! `graph.py`) keep working. All printers read the unified
+//! [`crate::stats::StatsEngine`] through [`CacheView`]s.
 
 use std::fmt::Write as _;
 
 use crate::cache::access::{AccessOutcome, AccessType};
-use crate::stats::cache_stats::{CacheStats, StatMode};
+use crate::stats::engine::{CacheView, StatMode, StatsEngine};
 use crate::stats::kernel_time::KernelTimeTracker;
 use crate::StreamId;
 
-/// Render one stream's breakdown of `stats` under `cache_name`, matching
-/// the `<name>[<TYPE>][<OUTCOME>] = <count>` Accel-Sim line format.
-/// In per-stream mode the requested `stream` is printed; aggregate modes
-/// ignore `stream` (they only have the combined table) — exactly the
-/// unpatched behaviour the paper replaces.
-pub fn print_stats(stats: &CacheStats, stream: StreamId,
+/// Render one stream's breakdown of a cache domain under `cache_name`,
+/// matching the `<name>[<TYPE>][<OUTCOME>] = <count>` Accel-Sim line
+/// format. In per-stream mode the requested `stream` is printed;
+/// aggregate modes ignore `stream` (they only have the combined table)
+/// — exactly the unpatched behaviour the paper replaces.
+pub fn print_stats(view: CacheView<'_>, stream: StreamId,
                    cache_name: &str) -> String {
     let mut out = String::new();
-    match stats.mode() {
+    match view.mode() {
         StatMode::PerStream => {
             let _ = writeln!(out, "{cache_name} (stream {stream}):");
-            render_stream(&mut out, stats, stream, cache_name);
+            render_stream(&mut out, view, stream, cache_name);
         }
         _ => {
             let _ = writeln!(out, "{cache_name} (all streams):");
-            render_stream(&mut out, stats, CacheStats::AGG_KEY, cache_name);
+            render_stream(&mut out, view, StatsEngine::AGG_KEY,
+                          cache_name);
         }
     }
     out
 }
 
 /// Render every stream's breakdown (end-of-simulation summary).
-pub fn print_all_streams(stats: &CacheStats, cache_name: &str) -> String {
+pub fn print_all_streams(view: CacheView<'_>, cache_name: &str)
+    -> String {
     let mut out = String::new();
-    for stream in stats.streams() {
-        let label = if stream == CacheStats::AGG_KEY {
-            format!("{cache_name} (all streams):")
+    for stream in view.streams() {
+        let label = if stream == StatsEngine::AGG_KEY {
+            "all streams".to_string()
         } else {
-            format!("{cache_name} (stream {stream}):")
+            format!("stream {stream}")
         };
-        let _ = writeln!(out, "{label}");
-        render_stream(&mut out, stats, stream, cache_name);
+        let _ = writeln!(out, "{cache_name} ({label}):");
+        render_stream(&mut out, view, stream, cache_name);
     }
     out
 }
 
-fn render_stream(out: &mut String, stats: &CacheStats, stream: StreamId,
+fn render_stream(out: &mut String, view: CacheView<'_>, stream: StreamId,
                  cache_name: &str) {
-    let Some(table) = stats.stream_table(stream) else {
+    let Some(table) = view.stream_table(stream) else {
         let _ = writeln!(out, "\t{cache_name}[NO DATA]");
         return;
     };
@@ -60,13 +63,27 @@ fn render_stream(out: &mut String, stats: &CacheStats, stream: StreamId,
         let _ = writeln!(
             out, "\t{cache_name}[{}][{}] = {c}", t.name(), o.name());
     }
-    if let Some(fail) = stats.stream_fail_table(stream) {
+    if let Some(fail) = view.stream_fail_table(stream) {
         for (t, f, c) in fail.iter_nonzero() {
             let _ = writeln!(
                 out, "\t{cache_name}_fail[{}][{}] = {c}",
                 t.name(), f.name());
         }
     }
+}
+
+/// Render a scalar domain's per-stream totals (the §6 DRAM /
+/// interconnect extension counters) as aligned `name[stream] = count`
+/// lines.
+pub fn print_scalar_per_stream(name: &str,
+                               per_stream: &[(StreamId, u64)])
+    -> String {
+    let mut out = String::new();
+    for (s, n) in per_stream {
+        let _ = writeln!(out, "\t{name}[{}] = {n}",
+                         StatsEngine::stream_label(*s));
+    }
+    out
 }
 
 /// Paper §3.2: the per-kernel time line printed "at the end of each
@@ -86,17 +103,13 @@ pub fn print_kernel_time(times: &KernelTimeTracker, stream: StreamId,
     }
 }
 
-/// CSV export of a stat container: `stream,access_type,outcome,count`.
+/// CSV export of a cache domain: `stream,access_type,outcome,count`.
 /// (The paper's `graph.py` replacement — see `harness::figure`.)
-pub fn to_csv(stats: &CacheStats) -> String {
+pub fn to_csv(view: CacheView<'_>) -> String {
     let mut out = String::from("stream,access_type,outcome,count\n");
-    for stream in stats.streams() {
-        let label = if stream == CacheStats::AGG_KEY {
-            "all".to_string()
-        } else {
-            stream.to_string()
-        };
-        if let Some(t) = stats.stream_table(stream) {
+    for stream in view.streams() {
+        let label = StatsEngine::stream_label(stream);
+        if let Some(t) = view.stream_table(stream) {
             for (ty, o, c) in t.iter_nonzero() {
                 let _ = writeln!(out, "{label},{},{},{c}",
                                  ty.name(), o.name());
@@ -109,8 +122,9 @@ pub fn to_csv(stats: &CacheStats) -> String {
 /// Full stat-cube dump (incl. zero cells) for one stream, as the dense
 /// `counts[type][outcome]` rows — used by tests comparing with the
 /// Pallas aggregation artifact.
-pub fn dense_rows(stats: &CacheStats, stream: StreamId) -> Vec<Vec<u64>> {
-    let table = stats.stream_table(stream);
+pub fn dense_rows(view: CacheView<'_>, stream: StreamId)
+    -> Vec<Vec<u64>> {
+    let table = view.stream_table(stream);
     AccessType::ALL
         .iter()
         .map(|t| {
@@ -126,20 +140,26 @@ pub fn dense_rows(stats: &CacheStats, stream: StreamId) -> Vec<Vec<u64>> {
 mod tests {
     use super::*;
     use crate::cache::access::FailOutcome;
+    use crate::stats::engine::StatDomain;
 
-    fn sample() -> CacheStats {
-        let mut s = CacheStats::new(StatMode::PerStream);
-        s.inc(AccessType::GlobalAccR, AccessOutcome::Hit, 1, 10);
-        s.inc(AccessType::GlobalAccR, AccessOutcome::Miss, 1, 11);
-        s.inc(AccessType::GlobalAccW, AccessOutcome::Hit, 2, 12);
-        s.inc_fail(AccessType::GlobalAccR, FailOutcome::MissQueueFull, 1, 13);
-        s
+    fn sample() -> StatsEngine {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        e.inc(StatDomain::L2, 1, AccessType::GlobalAccR,
+              AccessOutcome::Hit, 10);
+        e.inc(StatDomain::L2, 1, AccessType::GlobalAccR,
+              AccessOutcome::Miss, 11);
+        e.inc(StatDomain::L2, 2, AccessType::GlobalAccW,
+              AccessOutcome::Hit, 12);
+        e.inc_fail(StatDomain::L2, 1, AccessType::GlobalAccR,
+                   FailOutcome::MissQueueFull, 13);
+        e
     }
 
     #[test]
     fn print_stats_selects_single_stream() {
-        let s = sample();
-        let out = print_stats(&s, 1, "L2_cache_stats_breakdown");
+        let e = sample();
+        let out = print_stats(e.cache(StatDomain::L2), 1,
+                              "L2_cache_stats_breakdown");
         assert!(out.contains("stream 1"));
         assert!(out.contains(
             "L2_cache_stats_breakdown[GLOBAL_ACC_R][HIT] = 1"));
@@ -155,10 +175,13 @@ mod tests {
 
     #[test]
     fn aggregate_mode_prints_combined() {
-        let mut s = CacheStats::new(StatMode::AggregateExact);
-        s.inc(AccessType::GlobalAccR, AccessOutcome::Hit, 1, 10);
-        s.inc(AccessType::GlobalAccW, AccessOutcome::Hit, 2, 10);
-        let out = print_stats(&s, 1, "Total_core_cache_stats_breakdown");
+        let mut e = StatsEngine::new(StatMode::AggregateExact);
+        e.inc(StatDomain::L1, 1, AccessType::GlobalAccR,
+              AccessOutcome::Hit, 10);
+        e.inc(StatDomain::L1, 2, AccessType::GlobalAccW,
+              AccessOutcome::Hit, 10);
+        let out = print_stats(e.cache(StatDomain::L1), 1,
+                              "Total_core_cache_stats_breakdown");
         assert!(out.contains("all streams"));
         assert!(out.contains("[GLOBAL_ACC_R][HIT] = 1"));
         assert!(out.contains("[GLOBAL_ACC_W][HIT] = 1"));
@@ -166,25 +189,33 @@ mod tests {
 
     #[test]
     fn print_all_streams_lists_each() {
-        let s = sample();
-        let out = print_all_streams(&s, "X");
+        let e = sample();
+        let out = print_all_streams(e.cache(StatDomain::L2), "X");
         assert!(out.contains("stream 1"));
         assert!(out.contains("stream 2"));
     }
 
     #[test]
     fn csv_rows() {
-        let s = sample();
-        let csv = to_csv(&s);
+        let e = sample();
+        let csv = to_csv(e.cache(StatDomain::L2));
         assert!(csv.starts_with("stream,access_type,outcome,count\n"));
         assert!(csv.contains("1,GLOBAL_ACC_R,HIT,1"));
         assert!(csv.contains("2,GLOBAL_ACC_W,HIT,1"));
     }
 
     #[test]
+    fn scalar_per_stream_lines() {
+        let out = print_scalar_per_stream(
+            "DRAM_accesses", &[(1, 3), (2, 7)]);
+        assert!(out.contains("DRAM_accesses[1] = 3"));
+        assert!(out.contains("DRAM_accesses[2] = 7"));
+    }
+
+    #[test]
     fn dense_rows_shape_matches_python_cube() {
-        let s = sample();
-        let rows = dense_rows(&s, 1);
+        let e = sample();
+        let rows = dense_rows(e.cache(StatDomain::L2), 1);
         assert_eq!(rows.len(), AccessType::COUNT);
         assert_eq!(rows[0].len(), AccessOutcome::COUNT);
         assert_eq!(rows[AccessType::GlobalAccR.idx()]

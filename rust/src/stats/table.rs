@@ -3,7 +3,7 @@
 //! The inner `vector<vector<unsigned long long>>` of GPGPU-Sim's
 //! `cache_stats`, as a fixed-size 2-D array (the dimensions are the enum
 //! counts, known at compile time — this is also what makes the per-stream
-//! hot path cheap, see `cache_stats.rs`).
+//! hot path cheap, see `engine.rs`).
 
 use crate::cache::access::{AccessOutcome, AccessType, FailOutcome};
 

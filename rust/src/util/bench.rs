@@ -123,6 +123,34 @@ impl Bencher {
         &self.results
     }
 
+    /// Results as a JSON array fragment (hand-rolled; no serde
+    /// offline). Used by the perf-trajectory recorder
+    /// (`BENCH_stats.json` via `scripts/ci.sh`).
+    pub fn results_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("[");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let name = r.name.replace('\\', "\\\\").replace('"', "\\\"");
+            let _ = write!(
+                out,
+                "{{\"name\":\"{name}\",\"samples\":{},\
+                 \"median_ns\":{},\"mean_ns\":{},\"p10_ns\":{},\
+                 \"p90_ns\":{},\"throughput_per_s\":{}}}",
+                r.samples,
+                r.median.as_nanos(),
+                r.mean.as_nanos(),
+                r.p10.as_nanos(),
+                r.p90.as_nanos(),
+                r.throughput
+                    .map_or("null".to_string(), |t| format!("{t:.3}")));
+        }
+        out.push(']');
+        out
+    }
+
     /// Print an aligned results table.
     pub fn report(&self, title: &str) {
         println!("\n== {title} ==");
@@ -174,5 +202,20 @@ mod tests {
         let r = b.bench("noop", || 0);
         assert!(r.throughput.is_none());
         assert_eq!(r.throughput_str(), "-");
+    }
+
+    #[test]
+    fn results_json_is_wellformed() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("a \"quoted\" case", || 10);
+        b.bench("noop", || 0);
+        let json = b.results_json();
+        assert!(json.starts_with('[') && json.ends_with(']'));
+        assert!(json.contains("\"name\":\"a \\\"quoted\\\" case\""));
+        assert!(json.contains("\"throughput_per_s\":null"));
+        assert!(json.contains("\"median_ns\":"));
+        let braces: i64 = json.chars().map(|c| match c {
+            '{' => 1, '}' => -1, _ => 0 }).sum();
+        assert_eq!(braces, 0);
     }
 }

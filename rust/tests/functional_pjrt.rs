@@ -90,8 +90,8 @@ fn pallas_aggregation_reproduces_simulator_stats() {
         (vec![0i32; n], vec![0i32; n], vec![0i32; n], vec![0i32; n]);
     let mut i = 0;
     // streams 1..=4 -> event stream ids 1..=4 (cube has 8 slots)
-    for s in sim.stats().l2.streams() {
-        let rows = dense_rows(&sim.stats().l2, s);
+    for s in sim.stats().l2().streams() {
+        let rows = dense_rows(sim.stats().l2(), s);
         for (t, row) in rows.iter().enumerate() {
             for (o, count) in row.iter().enumerate() {
                 for _ in 0..*count {
@@ -115,7 +115,7 @@ fn pallas_aggregation_reproduces_simulator_stats() {
         for t in AccessType::ALL {
             for o in AccessOutcome::ALL {
                 let got = cube[(s as usize * 10 + t.idx()) * 6 + o.idx()];
-                let want = sim.stats().l2.get(s, t, o) as f32;
+                let want = sim.stats().l2().get(s, t, o) as f32;
                 assert_eq!(got, want, "cell s={s} {t} {o}");
             }
         }

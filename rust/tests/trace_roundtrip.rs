@@ -47,7 +47,7 @@ fn disk_trace_simulation_matches_in_memory() {
         let mut sim = GpuSim::new(cfg).unwrap();
         sim.enqueue_workload(w).unwrap();
         sim.run().unwrap();
-        (sim.stats().l2.total_table(), sim.stats().total_cycles)
+        (sim.stats().l2().total_table(), sim.stats().total_cycles)
     };
     let (mem_table, mem_cycles) = run(&g.workload);
     let (disk_table, disk_cycles) = run(&loaded);
@@ -66,8 +66,8 @@ fn determinism_across_repeated_runs() {
         sim.enqueue_workload(&g.workload).unwrap();
         sim.run().unwrap();
         (
-            sim.stats().l1.total_table(),
-            sim.stats().l2.total_table(),
+            sim.stats().l1().total_table(),
+            sim.stats().l2().total_table(),
             sim.stats().total_cycles,
             streamsim::timeline::to_csv(&sim.stats().kernel_times),
         )

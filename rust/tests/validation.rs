@@ -21,7 +21,7 @@ fn fig2_l2_lat_4stream() {
     // per-stream exactness: each stream did exactly 1 L2 read and 1 L2
     // write (serviced outcomes)
     for s in 1..=4u64 {
-        let t = tw.tip.stats.l2.stream_table(s).unwrap();
+        let t = tw.tip.stats.l2().stream_table(s).unwrap();
         assert_eq!(t.total_serviced_for_type(AccessType::GlobalAccR), 1,
                    "stream {s} reads");
         assert_eq!(t.total_serviced_for_type(AccessType::GlobalAccW), 1,
@@ -37,8 +37,8 @@ fn fig2_l2_lat_4stream() {
     }
 
     // serialized turns MSHR_HITs into HITs
-    let conc = tw.tip.stats.l2.total_table();
-    let ser = tw.tip_serialized.stats.l2.total_table();
+    let conc = tw.tip.stats.l2().total_table();
+    let ser = tw.tip_serialized.stats.l2().total_table();
     assert!(conc.total_for_outcome(AccessOutcome::MshrHit) > 0,
             "concurrent run must produce MSHR_HITs");
     assert_eq!(ser.total_for_outcome(AccessOutcome::MshrHit)
@@ -68,7 +68,7 @@ fn fig3_benchmark_1_stream_mini() {
     // stream attribution: both streams present in L1 stats with the
     // analytic totals
     for (s, want) in &g.expected.l1_reads {
-        let got = tw.tip.stats.l1.stream_table(*s).unwrap()
+        let got = tw.tip.stats.l1().stream_table(*s).unwrap()
             .total_serviced_for_type(AccessType::GlobalAccR);
         assert_eq!(got, *want, "stream {s}");
     }
@@ -86,10 +86,10 @@ fn fig4_benchmark_3_stream() {
 
     // the under-count claim: tip >= clean cell-wise AND the clean run
     // actually dropped increments on this multi-core workload
-    assert!(tw.tip.stats.l1.total_table()
-              .dominates(&tw.clean.stats.l1.total_table()));
+    assert!(tw.tip.stats.l1().total_table()
+              .dominates(&tw.clean.stats.l1().total_table()));
     let dropped =
-        tw.clean.stats.l1.dropped() + tw.clean.stats.l2.dropped();
+        tw.clean.stats.l1().dropped() + tw.clean.stats.l2().dropped();
     assert!(dropped > 0,
             "multi-core concurrent run should exhibit the clean-mode \
              same-cycle under-count (got 0 drops)");
@@ -108,7 +108,7 @@ fn fig5_deepbench_mini() {
 
     // both streams recorded L2 traffic; the shared A panel produced
     // cross-stream reuse (hits or MSHR merges) in the concurrent run
-    let l2 = &tw.tip.stats.l2;
+    let l2 = tw.tip.stats.l2();
     let reuse: u64 = [1u64, 2]
         .iter()
         .map(|s| {
@@ -207,19 +207,28 @@ fn property_sum_invariant_random_workloads() {
             .collect();
         let w = Workload { kernels, memcpys: vec![] };
 
+        use streamsim::stats::StatDomain;
+        let scalar_domains =
+            [StatDomain::Dram, StatDomain::Icnt, StatDomain::Power];
         let run = |mode: StatMode| {
             let mut cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
             cfg.stat_mode = mode;
             let mut sim = streamsim::sim::GpuSim::new(cfg).unwrap();
             sim.enqueue_workload(&w).unwrap();
             sim.run().unwrap();
-            (sim.stats().l1.total_table(), sim.stats().l2.total_table())
+            let scalars = scalar_domains
+                .map(|d| sim.stats().engine.domain_total(d));
+            (sim.stats().l1().total_table(),
+             sim.stats().l2().total_table(), scalars)
         };
-        let (tip_l1, tip_l2) = run(StatMode::PerStream);
-        let (exact_l1, exact_l2) = run(StatMode::AggregateExact);
-        let (clean_l1, clean_l2) = run(StatMode::AggregateBuggy);
+        let (tip_l1, tip_l2, tip_scalars) = run(StatMode::PerStream);
+        let (exact_l1, exact_l2, exact_scalars) =
+            run(StatMode::AggregateExact);
+        let (clean_l1, clean_l2, _) = run(StatMode::AggregateBuggy);
         assert_eq!(tip_l1, exact_l1);
         assert_eq!(tip_l2, exact_l2);
+        // the Σ-invariant holds in the DRAM/icnt/power domains too
+        assert_eq!(tip_scalars, exact_scalars);
         assert!(tip_l1.dominates(&clean_l1));
         assert!(tip_l2.dominates(&clean_l2));
     });

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, tests, and a fast perf-baseline record.
+#
+#   scripts/ci.sh          # fmt + clippy + tests
+#   scripts/ci.sh bench    # also record BENCH_stats.json (fast mode)
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check (advisory) =="
+# The seed predates rustfmt adoption (hand-wrapped ~72 cols), so
+# formatting drift is reported but not yet gating; flip to a hard
+# failure once the tree has been `cargo fmt`ed wholesale.
+cargo fmt --check || echo "fmt drift detected (non-gating for now)"
+
+echo "== cargo clippy (-D warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test =="
+cargo test -q
+
+if [[ "${1:-}" == "bench" ]]; then
+    echo "== perf baseline -> BENCH_stats.json =="
+    STREAMSIM_BENCH_FAST=1 \
+    STREAMSIM_BENCH_JSON="$(cd .. && pwd)/BENCH_stats.json" \
+        cargo bench --bench perf_sim_throughput
+fi
+
+echo "CI OK"
