@@ -124,4 +124,17 @@ fn main() {
              tip.as_secs_f64() / flat.as_secs_f64());
     println!("slot-indexed speedup vs by-id (64 streams): {:.2}x",
              by_id64.as_secs_f64() / slot64.as_secs_f64());
+
+    // perf-trajectory recorder: `scripts/ci.sh bench` merges this into
+    // BENCH_stats.json next to the perf_sim_throughput sections
+    if let Ok(path) = std::env::var("STREAMSIM_BENCH_JSON") {
+        let doc = format!(
+            "{{\"bench\":\"abl_stats_overhead\",\"sections\":{{\
+             \"abl1\":{}}}}}",
+            b.results_json());
+        match std::fs::write(&path, doc) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
 }

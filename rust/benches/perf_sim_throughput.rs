@@ -13,9 +13,15 @@ use streamsim::util::bench::Bencher;
 use streamsim::workloads;
 
 fn sim_once(bench: &str, preset: &str, mode: StatMode) -> (u64, u64) {
+    sim_once_threaded(bench, preset, mode, 1)
+}
+
+fn sim_once_threaded(bench: &str, preset: &str, mode: StatMode,
+                     threads: u32) -> (u64, u64) {
     let g = workloads::generate(bench).unwrap();
     let mut cfg = SimConfig::preset(preset).unwrap();
     cfg.stat_mode = mode;
+    cfg.sim_threads = threads;
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(&g.workload).unwrap();
     sim.run().unwrap();
@@ -78,6 +84,20 @@ fn main() {
     });
     b3.report("PERF-L3: full TITAN V preset");
 
+    // seq vs parallel sharded loop (same workload, same stats —
+    // determinism suite guarantees bit-identity; this records the
+    // wall-clock win). 80-SM preset so 4 workers have real work.
+    let mut b4 = Bencher::from_env();
+    for threads in [1u32, 2, 4] {
+        b4.bench(&format!("bench3/sm7_titanv sim-threads={threads}"),
+                 || {
+            sim_once_threaded("bench3", "sm7_titanv",
+                              StatMode::PerStream, threads).0
+        });
+    }
+    b4.report("PERF-L3: seq vs parallel core/partition loop (items = \
+               GPU cycles)");
+
     write_json(&[("cycles", &b), ("accesses_by_mode", &b2),
-                 ("titanv_full", &b3)]);
+                 ("titanv_full", &b3), ("parallel", &b4)]);
 }

@@ -42,6 +42,9 @@ pub struct RunArgs {
     pub preset: String,
     pub stat_mode: Option<String>,
     pub serialize: bool,
+    /// Worker threads for the parallel core/partition loop
+    /// (`--sim-threads`; 0 = auto, 1 = sequential).
+    pub sim_threads: Option<u32>,
     pub config_file: Option<PathBuf>,
     pub overrides: BTreeMap<String, String>,
     pub timeline: bool,
@@ -62,6 +65,7 @@ impl Default for RunArgs {
             preset: "sm7_titanv_mini".into(),
             stat_mode: None,
             serialize: false,
+            sim_threads: None,
             config_file: None,
             overrides: BTreeMap::new(),
             timeline: false,
@@ -80,9 +84,14 @@ streamsim — per-stream stat tracking for a trace-driven GPU simulator
 USAGE:
   streamsim run       --bench NAME | --trace kernelslist.g
                       [--preset NAME] [--stat-mode tip|clean|exact]
-                      [--serialize] [--config FILE] [-o KEY VALUE]...
-                      [--timeline] [--power] [--csv PATH]
-                      [--stats-json PATH] [--verbose]
+                      [--serialize] [--sim-threads N] [--config FILE]
+                      [-o KEY VALUE]... [--timeline] [--power]
+                      [--csv PATH] [--stats-json PATH] [--verbose]
+
+  --sim-threads N     worker threads for the parallel core/partition
+                      loop (0 = available parallelism, 1 = sequential;
+                      per-stream/exact stats are bit-identical for any
+                      N; clean mode always runs sequentially)
   streamsim validate  --bench NAME [--preset NAME] [--figure]
   streamsim trace-gen --bench NAME --out DIR
   streamsim functional [--artifacts DIR]
@@ -126,6 +135,13 @@ pub fn parse(args: &[String]) -> Result<Command> {
                             Some(next_val("--stat-mode", &mut it)?);
                     }
                     "--serialize" => a.serialize = true,
+                    "--sim-threads" => {
+                        a.sim_threads = Some(
+                            next_val("--sim-threads", &mut it)?
+                                .parse()
+                                .context("--sim-threads must be an \
+                                          unsigned integer")?);
+                    }
                     "--config" => {
                         a.config_file =
                             Some(next_val("--config", &mut it)?.into());
@@ -227,6 +243,9 @@ pub fn execute(cmd: Command) -> Result<String> {
                 cfg.apply_overrides(&kv)?;
             }
             cfg.serialize_streams |= a.serialize;
+            if let Some(t) = a.sim_threads {
+                cfg.sim_threads = t;
+            }
             cfg.apply_overrides(&a.overrides)?;
 
             let workload = if let Some(b) = &a.bench {
@@ -350,7 +369,8 @@ mod tests {
     fn parses_run_flags() {
         let cmd = parse(&sv(&["run", "--bench", "l2_lat", "--preset",
                               "minimal", "--stat-mode", "clean",
-                              "--serialize", "-o", "num_cores", "2",
+                              "--serialize", "--sim-threads", "4",
+                              "-o", "num_cores", "2",
                               "--timeline"])).unwrap();
         let Command::Run(a) = cmd else { panic!() };
         assert_eq!(a.bench.as_deref(), Some("l2_lat"));
@@ -358,7 +378,37 @@ mod tests {
         assert_eq!(a.stat_mode.as_deref(), Some("clean"));
         assert!(a.serialize);
         assert!(a.timeline);
+        assert_eq!(a.sim_threads, Some(4));
         assert_eq!(a.overrides["num_cores"], "2");
+    }
+
+    #[test]
+    fn sim_threads_flag_rejects_garbage() {
+        assert!(parse(&sv(&["run", "--bench", "l2_lat",
+                            "--sim-threads", "lots"])).is_err());
+        assert!(parse(&sv(&["run", "--bench", "l2_lat",
+                            "--sim-threads"])).is_err());
+    }
+
+    #[test]
+    fn execute_run_with_sim_threads_matches_sequential() {
+        // CLI-level determinism: the printed report is byte-identical
+        // across thread counts (the full matrix is in
+        // tests/determinism.rs)
+        let run = |threads: u32| {
+            execute(Command::Run(RunArgs {
+                bench: Some("l2_lat".into()),
+                preset: "minimal".into(),
+                sim_threads: Some(threads),
+                ..RunArgs::default()
+            }))
+            .unwrap()
+        };
+        // minimal has one core, so both resolve to one worker — this
+        // pins flag plumbing end to end; sm7_titanv_mini covers >1
+        let seq = run(1).replace("sim_threads=1", "sim_threads=N");
+        let par = run(4).replace("sim_threads=4", "sim_threads=N");
+        assert_eq!(seq, par);
     }
 
     #[test]

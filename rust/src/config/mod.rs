@@ -36,6 +36,12 @@ pub struct SimConfig {
     pub serialize_streams: bool,
     /// Stat semantics (tip / clean / exact) — see [`StatMode`].
     pub stat_mode: StatMode,
+    /// Worker threads for the parallel core/partition loop
+    /// (`--sim-threads`): 0 = available parallelism, 1 = the
+    /// sequential path; capped at `num_cores`. Per-stream/exact stats
+    /// are bit-identical for every value; clean mode always runs
+    /// sequentially (its under-count is an arrival-order artifact).
+    pub sim_threads: u32,
     /// Max thread blocks resident per core.
     pub max_tbs_per_core: u32,
     /// Max warps resident per core.
@@ -120,6 +126,7 @@ impl SimConfig {
                 self.concurrent_kernel_sm = b(val)?;
             }
             "serialize_streams" => self.serialize_streams = b(val)?,
+            "sim_threads" => self.sim_threads = val.parse()?,
             "stat_mode" => {
                 self.stat_mode = match val {
                     "tip" | "per_stream" => StatMode::PerStream,
@@ -193,13 +200,19 @@ impl SimConfig {
     pub fn summary(&self) -> String {
         format!(
             "preset={} cores={} l2_parts={} concurrent_kernel_sm={} \
-             serialize_streams={} stat_mode={} l1d={} l2_capacity={}KiB",
+             serialize_streams={} stat_mode={} sim_threads={} l1d={} \
+             l2_capacity={}KiB",
             self.preset,
             self.num_cores,
             self.num_l2_partitions,
             self.concurrent_kernel_sm as u8,
             self.serialize_streams as u8,
             self.stat_mode.label(),
+            if self.sim_threads == 0 {
+                "auto".to_string()
+            } else {
+                self.sim_threads.to_string()
+            },
             self.l1d.as_ref().map_or("none".into(),
                 |c| format!("{}KiB", c.capacity() / 1024)),
             self.l2.capacity() * self.num_l2_partitions as u64 / 1024,
@@ -245,6 +258,7 @@ pub mod presets {
             concurrent_kernel_sm: true,
             serialize_streams: false,
             stat_mode: StatMode::PerStream,
+            sim_threads: 0,
             max_tbs_per_core: 32,
             max_warps_per_core: 64,
             warp_size: 32,
@@ -339,11 +353,12 @@ l2_latency 99   # trailing comment
         let mut c = SimConfig::default();
         let kv = parse_config_text(
             "-gpgpu_concurrent_kernel_sm 0\n-stat_mode clean\n\
-             -num_cores 2\n").unwrap();
+             -num_cores 2\n-sim_threads 4\n").unwrap();
         c.apply_overrides(&kv).unwrap();
         assert!(!c.concurrent_kernel_sm);
         assert_eq!(c.stat_mode, StatMode::AggregateBuggy);
         assert_eq!(c.num_cores, 2);
+        assert_eq!(c.sim_threads, 4);
     }
 
     #[test]

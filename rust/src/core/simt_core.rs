@@ -9,12 +9,14 @@
 //! fire-and-forget.
 //!
 //! Every L1 access records a per-stream stat — the L1 side of the
-//! paper's `Total_core_cache_stats_breakdown` — via
-//! [`StatsEngine::inc_core`]: the increment is admitted centrally
-//! (mode/guard) and accumulated in this core's
-//! [`crate::stats::CoreStatShard`], merged on kernel exit. The stream
-//! slot carried by each TB was interned once at kernel launch, so the
-//! whole path is array indexing.
+//! paper's `Total_core_cache_stats_breakdown` — through a
+//! [`CoreSink`]: on the parallel path this core's worker thread owns a
+//! [`crate::stats::CoreStatShard`] exclusively and the main thread
+//! merges it at kernel exit in fixed core-id order; in clean mode the
+//! increment goes through [`StatsEngine::inc_core`] so the same-cycle
+//! guard sees arrival order. The stream slot carried by each TB was
+//! interned once at kernel launch, so the whole path is array
+//! indexing.
 
 use std::collections::VecDeque;
 
@@ -24,7 +26,7 @@ use crate::config::SimConfig;
 use crate::core::coalesce::coalesce_sectors;
 use crate::mem::fetch::{FetchIdAlloc, MemFetch, ReturnPath};
 use crate::mem::icnt::DelayQueue;
-use crate::stats::StatsEngine;
+use crate::stats::{CoreSink, StatsEngine};
 use crate::trace::{MemInstr, MemSpace, TbTrace, TraceOp};
 use crate::{Cycle, KernelUid, StreamId, StreamSlot};
 
@@ -160,10 +162,21 @@ impl SimtCore {
         });
     }
 
-    /// Advance one cycle. L1 stats land in the engine keyed by each
-    /// fetch's interned stream slot.
+    /// Advance one cycle with central stat admission (the clean-mode /
+    /// legacy sequential path). Equivalent to
+    /// [`SimtCore::cycle_with`] with [`CoreSink::Central`].
     pub fn cycle(&mut self, now: Cycle, engine: &mut StatsEngine,
                  ids: &mut FetchIdAlloc) {
+        self.cycle_with(now, &mut CoreSink::Central(engine), ids);
+    }
+
+    /// Advance one cycle. L1 stats land in `sink` keyed by each fetch's
+    /// interned stream slot: a worker-owned [`CoreSink::Shard`] on the
+    /// parallel path (this core's thread owns the shard exclusively;
+    /// the main thread merges it at kernel exit), or
+    /// [`CoreSink::Central`] for clean mode's ordered inc-time guard.
+    pub fn cycle_with(&mut self, now: Cycle, sink: &mut CoreSink<'_>,
+                      ids: &mut FetchIdAlloc) {
         // fast path: nothing resident and nothing in flight
         if self.resident == 0
             && self.ldst_queue.is_empty()
@@ -177,7 +190,7 @@ impl SimtCore {
         }
 
         // 2. LDST unit: up to issue_width transactions per cycle.
-        self.ldst_cycle(now, engine);
+        self.ldst_cycle(now, sink);
 
         // 3. Warp issue: up to issue_width ready warps, round-robin.
         self.issue_cycle(now, ids);
@@ -193,7 +206,7 @@ impl SimtCore {
         }
     }
 
-    fn ldst_cycle(&mut self, now: Cycle, engine: &mut StatsEngine) {
+    fn ldst_cycle(&mut self, now: Cycle, sink: &mut CoreSink<'_>) {
         for _ in 0..self.issue_width {
             let Some(front) = self.ldst_queue.front() else { break };
             // L1 bypass (`.cg`) or no L1: straight to the interconnect.
@@ -205,13 +218,11 @@ impl SimtCore {
             let l1 = self.l1.as_mut().unwrap();
             let f = front.clone();
             let res = l1.access(&f, now);
-            engine.inc_core(self.id, f.stream_slot, f.access_type,
-                            res.outcome, now);
+            sink.inc(self.id, f.stream_slot, f.access_type,
+                     res.outcome, now);
             if res.outcome == AccessOutcome::ReservationFail {
-                engine.inc_core_fail(self.id, f.stream_slot,
-                                     f.access_type,
-                                     res.fail.expect("fail reason"),
-                                     now);
+                sink.inc_fail(self.id, f.stream_slot, f.access_type,
+                              res.fail.expect("fail reason"), now);
                 break; // structural stall: retry same txn next cycle
             }
             self.ldst_queue.pop_front();

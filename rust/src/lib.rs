@@ -27,7 +27,9 @@
 //!   counters, dense interned stream slots, per-core shards), kernel
 //!   launch/exit cycle tracking, Accel-Sim-format printers.
 //! * [`timeline`] — per-stream kernel timelines (the paper's figures).
-//! * [`sim`] — the top-level [`sim::GpuSim`] clock loop.
+//! * [`sim`] — the top-level [`sim::GpuSim`] clock loop and the
+//!   [`sim::parallel`] sharded worker pool behind `--sim-threads`
+//!   (per-stream/exact stats bit-identical for any thread count).
 //! * [`harness`] — tip / clean / tip_serialized comparison harness.
 //! * [`runtime`], [`functional`] — PJRT execution of the AOT-compiled
 //!   JAX/Pallas artifacts (functional layer; Python never runs here).

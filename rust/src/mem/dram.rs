@@ -4,15 +4,18 @@
 //! Deliberately simple (no banks/rows): the paper's claims are about
 //! stat *attribution*, which needs realistic queueing and latency, not
 //! bank-level fidelity. Per-stream accounting (the paper's §6 "main
-//! memory" extension) is reported straight into the
-//! [`crate::stats::StatsEngine`]'s DRAM domain, slot-indexed by each
-//! fetch's interned stream; the channel itself keeps only cheap local
-//! read/write totals for per-channel observability.
+//! memory" extension) is reported through the owning partition's
+//! [`PartitionSink`] — on the parallel path a worker-owned
+//! [`crate::stats::PartitionStatShard`], merged centrally at kernel
+//! exit — slot-indexed by each fetch's interned stream. (The old
+//! `&mut StatsEngine` parameter is gone: these counters never leave
+//! the partition until the merge point.) The channel itself keeps only
+//! cheap local read/write totals for per-channel observability.
 
 use std::collections::VecDeque;
 
 use crate::mem::fetch::MemFetch;
-use crate::stats::StatsEngine;
+use crate::stats::PartitionSink;
 use crate::Cycle;
 
 /// Per-channel DRAM traffic totals (not per-stream — the per-stream
@@ -51,8 +54,8 @@ impl Dram {
 
     /// Service up to the per-cycle cap of ready requests; returns
     /// completed *reads* (fills). Writes retire silently. Every
-    /// serviced request records a per-stream stat in the engine.
-    pub fn cycle(&mut self, now: Cycle, engine: &mut StatsEngine)
+    /// serviced request records a per-stream stat through `sink`.
+    pub fn cycle(&mut self, now: Cycle, sink: &mut PartitionSink<'_>)
         -> Vec<MemFetch> {
         let mut fills = Vec::new();
         for _ in 0..self.per_cycle {
@@ -61,7 +64,7 @@ impl Dram {
                 break;
             }
             let (_, f) = self.queue.pop_front().unwrap();
-            engine.inc_dram_slot(f.stream_slot);
+            sink.inc_dram(f.stream_slot);
             if f.is_write {
                 self.stats.writes += 1;
             } else {
@@ -82,7 +85,7 @@ impl Dram {
 mod tests {
     use super::*;
     use crate::cache::access::AccessType;
-    use crate::stats::{StatDomain, StatMode};
+    use crate::stats::{StatDomain, StatMode, StatsEngine};
 
     fn f(engine: &mut StatsEngine, id: u64, is_write: bool, stream: u64)
         -> MemFetch {
@@ -111,8 +114,9 @@ mod tests {
         let (a, b) = (f(&mut e, 1, false, 1), f(&mut e, 2, false, 1));
         d.push(0, a);
         d.push(0, b);
-        assert!(d.cycle(99, &mut e).is_empty());
-        let fills = d.cycle(100, &mut e);
+        assert!(d.cycle(99, &mut PartitionSink::Central(&mut e))
+                 .is_empty());
+        let fills = d.cycle(100, &mut PartitionSink::Central(&mut e));
         assert_eq!(fills.iter().map(|x| x.id).collect::<Vec<_>>(),
                    vec![1, 2]);
         assert_eq!(d.pending(), 0);
@@ -126,9 +130,12 @@ mod tests {
             let x = f(&mut e, i, false, 1);
             d.push(0, x);
         }
-        assert_eq!(d.cycle(0, &mut e).len(), 1);
-        assert_eq!(d.cycle(1, &mut e).len(), 1);
-        assert_eq!(d.cycle(2, &mut e).len(), 1);
+        assert_eq!(d.cycle(0, &mut PartitionSink::Central(&mut e)).len(),
+                   1);
+        assert_eq!(d.cycle(1, &mut PartitionSink::Central(&mut e)).len(),
+                   1);
+        assert_eq!(d.cycle(2, &mut PartitionSink::Central(&mut e)).len(),
+                   1);
     }
 
     #[test]
@@ -139,12 +146,33 @@ mod tests {
         let r = f(&mut e, 2, false, 5);
         d.push(0, w);
         d.push(0, r);
-        let fills = d.cycle(0, &mut e);
+        let fills = d.cycle(0, &mut PartitionSink::Central(&mut e));
         assert_eq!(fills.len(), 1);
         assert_eq!(d.stats.writes, 1);
         assert_eq!(d.stats.reads, 1);
         // both serviced requests attributed to stream 5 in the engine
         assert_eq!(e.dram_accesses(5), 2);
         assert_eq!(e.per_stream(StatDomain::Dram), vec![(5, 2)]);
+    }
+
+    #[test]
+    fn dram_attribution_through_worker_shard() {
+        // the parallel path: raw shard writes + central absorb give the
+        // same per-stream attribution as inc-time central accounting
+        use crate::stats::PartitionStatShard;
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        let mut shard = PartitionStatShard::default();
+        let mut d = Dram::new(0, 4);
+        let a = f(&mut e, 1, false, 7);
+        let b = f(&mut e, 2, true, 7);
+        d.push(0, a);
+        d.push(0, b);
+        let fills = d.cycle(0, &mut PartitionSink::Shard(&mut shard));
+        assert_eq!(fills.len(), 1);
+        // nothing visible until the merge point
+        assert_eq!(e.dram_accesses(7), 0);
+        e.absorb_partition_shard(&mut shard);
+        assert_eq!(e.dram_accesses(7), 2);
+        assert_eq!(e.per_stream(StatDomain::Dram), vec![(7, 2)]);
     }
 }

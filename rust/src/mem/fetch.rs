@@ -67,15 +67,40 @@ impl MemFetch {
     }
 }
 
-/// Monotonic fetch-id allocator.
-#[derive(Debug, Default)]
-pub struct FetchIdAlloc(u64);
+/// Monotonic fetch-id allocator. Ids are debugging identity only —
+/// nothing in the timing or stats model branches on them (the MSHR is
+/// keyed by address/sector and drains FIFO).
+///
+/// The parallel core loop gives each core its own strided allocator
+/// ([`FetchIdAlloc::for_core`]): core `c` of `n` draws `c+1`, `c+1+n`,
+/// `c+1+2n`, … — globally unique and a pure function of `(core, seq)`,
+/// so ids are identical for every `--sim-threads` value.
+#[derive(Debug, Clone)]
+pub struct FetchIdAlloc {
+    next_id: u64,
+    stride: u64,
+}
+
+impl Default for FetchIdAlloc {
+    fn default() -> Self {
+        Self { next_id: 1, stride: 1 }
+    }
+}
 
 impl FetchIdAlloc {
+    /// Core-local allocator over the id space `{core+1 + k·num_cores}`.
+    pub fn for_core(core_id: u32, num_cores: u32) -> Self {
+        Self {
+            next_id: core_id as u64 + 1,
+            stride: num_cores.max(1) as u64,
+        }
+    }
+
     /// Next id.
     pub fn next(&mut self) -> u64 {
-        self.0 += 1;
-        self.0
+        let id = self.next_id;
+        self.next_id += self.stride;
+        id
     }
 }
 
@@ -122,5 +147,20 @@ mod tests {
     fn id_alloc_monotonic() {
         let mut a = FetchIdAlloc::default();
         assert!(a.next() < a.next());
+    }
+
+    #[test]
+    fn per_core_id_spaces_are_disjoint_and_deterministic() {
+        let n = 4;
+        let mut seen = std::collections::BTreeSet::new();
+        for core in 0..n {
+            let mut a = FetchIdAlloc::for_core(core, n);
+            let mut b = FetchIdAlloc::for_core(core, n);
+            for _ in 0..16 {
+                let id = a.next();
+                assert_eq!(id, b.next(), "ids must be reproducible");
+                assert!(seen.insert(id), "id {id} collided");
+            }
+        }
     }
 }

@@ -8,6 +8,14 @@
 //! per-stream stats) is reported straight into the
 //! [`crate::stats::StatsEngine`]'s Icnt domain, slot-indexed by each
 //! fetch's interned stream.
+//!
+//! In the parallel clock loop ([`crate::sim::parallel`]) the crossbar
+//! is the **barrier exchange point**: workers leave their cores' and
+//! partitions' fetches in per-worker queues, and the main thread alone
+//! pushes/drains the crossbar between the core and partition phases,
+//! in fixed core-id/partition-id order — so flit attribution order
+//! (and therefore every stat mode) is identical for any
+//! `--sim-threads` value.
 
 use std::collections::VecDeque;
 
@@ -83,6 +91,26 @@ impl Icnt {
                         engine: &mut StatsEngine) {
         engine.inc_icnt_slot(IcntDir::ToCore, f.stream_slot);
         self.to_core.push(now, f);
+    }
+
+    /// Push a drained per-worker queue of requests (already in core-id
+    /// order) toward the partitions.
+    pub fn push_many_to_mem(&mut self, now: Cycle,
+                            fetches: &mut Vec<MemFetch>,
+                            engine: &mut StatsEngine) {
+        for f in fetches.drain(..) {
+            self.push_to_mem(now, f, engine);
+        }
+    }
+
+    /// Push a drained per-worker queue of responses (already in
+    /// partition-id order) toward the cores.
+    pub fn push_many_to_core(&mut self, now: Cycle,
+                             fetches: &mut Vec<MemFetch>,
+                             engine: &mut StatsEngine) {
+        for f in fetches.drain(..) {
+            self.push_to_core(now, f, engine);
+        }
     }
 
     /// Drain up to the flit budget of ready core→mem requests.

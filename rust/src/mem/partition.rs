@@ -5,9 +5,13 @@
 //! 1. replayed (previously `RESERVATION_FAIL`ed) accesses retry first —
 //!    GPGPU-Sim's ICNT→L2 queue head-of-line semantics;
 //! 2. new requests from the interconnect probe the L2; every probe
-//!    records a per-stream stat in the engine's L2 domain, indexed by
-//!    the fetch's interned stream slot (the paper's instrumented
-//!    `inc_stats` path);
+//!    records a per-stream stat through the [`PartitionSink`], indexed
+//!    by the fetch's interned stream slot (the paper's instrumented
+//!    `inc_stats` path). On the parallel path the sink is this
+//!    partition's worker-owned
+//!    [`crate::stats::PartitionStatShard`], merged centrally at the
+//!    kernel-exit merge point — the partition no longer borrows the
+//!    shared `StatsEngine` on its cycle path;
 //! 3. L2 miss traffic drains to DRAM; DRAM fills flow back into the L2
 //!    ([`crate::cache::Cache::fill`]) and release merged accesses;
 //! 4. hits leave through a latency queue, misses leave when filled.
@@ -20,7 +24,7 @@ use crate::config::SimConfig;
 use crate::mem::dram::Dram;
 use crate::mem::fetch::MemFetch;
 use crate::mem::icnt::DelayQueue;
-use crate::stats::{StatDomain, StatsEngine};
+use crate::stats::PartitionSink;
 use crate::Cycle;
 
 /// One L2 sub-partition + DRAM channel.
@@ -70,10 +74,14 @@ impl MemPartition {
         self.incoming.push_back(f);
     }
 
-    /// Advance one cycle; L2 and DRAM stats go into the unified engine.
-    pub fn cycle(&mut self, now: Cycle, engine: &mut StatsEngine) {
+    /// Advance one cycle; L2 and DRAM stats go through `sink` — the
+    /// partition's worker-owned shard on the parallel path, or the
+    /// central engine for clean mode's ordered guard. (The old
+    /// `&mut StatsEngine` parameter is gone: partition-local counters
+    /// stay partition-local until the merge point.)
+    pub fn cycle(&mut self, now: Cycle, sink: &mut PartitionSink<'_>) {
         // 3a. DRAM fills -> L2 -> merged responses
-        for fill in self.dram.cycle(now, engine) {
+        for fill in self.dram.cycle(now, sink) {
             for resp in self.l2.fill(fill.addr, now) {
                 self.outgoing.push(resp);
             }
@@ -92,12 +100,10 @@ impl MemPartition {
             };
             budget -= 1;
             let res = self.l2.access(&f, now);
-            engine.inc_slot(StatDomain::L2, f.stream_slot,
-                            f.access_type, res.outcome, now);
+            sink.inc_l2(f.stream_slot, f.access_type, res.outcome, now);
             match res.outcome {
                 AccessOutcome::ReservationFail => {
-                    engine.inc_fail_slot(
-                        StatDomain::L2,
+                    sink.inc_l2_fail(
                         f.stream_slot,
                         f.access_type,
                         res.fail.expect("fail reason"),
@@ -135,6 +141,13 @@ impl MemPartition {
         std::mem::take(&mut self.outgoing)
     }
 
+    /// Allocation-free drain: append responses to `out` (the parallel
+    /// loop reuses one per-worker queue, drained centrally in fixed
+    /// partition-id order).
+    pub fn drain_responses_into(&mut self, out: &mut Vec<MemFetch>) {
+        out.append(&mut self.outgoing);
+    }
+
     /// Work outstanding anywhere in the partition?
     pub fn busy(&self) -> bool {
         !self.incoming.is_empty()
@@ -165,7 +178,7 @@ mod tests {
     use super::*;
     use crate::cache::access::AccessType;
     use crate::mem::fetch::ReturnPath;
-    use crate::stats::StatMode;
+    use crate::stats::{StatDomain, StatMode, StatsEngine};
 
     fn cfg() -> SimConfig {
         SimConfig::preset("minimal").unwrap()
@@ -193,7 +206,7 @@ mod tests {
         let mut out = Vec::new();
         let mut now = start;
         while p.busy() && now < start + 10_000 {
-            p.cycle(now, engine);
+            p.cycle(now, &mut PartitionSink::Central(&mut *engine));
             out.extend(p.drain_responses());
             now += 1;
         }
@@ -256,6 +269,52 @@ mod tests {
             .sum();
         assert_eq!(misses, 1);
         assert_eq!(mshr_hits, 3);
+    }
+
+    #[test]
+    fn shard_sink_matches_central_sink() {
+        // the same request stream through a worker-owned shard (+ one
+        // absorb at the end) must equal the inc-time central path in
+        // every engine domain the partition feeds
+        use crate::stats::PartitionStatShard;
+        let reqs = |e: &mut StatsEngine| {
+            (0..6u64).map(|i| rd(e, i + 1, 0x1000 + (i % 3) * 0x80,
+                                 i % 2)).collect::<Vec<_>>()
+        };
+        let mut central = StatsEngine::new(StatMode::PerStream);
+        let mut p1 = MemPartition::new(0, &cfg());
+        for f in reqs(&mut central) {
+            p1.push_request(f);
+        }
+        let (r1, _) = run_until_idle(&mut p1, &mut central, 0);
+
+        let mut sharded = StatsEngine::new(StatMode::PerStream);
+        let mut shard = PartitionStatShard::default();
+        let mut p2 = MemPartition::new(0, &cfg());
+        for f in reqs(&mut sharded) {
+            p2.push_request(f);
+        }
+        let mut r2 = Vec::new();
+        let mut now = 0;
+        while p2.busy() && now < 10_000 {
+            p2.cycle(now, &mut PartitionSink::Shard(&mut shard));
+            p2.drain_responses_into(&mut r2);
+            now += 1;
+        }
+        sharded.absorb_partition_shard(&mut shard);
+
+        assert_eq!(r1.len(), r2.len());
+        assert_eq!(central.cache(StatDomain::L2).total_table(),
+                   sharded.cache(StatDomain::L2).total_table());
+        for s in 0..2u64 {
+            assert_eq!(central.cache(StatDomain::L2).stream_table(s),
+                       sharded.cache(StatDomain::L2).stream_table(s),
+                       "stream {s}");
+            assert_eq!(central.dram_accesses(s),
+                       sharded.dram_accesses(s), "stream {s}");
+        }
+        assert_eq!(central.domain_total(StatDomain::Power),
+                   sharded.domain_total(StatDomain::Power));
     }
 
     #[test]

@@ -10,23 +10,39 @@
 //! * `concurrent_kernel_sm = 0`: the GPU runs one kernel at a time —
 //!   behaviourally the serialized gate.
 //!
-//! All statistics flow into one [`crate::stats::StatsEngine`]
-//! (`self.stats.engine`), threaded as a single `&mut` through cores,
-//! interconnect and partitions. Stream ids are interned to dense slots
-//! when a TB is dispatched; every fetch carries the slot from then on.
+//! # Parallel stepping
 //!
-//! On each kernel exit the simulator prints that kernel's stream's stats
-//! (the paper's §3.1 print fix) into [`GpuStats::exit_log`], then clears
-//! that stream's per-window counters in **every** domain.
+//! The GPU's state lives in [`parallel::WorkerChunk`]s — contiguous
+//! core-id and partition-id ranges, each paired with worker-owned stat
+//! shards. Every clock tick runs as **sequential launch/dispatch →
+//! parallel core phase → central icnt exchange → parallel partition
+//! phase → central response routing → retire** (see
+//! [`crate::sim::parallel`] for the full barrier diagram and the
+//! bit-identity argument). `--sim-threads` (0 = available parallelism,
+//! 1 = the sequential path) picks how many worker threads step the
+//! chunks; the per-stream (`tip`) and `exact` modes produce
+//! byte-identical stats for every value. Clean mode is pinned to one
+//! thread and inc-time central admission because its under-count is an
+//! arrival-order artifact by design.
+//!
+//! On each kernel exit the simulator absorbs all worker shards in
+//! fixed core-id then partition-id order (the merge point), prints
+//! that kernel's stream's stats (the paper's §3.1 print fix) into
+//! [`GpuStats::exit_log`], then clears that stream's per-window
+//! counters in **every** domain.
+
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, Result};
 
 use crate::config::SimConfig;
 use crate::core::SimtCore;
 use crate::kernel::{KernelInfo, KernelQueue};
-use crate::mem::{partition_of, FetchIdAlloc, Icnt, MemPartition};
+use crate::mem::{partition_of, Icnt, MemPartition};
+use crate::sim::parallel::{self, WorkerChunk};
 use crate::sim::GpuStats;
 use crate::stats::print as stat_print;
+use crate::stats::StatMode;
 use crate::stream::{LaunchGate, StreamTable};
 use crate::timeline;
 use crate::trace::Workload;
@@ -38,18 +54,24 @@ const MAX_RUNNING_KERNELS: usize = 32;
 /// The simulator.
 pub struct GpuSim {
     cfg: SimConfig,
-    cores: Vec<SimtCore>,
-    partitions: Vec<MemPartition>,
+    /// Worker-owned GPU state: cores + partitions + stat shards +
+    /// exchange queues, split into contiguous chunks, one per worker.
+    chunks: Vec<Mutex<WorkerChunk>>,
+    /// Chunk boundaries over core ids (`threads + 1` offsets).
+    core_starts: Vec<usize>,
+    /// Chunk boundaries over partition ids.
+    part_starts: Vec<usize>,
+    /// Worker threads stepping the chunks (1 = sequential path).
+    threads: usize,
     icnt: Icnt,
     queue: KernelQueue,
     streams: StreamTable,
     running: Vec<KernelInfo>,
-    ids: FetchIdAlloc,
     now: Cycle,
     stats: GpuStats,
     dispatch_rr: usize,
-    /// Reused per-cycle scratch buffer (allocation-free step loop).
-    scratch: Vec<crate::mem::MemFetch>,
+    /// TBs retired during the last core phase (chunk/core-id order).
+    finished_scratch: Vec<crate::core::FinishedTb>,
     /// Echo kernel launch/exit lines to stdout.
     pub verbose: bool,
 }
@@ -58,27 +80,41 @@ impl GpuSim {
     /// Build a simulator for `cfg`.
     pub fn new(cfg: SimConfig) -> Result<Self> {
         cfg.validate()?;
-        let cores = (0..cfg.num_cores)
+        let cores: Vec<SimtCore> = (0..cfg.num_cores)
             .map(|i| SimtCore::new(i, &cfg))
             .collect();
-        let partitions = (0..cfg.num_l2_partitions)
+        let partitions: Vec<MemPartition> = (0..cfg.num_l2_partitions)
             .map(|i| MemPartition::new(i, &cfg))
             .collect();
+        // clean mode's under-count is an inc-time arrival-order
+        // artifact — it must observe the sequential order, so it is
+        // exempt from parallel stepping by design.
+        let threads = if cfg.stat_mode == StatMode::AggregateBuggy {
+            1
+        } else {
+            parallel::resolve_threads(cfg.sim_threads, cfg.num_cores)
+        };
+        let chunks = parallel::build_chunks(cores, partitions, threads);
+        let core_starts =
+            parallel::split_starts(cfg.num_cores as usize, threads);
+        let part_starts = parallel::split_starts(
+            cfg.num_l2_partitions as usize, threads);
         let icnt = Icnt::new(cfg.icnt_latency, cfg.icnt_flit_per_cycle);
         let stats = GpuStats::new(cfg.stat_mode);
         Ok(Self {
             cfg,
-            cores,
-            partitions,
+            chunks,
+            core_starts,
+            part_starts,
+            threads,
             icnt,
             queue: KernelQueue::new(),
             streams: StreamTable::new(),
             running: Vec::new(),
-            ids: FetchIdAlloc::default(),
             now: 0,
             stats,
             dispatch_rr: 0,
-            scratch: Vec::new(),
+            finished_scratch: Vec::new(),
             verbose: false,
         })
     }
@@ -86,6 +122,16 @@ impl GpuSim {
     /// Configuration in use.
     pub fn config(&self) -> &SimConfig {
         &self.cfg
+    }
+
+    /// Effective worker-thread count (clean mode pins this to 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Clean mode needs inc-time central admission (ordered guard).
+    fn central_stats(&self) -> bool {
+        self.cfg.stat_mode == StatMode::AggregateBuggy
     }
 
     /// Queue every kernel of a workload (memcpys are functional-only and
@@ -116,9 +162,47 @@ impl GpuSim {
     }
 
     /// Run to completion (or `max_cycles`). Returns the final stats.
+    /// With `--sim-threads > 1` a persistent worker pool steps the
+    /// chunks; the sequential path runs the identical phased loop
+    /// inline.
     pub fn run(&mut self) -> Result<&GpuStats> {
-        while !self.idle() {
-            self.step()?;
+        let chunks = std::mem::take(&mut self.chunks);
+        let result = if self.threads > 1 {
+            let ctrl = parallel::PoolCtrl::new(self.threads);
+            let ctrl_ref = &ctrl;
+            std::thread::scope(|s| {
+                for ch in &chunks {
+                    s.spawn(move || parallel::worker_loop(ch, ctrl_ref));
+                }
+                // always release the workers, even if the drive loop
+                // errors or panics — a wedged pool would deadlock the
+                // scope's implicit join
+                let r = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        self.drive(&chunks, Some(ctrl_ref))
+                    }));
+                ctrl_ref.shutdown();
+                match r {
+                    Ok(r) => r,
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            })
+        } else {
+            self.drive(&chunks, None)
+        };
+        self.chunks = chunks;
+        result?;
+        self.absorb_resident_shards();
+        self.stats.total_cycles = self.now;
+        Ok(&self.stats)
+    }
+
+    /// The clock loop proper (chunks are moved out of `self` so worker
+    /// threads can borrow them while `self` stays mutable here).
+    fn drive(&mut self, chunks: &[Mutex<WorkerChunk>],
+             ctrl: Option<&parallel::PoolCtrl>) -> Result<()> {
+        while !self.work_drained(chunks) {
+            self.step_on(chunks, ctrl)?;
             if self.now >= self.cfg.max_cycles {
                 bail!("simulation exceeded max_cycles = {} \
                        (queue={}, running={})",
@@ -126,61 +210,78 @@ impl GpuSim {
                       self.running.len());
             }
         }
-        self.stats.engine.flush_shards();
-        self.stats.total_cycles = self.now;
-        Ok(&self.stats)
+        Ok(())
     }
 
     /// Everything drained? Cheap checks first — while kernels are in
     /// flight (the common case) this is two length comparisons, not a
     /// scan over 80 cores.
-    pub fn idle(&self) -> bool {
+    fn work_drained(&self, chunks: &[Mutex<WorkerChunk>]) -> bool {
         self.queue.is_empty()
             && self.running.is_empty()
             && !self.icnt.busy()
-            && self.cores.iter().all(|c| !c.busy())
-            && self.partitions.iter().all(|p| !p.busy())
+            && chunks.iter().all(|c| !parallel::lock_chunk(c).busy())
     }
 
-    /// One clock tick.
+    /// Everything drained? (Public probe; valid outside [`GpuSim::run`].)
+    pub fn idle(&self) -> bool {
+        self.work_drained(&self.chunks)
+    }
+
+    /// One clock tick (inline / sequential execution of the phased
+    /// loop — [`GpuSim::run`] drives the same function with a pool).
     pub fn step(&mut self) -> Result<()> {
+        let chunks = std::mem::take(&mut self.chunks);
+        let r = self.step_on(&chunks, None);
+        self.chunks = chunks;
+        r
+    }
+
+    /// One clock tick over `chunks`: sequential launch/dispatch, the
+    /// two (possibly pooled) phases, and the central exchanges between
+    /// them — all cross-chunk traffic in fixed global-id order.
+    fn step_on(&mut self, chunks: &[Mutex<WorkerChunk>],
+               ctrl: Option<&parallel::PoolCtrl>) -> Result<()> {
         self.launch_kernels();
-        self.dispatch_tbs();
+        self.dispatch_tbs(chunks);
 
-        // cores issue + L1 (stats land in each core's engine shard)
-        let mut scratch = std::mem::take(&mut self.scratch);
-        for core in &mut self.cores {
-            core.cycle(self.now, &mut self.stats.engine, &mut self.ids);
-            core.drain_to_icnt_into(&mut scratch);
-        }
-        for f in scratch.drain(..) {
-            self.icnt.push_to_mem(self.now, f, &mut self.stats.engine);
-        }
-        self.scratch = scratch;
+        // parallel core phase: issue + L1, stats into worker shards
+        self.phase(chunks, ctrl, parallel::CMD_CORES)?;
 
-        // interconnect: core -> partitions
+        // icnt exchange barrier, core side: per-worker queues drain
+        // into the crossbar in core-id order, then ready requests
+        // route to per-partition inboxes
         let line = self.cfg.l2.line_size;
         let nparts = self.cfg.num_l2_partitions;
+        for ch in chunks {
+            let mut g = parallel::lock_chunk(ch);
+            let WorkerChunk { out_fetches, finished, .. } = &mut *g;
+            self.icnt.push_many_to_mem(self.now, out_fetches,
+                                       &mut self.stats.engine);
+            self.finished_scratch.append(finished);
+        }
         for f in self.icnt.drain_to_mem(self.now) {
             let p = partition_of(f.addr, line, nparts) as usize;
-            self.partitions[p].push_request(f);
+            let ci = parallel::chunk_of(&self.part_starts, p);
+            let local = p - self.part_starts[ci];
+            parallel::lock_chunk(&chunks[ci]).part_inbox.push((local, f));
         }
 
-        // partitions: L2 + DRAM (skip quiescent partitions)
-        for p in &mut self.partitions {
-            if !p.busy() {
-                continue;
-            }
-            p.cycle(self.now, &mut self.stats.engine);
-            for resp in p.drain_responses() {
-                self.icnt.push_to_core(self.now, resp,
-                                       &mut self.stats.engine);
-            }
-        }
+        // parallel partition phase: L2 + DRAM, stats into worker shards
+        self.phase(chunks, ctrl, parallel::CMD_PARTS)?;
 
-        // interconnect: partitions -> cores. A response without a valid
-        // return path cannot be delivered; dropping it (with a counter)
-        // beats the old behaviour of silently misdelivering to core 0.
+        // icnt exchange barrier, mem side: responses in partition-id
+        // order, then route ready responses to core inboxes (delivered
+        // at the start of the next core phase with this cycle number —
+        // observationally identical to in-cycle delivery). A response
+        // without a valid return path cannot be delivered; dropping it
+        // (with a counter) beats silently misdelivering to core 0.
+        for ch in chunks {
+            let mut g = parallel::lock_chunk(ch);
+            let WorkerChunk { out_responses, .. } = &mut *g;
+            self.icnt.push_many_to_core(self.now, out_responses,
+                                        &mut self.stats.engine);
+        }
         for f in self.icnt.drain_to_core(self.now) {
             let Some(ret) = f.ret else {
                 self.stats.engine.note_dropped_response();
@@ -190,18 +291,53 @@ impl GpuSim {
                 continue;
             };
             let core = ret.core_id as usize;
-            if core >= self.cores.len() {
+            if core >= self.cfg.num_cores as usize {
                 self.stats.engine.note_dropped_response();
                 debug_assert!(false,
                               "response routed to nonexistent core \
                                {core} (fetch {})", f.id);
                 continue;
             }
-            self.cores[core].receive_response(f, self.now);
+            let ci = parallel::chunk_of(&self.core_starts, core);
+            let local = core - self.core_starts[ci];
+            parallel::lock_chunk(&chunks[ci])
+                .core_inbox
+                .push((self.now, local, f));
         }
 
-        self.retire_tbs();
+        self.retire_tbs(chunks);
         self.now += 1;
+        Ok(())
+    }
+
+    /// Run one phase on every chunk: pooled (workers park on barriers)
+    /// or inline on this thread — the code each chunk executes is
+    /// identical either way, which is what makes thread count
+    /// unobservable in the stats.
+    fn phase(&mut self, chunks: &[Mutex<WorkerChunk>],
+             ctrl: Option<&parallel::PoolCtrl>, cmd: u8) -> Result<()> {
+        if let Some(ctrl) = ctrl {
+            debug_assert!(!self.central_stats(),
+                          "clean mode must not run pooled");
+            return ctrl.run_phase(cmd, self.now);
+        }
+        let central = self.central_stats();
+        for ch in chunks {
+            let mut g = parallel::lock_chunk(ch);
+            if cmd == parallel::CMD_CORES {
+                parallel::core_phase(&mut g, self.now, if central {
+                    Some(&mut self.stats.engine)
+                } else {
+                    None
+                });
+            } else {
+                parallel::partition_phase(&mut g, self.now, if central {
+                    Some(&mut self.stats.engine)
+                } else {
+                    None
+                });
+            }
+        }
         Ok(())
     }
 
@@ -243,13 +379,18 @@ impl GpuSim {
     /// `select_kernel()` behaviour — so concurrent kernels interleave
     /// over the SMs instead of draining in launch order (this is also
     /// what makes different streams update stats in the same cycle,
-    /// the collision behind the paper's Fig. 1 under-count).
-    fn dispatch_tbs(&mut self) {
-        let ncores = self.cores.len();
+    /// the collision behind the paper's Fig. 1 under-count). Runs on
+    /// the main thread between phases; workers are parked, so the
+    /// chunk locks are uncontended.
+    fn dispatch_tbs(&mut self, chunks: &[Mutex<WorkerChunk>]) {
+        let ncores = self.cfg.num_cores as usize;
         let nkernels = self.running.len();
         if nkernels == 0 {
             return;
         }
+        let mut guards: Vec<MutexGuard<'_, WorkerChunk>> =
+            chunks.iter().map(parallel::lock_chunk).collect();
+        let core_starts = &self.core_starts;
         let mut kernel_rr = 0usize;
         loop {
             // next kernel (rotating) that still has TBs to dispatch
@@ -262,8 +403,9 @@ impl GpuSim {
             let ki = (kernel_rr + koff) % nkernels;
             let warps = self.running[ki].trace.warps_per_tb();
             let Some(coff) = (0..ncores).find(|off| {
-                self.cores[(self.dispatch_rr + off) % ncores]
-                    .can_accept(warps)
+                let g = (self.dispatch_rr + off) % ncores;
+                let ci = parallel::chunk_of(core_starts, g);
+                guards[ci].cores[g - core_starts[ci]].can_accept(warps)
             }) else {
                 return; // GPU full this cycle
             };
@@ -272,28 +414,29 @@ impl GpuSim {
             let (uid, stream) = (k.uid, k.stream_id);
             let (tb_idx, trace) = k.dispatch_tb().unwrap();
             let slot = self.stats.engine.intern_stream(stream);
-            self.cores[core].accept_tb(uid, stream, slot, tb_idx, trace);
+            let ci = parallel::chunk_of(core_starts, core);
+            guards[ci].cores[core - core_starts[ci]]
+                .accept_tb(uid, stream, slot, tb_idx, trace);
             self.dispatch_rr = (core + 1) % ncores;
             kernel_rr = (ki + 1) % nkernels;
         }
     }
 
-    /// Collect finished TBs; retire kernels whose TBs all completed.
-    fn retire_tbs(&mut self) {
-        for core in &mut self.cores {
-            for (uid, _tb) in core.take_finished() {
-                if let Some(k) =
-                    self.running.iter_mut().find(|k| k.uid == uid)
-                {
-                    k.tb_done();
-                }
+    /// Apply the TBs the core phase retired; retire kernels whose TBs
+    /// all completed.
+    fn retire_tbs(&mut self, chunks: &[Mutex<WorkerChunk>]) {
+        for (uid, _tb) in self.finished_scratch.drain(..) {
+            if let Some(k) =
+                self.running.iter_mut().find(|k| k.uid == uid)
+            {
+                k.tb_done();
             }
         }
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].done() {
                 let k = self.running.remove(i);
-                self.on_kernel_exit(&k);
+                self.on_kernel_exit(&k, chunks);
             } else {
                 i += 1;
             }
@@ -302,16 +445,17 @@ impl GpuSim {
 
     /// The paper's §3.1/§3.2 exit path: record the end cycle, print only
     /// the exiting kernel's stream's stats, reset that stream's
-    /// per-window counters across every domain. Core shards merge here
-    /// (the shard merge point a parallel core loop would also use).
-    fn on_kernel_exit(&mut self, k: &KernelInfo) {
+    /// per-window counters across every domain. **This is the shard
+    /// merge point**: every worker shard absorbs here, centrally.
+    fn on_kernel_exit(&mut self, k: &KernelInfo,
+                      chunks: &[Mutex<WorkerChunk>]) {
         self.streams.finish(k.stream_id, k.uid);
         self.stats
             .kernel_times
             .record_done(k.stream_id, k.uid, self.now);
         self.stats.kernels_done += 1;
 
-        self.stats.engine.flush_shards();
+        self.absorb_shards(chunks);
         let mut log = String::new();
         log.push_str(&format!(
             "kernel '{}' uid {} finished on stream {}\n",
@@ -328,6 +472,36 @@ impl GpuSim {
         }
         self.stats.exit_log.push(log);
         self.stats.engine.clear_pw(k.stream_id);
+    }
+
+    /// Merge every worker shard into the engine in **fixed core-id
+    /// order, then fixed partition-id order**, then flush the
+    /// clean-mode internal shards. Merging is cell-wise addition with
+    /// central mode routing, so the result is independent of worker
+    /// completion order — the determinism suite pins this.
+    fn absorb_shards(&mut self, chunks: &[Mutex<WorkerChunk>]) {
+        for ch in chunks {
+            let mut g = parallel::lock_chunk(ch);
+            let WorkerChunk { core_shards, .. } = &mut *g;
+            for sh in core_shards {
+                self.stats.engine.absorb_core_shard(sh);
+            }
+        }
+        for ch in chunks {
+            let mut g = parallel::lock_chunk(ch);
+            let WorkerChunk { part_shards, .. } = &mut *g;
+            for sh in part_shards {
+                self.stats.engine.absorb_partition_shard(sh);
+            }
+        }
+        self.stats.engine.flush_shards();
+    }
+
+    /// End-of-run merge (chunks are back inside `self`).
+    fn absorb_resident_shards(&mut self) {
+        let chunks = std::mem::take(&mut self.chunks);
+        self.absorb_shards(&chunks);
+        self.chunks = chunks;
     }
 
     /// Final stats (after [`GpuSim::run`]).
@@ -577,6 +751,20 @@ mod tests {
     }
 
     #[test]
+    fn max_cycles_guard_trips_pooled() {
+        // the pool must shut down cleanly when the drive loop errors
+        let mut cfg = mini_cfg(StatMode::PerStream, false);
+        cfg.max_cycles = 3;
+        cfg.sim_threads = 4;
+        let mut sim = GpuSim::new(cfg).unwrap();
+        assert_eq!(sim.threads(), 4);
+        let w = Workload { kernels: vec![kernel(0, 0x0, 64)],
+                           memcpys: vec![] };
+        sim.enqueue_workload(&w).unwrap();
+        assert!(sim.run().is_err());
+    }
+
+    #[test]
     fn dram_icnt_power_domains_populate_per_stream() {
         // disjoint footprints so BOTH streams generate DRAM traffic
         let w = Workload {
@@ -627,5 +815,45 @@ mod tests {
         }
         assert!(engine.domain_total(StatDomain::Dram) > 0);
         assert!(engine.domain_total(StatDomain::Icnt) > 0);
+    }
+
+    #[test]
+    fn clean_mode_is_pinned_to_one_thread() {
+        let mut cfg = mini_cfg(StatMode::AggregateBuggy, false);
+        cfg.sim_threads = 8;
+        let sim = GpuSim::new(cfg).unwrap();
+        assert_eq!(sim.threads(), 1,
+                   "clean mode's inc-time guard needs arrival order");
+        // per-stream/exact honour the flag (capped at the core count)
+        let mut cfg = mini_cfg(StatMode::PerStream, false);
+        cfg.sim_threads = 2;
+        assert_eq!(GpuSim::new(cfg).unwrap().threads(), 2);
+        let mut cfg = mini_cfg(StatMode::AggregateExact, false);
+        cfg.sim_threads = 64;
+        assert_eq!(GpuSim::new(cfg).unwrap().threads(), 4,
+                   "capped at num_cores");
+    }
+
+    #[test]
+    fn thread_counts_produce_identical_stats_json() {
+        // gpu_sim-level determinism probe (the full matrix lives in
+        // tests/determinism.rs): 1 worker vs. 2 vs. 4, same JSON bytes
+        let w = Workload {
+            kernels: (0..3).map(|s| kernel(s, 0x40_0000, 6)).collect(),
+            memcpys: vec![],
+        };
+        let run = |threads: u32| {
+            let mut cfg = mini_cfg(StatMode::PerStream, false);
+            cfg.sim_threads = threads;
+            let mut sim = GpuSim::new(cfg).unwrap();
+            sim.enqueue_workload(&w).unwrap();
+            sim.run().unwrap();
+            crate::stats::export::to_json("tip", sim.stats())
+        };
+        let seq = run(1);
+        for t in [2u32, 4] {
+            assert_eq!(seq, run(t),
+                       "stats diverged at --sim-threads {t}");
+        }
     }
 }

@@ -1,7 +1,16 @@
 //! The top-level GPU simulator.
+//!
+//! * [`gpu_sim`] — the phased clock loop (launch/dispatch → core phase
+//!   → icnt exchange → partition phase → retire/merge).
+//! * [`parallel`] — the sharded parallel stepping subsystem: worker
+//!   chunks, the two phase functions, and the barrier-synchronized
+//!   worker pool behind `--sim-threads`.
+//! * [`gpu_stats`] — simulation-level stat aggregation.
 
 pub mod gpu_sim;
 pub mod gpu_stats;
+pub mod parallel;
 
 pub use gpu_sim::GpuSim;
 pub use gpu_stats::GpuStats;
+pub use parallel::WorkerChunk;

@@ -1,0 +1,433 @@
+//! The sharded parallel stepping subsystem.
+//!
+//! [`crate::sim::GpuSim`]'s clock loop is split into two data-parallel
+//! phases separated by central exchange points:
+//!
+//! ```text
+//!   main: launch_kernels + dispatch_tbs            (sequential)
+//!   ───────────────── barrier ─────────────────
+//!   workers: CORE PHASE — each worker owns a contiguous core-id range:
+//!     deliver queued responses, cycle cores (stats → worker-owned
+//!     CoreStatShards), collect outbound fetches per worker
+//!   ───────────────── barrier ─────────────────
+//!   main: per-worker queues → icnt (core-id order) → route drained
+//!     requests to per-partition inboxes            (sequential)
+//!   ───────────────── barrier ─────────────────
+//!   workers: PARTITION PHASE — each worker owns a contiguous
+//!     partition-id range: push inbox, cycle L2+DRAM (stats →
+//!     worker-owned PartitionStatShards), collect responses per worker
+//!   ───────────────── barrier ─────────────────
+//!   main: responses → icnt (partition-id order) → route to core
+//!     inboxes; retire TBs; on kernel exit absorb ALL shards in fixed
+//!     core-id then partition-id order              (sequential)
+//! ```
+//!
+//! **Why this is bit-identical for every `--sim-threads` value:** a
+//! worker only ever touches its own cores/partitions/shards, every
+//! cross-chunk interaction flows through the main thread in global-id
+//! order, per-core fetch ids are a pure function of `(core, seq)`
+//! ([`FetchIdAlloc::for_core`]), and shard merging is cell-wise
+//! addition performed centrally at the kernel-exit merge point
+//! ([`crate::stats::StatsEngine::absorb_core_shard`] /
+//! [`crate::stats::StatsEngine::absorb_partition_shard`]) where mode
+//! routing and power billing also happen. Thread count changes which
+//! OS thread executes a chunk — nothing else. (Cf. *Parallelizing a
+//! modern GPU simulator*, Huerta 2025, for the shard-per-thread +
+//! ordered-merge approach; the determinism suite in
+//! `tests/determinism.rs` proves the byte-identity claim.)
+//!
+//! **Response delivery is deferred by design:** responses drained from
+//! the crossbar at cycle `t` are recorded `(t, fetch)` in the target
+//! chunk's inbox and delivered at the *start* of cycle `t+1`'s core
+//! phase, using the recorded cycle. This is observationally identical
+//! to the old in-cycle delivery because nothing reads the target
+//! core's state between those two points, and it keeps delivery inside
+//! the parallel section.
+//!
+//! **Clean mode is exempt** from parallel stepping: its under-count is
+//! an inc-time shared-counter artifact (the engine's `CycleGuard` must
+//! observe increments in arrival order), so `GpuSim` pins it to one
+//! thread and routes stats through `CoreSink::Central` /
+//! `PartitionSink::Central` — by design, not as a limitation.
+//!
+//! The worker pool is plain `std`: scoped threads parked on two
+//! reusable [`Barrier`]s, a command word, and one uncontended [`Mutex`]
+//! per chunk that hands chunk ownership back and forth between the
+//! main thread (between barriers) and its worker (inside a phase).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::core::{FinishedTb, SimtCore};
+use crate::mem::{FetchIdAlloc, MemFetch, MemPartition};
+use crate::stats::{CoreSink, CoreStatShard, PartitionSink,
+                   PartitionStatShard, StatsEngine};
+use crate::Cycle;
+
+// Everything a worker owns crosses a thread boundary.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<SimtCore>();
+    assert_send::<MemPartition>();
+    assert_send::<MemFetch>();
+    assert_send::<WorkerChunk>();
+};
+
+/// One worker's exclusively-owned slice of the GPU: a contiguous run
+/// of cores and a contiguous run of memory partitions, each paired
+/// with its worker-owned stat shard, plus the exchange queues the main
+/// thread fills/drains between phases.
+#[derive(Debug)]
+pub struct WorkerChunk {
+    /// Global id of `cores[0]`.
+    pub core_base: usize,
+    pub cores: Vec<SimtCore>,
+    /// `core_shards[i]` belongs to `cores[i]` (per-stream/exact modes).
+    pub core_shards: Vec<CoreStatShard>,
+    /// `core_ids[i]` is `cores[i]`'s strided fetch-id allocator.
+    pub core_ids: Vec<FetchIdAlloc>,
+    /// Responses routed by the main thread: `(arrival cycle, local
+    /// core index, fetch)`, delivered at the next core phase.
+    pub core_inbox: Vec<(Cycle, usize, MemFetch)>,
+    /// Outbound fetches produced by the core phase, in core-id order.
+    pub out_fetches: Vec<MemFetch>,
+    /// TBs retired during the core phase, in core-id order.
+    pub finished: Vec<FinishedTb>,
+
+    /// Global id of `parts[0]`.
+    pub part_base: usize,
+    pub parts: Vec<MemPartition>,
+    /// `part_shards[i]` belongs to `parts[i]`.
+    pub part_shards: Vec<PartitionStatShard>,
+    /// Requests routed by the main thread: `(local partition index,
+    /// fetch)`, pushed at the start of the partition phase.
+    pub part_inbox: Vec<(usize, MemFetch)>,
+    /// Responses produced by the partition phase, in partition-id
+    /// order.
+    pub out_responses: Vec<MemFetch>,
+}
+
+impl WorkerChunk {
+    /// Any work outstanding in this chunk?
+    pub fn busy(&self) -> bool {
+        !self.core_inbox.is_empty()
+            || !self.part_inbox.is_empty()
+            || !self.out_fetches.is_empty()
+            || !self.out_responses.is_empty()
+            || self.cores.iter().any(|c| c.busy())
+            || self.parts.iter().any(|p| p.busy())
+    }
+}
+
+/// Lock a chunk, recovering from poisoning: a worker panic inside a
+/// phase is already surfaced through [`PoolCtrl`]'s failed flag (the
+/// run returns an error), and the barrier protocol serializes all
+/// chunk access — so the data is never torn mid-update in a way a
+/// later reader could observe. Recovering here keeps post-error probes
+/// (`idle()`, `stats()`, another `run()`) from dying on
+/// `PoisonError` instead.
+pub fn lock_chunk(chunk: &Mutex<WorkerChunk>)
+    -> std::sync::MutexGuard<'_, WorkerChunk> {
+    chunk.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Chunk boundary offsets: `starts[t]..starts[t+1]` is worker `t`'s
+/// range over `n` items, balanced to within one item.
+pub fn split_starts(n: usize, threads: usize) -> Vec<usize> {
+    (0..=threads).map(|t| t * n / threads).collect()
+}
+
+/// Which chunk owns global index `global` (starts from
+/// [`split_starts`]; empty chunks are skipped naturally).
+#[inline]
+pub fn chunk_of(starts: &[usize], global: usize) -> usize {
+    let mut t = 0;
+    while starts[t + 1] <= global {
+        t += 1;
+    }
+    t
+}
+
+/// Distribute cores and partitions over `threads` chunks (contiguous,
+/// balanced). Each core gets its strided [`FetchIdAlloc`] keyed by its
+/// global id so fetch ids are thread-count independent.
+pub fn build_chunks(cores: Vec<SimtCore>, parts: Vec<MemPartition>,
+                    threads: usize) -> Vec<Mutex<WorkerChunk>> {
+    let ncores = cores.len();
+    let core_starts = split_starts(ncores, threads);
+    let part_starts = split_starts(parts.len(), threads);
+    let mut cores = cores.into_iter();
+    let mut parts = parts.into_iter();
+    (0..threads)
+        .map(|t| {
+            let ncore = core_starts[t + 1] - core_starts[t];
+            let npart = part_starts[t + 1] - part_starts[t];
+            let chunk_cores: Vec<SimtCore> =
+                cores.by_ref().take(ncore).collect();
+            let core_ids = chunk_cores
+                .iter()
+                .map(|c| FetchIdAlloc::for_core(c.id, ncores as u32))
+                .collect();
+            let core_shards =
+                vec![CoreStatShard::default(); chunk_cores.len()];
+            let chunk_parts: Vec<MemPartition> =
+                parts.by_ref().take(npart).collect();
+            let part_shards =
+                vec![PartitionStatShard::default(); chunk_parts.len()];
+            Mutex::new(WorkerChunk {
+                core_base: core_starts[t],
+                cores: chunk_cores,
+                core_shards,
+                core_ids,
+                core_inbox: Vec::new(),
+                out_fetches: Vec::new(),
+                finished: Vec::new(),
+                part_base: part_starts[t],
+                parts: chunk_parts,
+                part_shards,
+                part_inbox: Vec::new(),
+                out_responses: Vec::new(),
+            })
+        })
+        .collect()
+}
+
+/// Effective worker count: `0` means auto (available parallelism),
+/// capped at the core count (a worker with no cores has nothing to
+/// own).
+pub fn resolve_threads(requested: u32, num_cores: u32) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let req = if requested == 0 { auto } else { requested as usize };
+    req.clamp(1, (num_cores as usize).max(1))
+}
+
+/// The core phase of one cycle over one chunk: deliver the previous
+/// cycle's responses (with their recorded arrival cycles), then cycle
+/// every core, draining its outbound fetches and retired TBs into the
+/// chunk's exchange queues in core-id order. `central` is `Some` only
+/// on the sequential clean-mode path.
+pub fn core_phase(chunk: &mut WorkerChunk, now: Cycle,
+                  mut central: Option<&mut StatsEngine>) {
+    for (arrived, local, f) in chunk.core_inbox.drain(..) {
+        chunk.cores[local].receive_response(f, arrived);
+    }
+    for i in 0..chunk.cores.len() {
+        let mut sink = match central.as_deref_mut() {
+            Some(engine) => CoreSink::Central(engine),
+            None => CoreSink::Shard(&mut chunk.core_shards[i]),
+        };
+        chunk.cores[i].cycle_with(now, &mut sink,
+                                  &mut chunk.core_ids[i]);
+        chunk.cores[i].drain_to_icnt_into(&mut chunk.out_fetches);
+        chunk.finished.extend(chunk.cores[i].take_finished());
+    }
+}
+
+/// The partition phase of one cycle over one chunk: push the requests
+/// the main thread routed here, then cycle every busy partition,
+/// draining responses in partition-id order.
+pub fn partition_phase(chunk: &mut WorkerChunk, now: Cycle,
+                       mut central: Option<&mut StatsEngine>) {
+    for (local, f) in chunk.part_inbox.drain(..) {
+        chunk.parts[local].push_request(f);
+    }
+    for i in 0..chunk.parts.len() {
+        if !chunk.parts[i].busy() {
+            continue;
+        }
+        let mut sink = match central.as_deref_mut() {
+            Some(engine) => PartitionSink::Central(engine),
+            None => PartitionSink::Shard(&mut chunk.part_shards[i]),
+        };
+        chunk.parts[i].cycle(now, &mut sink);
+        chunk.parts[i].drain_responses_into(&mut chunk.out_responses);
+    }
+}
+
+/// Worker command: run the core phase.
+pub(crate) const CMD_CORES: u8 = 0;
+/// Worker command: run the partition phase.
+pub(crate) const CMD_PARTS: u8 = 1;
+/// Worker command: exit the worker loop.
+pub(crate) const CMD_EXIT: u8 = 2;
+
+/// Barrier-based control block shared by the main thread and the
+/// persistent workers. Two reusable barriers bracket every phase; the
+/// command/cycle words are written by the main thread strictly before
+/// `start.wait()` and read by workers strictly after, so the barrier
+/// provides the ordering.
+pub(crate) struct PoolCtrl {
+    start: Barrier,
+    done: Barrier,
+    cmd: AtomicU8,
+    now: AtomicU64,
+    failed: AtomicBool,
+}
+
+impl PoolCtrl {
+    /// Control block for `workers` worker threads (+ the main thread).
+    pub(crate) fn new(workers: usize) -> Self {
+        Self {
+            start: Barrier::new(workers + 1),
+            done: Barrier::new(workers + 1),
+            cmd: AtomicU8::new(CMD_EXIT),
+            now: AtomicU64::new(0),
+            failed: AtomicBool::new(false),
+        }
+    }
+
+    /// Main thread: run one phase on every worker, blocking until all
+    /// complete. The caller must hold **no** chunk locks (workers lock
+    /// their chunks inside the phase).
+    pub(crate) fn run_phase(&self, cmd: u8, now: Cycle) -> Result<()> {
+        self.cmd.store(cmd, Ordering::SeqCst);
+        self.now.store(now, Ordering::SeqCst);
+        self.start.wait();
+        self.done.wait();
+        if self.failed.swap(false, Ordering::SeqCst) {
+            bail!("a simulation worker thread panicked during a phase");
+        }
+        Ok(())
+    }
+
+    /// Main thread: release every worker from its `start` barrier with
+    /// the exit command. Workers return without touching `done`.
+    pub(crate) fn shutdown(&self) {
+        self.cmd.store(CMD_EXIT, Ordering::SeqCst);
+        self.start.wait();
+    }
+}
+
+/// Body of one persistent worker thread: park on the start barrier,
+/// run the commanded phase on the owned chunk, report at the done
+/// barrier. A panic inside a phase is caught and converted into an
+/// error flag so the barrier protocol (and therefore the main thread)
+/// never wedges.
+pub(crate) fn worker_loop(chunk: &Mutex<WorkerChunk>, ctrl: &PoolCtrl) {
+    loop {
+        ctrl.start.wait();
+        let cmd = ctrl.cmd.load(Ordering::SeqCst);
+        if cmd == CMD_EXIT {
+            return;
+        }
+        let now = ctrl.now.load(Ordering::SeqCst);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut guard = lock_chunk(chunk);
+                if cmd == CMD_CORES {
+                    core_phase(&mut guard, now, None);
+                } else {
+                    partition_phase(&mut guard, now, None);
+                }
+            }),
+        );
+        if result.is_err() {
+            ctrl.failed.store(true, Ordering::SeqCst);
+        }
+        ctrl.done.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn split_starts_covers_everything_contiguously() {
+        for n in [0usize, 1, 3, 4, 7, 24, 80] {
+            for t in [1usize, 2, 3, 4, 8] {
+                let s = split_starts(n, t);
+                assert_eq!(s.len(), t + 1);
+                assert_eq!(s[0], 0);
+                assert_eq!(s[t], n);
+                for w in s.windows(2) {
+                    assert!(w[0] <= w[1]);
+                }
+                // balanced to within one item
+                if n >= t {
+                    for w in s.windows(2) {
+                        let len = w[1] - w[0];
+                        assert!(len == n / t || len == n.div_ceil(t),
+                                "n={n} t={t} len={len}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_of_matches_split() {
+        for (n, t) in [(4usize, 2usize), (7, 3), (24, 4), (5, 8)] {
+            let s = split_starts(n, t);
+            for g in 0..n {
+                let c = chunk_of(&s, g);
+                assert!(s[c] <= g && g < s[c + 1],
+                        "n={n} t={t} g={g} -> chunk {c} ({s:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn build_chunks_preserves_core_and_partition_order() {
+        let cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+        let cores: Vec<SimtCore> =
+            (0..cfg.num_cores).map(|i| SimtCore::new(i, &cfg)).collect();
+        let parts: Vec<MemPartition> = (0..cfg.num_l2_partitions)
+            .map(|i| MemPartition::new(i, &cfg))
+            .collect();
+        let mut chunks = build_chunks(cores, parts, 3);
+        let mut next_core = 0u32;
+        let mut next_part = 0u32;
+        for ch in &mut chunks {
+            let ch = ch.get_mut().unwrap();
+            assert_eq!(ch.core_base, next_core as usize);
+            assert_eq!(ch.part_base, next_part as usize);
+            for c in &ch.cores {
+                assert_eq!(c.id, next_core);
+                next_core += 1;
+            }
+            for p in &ch.parts {
+                assert_eq!(p.id, next_part);
+                next_part += 1;
+            }
+            assert_eq!(ch.cores.len(), ch.core_shards.len());
+            assert_eq!(ch.cores.len(), ch.core_ids.len());
+            assert_eq!(ch.parts.len(), ch.part_shards.len());
+            assert!(!ch.busy());
+        }
+        assert_eq!(next_core, 4);
+        assert_eq!(next_part, 4);
+    }
+
+    #[test]
+    fn pool_barrier_protocol_smoke() {
+        // exercise the start/done/exit protocol with real threads and
+        // empty chunks — guards the one place a bug would deadlock
+        let cfg = SimConfig::preset("minimal").unwrap();
+        let chunks = build_chunks(
+            vec![SimtCore::new(0, &cfg)],
+            vec![MemPartition::new(0, &cfg)],
+            2,
+        );
+        let ctrl = PoolCtrl::new(2);
+        let ctrl_ref = &ctrl;
+        std::thread::scope(|s| {
+            for ch in &chunks {
+                s.spawn(move || worker_loop(ch, ctrl_ref));
+            }
+            for now in 0..50 {
+                ctrl_ref.run_phase(CMD_CORES, now).unwrap();
+                ctrl_ref.run_phase(CMD_PARTS, now).unwrap();
+            }
+            ctrl_ref.shutdown();
+        });
+        for ch in &chunks {
+            assert!(!ch.lock().unwrap().busy());
+        }
+    }
+}

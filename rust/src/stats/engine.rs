@@ -267,14 +267,20 @@ struct ScalarDomain {
 impl ScalarDomain {
     #[inline]
     fn bump(&mut self, slot: StreamSlot) {
+        self.bump_n(slot, 1);
+    }
+
+    /// Bump by `n` at once (shard absorption).
+    #[inline]
+    fn bump_n(&mut self, slot: StreamSlot, n: u64) {
         let i = slot as usize;
         if i >= self.slots.len() {
             self.slots.resize(i + 1, ScalarSlot::default());
         }
         let s = &mut self.slots[i];
         s.touched = true;
-        s.total += 1;
-        s.pw += 1;
+        s.total += n;
+        s.pw += n;
     }
 }
 
@@ -317,11 +323,23 @@ impl PowerDomain {
     }
 }
 
-/// Per-core L1 accumulator: the core's stat increments land here (after
-/// central mode/guard admission) and merge into the engine's L1 domain
-/// on kernel exit. Merging is cell-wise addition, so results are
-/// bit-identical to direct accumulation — but a parallel core loop can
-/// own its shard exclusively, with no shared-counter locking.
+/// Per-core L1 accumulator, in two roles:
+///
+/// * **engine-internal** (clean mode / the legacy central path): the
+///   core's increments land here *after* central mode/guard admission
+///   ([`StatsEngine::inc_core`]) and merge on kernel exit
+///   ([`StatsEngine::flush_shards`]).
+/// * **worker-owned** (the parallel core loop, per-stream/exact modes):
+///   a worker thread owns the shard exclusively, records raw
+///   slot-indexed increments via the public [`CoreStatShard::inc`] /
+///   [`CoreStatShard::inc_fail`], and the main thread merges it at the
+///   kernel-exit merge point in fixed core-id order via
+///   [`StatsEngine::absorb_core_shard`] — mode routing and power
+///   billing happen centrally at absorb time, so results are
+///   bit-identical to the sequential path (cf. *Parallelizing a modern
+///   GPU simulator*, Huerta 2025).
+///
+/// Merging is pure cell-wise addition either way.
 #[derive(Debug, Clone, Default)]
 pub struct CoreStatShard {
     slots: Vec<ShardSlot>,
@@ -344,19 +362,176 @@ impl CoreStatShard {
         &mut self.slots[i]
     }
 
+    /// Record one L1 outcome for `slot`'s stream (raw — no mode
+    /// routing; the engine routes at absorb/flush time).
     #[inline]
-    fn inc(&mut self, slot: StreamSlot, t: AccessType, o: AccessOutcome) {
+    pub fn inc(&mut self, slot: StreamSlot, t: AccessType,
+               o: AccessOutcome) {
         self.dirty = true;
         self.slot_mut(slot).stats.inc(t, o);
     }
 
+    /// Record one L1 reservation failure for `slot`'s stream.
     #[inline]
-    fn inc_fail(&mut self, slot: StreamSlot, t: AccessType,
-                f: FailOutcome) {
+    pub fn inc_fail(&mut self, slot: StreamSlot, t: AccessType,
+                    f: FailOutcome) {
         self.dirty = true;
         self.slot_mut(slot).fail.inc(t, f);
     }
+
+    /// Anything recorded since the last merge?
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
 }
+
+/// Per-partition L2 + DRAM accumulator — the partition-side counterpart
+/// of [`CoreStatShard`], so `MemPartition::cycle` / `Dram::cycle` shed
+/// their `&mut StatsEngine` dependency and memory partitions can step
+/// on worker threads. Worker-owned in the per-stream/exact modes; the
+/// main thread merges it at the kernel-exit merge point in fixed
+/// partition-id order via [`StatsEngine::absorb_partition_shard`].
+#[derive(Debug, Clone, Default)]
+pub struct PartitionStatShard {
+    slots: Vec<PartShardSlot>,
+    dirty: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+struct PartShardSlot {
+    stats: StatTable,
+    fail: FailTable,
+    /// DRAM serviced requests attributed to this slot's stream.
+    dram: u64,
+}
+
+impl PartitionStatShard {
+    #[inline]
+    fn slot_mut(&mut self, slot: StreamSlot) -> &mut PartShardSlot {
+        let i = slot as usize;
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, PartShardSlot::default);
+        }
+        &mut self.slots[i]
+    }
+
+    /// Record one L2 outcome for `slot`'s stream.
+    #[inline]
+    pub fn inc_l2(&mut self, slot: StreamSlot, t: AccessType,
+                  o: AccessOutcome) {
+        self.dirty = true;
+        self.slot_mut(slot).stats.inc(t, o);
+    }
+
+    /// Record one L2 reservation failure for `slot`'s stream.
+    #[inline]
+    pub fn inc_l2_fail(&mut self, slot: StreamSlot, t: AccessType,
+                       f: FailOutcome) {
+        self.dirty = true;
+        self.slot_mut(slot).fail.inc(t, f);
+    }
+
+    /// Record one DRAM serviced request for `slot`'s stream.
+    #[inline]
+    pub fn inc_dram(&mut self, slot: StreamSlot) {
+        self.dirty = true;
+        self.slot_mut(slot).dram += 1;
+    }
+
+    /// Anything recorded since the last merge?
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+}
+
+/// Stat destination for a core's cycle: either its worker-owned shard
+/// (per-stream/exact — raw writes, merged centrally later) or the
+/// central engine (clean mode, whose same-cycle guard needs inc-time
+/// arrival order — the reason clean mode stays sequential).
+pub enum CoreSink<'a> {
+    /// Worker-owned shard (lock-free, parallel-safe).
+    Shard(&'a mut CoreStatShard),
+    /// Central engine (ordered inc-time admission).
+    Central(&'a mut StatsEngine),
+}
+
+impl CoreSink<'_> {
+    /// Record one L1 outcome from core `core_id`.
+    #[inline]
+    pub fn inc(&mut self, core_id: u32, slot: StreamSlot, t: AccessType,
+               o: AccessOutcome, cycle: Cycle) {
+        match self {
+            CoreSink::Shard(s) => s.inc(slot, t, o),
+            CoreSink::Central(e) => e.inc_core(core_id, slot, t, o,
+                                               cycle),
+        }
+    }
+
+    /// Record one L1 reservation failure from core `core_id`.
+    #[inline]
+    pub fn inc_fail(&mut self, core_id: u32, slot: StreamSlot,
+                    t: AccessType, f: FailOutcome, cycle: Cycle) {
+        match self {
+            CoreSink::Shard(s) => s.inc_fail(slot, t, f),
+            CoreSink::Central(e) => {
+                e.inc_core_fail(core_id, slot, t, f, cycle);
+            }
+        }
+    }
+}
+
+/// Stat destination for a memory partition's cycle (L2 + DRAM) —
+/// replaces the old `&mut StatsEngine` parameter of
+/// `MemPartition::cycle` / `Dram::cycle`.
+pub enum PartitionSink<'a> {
+    /// Worker-owned shard (lock-free, parallel-safe).
+    Shard(&'a mut PartitionStatShard),
+    /// Central engine (ordered inc-time admission; clean mode).
+    Central(&'a mut StatsEngine),
+}
+
+impl PartitionSink<'_> {
+    /// Record one L2 outcome.
+    #[inline]
+    pub fn inc_l2(&mut self, slot: StreamSlot, t: AccessType,
+                  o: AccessOutcome, cycle: Cycle) {
+        match self {
+            PartitionSink::Shard(s) => s.inc_l2(slot, t, o),
+            PartitionSink::Central(e) => {
+                e.inc_slot(StatDomain::L2, slot, t, o, cycle);
+            }
+        }
+    }
+
+    /// Record one L2 reservation failure.
+    #[inline]
+    pub fn inc_l2_fail(&mut self, slot: StreamSlot, t: AccessType,
+                       f: FailOutcome, cycle: Cycle) {
+        match self {
+            PartitionSink::Shard(s) => s.inc_l2_fail(slot, t, f),
+            PartitionSink::Central(e) => {
+                e.inc_fail_slot(StatDomain::L2, slot, t, f, cycle);
+            }
+        }
+    }
+
+    /// Record one DRAM serviced request.
+    #[inline]
+    pub fn inc_dram(&mut self, slot: StreamSlot) {
+        match self {
+            PartitionSink::Shard(s) => s.inc_dram(slot),
+            PartitionSink::Central(e) => e.inc_dram_slot(slot),
+        }
+    }
+}
+
+// Worker threads take exclusive ownership of these across the
+// core/partition phases of the parallel clock loop.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<CoreStatShard>();
+    assert_send::<PartitionStatShard>();
+};
 
 /// Read-only view of one cache domain (L1 or L2) of a [`StatsEngine`].
 /// Cheap to copy; all returned references borrow the engine, not the
@@ -719,6 +894,81 @@ impl StatsEngine {
             shard.dirty = false;
         }
         self.shards_dirty = false;
+    }
+
+    /// Merge a worker-owned core (L1) shard into the engine. This is
+    /// the parallel loop's merge point: mode routing (per-stream slot
+    /// vs. aggregate) and power billing happen *here*, centrally, so a
+    /// shard records raw per-slot counts and thread count cannot change
+    /// the result. Callers absorb shards in fixed core-id order.
+    /// Idempotent: the shard is cleared.
+    pub fn absorb_core_shard(&mut self, shard: &mut CoreStatShard) {
+        if !shard.dirty {
+            return;
+        }
+        let l1_fj = self.energy_fj[PowerComponent::L1.idx()];
+        for slot in 0..shard.slots.len() {
+            let ss = &mut shard.slots[slot];
+            if ss.stats.is_empty() && ss.fail.total() == 0 {
+                continue;
+            }
+            let store = self.storage(slot as StreamSlot);
+            let serviced = ss.stats.total_serviced();
+            if serviced > 0 {
+                self.power.bill(store, PowerComponent::L1,
+                                l1_fj * serviced);
+            }
+            let cs = self.l1.slot_mut(store);
+            cs.touched = true;
+            cs.stats.add(&ss.stats);
+            cs.stats_pw.add(&ss.stats);
+            cs.fail.add(&ss.fail);
+            ss.stats.clear();
+            ss.fail.clear();
+        }
+        shard.dirty = false;
+    }
+
+    /// Merge a worker-owned partition (L2 + DRAM) shard into the
+    /// engine — the partition-side counterpart of
+    /// [`StatsEngine::absorb_core_shard`], absorbed in fixed
+    /// partition-id order at the same merge point.
+    pub fn absorb_partition_shard(&mut self,
+                                  shard: &mut PartitionStatShard) {
+        if !shard.dirty {
+            return;
+        }
+        let l2_fj = self.energy_fj[PowerComponent::L2.idx()];
+        let dram_fj = self.energy_fj[PowerComponent::Dram.idx()];
+        for slot in 0..shard.slots.len() {
+            let ss = &mut shard.slots[slot];
+            let has_l2 = !ss.stats.is_empty() || ss.fail.total() > 0;
+            if !has_l2 && ss.dram == 0 {
+                continue;
+            }
+            let store = self.storage(slot as StreamSlot);
+            if has_l2 {
+                let serviced = ss.stats.total_serviced();
+                if serviced > 0 {
+                    self.power.bill(store, PowerComponent::L2,
+                                    l2_fj * serviced);
+                }
+                let cs = self.l2.slot_mut(store);
+                cs.touched = true;
+                cs.stats.add(&ss.stats);
+                cs.stats_pw.add(&ss.stats);
+                cs.fail.add(&ss.fail);
+                ss.stats.clear();
+                ss.fail.clear();
+            }
+            if ss.dram > 0 {
+                self.dram.bump_n(store, ss.dram);
+                self.power.bill(store, PowerComponent::Dram,
+                                dram_fj * ss.dram);
+                ss.dram = 0;
+            }
+        }
+        shard.dirty = false;
     }
 
     /// One DRAM serviced request for `slot`'s stream.
@@ -1207,6 +1457,182 @@ mod tests {
         e.note_dropped_response();
         e.note_dropped_response();
         assert_eq!(e.dropped_responses(), 2);
+    }
+
+    #[test]
+    fn worker_shard_absorb_matches_central_inc() {
+        // a worker-owned shard + central absorb must be bit-identical
+        // to direct inc-time accumulation, in per-stream AND exact mode
+        for mode in [StatMode::PerStream, StatMode::AggregateExact] {
+            let mut sharded = StatsEngine::new(mode);
+            let mut direct = StatsEngine::new(mode);
+            let mut shards =
+                vec![CoreStatShard::default(), CoreStatShard::default()];
+            let events = [(1u64, GR, HIT, 1u64), (2, GR, HIT, 1),
+                          (1, GR, MISS, 1), (2, GW, MISS, 2),
+                          (1, GR, HIT, 2)];
+            for (i, (stream, t, o, cyc)) in events.iter().enumerate() {
+                let slot = sharded.intern_stream(*stream);
+                shards[i % 2].inc(slot, *t, *o);
+                direct.inc(L1, *stream, *t, *o, *cyc);
+            }
+            let slot = sharded.intern_stream(1);
+            shards[0].inc_fail(slot, GR, FailOutcome::MissQueueFull);
+            direct.inc_fail(L1, 1, GR, FailOutcome::MissQueueFull, 3);
+            for sh in &mut shards {
+                sharded.absorb_core_shard(sh);
+            }
+            assert_eq!(sharded.cache(L1).total_table(),
+                       direct.cache(L1).total_table(), "mode {mode:?}");
+            for s in [1u64, 2, StatsEngine::AGG_KEY] {
+                assert_eq!(sharded.cache(L1).stream_table(s),
+                           direct.cache(L1).stream_table(s),
+                           "mode {mode:?} stream {s}");
+            }
+            assert_eq!(sharded.cache(L1).total_fail_table(),
+                       direct.cache(L1).total_fail_table());
+            // power billed at absorb time == power billed at inc time
+            assert_eq!(sharded.domain_total(StatDomain::Power),
+                       direct.domain_total(StatDomain::Power),
+                       "mode {mode:?}");
+            // absorb is idempotent (shard cleared)
+            for sh in &mut shards {
+                assert!(!sh.is_dirty());
+                sharded.absorb_core_shard(sh);
+            }
+            assert_eq!(sharded.cache(L1).total_table(),
+                       direct.cache(L1).total_table());
+        }
+    }
+
+    #[test]
+    fn partition_shard_absorb_matches_central_inc() {
+        for mode in [StatMode::PerStream, StatMode::AggregateExact] {
+            let mut sharded = StatsEngine::new(mode);
+            let mut direct = StatsEngine::new(mode);
+            let mut shard = PartitionStatShard::default();
+            for (stream, t, o, cyc) in
+                [(3u64, GR, MISS, 1u64), (4, GW, HIT, 1),
+                 (3, GR, AccessOutcome::MshrHit, 2)]
+            {
+                let slot = sharded.intern_stream(stream);
+                shard.inc_l2(slot, t, o);
+                direct.inc(L2, stream, t, o, cyc);
+            }
+            let s3 = sharded.intern_stream(3);
+            shard.inc_dram(s3);
+            shard.inc_dram(s3);
+            direct.inc_dram(3);
+            direct.inc_dram(3);
+            shard.inc_l2_fail(s3, GR, FailOutcome::MshrEntryFail);
+            direct.inc_fail(L2, 3, GR, FailOutcome::MshrEntryFail, 2);
+            sharded.absorb_partition_shard(&mut shard);
+            assert_eq!(sharded.cache(L2).total_table(),
+                       direct.cache(L2).total_table(), "mode {mode:?}");
+            assert_eq!(sharded.cache(L2).total_fail_table(),
+                       direct.cache(L2).total_fail_table());
+            assert_eq!(sharded.per_stream(StatDomain::Dram),
+                       direct.per_stream(StatDomain::Dram));
+            assert_eq!(sharded.domain_total(StatDomain::Power),
+                       direct.domain_total(StatDomain::Power),
+                       "mode {mode:?}");
+            assert!(!shard.is_dirty());
+        }
+    }
+
+    #[test]
+    fn shard_merge_any_completion_order_equals_fixed_order() {
+        // satellite: merging shards in any worker-completion order must
+        // equal the fixed core-id-order merge, under random
+        // interleavings of shard writes — and Σ per-stream == exact in
+        // every domain.
+        use crate::util::proptest_lite::{default_cases, run_cases};
+        run_cases("shard-merge-order", 0x5A4D, default_cases(), |g| {
+            let nshards = g.range(1, 6) as usize;
+            let nstreams = g.range(1, 6);
+            let nevents = g.range(5, 200);
+            // record the same random event stream three ways
+            let mut fixed = StatsEngine::new(StatMode::PerStream);
+            let mut permuted = StatsEngine::new(StatMode::PerStream);
+            let mut exact = StatsEngine::new(StatMode::AggregateExact);
+            let mut core_a: Vec<CoreStatShard> =
+                (0..nshards).map(|_| CoreStatShard::default()).collect();
+            let mut core_b = core_a.clone();
+            let mut part_a: Vec<PartitionStatShard> = (0..nshards)
+                .map(|_| PartitionStatShard::default())
+                .collect();
+            let mut part_b = part_a.clone();
+            let mut exact_part = PartitionStatShard::default();
+            let mut exact_core = CoreStatShard::default();
+            for _ in 0..nevents {
+                let stream = g.below(nstreams);
+                let shard = g.index(nshards);
+                let t = AccessType::from_idx(g.index(AccessType::COUNT));
+                let o = AccessOutcome::from_idx(
+                    g.index(AccessOutcome::COUNT));
+                let slot = fixed.intern_stream(stream);
+                let slot_p = permuted.intern_stream(stream);
+                let slot_e = exact.intern_stream(stream);
+                assert_eq!(slot, slot_p);
+                match g.index(3) {
+                    0 => {
+                        core_a[shard].inc(slot, t, o);
+                        core_b[shard].inc(slot_p, t, o);
+                        exact_core.inc(slot_e, t, o);
+                    }
+                    1 => {
+                        part_a[shard].inc_l2(slot, t, o);
+                        part_b[shard].inc_l2(slot_p, t, o);
+                        exact_part.inc_l2(slot_e, t, o);
+                    }
+                    _ => {
+                        part_a[shard].inc_dram(slot);
+                        part_b[shard].inc_dram(slot_p);
+                        exact_part.inc_dram(slot_e);
+                    }
+                }
+            }
+            // fixed order: shard 0, 1, 2, ...
+            for sh in &mut core_a {
+                fixed.absorb_core_shard(sh);
+            }
+            for sh in &mut part_a {
+                fixed.absorb_partition_shard(sh);
+            }
+            // random completion order (a permutation by repeated draws)
+            let mut order: Vec<usize> = (0..nshards).collect();
+            for i in (1..nshards).rev() {
+                order.swap(i, g.index(i + 1));
+            }
+            for &i in &order {
+                permuted.absorb_core_shard(&mut core_b[i]);
+            }
+            for &i in order.iter().rev() {
+                permuted.absorb_partition_shard(&mut part_b[i]);
+            }
+            exact.absorb_core_shard(&mut exact_core);
+            exact.absorb_partition_shard(&mut exact_part);
+            // any-order merge == fixed-order merge, per stream
+            for stream in 0..nstreams {
+                assert_eq!(fixed.cache(L1).stream_table(stream),
+                           permuted.cache(L1).stream_table(stream));
+                assert_eq!(fixed.cache(L2).stream_table(stream),
+                           permuted.cache(L2).stream_table(stream));
+            }
+            for d in [StatDomain::Dram, StatDomain::Power] {
+                assert_eq!(fixed.per_stream(d), permuted.per_stream(d),
+                           "domain {}", d.name());
+            }
+            // Σ per-stream == exact in every touched domain
+            assert_eq!(fixed.cache(L1).total_table(),
+                       exact.cache(L1).total_table());
+            assert_eq!(fixed.cache(L2).total_table(),
+                       exact.cache(L2).total_table());
+            for d in [StatDomain::Dram, StatDomain::Power] {
+                assert_eq!(fixed.domain_total(d), exact.domain_total(d),
+                           "domain {}", d.name());
+            }
+        });
     }
 
     #[test]

@@ -4,29 +4,49 @@
 //! # Architecture
 //!
 //! ```text
-//!  SimtCore ──inc_core──▶ ┌──────────────────────────────┐
-//!  MemPartition ──inc───▶ │          StatsEngine         │
-//!  Dram ──inc_dram──────▶ │  StreamIntern (id → slot)    │
-//!  Icnt ──inc_icnt──────▶ │  CacheDomain  L1, L2         │──▶ print
-//!  GpuSim ──clear_pw────▶ │  ScalarDomain Dram, Icnt     │──▶ export
-//!                         │  PowerDomain  (fJ/stream)    │──▶ figures
-//!                         │  CoreStatShard × num_cores   │
-//!                         └──────────────────────────────┘
+//!  worker thread w (tip/exact)      main thread
+//!  ┌──────────────────────────┐
+//!  │ SimtCore i ──inc────────▶│ CoreStatShard i   (worker-owned)
+//!  │ MemPartition p ──inc_l2─▶│ PartitionStatShard p
+//!  │ Dram p ──inc_dram───────▶│        │ absorb_* at kernel exit,
+//!  └──────────────────────────┘        ▼ fixed core/partition order
+//!  Icnt ──inc_icnt (central)─▶ ┌──────────────────────────────┐
+//!  GpuSim ──clear_pw─────────▶ │          StatsEngine         │
+//!  SimtCore (clean mode,       │  StreamIntern (id → slot)    │─▶ print
+//!    sequential) ──inc_core──▶ │  CacheDomain  L1, L2         │─▶ export
+//!  MemPartition (clean mode)   │  ScalarDomain Dram, Icnt     │─▶ figures
+//!    ──PartitionSink::Central▶ │  PowerDomain  (fJ/stream)    │
+//!                              │  CoreStatShard × num_cores   │
+//!                              │    (clean-mode internal)     │
+//!                              └──────────────────────────────┘
 //! ```
 //!
 //! * **One sink** — every per-stream counter in the simulator (L1, L2,
-//!   DRAM, interconnect, power) lives in [`engine::StatsEngine`],
-//!   threaded through the clock loop as a single `&mut`. There is no
-//!   per-component stat plumbing and no top-level `BTreeMap` scraping.
+//!   DRAM, interconnect, power) ends up in [`engine::StatsEngine`].
+//!   There is no per-component stat plumbing and no top-level
+//!   `BTreeMap` scraping.
 //! * **Interning** — stream ids are interned once, at kernel launch, to
 //!   dense [`crate::StreamSlot`] indices carried on every
 //!   [`crate::mem::MemFetch`]; hot-path increments are array indexing
 //!   ([`engine::StreamIntern`]).
-//! * **Shards** — each core's L1 increments accumulate in a
-//!   [`engine::CoreStatShard`], merged (cell-wise add) on kernel exit.
-//!   Mode/guard admission stays central and ordered, so results are
-//!   bit-identical to unsharded accumulation while a future parallel
-//!   core loop can own shards exclusively, lock-free.
+//! * **Worker-owned shards** — in the per-stream/exact modes each core
+//!   owns a [`engine::CoreStatShard`] and each memory partition a
+//!   [`engine::PartitionStatShard`]; cycle-path writes are raw
+//!   slot-indexed accumulation with no shared counter, so cores and
+//!   partitions step on worker threads ([`crate::sim::parallel`])
+//!   between the clock loop's barrier points (core phase → icnt
+//!   exchange → partition phase). The main thread merges shards at the
+//!   kernel-exit merge point in **fixed core-id then partition-id
+//!   order** ([`engine::StatsEngine::absorb_core_shard`] /
+//!   [`engine::StatsEngine::absorb_partition_shard`]); mode routing
+//!   (per-stream slot vs. aggregate) and power billing happen centrally
+//!   at absorb time, which is why the merged result is bit-identical
+//!   for every `--sim-threads` value.
+//! * **Clean mode is exempt** — its under-count *is* an inc-time
+//!   shared-counter artifact: the [`engine::StatsEngine`] cycle guard
+//!   must see increments in arrival order, so clean mode always runs
+//!   sequentially through [`engine::CoreSink::Central`] /
+//!   [`engine::PartitionSink::Central`] and the engine-internal shards.
 //! * **Window semantics** — the §3.1 per-kernel window (`m_stats_pw`,
 //!   cleared after the exiting kernel's stream is printed) generalizes
 //!   to every domain via [`engine::StatsEngine::clear_pw`].
@@ -52,7 +72,8 @@ pub mod power;
 pub mod print;
 pub mod table;
 
-pub use engine::{CacheView, CoreStatShard, IcntDir, StatDomain, StatMode,
+pub use engine::{CacheView, CoreSink, CoreStatShard, IcntDir,
+                 PartitionSink, PartitionStatShard, StatDomain, StatMode,
                  StatsEngine, StreamIntern};
 pub use kernel_time::{KernelTime, KernelTimeTracker};
 pub use power::{EnergyModel, PowerComponent, PowerStats, StreamEnergy};

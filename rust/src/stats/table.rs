@@ -66,6 +66,17 @@ impl StatTable {
         self.counts.iter().map(|row| row[o.idx()]).sum()
     }
 
+    /// Sum over every *serviced* cell (all types). Energy attribution
+    /// bills per serviced access, so shard absorption uses this to
+    /// reproduce inc-time billing exactly.
+    pub fn total_serviced(&self) -> u64 {
+        AccessOutcome::ALL
+            .iter()
+            .filter(|o| o.is_serviced())
+            .map(|o| self.total_for_outcome(*o))
+            .sum()
+    }
+
     /// Reset all cells to zero (per-window stats).
     pub fn clear(&mut self) {
         self.counts = [[0; AccessOutcome::COUNT]; AccessType::COUNT];

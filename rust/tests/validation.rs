@@ -160,6 +160,136 @@ fn kernel_time_windows_complete_and_ordered() {
     }
 }
 
+/// Golden per-kernel/per-stream count pins for the paper's §5
+/// microbenchmarks (`benchmark_1_stream`, `benchmark_3_stream`): the
+/// full per-stream L1/L2 hit+miss breakdown and the per-kernel exit
+/// prints are snapshotted under `tests/golden/`, so a shard
+/// merge-ordering bug shows up as a count diff, not a silent pass.
+///
+/// Blessing: run with `STREAMSIM_BLESS=1` (or delete the snapshot) to
+/// regenerate; the first toolchain-equipped CI run creates the files
+/// and committing them pins the counts for every run after. Analytic
+/// serviced-count pins (derived from the generator, not the
+/// simulator) are asserted unconditionally either way.
+mod golden {
+    use super::*;
+    use std::fmt::Write as _;
+    use std::path::PathBuf;
+    use streamsim::sim::GpuSim;
+    use streamsim::stats::StatMode;
+
+    fn golden_path(bench: &str) -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/golden")
+            .join(format!("{bench}_counts.txt"))
+    }
+
+    /// Canonical per-stream per-cell dump of one tip-mode run.
+    fn fingerprint(bench: &str) -> String {
+        let g = workloads::generate(bench).unwrap();
+        let cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+        let mut sim = GpuSim::new(cfg).unwrap();
+        sim.enqueue_workload(&g.workload).unwrap();
+        sim.run().unwrap();
+        let stats = sim.stats();
+
+        // always-on analytic pins (generator-derived, simulator-free)
+        for (s, want) in &g.expected.l1_reads {
+            let got = stats.l1().stream_table(*s).unwrap()
+                .total_serviced_for_type(AccessType::GlobalAccR);
+            assert_eq!(got, *want, "{bench}: stream {s} L1 reads");
+        }
+        for (s, want) in &g.expected.l1_writes {
+            let got = stats.l1().stream_table(*s).unwrap()
+                .total_serviced_for_type(AccessType::GlobalAccW);
+            assert_eq!(got, *want, "{bench}: stream {s} L1 writes");
+        }
+        for (s, want) in &g.expected.l2_writes {
+            let got = stats.l2().stream_table(*s).unwrap()
+                .total_serviced_for_type(AccessType::GlobalAccW);
+            assert_eq!(got, *want, "{bench}: stream {s} L2 writes");
+        }
+
+        let mut out = format!("bench={bench} kernels={} cycles={}\n",
+                              stats.kernels_done, stats.total_cycles);
+        for (label, view) in [("L1", stats.l1()), ("L2", stats.l2())] {
+            for s in view.streams() {
+                let t = view.stream_table(s).unwrap();
+                for (ty, o, n) in t.iter_nonzero() {
+                    let _ = writeln!(out, "{label} stream={s} {}.{}={n}",
+                                     ty.name(), o.name());
+                }
+                let f = view.stream_fail_table(s).unwrap();
+                for (ty, fo, n) in f.iter_nonzero() {
+                    let _ = writeln!(
+                        out, "{label} stream={s} fail {}.{}={n}",
+                        ty.name(), fo.name());
+                }
+            }
+        }
+        // per-kernel windows + per-kernel per-stream breakdown prints
+        for (stream, uid, k) in stats.kernel_times.finished() {
+            let _ = writeln!(
+                out, "kernel stream={stream} uid={uid} start={} end={}",
+                k.start_cycle, k.end_cycle);
+        }
+        for entry in &stats.exit_log {
+            out.push_str(entry);
+        }
+        out
+    }
+
+    fn check_golden(bench: &str) {
+        let got = fingerprint(bench);
+        let path = golden_path(bench);
+        let bless =
+            std::env::var("STREAMSIM_BLESS").as_deref() == Ok("1");
+        if bless || !path.exists() {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &got).unwrap();
+            eprintln!("blessed golden counts: {}", path.display());
+            return;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            want, got,
+            "{bench}: per-kernel/per-stream counts diverged from the \
+             golden snapshot {} (rebless with STREAMSIM_BLESS=1 only \
+             if the change is intended)",
+            path.display());
+    }
+
+    #[test]
+    fn golden_counts_benchmark_1_stream() {
+        check_golden("bench1");
+    }
+
+    #[test]
+    fn golden_counts_benchmark_3_stream() {
+        check_golden("bench3");
+    }
+
+    /// The golden fingerprint itself must not depend on the thread
+    /// count (belt over the determinism suite's JSON check, through
+    /// the snapshot formatting path).
+    #[test]
+    fn golden_fingerprint_thread_count_independent() {
+        let g = workloads::generate("bench1_mini").unwrap();
+        let run = |threads: u32| {
+            let mut cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+            cfg.stat_mode = StatMode::PerStream;
+            cfg.sim_threads = threads;
+            let mut sim = GpuSim::new(cfg).unwrap();
+            sim.enqueue_workload(&g.workload).unwrap();
+            sim.run().unwrap();
+            let stats = sim.stats();
+            (stats.l1().total_table(), stats.l2().total_table(),
+             stats.exit_log.clone())
+        };
+        assert_eq!(run(1), run(4));
+    }
+}
+
 /// Property: for random mixed workloads, Σ-per-stream == exact holds on
 /// every cell (the paper's core invariant, fuzzed at system level).
 #[test]

@@ -1,11 +1,20 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, tests, and a fast perf-baseline record.
+# CI gate: formatting, lints, tests, the thread-count determinism
+# matrix, and a fast perf-baseline record.
 #
-#   scripts/ci.sh          # fmt + clippy + tests
-#   scripts/ci.sh bench    # also record BENCH_stats.json (fast mode)
+#   scripts/ci.sh              # fmt + clippy + build + tests
+#   scripts/ci.sh determinism  # + the --sim-threads 1/2/4/8 matrix:
+#                              #   byte-compares exported stats JSON
+#                              #   across thread counts and stat modes,
+#                              #   then runs the determinism test suite
+#   scripts/ci.sh bench        # + record BENCH_stats.json (fast mode):
+#                              #   seq-vs-parallel throughput and the
+#                              #   ABL-1 per_stream_slot_indexed vs
+#                              #   per_stream_by_id comparison
 set -euo pipefail
 
-cd "$(dirname "$0")/../rust"
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
 
 echo "== cargo fmt --check (advisory) =="
 # The seed predates rustfmt adoption (hand-wrapped ~72 cols), so
@@ -22,11 +31,65 @@ cargo build --release
 echo "== cargo test =="
 cargo test -q
 
+if [[ "${1:-}" == "determinism" ]]; then
+    echo "== determinism: --sim-threads matrix (release binary) =="
+    BIN=target/release/streamsim
+    TMP="$(mktemp -d)"
+    trap 'rm -rf "$TMP"' EXIT
+    for bench in bench1_mini bench3; do
+        for mode in tip exact; do
+            ref=""
+            for t in 1 2 4 8; do
+                out="$TMP/${bench}_${mode}_${t}.json"
+                "$BIN" run --bench "$bench" --preset sm7_titanv_mini \
+                    --stat-mode "$mode" --sim-threads "$t" \
+                    --stats-json "$out" >/dev/null
+                if [[ -z "$ref" ]]; then
+                    ref="$out"
+                else
+                    cmp "$ref" "$out" || {
+                        echo "DETERMINISM FAILURE: $bench/$mode" \
+                             "diverged at --sim-threads $t"
+                        exit 1
+                    }
+                fi
+            done
+            echo "  $bench/$mode: byte-identical across threads 1/2/4/8"
+        done
+    done
+    # (the determinism *test suite* already ran as part of the
+    # unconditional `cargo test -q` above — no second invocation)
+fi
+
 if [[ "${1:-}" == "bench" ]]; then
     echo "== perf baseline -> BENCH_stats.json =="
     STREAMSIM_BENCH_FAST=1 \
-    STREAMSIM_BENCH_JSON="$(cd .. && pwd)/BENCH_stats.json" \
+    STREAMSIM_BENCH_JSON="$ROOT/BENCH_stats.json" \
         cargo bench --bench perf_sim_throughput
+    STREAMSIM_BENCH_FAST=1 \
+    STREAMSIM_BENCH_JSON="$ROOT/.bench_abl1.json" \
+        cargo bench --bench abl_stats_overhead
+    python3 - "$ROOT" <<'EOF'
+import json, os, sys
+root = sys.argv[1]
+main_path = os.path.join(root, "BENCH_stats.json")
+abl_path = os.path.join(root, ".bench_abl1.json")
+with open(main_path) as f:
+    doc = json.load(f)
+with open(abl_path) as f:
+    abl = json.load(f)
+doc.setdefault("sections", {}).update(abl.get("sections", {}))
+doc["note"] = ("Recorded by scripts/ci.sh bench (fast mode). "
+               "Sections: cycles / accesses_by_mode / titanv_full / "
+               "parallel (seq vs --sim-threads 2/4 on the 80-SM "
+               "preset) / abl1 (per_stream_slot_indexed vs "
+               "per_stream_by_id).")
+with open(main_path, "w") as f:
+    json.dump(doc, f, indent=2)
+    f.write("\n")
+os.remove(abl_path)
+print("merged ABL-1 into BENCH_stats.json")
+EOF
 fi
 
 echo "CI OK"
