@@ -3,7 +3,8 @@
 //!
 //! 1. generate the multi-stream tiled-GEMM trace (L3 workload gen);
 //! 2. run the timing simulation in the paper's three configs and print
-//!    per-stream stats + timelines (the paper's Fig. 5);
+//!    per-stream stats + timelines (the paper's Fig. 5) — all through
+//!    the `streamsim::api` facade (snapshot views only);
 //! 3. execute the *functional* GEMM through the AOT-compiled Pallas
 //!    artifact on the PJRT CPU client (L1/L2 via the Rust runtime) and
 //!    check the numerics against a host oracle;
@@ -14,13 +15,11 @@
 //! make artifacts && cargo run --release --example deepbench_inference
 //! ```
 
-use streamsim::cache::access::{AccessOutcome, AccessType};
-use streamsim::config::SimConfig;
+use streamsim::api::{all_passed, render_checks, run_three_configs,
+                     workloads, AccessOutcome, AccessType, SimConfig,
+                     StatDomain};
 use streamsim::functional;
-use streamsim::harness::{all_passed, render_checks, run_three_configs};
 use streamsim::runtime::{default_artifact_dir, HostTensor, Runtime};
-use streamsim::stats::print::dense_rows;
-use streamsim::workloads;
 
 fn main() -> anyhow::Result<()> {
     // ---- 1+2: timing simulation, three configs ------------------------
@@ -39,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(all_passed(&checks), "timing validation failed");
 
     // throughput numbers for EXPERIMENTS.md
-    let cycles = tw.tip.stats.total_cycles;
+    let cycles = tw.tip.stats.total_cycles();
     let accesses = tw.tip.stats.total_accesses();
     println!("tip run: {cycles} cycles, {accesses} cache accesses\n");
 
@@ -64,25 +63,33 @@ fn main() -> anyhow::Result<()> {
     // takes fixed 16384-event batches, so deterministically downsample
     // each cell by a common stride (the batched-aggregation deployment
     // would simply loop over batches)
-    let l2 = tw.tip.stats.l2();
+    let snap = &tw.tip.stats;
+    let l2_streams = snap.l2().streams();
     let n = 16384usize;
-    let grand_total: u64 = l2
-        .streams()
+    let grand_total: u64 = l2_streams
         .iter()
-        .map(|s| dense_rows(l2, *s).iter().flatten().sum::<u64>())
+        .map(|s| {
+            snap.dense_rows(StatDomain::L2, *s)
+                .iter()
+                .flatten()
+                .sum::<u64>()
+        })
         .sum();
     let stride = grand_total.div_ceil(n as u64).max(1);
     let (mut sid, mut typ, mut outc, mut valid) =
         (vec![0i32; n], vec![0i32; n], vec![0i32; n], vec![0i32; n]);
     let mut i = 0;
     let mut expected_cells = Vec::new();
-    for s in l2.streams() {
-        for (t, row) in dense_rows(l2, s).iter().enumerate() {
+    for s in &l2_streams {
+        for (t, row) in snap.dense_rows(StatDomain::L2, *s)
+            .iter()
+            .enumerate()
+        {
             for (o, count) in row.iter().enumerate() {
                 let sampled = count / stride;
-                expected_cells.push((s, t, o, sampled));
+                expected_cells.push((*s, t, o, sampled));
                 for _ in 0..sampled {
-                    sid[i] = s as i32;
+                    sid[i] = *s as i32;
                     typ[i] = t as i32;
                     outc[i] = o as i32;
                     valid[i] = 1;
@@ -110,7 +117,7 @@ fn main() -> anyhow::Result<()> {
 
     // per-stream read totals agree between simulator and MXU kernel
     let cube = out[0].as_f32();
-    for s in l2.streams().into_iter().filter(|s| *s < 8) {
+    for s in l2_streams.into_iter().filter(|s| *s < 8) {
         let kernel_reads: f32 = (0..AccessOutcome::COUNT)
             .map(|o| cube[(s as usize * AccessType::COUNT
                            + AccessType::GlobalAccR.idx())

@@ -1,15 +1,16 @@
 //! Full §5 validation drive: runs the paper's three configurations
 //! (`tip`, `clean`, `tip_serialized`) on the Figs. 2–4 benchmarks,
 //! prints the figure tables and check verdicts — the `graph.py`
-//! replacement.
+//! replacement. Everything runs through the `streamsim::api` facade
+//! (the three-way harness is re-exported there and reads snapshots
+//! only).
 //!
 //! ```bash
 //! cargo run --release --example multi_stream_validation
 //! ```
 
-use streamsim::config::SimConfig;
-use streamsim::harness::{all_passed, render_checks, run_three_configs};
-use streamsim::workloads;
+use streamsim::api::{all_passed, render_checks, run_three_configs,
+                     workloads, SimConfig};
 
 fn main() -> anyhow::Result<()> {
     let figures = [
@@ -29,13 +30,13 @@ fn main() -> anyhow::Result<()> {
         if !all_passed(&checks) {
             failures += 1;
         }
-        // the paper's green-vs-orange observation, summarized:
+        // the paper's green-vs-orange observation, summarized —
+        // losses come from the one unified report
         let tip = tw.tip.stats.l2().total_table().total()
             + tw.tip.stats.l1().total_table().total();
         let clean = tw.clean.stats.l2().total_table().total()
             + tw.clean.stats.l1().total_table().total();
-        let lost = tw.clean.stats.l1().dropped()
-            + tw.clean.stats.l2().dropped();
+        let lost = tw.clean.stats.losses().guard_dropped_total();
         println!("tip total = {tip}, clean total = {clean} \
                   (clean lost {lost} increments)\n{}\n",
                  "=".repeat(72));

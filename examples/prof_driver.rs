@@ -1,20 +1,20 @@
 //! Profiling driver for the §Perf pass: one full-size `bench3` run on
-//! the 80-SM TITAN V preset (see EXPERIMENTS.md §Perf).
+//! the 80-SM TITAN V preset (see EXPERIMENTS.md §Perf), driven
+//! through the `streamsim::api` facade.
 //!
 //! ```bash
 //! cargo build --release --example prof_driver
 //! perf record -g target/release/examples/prof_driver
 //! ```
-use streamsim::config::SimConfig;
-use streamsim::sim::GpuSim;
-use streamsim::workloads;
+use streamsim::api::SimBuilder;
 
 fn main() {
-    let g = workloads::generate("bench3").unwrap();
-    let cfg = SimConfig::preset("sm7_titanv").unwrap();
-    let mut sim = GpuSim::new(cfg).unwrap();
-    sim.enqueue_workload(&g.workload).unwrap();
-    sim.run().unwrap();
-    println!("cycles={} accesses={}", sim.stats().total_cycles,
-             sim.stats().total_accesses());
+    let mut session = SimBuilder::preset("sm7_titanv")
+        .bench("bench3")
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+    let snap = session.snapshot();
+    println!("cycles={} accesses={}", snap.total_cycles(),
+             snap.total_accesses());
 }

@@ -1,48 +1,61 @@
 //! Quickstart: simulate the paper's 4-stream L2 microbenchmark with
-//! per-stream stats and print the breakdown the paper's §4 describes.
+//! per-stream stats through the `streamsim::api` facade — build a
+//! session, run it, snapshot it, ask typed per-stream questions.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use streamsim::config::SimConfig;
-use streamsim::sim::GpuSim;
-use streamsim::stats::print as stat_print;
-use streamsim::workloads;
+use streamsim::api::{SimBuilder, StatDomain, StatMode, StatsQuery};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Pick a config preset (the paper validates on a TITAN V) and
-    //    make sure concurrent kernels + per-stream stats are on —
-    //    paper §4 step 1: `-gpgpu_concurrent_kernel_sm 1`.
-    let mut cfg = SimConfig::preset("sm7_titanv_mini")?;
-    cfg.concurrent_kernel_sm = true;
-    cfg.stat_mode = streamsim::stats::StatMode::PerStream;
-    println!("config: {}\n", cfg.summary());
+    // 1. Build the session. The builder layers preset → knobs →
+    //    workload and validates everything once; a typo here comes
+    //    back as a typed ApiError, not a stringly chain. The paper
+    //    validates on a TITAN V with concurrent kernels + per-stream
+    //    stats on (§4 step 1: `-gpgpu_concurrent_kernel_sm 1`).
+    let mut session = SimBuilder::preset("sm7_titanv_mini")
+        .stat_mode(StatMode::PerStream) // the paper's `tip`
+        .bench("l2_lat") // §5.1: 4 streams, one shared pointer-chase
+        .build()?;
+    println!("config: {}\n", session.config().summary());
 
-    // 2. Generate the paper's §5.1 workload: 4 streams running the
-    //    same pointer-chase kernel over one shared array.
-    let g = workloads::generate("l2_lat")?;
-    println!("workload: {} ({} kernels on streams {:?})\n",
-             g.name, g.workload.kernels.len(), g.workload.streams());
+    // 2. Run. Sessions are resumable — `step()` /
+    //    `run_until_kernels_done(n)` let you stop anywhere and
+    //    snapshot mid-run; here we just drain the queue.
+    session.run_to_idle()?;
 
-    // 3. Simulate.
-    let mut sim = GpuSim::new(cfg)?;
-    sim.enqueue_workload(&g.workload)?;
-    sim.run()?;
-    let stats = sim.stats();
+    // 3. Snapshot: a deep copy of every statistic at this cycle.
+    //    Snapshots work exactly the same mid-run (live, between
+    //    steps) and at exit.
+    let snap = session.snapshot();
     println!("simulated {} cycles, {} kernels retired\n",
-             stats.total_cycles, stats.kernels_done);
+             snap.total_cycles(), snap.kernels_done());
 
     // 4. Per-stream breakdowns — the paper's headline output
-    //    ("L2_cache_stats_breakdown", §4 step 4).
-    print!("{}", stat_print::print_all_streams(
-        stats.l2(), "L2_cache_stats_breakdown"));
+    //    ("L2_cache_stats_breakdown", §4 step 4), as typed queries
+    //    instead of scraped prints.
+    for (stream, total) in snap.per_stream(StatDomain::L2) {
+        println!("stream {stream}: {total} L2 stat increments");
+    }
+    let reads = StatsQuery::new()
+        .domain(StatDomain::L2)
+        .access_type(streamsim::api::AccessType::GlobalAccR);
+    for row in snap.rows(&reads) {
+        println!("  L2[{}][{}] stream {} = {}",
+                 row.access_type.unwrap().name(),
+                 row.outcome.unwrap().name(), row.stream, row.count);
+    }
 
     // 5. Per-kernel launch/exit windows (§3.2) + the timeline.
-    for (stream, uid, _) in stats.kernel_times.finished() {
-        print!("{}", stat_print::print_kernel_time(
-            &stats.kernel_times, stream, uid));
+    for (stream, uid, w) in snap.kernel_times().finished() {
+        println!("kernel uid {uid} on stream {stream}: cycles \
+                  {}..{}", w.start_cycle, w.end_cycle);
     }
-    println!("\n{}", sim.render_timeline(72));
+    println!("\n{}", snap.render_timeline(72));
+
+    // 6. The versioned machine-readable document (`schema_version`
+    //    field; same serializer as the CLI's --stats-json).
+    println!("{}", snap.to_json());
     Ok(())
 }

@@ -1,16 +1,16 @@
 //! Figure 1 reproduction: two kernels on different streams overlap and
 //! update the same stat cell in the same cycle — the clean (unpatched)
-//! counter under-counts, the per-stream (tip) counters don't.
+//! counter under-counts, the per-stream (tip) counters don't. Driven
+//! through the `streamsim::api` facade; the trace data model is
+//! re-exported there for hand-built workloads.
 //!
 //! ```bash
 //! cargo run --release --example timeline_demo
 //! ```
 
-use streamsim::config::SimConfig;
-use streamsim::sim::GpuSim;
-use streamsim::stats::StatMode;
-use streamsim::trace::{Dim3, KernelTrace, MemInstr, MemSpace, TbTrace,
-                       TraceOp, Workload};
+use streamsim::api::trace::{Dim3, KernelTrace, MemInstr, MemSpace,
+                            TbTrace, TraceOp, Workload};
+use streamsim::api::{SimBuilder, StatMode};
 
 /// Two identical kernels on two streams, disjoint footprints, enough
 /// parallel warps that both cores bump `GLOBAL_ACC_R/MISS` in the same
@@ -50,16 +50,17 @@ fn workload() -> Workload {
 }
 
 fn run(mode: StatMode) -> (u64, u64, String) {
-    let mut cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
-    cfg.stat_mode = mode;
-    let mut sim = GpuSim::new(cfg).unwrap();
-    sim.enqueue_workload(&workload()).unwrap();
-    sim.run().unwrap();
-    let total = sim.stats().l1().total_table().total()
-        + sim.stats().l2().total_table().total();
-    let dropped =
-        sim.stats().l1().dropped() + sim.stats().l2().dropped();
-    (total, dropped, sim.render_timeline(72))
+    let mut session = SimBuilder::preset("sm7_titanv_mini")
+        .stat_mode(mode)
+        .workload(workload())
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+    let snap = session.snapshot();
+    let total = snap.l1().total_table().total()
+        + snap.l2().total_table().total();
+    let dropped = snap.losses().guard_dropped_total();
+    (total, dropped, snap.render_timeline(72))
 }
 
 fn main() {

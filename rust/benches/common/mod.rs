@@ -34,10 +34,10 @@ pub fn run_figure(title: &str, bench: &str, preset: &str) {
     println!("checks:\n{}", render_checks(&checks));
     println!("tip cycles: {} | serialized cycles: {} | speedup from \
               concurrency: {:.2}x",
-             tw.tip.stats.total_cycles,
-             tw.tip_serialized.stats.total_cycles,
-             tw.tip_serialized.stats.total_cycles as f64
-                 / tw.tip.stats.total_cycles as f64);
+             tw.tip.stats.total_cycles(),
+             tw.tip_serialized.stats.total_cycles(),
+             tw.tip_serialized.stats.total_cycles() as f64
+                 / tw.tip.stats.total_cycles() as f64);
     println!("clean dropped increments: L1={} L2={}",
              tw.clean.stats.l1().dropped(),
              tw.clean.stats.l2().dropped());

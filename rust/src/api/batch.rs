@@ -1,0 +1,165 @@
+//! [`BatchRunner`] — run many independent sessions across a bounded
+//! worker pool.
+//!
+//! The "serve heavy traffic" stepping stone: N scenario builders go
+//! in, N results come out (in input order), with at most `threads`
+//! simulations resident at once. The pool is plain scoped threads
+//! pulling job indices off one atomic counter — the same
+//! stdlib-only approach as [`crate::sim::parallel`], whose
+//! [`crate::sim::parallel::resolve_threads`] sizing rule (0 = auto,
+//! capped at the job count) is reused verbatim.
+//!
+//! Each job runs `build → run_to_idle → snapshot` and reports per-job
+//! as `Result<Snapshot, ApiError>` — one scenario failing (bad
+//! config, cycle-limit trip) never takes the batch down. Inner
+//! sessions honour their own `sim_threads` setting; for large
+//! batches, leave jobs at `sim_threads = 1` and let the batch pool
+//! provide the parallelism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::api::{ApiError, SimBuilder, Snapshot};
+use crate::sim::parallel;
+
+/// One job's parked result slot.
+type BatchSlot = Mutex<Option<Result<Snapshot, ApiError>>>;
+
+/// Bounded-concurrency executor for independent simulations.
+#[derive(Debug, Clone)]
+pub struct BatchRunner {
+    requested: u32,
+}
+
+impl BatchRunner {
+    /// Runner with a worker bound (`0` = available parallelism; the
+    /// effective count is additionally capped at the job count).
+    pub fn new(threads: u32) -> Self {
+        Self { requested: threads }
+    }
+
+    /// Effective worker count for a batch of `jobs` jobs.
+    pub fn threads_for(&self, jobs: usize) -> usize {
+        parallel::resolve_threads(self.requested, jobs as u32)
+    }
+
+    /// Run every job to idle, concurrently, bounded by the worker
+    /// pool; results come back in input order.
+    pub fn run(&self, jobs: Vec<SimBuilder>)
+        -> Vec<Result<Snapshot, ApiError>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads_for(n);
+        if workers <= 1 {
+            return jobs.into_iter().map(run_one).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let jobs: Vec<Mutex<Option<SimBuilder>>> =
+            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        let slots: Vec<BatchSlot> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let (next_ref, jobs_ref, slots_ref) = (&next, &jobs, &slots);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(move || loop {
+                    let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = jobs_ref[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("each job index is claimed once");
+                    let result = run_one(job);
+                    *slots_ref[i].lock().unwrap() = Some(result);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("every slot filled by the pool")
+            })
+            .collect()
+    }
+}
+
+/// One job: build the session, run it to idle, move the stats out.
+fn run_one(job: SimBuilder) -> Result<Snapshot, ApiError> {
+    let mut session = job.build()?;
+    session.run_to_idle()?;
+    Ok(session.into_snapshot())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::StatMode;
+
+    fn job(bench: &str, mode: StatMode) -> SimBuilder {
+        SimBuilder::preset("minimal")
+            .stat_mode(mode)
+            .sim_threads(1)
+            .bench(bench)
+            .label(&format!("{bench}/{}", mode.label()))
+    }
+
+    #[test]
+    fn batch_results_arrive_in_input_order() {
+        let jobs = vec![
+            job("l2_lat", StatMode::PerStream),
+            job("l2_lat", StatMode::AggregateExact),
+            job("l2_lat", StatMode::AggregateBuggy),
+        ];
+        let runner = BatchRunner::new(2);
+        let results = runner.run(jobs);
+        assert_eq!(results.len(), 3);
+        let labels: Vec<String> = results
+            .iter()
+            .map(|r| r.as_ref().unwrap().label().to_string())
+            .collect();
+        assert_eq!(labels,
+                   ["l2_lat/tip", "l2_lat/exact", "l2_lat/clean"]
+                       .map(String::from));
+    }
+
+    #[test]
+    fn batch_matches_sequential_runs_exactly() {
+        let jobs: Vec<SimBuilder> = (0..4)
+            .map(|_| job("l2_lat", StatMode::PerStream))
+            .collect();
+        let seq = BatchRunner::new(1).run(jobs.clone());
+        let par = BatchRunner::new(4).run(jobs);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.as_ref().unwrap().to_json(),
+                       b.as_ref().unwrap().to_json());
+        }
+    }
+
+    #[test]
+    fn one_failing_job_does_not_poison_the_batch() {
+        let jobs = vec![
+            job("l2_lat", StatMode::PerStream),
+            SimBuilder::preset("minimal").bench("no_such_bench"),
+            job("l2_lat", StatMode::AggregateExact),
+        ];
+        let results = BatchRunner::new(2).run(jobs);
+        assert!(results[0].is_ok());
+        assert_eq!(results[1].as_ref().unwrap_err().kind(),
+                   "unknown_bench");
+        assert!(results[2].is_ok());
+    }
+
+    #[test]
+    fn worker_bound_is_respected_and_capped() {
+        let r = BatchRunner::new(8);
+        assert_eq!(r.threads_for(3), 3);
+        assert_eq!(r.threads_for(100).min(8), r.threads_for(100));
+        assert!(BatchRunner::new(0).threads_for(2) <= 2);
+    }
+}

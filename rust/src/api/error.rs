@@ -1,0 +1,197 @@
+//! [`ApiError`] — the typed error enum of the `streamsim::api`
+//! boundary.
+//!
+//! Inside the simulator, errors are stringly `anyhow` chains (fine for
+//! a CLI). At the library boundary an embedder needs to *match* on
+//! failure classes — retry a transient one, surface a config mistake
+//! to its own user, treat a cycle-limit trip as a timeout — so the
+//! facade maps every failure into one of these variants.
+//! `ApiError` implements [`std::error::Error`], so `?` still converts
+//! it into `anyhow::Error` for callers (like `cli`) that keep the
+//! stringly style.
+
+use std::fmt;
+
+/// Failure classes of the `streamsim::api` surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ApiError {
+    /// The requested configuration preset does not exist.
+    UnknownPreset {
+        /// The preset name as given.
+        name: String,
+    },
+    /// The requested built-in benchmark does not exist.
+    UnknownBench {
+        /// The benchmark name as given.
+        name: String,
+    },
+    /// A `-key value` override (CLI/config-file style) was rejected.
+    InvalidOption {
+        /// The offending option key.
+        key: String,
+        /// Why it was rejected.
+        message: String,
+    },
+    /// The assembled configuration failed validation, or a config
+    /// file could not be parsed.
+    InvalidConfig {
+        /// The validation/parse failure.
+        message: String,
+    },
+    /// The workload is malformed or cannot run on this configuration
+    /// (e.g. a thread block that can never fit on a core).
+    InvalidWorkload {
+        /// The rejection reason.
+        message: String,
+    },
+    /// A filesystem read/write failed.
+    Io {
+        /// The path involved.
+        path: String,
+        /// The underlying error.
+        message: String,
+    },
+    /// The simulation tripped the `max_cycles` safety valve.
+    CycleLimit {
+        /// The limit diagnostic (queue/running counts at the trip).
+        message: String,
+    },
+    /// An internal runtime failure (e.g. a worker thread panicked).
+    Runtime {
+        /// The failure description.
+        message: String,
+    },
+}
+
+impl ApiError {
+    /// Stable machine-readable tag for the variant (telemetry, tests).
+    pub const fn kind(&self) -> &'static str {
+        match self {
+            ApiError::UnknownPreset { .. } => "unknown_preset",
+            ApiError::UnknownBench { .. } => "unknown_bench",
+            ApiError::InvalidOption { .. } => "invalid_option",
+            ApiError::InvalidConfig { .. } => "invalid_config",
+            ApiError::InvalidWorkload { .. } => "invalid_workload",
+            ApiError::Io { .. } => "io",
+            ApiError::CycleLimit { .. } => "cycle_limit",
+            ApiError::Runtime { .. } => "runtime",
+        }
+    }
+
+    /// Map a simulation-run failure (`GpuSim::step`/`run`) onto the
+    /// typed surface: the only structured failure the clock loop
+    /// produces is the `max_cycles` trip, recognized by the stable
+    /// [`crate::sim::gpu_sim::MAX_CYCLES_ERR`] marker it is raised
+    /// with (prefix-matched per chain entry, so a config summary that
+    /// merely *mentions* max_cycles cannot misclassify); everything
+    /// else (worker panic) is a runtime fault.
+    pub(crate) fn from_run(e: anyhow::Error) -> ApiError {
+        let limit = e
+            .chain()
+            .any(|m| m.starts_with(crate::sim::gpu_sim::MAX_CYCLES_ERR));
+        let message = format!("{e:#}");
+        if limit {
+            ApiError::CycleLimit { message }
+        } else {
+            ApiError::Runtime { message }
+        }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::UnknownPreset { name } => {
+                write!(f, "unknown preset '{name}' (have: {})",
+                       crate::config::PRESETS.join(", "))
+            }
+            ApiError::UnknownBench { name } => {
+                write!(f, "unknown benchmark '{name}' (have: {})",
+                       crate::workloads::BENCHES.join(", "))
+            }
+            ApiError::InvalidOption { key, message } => {
+                write!(f, "invalid option '{key}': {message}")
+            }
+            ApiError::InvalidConfig { message } => {
+                write!(f, "invalid configuration: {message}")
+            }
+            ApiError::InvalidWorkload { message } => {
+                write!(f, "invalid workload: {message}")
+            }
+            ApiError::Io { path, message } => {
+                write!(f, "io error on {path}: {message}")
+            }
+            ApiError::CycleLimit { message } => {
+                write!(f, "cycle limit: {message}")
+            }
+            ApiError::Runtime { message } => {
+                write!(f, "runtime failure: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_stable() {
+        let cases: [(ApiError, &str); 8] = [
+            (ApiError::UnknownPreset { name: "x".into() },
+             "unknown_preset"),
+            (ApiError::UnknownBench { name: "x".into() },
+             "unknown_bench"),
+            (ApiError::InvalidOption { key: "k".into(),
+                                       message: "m".into() },
+             "invalid_option"),
+            (ApiError::InvalidConfig { message: "m".into() },
+             "invalid_config"),
+            (ApiError::InvalidWorkload { message: "m".into() },
+             "invalid_workload"),
+            (ApiError::Io { path: "p".into(), message: "m".into() },
+             "io"),
+            (ApiError::CycleLimit { message: "m".into() },
+             "cycle_limit"),
+            (ApiError::Runtime { message: "m".into() }, "runtime"),
+        ];
+        for (e, kind) in cases {
+            assert_eq!(e.kind(), kind);
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn run_failures_map_to_cycle_limit_or_runtime() {
+        let limit = ApiError::from_run(anyhow::anyhow!(
+            "simulation exceeded max_cycles = 3 (queue=0, running=1)"));
+        assert_eq!(limit.kind(), "cycle_limit");
+        let other = ApiError::from_run(anyhow::anyhow!(
+            "a simulation worker thread panicked during a phase"));
+        assert_eq!(other.kind(), "runtime");
+    }
+
+    #[test]
+    fn converts_into_anyhow_via_question_mark() {
+        fn f() -> anyhow::Result<()> {
+            Err(ApiError::UnknownPreset { name: "nope".into() })?;
+            Ok(())
+        }
+        let msg = f().unwrap_err().to_string();
+        assert!(msg.starts_with("unknown preset 'nope'"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_name_errors_list_the_candidates() {
+        // the typo-fixing hint the stringly errors used to carry
+        let p = ApiError::UnknownPreset { name: "x".into() }
+            .to_string();
+        assert!(p.contains("have:") && p.contains("sm7_titanv_mini"),
+                "{p}");
+        let b = ApiError::UnknownBench { name: "x".into() }
+            .to_string();
+        assert!(b.contains("have:") && b.contains("l2_lat"), "{b}");
+    }
+}

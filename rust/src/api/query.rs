@@ -1,0 +1,453 @@
+//! [`Snapshot`] + [`StatsQuery`] — typed, live statistics reads.
+//!
+//! A snapshot is a **deep copy** of every statistic at a cycle
+//! (`snapshot-at-cycle` semantics): the paper's per-stream cache
+//! cubes, the pinned per-kernel windows (`_pw`, §3.1), fail tables,
+//! the §6 extension domains (DRAM, interconnect, power), kernel
+//! launch/exit windows, the exit log, and the unified
+//! [`LossReport`]. Taking one never mutates guard or window state and
+//! the session keeps running unaffected — so the same questions can
+//! be asked *live between steps* and at exit, through the same code.
+//!
+//! [`StatsQuery`] is the selector: by [`StatDomain`], stream,
+//! access type/outcome, and cumulative vs. pinned-window view.
+//! [`Snapshot::to_json`] / [`Snapshot::to_csv`] serialize through the
+//! one versioned schema writer ([`crate::stats::export`]).
+
+use crate::cache::access::{AccessOutcome, AccessType};
+use crate::sim::GpuStats;
+use crate::stats::engine::CacheView;
+use crate::stats::kernel_time::{KernelTime, KernelTimeTracker};
+use crate::stats::{export, print as stat_print, LossReport,
+                   PowerStats, StatDomain, StatMode};
+use crate::{Cycle, KernelUid, StreamId};
+
+/// A deep, immutable copy of all statistics at one cycle.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    label: String,
+    mode: StatMode,
+    stats: GpuStats,
+}
+
+impl Snapshot {
+    /// Wrap fully-absorbed stats under an export label (the facade
+    /// calls this from `SimSession::snapshot`).
+    pub(crate) fn capture(label: &str, stats: GpuStats) -> Self {
+        Self {
+            label: label.to_string(),
+            mode: stats.engine.mode(),
+            stats,
+        }
+    }
+
+    /// The export label (the JSON document's `"config"` field).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Statistics semantics of the run.
+    pub fn mode(&self) -> StatMode {
+        self.mode
+    }
+
+    /// Cycle the snapshot was taken at (== total simulated cycles for
+    /// an end-of-run snapshot).
+    pub fn total_cycles(&self) -> Cycle {
+        self.stats.total_cycles
+    }
+
+    /// Kernels retired at capture time.
+    pub fn kernels_done(&self) -> u32 {
+        self.stats.kernels_done
+    }
+
+    /// Kernels launched at capture time.
+    pub fn kernels_launched(&self) -> u32 {
+        self.stats.kernels_launched
+    }
+
+    /// View of the L1 cache domain
+    /// (`Total_core_cache_stats_breakdown`).
+    pub fn l1(&self) -> CacheView<'_> {
+        self.stats.l1()
+    }
+
+    /// View of the L2 cache domain (`L2_cache_stats_breakdown`).
+    pub fn l2(&self) -> CacheView<'_> {
+        self.stats.l2()
+    }
+
+    /// View of a cache domain. Panics on non-cache domains (use
+    /// [`Snapshot::per_stream`] for the scalar ones).
+    pub fn cache(&self, d: StatDomain) -> CacheView<'_> {
+        self.stats.engine.cache(d)
+    }
+
+    /// Per-stream cumulative totals of a domain, sorted by stream id.
+    pub fn per_stream(&self, d: StatDomain) -> Vec<(StreamId, u64)> {
+        self.stats.engine.per_stream(d)
+    }
+
+    /// Per-stream pinned-window (`_pw`, §3.1) totals of a domain.
+    pub fn per_stream_pw(&self, d: StatDomain) -> Vec<(StreamId, u64)> {
+        self.stats.engine.per_stream_pw(d)
+    }
+
+    /// Total over all streams for a domain.
+    pub fn domain_total(&self, d: StatDomain) -> u64 {
+        self.stats.engine.domain_total(d)
+    }
+
+    /// Per-stream energy report (picojoules).
+    pub fn power_stats(&self) -> PowerStats {
+        self.stats.engine.power_stats()
+    }
+
+    /// Per-stream per-kernel launch/exit windows (§3.2).
+    pub fn kernel_times(&self) -> &KernelTimeTracker {
+        &self.stats.kernel_times
+    }
+
+    /// One kernel's launch/exit window — the per-kernel selector.
+    pub fn kernel_window(&self, stream: StreamId, uid: KernelUid)
+        -> Option<KernelTime> {
+        self.stats.kernel_times.get(stream, uid)
+    }
+
+    /// The recorded per-kernel-exit print blocks, in exit order.
+    pub fn exit_log(&self) -> &[String] {
+        &self.stats.exit_log
+    }
+
+    /// Total cache accesses (incl. fail-table re-probes).
+    pub fn total_accesses(&self) -> u64 {
+        self.stats.total_accesses()
+    }
+
+    /// The unified loss/fail counters ([`LossReport`]) — dropped
+    /// responses, clean-mode guard drops, fail-table totals, all from
+    /// one source.
+    pub fn losses(&self) -> LossReport {
+        self.stats.engine.loss_report()
+    }
+
+    /// Dense `counts[type][outcome]` rows (incl. zero cells) for one
+    /// stream of a cache domain — the Pallas-aggregation cube shape.
+    /// Panics on non-cache domains (scalar domains have no cube; use
+    /// [`Snapshot::per_stream`]).
+    pub fn dense_rows(&self, d: StatDomain, stream: StreamId)
+        -> Vec<Vec<u64>> {
+        stat_print::dense_rows(self.cache(d), stream)
+    }
+
+    /// Re-render the §3.1 kernel-exit block for one kernel from this
+    /// snapshot — byte-identical to the exit-log entry the simulator
+    /// recorded at that kernel's exit, when the snapshot was taken at
+    /// the same point (the live-snapshot acceptance check).
+    pub fn render_kernel_exit(&self, name: &str, stream: StreamId,
+                              uid: KernelUid) -> String {
+        stat_print::kernel_exit_block(name, uid, stream,
+                                      &self.stats.kernel_times,
+                                      self.l1(), self.l2())
+    }
+
+    /// ASCII timeline of the kernels finished by capture time.
+    pub fn render_timeline(&self, width: usize) -> String {
+        crate::timeline::render_gantt(&self.stats.kernel_times, width)
+    }
+
+    /// The versioned machine-readable result document
+    /// (`schema_version` = [`export::SCHEMA_VERSION`]) — the same
+    /// serializer behind `--stats-json`.
+    pub fn to_json(&self) -> String {
+        export::to_json_versioned(&self.label, &self.stats)
+    }
+
+    /// The PR-1-shape document (compatibility shim; no
+    /// `schema_version`).
+    pub fn to_pr1_json(&self) -> String {
+        export::to_json(&self.label, &self.stats)
+    }
+
+    /// CSV of any domain, with the schema header. Cache domains emit
+    /// the full `stream,access_type,outcome,count` cube; scalar
+    /// domains (DRAM / interconnect / power) emit `stream,count`
+    /// rows — total over every [`StatDomain`], no panics.
+    pub fn to_csv(&self, d: StatDomain) -> String {
+        use std::fmt::Write as _;
+        match d {
+            StatDomain::L1 | StatDomain::L2 => {
+                export::to_csv_versioned(self.cache(d))
+            }
+            _ => {
+                let mut out = format!(
+                    "# schema_version={}\nstream,count\n",
+                    export::SCHEMA_VERSION);
+                for (s, n) in self.per_stream(d) {
+                    let _ = writeln!(
+                        out, "{},{n}",
+                        crate::stats::StatsEngine::stream_label(s));
+                }
+                out
+            }
+        }
+    }
+
+    /// Matching rows for a typed query (see [`StatsQuery`]).
+    pub fn rows(&self, q: &StatsQuery) -> Vec<QueryRow> {
+        let domains: Vec<StatDomain> = match q.domain {
+            Some(d) => vec![d],
+            None => StatDomain::ALL.to_vec(),
+        };
+        let mut rows = Vec::new();
+        for d in domains {
+            match d {
+                StatDomain::L1 | StatDomain::L2 => {
+                    self.cache_rows(d, q, &mut rows);
+                }
+                _ => {
+                    // scalar domains have no (type, outcome) cells: a
+                    // cell filter excludes them by definition
+                    if q.access_type.is_some() || q.outcome.is_some() {
+                        continue;
+                    }
+                    let per = if q.pinned_window {
+                        self.per_stream_pw(d)
+                    } else {
+                        self.per_stream(d)
+                    };
+                    for (s, n) in per {
+                        if q.stream.is_some_and(|want| want != s) {
+                            continue;
+                        }
+                        if n == 0 {
+                            continue;
+                        }
+                        rows.push(QueryRow {
+                            domain: d,
+                            stream: s,
+                            access_type: None,
+                            outcome: None,
+                            count: n,
+                        });
+                    }
+                }
+            }
+        }
+        rows
+    }
+
+    fn cache_rows(&self, d: StatDomain, q: &StatsQuery,
+                  rows: &mut Vec<QueryRow>) {
+        let view = self.cache(d);
+        for s in view.streams() {
+            if q.stream.is_some_and(|want| want != s) {
+                continue;
+            }
+            let table = if q.pinned_window {
+                view.stream_table_pw(s)
+            } else {
+                view.stream_table(s)
+            };
+            let Some(table) = table else { continue };
+            for (t, o, c) in table.iter_nonzero() {
+                if q.access_type.is_some_and(|want| want != t) {
+                    continue;
+                }
+                if q.outcome.is_some_and(|want| want != o) {
+                    continue;
+                }
+                rows.push(QueryRow {
+                    domain: d,
+                    stream: s,
+                    access_type: Some(t),
+                    outcome: Some(o),
+                    count: c,
+                });
+            }
+        }
+    }
+
+    /// Sum of all matching cells for a typed query.
+    pub fn count(&self, q: &StatsQuery) -> u64 {
+        self.rows(q).iter().map(|r| r.count).sum()
+    }
+}
+
+/// One matching cell of a [`StatsQuery`]. Scalar domains (DRAM /
+/// interconnect / power) carry no `(type, outcome)` coordinates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueryRow {
+    /// Domain the cell belongs to.
+    pub domain: StatDomain,
+    /// Stream id (or [`crate::stats::StatsEngine::AGG_KEY`] in
+    /// aggregate modes).
+    pub stream: StreamId,
+    /// Access type, for cache domains.
+    pub access_type: Option<AccessType>,
+    /// Access outcome, for cache domains.
+    pub outcome: Option<AccessOutcome>,
+    /// The cell's count (units: increments / requests / flits / fJ,
+    /// by domain).
+    pub count: u64,
+}
+
+/// Typed selector over a [`Snapshot`]: restrict by domain, stream,
+/// access type/outcome, and choose the cumulative or the pinned
+/// per-kernel window (`_pw`) view. Unset selectors match everything.
+#[derive(Debug, Clone, Default)]
+pub struct StatsQuery {
+    domain: Option<StatDomain>,
+    stream: Option<StreamId>,
+    access_type: Option<AccessType>,
+    outcome: Option<AccessOutcome>,
+    pinned_window: bool,
+}
+
+impl StatsQuery {
+    /// Match-everything query.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Restrict to one [`StatDomain`].
+    pub fn domain(mut self, d: StatDomain) -> Self {
+        self.domain = Some(d);
+        self
+    }
+
+    /// Restrict to one stream.
+    pub fn stream(mut self, s: StreamId) -> Self {
+        self.stream = Some(s);
+        self
+    }
+
+    /// Restrict to one access type (cache domains only).
+    pub fn access_type(mut self, t: AccessType) -> Self {
+        self.access_type = Some(t);
+        self
+    }
+
+    /// Restrict to one outcome (cache domains only).
+    pub fn outcome(mut self, o: AccessOutcome) -> Self {
+        self.outcome = Some(o);
+        self
+    }
+
+    /// Read the pinned per-kernel window (`_pw`, §3.1) instead of the
+    /// cumulative counters.
+    pub fn pinned_window(mut self) -> Self {
+        self.pinned_window = true;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SimBuilder;
+
+    fn snap() -> Snapshot {
+        let mut s = SimBuilder::preset("minimal")
+            .bench("l2_lat")
+            .build()
+            .unwrap();
+        s.run_to_idle().unwrap();
+        s.snapshot()
+    }
+
+    #[test]
+    fn query_by_domain_stream_and_cell() {
+        let snap = snap();
+        let all_l2 = snap.count(
+            &StatsQuery::new().domain(StatDomain::L2));
+        assert_eq!(all_l2, snap.l2().total_table().total());
+        let s1 = snap.count(
+            &StatsQuery::new().domain(StatDomain::L2).stream(1));
+        assert_eq!(s1, snap.l2().stream_table(1).unwrap().total());
+        let reads = snap.count(
+            &StatsQuery::new()
+                .domain(StatDomain::L2)
+                .access_type(AccessType::GlobalAccR));
+        assert_eq!(reads,
+                   snap.l2().total_table()
+                       .total_for_type(AccessType::GlobalAccR));
+        assert!(reads > 0);
+    }
+
+    #[test]
+    fn scalar_domains_answer_without_cells() {
+        let snap = snap();
+        let dram = snap.count(
+            &StatsQuery::new().domain(StatDomain::Dram));
+        assert_eq!(dram, snap.domain_total(StatDomain::Dram));
+        assert!(dram > 0);
+        // a cell filter excludes scalar domains
+        assert_eq!(
+            snap.count(&StatsQuery::new()
+                .domain(StatDomain::Dram)
+                .access_type(AccessType::GlobalAccR)),
+            0);
+        // unrestricted rows cover every domain with data
+        let rows = snap.rows(&StatsQuery::new());
+        assert!(rows.iter().any(|r| r.domain == StatDomain::L2));
+        assert!(rows.iter().any(|r| r.domain == StatDomain::Dram));
+        assert!(rows.iter().any(|r| r.domain == StatDomain::Power));
+    }
+
+    #[test]
+    fn pinned_window_view_is_selectable() {
+        // after the run every kernel exited, so every pw window was
+        // cleared — the pw view must read 0 while cumulative doesn't
+        let snap = snap();
+        let q = StatsQuery::new().domain(StatDomain::L2);
+        assert!(snap.count(&q) > 0);
+        assert_eq!(snap.count(&q.clone().pinned_window()), 0);
+    }
+
+    #[test]
+    fn kernel_window_selector() {
+        let snap = snap();
+        let (stream, uid, _) = snap.kernel_times().finished()[0];
+        let w = snap.kernel_window(stream, uid).unwrap();
+        assert!(w.end_cycle >= w.start_cycle);
+        assert!(snap.kernel_window(stream, 9999).is_none());
+    }
+
+    #[test]
+    fn snapshot_serializes_through_the_versioned_schema() {
+        let snap = snap();
+        let doc = snap.to_json();
+        assert!(doc.contains(&format!(
+            "\"schema_version\":{}", export::SCHEMA_VERSION)));
+        assert!(doc.contains("\"losses\":{"));
+        // PR-1 shim keeps the old shape
+        let pr1 = snap.to_pr1_json();
+        assert!(!pr1.contains("schema_version"));
+        assert!(pr1.contains("\"dropped_responses\":"));
+        // CSV goes through the same version constant
+        let csv = snap.to_csv(StatDomain::L2);
+        assert!(csv.starts_with(&format!(
+            "# schema_version={}\n", export::SCHEMA_VERSION)));
+    }
+
+    #[test]
+    fn to_csv_is_total_over_every_domain() {
+        let snap = snap();
+        for d in StatDomain::ALL {
+            let csv = snap.to_csv(d);
+            assert!(csv.starts_with(&format!(
+                "# schema_version={}\n", export::SCHEMA_VERSION)),
+                "domain {}", d.name());
+        }
+        let dram = snap.to_csv(StatDomain::Dram);
+        let mut lines = dram.lines();
+        lines.next(); // header comment
+        assert_eq!(lines.next().unwrap(), "stream,count");
+        // one row per stream with DRAM traffic, matching per_stream
+        for (s, n) in snap.per_stream(StatDomain::Dram) {
+            assert!(dram.contains(&format!("{s},{n}")), "{dram}");
+        }
+    }
+}

@@ -1,0 +1,530 @@
+//! [`SimBuilder`] → [`SimSession`] — the supported way to configure
+//! and drive a simulation.
+//!
+//! The builder collects configuration (preset, config file, typed
+//! knobs, `-key value` overrides) and a workload source (built-in
+//! bench, `kernelslist.g` trace, or an inline [`Workload`]), then
+//! validates everything **once** in [`SimBuilder::build`], returning a
+//! typed [`ApiError`] instead of a stringly chain. The session owns
+//! the simulator: enqueue more work, [`SimSession::step`] cycle by
+//! cycle, [`SimSession::run_to_idle`], and take live
+//! [`Snapshot`]s between steps at any point — including mid-run.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::api::{ApiError, Snapshot};
+use crate::config::SimConfig;
+use crate::sim::{GpuSim, GpuStats};
+use crate::stats::StatMode;
+use crate::trace::Workload;
+use crate::workloads;
+use crate::Cycle;
+
+/// Where the initial workload comes from.
+#[derive(Debug, Clone)]
+enum WorkloadSource {
+    /// A built-in benchmark generator ([`crate::workloads`]).
+    Bench(String),
+    /// A `kernelslist.g` trace on disk.
+    Trace(PathBuf),
+    /// An already-built workload.
+    Inline(Workload),
+}
+
+/// Base the configuration is derived from.
+#[derive(Debug, Clone)]
+enum ConfigBase {
+    /// A named preset, resolved at build time.
+    Preset(String),
+    /// A fully-formed config supplied by the caller.
+    Config(Box<SimConfig>),
+}
+
+/// Builder for a [`SimSession`]. All setters are infallible; every
+/// validation happens in [`SimBuilder::build`] /
+/// [`SimBuilder::build_config`].
+#[derive(Debug, Clone)]
+pub struct SimBuilder {
+    base: ConfigBase,
+    config_file: Option<PathBuf>,
+    stat_mode: Option<String>,
+    serialize_streams: Option<bool>,
+    sim_threads: Option<u32>,
+    overrides: BTreeMap<String, String>,
+    source: Option<WorkloadSource>,
+    verbose: bool,
+    label: Option<String>,
+}
+
+impl Default for SimBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimBuilder {
+    /// Builder starting from the default preset
+    /// (`sm7_titanv_mini`).
+    pub fn new() -> Self {
+        Self::preset("sm7_titanv_mini")
+    }
+
+    /// Builder starting from a named preset (resolved at build time).
+    pub fn preset(name: &str) -> Self {
+        Self {
+            base: ConfigBase::Preset(name.to_string()),
+            config_file: None,
+            stat_mode: None,
+            serialize_streams: None,
+            sim_threads: None,
+            overrides: BTreeMap::new(),
+            source: None,
+            verbose: false,
+            label: None,
+        }
+    }
+
+    /// Builder starting from an existing configuration (the harness
+    /// path: one base config, several derived sessions).
+    pub fn from_config(cfg: SimConfig) -> Self {
+        let mut b = Self::new();
+        b.base = ConfigBase::Config(Box::new(cfg));
+        b
+    }
+
+    /// Apply a `gpgpusim.config`-style file on top of the base.
+    pub fn config_file(mut self, path: impl AsRef<Path>) -> Self {
+        self.config_file = Some(path.as_ref().to_path_buf());
+        self
+    }
+
+    /// Statistics semantics, typed.
+    pub fn stat_mode(mut self, mode: StatMode) -> Self {
+        self.stat_mode = Some(mode.label().to_string());
+        self
+    }
+
+    /// Statistics semantics by label (`tip` / `clean` / `exact`, plus
+    /// the config-file aliases) — validated at build time.
+    pub fn stat_mode_label(mut self, label: &str) -> Self {
+        self.stat_mode = Some(label.to_string());
+        self
+    }
+
+    /// The paper's §5.1 stream-serialization launch gate.
+    pub fn serialize_streams(mut self, on: bool) -> Self {
+        self.serialize_streams = Some(on);
+        self
+    }
+
+    /// Worker threads for the parallel core/partition loop (0 = auto,
+    /// 1 = sequential).
+    pub fn sim_threads(mut self, threads: u32) -> Self {
+        self.sim_threads = Some(threads);
+        self
+    }
+
+    /// One `-key value` override (applied after preset, config file
+    /// and the typed knobs, in key order — the CLI's semantics).
+    pub fn set(mut self, key: &str, value: &str) -> Self {
+        self.overrides.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    /// Many `-key value` overrides at once.
+    pub fn overrides(mut self, kv: &BTreeMap<String, String>) -> Self {
+        for (k, v) in kv {
+            self.overrides.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    /// Initial workload: a built-in benchmark by name.
+    pub fn bench(mut self, name: &str) -> Self {
+        self.source = Some(WorkloadSource::Bench(name.to_string()));
+        self
+    }
+
+    /// Initial workload: a `kernelslist.g` trace directory/file.
+    pub fn trace(mut self, path: impl AsRef<Path>) -> Self {
+        self.source =
+            Some(WorkloadSource::Trace(path.as_ref().to_path_buf()));
+        self
+    }
+
+    /// Initial workload: an already-built [`Workload`].
+    pub fn workload(mut self, w: Workload) -> Self {
+        self.source = Some(WorkloadSource::Inline(w));
+        self
+    }
+
+    /// Echo kernel launch/exit lines to stdout while running.
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.verbose = on;
+        self
+    }
+
+    /// Label carried on snapshots/exports (defaults to the stat-mode
+    /// label, matching the CLI's `"config"` document field).
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = Some(label.to_string());
+        self
+    }
+
+    /// Resolve and validate the configuration only (no simulator).
+    /// Layering order matches the CLI: preset → config file →
+    /// stat-mode/serialize/threads knobs → `-key value` overrides →
+    /// `SimConfig::validate`.
+    pub fn build_config(&self) -> Result<SimConfig, ApiError> {
+        let mut cfg = match &self.base {
+            ConfigBase::Preset(name) => SimConfig::preset(name)
+                .map_err(|_| ApiError::UnknownPreset {
+                    name: name.clone(),
+                })?,
+            ConfigBase::Config(cfg) => (**cfg).clone(),
+        };
+        if let Some(path) = &self.config_file {
+            let text = std::fs::read_to_string(path).map_err(|e| {
+                ApiError::Io {
+                    path: path.display().to_string(),
+                    message: e.to_string(),
+                }
+            })?;
+            let kv = crate::config::parse_config_text(&text).map_err(
+                |e| ApiError::InvalidConfig {
+                    message: format!("{}: {e:#}", path.display()),
+                })?;
+            apply_kv(&mut cfg, &kv)?;
+        }
+        if let Some(mode) = &self.stat_mode {
+            let mut kv = BTreeMap::new();
+            kv.insert("stat_mode".to_string(), mode.clone());
+            apply_kv(&mut cfg, &kv)?;
+        }
+        if let Some(on) = self.serialize_streams {
+            cfg.serialize_streams = on;
+        }
+        if let Some(t) = self.sim_threads {
+            cfg.sim_threads = t;
+        }
+        apply_kv(&mut cfg, &self.overrides)?;
+        cfg.validate().map_err(|e| ApiError::InvalidConfig {
+            message: format!("{e:#}"),
+        })?;
+        Ok(cfg)
+    }
+
+    /// Validate everything, construct the simulator, resolve and
+    /// enqueue the workload (if a source was given) — one fallible
+    /// step, typed errors.
+    pub fn build(self) -> Result<SimSession, ApiError> {
+        let cfg = self.build_config()?;
+        let label = self
+            .label
+            .clone()
+            .unwrap_or_else(|| cfg.stat_mode.label().to_string());
+        let sim = GpuSim::new(cfg).map_err(|e| {
+            ApiError::InvalidConfig { message: format!("{e:#}") }
+        })?;
+        let mut session = SimSession { sim, label };
+        session.sim.set_verbose(self.verbose);
+        match self.source {
+            None => {}
+            Some(WorkloadSource::Inline(w)) => session.enqueue(&w)?,
+            Some(WorkloadSource::Bench(name)) => {
+                let g = workloads::generate(&name).map_err(|_| {
+                    ApiError::UnknownBench { name: name.clone() }
+                })?;
+                session.enqueue(&g.workload)?;
+            }
+            Some(WorkloadSource::Trace(path)) => {
+                // one open() probe classifies filesystem problems
+                // (missing file, EACCES, …) as Io with the real OS
+                // error; residual load failures — malformed traces,
+                // or I/O on files the list references — surface as
+                // InvalidWorkload with the cause in the message
+                if let Err(e) = std::fs::File::open(&path) {
+                    return Err(ApiError::Io {
+                        path: path.display().to_string(),
+                        message: e.to_string(),
+                    });
+                }
+                let w = crate::trace::io::load_workload(&path)
+                    .map_err(|e| ApiError::InvalidWorkload {
+                        message: format!("{}: {e:#}", path.display()),
+                    })?;
+                session.enqueue(&w)?;
+            }
+        }
+        Ok(session)
+    }
+}
+
+/// Apply overrides one key at a time so a rejection names its key.
+fn apply_kv(cfg: &mut SimConfig, kv: &BTreeMap<String, String>)
+    -> Result<(), ApiError> {
+    for (k, v) in kv {
+        let mut one = BTreeMap::new();
+        one.insert(k.clone(), v.clone());
+        cfg.apply_overrides(&one).map_err(|e| {
+            ApiError::InvalidOption {
+                key: k.clone(),
+                message: format!("{e:#}"),
+            }
+        })?;
+    }
+    Ok(())
+}
+
+/// A live simulation. Owns the clock loop; resumable between steps;
+/// every statistic is read through [`Snapshot`]s (live or final).
+pub struct SimSession {
+    sim: GpuSim,
+    label: String,
+}
+
+impl SimSession {
+    /// Configuration in use.
+    pub fn config(&self) -> &SimConfig {
+        self.sim.config()
+    }
+
+    /// Effective worker-thread count (clean mode pins this to 1).
+    pub fn threads(&self) -> usize {
+        self.sim.threads()
+    }
+
+    /// The session's export label.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Echo kernel launch/exit lines to stdout.
+    pub fn set_verbose(&mut self, on: bool) {
+        self.sim.set_verbose(on);
+    }
+
+    /// Queue every kernel of a workload (also mid-run: the session is
+    /// resumable).
+    pub fn enqueue(&mut self, w: &Workload) -> Result<(), ApiError> {
+        self.sim.enqueue_workload(w).map_err(|e| {
+            ApiError::InvalidWorkload { message: format!("{e:#}") }
+        })
+    }
+
+    /// One clock tick (inline, sequential execution of the phased
+    /// loop).
+    pub fn step(&mut self) -> Result<(), ApiError> {
+        self.sim.step().map_err(ApiError::from_run)
+    }
+
+    /// Step until at least `n` kernels have retired (the kernel-exit
+    /// snapshot point). Errors if the simulation drains first.
+    pub fn run_until_kernels_done(&mut self, n: u32)
+        -> Result<(), ApiError> {
+        while self.kernels_done() < n {
+            if self.idle() {
+                return Err(ApiError::InvalidWorkload {
+                    message: format!(
+                        "simulation drained after {} kernels; cannot \
+                         reach {n}",
+                        self.kernels_done()),
+                });
+            }
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Run until all queued work drains (pooled when
+    /// `sim_threads > 1`). Resumable: enqueue more and call again.
+    pub fn run_to_idle(&mut self) -> Result<(), ApiError> {
+        self.sim.run().map(|_| ()).map_err(ApiError::from_run)
+    }
+
+    /// Everything drained?
+    pub fn idle(&self) -> bool {
+        self.sim.idle()
+    }
+
+    /// Current simulation cycle.
+    pub fn cycle(&self) -> Cycle {
+        self.sim.now()
+    }
+
+    /// Kernels retired so far.
+    pub fn kernels_done(&self) -> u32 {
+        self.sim.stats().kernels_done
+    }
+
+    /// Kernels launched so far.
+    pub fn kernels_launched(&self) -> u32 {
+        self.sim.stats().kernels_launched
+    }
+
+    /// Live snapshot of every statistic at the current cycle — a deep
+    /// copy, valid between steps mid-run. Pending worker shards are
+    /// absorbed first (the same cell-wise addition the kernel-exit
+    /// merge performs, so no count can change); no guard or per-window
+    /// state is mutated, and the session keeps running unaffected.
+    pub fn snapshot(&mut self) -> Snapshot {
+        Snapshot::capture(&self.label, self.sim.snapshot_stats().clone())
+    }
+
+    /// ASCII timeline of the kernels finished so far.
+    pub fn render_timeline(&self, width: usize) -> String {
+        self.sim.render_timeline(width)
+    }
+
+    /// Consume the session and produce its final [`Snapshot`] by
+    /// **moving** the stat containers out — no deep copy, unlike
+    /// [`SimSession::snapshot`] (which must leave the session
+    /// running). Use this when the session is done.
+    pub fn into_snapshot(self) -> Snapshot {
+        let label = self.label.clone();
+        Snapshot::capture(&label, self.into_stats())
+    }
+
+    /// Consume the session, keeping only its (fully absorbed) stats.
+    pub fn into_stats(mut self) -> GpuStats {
+        self.sim.snapshot_stats();
+        let mode = self.sim.config().stat_mode;
+        std::mem::replace(self.sim.stats_mut(), GpuStats::new(mode))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::StatDomain;
+
+    #[test]
+    fn builder_resolves_presets_and_knobs() {
+        let cfg = SimBuilder::preset("minimal")
+            .stat_mode(StatMode::AggregateExact)
+            .serialize_streams(true)
+            .sim_threads(2)
+            .set("num_cores", "2")
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.preset, "minimal");
+        assert_eq!(cfg.stat_mode, StatMode::AggregateExact);
+        assert!(cfg.serialize_streams);
+        assert_eq!(cfg.sim_threads, 2);
+        assert_eq!(cfg.num_cores, 2);
+    }
+
+    #[test]
+    fn builder_maps_error_variants() {
+        assert_eq!(SimBuilder::preset("nope").build_config()
+                       .unwrap_err().kind(),
+                   "unknown_preset");
+        assert_eq!(SimBuilder::preset("minimal")
+                       .set("bogus_key", "1")
+                       .build_config().unwrap_err().kind(),
+                   "invalid_option");
+        assert_eq!(SimBuilder::preset("minimal")
+                       .stat_mode_label("sorta")
+                       .build_config().unwrap_err().kind(),
+                   "invalid_option");
+        assert_eq!(SimBuilder::preset("minimal")
+                       .set("num_cores", "0")
+                       .build_config().unwrap_err().kind(),
+                   "invalid_config");
+        assert_eq!(SimBuilder::preset("minimal")
+                       .config_file("/nonexistent/x.config")
+                       .build_config().unwrap_err().kind(), "io");
+        assert_eq!(SimBuilder::preset("minimal").bench("nope").build()
+                       .unwrap_err().kind(),
+                   "unknown_bench");
+        assert_eq!(SimBuilder::preset("minimal")
+                       .trace("/nonexistent/kernelslist.g")
+                       .build().unwrap_err().kind(), "io");
+    }
+
+    #[test]
+    fn session_runs_a_bench_to_idle() {
+        let mut s = SimBuilder::preset("minimal")
+            .bench("l2_lat")
+            .build()
+            .unwrap();
+        assert!(!s.idle());
+        s.run_to_idle().unwrap();
+        assert!(s.idle());
+        assert_eq!(s.kernels_done(), 4);
+        let snap = s.snapshot();
+        assert!(snap.total_cycles() > 0);
+        assert!(snap.domain_total(StatDomain::L2) > 0);
+    }
+
+    #[test]
+    fn session_is_resumable_between_steps() {
+        let g = workloads::generate("l2_lat").unwrap();
+        let mut stepped = SimBuilder::preset("minimal")
+            .workload(g.workload.clone())
+            .build()
+            .unwrap();
+        stepped.run_until_kernels_done(1).unwrap();
+        assert!(stepped.kernels_done() >= 1);
+        let mid_cycle = stepped.cycle();
+        assert!(mid_cycle > 0);
+        stepped.run_to_idle().unwrap();
+
+        let mut straight = SimBuilder::preset("minimal")
+            .workload(g.workload.clone())
+            .build()
+            .unwrap();
+        straight.run_to_idle().unwrap();
+        // stepping + resuming is invisible in the results
+        assert_eq!(stepped.snapshot().to_json(),
+                   straight.snapshot().to_json());
+    }
+
+    #[test]
+    fn cycle_limit_maps_to_typed_error() {
+        let mut s = SimBuilder::preset("minimal")
+            .set("max_cycles", "3")
+            .bench("l2_lat")
+            .build()
+            .unwrap();
+        let err = s.run_to_idle().unwrap_err();
+        assert_eq!(err.kind(), "cycle_limit");
+        // the stepping path honours the same safety valve — a wedged
+        // workload cannot spin run_until_kernels_done forever
+        let mut s = SimBuilder::preset("minimal")
+            .set("max_cycles", "3")
+            .bench("l2_lat")
+            .build()
+            .unwrap();
+        let err = s.run_until_kernels_done(4).unwrap_err();
+        assert_eq!(err.kind(), "cycle_limit");
+    }
+
+    #[test]
+    fn oversized_tb_is_an_invalid_workload() {
+        let g = workloads::generate("bench3").unwrap();
+        // bench3 uses 1024-thread TBs; minimal allows 32 warps -> ok,
+        // so shrink the allowance to force the launch-config rejection
+        let err = SimBuilder::preset("minimal")
+            .set("max_warps_per_core", "4")
+            .workload(g.workload)
+            .build()
+            .unwrap_err();
+        assert_eq!(err.kind(), "invalid_workload");
+    }
+
+    #[test]
+    fn into_stats_matches_snapshot() {
+        let mut s = SimBuilder::preset("minimal")
+            .bench("l2_lat")
+            .build()
+            .unwrap();
+        s.run_to_idle().unwrap();
+        let snap = s.snapshot();
+        let stats = s.into_stats();
+        assert_eq!(stats.total_cycles, snap.total_cycles());
+        assert_eq!(stats.l2().total_table(),
+                   snap.l2().total_table());
+    }
+}

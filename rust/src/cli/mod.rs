@@ -1,25 +1,24 @@
-//! Hand-rolled CLI (`clap` is unavailable offline — DESIGN.md §7).
+//! Hand-rolled CLI (`clap` is unavailable offline — DESIGN.md §7),
+//! a thin shell over [`crate::api`].
 //!
-//! ```text
-//! streamsim run      --bench l2_lat | --trace kernelslist.g
-//!                    [--preset sm7_titanv_mini] [--stat-mode tip]
-//!                    [--serialize] [--config FILE] [-o key value]...
-//!                    [--timeline] [--csv PATH] [--stats-json PATH]
-//!                    [--verbose]
-//! streamsim validate --bench l2_lat [--preset ...] [--figure]
-//! streamsim trace-gen --bench bench1 --out DIR
-//! streamsim functional [--artifacts DIR]
-//! streamsim report   --bench l2_lat [--preset ...]  (figure table only)
-//! ```
+//! Parsing produces a [`Command`]; `run` arguments convert into an
+//! [`api::SimBuilder`] via [`RunArgs::to_builder`] (the CLI-args →
+//! builder round trip is pinned by tests). All help text — the
+//! top-level usage block *and* per-subcommand `--help` — is generated
+//! from the one [`COMMANDS`] table.
+//!
+//! `--stats-json -` and `--csv -` write the document to stdout
+//! instead of a file.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::api::{SimBuilder, StatDomain};
 use crate::config::SimConfig;
 use crate::harness;
-use crate::sim::GpuSim;
 use crate::stats::print as stat_print;
 use crate::workloads;
 
@@ -32,6 +31,8 @@ pub enum Command {
     Functional { artifacts: PathBuf },
     Report { bench: String, preset: String },
     Help,
+    /// `streamsim <cmd> --help` / `streamsim help <cmd>`.
+    HelpFor(String),
 }
 
 /// Arguments of `streamsim run`.
@@ -53,7 +54,7 @@ pub struct RunArgs {
     /// Print the per-stream energy breakdown (§6 extension).
     pub power: bool,
     /// Write a machine-readable result document
-    /// (`--stats-json` / `--json`).
+    /// (`--stats-json` / `--json`; `-` = stdout).
     pub json: Option<PathBuf>,
 }
 
@@ -77,30 +78,217 @@ impl Default for RunArgs {
     }
 }
 
-/// Usage text.
-pub const USAGE: &str = "\
-streamsim — per-stream stat tracking for a trace-driven GPU simulator
+impl RunArgs {
+    /// The CLI-args → facade conversion: every `run` flag maps onto
+    /// exactly one [`SimBuilder`] knob, in the same layering order the
+    /// builder validates (preset → config file → stat-mode /
+    /// serialize / threads → overrides → workload source).
+    pub fn to_builder(&self) -> SimBuilder {
+        let mut b = SimBuilder::preset(&self.preset);
+        if let Some(f) = &self.config_file {
+            b = b.config_file(f);
+        }
+        if let Some(m) = &self.stat_mode {
+            b = b.stat_mode_label(m);
+        }
+        if self.serialize {
+            b = b.serialize_streams(true);
+        }
+        if let Some(t) = self.sim_threads {
+            b = b.sim_threads(t);
+        }
+        b = b.overrides(&self.overrides);
+        if let Some(bench) = &self.bench {
+            b = b.bench(bench);
+        } else if let Some(trace) = &self.trace {
+            b = b.trace(trace);
+        }
+        b.verbose(self.verbose)
+    }
+}
 
-USAGE:
-  streamsim run       --bench NAME | --trace kernelslist.g
-                      [--preset NAME] [--stat-mode tip|clean|exact]
-                      [--serialize] [--sim-threads N] [--config FILE]
-                      [-o KEY VALUE]... [--timeline] [--power]
-                      [--csv PATH] [--stats-json PATH] [--verbose]
+/// One CLI flag: spelling(s), value placeholder (empty = switch), and
+/// the help line. This table is the **single source** of all help
+/// text.
+#[derive(Debug)]
+pub struct FlagSpec {
+    pub flags: &'static str,
+    pub value: &'static str,
+    pub help: &'static str,
+}
 
-  --sim-threads N     worker threads for the parallel core/partition
-                      loop (0 = available parallelism, 1 = sequential;
-                      per-stream/exact stats are bit-identical for any
-                      N; clean mode always runs sequentially)
-  streamsim validate  --bench NAME [--preset NAME] [--figure]
-  streamsim trace-gen --bench NAME --out DIR
-  streamsim functional [--artifacts DIR]
-  streamsim report    --bench NAME [--preset NAME]
-  streamsim help
+/// One subcommand of the table.
+#[derive(Debug)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub synopsis: &'static str,
+    pub about: &'static str,
+    pub flags: &'static [FlagSpec],
+}
 
-BENCHES: l2_lat bench1 bench3 bench1_mini deepbench deepbench_mini
-PRESETS: sm7_titanv sm7_titanv_mini minimal
-";
+/// The one table every help view is generated from.
+pub const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "run",
+        synopsis: "--bench NAME | --trace kernelslist.g [FLAGS]",
+        about: "Run a simulation and print per-stream breakdowns",
+        flags: &[
+            FlagSpec { flags: "--bench", value: "NAME",
+                       help: "built-in benchmark (see BENCHES)" },
+            FlagSpec { flags: "--trace", value: "PATH",
+                       help: "kernelslist.g trace to replay" },
+            FlagSpec { flags: "--preset", value: "NAME",
+                       help: "config preset (see PRESETS)" },
+            FlagSpec { flags: "--stat-mode", value: "tip|clean|exact",
+                       help: "stat semantics (paper SS5.1)" },
+            FlagSpec { flags: "--serialize", value: "",
+                       help: "the paper's busy_streams launch gate" },
+            FlagSpec { flags: "--sim-threads", value: "N",
+                       help: "worker threads for the parallel \
+                              core/partition loop (0 = available \
+                              parallelism, 1 = sequential; \
+                              per-stream/exact stats bit-identical \
+                              for any N; clean mode always \
+                              sequential)" },
+            FlagSpec { flags: "--config", value: "FILE",
+                       help: "gpgpusim.config-style overrides file" },
+            FlagSpec { flags: "-o", value: "KEY VALUE",
+                       help: "single config override (repeatable)" },
+            FlagSpec { flags: "--timeline", value: "",
+                       help: "append the per-stream kernel gantt" },
+            FlagSpec { flags: "--power", value: "",
+                       help: "append the per-stream energy breakdown" },
+            FlagSpec { flags: "--csv", value: "PATH",
+                       help: "write the L2 breakdown CSV ('-' = \
+                              stdout)" },
+            FlagSpec { flags: "--stats-json | --json", value: "PATH",
+                       help: "write the versioned result document \
+                              ('-' = stdout)" },
+            FlagSpec { flags: "--verbose", value: "",
+                       help: "echo kernel launch/exit lines" },
+        ],
+    },
+    CommandSpec {
+        name: "validate",
+        synopsis: "--bench NAME [--preset NAME] [--figure]",
+        about: "Run the paper's three configs and check every claim",
+        flags: &[
+            FlagSpec { flags: "--bench", value: "NAME",
+                       help: "built-in benchmark to validate" },
+            FlagSpec { flags: "--preset", value: "NAME",
+                       help: "config preset (see PRESETS)" },
+            FlagSpec { flags: "--figure", value: "",
+                       help: "also print the figure table" },
+        ],
+    },
+    CommandSpec {
+        name: "trace-gen",
+        synopsis: "--bench NAME --out DIR",
+        about: "Write a benchmark as a kernelslist.g trace",
+        flags: &[
+            FlagSpec { flags: "--bench", value: "NAME",
+                       help: "built-in benchmark to export" },
+            FlagSpec { flags: "--out", value: "DIR",
+                       help: "output directory" },
+        ],
+    },
+    CommandSpec {
+        name: "functional",
+        synopsis: "[--artifacts DIR]",
+        about: "Check the AOT-compiled Pallas artifacts via PJRT",
+        flags: &[
+            FlagSpec { flags: "--artifacts", value: "DIR",
+                       help: "artifact directory (default: built-in)" },
+        ],
+    },
+    CommandSpec {
+        name: "report",
+        synopsis: "--bench NAME [--preset NAME]",
+        about: "Print the figure table only",
+        flags: &[
+            FlagSpec { flags: "--bench", value: "NAME",
+                       help: "built-in benchmark to report on" },
+            FlagSpec { flags: "--preset", value: "NAME",
+                       help: "config preset (see PRESETS)" },
+        ],
+    },
+    CommandSpec {
+        name: "help",
+        synopsis: "[COMMAND]",
+        about: "Show this usage block, or one command's flags",
+        flags: &[],
+    },
+];
+
+/// Wrap `text` into lines of at most `width` chars (word boundaries).
+fn wrap(text: &str, width: usize) -> Vec<String> {
+    let mut lines = Vec::new();
+    let mut cur = String::new();
+    for word in text.split_whitespace() {
+        if !cur.is_empty() && cur.len() + 1 + word.len() > width {
+            lines.push(std::mem::take(&mut cur));
+        }
+        if !cur.is_empty() {
+            cur.push(' ');
+        }
+        cur.push_str(word);
+    }
+    if !cur.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Footer shared by every help view (both lists single-sourced).
+fn help_footer() -> String {
+    format!("BENCHES: {}\nPRESETS: {}\n",
+            workloads::BENCHES.join(" "),
+            crate::config::PRESETS.join(" "))
+}
+
+/// Top-level usage block, generated from [`COMMANDS`].
+pub fn usage() -> String {
+    let mut out = String::from(
+        "streamsim — per-stream stat tracking for a trace-driven GPU \
+         simulator\n\nUSAGE:\n");
+    for c in COMMANDS {
+        let _ = writeln!(out, "  streamsim {:<10} {}", c.name,
+                         c.synopsis);
+    }
+    out.push_str("\nRun 'streamsim <command> --help' for that \
+                  command's flags.\n\n");
+    out.push_str(&help_footer());
+    out
+}
+
+/// Per-subcommand help, generated from the same table.
+pub fn help_for(name: &str) -> Option<String> {
+    let c = COMMANDS.iter().find(|c| c.name == name)?;
+    let mut out = String::new();
+    let _ = writeln!(out, "streamsim {} — {}\n", c.name, c.about);
+    let _ = writeln!(out, "USAGE:\n  streamsim {} {}\n", c.name,
+                     c.synopsis);
+    if !c.flags.is_empty() {
+        out.push_str("FLAGS:\n");
+        for f in c.flags {
+            let head = if f.value.is_empty() {
+                f.flags.to_string()
+            } else {
+                format!("{} {}", f.flags, f.value)
+            };
+            let wrapped = wrap(f.help, 46);
+            let first =
+                wrapped.first().map(String::as_str).unwrap_or("");
+            let _ = writeln!(out, "  {head:<28} {first}");
+            for cont in wrapped.iter().skip(1) {
+                let _ = writeln!(out, "  {:<28} {cont}", "");
+            }
+        }
+        out.push('\n');
+    }
+    out.push_str(&help_footer());
+    Some(out)
+}
 
 /// Parse an argv (without the program name).
 pub fn parse(args: &[String]) -> Result<Command> {
@@ -117,11 +305,17 @@ pub fn parse(args: &[String]) -> Result<Command> {
             .with_context(|| format!("flag {flag} needs a value"))
     };
     match cmd.as_str() {
-        "help" | "--help" | "-h" => Ok(Command::Help),
+        "help" | "--help" | "-h" => Ok(match it.next() {
+            Some(sub) => Command::HelpFor(sub.to_string()),
+            None => Command::Help,
+        }),
         "run" => {
             let mut a = RunArgs::default();
             while let Some(flag) = it.next() {
                 match flag.as_str() {
+                    "--help" | "-h" => {
+                        return Ok(Command::HelpFor("run".into()));
+                    }
                     "--bench" => a.bench = Some(next_val("--bench",
                                                          &mut it)?),
                     "--trace" => {
@@ -175,6 +369,9 @@ pub fn parse(args: &[String]) -> Result<Command> {
             let mut figure = false;
             while let Some(flag) = it.next() {
                 match flag.as_str() {
+                    "--help" | "-h" => {
+                        return Ok(Command::HelpFor(cmd.to_string()));
+                    }
                     "--bench" => bench = Some(next_val("--bench",
                                                        &mut it)?),
                     "--preset" => preset = next_val("--preset",
@@ -195,6 +392,9 @@ pub fn parse(args: &[String]) -> Result<Command> {
             let mut out = None;
             while let Some(flag) = it.next() {
                 match flag.as_str() {
+                    "--help" | "-h" => {
+                        return Ok(Command::HelpFor("trace-gen".into()));
+                    }
                     "--bench" => bench = Some(next_val("--bench",
                                                        &mut it)?),
                     "--out" => {
@@ -214,6 +414,9 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 crate::runtime::default_artifact_dir();
             while let Some(flag) = it.next() {
                 match flag.as_str() {
+                    "--help" | "-h" => {
+                        return Ok(Command::HelpFor("functional".into()));
+                    }
                     "--artifacts" => {
                         artifacts =
                             next_val("--artifacts", &mut it)?.into();
@@ -223,79 +426,68 @@ pub fn parse(args: &[String]) -> Result<Command> {
             }
             Ok(Command::Functional { artifacts })
         }
-        other => bail!("unknown command '{other}'\n{USAGE}"),
+        other => bail!("unknown command '{other}'\n{}", usage()),
     }
+}
+
+/// Append a document to the report (for `-`) or write it to `path`.
+fn emit_doc(out: &mut String, path: &Path, doc: &str) -> Result<()> {
+    if path.as_os_str() == "-" {
+        out.push_str(doc);
+        if !doc.ends_with('\n') {
+            out.push('\n');
+        }
+    } else {
+        std::fs::write(path, doc)
+            .with_context(|| format!("writing {}", path.display()))?;
+        let _ = writeln!(out, "wrote {}", path.display());
+    }
+    Ok(())
 }
 
 /// Execute a parsed command; returns the text to print.
 pub fn execute(cmd: Command) -> Result<String> {
-    use std::fmt::Write as _;
     match cmd {
-        Command::Help => Ok(USAGE.to_string()),
+        Command::Help => Ok(usage()),
+        Command::HelpFor(name) => help_for(&name)
+            .with_context(|| format!("unknown command '{name}'")),
         Command::Run(a) => {
-            let mut cfg = SimConfig::preset(&a.preset)?;
-            if let Some(f) = &a.config_file {
-                cfg.apply_file(f)?;
-            }
-            if let Some(m) = &a.stat_mode {
-                let mut kv = BTreeMap::new();
-                kv.insert("stat_mode".to_string(), m.clone());
-                cfg.apply_overrides(&kv)?;
-            }
-            cfg.serialize_streams |= a.serialize;
-            if let Some(t) = a.sim_threads {
-                cfg.sim_threads = t;
-            }
-            cfg.apply_overrides(&a.overrides)?;
-
-            let workload = if let Some(b) = &a.bench {
-                workloads::generate(b)?.workload
-            } else {
-                crate::trace::io::load_workload(a.trace.as_ref()
-                                                 .unwrap())?
-            };
-            let mut sim = GpuSim::new(cfg)?;
-            sim.verbose = a.verbose;
-            sim.enqueue_workload(&workload)?;
-            sim.run()?;
-            let stats = sim.stats();
-            let engine = &stats.engine;
+            let mut session = a.to_builder().build()?;
+            session.run_to_idle()?;
+            let summary = session.config().summary();
+            // finished — move the stats out instead of cloning them
+            let snap = session.into_snapshot();
             let mut out = String::new();
-            let _ = writeln!(out, "config: {}", sim.config().summary());
-            let _ = writeln!(out, "cycles: {}", stats.total_cycles);
-            let _ = writeln!(out, "kernels: {}", stats.kernels_done);
+            let _ = writeln!(out, "config: {summary}");
+            let _ = writeln!(out, "cycles: {}", snap.total_cycles());
+            let _ = writeln!(out, "kernels: {}", snap.kernels_done());
             out.push_str(&stat_print::print_all_streams(
-                stats.l1(), "Total_core_cache_stats_breakdown"));
+                snap.l1(), "Total_core_cache_stats_breakdown"));
             out.push_str(&stat_print::print_all_streams(
-                stats.l2(), "L2_cache_stats_breakdown"));
-            // the §6 extension domains, straight from the engine
+                snap.l2(), "L2_cache_stats_breakdown"));
+            // the §6 extension domains, via the facade views
             let _ = writeln!(out, "DRAM/ICNT per-stream totals:");
             out.push_str(&stat_print::print_scalar_per_stream(
-                "DRAM_accesses",
-                &engine.per_stream(crate::stats::StatDomain::Dram)));
+                "DRAM_accesses", &snap.per_stream(StatDomain::Dram)));
             out.push_str(&stat_print::print_scalar_per_stream(
-                "ICNT_flits",
-                &engine.per_stream(crate::stats::StatDomain::Icnt)));
-            if engine.dropped_responses() > 0 {
+                "ICNT_flits", &snap.per_stream(StatDomain::Icnt)));
+            let losses = snap.losses();
+            if losses.dropped_responses > 0 {
                 let _ = writeln!(out, "WARNING: {} responses dropped \
                                        (no return path)",
-                                 engine.dropped_responses());
+                                 losses.dropped_responses);
             }
             if a.timeline {
-                out.push_str(&sim.render_timeline(72));
+                out.push_str(&snap.render_timeline(72));
             }
             if a.power {
-                out.push_str(&engine.power_stats().render());
+                out.push_str(&snap.power_stats().render());
             }
             if let Some(csv) = &a.csv {
-                std::fs::write(csv, stat_print::to_csv(stats.l2()))?;
-                let _ = writeln!(out, "wrote {}", csv.display());
+                emit_doc(&mut out, csv, &snap.to_csv(StatDomain::L2))?;
             }
             if let Some(json) = &a.json {
-                let doc = crate::stats::export::to_json(
-                    sim.config().stat_mode.label(), stats);
-                std::fs::write(json, doc)?;
-                let _ = writeln!(out, "wrote {}", json.display());
+                emit_doc(&mut out, json, &snap.to_json())?;
             }
             Ok(out)
         }
@@ -360,6 +552,7 @@ pub fn execute(cmd: Command) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::SCHEMA_VERSION;
 
     fn sv(args: &[&str]) -> Vec<String> {
         args.iter().map(|s| s.to_string()).collect()
@@ -380,6 +573,26 @@ mod tests {
         assert!(a.timeline);
         assert_eq!(a.sim_threads, Some(4));
         assert_eq!(a.overrides["num_cores"], "2");
+    }
+
+    #[test]
+    fn run_args_convert_to_equivalent_builder_config() {
+        // the CLI-args → SimBuilder round trip: the builder resolves
+        // to exactly the config the flags describe
+        let cmd = parse(&sv(&["run", "--bench", "l2_lat", "--preset",
+                              "minimal", "--stat-mode", "exact",
+                              "--serialize", "--sim-threads", "2",
+                              "-o", "num_cores", "2",
+                              "-o", "l2_latency", "99"])).unwrap();
+        let Command::Run(a) = cmd else { panic!() };
+        let cfg = a.to_builder().build_config().unwrap();
+        assert_eq!(cfg.preset, "minimal");
+        assert_eq!(cfg.stat_mode,
+                   crate::stats::StatMode::AggregateExact);
+        assert!(cfg.serialize_streams);
+        assert_eq!(cfg.sim_threads, 2);
+        assert_eq!(cfg.num_cores, 2);
+        assert_eq!(cfg.l2_latency, 99);
     }
 
     #[test]
@@ -434,6 +647,62 @@ mod tests {
     }
 
     #[test]
+    fn per_subcommand_help_routes_and_renders() {
+        for args in [vec!["run", "--help"], vec!["run", "-h"],
+                     vec!["help", "run"]] {
+            let cmd = parse(&sv(&args)).unwrap();
+            assert_eq!(cmd, Command::HelpFor("run".into()), "{args:?}");
+        }
+        assert_eq!(parse(&sv(&["validate", "--help"])).unwrap(),
+                   Command::HelpFor("validate".into()));
+        assert_eq!(parse(&sv(&["trace-gen", "-h"])).unwrap(),
+                   Command::HelpFor("trace-gen".into()));
+        let text = execute(Command::HelpFor("run".into())).unwrap();
+        for flag in ["--bench", "--trace", "--stat-mode",
+                     "--sim-threads", "--stats-json", "--csv"] {
+            assert!(text.contains(flag), "missing {flag} in {text}");
+        }
+        assert!(text.contains("BENCHES:"));
+        // unknown command help fails cleanly
+        assert!(execute(Command::HelpFor("bogus".into())).is_err());
+    }
+
+    #[test]
+    fn usage_is_generated_from_the_table() {
+        let u = usage();
+        for c in COMMANDS {
+            assert!(u.contains(c.name), "missing {} in usage", c.name);
+        }
+        for b in workloads::BENCHES {
+            assert!(u.contains(b), "missing bench {b} in usage");
+        }
+        for p in crate::config::PRESETS {
+            assert!(u.contains(p), "missing preset {p} in usage");
+        }
+        assert_eq!(execute(Command::Help).unwrap(), u);
+    }
+
+    #[test]
+    fn every_run_flag_appears_in_the_table() {
+        // the parser and the help table must not drift apart
+        let run_spec = COMMANDS.iter().find(|c| c.name == "run")
+            .unwrap();
+        let table: String = run_spec
+            .flags
+            .iter()
+            .map(|f| f.flags)
+            .collect::<Vec<_>>()
+            .join(" ");
+        for flag in ["--bench", "--trace", "--preset", "--stat-mode",
+                     "--serialize", "--sim-threads", "--config", "-o",
+                     "--timeline", "--power", "--csv", "--stats-json",
+                     "--json", "--verbose"] {
+            assert!(table.contains(flag),
+                    "parser flag {flag} missing from COMMANDS table");
+        }
+    }
+
+    #[test]
     fn parses_stats_json_alias() {
         for flag in ["--stats-json", "--json"] {
             let cmd = parse(&sv(&["run", "--bench", "l2_lat", flag,
@@ -477,10 +746,31 @@ mod tests {
         .unwrap();
         assert!(out.contains("wrote"));
         let doc = std::fs::read_to_string(&path).unwrap();
+        assert!(doc.contains(
+            &format!("\"schema_version\":{SCHEMA_VERSION}")));
         assert!(doc.contains("\"dram_per_stream\""));
         assert!(doc.contains("\"power_per_stream_fj\""));
         assert!(doc.contains("\"dropped_responses\":0"));
+        assert!(doc.contains("\"losses\":{"));
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stats_json_and_csv_dash_write_to_stdout() {
+        let out = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "minimal".into(),
+            json: Some(PathBuf::from("-")),
+            csv: Some(PathBuf::from("-")),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(!out.contains("wrote"), "{out}");
+        assert!(out.contains(
+            &format!("{{\"schema_version\":{SCHEMA_VERSION},")));
+        assert!(out.contains(
+            &format!("# schema_version={SCHEMA_VERSION}\n\
+                      stream,access_type,outcome,count")));
     }
 
     #[test]

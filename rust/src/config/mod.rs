@@ -87,6 +87,11 @@ impl Default for SimConfig {
     }
 }
 
+/// All preset names (one source for [`SimConfig::preset`], its error
+/// text, and the CLI help surfaces — mirrors `workloads::BENCHES`).
+pub const PRESETS: [&str; 3] =
+    ["sm7_titanv", "sm7_titanv_mini", "minimal"];
+
 impl SimConfig {
     /// Look up a preset by name.
     pub fn preset(name: &str) -> Result<Self> {
@@ -94,9 +99,8 @@ impl SimConfig {
             "sm7_titanv" => Ok(presets::sm7_titanv()),
             "sm7_titanv_mini" => Ok(presets::sm7_titanv_mini()),
             "minimal" => Ok(presets::minimal()),
-            other => bail!(
-                "unknown preset '{other}' (have: sm7_titanv, \
-                 sm7_titanv_mini, minimal)"),
+            other => bail!("unknown preset '{other}' (have: {})",
+                           PRESETS.join(", ")),
         }
     }
 
@@ -326,7 +330,7 @@ mod tests {
 
     #[test]
     fn presets_validate() {
-        for name in ["sm7_titanv", "sm7_titanv_mini", "minimal"] {
+        for name in PRESETS {
             let c = SimConfig::preset(name).unwrap();
             c.validate().unwrap();
             assert_eq!(c.preset, name);

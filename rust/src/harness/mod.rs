@@ -20,19 +20,21 @@ pub mod figure;
 
 use anyhow::{Context, Result};
 
+use crate::api::{SimBuilder, Snapshot};
 use crate::cache::access::{AccessOutcome, AccessType};
 use crate::config::SimConfig;
-use crate::sim::{GpuSim, GpuStats};
 use crate::stats::{StatDomain, StatMode, StatTable};
 use crate::workloads::GeneratedWorkload;
 
 pub use figure::FigureData;
 
-/// One simulation's outcome under a label.
+/// One simulation's outcome under a label. `stats` is a final
+/// [`Snapshot`] — every read below goes through the facade's typed
+/// views, never through simulator internals.
 #[derive(Debug)]
 pub struct RunResult {
     pub label: String,
-    pub stats: GpuStats,
+    pub stats: Snapshot,
     pub timeline_csv: String,
     pub gantt: String,
 }
@@ -52,18 +54,23 @@ pub struct ThreeWay {
 
 fn run_one(label: &str, base: &SimConfig, mode: StatMode,
            serialized: bool, g: &GeneratedWorkload) -> Result<RunResult> {
-    let mut cfg = base.clone();
-    cfg.stat_mode = mode;
-    cfg.serialize_streams = serialized;
-    let mut sim = GpuSim::new(cfg)?;
-    sim.enqueue_workload(&g.workload)?;
-    sim.run().with_context(|| format!("running config '{label}'"))?;
-    let gantt = sim.render_timeline(72);
-    let timeline_csv =
-        crate::timeline::to_csv(&sim.stats().kernel_times);
-    // move stats out of the sim
-    let stats = std::mem::replace(
-        &mut *sim.stats_mut(), GpuStats::new(mode));
+    let mut session = SimBuilder::from_config(base.clone())
+        .stat_mode(mode)
+        .serialize_streams(serialized)
+        .label(label)
+        .build()
+        .with_context(|| format!("building config '{label}'"))?;
+    // enqueue by reference — no per-config deep copy of the trace
+    session
+        .enqueue(&g.workload)
+        .with_context(|| format!("enqueueing '{label}'"))?;
+    session
+        .run_to_idle()
+        .with_context(|| format!("running config '{label}'"))?;
+    // the session is finished — move the stats out, don't clone them
+    let stats = session.into_snapshot();
+    let gantt = stats.render_timeline(72);
+    let timeline_csv = crate::timeline::to_csv(stats.kernel_times());
     Ok(RunResult { label: label.into(), stats, timeline_csv, gantt })
 }
 
@@ -113,16 +120,16 @@ impl ThreeWay {
         // 1b. the same Σ-invariant in the engine's extension domains
         // (DRAM, interconnect, power) — the unified-engine guarantee
         for d in [StatDomain::Dram, StatDomain::Icnt, StatDomain::Power] {
-            let tip_total = self.tip.stats.engine.domain_total(d);
-            let exact_total = self.exact.stats.engine.domain_total(d);
+            let tip_total = self.tip.stats.domain_total(d);
+            let exact_total = self.exact.stats.domain_total(d);
             push(&format!("sum_tip_equals_exact_{}", d.name()),
                  tip_total == exact_total,
                  format!("tip Σ={tip_total} exact={exact_total}"));
         }
 
         // 1c. no memory response was ever dropped for lack of a
-        // return path
-        let dropped_resp = self.tip.stats.engine.dropped_responses();
+        // return path (read from the unified loss report)
+        let dropped_resp = self.tip.stats.losses().dropped_responses;
         push("no_dropped_responses", dropped_resp == 0,
              format!("dropped={dropped_resp}"));
 
@@ -179,11 +186,11 @@ impl ThreeWay {
 
         // 5. timeline: concurrent overlaps, serialized doesn't
         let conc_overlap =
-            self.tip.stats.kernel_times.cross_stream_overlaps();
+            self.tip.stats.kernel_times().cross_stream_overlaps();
         let ser_overlap = self
             .tip_serialized
             .stats
-            .kernel_times
+            .kernel_times()
             .cross_stream_overlaps();
         let multi_stream = g.workload.streams().len() > 1;
         push("serialized_never_overlaps", ser_overlap == 0,

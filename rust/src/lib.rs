@@ -12,8 +12,41 @@
 //! under-counted. The fix re-keys every stat container by `streamID` and
 //! threads the stream id through the whole simulator.
 //!
+//! # Quickstart — the `api` facade
+//!
+//! [`api`] is the single supported way to drive the simulator and read
+//! its statistics. Build a session, run it, ask per-stream questions:
+//!
+//! ```no_run
+//! use streamsim::api::{SimBuilder, StatDomain, StatMode};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let mut session = SimBuilder::preset("sm7_titanv_mini")
+//!         .stat_mode(StatMode::PerStream) // the paper's `tip`
+//!         .bench("l2_lat")                // §5.1, 4 streams
+//!         .build()?;                      // typed ApiError on misuse
+//!     session.run_to_idle()?;
+//!     let snap = session.snapshot();      // deep copy, also live
+//!     for (stream, n) in snap.per_stream(StatDomain::L2) {
+//!         println!("stream {stream}: {n} L2 accesses");
+//!     }
+//!     println!("{}", snap.to_json());     // schema_version'd document
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Snapshots can also be taken **mid-run**, between steps
+//! (`session.step()` / `session.run_until_kernels_done(n)`), with
+//! snapshot-at-cycle semantics; [`api::StatsQuery`] selects by stream,
+//! kernel, domain, access type/outcome and pinned window; and
+//! [`api::BatchRunner`] fans N independent sessions over a bounded
+//! worker pool. See `examples/quickstart.rs` for the narrated tour.
+//!
 //! Layout (see DESIGN.md for the full inventory):
 //!
+//! * [`api`] — **the facade**: `SimBuilder`/`SimSession` lifecycle,
+//!   typed `ApiError`, live `Snapshot`/`StatsQuery` reads, the
+//!   versioned result-document schema, `BatchRunner`.
 //! * [`config`] — Accel-Sim-style configuration system + presets.
 //! * [`trace`] — `kernelslist.g`-compatible trace model and parsers.
 //! * [`workloads`] — generators for the paper's §5 benchmarks.
@@ -25,16 +58,22 @@
 //! * [`stats`] — **the contribution**: the unified per-stream
 //!   [`stats::StatsEngine`] (one sink for L1/L2/DRAM/interconnect/power
 //!   counters, dense interned stream slots, per-core shards), kernel
-//!   launch/exit cycle tracking, Accel-Sim-format printers.
+//!   launch/exit cycle tracking, Accel-Sim-format printers, the
+//!   versioned JSON/CSV exporters behind the facade.
 //! * [`timeline`] — per-stream kernel timelines (the paper's figures).
-//! * [`sim`] — the top-level [`sim::GpuSim`] clock loop and the
+//! * [`sim`] — the [`sim::GpuSim`] clock loop and the
 //!   [`sim::parallel`] sharded worker pool behind `--sim-threads`
 //!   (per-stream/exact stats bit-identical for any thread count).
-//! * [`harness`] — tip / clean / tip_serialized comparison harness.
+//!   Application code drives it through [`api`], not directly.
+//! * [`harness`] — tip / clean / tip_serialized comparison harness,
+//!   built on the facade (also re-exported from [`api`]).
+//! * [`cli`] — the `streamsim` command-line surface, a thin shell over
+//!   [`api`] (per-subcommand help is generated from one flag table).
 //! * [`runtime`], [`functional`] — PJRT execution of the AOT-compiled
 //!   JAX/Pallas artifacts (functional layer; Python never runs here).
 //! * [`util`] — offline-friendly helpers (PRNG, micro-bench, proptest-lite).
 
+pub mod api;
 pub mod cache;
 pub mod cli;
 pub mod config;

@@ -51,6 +51,11 @@ use crate::Cycle;
 /// Maximum kernels resident on the GPU at once (`can_start_kernel`).
 const MAX_RUNNING_KERNELS: usize = 32;
 
+/// Stable prefix of the `max_cycles` safety-valve error — the typed
+/// marker `api::ApiError::from_run` matches on (never reworded
+/// without updating that mapping).
+pub(crate) const MAX_CYCLES_ERR: &str = "simulation exceeded max_cycles";
+
 /// The simulator.
 pub struct GpuSim {
     cfg: SimConfig,
@@ -72,8 +77,9 @@ pub struct GpuSim {
     dispatch_rr: usize,
     /// TBs retired during the last core phase (chunk/core-id order).
     finished_scratch: Vec<crate::core::FinishedTb>,
-    /// Echo kernel launch/exit lines to stdout.
-    pub verbose: bool,
+    /// Echo kernel launch/exit lines to stdout
+    /// ([`GpuSim::set_verbose`]).
+    verbose: bool,
 }
 
 impl GpuSim {
@@ -127,6 +133,16 @@ impl GpuSim {
     /// Effective worker-thread count (clean mode pins this to 1).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Current simulation cycle (valid between steps, mid-run).
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    /// Echo kernel launch/exit lines to stdout.
+    pub fn set_verbose(&mut self, verbose: bool) {
+        self.verbose = verbose;
     }
 
     /// Clean mode needs inc-time central admission (ordered guard).
@@ -203,9 +219,12 @@ impl GpuSim {
              ctrl: Option<&parallel::PoolCtrl>) -> Result<()> {
         while !self.work_drained(chunks) {
             self.step_on(chunks, ctrl)?;
-            if self.now >= self.cfg.max_cycles {
-                bail!("simulation exceeded max_cycles = {} \
-                       (queue={}, running={})",
+            // same guard as GpuSim::step: a run whose work drains
+            // exactly at the limit completes, stepped or pooled
+            if self.now >= self.cfg.max_cycles
+                && !self.work_drained(chunks)
+            {
+                bail!("{MAX_CYCLES_ERR} = {} (queue={}, running={})",
                       self.cfg.max_cycles, self.queue.len(),
                       self.running.len());
             }
@@ -230,11 +249,20 @@ impl GpuSim {
 
     /// One clock tick (inline / sequential execution of the phased
     /// loop — [`GpuSim::run`] drives the same function with a pool).
+    /// Enforces the same `max_cycles` safety valve as the drive loop,
+    /// so externally-stepped simulations cannot spin forever on a
+    /// wedged workload.
     pub fn step(&mut self) -> Result<()> {
         let chunks = std::mem::take(&mut self.chunks);
         let r = self.step_on(&chunks, None);
         self.chunks = chunks;
-        r
+        r?;
+        if self.now >= self.cfg.max_cycles && !self.idle() {
+            bail!("{MAX_CYCLES_ERR} = {} (queue={}, running={})",
+                  self.cfg.max_cycles, self.queue.len(),
+                  self.running.len());
+        }
+        Ok(())
     }
 
     /// One clock tick over `chunks`: sequential launch/dispatch, the
@@ -456,17 +484,9 @@ impl GpuSim {
         self.stats.kernels_done += 1;
 
         self.absorb_shards(chunks);
-        let mut log = String::new();
-        log.push_str(&format!(
-            "kernel '{}' uid {} finished on stream {}\n",
-            k.name, k.uid, k.stream_id));
-        log.push_str(&stat_print::print_kernel_time(
-            &self.stats.kernel_times, k.stream_id, k.uid));
-        log.push_str(&stat_print::print_stats(
-            self.stats.l1(), k.stream_id,
-            "Total_core_cache_stats_breakdown"));
-        log.push_str(&stat_print::print_stats(
-            self.stats.l2(), k.stream_id, "L2_cache_stats_breakdown"));
+        let log = stat_print::kernel_exit_block(
+            &k.name, k.uid, k.stream_id, &self.stats.kernel_times,
+            self.stats.l1(), self.stats.l2());
         if self.verbose {
             print!("{log}");
         }
@@ -509,10 +529,23 @@ impl GpuSim {
         &self.stats
     }
 
-    /// Mutable stats access (the harness moves results out of finished
-    /// simulations).
-    pub fn stats_mut(&mut self) -> &mut GpuStats {
+    /// Mutable stats access (the api facade moves results out of
+    /// finished simulations; external consumers go through
+    /// `streamsim::api`).
+    pub(crate) fn stats_mut(&mut self) -> &mut GpuStats {
         &mut self.stats
+    }
+
+    /// Stats with every resident worker shard absorbed and the cycle
+    /// counter stamped — the facade's snapshot-at-cycle read point.
+    /// Valid between steps, mid-run: absorbing early is the same
+    /// cell-wise addition the kernel-exit merge would perform later
+    /// (fixed core-id then partition-id order), so it cannot change
+    /// any final count, and no guard or per-window state is touched.
+    pub fn snapshot_stats(&mut self) -> &GpuStats {
+        self.absorb_resident_shards();
+        self.stats.total_cycles = self.now;
+        &self.stats
     }
 
     /// ASCII timeline of the finished simulation.

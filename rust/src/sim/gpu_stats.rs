@@ -8,8 +8,10 @@ use crate::stats::{CacheView, KernelTimeTracker, StatDomain, StatMode,
                    StatsEngine};
 use crate::Cycle;
 
-/// Everything the simulator measures in one place.
-#[derive(Debug)]
+/// Everything the simulator measures in one place. `Clone` is a deep
+/// copy — the api facade's live `Snapshot` is exactly such a clone
+/// taken between clock steps.
+#[derive(Debug, Clone)]
 pub struct GpuStats {
     /// The unified per-stream statistics sink (L1, L2, DRAM,
     /// interconnect, power).

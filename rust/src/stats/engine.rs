@@ -230,7 +230,7 @@ struct CacheSlot {
 }
 
 /// A full `(type, outcome)` cube domain (L1, L2), slot-indexed.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 struct CacheDomain {
     slots: Vec<CacheSlot>,
     guard: CycleGuard,
@@ -259,7 +259,7 @@ struct ScalarSlot {
 }
 
 /// A per-stream scalar counter domain, slot-indexed.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 struct ScalarDomain {
     slots: Vec<ScalarSlot>,
 }
@@ -304,7 +304,7 @@ impl Default for PowerSlot {
 }
 
 /// The per-stream energy domain, slot-indexed.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 struct PowerDomain {
     slots: Vec<PowerSlot>,
 }
@@ -626,8 +626,39 @@ impl<'a> CacheView<'a> {
     }
 }
 
+/// Every way a recorded event can fail to appear in (or disappear
+/// from) the serviced-outcome tables, gathered from one place so the
+/// print path and the export path cannot disagree (they used to sum
+/// fail tables independently and read `dropped()` per-view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LossReport {
+    /// Memory responses dropped for lack of a return path (should
+    /// stay 0; the PR-1 routing-bugfix counter).
+    pub dropped_responses: u64,
+    /// Increments lost to the clean-mode same-cycle guard, L1 domain.
+    pub guard_dropped_l1: u64,
+    /// Increments lost to the clean-mode same-cycle guard, L2 domain.
+    pub guard_dropped_l2: u64,
+    /// Total L1 reservation-failure (fail-table) entries, all streams.
+    pub fail_l1: u64,
+    /// Total L2 reservation-failure (fail-table) entries, all streams.
+    pub fail_l2: u64,
+}
+
+impl LossReport {
+    /// Clean-mode guard losses over both cache domains.
+    pub fn guard_dropped_total(&self) -> u64 {
+        self.guard_dropped_l1 + self.guard_dropped_l2
+    }
+
+    /// Fail-table entries over both cache domains.
+    pub fn fail_total(&self) -> u64 {
+        self.fail_l1 + self.fail_l2
+    }
+}
+
 /// The unified statistics sink.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct StatsEngine {
     mode: StatMode,
     intern: StreamIntern,
@@ -1015,6 +1046,25 @@ impl StatsEngine {
     /// Responses dropped for lack of a return path (should be 0).
     pub fn dropped_responses(&self) -> u64 {
         self.dropped_responses
+    }
+
+    /// The single source of truth for every loss/fail counter — the
+    /// dropped-response count, the clean-mode guard drops per cache
+    /// domain, and the fail-table totals. Printers and exporters must
+    /// read this (not re-sum views) so their numbers cannot diverge.
+    /// For L1 fail totals to include still-sharded increments, callers
+    /// snapshotting mid-run should flush/absorb first (the facade's
+    /// snapshot path does).
+    pub fn loss_report(&self) -> LossReport {
+        LossReport {
+            dropped_responses: self.dropped_responses,
+            guard_dropped_l1: self.l1.dropped,
+            guard_dropped_l2: self.l2.dropped,
+            fail_l1: self.cache(StatDomain::L1).total_fail_table()
+                .total(),
+            fail_l2: self.cache(StatDomain::L2).total_fail_table()
+                .total(),
+        }
     }
 
     /// View of a cache domain. Panics on non-cache domains.
@@ -1457,6 +1507,45 @@ mod tests {
         e.note_dropped_response();
         e.note_dropped_response();
         assert_eq!(e.dropped_responses(), 2);
+    }
+
+    #[test]
+    fn loss_report_unifies_drop_and_fail_counters() {
+        let mut e = StatsEngine::new(StatMode::AggregateBuggy);
+        e.inc(L2, 1, GR, HIT, 10);
+        e.inc(L2, 2, GR, HIT, 10); // guard-dropped (L2)
+        e.inc_fail(L1, 1, GR, FailOutcome::MissQueueFull, 11);
+        e.inc_fail(L2, 1, GR, FailOutcome::MshrEntryFail, 11);
+        e.inc_fail(L2, 2, GR, FailOutcome::MshrEntryFail, 12);
+        e.note_dropped_response();
+        let r = e.loss_report();
+        assert_eq!(r.dropped_responses, 1);
+        assert_eq!(r.guard_dropped_l1, 0);
+        assert_eq!(r.guard_dropped_l2, 1);
+        assert_eq!(r.fail_l1, 1);
+        assert_eq!(r.fail_l2, 2);
+        assert_eq!(r.guard_dropped_total(), 1);
+        assert_eq!(r.fail_total(), 3);
+        // the report agrees with the per-view numbers by construction
+        assert_eq!(r.guard_dropped_l2, e.cache(L2).dropped());
+        assert_eq!(r.fail_l2, e.cache(L2).total_fail_table().total());
+    }
+
+    #[test]
+    fn engine_clone_is_a_deep_independent_copy() {
+        // the facade's live Snapshot relies on this: mutating the
+        // original after a clone must not change the clone
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        e.inc(L2, 1, GR, HIT, 1);
+        e.inc_dram(1);
+        let snap = e.clone();
+        e.inc(L2, 1, GR, HIT, 2);
+        e.inc_dram(1);
+        e.inc(L2, 2, GW, MISS, 3);
+        assert_eq!(snap.cache(L2).get(1, GR, HIT), 1);
+        assert_eq!(snap.dram_accesses(1), 1);
+        assert_eq!(snap.cache(L2).get(2, GW, MISS), 0);
+        assert_eq!(e.cache(L2).get(1, GR, HIT), 2);
     }
 
     #[test]

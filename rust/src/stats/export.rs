@@ -1,15 +1,34 @@
-//! JSON export of full simulation results — the machine-readable
+//! JSON/CSV export of full simulation results — the machine-readable
 //! counterpart of the §4 text breakdowns (what the paper's `graph.py`
 //! would consume today). Hand-rolled writer (no serde offline,
 //! DESIGN.md §7). Everything is read from the unified
 //! [`crate::stats::StatsEngine`]: per-stream stat cubes, kernel
 //! windows, and the §6 extension domains (DRAM, interconnect, power).
+//!
+//! # Schema versioning
+//!
+//! [`to_json_versioned`] is **the** serializer: `--stats-json`, the
+//! CSV path header and `api::Snapshot::to_json` all go through it (or
+//! [`to_csv_versioned`]), and its documents carry a top-level
+//! `schema_version` field (currently [`SCHEMA_VERSION`]). The PR-1
+//! document shape (no `schema_version`, no `losses`) remains available
+//! as the compatibility shim [`to_json`]; both serializers share one
+//! body writer, so the PR-1 key set is a strict subset of the
+//! versioned one and the two can never disagree on shared fields. The
+//! contract is documented in `rust/tests/golden/README.md` and pinned
+//! by the `schema_v2_keys.txt` golden + `scripts/ci.sh api`.
 
 use std::fmt::Write as _;
 
 use crate::sim::GpuStats;
-use crate::stats::engine::{CacheView, StatDomain, StatsEngine};
+use crate::stats::engine::{CacheView, LossReport, StatDomain,
+                           StatsEngine};
 use crate::StreamId;
+
+/// Version of the machine-readable result document. Bump on any
+/// top-level key addition/removal/retyping and update the committed
+/// golden key set (`rust/tests/golden/schema_v2_keys.txt`).
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// Escape a JSON string value.
 fn esc(s: &str) -> String {
@@ -69,10 +88,14 @@ fn per_stream_json(per_stream: &[(StreamId, u64)]) -> String {
     out
 }
 
-/// Full result document for one simulation.
-pub fn to_json(label: &str, stats: &GpuStats) -> String {
+/// The PR-1-era field sequence, shared verbatim by the compatibility
+/// shim and the versioned document (one body writer — the two shapes
+/// cannot drift apart on these fields). `losses` is passed in so the
+/// top-level `dropped_responses` field and the versioned `losses`
+/// object are read from the same [`LossReport`].
+fn body(label: &str, stats: &GpuStats, losses: &LossReport) -> String {
     let engine = &stats.engine;
-    let mut out = String::from("{");
+    let mut out = String::new();
     let _ = write!(out, "\"config\":\"{}\",", esc(label));
     let _ = write!(out, "\"total_cycles\":{},", stats.total_cycles);
     let _ = write!(out, "\"kernels_done\":{},", stats.kernels_done);
@@ -103,9 +126,89 @@ pub fn to_json(label: &str, stats: &GpuStats) -> String {
         out, "\"power_per_stream_fj\":{},",
         per_stream_json(&engine.per_stream(StatDomain::Power)));
     let _ = write!(out, "\"dropped_responses\":{}",
-                   engine.dropped_responses());
+                   losses.dropped_responses);
+    out
+}
+
+/// Full result document for one simulation, **PR-1 shape** (no
+/// `schema_version`, no `losses`) — the compatibility shim for
+/// consumers written against the original document. New consumers
+/// should read [`to_json_versioned`].
+pub fn to_json(label: &str, stats: &GpuStats) -> String {
+    let losses = stats.engine.loss_report();
+    format!("{{{}}}", body(label, stats, &losses))
+}
+
+/// Full result document, current schema: the PR-1 fields plus
+/// `schema_version`, `kernels_launched`, and the unified `losses`
+/// object (dropped responses, clean-mode guard drops and fail-table
+/// totals, all read from one [`LossReport`]).
+pub fn to_json_versioned(label: &str, stats: &GpuStats) -> String {
+    let losses = stats.engine.loss_report();
+    let mut out = String::from("{");
+    let _ = write!(out, "\"schema_version\":{SCHEMA_VERSION},");
+    out.push_str(&body(label, stats, &losses));
+    let _ = write!(out, ",\"kernels_launched\":{}",
+                   stats.kernels_launched);
+    let _ = write!(
+        out,
+        ",\"losses\":{{\"dropped_responses\":{},\
+         \"guard_dropped_l1\":{},\"guard_dropped_l2\":{},\
+         \"fail_l1\":{},\"fail_l2\":{}}}",
+        losses.dropped_responses, losses.guard_dropped_l1,
+        losses.guard_dropped_l2, losses.fail_l1, losses.fail_l2);
     out.push('}');
     out
+}
+
+/// CSV export of a cache domain with the schema header comment —
+/// the CSV counterpart of [`to_json_versioned`] (same version
+/// constant, same view).
+pub fn to_csv_versioned(view: CacheView<'_>) -> String {
+    format!("# schema_version={SCHEMA_VERSION}\n{}",
+            crate::stats::print::to_csv(view))
+}
+
+/// Top-level keys of a result document, in document order — the
+/// schema-drift probe used by the golden test and `scripts/ci.sh api`.
+/// (Hand-rolled scanner: depth-1 string keys immediately followed by
+/// `:`, which is exactly what our writer emits.)
+pub fn top_level_keys(doc: &str) -> Vec<String> {
+    let mut keys = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut cur = String::new();
+    let mut chars = doc.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_str {
+            match c {
+                '\\' => {
+                    cur.push(c);
+                    if let Some(n) = chars.next() {
+                        cur.push(n);
+                    }
+                }
+                '"' => {
+                    in_str = false;
+                    if depth == 1 && chars.peek() == Some(&':') {
+                        keys.push(cur.clone());
+                    }
+                }
+                _ => cur.push(c),
+            }
+            continue;
+        }
+        match c {
+            '"' => {
+                in_str = true;
+                cur.clear();
+            }
+            '{' | '[' => depth += 1,
+            '}' | ']' => depth -= 1,
+            _ => {}
+        }
+    }
+    keys
 }
 
 #[cfg(test)]
@@ -167,6 +270,56 @@ mod tests {
                 &format!("{{\"stream\":{stream},\"uid\":{uid},")),
                 "kernel {uid} missing");
         }
+    }
+
+    #[test]
+    fn versioned_doc_is_a_superset_of_pr1_shape() {
+        let (sim, pr1) = run();
+        let v2 = to_json_versioned("tip", sim.stats());
+        assert!(v2.starts_with(
+            &format!("{{\"schema_version\":{SCHEMA_VERSION},")), "{v2}");
+        // every PR-1 top-level key survives, in the same order, with
+        // the same serialized section bytes (shared body writer)
+        let pr1_keys = top_level_keys(&pr1);
+        let v2_keys = top_level_keys(&v2);
+        assert_eq!(
+            pr1_keys,
+            ["config", "total_cycles", "kernels_done", "l1", "l2",
+             "kernels", "dram_per_stream", "icnt_per_stream",
+             "power_per_stream_fj", "dropped_responses"]
+                .map(String::from));
+        for k in &pr1_keys {
+            assert!(v2_keys.contains(k), "v2 lost PR-1 key {k}");
+        }
+        // the PR-1 body is embedded verbatim
+        let body = pr1.strip_prefix('{').unwrap()
+            .strip_suffix('}').unwrap();
+        assert!(v2.contains(body),
+                "shared body drifted between shapes");
+        // the versioned additions
+        for k in ["schema_version", "kernels_launched", "losses"] {
+            assert!(v2_keys.iter().any(|x| x == k), "missing {k}");
+        }
+        assert!(v2.contains("\"losses\":{\"dropped_responses\":0,"));
+    }
+
+    #[test]
+    fn top_level_key_scanner_ignores_nested_keys() {
+        let keys = top_level_keys(
+            "{\"a\":1,\"b\":{\"inner\":2},\"c\":[{\"deep\":3}],\
+             \"d\":\"x\"}");
+        assert_eq!(keys, ["a", "b", "c", "d"].map(String::from));
+    }
+
+    #[test]
+    fn csv_carries_schema_header() {
+        let (sim, _) = run();
+        let csv = to_csv_versioned(sim.stats().l2());
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(),
+                   format!("# schema_version={SCHEMA_VERSION}"));
+        assert_eq!(lines.next().unwrap(),
+                   "stream,access_type,outcome,count");
     }
 
     #[test]

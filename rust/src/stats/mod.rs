@@ -73,8 +73,8 @@ pub mod print;
 pub mod table;
 
 pub use engine::{CacheView, CoreSink, CoreStatShard, IcntDir,
-                 PartitionSink, PartitionStatShard, StatDomain, StatMode,
-                 StatsEngine, StreamIntern};
+                 LossReport, PartitionSink, PartitionStatShard,
+                 StatDomain, StatMode, StatsEngine, StreamIntern};
 pub use kernel_time::{KernelTime, KernelTimeTracker};
 pub use power::{EnergyModel, PowerComponent, PowerStats, StreamEnergy};
 pub use table::{FailTable, StatTable};

@@ -103,6 +103,26 @@ pub fn print_kernel_time(times: &KernelTimeTracker, stream: StreamId,
     }
 }
 
+/// The §3.1 kernel-exit block: header line, per-kernel time line, then
+/// the exiting stream's L1/L2 breakdowns. One renderer, two callers —
+/// the simulator's exit log ([`crate::sim::GpuSim`]) and the facade's
+/// live `Snapshot::render_kernel_exit` — so a snapshot taken at the
+/// same exit point byte-matches the recorded log entry.
+pub fn kernel_exit_block(name: &str, uid: crate::KernelUid,
+                         stream: StreamId, times: &KernelTimeTracker,
+                         l1: CacheView<'_>, l2: CacheView<'_>)
+    -> String {
+    let mut out = String::new();
+    let _ = writeln!(out,
+                     "kernel '{name}' uid {uid} finished on stream \
+                      {stream}");
+    out.push_str(&print_kernel_time(times, stream, uid));
+    out.push_str(&print_stats(l1, stream,
+                              "Total_core_cache_stats_breakdown"));
+    out.push_str(&print_stats(l2, stream, "L2_cache_stats_breakdown"));
+    out
+}
+
 /// CSV export of a cache domain: `stream,access_type,outcome,count`.
 /// (The paper's `graph.py` replacement — see `harness::figure`.)
 pub fn to_csv(view: CacheView<'_>) -> String {

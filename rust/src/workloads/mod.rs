@@ -62,28 +62,44 @@ pub struct GeneratedWorkload {
     pub expected: Expected,
 }
 
-/// Look up a generator by benchmark name (CLI surface).
-pub fn generate(bench: &str) -> anyhow::Result<GeneratedWorkload> {
+/// Canonical benchmark name for `bench` (resolving the paper-source
+/// aliases), or `None` if unknown — the one name table behind
+/// [`generate`], the CLI help surfaces and the api facade's
+/// `unknown_bench` mapping.
+pub fn canonical_name(bench: &str) -> Option<&'static str> {
     match bench {
-        "l2_lat" | "l2_lat_4stream" => {
+        "l2_lat" | "l2_lat_4stream" => Some("l2_lat"),
+        "bench1" | "benchmark_1_stream" => Some("bench1"),
+        "bench3" | "benchmark_3_stream" => Some("bench3"),
+        "bench1_mini" => Some("bench1_mini"),
+        "deepbench" | "deepbench_inference" => Some("deepbench"),
+        "deepbench_mini" => Some("deepbench_mini"),
+        _ => None,
+    }
+}
+
+/// Look up a generator by benchmark name (CLI/api surface).
+pub fn generate(bench: &str) -> anyhow::Result<GeneratedWorkload> {
+    match canonical_name(bench) {
+        Some("l2_lat") => {
             Ok(l2_lat::generate(&l2_lat::Params::default()))
         }
-        "bench1" | "benchmark_1_stream" => Ok(stream_bench::generate(
+        Some("bench1") => Ok(stream_bench::generate(
             &stream_bench::Params::benchmark_1_stream())),
-        "bench3" | "benchmark_3_stream" => Ok(stream_bench::generate(
+        Some("bench3") => Ok(stream_bench::generate(
             &stream_bench::Params::benchmark_3_stream())),
-        "bench1_mini" => {
+        Some("bench1_mini") => {
             Ok(stream_bench::generate(&stream_bench::Params::mini()))
         }
-        "deepbench" | "deepbench_inference" => {
+        Some("deepbench") => {
             Ok(deepbench::generate(&deepbench::Params::default()))
         }
-        "deepbench_mini" => {
+        Some("deepbench_mini") => {
             Ok(deepbench::generate(&deepbench::Params::mini()))
         }
-        other => anyhow::bail!(
-            "unknown benchmark '{other}' (have: l2_lat, bench1, bench3, \
-             bench1_mini, deepbench, deepbench_mini)"),
+        _ => anyhow::bail!(
+            "unknown benchmark '{bench}' (have: {})",
+            BENCHES.join(", ")),
     }
 }
 
@@ -105,5 +121,20 @@ mod tests {
             assert!(!g.workload.kernels.is_empty(), "{b} has no kernels");
         }
         assert!(generate("bogus").is_err());
+    }
+
+    #[test]
+    fn canonical_names_cover_every_bench_and_alias() {
+        for b in BENCHES {
+            assert_eq!(canonical_name(b), Some(b));
+        }
+        assert_eq!(canonical_name("l2_lat_4stream"), Some("l2_lat"));
+        assert_eq!(canonical_name("benchmark_1_stream"),
+                   Some("bench1"));
+        assert_eq!(canonical_name("benchmark_3_stream"),
+                   Some("bench3"));
+        assert_eq!(canonical_name("deepbench_inference"),
+                   Some("deepbench"));
+        assert_eq!(canonical_name("bogus"), None);
     }
 }

@@ -1,0 +1,210 @@
+//! Integration suite for the `streamsim::api` facade: CLI↔builder
+//! equivalence, live snapshot-at-kernel-exit byte-identity, the
+//! versioned schema contract (key-set golden + PR-1 compatibility),
+//! and batch execution.
+
+use streamsim::api::{BatchRunner, SimBuilder, StatDomain, StatMode,
+                     StatsQuery, SCHEMA_VERSION};
+use streamsim::api::{top_level_keys, workloads};
+use streamsim::cli::{self, Command, RunArgs};
+
+fn sv(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+/// CLI-args → SimBuilder round trip, end to end: the document the CLI
+/// writes for a flag set is byte-identical to the document the
+/// equivalent facade session produces.
+#[test]
+fn cli_run_and_facade_session_produce_identical_documents() {
+    let path = std::env::temp_dir().join("streamsim_api_roundtrip.json");
+    let _ = std::fs::remove_file(&path);
+    let argv = sv(&["run", "--bench", "l2_lat", "--preset", "minimal",
+                    "--stat-mode", "tip", "--sim-threads", "1",
+                    "-o", "l2_latency", "99",
+                    "--stats-json", path.to_str().unwrap()]);
+    let cmd = cli::parse(&argv).unwrap();
+    cli::execute(cmd.clone()).unwrap();
+    let cli_doc = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+
+    let Command::Run(a) = cmd else { panic!() };
+    let mut session = a.to_builder().build().unwrap();
+    session.run_to_idle().unwrap();
+    assert_eq!(session.snapshot().to_json(), cli_doc,
+               "CLI and facade diverged for the same flags");
+}
+
+/// Typed-error mapping at the CLI boundary: the same bad inputs that
+/// used to produce stringly errors now round-trip through ApiError.
+#[test]
+fn api_error_variants_surface_through_cli_execute() {
+    let run = |preset: &str, bench: &str| {
+        cli::execute(Command::Run(RunArgs {
+            bench: Some(bench.into()),
+            preset: preset.into(),
+            ..RunArgs::default()
+        }))
+    };
+    let e = run("nope", "l2_lat").unwrap_err().to_string();
+    assert!(e.starts_with("unknown preset 'nope'"), "{e}");
+    assert!(e.contains("have:"), "candidate list lost: {e}");
+    let e = run("minimal", "nope").unwrap_err().to_string();
+    assert!(e.starts_with("unknown benchmark 'nope'"), "{e}");
+    assert!(e.contains("have:"), "candidate list lost: {e}");
+}
+
+/// The acceptance check: a Snapshot taken live, mid-run, at a kernel
+/// exit byte-matches the exit print the full run records for that
+/// same kernel-exit point — for both tip and exact modes.
+#[test]
+fn live_snapshot_at_kernel_exit_matches_final_exit_print() {
+    for mode in [StatMode::PerStream, StatMode::AggregateExact] {
+        let g = workloads::generate("bench1_mini").unwrap();
+        let mut session = SimBuilder::preset("sm7_titanv_mini")
+            .stat_mode(mode)
+            .workload(g.workload.clone())
+            .build()
+            .unwrap();
+        session.run_until_kernels_done(1).unwrap();
+        assert!(!session.idle(), "mid-run by construction");
+        let live = session.snapshot();
+        assert!(live.kernels_done() >= 1);
+
+        // re-render the exit block of every kernel that has exited by
+        // the snapshot point (uid assignment is enqueue order,
+        // 1-based — GPGPU-Sim convention — so the exited kernel's
+        // trace is kernels[uid-1])
+        let rendered: Vec<String> = live
+            .kernel_times()
+            .finished()
+            .iter()
+            .map(|(stream, uid, _)| {
+                let name =
+                    &g.workload.kernels[(*uid - 1) as usize].name;
+                live.render_kernel_exit(name, *stream, *uid)
+            })
+            .collect();
+
+        // run to completion; the first n recorded exit-log entries
+        // were printed at exactly the point the live snapshot captured
+        session.run_to_idle().unwrap();
+        let fin = session.snapshot();
+        assert!(fin.kernels_done() > live.kernels_done(),
+                "the live snapshot must be a true mid-run copy");
+        let mut expected: Vec<&String> =
+            fin.exit_log()[..rendered.len()].iter().collect();
+        for r in &rendered {
+            let pos = expected
+                .iter()
+                .position(|e| *e == r)
+                .unwrap_or_else(|| panic!(
+                    "mode {}: live snapshot render diverged from the \
+                     recorded exit print:\n{r}", mode.label()));
+            expected.remove(pos);
+        }
+    }
+}
+
+/// A snapshot taken at idle serializes byte-identically to a fresh
+/// end-of-run snapshot (snapshotting never perturbs state), and the
+/// pinned-window (`_pw`) views of a mid-run snapshot reflect only the
+/// still-open windows.
+#[test]
+fn snapshots_are_pure_reads() {
+    let mut session = SimBuilder::preset("minimal")
+        .bench("l2_lat")
+        .build()
+        .unwrap();
+    session.run_until_kernels_done(2).unwrap();
+    let mid = session.snapshot();
+    // taking more snapshots changes nothing
+    assert_eq!(session.snapshot().to_json(), mid.to_json());
+    // per-window counters for exited kernels' streams were cleared at
+    // exit; the cumulative view keeps them
+    let pw = mid.count(&StatsQuery::new().domain(StatDomain::L2)
+        .pinned_window());
+    let cum = mid.count(&StatsQuery::new().domain(StatDomain::L2));
+    assert!(cum > pw, "cumulative {cum} vs pw {pw}");
+    session.run_to_idle().unwrap();
+    let fin1 = session.snapshot().to_json();
+    let fin2 = session.snapshot().to_json();
+    assert_eq!(fin1, fin2);
+}
+
+/// Schema contract: the versioned document's top-level key set (and
+/// the version itself) match the committed golden
+/// (`tests/golden/schema_v2_keys.txt`). Any drift must bump
+/// SCHEMA_VERSION and rebless — see tests/golden/README.md.
+#[test]
+fn schema_key_set_matches_committed_golden() {
+    let mut session = SimBuilder::preset("minimal")
+        .bench("l2_lat")
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+    let doc = session.snapshot().to_json();
+    let mut got = vec![format!("schema_version={SCHEMA_VERSION}")];
+    got.extend(top_level_keys(&doc));
+    let got = got.join("\n") + "\n";
+
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/schema_v2_keys.txt");
+    let want = std::fs::read_to_string(&path).unwrap_or_else(|_| {
+        panic!("missing committed golden {}", path.display())
+    });
+    assert_eq!(got, want,
+               "result-document schema drifted: bump SCHEMA_VERSION \
+                and rebless tests/golden/schema_v2_keys.txt only for \
+                an intended change");
+}
+
+/// PR-1 compatibility shim: the old document shape still serializes,
+/// without version fields, and is embedded verbatim in the v2 body.
+#[test]
+fn pr1_document_shape_still_available() {
+    let mut session = SimBuilder::preset("minimal")
+        .bench("l2_lat")
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+    let snap = session.snapshot();
+    let pr1 = snap.to_pr1_json();
+    assert_eq!(
+        top_level_keys(&pr1),
+        ["config", "total_cycles", "kernels_done", "l1", "l2",
+         "kernels", "dram_per_stream", "icnt_per_stream",
+         "power_per_stream_fj", "dropped_responses"]
+            .map(String::from),
+        "PR-1 compatibility shape changed");
+    let body = pr1.strip_prefix('{').unwrap()
+        .strip_suffix('}').unwrap();
+    assert!(snap.to_json().contains(body),
+            "v2 document no longer embeds the PR-1 body");
+}
+
+/// BatchRunner end-to-end: a mixed scenario batch across the worker
+/// pool equals the same scenarios run one by one.
+#[test]
+fn batch_runner_matches_individual_sessions() {
+    let scenarios = [("l2_lat", StatMode::PerStream),
+                     ("bench1_mini", StatMode::PerStream),
+                     ("l2_lat", StatMode::AggregateExact)];
+    let jobs: Vec<SimBuilder> = scenarios
+        .iter()
+        .map(|(bench, mode)| {
+            SimBuilder::preset("minimal")
+                .stat_mode(*mode)
+                .sim_threads(1)
+                .bench(bench)
+        })
+        .collect();
+    let batch = BatchRunner::new(3).run(jobs.clone());
+    assert_eq!(batch.len(), scenarios.len());
+    for (job, result) in jobs.into_iter().zip(&batch) {
+        let mut solo = job.build().unwrap();
+        solo.run_to_idle().unwrap();
+        assert_eq!(solo.snapshot().to_json(),
+                   result.as_ref().unwrap().to_json());
+    }
+}

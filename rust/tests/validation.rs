@@ -61,9 +61,10 @@ fn fig3_benchmark_1_stream_mini() {
 
     // kernel 3 runs on stream 1 and its window overlaps stream 0's
     // kernels under concurrency (the paper's timeline)
-    assert!(tw.tip.stats.kernel_times.cross_stream_overlaps() > 0);
+    assert!(tw.tip.stats.kernel_times().cross_stream_overlaps() > 0);
     assert_eq!(
-        tw.tip_serialized.stats.kernel_times.cross_stream_overlaps(), 0);
+        tw.tip_serialized.stats.kernel_times()
+            .cross_stream_overlaps(), 0);
 
     // stream attribution: both streams present in L1 stats with the
     // analytic totals
@@ -148,7 +149,7 @@ fn kernel_time_windows_complete_and_ordered() {
     let g = workloads::generate("bench1_mini").unwrap();
     let cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
     let tw = run_three_configs(&cfg, &g).unwrap();
-    let finished = tw.tip.stats.kernel_times.finished();
+    let finished = tw.tip.stats.kernel_times().finished();
     assert_eq!(finished.len(), 4);
     // stream 0 kernels (k1, k2, k4) in order
     let s0: Vec<_> = finished.iter().filter(|(s, _, _)| *s == 0)

@@ -7,6 +7,10 @@
 #                              #   byte-compares exported stats JSON
 #                              #   across thread counts and stat modes,
 #                              #   then runs the determinism test suite
+#   scripts/ci.sh api          # + build all examples (the facade's
+#                              #   consumers) and run the JSON-schema
+#                              #   drift check against the committed
+#                              #   tests/golden/schema_v2_keys.txt
 #   scripts/ci.sh bench        # + record BENCH_stats.json (fast mode):
 #                              #   seq-vs-parallel throughput and the
 #                              #   ABL-1 per_stream_slot_indexed vs
@@ -59,6 +63,33 @@ if [[ "${1:-}" == "determinism" ]]; then
     done
     # (the determinism *test suite* already ran as part of the
     # unconditional `cargo test -q` above — no second invocation)
+fi
+
+if [[ "${1:-}" == "api" ]]; then
+    echo "== api: build every example against the facade =="
+    cargo build --release --examples
+
+    echo "== api: JSON schema drift check =="
+    BIN=target/release/streamsim
+    TMP="$(mktemp -d)"
+    trap 'rm -rf "$TMP"' EXIT
+    # '--stats-json -' appends the one-line document to stdout
+    "$BIN" run --bench l2_lat --preset minimal --stats-json - \
+        | grep '^{' > "$TMP/doc.json"
+    python3 - "$TMP/doc.json" tests/golden/schema_v2_keys.txt <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+got = ["schema_version=%d" % doc["schema_version"]] + list(doc.keys())
+want = open(sys.argv[2]).read().split()
+if got != want:
+    print("SCHEMA DRIFT (bump SCHEMA_VERSION + rebless "
+          "tests/golden/schema_v2_keys.txt for intended changes)")
+    print(" got:", got)
+    print("want:", want)
+    sys.exit(1)
+print("schema_version %d + key set match the committed golden"
+      % doc["schema_version"])
+EOF
 fi
 
 if [[ "${1:-}" == "bench" ]]; then
