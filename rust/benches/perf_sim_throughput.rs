@@ -18,10 +18,16 @@ fn sim_once(bench: &str, preset: &str, mode: StatMode) -> (u64, u64) {
 
 fn sim_once_threaded(bench: &str, preset: &str, mode: StatMode,
                      threads: u32) -> (u64, u64) {
+    sim_once_exchange(bench, preset, mode, threads, true)
+}
+
+fn sim_once_exchange(bench: &str, preset: &str, mode: StatMode,
+                     threads: u32, sharded: bool) -> (u64, u64) {
     let g = workloads::generate(bench).unwrap();
     let mut cfg = SimConfig::preset(preset).unwrap();
     cfg.stat_mode = mode;
     cfg.sim_threads = threads;
+    cfg.icnt_sharded = sharded;
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(&g.workload).unwrap();
     sim.run().unwrap();
@@ -98,6 +104,27 @@ fn main() {
     b4.report("PERF-L3: seq vs parallel core/partition loop (items = \
                GPU cycles)");
 
+    // the tentpole before/after: central (PR-2) vs sharded exchange,
+    // same commit, same workload, byte-identical stats (determinism
+    // suite) — only the wall clock differs. The 1-thread sharded
+    // case must stay within noise of 1-thread central.
+    let mut b5 = Bencher::from_env();
+    for &(sharded, label) in
+        &[(false, "central"), (true, "sharded")]
+    {
+        for threads in [1u32, 2, 4, 8] {
+            b5.bench(&format!(
+                "bench3/sm7_titanv t={threads} {label}"), || {
+                sim_once_exchange("bench3", "sm7_titanv",
+                                  StatMode::PerStream, threads,
+                                  sharded).0
+            });
+        }
+    }
+    b5.report("PERF-L3: central vs sharded icnt exchange (items = \
+               GPU cycles)");
+
     write_json(&[("cycles", &b), ("accesses_by_mode", &b2),
-                 ("titanv_full", &b3), ("parallel", &b4)]);
+                 ("titanv_full", &b3), ("parallel", &b4),
+                 ("sharded_icnt", &b5)]);
 }

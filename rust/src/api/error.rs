@@ -56,6 +56,13 @@ pub enum ApiError {
         /// The limit diagnostic (queue/running counts at the trip).
         message: String,
     },
+    /// `Snapshot::diff` was asked to subtract snapshots out of order
+    /// (the "earlier" snapshot holds counts the later one lacks, or
+    /// the snapshots come from different sessions).
+    SnapshotOrder {
+        /// Which counter went backwards.
+        message: String,
+    },
     /// An internal runtime failure (e.g. a worker thread panicked).
     Runtime {
         /// The failure description.
@@ -74,6 +81,7 @@ impl ApiError {
             ApiError::InvalidWorkload { .. } => "invalid_workload",
             ApiError::Io { .. } => "io",
             ApiError::CycleLimit { .. } => "cycle_limit",
+            ApiError::SnapshotOrder { .. } => "snapshot_order",
             ApiError::Runtime { .. } => "runtime",
         }
     }
@@ -124,6 +132,9 @@ impl fmt::Display for ApiError {
             ApiError::CycleLimit { message } => {
                 write!(f, "cycle limit: {message}")
             }
+            ApiError::SnapshotOrder { message } => {
+                write!(f, "snapshots out of order: {message}")
+            }
             ApiError::Runtime { message } => {
                 write!(f, "runtime failure: {message}")
             }
@@ -133,13 +144,96 @@ impl fmt::Display for ApiError {
 
 impl std::error::Error for ApiError {}
 
+/// Kind of a [`ConfigNote`] — the typed advisory surface next to
+/// [`ApiError`]. Advisories are conditions that are *legal* but
+/// silently change behaviour; they ride along with a successful
+/// build instead of failing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigNoteKind {
+    /// Clean (`aggregate`) stat mode pins an explicit `sim_threads >
+    /// 1` request to one worker (its same-cycle guard needs inc-time
+    /// arrival order). Previously a *silent* pin.
+    CleanModePinsThreads,
+    /// An advisory this client version has no dedicated variant for
+    /// (forward compatibility with newer config layers).
+    Other,
+}
+
+impl ConfigNoteKind {
+    /// Stable machine-readable tag (mirrors
+    /// `SimConfig::validation_warnings` keys).
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            ConfigNoteKind::CleanModePinsThreads => {
+                "clean_mode_pins_threads"
+            }
+            ConfigNoteKind::Other => "other",
+        }
+    }
+}
+
+/// A non-fatal configuration advisory produced when a session is
+/// built (`SimBuilder::build_config_with_notes`, `SimSession::notes`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigNote {
+    /// Typed advisory class.
+    pub kind: ConfigNoteKind,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl ConfigNote {
+    /// Gather the typed advisories for a resolved configuration.
+    pub fn for_config(cfg: &crate::config::SimConfig)
+        -> Vec<ConfigNote> {
+        cfg.validation_warnings()
+            .into_iter()
+            .map(|(kind, message)| ConfigNote {
+                kind: match kind {
+                    "clean_mode_pins_threads" => {
+                        ConfigNoteKind::CleanModePinsThreads
+                    }
+                    _ => ConfigNoteKind::Other,
+                },
+                message,
+            })
+            .collect()
+    }
+}
+
+impl fmt::Display for ConfigNote {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "note[{}]: {}", self.kind.as_str(), self.message)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
+    fn config_notes_are_typed_and_render() {
+        use crate::config::SimConfig;
+        let mut cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+        assert!(ConfigNote::for_config(&cfg).is_empty());
+        cfg.stat_mode = crate::stats::StatMode::AggregateBuggy;
+        cfg.sim_threads = 4;
+        let notes = ConfigNote::for_config(&cfg);
+        assert_eq!(notes.len(), 1);
+        assert_eq!(notes[0].kind,
+                   ConfigNoteKind::CleanModePinsThreads);
+        assert_eq!(notes[0].kind.as_str(), "clean_mode_pins_threads");
+        let line = notes[0].to_string();
+        assert!(line.starts_with("note[clean_mode_pins_threads]:"),
+                "{line}");
+        assert!(line.contains("pinned to 1"), "{line}");
+    }
+
+    #[test]
     fn kinds_are_stable() {
-        let cases: [(ApiError, &str); 8] = [
+        let cases: [(ApiError, &str); 9] = [
+            (ApiError::SnapshotOrder { message: "m".into() },
+             "snapshot_order"),
             (ApiError::UnknownPreset { name: "x".into() },
              "unknown_preset"),
             (ApiError::UnknownBench { name: "x".into() },

@@ -14,6 +14,10 @@
 //!   cumulative or pinned-window), answerable **live between steps**
 //!   as well as at exit; serialized through the one versioned schema
 //!   writer ([`SCHEMA_VERSION`], [`Snapshot::to_json`]).
+//!   [`Snapshot::diff`] turns two snapshots into a [`SnapshotDiff`]
+//!   of per-stream increments — cheap periodic sampling.
+//! * [`ConfigNote`] — typed non-fatal advisories recorded at build
+//!   time ([`SimSession::notes`]), e.g. the clean-mode thread pin.
 //! * [`BatchRunner`] — N independent sessions over a bounded worker
 //!   pool (input-order results, per-job error isolation).
 //!
@@ -52,8 +56,8 @@ pub mod query;
 pub mod session;
 
 pub use batch::BatchRunner;
-pub use error::ApiError;
-pub use query::{QueryRow, Snapshot, StatsQuery};
+pub use error::{ApiError, ConfigNote, ConfigNoteKind};
+pub use query::{QueryRow, Snapshot, SnapshotDiff, StatsQuery};
 pub use session::{SimBuilder, SimSession};
 
 // The versioned result-document schema (one serializer for JSON, CSV

@@ -14,6 +14,7 @@
 //! [`Snapshot::to_json`] / [`Snapshot::to_csv`] serialize through the
 //! one versioned schema writer ([`crate::stats::export`]).
 
+use crate::api::ApiError;
 use crate::cache::access::{AccessOutcome, AccessType};
 use crate::sim::GpuStats;
 use crate::stats::engine::CacheView;
@@ -273,6 +274,129 @@ impl Snapshot {
     pub fn count(&self, q: &StatsQuery) -> u64 {
         self.rows(q).iter().map(|r| r.count).sum()
     }
+
+    /// Delta of cumulative counters since `earlier` — the cheap
+    /// periodic-sampling primitive: take a snapshot every N cycles,
+    /// diff against the previous one, and ship only the increments.
+    /// For every domain, `earlier.per_stream(d) + diff.per_stream(d)
+    /// == self.per_stream(d)` cell-wise (streams first seen after
+    /// `earlier` appear with their full count). Errors with
+    /// [`ApiError::SnapshotOrder`] if any counter in `earlier`
+    /// exceeds this snapshot's (snapshots swapped, or from different
+    /// sessions).
+    pub fn diff(&self, earlier: &Snapshot)
+        -> Result<SnapshotDiff, ApiError> {
+        let sub = |name: &str, later: u64, early: u64| {
+            later.checked_sub(early).ok_or_else(|| {
+                ApiError::SnapshotOrder {
+                    message: format!(
+                        "{name} went backwards ({early} -> {later})"),
+                }
+            })
+        };
+        let cycles = sub("total_cycles", self.total_cycles(),
+                         earlier.total_cycles())?;
+        let kernels_done =
+            sub("kernels_done", self.kernels_done().into(),
+                earlier.kernels_done().into())? as u32;
+        let kernels_launched =
+            sub("kernels_launched", self.kernels_launched().into(),
+                earlier.kernels_launched().into())? as u32;
+        let mut per_domain = Vec::with_capacity(StatDomain::COUNT);
+        for d in StatDomain::ALL {
+            let early: std::collections::BTreeMap<_, _> =
+                earlier.per_stream(d).into_iter().collect();
+            let mut deltas = Vec::new();
+            let mut seen = 0usize;
+            for (s, later) in self.per_stream(d) {
+                let base = early.get(&s).copied().unwrap_or(0);
+                if early.contains_key(&s) {
+                    seen += 1;
+                }
+                // message built lazily: the success path (periodic
+                // sampling) allocates nothing per cell
+                let delta = later.checked_sub(base).ok_or_else(|| {
+                    ApiError::SnapshotOrder {
+                        message: format!(
+                            "{}[stream {}] went backwards \
+                             ({base} -> {later})",
+                            d.name(),
+                            crate::stats::StatsEngine::stream_label(s)),
+                    }
+                })?;
+                deltas.push((s, delta));
+            }
+            if seen < early.len() {
+                return Err(ApiError::SnapshotOrder {
+                    message: format!(
+                        "domain {}: earlier snapshot has streams the \
+                         later one lacks", d.name()),
+                });
+            }
+            per_domain.push(deltas);
+        }
+        Ok(SnapshotDiff {
+            cycles,
+            kernels_done,
+            kernels_launched,
+            per_domain,
+        })
+    }
+}
+
+/// The delta between two [`Snapshot`]s of one session
+/// ([`Snapshot::diff`]): per-stream cumulative-count increments for
+/// every [`StatDomain`], plus the cycle/kernel progress in between.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotDiff {
+    cycles: u64,
+    kernels_done: u32,
+    kernels_launched: u32,
+    /// Indexed parallel to [`StatDomain::ALL`].
+    per_domain: Vec<Vec<(StreamId, u64)>>,
+}
+
+impl SnapshotDiff {
+    /// Cycles elapsed between the snapshots.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Kernels retired between the snapshots.
+    pub fn kernels_done(&self) -> u32 {
+        self.kernels_done
+    }
+
+    /// Kernels launched between the snapshots.
+    pub fn kernels_launched(&self) -> u32 {
+        self.kernels_launched
+    }
+
+    /// Per-stream count increments for a domain, sorted by stream id
+    /// (every stream present in the later snapshot appears, possibly
+    /// with a 0 delta — so `base + diff` reconstructs the later
+    /// per-stream view exactly).
+    pub fn per_stream(&self, d: StatDomain) -> &[(StreamId, u64)] {
+        let idx = StatDomain::ALL
+            .iter()
+            .position(|x| *x == d)
+            .expect("domain in ALL");
+        &self.per_domain[idx]
+    }
+
+    /// Total increment over all streams for a domain.
+    pub fn domain_total(&self, d: StatDomain) -> u64 {
+        self.per_stream(d).iter().map(|(_, n)| n).sum()
+    }
+
+    /// True when nothing changed between the snapshots.
+    pub fn is_empty(&self) -> bool {
+        self.cycles == 0
+            && self.kernels_done == 0
+            && self.per_domain.iter().all(|d| {
+                d.iter().all(|(_, n)| *n == 0)
+            })
+    }
 }
 
 /// One matching cell of a [`StatsQuery`]. Scalar domains (DRAM /
@@ -404,6 +528,45 @@ mod tests {
         let q = StatsQuery::new().domain(StatDomain::L2);
         assert!(snap.count(&q) > 0);
         assert_eq!(snap.count(&q.clone().pinned_window()), 0);
+    }
+
+    #[test]
+    fn snapshot_diff_reconstructs_later_from_base() {
+        // base + diff == later, per stream, in every domain — the
+        // cheap-periodic-sampling contract
+        let g = crate::workloads::generate("l2_lat").unwrap();
+        let mut s = SimBuilder::preset("minimal")
+            .workload(g.workload)
+            .build()
+            .unwrap();
+        s.run_until_kernels_done(2).unwrap();
+        let base = s.snapshot();
+        s.run_to_idle().unwrap();
+        let later = s.snapshot();
+        let diff = later.diff(&base).unwrap();
+        assert_eq!(base.total_cycles() + diff.cycles(),
+                   later.total_cycles());
+        assert_eq!(base.kernels_done() + diff.kernels_done(),
+                   later.kernels_done());
+        assert!(diff.cycles() > 0);
+        for d in StatDomain::ALL {
+            let base_map: std::collections::BTreeMap<_, _> =
+                base.per_stream(d).into_iter().collect();
+            let rebuilt: Vec<(u64, u64)> = diff
+                .per_stream(d)
+                .iter()
+                .map(|(s, n)| {
+                    (*s, base_map.get(s).copied().unwrap_or(0) + n)
+                })
+                .collect();
+            assert_eq!(rebuilt, later.per_stream(d),
+                       "base + diff != later in domain {}", d.name());
+        }
+        // a no-progress diff is empty
+        assert!(later.diff(&later).unwrap().is_empty());
+        // swapped order is a typed error, not a wrong answer
+        assert_eq!(base.diff(&later).unwrap_err().kind(),
+                   "snapshot_order");
     }
 
     #[test]

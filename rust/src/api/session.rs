@@ -13,6 +13,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::api::error::ConfigNote;
 use crate::api::{ApiError, Snapshot};
 use crate::config::SimConfig;
 use crate::sim::{GpuSim, GpuStats};
@@ -215,11 +216,23 @@ impl SimBuilder {
         Ok(cfg)
     }
 
+    /// Like [`SimBuilder::build_config`], also returning the typed
+    /// non-fatal advisories ([`ConfigNote`]) for the resolved
+    /// configuration — e.g. the clean-mode thread pin, which used to
+    /// happen silently.
+    pub fn build_config_with_notes(&self)
+        -> Result<(SimConfig, Vec<ConfigNote>), ApiError> {
+        let cfg = self.build_config()?;
+        let notes = ConfigNote::for_config(&cfg);
+        Ok((cfg, notes))
+    }
+
     /// Validate everything, construct the simulator, resolve and
     /// enqueue the workload (if a source was given) — one fallible
-    /// step, typed errors.
+    /// step, typed errors. Non-fatal advisories ride along on
+    /// [`SimSession::notes`].
     pub fn build(self) -> Result<SimSession, ApiError> {
-        let cfg = self.build_config()?;
+        let (cfg, notes) = self.build_config_with_notes()?;
         let label = self
             .label
             .clone()
@@ -227,7 +240,7 @@ impl SimBuilder {
         let sim = GpuSim::new(cfg).map_err(|e| {
             ApiError::InvalidConfig { message: format!("{e:#}") }
         })?;
-        let mut session = SimSession { sim, label };
+        let mut session = SimSession { sim, label, notes };
         session.sim.set_verbose(self.verbose);
         match self.source {
             None => {}
@@ -282,12 +295,19 @@ fn apply_kv(cfg: &mut SimConfig, kv: &BTreeMap<String, String>)
 pub struct SimSession {
     sim: GpuSim,
     label: String,
+    notes: Vec<ConfigNote>,
 }
 
 impl SimSession {
     /// Configuration in use.
     pub fn config(&self) -> &SimConfig {
         self.sim.config()
+    }
+
+    /// Non-fatal configuration advisories recorded at build time
+    /// (e.g. [`crate::api::ConfigNoteKind::CleanModePinsThreads`]).
+    pub fn notes(&self) -> &[ConfigNote] {
+        &self.notes
     }
 
     /// Effective worker-thread count (clean mode pins this to 1).
@@ -441,6 +461,27 @@ mod tests {
         assert_eq!(SimBuilder::preset("minimal")
                        .trace("/nonexistent/kernelslist.g")
                        .build().unwrap_err().kind(), "io");
+    }
+
+    #[test]
+    fn clean_mode_thread_pin_surfaces_as_typed_note() {
+        use crate::api::error::ConfigNoteKind;
+        // the satellite bugfix: the silent clean-mode pin is now a
+        // typed advisory at the builder boundary and on the session
+        let b = SimBuilder::preset("sm7_titanv_mini")
+            .stat_mode(StatMode::AggregateBuggy)
+            .sim_threads(4)
+            .bench("l2_lat");
+        let (_, notes) = b.build_config_with_notes().unwrap();
+        assert_eq!(notes.len(), 1);
+        assert_eq!(notes[0].kind, ConfigNoteKind::CleanModePinsThreads);
+        let s = b.build().unwrap();
+        assert_eq!(s.notes(), &notes[..]);
+        assert_eq!(s.threads(), 1, "the pin itself still applies");
+        // no advisory on the default path
+        let s = SimBuilder::preset("minimal").bench("l2_lat").build()
+            .unwrap();
+        assert!(s.notes().is_empty());
     }
 
     #[test]

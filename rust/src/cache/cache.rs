@@ -131,7 +131,7 @@ impl Cache {
                 // paper's validation discusses)
                 match self.mshr.probe(key) {
                     MshrProbe::Mergeable => {
-                        self.mshr.add(key, fetch.clone());
+                        self.mshr.add(key, *fetch);
                         AccessResult::ok(AccessOutcome::MshrHit)
                     }
                     MshrProbe::MergeFull => {
@@ -191,7 +191,7 @@ impl Cache {
             Probe::ReservationFail => AccessOutcome::Miss,
         };
         // no-write-allocate: the write itself travels down
-        let mut down = fetch.clone();
+        let mut down = *fetch;
         down.ret = None;
         self.miss_queue.push_back(down);
         AccessResult::ok(outcome)
@@ -213,7 +213,7 @@ impl Cache {
             }
             Probe::HitReserved { .. } => match self.mshr.probe(key) {
                 MshrProbe::Mergeable => {
-                    self.mshr.add(key, fetch.clone());
+                    self.mshr.add(key, *fetch);
                     AccessResult::ok(AccessOutcome::HitReserved)
                 }
                 MshrProbe::MergeFull => {
@@ -236,7 +236,7 @@ impl Cache {
                             return AccessResult::fail(
                                 FailOutcome::MissQueueFull);
                         }
-                        let mut down = fetch.clone();
+                        let mut down = *fetch;
                         down.ret = None;
                         self.miss_queue.push_back(down);
                         AccessResult::ok(probe.outcome())
@@ -280,14 +280,14 @@ impl Cache {
             _ => unreachable!(),
         };
         self.tags.allocate(fetch.addr, way, cycle);
-        self.mshr.add(key, fetch.clone());
+        self.mshr.add(key, *fetch);
         // NOTE: the down copy keeps `ret` — at the L1 level the lower
         // level's response is routed back to the issuing core by it (the
         // parked MSHR copies then fan out to the waiting warps).
         let down = if write_allocate {
             fetch.retyped(AccessType::L2WrAllocR, false)
         } else {
-            fetch.clone()
+            *fetch
         };
         self.miss_queue.push_back(down);
         AccessResult::ok(probe.outcome())
@@ -337,21 +337,31 @@ impl Cache {
     /// Fill response from the lower level for `addr`. Marks the sector
     /// valid, drains the MSHR, applies merged writes (sector → dirty)
     /// and returns the loads that can now be answered to their issuers.
+    /// (Convenience wrapper over [`Cache::fill_into`] — hot callers
+    /// reuse a scratch buffer instead.)
     pub fn fill(&mut self, addr: u64, cycle: Cycle) -> Vec<MemFetch> {
+        let mut responses = Vec::new();
+        self.fill_into(addr, cycle, &mut responses);
+        responses
+    }
+
+    /// Allocation-free fill: append the released loads to `out`. The
+    /// partition/core response paths call this with a persistent
+    /// scratch buffer, so a fill allocates nothing per fetch.
+    pub fn fill_into(&mut self, addr: u64, cycle: Cycle,
+                     out: &mut Vec<MemFetch>) {
         let key = self.mshr_key(addr);
         let dirty = self.dirty_refetch.remove(&key);
         self.tags.fill(addr, cycle, dirty);
         self.mshr.mark_ready(key);
-        let mut responses = Vec::new();
         while let Some(f) = self.mshr.next_ready() {
             if f.is_write {
                 // merged write applies now; sector becomes dirty
                 self.tags.fill(addr, cycle, true);
             } else {
-                responses.push(f);
+                out.push(f);
             }
         }
-        responses
     }
 
     /// Next outgoing fetch to the lower level (None if queue empty).

@@ -8,15 +8,20 @@
 
 use std::collections::BTreeMap;
 
-use crate::mem::fetch::MemFetch;
+use crate::mem::fetch::{FetchBufPool, MemFetch};
 
 /// Key: (block address, sector index).
 pub type MshrKey = (u64, u32);
 
-/// One in-flight fill and the accesses waiting on it.
+/// One in-flight fill and the accesses waiting on it. `next` is the
+/// drain cursor: serviced accesses are `waiting[next..]`, served
+/// front-to-back without shifting the vector (the old `remove(0)`
+/// drain was O(n²) per entry); the vector itself is recycled through
+/// the table's [`FetchBufPool`] when the entry retires.
 #[derive(Debug, Default)]
 struct MshrEntry {
     waiting: Vec<MemFetch>,
+    next: usize,
     /// Fill response arrived; entry drains via `next_ready`.
     ready: bool,
 }
@@ -40,18 +45,28 @@ pub struct MshrTable {
     entries: BTreeMap<MshrKey, MshrEntry>,
     max_entries: usize,
     max_merge: usize,
+    /// Recycles retired entries' waiting buffers: steady-state misses
+    /// allocate no per-fetch storage.
+    pool: FetchBufPool,
 }
 
 impl MshrTable {
     /// `entries` slots, each merging up to `max_merge` accesses.
     pub fn new(max_entries: usize, max_merge: usize) -> Self {
-        Self { entries: BTreeMap::new(), max_entries, max_merge }
+        Self {
+            entries: BTreeMap::new(),
+            max_entries,
+            max_merge,
+            pool: FetchBufPool::default(),
+        }
     }
 
-    /// What would happen if we tried to track `key`.
+    /// What would happen if we tried to track `key`. Merge occupancy
+    /// counts only undrained accesses (`len - next`), consistent with
+    /// [`MshrTable::waiting_accesses`].
     pub fn probe(&self, key: MshrKey) -> MshrProbe {
         match self.entries.get(&key) {
-            Some(e) if e.waiting.len() < self.max_merge => {
+            Some(e) if e.waiting.len() - e.next < self.max_merge => {
                 MshrProbe::Mergeable
             }
             Some(_) => MshrProbe::MergeFull,
@@ -75,7 +90,16 @@ impl MshrTable {
     pub fn add(&mut self, key: MshrKey, fetch: MemFetch) -> bool {
         match self.probe(key) {
             MshrProbe::Available => {
-                self.entries.entry(key).or_default().waiting.push(fetch);
+                let entry = MshrEntry {
+                    waiting: self.pool.acquire(),
+                    next: 0,
+                    ready: false,
+                };
+                self.entries
+                    .entry(key)
+                    .or_insert(entry)
+                    .waiting
+                    .push(fetch);
                 false
             }
             MshrProbe::Mergeable => {
@@ -94,17 +118,21 @@ impl MshrTable {
     }
 
     /// Pop one serviced access (drains ready entries FIFO per entry,
-    /// entries in key order — deterministic).
+    /// entries in key order — deterministic). The FIFO is a cursor
+    /// advance, not a front removal; a fully-drained entry's buffer
+    /// returns to the freelist.
     pub fn next_ready(&mut self) -> Option<MemFetch> {
         let key = *self
             .entries
             .iter()
-            .find(|(_, e)| e.ready && !e.waiting.is_empty())?
+            .find(|(_, e)| e.ready && e.next < e.waiting.len())?
             .0;
         let e = self.entries.get_mut(&key).unwrap();
-        let fetch = e.waiting.remove(0);
-        if e.waiting.is_empty() {
-            self.entries.remove(&key);
+        let fetch = e.waiting[e.next];
+        e.next += 1;
+        if e.next == e.waiting.len() {
+            let e = self.entries.remove(&key).unwrap();
+            self.pool.release(e.waiting);
         }
         Some(fetch)
     }
@@ -121,7 +149,10 @@ impl MshrTable {
 
     /// Total accesses parked in the table.
     pub fn waiting_accesses(&self) -> usize {
-        self.entries.values().map(|e| e.waiting.len()).sum()
+        self.entries
+            .values()
+            .map(|e| e.waiting.len() - e.next)
+            .sum()
     }
 }
 

@@ -453,11 +453,18 @@ pub fn execute(cmd: Command) -> Result<String> {
             .with_context(|| format!("unknown command '{name}'")),
         Command::Run(a) => {
             let mut session = a.to_builder().build()?;
+            // surface non-fatal config advisories (e.g. the
+            // clean-mode thread pin) before any output
+            let notes: Vec<String> =
+                session.notes().iter().map(|n| n.to_string()).collect();
             session.run_to_idle()?;
             let summary = session.config().summary();
             // finished — move the stats out instead of cloning them
             let snap = session.into_snapshot();
             let mut out = String::new();
+            for note in &notes {
+                let _ = writeln!(out, "{note}");
+            }
             let _ = writeln!(out, "config: {summary}");
             let _ = writeln!(out, "cycles: {}", snap.total_cycles());
             let _ = writeln!(out, "kernels: {}", snap.kernels_done());
@@ -622,6 +629,30 @@ mod tests {
         let seq = run(1).replace("sim_threads=1", "sim_threads=N");
         let par = run(4).replace("sim_threads=4", "sim_threads=N");
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn clean_mode_thread_pin_prints_a_note() {
+        // satellite bugfix: the silent clean-mode pin now surfaces
+        let out = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "sm7_titanv_mini".into(),
+            stat_mode: Some("clean".into()),
+            sim_threads: Some(4),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(out.contains("note[clean_mode_pins_threads]:"), "{out}");
+        assert!(out.contains("pinned to 1"), "{out}");
+        // no note without the explicit parallel request
+        let quiet = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "sm7_titanv_mini".into(),
+            stat_mode: Some("clean".into()),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(!quiet.contains("note["), "{quiet}");
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub struct SimConfig {
     pub icnt_latency: u32,
     /// Interconnect per-direction flit bandwidth (fetches/cycle).
     pub icnt_flit_per_cycle: u32,
+    /// Sharded double-buffered interconnect exchange (default): the
+    /// crossbar runs inside the worker phases and the main thread's
+    /// between-barrier work is an O(threads) buffer swap. `0` selects
+    /// the central exchange (the PR-2 loop; byte-identical stats,
+    /// O(fetches/cycle) serialized routing) — kept as the measured
+    /// "before" baseline.
+    pub icnt_sharded: bool,
     /// DRAM access latency on top of L2 miss (cycles).
     pub dram_latency: u32,
     /// DRAM serviced requests per partition per cycle (throughput cap).
@@ -165,6 +172,7 @@ impl SimConfig {
             "icnt_flit_per_cycle" => {
                 self.icnt_flit_per_cycle = val.parse()?;
             }
+            "icnt_sharded" => self.icnt_sharded = b(val)?,
             "dram_latency" => self.dram_latency = val.parse()?,
             "dram_per_cycle" => self.dram_per_cycle = val.parse()?,
             "max_cycles" => self.max_cycles = val.parse()?,
@@ -200,12 +208,40 @@ impl SimConfig {
         Ok(())
     }
 
+    /// Non-fatal configuration advisories as `(kind, message)` pairs —
+    /// conditions that are legal but silently change behaviour. The
+    /// `kind` is a stable machine-readable tag
+    /// (`streamsim::api::ConfigNote` wraps these as typed notes at the
+    /// builder boundary; the CLI prints them as `note:` lines).
+    ///
+    /// Currently:
+    /// * `clean_mode_pins_threads` — clean (`aggregate`) stat mode
+    ///   requires inc-time arrival order, so an explicit
+    ///   `sim_threads > 1` request is pinned to 1 worker instead of
+    ///   honoured. (The previously *silent* pin — now surfaced.)
+    pub fn validation_warnings(&self) -> Vec<(&'static str, String)> {
+        let mut warnings = Vec::new();
+        if self.stat_mode == StatMode::AggregateBuggy
+            && self.sim_threads > 1
+        {
+            warnings.push((
+                "clean_mode_pins_threads",
+                format!(
+                    "clean (aggregate) stat mode needs inc-time \
+                     arrival order for its same-cycle guard; \
+                     sim_threads={} will be pinned to 1 worker",
+                    self.sim_threads),
+            ));
+        }
+        warnings
+    }
+
     /// Human-readable summary printed at simulation start.
     pub fn summary(&self) -> String {
         format!(
             "preset={} cores={} l2_parts={} concurrent_kernel_sm={} \
-             serialize_streams={} stat_mode={} sim_threads={} l1d={} \
-             l2_capacity={}KiB",
+             serialize_streams={} stat_mode={} sim_threads={} icnt={} \
+             l1d={} l2_capacity={}KiB",
             self.preset,
             self.num_cores,
             self.num_l2_partitions,
@@ -217,6 +253,7 @@ impl SimConfig {
             } else {
                 self.sim_threads.to_string()
             },
+            if self.icnt_sharded { "sharded" } else { "central" },
             self.l1d.as_ref().map_or("none".into(),
                 |c| format!("{}KiB", c.capacity() / 1024)),
             self.l2.capacity() * self.num_l2_partitions as u64 / 1024,
@@ -282,6 +319,7 @@ pub mod presets {
             l2_latency: 180,
             icnt_latency: 8,
             icnt_flit_per_cycle: 32,
+            icnt_sharded: true,
             dram_latency: 160,
             dram_per_cycle: 2,
             max_cycles: 200_000_000,
@@ -404,5 +442,42 @@ l2_latency 99   # trailing comment
         let s = SimConfig::preset("sm7_titanv").unwrap().summary();
         assert!(s.contains("cores=80"));
         assert!(s.contains("stat_mode=tip"));
+        assert!(s.contains("icnt=sharded"));
+    }
+
+    #[test]
+    fn icnt_sharded_knob_defaults_on_and_overrides() {
+        for name in PRESETS {
+            assert!(SimConfig::preset(name).unwrap().icnt_sharded,
+                    "{name}: sharded exchange must be the default");
+        }
+        let mut c = SimConfig::default();
+        let kv = parse_config_text("-icnt_sharded 0\n").unwrap();
+        c.apply_overrides(&kv).unwrap();
+        assert!(!c.icnt_sharded);
+        assert!(c.summary().contains("icnt=central"));
+    }
+
+    #[test]
+    fn clean_mode_thread_pin_is_warned_not_silent() {
+        let mut c = SimConfig::preset("sm7_titanv_mini").unwrap();
+        // default (tip, auto threads): no advisories
+        assert!(c.validation_warnings().is_empty());
+        // clean + auto threads: the user didn't ask for parallelism —
+        // still quiet
+        c.stat_mode = StatMode::AggregateBuggy;
+        c.sim_threads = 0;
+        assert!(c.validation_warnings().is_empty());
+        c.sim_threads = 1;
+        assert!(c.validation_warnings().is_empty());
+        // clean + an explicit parallel request: surfaced, typed
+        c.sim_threads = 8;
+        let w = c.validation_warnings();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].0, "clean_mode_pins_threads");
+        assert!(w[0].1.contains("sim_threads=8"));
+        assert!(w[0].1.contains("pinned to 1"));
+        // and it is a warning, not an error
+        c.validate().unwrap();
     }
 }

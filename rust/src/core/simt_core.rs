@@ -88,6 +88,8 @@ pub struct SimtCore {
     to_icnt: Vec<MemFetch>,
     /// Retired TBs (drained by the top level).
     finished: Vec<FinishedTb>,
+    /// Reused buffer for L1 fill responses (no per-fill allocation).
+    fill_scratch: Vec<MemFetch>,
     /// Round-robin scheduler cursor.
     rr: usize,
     /// Cached resident-warp count (kept in sync by accept/retire).
@@ -115,6 +117,7 @@ impl SimtCore {
             hit_queue: DelayQueue::new(cfg.l1_latency),
             to_icnt: Vec::new(),
             finished: Vec::new(),
+            fill_scratch: Vec::new(),
             rr: 0,
             resident: 0,
             warp_refs: Vec::new(),
@@ -216,7 +219,7 @@ impl SimtCore {
                 continue;
             }
             let l1 = self.l1.as_mut().unwrap();
-            let f = front.clone();
+            let f = *front;
             let res = l1.access(&f, now);
             sink.inc(self.id, f.stream_slot, f.access_type,
                      res.outcome, now);
@@ -277,13 +280,12 @@ impl SimtCore {
                 }
                 TraceOp::Mem(mi) => {
                     warp.busy_until = now + 1;
-                    let fetches = Self::expand_mem(
+                    let n = Self::expand_mem(
                         &mi, core_id, s as u32, w as u32, uid, stream,
-                        slot, ids);
+                        slot, ids, &mut self.ldst_queue);
                     if !mi.is_write {
-                        warp.pending_loads += fetches.len() as u32;
+                        warp.pending_loads += n;
                     }
-                    self.ldst_queue.extend(fetches);
                 }
             }
             issued += 1;
@@ -291,12 +293,14 @@ impl SimtCore {
         self.rr = (self.rr + 1) % n;
     }
 
-    /// Coalesce a warp memory instruction into sector fetches.
+    /// Coalesce a warp memory instruction into sector fetches, pushed
+    /// straight onto the LDST queue (no intermediate per-instruction
+    /// vector). Returns how many fetches were produced.
     #[allow(clippy::too_many_arguments)]
     fn expand_mem(mi: &MemInstr, core_id: u32, tb_slot: u32,
                   warp_idx: u32, uid: KernelUid, stream: StreamId,
-                  stream_slot: StreamSlot, ids: &mut FetchIdAlloc)
-        -> Vec<MemFetch> {
+                  stream_slot: StreamSlot, ids: &mut FetchIdAlloc,
+                  out: &mut VecDeque<MemFetch>) -> u32 {
         let access_type = match (mi.space, mi.is_write) {
             (MemSpace::Global, false) => AccessType::GlobalAccR,
             (MemSpace::Global, true) => AccessType::GlobalAccW,
@@ -305,9 +309,9 @@ impl SimtCore {
             (MemSpace::Const, _) => AccessType::ConstAccR,
             (MemSpace::Texture, _) => AccessType::TextureAccR,
         };
-        coalesce_sectors(mi)
-            .into_iter()
-            .map(|addr| MemFetch {
+        let mut n = 0;
+        for addr in coalesce_sectors(mi) {
+            out.push_back(MemFetch {
                 id: ids.next(),
                 addr,
                 bytes: crate::config::SECTOR_SIZE,
@@ -322,17 +326,24 @@ impl SimtCore {
                     tb_slot,
                     warp_idx,
                 }),
-            })
-            .collect()
+            });
+            n += 1;
+        }
+        n
     }
 
     /// Interconnect delivered a response to this core.
     pub fn receive_response(&mut self, f: MemFetch, now: Cycle) {
         if self.l1.is_some() && !f.l1_bypass {
-            let responses = self.l1.as_mut().unwrap().fill(f.addr, now);
-            for r in responses {
+            let mut scratch = std::mem::take(&mut self.fill_scratch);
+            self.l1
+                .as_mut()
+                .unwrap()
+                .fill_into(f.addr, now, &mut scratch);
+            for r in scratch.drain(..) {
                 self.wake(&r);
             }
+            self.fill_scratch = scratch;
         } else {
             self.wake(&f);
         }
@@ -473,7 +484,7 @@ mod tests {
             core.cycle(now, &mut e, &mut ids);
             for f in core.drain_to_icnt() {
                 assert!(f.l1_bypass);
-                bypassed.push(f.clone());
+                bypassed.push(f);
                 core.receive_response(f, now);
             }
             now += 1;

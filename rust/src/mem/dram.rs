@@ -55,9 +55,20 @@ impl Dram {
     /// Service up to the per-cycle cap of ready requests; returns
     /// completed *reads* (fills). Writes retire silently. Every
     /// serviced request records a per-stream stat through `sink`.
+    /// (Convenience wrapper over [`Dram::cycle_into`] — the partition
+    /// cycle path reuses a scratch buffer instead.)
     pub fn cycle(&mut self, now: Cycle, sink: &mut PartitionSink<'_>)
         -> Vec<MemFetch> {
         let mut fills = Vec::new();
+        self.cycle_into(now, sink, &mut fills);
+        fills
+    }
+
+    /// Allocation-free cycle: append completed reads (fills) to
+    /// `fills`.
+    pub fn cycle_into(&mut self, now: Cycle,
+                      sink: &mut PartitionSink<'_>,
+                      fills: &mut Vec<MemFetch>) {
         for _ in 0..self.per_cycle {
             let Some((ready, _)) = self.queue.front() else { break };
             if *ready > now {
@@ -72,7 +83,6 @@ impl Dram {
                 fills.push(f);
             }
         }
-        fills
     }
 
     /// Requests still queued.

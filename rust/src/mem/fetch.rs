@@ -25,7 +25,13 @@ pub struct ReturnPath {
 
 /// A sector-granularity memory transaction traveling through the
 /// hierarchy (core → L1 → interconnect → L2 partition → DRAM and back).
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// Deliberately `Copy` plain-old-data: a fetch owns no heap storage,
+/// so moving one through the exchange queues, the MSHR, or a
+/// writeback retype is a fixed-size copy — never an allocation. The
+/// sharded exchange ([`crate::sim::parallel`]) moves every fetch
+/// through several queues per hop and relies on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MemFetch {
     /// Globally unique id (allocation order; debug/merging).
     pub id: u64,
@@ -62,8 +68,66 @@ impl MemFetch {
             access_type: t,
             is_write,
             ret: if is_write { None } else { self.ret },
-            ..self.clone()
+            ..*self
         }
+    }
+}
+
+/// Freelist of reusable `Vec<MemFetch>` buffers — the arena behind the
+/// per-fetch-allocation-free exchange. Components that need a
+/// transient fetch buffer (an MSHR entry's waiting list, a fill
+/// response batch) acquire one here and release it when drained;
+/// steady state recycles capacity instead of allocating per
+/// miss/fill. Bounded so a pathological burst cannot pin memory
+/// forever.
+#[derive(Debug, Clone)]
+pub struct FetchBufPool {
+    free: Vec<Vec<MemFetch>>,
+    max_buffers: usize,
+    /// Buffers handed out in total.
+    acquired: u64,
+    /// Buffers handed out that reused recycled capacity.
+    reused: u64,
+}
+
+impl Default for FetchBufPool {
+    fn default() -> Self {
+        Self::new(64)
+    }
+}
+
+impl FetchBufPool {
+    /// Pool retaining up to `max_buffers` free buffers.
+    pub fn new(max_buffers: usize) -> Self {
+        Self { free: Vec::new(), max_buffers, acquired: 0, reused: 0 }
+    }
+
+    /// Take an empty buffer (recycled capacity when available).
+    #[inline]
+    pub fn acquire(&mut self) -> Vec<MemFetch> {
+        self.acquired += 1;
+        match self.free.pop() {
+            Some(buf) => {
+                self.reused += 1;
+                buf
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a buffer to the freelist (cleared, capacity kept).
+    #[inline]
+    pub fn release(&mut self, mut buf: Vec<MemFetch>) {
+        if self.free.len() < self.max_buffers {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+
+    /// `(acquired, reused)` counters — observability for the
+    /// allocation-free claim.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.acquired, self.reused)
     }
 }
 
@@ -147,6 +211,34 @@ mod tests {
     fn id_alloc_monotonic() {
         let mut a = FetchIdAlloc::default();
         assert!(a.next() < a.next());
+    }
+
+    #[test]
+    fn fetch_is_copy_plain_old_data() {
+        // the allocation-free exchange relies on MemFetch being Copy
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<MemFetch>();
+        assert_copy::<ReturnPath>();
+    }
+
+    #[test]
+    fn buf_pool_recycles_capacity() {
+        let mut pool = FetchBufPool::new(2);
+        let mut a = pool.acquire();
+        a.reserve(100);
+        let cap = a.capacity();
+        assert!(cap >= 100);
+        a.push(fetch(false));
+        pool.release(a);
+        let b = pool.acquire();
+        assert!(b.is_empty(), "released buffers come back cleared");
+        assert_eq!(b.capacity(), cap, "capacity is recycled");
+        assert_eq!(pool.stats(), (2, 1));
+        // the freelist is bounded
+        pool.release(b);
+        pool.release(Vec::new());
+        pool.release(Vec::new()); // dropped: over max_buffers
+        assert_eq!(pool.free.len(), 2);
     }
 
     #[test]

@@ -1,21 +1,34 @@
 //! Interconnect: a latency + bandwidth bounded crossbar between the SIMT
 //! cores and the memory partitions.
 //!
-//! Modeled as two delay queues (core→mem, mem→core) with a per-cycle
+//! Modeled as two delay paths (core→mem, mem→core) with a per-cycle
 //! flit budget each way — enough fidelity for stat attribution and
 //! contention-induced timing shifts. Per-stream flit accounting (the
 //! paper's §6 names the interconnect as the next component to get
-//! per-stream stats) is reported straight into the
-//! [`crate::stats::StatsEngine`]'s Icnt domain, slot-indexed by each
-//! fetch's interned stream.
+//! per-stream stats) lands in the [`crate::stats::StatsEngine`]'s Icnt
+//! domain, slot-indexed by each fetch's interned stream.
 //!
-//! In the parallel clock loop ([`crate::sim::parallel`]) the crossbar
-//! is the **barrier exchange point**: workers leave their cores' and
-//! partitions' fetches in per-worker queues, and the main thread alone
-//! pushes/drains the crossbar between the core and partition phases,
-//! in fixed core-id/partition-id order — so flit attribution order
-//! (and therefore every stat mode) is identical for any
-//! `--sim-threads` value.
+//! Two implementations of the same timing model live here:
+//!
+//! * **Sharded** (the default; `icnt_sharded = 1`): the crossbar is
+//!   split into per-chunk slices owned by the consuming workers.
+//!   Fetches travel producer → publish buffer → (double-buffer swap
+//!   at the barrier) → consumer-owned [`CrossbarSlice`], and the only
+//!   central state is a [`FlitSchedule`] per direction: a count-only
+//!   ledger that reproduces the single-FIFO + per-cycle-budget drain
+//!   rule in O(1) per cycle. Every fetch carries a global sequence
+//!   number (its position in core-id/partition-id production order —
+//!   a pure function of the workload, not of `--sim-threads`), and a
+//!   slice releases exactly the fetches whose sequence number falls
+//!   under the schedule's drain horizon. Same entries, same order,
+//!   same ready cycles, same budget ⇒ byte-identical timing and
+//!   stats to the central path below.
+//! * **Central** ([`Icnt`]; `icnt_sharded = 0`): the PR-2 exchange.
+//!   The main thread alone pushes/drains two shared delay queues
+//!   between the core and partition phases, in fixed
+//!   core-id/partition-id order. Kept as the measured "before"
+//!   baseline for `BENCH_stats.json`'s `sharded_icnt` section and as
+//!   the semantic reference the determinism suite compares against.
 
 use std::collections::VecDeque;
 
@@ -61,7 +74,142 @@ impl<T> DelayQueue<T> {
     }
 }
 
-/// The crossbar.
+/// Count-only central ledger of one crossbar direction for the
+/// sharded exchange: reproduces the "single FIFO, constant latency,
+/// up to `budget` ready entries drained per cycle" rule without ever
+/// touching a fetch. Entries are identified by their global sequence
+/// number (assigned in production order); because pushes happen once
+/// per cycle with monotonically increasing cycles and the latency is
+/// constant, readiness is monotone in sequence order, so the set of
+/// drained entries after any cycle is exactly `seq <
+/// drained_total()` — the **drain horizon** consumers compare
+/// against.
+#[derive(Debug, Clone)]
+pub struct FlitSchedule {
+    latency: u32,
+    budget: u32,
+    /// `(ready_cycle, count)` batches still queued, FIFO.
+    arrivals: VecDeque<(Cycle, u64)>,
+    enqueued: u64,
+    drained: u64,
+}
+
+impl FlitSchedule {
+    /// Ledger with one-way `latency` and per-cycle `budget` flits.
+    pub fn new(latency: u32, budget: u32) -> Self {
+        Self {
+            latency,
+            budget,
+            arrivals: VecDeque::new(),
+            enqueued: 0,
+            drained: 0,
+        }
+    }
+
+    /// Total entries ever published — the sequence number the *next*
+    /// published entry will receive. The swap point reads this to
+    /// assign per-chunk sequence bases before calling
+    /// [`FlitSchedule::publish`].
+    pub fn enqueued_total(&self) -> u64 {
+        self.enqueued
+    }
+
+    /// Record `count` entries produced at `now` (ready at
+    /// `now + latency`). Call once per cycle, after reading
+    /// [`FlitSchedule::enqueued_total`] for the bases.
+    pub fn publish(&mut self, now: Cycle, count: u64) {
+        if count > 0 {
+            self.arrivals.push_back((now + self.latency as u64, count));
+            self.enqueued += count;
+        }
+    }
+
+    /// Advance one drain cycle: up to `budget` ready entries leave the
+    /// crossbar, oldest first. Returns the new drain horizon — every
+    /// entry with `seq < horizon` has now cleared the crossbar and
+    /// must be delivered by its owning [`CrossbarSlice`].
+    pub fn drain(&mut self, now: Cycle) -> u64 {
+        let mut budget = self.budget as u64;
+        while budget > 0 {
+            match self.arrivals.front_mut() {
+                Some((ready, count)) if *ready <= now => {
+                    let take = (*count).min(budget);
+                    *count -= take;
+                    budget -= take;
+                    self.drained += take;
+                    if *count == 0 {
+                        self.arrivals.pop_front();
+                    }
+                }
+                _ => break,
+            }
+        }
+        self.drained
+    }
+
+    /// The current drain horizon (total entries ever drained).
+    pub fn drained_total(&self) -> u64 {
+        self.drained
+    }
+
+    /// Entries published but not yet past the drain point.
+    pub fn in_flight(&self) -> u64 {
+        self.enqueued - self.drained
+    }
+
+    /// Anything still inside the crossbar?
+    pub fn busy(&self) -> bool {
+        self.in_flight() > 0
+    }
+}
+
+/// Consumer-owned slice of the sharded crossbar: the in-flight fetches
+/// destined for one worker chunk, held in ascending global-sequence
+/// order (sources are merged by concatenating inbound buffers in
+/// source-chunk order — chunk ranges are contiguous and ascending, so
+/// that *is* `(core_id | partition_id, production order)` order, the
+/// global-id-order drain rule). [`CrossbarSlice::pop_ready`] releases
+/// the prefix the central [`FlitSchedule`] has drained.
+#[derive(Debug, Default)]
+pub struct CrossbarSlice {
+    pending: VecDeque<(u64, MemFetch)>,
+}
+
+impl CrossbarSlice {
+    /// Queue a fetch under its global sequence number. Sequence
+    /// numbers must arrive in ascending order (the swap protocol
+    /// guarantees this; debug builds check it).
+    #[inline]
+    pub fn push(&mut self, seq: u64, f: MemFetch) {
+        debug_assert!(
+            !self.pending.back().is_some_and(|(s, _)| *s >= seq),
+            "crossbar slice sequence order violated");
+        self.pending.push_back((seq, f));
+    }
+
+    /// Release the next fetch the schedule has drained (`seq <
+    /// horizon`), if any.
+    #[inline]
+    pub fn pop_ready(&mut self, horizon: u64) -> Option<MemFetch> {
+        if self.pending.front().is_some_and(|(seq, _)| *seq < horizon) {
+            self.pending.pop_front().map(|(_, f)| f)
+        } else {
+            None
+        }
+    }
+
+    /// Fetches still in flight toward this slice's consumers.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when nothing is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+/// The central crossbar (the PR-2 exchange, `icnt_sharded = 0`).
 #[derive(Debug)]
 pub struct Icnt {
     to_mem: DelayQueue<MemFetch>,
@@ -205,6 +353,54 @@ mod tests {
         let got = icnt.drain_to_core(108);
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].id, 1);
+    }
+
+    #[test]
+    fn flit_schedule_matches_central_drain_counts() {
+        // the sharded exchange's count-only ledger must reproduce the
+        // central DelayQueue + budget drain behaviour cycle for cycle,
+        // for random push patterns — this is the semantic equivalence
+        // the byte-identity claim rests on
+        use crate::util::proptest_lite::{default_cases, run_cases};
+        run_cases("flit-schedule-equiv", 0x1C47, default_cases(), |g| {
+            let latency = g.index(10) as u32;
+            let budget = g.range(1, 6) as u32;
+            let mut engine = StatsEngine::new(StatMode::PerStream);
+            let mut central = Icnt::new(latency, budget);
+            let mut sched = FlitSchedule::new(latency, budget);
+            let mut central_drained = 0u64;
+            for now in 0..g.range(10, 60) {
+                let pushes = g.index(2 * budget as usize + 2) as u64;
+                for i in 0..pushes {
+                    let x = f(&mut engine, now * 100 + i, 0);
+                    central.push_to_mem(now, x, &mut engine);
+                }
+                sched.publish(now, pushes);
+                central_drained += central.drain_to_mem(now).len() as u64;
+                let horizon = sched.drain(now);
+                assert_eq!(horizon, central_drained,
+                           "cycle {now}: horizons diverged");
+                assert_eq!(sched.busy(), central.busy(), "cycle {now}");
+            }
+        });
+    }
+
+    #[test]
+    fn crossbar_slice_releases_drained_prefix_in_seq_order() {
+        let mut e = StatsEngine::new(StatMode::PerStream);
+        let mut s = CrossbarSlice::default();
+        for seq in [3u64, 7, 9] {
+            let x = f(&mut e, seq, 0);
+            s.push(seq, x);
+        }
+        assert_eq!(s.len(), 3);
+        assert!(s.pop_ready(3).is_none(), "seq 3 not under horizon 3");
+        let got = s.pop_ready(8).unwrap();
+        assert_eq!(got.id, 3);
+        assert_eq!(s.pop_ready(8).unwrap().id, 7);
+        assert!(s.pop_ready(8).is_none());
+        assert_eq!(s.pop_ready(10).unwrap().id, 9);
+        assert!(s.is_empty());
     }
 
     #[test]

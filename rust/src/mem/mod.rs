@@ -14,6 +14,6 @@ pub mod icnt;
 pub mod partition;
 
 pub use dram::{Dram, DramStats};
-pub use fetch::{FetchIdAlloc, MemFetch, ReturnPath};
-pub use icnt::{DelayQueue, Icnt};
+pub use fetch::{FetchBufPool, FetchIdAlloc, MemFetch, ReturnPath};
+pub use icnt::{CrossbarSlice, DelayQueue, FlitSchedule, Icnt};
 pub use partition::{partition_of, MemPartition};

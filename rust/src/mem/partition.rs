@@ -41,6 +41,10 @@ pub struct MemPartition {
     hit_queue: DelayQueue<MemFetch>,
     /// Responses ready to return to the interconnect.
     outgoing: Vec<MemFetch>,
+    /// Reused buffer for DRAM fills completing this cycle.
+    dram_scratch: Vec<MemFetch>,
+    /// Reused buffer for L2 fill responses (no per-fill allocation).
+    fill_scratch: Vec<MemFetch>,
     /// Accesses the L2 can take per cycle.
     accesses_per_cycle: u32,
     /// L2 hit latency (also charged ahead of DRAM on the miss path).
@@ -58,6 +62,8 @@ impl MemPartition {
             replay: VecDeque::new(),
             hit_queue: DelayQueue::new(cfg.l2_latency),
             outgoing: Vec::new(),
+            dram_scratch: Vec::new(),
+            fill_scratch: Vec::new(),
             // One tag probe per cycle per sub-partition, as in
             // GPGPU-Sim. This also means a single partition can never
             // produce the same-cycle cross-stream stat collision — the
@@ -80,11 +86,12 @@ impl MemPartition {
     /// `&mut StatsEngine` parameter is gone: partition-local counters
     /// stay partition-local until the merge point.)
     pub fn cycle(&mut self, now: Cycle, sink: &mut PartitionSink<'_>) {
-        // 3a. DRAM fills -> L2 -> merged responses
-        for fill in self.dram.cycle(now, sink) {
-            for resp in self.l2.fill(fill.addr, now) {
-                self.outgoing.push(resp);
-            }
+        // 3a. DRAM fills -> L2 -> merged responses (scratch buffers
+        // reused across cycles — no per-fill allocation)
+        self.dram.cycle_into(now, sink, &mut self.dram_scratch);
+        for fill in self.dram_scratch.drain(..) {
+            self.l2.fill_into(fill.addr, now, &mut self.fill_scratch);
+            self.outgoing.append(&mut self.fill_scratch);
         }
 
         // 1+2. service replays first, then new arrivals

@@ -14,14 +14,18 @@
 //!
 //! The GPU's state lives in [`parallel::WorkerChunk`]s — contiguous
 //! core-id and partition-id ranges, each paired with worker-owned stat
-//! shards. Every clock tick runs as **sequential launch/dispatch →
-//! parallel core phase → central icnt exchange → parallel partition
-//! phase → central response routing → retire** (see
-//! [`crate::sim::parallel`] for the full barrier diagram and the
+//! shards **and its slice of the sharded crossbar**. Every clock tick
+//! runs as **sequential launch/dispatch → parallel core phase →
+//! O(threads) request swap → parallel partition phase → O(threads)
+//! response swap → retire** (see [`crate::sim::parallel`] for the
+//! full barrier diagram, the double-buffer swap protocol, and the
 //! bit-identity argument). `--sim-threads` (0 = available parallelism,
 //! 1 = the sequential path) picks how many worker threads step the
 //! chunks; the per-stream (`tip`) and `exact` modes produce
-//! byte-identical stats for every value. Clean mode is pinned to one
+//! byte-identical stats for every value. `icnt_sharded = 0` selects
+//! the PR-2 central exchange instead (O(fetches/cycle) main-thread
+//! routing between the barriers) — byte-identical results, kept as
+//! the measured "before" baseline. Clean mode is pinned to one
 //! thread and inc-time central admission because its under-count is an
 //! arrival-order artifact by design.
 //!
@@ -38,7 +42,7 @@ use anyhow::{bail, Result};
 use crate::config::SimConfig;
 use crate::core::SimtCore;
 use crate::kernel::{KernelInfo, KernelQueue};
-use crate::mem::{partition_of, Icnt, MemPartition};
+use crate::mem::{partition_of, FlitSchedule, Icnt, MemPartition};
 use crate::sim::parallel::{self, WorkerChunk};
 use crate::sim::GpuStats;
 use crate::stats::print as stat_print;
@@ -68,7 +72,15 @@ pub struct GpuSim {
     part_starts: Vec<usize>,
     /// Worker threads stepping the chunks (1 = sequential path).
     threads: usize,
+    /// Central crossbar — used only with `icnt_sharded = 0` (the PR-2
+    /// exchange, kept as the measured "before" baseline).
     icnt: Icnt,
+    /// Sharded-exchange request ledger (core→mem direction).
+    sched_req: FlitSchedule,
+    /// Sharded-exchange response ledger (mem→core direction).
+    sched_resp: FlitSchedule,
+    /// Reused scratch for per-chunk sequence bases at the swap.
+    lane_bases: Vec<u64>,
     queue: KernelQueue,
     streams: StreamTable,
     running: Vec<KernelInfo>,
@@ -100,12 +112,18 @@ impl GpuSim {
         } else {
             parallel::resolve_threads(cfg.sim_threads, cfg.num_cores)
         };
-        let chunks = parallel::build_chunks(cores, partitions, threads);
+        let chunks = parallel::build_chunks(
+            cores, partitions, threads, cfg.l2.line_size,
+            cfg.icnt_sharded);
         let core_starts =
             parallel::split_starts(cfg.num_cores as usize, threads);
         let part_starts = parallel::split_starts(
             cfg.num_l2_partitions as usize, threads);
         let icnt = Icnt::new(cfg.icnt_latency, cfg.icnt_flit_per_cycle);
+        let sched_req =
+            FlitSchedule::new(cfg.icnt_latency, cfg.icnt_flit_per_cycle);
+        let sched_resp =
+            FlitSchedule::new(cfg.icnt_latency, cfg.icnt_flit_per_cycle);
         let stats = GpuStats::new(cfg.stat_mode);
         Ok(Self {
             cfg,
@@ -114,6 +132,9 @@ impl GpuSim {
             part_starts,
             threads,
             icnt,
+            sched_req,
+            sched_resp,
+            lane_bases: Vec::new(),
             queue: KernelQueue::new(),
             streams: StreamTable::new(),
             running: Vec::new(),
@@ -239,6 +260,8 @@ impl GpuSim {
         self.queue.is_empty()
             && self.running.is_empty()
             && !self.icnt.busy()
+            && !self.sched_req.busy()
+            && !self.sched_resp.busy()
             && chunks.iter().all(|c| !parallel::lock_chunk(c).busy())
     }
 
@@ -266,71 +289,98 @@ impl GpuSim {
     }
 
     /// One clock tick over `chunks`: sequential launch/dispatch, the
-    /// two (possibly pooled) phases, and the central exchanges between
-    /// them — all cross-chunk traffic in fixed global-id order.
+    /// two (possibly pooled) phases, and the exchange steps between
+    /// them. With the sharded exchange (default) the between-phase
+    /// work is an O(threads) buffer swap; with `icnt_sharded = 0` it
+    /// is the PR-2 central O(fetches/cycle) crossbar routing — both in
+    /// fixed global-id order, byte-identical stats.
     fn step_on(&mut self, chunks: &[Mutex<WorkerChunk>],
                ctrl: Option<&parallel::PoolCtrl>) -> Result<()> {
         self.launch_kernels();
         self.dispatch_tbs(chunks);
 
-        // parallel core phase: issue + L1, stats into worker shards
+        // parallel core phase: issue + L1 (and, sharded: response
+        // delivery + request routing/publishing), stats into shards
         self.phase(chunks, ctrl, parallel::CMD_CORES)?;
 
-        // icnt exchange barrier, core side: per-worker queues drain
-        // into the crossbar in core-id order, then ready requests
-        // route to per-partition inboxes
-        let line = self.cfg.l2.line_size;
-        let nparts = self.cfg.num_l2_partitions;
-        for ch in chunks {
-            let mut g = parallel::lock_chunk(ch);
-            let WorkerChunk { out_fetches, finished, .. } = &mut *g;
-            self.icnt.push_many_to_mem(self.now, out_fetches,
-                                       &mut self.stats.engine);
-            self.finished_scratch.append(finished);
-        }
-        for f in self.icnt.drain_to_mem(self.now) {
-            let p = partition_of(f.addr, line, nparts) as usize;
-            let ci = parallel::chunk_of(&self.part_starts, p);
-            let local = p - self.part_starts[ci];
-            parallel::lock_chunk(&chunks[ci]).part_inbox.push((local, f));
+        if self.cfg.icnt_sharded {
+            // request swap barrier: O(threads) — collect retired TBs,
+            // assign sequence bases, step the ledger, swap buffers
+            for ch in chunks {
+                let mut g = parallel::lock_chunk(ch);
+                self.finished_scratch.append(&mut g.finished);
+            }
+            parallel::swap_lane(chunks, parallel::LaneKind::Request,
+                                &mut self.sched_req, self.now,
+                                &mut self.lane_bases);
+        } else {
+            // central exchange, core side: per-worker queues drain
+            // into the crossbar in core-id order, then ready requests
+            // route to per-partition inboxes
+            let line = self.cfg.l2.line_size;
+            let nparts = self.cfg.num_l2_partitions;
+            for ch in chunks {
+                let mut g = parallel::lock_chunk(ch);
+                let WorkerChunk { out_fetches, finished, .. } = &mut *g;
+                self.icnt.push_many_to_mem(self.now, out_fetches,
+                                           &mut self.stats.engine);
+                self.finished_scratch.append(finished);
+            }
+            for f in self.icnt.drain_to_mem(self.now) {
+                let p = partition_of(f.addr, line, nparts) as usize;
+                let ci = parallel::chunk_of(&self.part_starts, p);
+                let local = p - self.part_starts[ci];
+                parallel::lock_chunk(&chunks[ci])
+                    .part_inbox
+                    .push((local, f));
+            }
         }
 
-        // parallel partition phase: L2 + DRAM, stats into worker shards
+        // parallel partition phase: L2 + DRAM (and, sharded: request
+        // delivery + response routing/publishing), stats into shards
         self.phase(chunks, ctrl, parallel::CMD_PARTS)?;
 
-        // icnt exchange barrier, mem side: responses in partition-id
-        // order, then route ready responses to core inboxes (delivered
-        // at the start of the next core phase with this cycle number —
-        // observationally identical to in-cycle delivery). A response
-        // without a valid return path cannot be delivered; dropping it
-        // (with a counter) beats silently misdelivering to core 0.
-        for ch in chunks {
-            let mut g = parallel::lock_chunk(ch);
-            let WorkerChunk { out_responses, .. } = &mut *g;
-            self.icnt.push_many_to_core(self.now, out_responses,
-                                        &mut self.stats.engine);
-        }
-        for f in self.icnt.drain_to_core(self.now) {
-            let Some(ret) = f.ret else {
-                self.stats.engine.note_dropped_response();
-                debug_assert!(false,
-                              "response without return path (fetch {})",
-                              f.id);
-                continue;
-            };
-            let core = ret.core_id as usize;
-            if core >= self.cfg.num_cores as usize {
-                self.stats.engine.note_dropped_response();
-                debug_assert!(false,
-                              "response routed to nonexistent core \
-                               {core} (fetch {})", f.id);
-                continue;
+        if self.cfg.icnt_sharded {
+            // response swap barrier: delivered at the start of the
+            // next core phase with this cycle number — observationally
+            // identical to in-cycle delivery
+            parallel::swap_lane(chunks, parallel::LaneKind::Response,
+                                &mut self.sched_resp, self.now,
+                                &mut self.lane_bases);
+        } else {
+            // central exchange, mem side: responses in partition-id
+            // order, then route ready responses to core inboxes. A
+            // response without a valid return path cannot be
+            // delivered; dropping it (with a counter) beats silently
+            // misdelivering to core 0.
+            for ch in chunks {
+                let mut g = parallel::lock_chunk(ch);
+                let WorkerChunk { out_responses, .. } = &mut *g;
+                self.icnt.push_many_to_core(self.now, out_responses,
+                                            &mut self.stats.engine);
             }
-            let ci = parallel::chunk_of(&self.core_starts, core);
-            let local = core - self.core_starts[ci];
-            parallel::lock_chunk(&chunks[ci])
-                .core_inbox
-                .push((self.now, local, f));
+            for f in self.icnt.drain_to_core(self.now) {
+                let Some(ret) = f.ret else {
+                    self.stats.engine.note_dropped_response();
+                    debug_assert!(false,
+                                  "response without return path \
+                                   (fetch {})", f.id);
+                    continue;
+                };
+                let core = ret.core_id as usize;
+                if core >= self.cfg.num_cores as usize {
+                    self.stats.engine.note_dropped_response();
+                    debug_assert!(false,
+                                  "response routed to nonexistent core \
+                                   {core} (fetch {})", f.id);
+                    continue;
+                }
+                let ci = parallel::chunk_of(&self.core_starts, core);
+                let local = core - self.core_starts[ci];
+                parallel::lock_chunk(&chunks[ci])
+                    .core_inbox
+                    .push((self.now, local, f));
+            }
         }
 
         self.retire_tbs(chunks);
@@ -865,6 +915,39 @@ mod tests {
         cfg.sim_threads = 64;
         assert_eq!(GpuSim::new(cfg).unwrap().threads(), 4,
                    "capped at num_cores");
+    }
+
+    #[test]
+    fn sharded_exchange_matches_central_exchange() {
+        // the sharded double-buffered exchange must be byte-identical
+        // to the PR-2 central exchange — full export + exit log, at 1
+        // and 4 workers (the full matrix lives in
+        // tests/determinism.rs)
+        let w = Workload {
+            kernels: (0..3).map(|s| kernel(s, 0x40_0000, 6)).collect(),
+            memcpys: vec![],
+        };
+        let run = |sharded: bool, threads: u32| {
+            let mut cfg = mini_cfg(StatMode::PerStream, false);
+            cfg.icnt_sharded = sharded;
+            cfg.sim_threads = threads;
+            let mut sim = GpuSim::new(cfg).unwrap();
+            sim.enqueue_workload(&w).unwrap();
+            sim.run().unwrap();
+            let mut doc =
+                crate::stats::export::to_json("tip", sim.stats());
+            doc.push('\n');
+            for e in &sim.stats().exit_log {
+                doc.push_str(e);
+            }
+            doc
+        };
+        let central = run(false, 1);
+        for (sharded, threads) in [(true, 1), (true, 4), (false, 4)] {
+            assert_eq!(central, run(sharded, threads),
+                       "exchange diverged (sharded={sharded}, \
+                        threads={threads})");
+        }
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! The top-level GPU simulator.
 //!
 //! * [`gpu_sim`] — the phased clock loop (launch/dispatch → core phase
-//!   → icnt exchange → partition phase → retire/merge).
+//!   → request swap → partition phase → response swap →
+//!   retire/merge).
 //! * [`parallel`] — the sharded parallel stepping subsystem: worker
-//!   chunks, the two phase functions, and the barrier-synchronized
-//!   worker pool behind `--sim-threads`.
+//!   chunks owning their crossbar slices, the two phase functions,
+//!   the O(threads) double-buffered exchange swap, and the
+//!   barrier-synchronized worker pool behind `--sim-threads`.
 //! * [`gpu_stats`] — simulation-level stat aggregation.
 
 pub mod gpu_sim;

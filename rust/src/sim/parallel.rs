@@ -1,54 +1,97 @@
 //! The sharded parallel stepping subsystem.
 //!
 //! [`crate::sim::GpuSim`]'s clock loop is split into two data-parallel
-//! phases separated by central exchange points:
+//! phases. With the **sharded exchange** (`icnt_sharded = 1`, the
+//! default) the interconnect itself runs inside the worker phases and
+//! the main thread's between-barrier work is O(threads):
 //!
 //! ```text
 //!   main: launch_kernels + dispatch_tbs            (sequential)
 //!   ───────────────── barrier ─────────────────
 //!   workers: CORE PHASE — each worker owns a contiguous core-id range:
-//!     deliver queued responses, cycle cores (stats → worker-owned
-//!     CoreStatShards), collect outbound fetches per worker
+//!     gather the swapped-in response buffers into the resp
+//!     CrossbarSlice (source-chunk order == global partition-id
+//!     order), deliver every response under the resp drain horizon,
+//!     cycle cores (stats → worker-owned CoreStatShards), then route
+//!     each produced fetch to its destination chunk's publish buffer
+//!     tagged with its chunk-local sequence number (its icnt flit is
+//!     counted in the producing core's shard, at production time)
 //!   ───────────────── barrier ─────────────────
-//!   main: per-worker queues → icnt (core-id order) → route drained
-//!     requests to per-partition inboxes            (sequential)
+//!   main: REQUEST SWAP — O(threads): read per-chunk publish counts,
+//!     assign global sequence bases (prefix sums in chunk order),
+//!     advance the request FlitSchedule one drain cycle, swap every
+//!     publish/consume buffer pair, write bases + horizon into chunks
 //!   ───────────────── barrier ─────────────────
 //!   workers: PARTITION PHASE — each worker owns a contiguous
-//!     partition-id range: push inbox, cycle L2+DRAM (stats →
-//!     worker-owned PartitionStatShards), collect responses per worker
+//!     partition-id range: gather request buffers into the req slice,
+//!     deliver every request under the req horizon to its partition,
+//!     cycle L2+DRAM (stats → worker-owned PartitionStatShards),
+//!     route responses to the core chunks' publish buffers (flits
+//!     counted in the partition's shard; a return-path-less response
+//!     is dropped and counted, never misdelivered)
 //!   ───────────────── barrier ─────────────────
-//!   main: responses → icnt (partition-id order) → route to core
-//!     inboxes; retire TBs; on kernel exit absorb ALL shards in fixed
-//!     core-id then partition-id order              (sequential)
+//!   main: RESPONSE SWAP — the same O(threads) protocol on the
+//!     response lane; retire TBs; on kernel exit absorb ALL shards in
+//!     fixed core-id then partition-id order      (sequential)
 //! ```
 //!
-//! **Why this is bit-identical for every `--sim-threads` value:** a
-//! worker only ever touches its own cores/partitions/shards, every
-//! cross-chunk interaction flows through the main thread in global-id
-//! order, per-core fetch ids are a pure function of `(core, seq)`
-//! ([`FetchIdAlloc::for_core`]), and shard merging is cell-wise
-//! addition performed centrally at the kernel-exit merge point
-//! ([`crate::stats::StatsEngine::absorb_core_shard`] /
-//! [`crate::stats::StatsEngine::absorb_partition_shard`]) where mode
-//! routing and power billing also happen. Thread count changes which
-//! OS thread executes a chunk — nothing else. (Cf. *Parallelizing a
-//! modern GPU simulator*, Huerta 2025, for the shard-per-thread +
-//! ordered-merge approach; the determinism suite in
-//! `tests/determinism.rs` proves the byte-identity claim.)
+//! **The double-buffer swap protocol:** each chunk's
+//! [`ExchangeLane`] holds one *publish* buffer per destination chunk
+//! and one *consume* buffer per source chunk. At the barrier the main
+//! thread swaps `producer.out[cc] ↔ consumer.inbox[pc]` — plain
+//! `Vec` pointer swaps, so the buffers (and their capacity) shuttle
+//! back and forth forever and the steady state allocates nothing.
+//! The main thread never touches a fetch: it reads one publish
+//! *count* per chunk, assigns sequence bases by prefix sum, and steps
+//! the [`FlitSchedule`] — a count-only ledger reproducing the central
+//! crossbar's single-FIFO + per-cycle-flit-budget drain rule exactly
+//! (see `mem::icnt`).
 //!
-//! **Response delivery is deferred by design:** responses drained from
-//! the crossbar at cycle `t` are recorded `(t, fetch)` in the target
-//! chunk's inbox and delivered at the *start* of cycle `t+1`'s core
-//! phase, using the recorded cycle. This is observationally identical
-//! to the old in-cycle delivery because nothing reads the target
-//! core's state between those two points, and it keeps delivery inside
-//! the parallel section.
+//! **The sharded crossbar ordering rule, and why determinism
+//! survives:** a fetch's global sequence number is `chunk_base +
+//! local_seq` where the bases are prefix sums of per-chunk publish
+//! counts in chunk order. Chunks are contiguous ascending id ranges
+//! and each chunk publishes in core-id (partition-id) production
+//! order, so the sequence number is precisely the fetch's position in
+//! *global id-order production order this cycle* — a pure function of
+//! the workload, independent of `--sim-threads`. A consumer merges
+//! its inbound buffers by concatenating them in source-chunk order,
+//! which by the same argument *is* ascending sequence order (the
+//! global-id-order drain rule, enforced locally instead of by central
+//! sequencing). The drain horizon is a function of per-cycle publish
+//! totals, the constant latency, and the flit budget — also
+//! thread-count independent. Same entries, same order, same drain
+//! cycles, stats recorded raw in worker-owned shards and absorbed in
+//! fixed core-id then partition-id order at the kernel-exit merge
+//! point ([`crate::stats::StatsEngine::absorb_core_shard`] /
+//! [`crate::stats::StatsEngine::absorb_partition_shard`], where mode
+//! routing and power billing happen) — so thread count changes which
+//! OS thread executes a chunk and nothing else. The determinism suite
+//! (`tests/determinism.rs`) pins the byte-identity claim, *and* pins
+//! the sharded exchange byte-identical to the central one.
+//!
+//! With `icnt_sharded = 0` the loop falls back to the PR-2 **central
+//! exchange**: per-worker `out_fetches`/`out_responses` queues drained
+//! into one shared crossbar by the main thread between barriers, in
+//! global id order — O(fetches/cycle) serialized routing. It is kept
+//! as the measured "before" baseline (`BENCH_stats.json`,
+//! `sharded_icnt` section) and as the reference the determinism suite
+//! compares the sharded exchange against.
+//!
+//! **Response delivery is deferred by design:** responses that clear
+//! the crossbar at cycle `t` are delivered at the *start* of cycle
+//! `t+1`'s core phase with arrival cycle `t`. This is observationally
+//! identical to in-cycle delivery because nothing reads the target
+//! core's state between those two points, and it keeps delivery
+//! inside the parallel section. (Both exchange implementations share
+//! this rule.)
 //!
 //! **Clean mode is exempt** from parallel stepping: its under-count is
 //! an inc-time shared-counter artifact (the engine's `CycleGuard` must
 //! observe increments in arrival order), so `GpuSim` pins it to one
 //! thread and routes stats through `CoreSink::Central` /
-//! `PartitionSink::Central` — by design, not as a limitation.
+//! `PartitionSink::Central` — by design, not as a limitation. (The
+//! sharded exchange still applies; it is sequential with one chunk.)
 //!
 //! The worker pool is plain `std`: scoped threads parked on two
 //! reusable [`Barrier`]s, a command word, and one uncontended [`Mutex`]
@@ -61,7 +104,8 @@ use std::sync::{Barrier, Mutex};
 use anyhow::{bail, Result};
 
 use crate::core::{FinishedTb, SimtCore};
-use crate::mem::{FetchIdAlloc, MemFetch, MemPartition};
+use crate::mem::{partition_of, CrossbarSlice, FetchIdAlloc,
+                 FlitSchedule, MemFetch, MemPartition};
 use crate::stats::{CoreSink, CoreStatShard, PartitionSink,
                    PartitionStatShard, StatsEngine};
 use crate::Cycle;
@@ -72,13 +116,98 @@ const _: () = {
     assert_send::<SimtCore>();
     assert_send::<MemPartition>();
     assert_send::<MemFetch>();
+    assert_send::<ExchangeLane>();
     assert_send::<WorkerChunk>();
 };
 
+/// Static routing knowledge copied into every chunk so workers route
+/// fetches to destination chunks without touching shared state.
+#[derive(Debug, Clone)]
+pub struct RouteTable {
+    /// L2 line size (partition hash input).
+    pub line_size: u32,
+    /// Number of memory partitions.
+    pub nparts: u32,
+    /// Number of cores (return-path validation bound).
+    pub ncores: u32,
+    /// Chunk boundaries over core ids (`threads + 1` offsets).
+    pub core_starts: Vec<usize>,
+    /// Chunk boundaries over partition ids.
+    pub part_starts: Vec<usize>,
+}
+
+/// One direction of a chunk's sharded exchange: publish buffers (one
+/// per destination chunk), consume buffers (one per source chunk,
+/// swapped with the sources' publish buffers at the barrier), the
+/// per-buffer sequence bases and drain horizon the main thread wrote
+/// at the last swap, and the consumer-owned [`CrossbarSlice`] holding
+/// in-flight fetches. See the module docs for the swap protocol.
+#[derive(Debug, Default)]
+pub struct ExchangeLane {
+    /// `out[dest]`: fetches published for `dest`'s consumer, tagged
+    /// with this chunk's local sequence numbers.
+    pub out: Vec<Vec<(u64, MemFetch)>>,
+    /// `inbox[src]`: fetches swapped in from `src`'s publish buffer.
+    pub inbox: Vec<Vec<(u64, MemFetch)>>,
+    /// Global sequence base of each inbox buffer (written at swap).
+    pub inbox_base: Vec<u64>,
+    /// Fetches published since the last swap (read+reset at swap).
+    pub published: u64,
+    /// Global drain horizon (written at swap): every fetch with
+    /// `seq < horizon` has cleared the crossbar.
+    pub horizon: u64,
+    /// In-flight fetches for this chunk's consumers, ascending seq.
+    pub slice: CrossbarSlice,
+}
+
+impl ExchangeLane {
+    fn new(threads: usize) -> Self {
+        Self {
+            out: (0..threads).map(|_| Vec::new()).collect(),
+            inbox: (0..threads).map(|_| Vec::new()).collect(),
+            inbox_base: vec![0; threads],
+            published: 0,
+            horizon: 0,
+            slice: CrossbarSlice::default(),
+        }
+    }
+
+    /// Producer side: queue `f` for `dest`'s consumer under this
+    /// chunk's next local sequence number.
+    #[inline]
+    pub fn publish(&mut self, dest: usize, f: MemFetch) {
+        let seq = self.published;
+        self.published += 1;
+        self.out[dest].push((seq, f));
+    }
+
+    /// Consumer side: merge the swapped-in buffers into the crossbar
+    /// slice. Concatenating in source-chunk order is ascending global
+    /// sequence order — chunk ranges are contiguous ascending and the
+    /// bases are prefix sums in the same order — i.e. the
+    /// global-id-order drain rule, enforced locally.
+    pub fn gather(&mut self) {
+        for (src, buf) in self.inbox.iter_mut().enumerate() {
+            let base = self.inbox_base[src];
+            for (local_seq, f) in buf.drain(..) {
+                self.slice.push(base + local_seq, f);
+            }
+        }
+    }
+
+    /// Any fetch still inside this lane?
+    pub fn busy(&self) -> bool {
+        !self.slice.is_empty()
+            || self.out.iter().any(|b| !b.is_empty())
+            || self.inbox.iter().any(|b| !b.is_empty())
+    }
+}
+
 /// One worker's exclusively-owned slice of the GPU: a contiguous run
 /// of cores and a contiguous run of memory partitions, each paired
-/// with its worker-owned stat shard, plus the exchange queues the main
-/// thread fills/drains between phases.
+/// with its worker-owned stat shard, plus the exchange state — the
+/// sharded lanes (default) or the central-exchange queues the main
+/// thread fills/drains between phases (`icnt_sharded = 0`).
 #[derive(Debug)]
 pub struct WorkerChunk {
     /// Global id of `cores[0]`.
@@ -88,11 +217,6 @@ pub struct WorkerChunk {
     pub core_shards: Vec<CoreStatShard>,
     /// `core_ids[i]` is `cores[i]`'s strided fetch-id allocator.
     pub core_ids: Vec<FetchIdAlloc>,
-    /// Responses routed by the main thread: `(arrival cycle, local
-    /// core index, fetch)`, delivered at the next core phase.
-    pub core_inbox: Vec<(Cycle, usize, MemFetch)>,
-    /// Outbound fetches produced by the core phase, in core-id order.
-    pub out_fetches: Vec<MemFetch>,
     /// TBs retired during the core phase, in core-id order.
     pub finished: Vec<FinishedTb>,
 
@@ -101,6 +225,24 @@ pub struct WorkerChunk {
     pub parts: Vec<MemPartition>,
     /// `part_shards[i]` belongs to `parts[i]`.
     pub part_shards: Vec<PartitionStatShard>,
+
+    /// Sharded exchange enabled (`icnt_sharded`).
+    pub sharded: bool,
+    /// Routing constants (shared-nothing copy).
+    pub route: RouteTable,
+    /// core→mem request lane (consumed by the partition phase).
+    pub req: ExchangeLane,
+    /// mem→core response lane (consumed by the next core phase).
+    pub resp: ExchangeLane,
+    /// Reused scratch for per-fetch routing inside a phase.
+    route_scratch: Vec<MemFetch>,
+
+    // --- central exchange (icnt_sharded = 0) ---
+    /// Responses routed by the main thread: `(arrival cycle, local
+    /// core index, fetch)`, delivered at the next core phase.
+    pub core_inbox: Vec<(Cycle, usize, MemFetch)>,
+    /// Outbound fetches produced by the core phase, in core-id order.
+    pub out_fetches: Vec<MemFetch>,
     /// Requests routed by the main thread: `(local partition index,
     /// fetch)`, pushed at the start of the partition phase.
     pub part_inbox: Vec<(usize, MemFetch)>,
@@ -116,6 +258,8 @@ impl WorkerChunk {
             || !self.part_inbox.is_empty()
             || !self.out_fetches.is_empty()
             || !self.out_responses.is_empty()
+            || self.req.busy()
+            || self.resp.busy()
             || self.cores.iter().any(|c| c.busy())
             || self.parts.iter().any(|p| p.busy())
     }
@@ -152,12 +296,22 @@ pub fn chunk_of(starts: &[usize], global: usize) -> usize {
 
 /// Distribute cores and partitions over `threads` chunks (contiguous,
 /// balanced). Each core gets its strided [`FetchIdAlloc`] keyed by its
-/// global id so fetch ids are thread-count independent.
+/// global id so fetch ids are thread-count independent; each chunk
+/// gets a [`RouteTable`] copy and its two [`ExchangeLane`]s.
 pub fn build_chunks(cores: Vec<SimtCore>, parts: Vec<MemPartition>,
-                    threads: usize) -> Vec<Mutex<WorkerChunk>> {
+                    threads: usize, line_size: u32, sharded: bool)
+    -> Vec<Mutex<WorkerChunk>> {
     let ncores = cores.len();
+    let nparts = parts.len();
     let core_starts = split_starts(ncores, threads);
-    let part_starts = split_starts(parts.len(), threads);
+    let part_starts = split_starts(nparts, threads);
+    let route = RouteTable {
+        line_size,
+        nparts: nparts as u32,
+        ncores: ncores as u32,
+        core_starts: core_starts.clone(),
+        part_starts: part_starts.clone(),
+    };
     let mut cores = cores.into_iter();
     let mut parts = parts.into_iter();
     (0..threads)
@@ -181,12 +335,17 @@ pub fn build_chunks(cores: Vec<SimtCore>, parts: Vec<MemPartition>,
                 cores: chunk_cores,
                 core_shards,
                 core_ids,
-                core_inbox: Vec::new(),
-                out_fetches: Vec::new(),
                 finished: Vec::new(),
                 part_base: part_starts[t],
                 parts: chunk_parts,
                 part_shards,
+                sharded,
+                route: route.clone(),
+                req: ExchangeLane::new(threads),
+                resp: ExchangeLane::new(threads),
+                route_scratch: Vec::new(),
+                core_inbox: Vec::new(),
+                out_fetches: Vec::new(),
                 part_inbox: Vec::new(),
                 out_responses: Vec::new(),
             })
@@ -205,15 +364,29 @@ pub fn resolve_threads(requested: u32, num_cores: u32) -> usize {
     req.clamp(1, (num_cores as usize).max(1))
 }
 
-/// The core phase of one cycle over one chunk: deliver the previous
-/// cycle's responses (with their recorded arrival cycles), then cycle
-/// every core, draining its outbound fetches and retired TBs into the
-/// chunk's exchange queues in core-id order. `central` is `Some` only
-/// on the sequential clean-mode path.
+/// The core phase of one cycle over one chunk: deliver the responses
+/// that cleared the crossbar last cycle (sharded: gather + horizon
+/// prefix of the resp slice; central: the main-thread-routed inbox),
+/// then cycle every core, routing its outbound fetches and retired
+/// TBs. `central` is `Some` only on the sequential clean-mode path.
 pub fn core_phase(chunk: &mut WorkerChunk, now: Cycle,
                   mut central: Option<&mut StatsEngine>) {
-    for (arrived, local, f) in chunk.core_inbox.drain(..) {
-        chunk.cores[local].receive_response(f, arrived);
+    if chunk.sharded {
+        chunk.resp.gather();
+        // responses under the horizon cleared the crossbar at cycle
+        // now-1 (the last response swap) — same arrival stamp the
+        // central exchange records
+        let arrived = now.saturating_sub(1);
+        let horizon = chunk.resp.horizon;
+        while let Some(f) = chunk.resp.slice.pop_ready(horizon) {
+            let core = f.ret.expect("validated at publish").core_id;
+            chunk.cores[core as usize - chunk.core_base]
+                .receive_response(f, arrived);
+        }
+    } else {
+        for (arrived, local, f) in chunk.core_inbox.drain(..) {
+            chunk.cores[local].receive_response(f, arrived);
+        }
     }
     for i in 0..chunk.cores.len() {
         let mut sink = match central.as_deref_mut() {
@@ -222,18 +395,43 @@ pub fn core_phase(chunk: &mut WorkerChunk, now: Cycle,
         };
         chunk.cores[i].cycle_with(now, &mut sink,
                                   &mut chunk.core_ids[i]);
-        chunk.cores[i].drain_to_icnt_into(&mut chunk.out_fetches);
+        if chunk.sharded {
+            // route each fetch to its destination partition chunk,
+            // counting its icnt flit at production time (same cycle
+            // the central exchange counts it at push time)
+            chunk.cores[i]
+                .drain_to_icnt_into(&mut chunk.route_scratch);
+            for f in chunk.route_scratch.drain(..) {
+                sink.inc_icnt_to_mem(f.stream_slot);
+                let p = partition_of(f.addr, chunk.route.line_size,
+                                     chunk.route.nparts) as usize;
+                let dest = chunk_of(&chunk.route.part_starts, p);
+                chunk.req.publish(dest, f);
+            }
+        } else {
+            chunk.cores[i].drain_to_icnt_into(&mut chunk.out_fetches);
+        }
         chunk.finished.extend(chunk.cores[i].take_finished());
     }
 }
 
-/// The partition phase of one cycle over one chunk: push the requests
-/// the main thread routed here, then cycle every busy partition,
-/// draining responses in partition-id order.
+/// The partition phase of one cycle over one chunk: deliver the
+/// requests that cleared the crossbar this cycle, then cycle every
+/// busy partition, routing its responses toward the core chunks.
 pub fn partition_phase(chunk: &mut WorkerChunk, now: Cycle,
                        mut central: Option<&mut StatsEngine>) {
-    for (local, f) in chunk.part_inbox.drain(..) {
-        chunk.parts[local].push_request(f);
+    if chunk.sharded {
+        chunk.req.gather();
+        let horizon = chunk.req.horizon;
+        while let Some(f) = chunk.req.slice.pop_ready(horizon) {
+            let p = partition_of(f.addr, chunk.route.line_size,
+                                 chunk.route.nparts) as usize;
+            chunk.parts[p - chunk.part_base].push_request(f);
+        }
+    } else {
+        for (local, f) in chunk.part_inbox.drain(..) {
+            chunk.parts[local].push_request(f);
+        }
     }
     for i in 0..chunk.parts.len() {
         if !chunk.parts[i].busy() {
@@ -244,7 +442,99 @@ pub fn partition_phase(chunk: &mut WorkerChunk, now: Cycle,
             None => PartitionSink::Shard(&mut chunk.part_shards[i]),
         };
         chunk.parts[i].cycle(now, &mut sink);
-        chunk.parts[i].drain_responses_into(&mut chunk.out_responses);
+        if chunk.sharded {
+            chunk.parts[i]
+                .drain_responses_into(&mut chunk.route_scratch);
+            for f in chunk.route_scratch.drain(..) {
+                sink.inc_icnt_to_core(f.stream_slot);
+                // a response without a valid return path cannot be
+                // delivered; dropping it (with a counter) beats
+                // silently misdelivering to core 0
+                let Some(ret) = f.ret else {
+                    sink.note_dropped_response();
+                    debug_assert!(false,
+                                  "response without return path \
+                                   (fetch {})", f.id);
+                    continue;
+                };
+                let core = ret.core_id as usize;
+                if core >= chunk.route.ncores as usize {
+                    sink.note_dropped_response();
+                    debug_assert!(false,
+                                  "response routed to nonexistent \
+                                   core {core} (fetch {})", f.id);
+                    continue;
+                }
+                let dest = chunk_of(&chunk.route.core_starts, core);
+                chunk.resp.publish(dest, f);
+            }
+        } else {
+            chunk.parts[i]
+                .drain_responses_into(&mut chunk.out_responses);
+        }
+    }
+}
+
+/// Which direction of the sharded exchange a swap operates on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneKind {
+    /// core→mem requests (consumed by the partition phase).
+    Request,
+    /// mem→core responses (consumed by the next core phase).
+    Response,
+}
+
+impl LaneKind {
+    #[inline]
+    fn of<'a>(self, chunk: &'a mut WorkerChunk)
+        -> &'a mut ExchangeLane {
+        match self {
+            LaneKind::Request => &mut chunk.req,
+            LaneKind::Response => &mut chunk.resp,
+        }
+    }
+}
+
+/// The main thread's O(threads) barrier step for one lane of the
+/// sharded exchange (workers are parked, so every chunk lock is
+/// uncontended): assign global sequence bases from per-chunk publish
+/// counts (prefix sums in chunk order — global id-order), step the
+/// central [`FlitSchedule`] one drain cycle, swap every
+/// publish/consume buffer pair, and write the bases + new horizon
+/// into the chunks. `bases` is caller-owned scratch (no per-cycle
+/// allocation).
+pub fn swap_lane(chunks: &[Mutex<WorkerChunk>], lane: LaneKind,
+                 sched: &mut FlitSchedule, now: Cycle,
+                 bases: &mut Vec<u64>) {
+    let mut guards: Vec<std::sync::MutexGuard<'_, WorkerChunk>> =
+        chunks.iter().map(lock_chunk).collect();
+    let n = guards.len();
+    bases.clear();
+    let mut next = sched.enqueued_total();
+    let mut total = 0u64;
+    for g in guards.iter_mut() {
+        let l = lane.of(g);
+        bases.push(next);
+        next += l.published;
+        total += l.published;
+        l.published = 0;
+    }
+    sched.publish(now, total);
+    let horizon = sched.drain(now);
+    for pc in 0..n {
+        for cc in 0..n {
+            let buf =
+                std::mem::take(&mut lane.of(&mut guards[pc]).out[cc]);
+            let old = std::mem::replace(
+                &mut lane.of(&mut guards[cc]).inbox[pc], buf);
+            debug_assert!(old.is_empty(),
+                          "consumer left a swapped buffer undrained");
+            lane.of(&mut guards[pc]).out[cc] = old;
+            lane.of(&mut guards[cc]).inbox_base[pc] = bases[pc];
+        }
+    }
+    for g in guards.iter_mut() {
+        lane.of(g).horizon = horizon;
     }
 }
 
@@ -337,6 +627,16 @@ mod tests {
     use super::*;
     use crate::config::SimConfig;
 
+    fn chunks_for(cfg: &SimConfig, threads: usize, sharded: bool)
+        -> Vec<Mutex<WorkerChunk>> {
+        let cores: Vec<SimtCore> =
+            (0..cfg.num_cores).map(|i| SimtCore::new(i, cfg)).collect();
+        let parts: Vec<MemPartition> = (0..cfg.num_l2_partitions)
+            .map(|i| MemPartition::new(i, cfg))
+            .collect();
+        build_chunks(cores, parts, threads, cfg.l2.line_size, sharded)
+    }
+
     #[test]
     fn split_starts_covers_everything_contiguously() {
         for n in [0usize, 1, 3, 4, 7, 24, 80] {
@@ -375,12 +675,7 @@ mod tests {
     #[test]
     fn build_chunks_preserves_core_and_partition_order() {
         let cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
-        let cores: Vec<SimtCore> =
-            (0..cfg.num_cores).map(|i| SimtCore::new(i, &cfg)).collect();
-        let parts: Vec<MemPartition> = (0..cfg.num_l2_partitions)
-            .map(|i| MemPartition::new(i, &cfg))
-            .collect();
-        let mut chunks = build_chunks(cores, parts, 3);
+        let mut chunks = chunks_for(&cfg, 3, true);
         let mut next_core = 0u32;
         let mut next_part = 0u32;
         for ch in &mut chunks {
@@ -398,6 +693,9 @@ mod tests {
             assert_eq!(ch.cores.len(), ch.core_shards.len());
             assert_eq!(ch.cores.len(), ch.core_ids.len());
             assert_eq!(ch.parts.len(), ch.part_shards.len());
+            assert_eq!(ch.req.out.len(), 3);
+            assert_eq!(ch.resp.inbox.len(), 3);
+            assert!(ch.sharded);
             assert!(!ch.busy());
         }
         assert_eq!(next_core, 4);
@@ -409,11 +707,7 @@ mod tests {
         // exercise the start/done/exit protocol with real threads and
         // empty chunks — guards the one place a bug would deadlock
         let cfg = SimConfig::preset("minimal").unwrap();
-        let chunks = build_chunks(
-            vec![SimtCore::new(0, &cfg)],
-            vec![MemPartition::new(0, &cfg)],
-            2,
-        );
+        let chunks = chunks_for(&cfg, 2, true);
         let ctrl = PoolCtrl::new(2);
         let ctrl_ref = &ctrl;
         std::thread::scope(|s| {
@@ -428,6 +722,71 @@ mod tests {
         });
         for ch in &chunks {
             assert!(!ch.lock().unwrap().busy());
+        }
+    }
+
+    #[test]
+    fn swap_lane_assigns_global_id_order_bases_and_swaps_buffers() {
+        use crate::cache::access::AccessType;
+        let cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+        let chunks = chunks_for(&cfg, 2, true);
+        let f = |id: u64| MemFetch {
+            id,
+            addr: id * 32,
+            bytes: 32,
+            access_type: AccessType::GlobalAccR,
+            is_write: false,
+            stream_id: 0,
+            stream_slot: 0,
+            kernel_uid: 1,
+            l1_bypass: false,
+            ret: None,
+        };
+        // chunk 0 publishes 2 fetches (one per dest), chunk 1
+        // publishes 1 — bases must be prefix sums in chunk order
+        {
+            let mut g0 = lock_chunk(&chunks[0]);
+            g0.req.publish(0, f(10));
+            g0.req.publish(1, f(11));
+            let mut g1 = lock_chunk(&chunks[1]);
+            g1.req.publish(0, f(20));
+        }
+        let mut sched = FlitSchedule::new(0, 32);
+        let mut bases = Vec::new();
+        swap_lane(&chunks, LaneKind::Request, &mut sched, 0,
+                  &mut bases);
+        assert_eq!(bases, vec![0, 2]);
+        assert_eq!(sched.enqueued_total(), 3);
+        assert_eq!(sched.drained_total(), 3, "latency 0: all drained");
+        {
+            let mut g0 = lock_chunk(&chunks[0]);
+            assert_eq!(g0.req.horizon, 3);
+            assert_eq!(g0.req.inbox_base, vec![0, 2]);
+            // consumer 0 received chunk0's seq 0 and chunk1's seq 0
+            assert_eq!(g0.req.inbox[0].len(), 1);
+            assert_eq!(g0.req.inbox[1].len(), 1);
+            assert_eq!(g0.req.published, 0, "publish count reset");
+            g0.req.gather();
+            let a = g0.req.slice.pop_ready(3).unwrap();
+            let b = g0.req.slice.pop_ready(3).unwrap();
+            assert_eq!((a.id, b.id), (10, 20),
+                       "global seq order: chunk 0 before chunk 1");
+            let mut g1 = lock_chunk(&chunks[1]);
+            assert_eq!(g1.req.inbox[0].len(), 1);
+            assert_eq!(g1.req.inbox[0][0], (1, f(11)),
+                       "chunk-local seq tags survive the swap");
+            // consumers gather every phase (the swap protocol's
+            // invariant: a swapped-out consume buffer is empty)
+            g1.req.gather();
+            assert_eq!(g1.req.slice.pop_ready(3).unwrap().id, 11);
+        }
+        // second swap: the drained buffers travel back as publish
+        // buffers (double-buffering), nothing is left pending
+        swap_lane(&chunks, LaneKind::Request, &mut sched, 1,
+                  &mut bases);
+        assert_eq!(sched.enqueued_total(), 3);
+        for ch in &chunks {
+            assert!(!lock_chunk(ch).req.busy());
         }
     }
 }

@@ -340,48 +340,107 @@ impl PowerDomain {
 ///   GPU simulator*, Huerta 2025).
 ///
 /// Merging is pure cell-wise addition either way.
+///
+/// **Layout:** the serviced-outcome counters live in one flattened
+/// `Vec<u64>` indexed `slot * SHARD_CELLS + type * OUTCOMES +
+/// outcome` — the per-stream increment (the hottest write in the
+/// simulator) is a single multiply-add index into one contiguous
+/// array, with the grow branch taken only the first time a new
+/// stream slot appears. Fail tables and flit counters are cold and
+/// keep per-slot containers.
 #[derive(Debug, Clone, Default)]
 pub struct CoreStatShard {
-    slots: Vec<ShardSlot>,
+    /// `cells[slot * SHARD_CELLS + t.idx() * OUTCOMES + o.idx()]`.
+    cells: Vec<u64>,
+    /// Per-slot fail tables (cold path).
+    fail: Vec<FailTable>,
+    /// Per-slot outbound (core→mem) interconnect flits, recorded at
+    /// fetch production time by the sharded exchange.
+    icnt_to_mem: Vec<u64>,
     dirty: bool,
 }
 
-#[derive(Debug, Clone, Default)]
-struct ShardSlot {
-    stats: StatTable,
-    fail: FailTable,
+/// Cells per stream slot in a flattened shard: the full
+/// `(access_type, outcome)` cube.
+const SHARD_CELLS: usize = AccessType::COUNT * AccessOutcome::COUNT;
+
+/// Flat index of one `(slot, type, outcome)` cell.
+#[inline]
+fn shard_cell(slot: StreamSlot, t: AccessType, o: AccessOutcome)
+    -> usize {
+    slot as usize * SHARD_CELLS + t.idx() * AccessOutcome::COUNT
+        + o.idx()
+}
+
+/// Serviced-outcome total of one slot's flattened cell block (energy
+/// is billed per serviced access at absorb time).
+fn serviced_in_cells(cells: &[u64]) -> u64 {
+    AccessOutcome::ALL
+        .iter()
+        .filter(|o| o.is_serviced())
+        .map(|o| {
+            (0..AccessType::COUNT)
+                .map(|t| cells[t * AccessOutcome::COUNT + o.idx()])
+                .sum::<u64>()
+        })
+        .sum()
 }
 
 impl CoreStatShard {
-    #[inline]
-    fn slot_mut(&mut self, slot: StreamSlot) -> &mut ShardSlot {
-        let i = slot as usize;
-        if i >= self.slots.len() {
-            self.slots.resize_with(i + 1, ShardSlot::default);
-        }
-        &mut self.slots[i]
-    }
-
     /// Record one L1 outcome for `slot`'s stream (raw — no mode
-    /// routing; the engine routes at absorb/flush time).
+    /// routing; the engine routes at absorb/flush time). The flat
+    /// fast path: one computed index, one add.
     #[inline]
     pub fn inc(&mut self, slot: StreamSlot, t: AccessType,
                o: AccessOutcome) {
+        let i = shard_cell(slot, t, o);
+        if i >= self.cells.len() {
+            self.cells.resize((slot as usize + 1) * SHARD_CELLS, 0);
+        }
+        self.cells[i] += 1;
         self.dirty = true;
-        self.slot_mut(slot).stats.inc(t, o);
     }
 
     /// Record one L1 reservation failure for `slot`'s stream.
     #[inline]
     pub fn inc_fail(&mut self, slot: StreamSlot, t: AccessType,
                     f: FailOutcome) {
+        let i = slot as usize;
+        if i >= self.fail.len() {
+            self.fail.resize_with(i + 1, FailTable::new);
+        }
+        self.fail[i].inc(t, f);
         self.dirty = true;
-        self.slot_mut(slot).fail.inc(t, f);
+    }
+
+    /// Record one outbound (core→mem) interconnect flit for `slot`'s
+    /// stream.
+    #[inline]
+    pub fn inc_icnt_to_mem(&mut self, slot: StreamSlot) {
+        let i = slot as usize;
+        if i >= self.icnt_to_mem.len() {
+            self.icnt_to_mem.resize(i + 1, 0);
+        }
+        self.icnt_to_mem[i] += 1;
+        self.dirty = true;
     }
 
     /// Anything recorded since the last merge?
     pub fn is_dirty(&self) -> bool {
         self.dirty
+    }
+
+    /// Highest slot index with storage (over every counter kind).
+    fn slots(&self) -> usize {
+        (self.cells.len() / SHARD_CELLS)
+            .max(self.fail.len())
+            .max(self.icnt_to_mem.len())
+    }
+
+    /// The flattened cell block of `slot`, if allocated.
+    fn cells_of(&self, slot: usize) -> Option<&[u64]> {
+        let start = slot * SHARD_CELLS;
+        self.cells.get(start..start + SHARD_CELLS)
     }
 }
 
@@ -393,54 +452,94 @@ impl CoreStatShard {
 /// partition-id order via [`StatsEngine::absorb_partition_shard`].
 #[derive(Debug, Clone, Default)]
 pub struct PartitionStatShard {
-    slots: Vec<PartShardSlot>,
+    /// Flattened L2 cells, same layout as [`CoreStatShard`].
+    cells: Vec<u64>,
+    /// Per-slot fail tables (cold path).
+    fail: Vec<FailTable>,
+    /// Per-slot DRAM serviced requests.
+    dram: Vec<u64>,
+    /// Per-slot inbound (mem→core) interconnect flits, recorded at
+    /// response production time by the sharded exchange.
+    icnt_to_core: Vec<u64>,
+    /// Responses produced without a usable return path (absorbed into
+    /// [`StatsEngine::dropped_responses`]; should stay 0).
+    dropped_responses: u64,
     dirty: bool,
 }
 
-#[derive(Debug, Clone, Default)]
-struct PartShardSlot {
-    stats: StatTable,
-    fail: FailTable,
-    /// DRAM serviced requests attributed to this slot's stream.
-    dram: u64,
-}
-
 impl PartitionStatShard {
-    #[inline]
-    fn slot_mut(&mut self, slot: StreamSlot) -> &mut PartShardSlot {
-        let i = slot as usize;
-        if i >= self.slots.len() {
-            self.slots.resize_with(i + 1, PartShardSlot::default);
-        }
-        &mut self.slots[i]
-    }
-
-    /// Record one L2 outcome for `slot`'s stream.
+    /// Record one L2 outcome for `slot`'s stream (flat fast path).
     #[inline]
     pub fn inc_l2(&mut self, slot: StreamSlot, t: AccessType,
                   o: AccessOutcome) {
+        let i = shard_cell(slot, t, o);
+        if i >= self.cells.len() {
+            self.cells.resize((slot as usize + 1) * SHARD_CELLS, 0);
+        }
+        self.cells[i] += 1;
         self.dirty = true;
-        self.slot_mut(slot).stats.inc(t, o);
     }
 
     /// Record one L2 reservation failure for `slot`'s stream.
     #[inline]
     pub fn inc_l2_fail(&mut self, slot: StreamSlot, t: AccessType,
                        f: FailOutcome) {
+        let i = slot as usize;
+        if i >= self.fail.len() {
+            self.fail.resize_with(i + 1, FailTable::new);
+        }
+        self.fail[i].inc(t, f);
         self.dirty = true;
-        self.slot_mut(slot).fail.inc(t, f);
     }
 
     /// Record one DRAM serviced request for `slot`'s stream.
     #[inline]
     pub fn inc_dram(&mut self, slot: StreamSlot) {
+        let i = slot as usize;
+        if i >= self.dram.len() {
+            self.dram.resize(i + 1, 0);
+        }
+        self.dram[i] += 1;
         self.dirty = true;
-        self.slot_mut(slot).dram += 1;
+    }
+
+    /// Record one inbound (mem→core) interconnect flit for `slot`'s
+    /// stream.
+    #[inline]
+    pub fn inc_icnt_to_core(&mut self, slot: StreamSlot) {
+        let i = slot as usize;
+        if i >= self.icnt_to_core.len() {
+            self.icnt_to_core.resize(i + 1, 0);
+        }
+        self.icnt_to_core[i] += 1;
+        self.dirty = true;
+    }
+
+    /// A response had no (or an invalid) return path and was dropped
+    /// at the partition side instead of being misdelivered.
+    #[inline]
+    pub fn note_dropped_response(&mut self) {
+        self.dropped_responses += 1;
+        self.dirty = true;
     }
 
     /// Anything recorded since the last merge?
     pub fn is_dirty(&self) -> bool {
         self.dirty
+    }
+
+    /// Highest slot index with storage (over every counter kind).
+    fn slots(&self) -> usize {
+        (self.cells.len() / SHARD_CELLS)
+            .max(self.fail.len())
+            .max(self.dram.len())
+            .max(self.icnt_to_core.len())
+    }
+
+    /// The flattened cell block of `slot`, if allocated.
+    fn cells_of(&self, slot: usize) -> Option<&[u64]> {
+        let start = slot * SHARD_CELLS;
+        self.cells.get(start..start + SHARD_CELLS)
     }
 }
 
@@ -475,6 +574,19 @@ impl CoreSink<'_> {
             CoreSink::Shard(s) => s.inc_fail(slot, t, f),
             CoreSink::Central(e) => {
                 e.inc_core_fail(core_id, slot, t, f, cycle);
+            }
+        }
+    }
+
+    /// Record one outbound (core→mem) interconnect flit — the sharded
+    /// exchange counts flits at fetch production time, the same cycle
+    /// the central exchange counted them at its push point.
+    #[inline]
+    pub fn inc_icnt_to_mem(&mut self, slot: StreamSlot) {
+        match self {
+            CoreSink::Shard(s) => s.inc_icnt_to_mem(slot),
+            CoreSink::Central(e) => {
+                e.inc_icnt_slot(IcntDir::ToMem, slot);
             }
         }
     }
@@ -521,6 +633,29 @@ impl PartitionSink<'_> {
         match self {
             PartitionSink::Shard(s) => s.inc_dram(slot),
             PartitionSink::Central(e) => e.inc_dram_slot(slot),
+        }
+    }
+
+    /// Record one inbound (mem→core) interconnect flit at response
+    /// production time (the sharded exchange's counting point — the
+    /// same cycle the central exchange counted it at its push point).
+    #[inline]
+    pub fn inc_icnt_to_core(&mut self, slot: StreamSlot) {
+        match self {
+            PartitionSink::Shard(s) => s.inc_icnt_to_core(slot),
+            PartitionSink::Central(e) => {
+                e.inc_icnt_slot(IcntDir::ToCore, slot);
+            }
+        }
+    }
+
+    /// A response without a usable return path was dropped (counted,
+    /// never misdelivered).
+    #[inline]
+    pub fn note_dropped_response(&mut self) {
+        match self {
+            PartitionSink::Shard(s) => s.note_dropped_response(),
+            PartitionSink::Central(e) => e.note_dropped_response(),
         }
     }
 }
@@ -901,6 +1036,9 @@ impl StatsEngine {
 
     /// Merge every core shard into the L1 domain. Called on kernel exit
     /// and at end of run; idempotent and cheap when nothing is pending.
+    /// (Engine-internal shards hold post-admission storage slots —
+    /// mode routing and power billing already happened at inc time, so
+    /// this is raw cell-wise addition.)
     pub fn flush_shards(&mut self) {
         if !self.shards_dirty {
             return;
@@ -910,17 +1048,31 @@ impl StatsEngine {
             if !shard.dirty {
                 continue;
             }
-            for (slot, ss) in shard.slots.iter_mut().enumerate() {
-                if ss.stats.is_empty() && ss.fail.total() == 0 {
+            for slot in 0..shard.slots() {
+                let has_cells = shard
+                    .cells_of(slot)
+                    .is_some_and(|c| c.iter().any(|&x| x != 0));
+                let has_fail = shard
+                    .fail
+                    .get(slot)
+                    .is_some_and(|f| f.total() > 0);
+                if !has_cells && !has_fail {
                     continue;
                 }
                 let cs = l1.slot_mut(slot as StreamSlot);
                 cs.touched = true;
-                cs.stats.add(&ss.stats);
-                cs.stats_pw.add(&ss.stats);
-                cs.fail.add(&ss.fail);
-                ss.stats.clear();
-                ss.fail.clear();
+                if has_cells {
+                    let start = slot * SHARD_CELLS;
+                    let cells =
+                        &mut shard.cells[start..start + SHARD_CELLS];
+                    cs.stats.add_cells(cells);
+                    cs.stats_pw.add_cells(cells);
+                    cells.fill(0);
+                }
+                if has_fail {
+                    cs.fail.add(&shard.fail[slot]);
+                    shard.fail[slot].clear();
+                }
             }
             shard.dirty = false;
         }
@@ -938,24 +1090,47 @@ impl StatsEngine {
             return;
         }
         let l1_fj = self.energy_fj[PowerComponent::L1.idx()];
-        for slot in 0..shard.slots.len() {
-            let ss = &mut shard.slots[slot];
-            if ss.stats.is_empty() && ss.fail.total() == 0 {
+        let icnt_fj = self.energy_fj[PowerComponent::Icnt.idx()];
+        for slot in 0..shard.slots() {
+            let has_cells = shard
+                .cells_of(slot)
+                .is_some_and(|c| c.iter().any(|&x| x != 0));
+            let has_fail =
+                shard.fail.get(slot).is_some_and(|f| f.total() > 0);
+            let flits =
+                shard.icnt_to_mem.get(slot).copied().unwrap_or(0);
+            if !has_cells && !has_fail && flits == 0 {
                 continue;
             }
             let store = self.storage(slot as StreamSlot);
-            let serviced = ss.stats.total_serviced();
-            if serviced > 0 {
-                self.power.bill(store, PowerComponent::L1,
-                                l1_fj * serviced);
+            if has_cells {
+                let start = slot * SHARD_CELLS;
+                let serviced = serviced_in_cells(
+                    &shard.cells[start..start + SHARD_CELLS]);
+                if serviced > 0 {
+                    self.power.bill(store, PowerComponent::L1,
+                                    l1_fj * serviced);
+                }
+                let cs = self.l1.slot_mut(store);
+                cs.touched = true;
+                let cells =
+                    &mut shard.cells[start..start + SHARD_CELLS];
+                cs.stats.add_cells(cells);
+                cs.stats_pw.add_cells(cells);
+                cells.fill(0);
             }
-            let cs = self.l1.slot_mut(store);
-            cs.touched = true;
-            cs.stats.add(&ss.stats);
-            cs.stats_pw.add(&ss.stats);
-            cs.fail.add(&ss.fail);
-            ss.stats.clear();
-            ss.fail.clear();
+            if has_fail {
+                let cs = self.l1.slot_mut(store);
+                cs.touched = true;
+                cs.fail.add(&shard.fail[slot]);
+                shard.fail[slot].clear();
+            }
+            if flits > 0 {
+                self.icnt_to_mem.bump_n(store, flits);
+                self.power.bill(store, PowerComponent::Icnt,
+                                icnt_fj * flits);
+                shard.icnt_to_mem[slot] = 0;
+            }
         }
         shard.dirty = false;
     }
@@ -971,34 +1146,57 @@ impl StatsEngine {
         }
         let l2_fj = self.energy_fj[PowerComponent::L2.idx()];
         let dram_fj = self.energy_fj[PowerComponent::Dram.idx()];
-        for slot in 0..shard.slots.len() {
-            let ss = &mut shard.slots[slot];
-            let has_l2 = !ss.stats.is_empty() || ss.fail.total() > 0;
-            if !has_l2 && ss.dram == 0 {
+        let icnt_fj = self.energy_fj[PowerComponent::Icnt.idx()];
+        for slot in 0..shard.slots() {
+            let has_cells = shard
+                .cells_of(slot)
+                .is_some_and(|c| c.iter().any(|&x| x != 0));
+            let has_fail =
+                shard.fail.get(slot).is_some_and(|f| f.total() > 0);
+            let dram = shard.dram.get(slot).copied().unwrap_or(0);
+            let flits =
+                shard.icnt_to_core.get(slot).copied().unwrap_or(0);
+            if !has_cells && !has_fail && dram == 0 && flits == 0 {
                 continue;
             }
             let store = self.storage(slot as StreamSlot);
-            if has_l2 {
-                let serviced = ss.stats.total_serviced();
+            if has_cells {
+                let start = slot * SHARD_CELLS;
+                let serviced = serviced_in_cells(
+                    &shard.cells[start..start + SHARD_CELLS]);
                 if serviced > 0 {
                     self.power.bill(store, PowerComponent::L2,
                                     l2_fj * serviced);
                 }
                 let cs = self.l2.slot_mut(store);
                 cs.touched = true;
-                cs.stats.add(&ss.stats);
-                cs.stats_pw.add(&ss.stats);
-                cs.fail.add(&ss.fail);
-                ss.stats.clear();
-                ss.fail.clear();
+                let cells =
+                    &mut shard.cells[start..start + SHARD_CELLS];
+                cs.stats.add_cells(cells);
+                cs.stats_pw.add_cells(cells);
+                cells.fill(0);
             }
-            if ss.dram > 0 {
-                self.dram.bump_n(store, ss.dram);
+            if has_fail {
+                let cs = self.l2.slot_mut(store);
+                cs.touched = true;
+                cs.fail.add(&shard.fail[slot]);
+                shard.fail[slot].clear();
+            }
+            if dram > 0 {
+                self.dram.bump_n(store, dram);
                 self.power.bill(store, PowerComponent::Dram,
-                                dram_fj * ss.dram);
-                ss.dram = 0;
+                                dram_fj * dram);
+                shard.dram[slot] = 0;
+            }
+            if flits > 0 {
+                self.icnt_to_core.bump_n(store, flits);
+                self.power.bill(store, PowerComponent::Icnt,
+                                icnt_fj * flits);
+                shard.icnt_to_core[slot] = 0;
             }
         }
+        self.dropped_responses += shard.dropped_responses;
+        shard.dropped_responses = 0;
         shard.dirty = false;
     }
 
@@ -1626,6 +1824,50 @@ mod tests {
                        direct.domain_total(StatDomain::Power),
                        "mode {mode:?}");
             assert!(!shard.is_dirty());
+        }
+    }
+
+    #[test]
+    fn shard_icnt_and_dropped_absorb_matches_central_inc() {
+        // the sharded exchange's production-time flit counting: a
+        // worker shard + central absorb must equal inc-time central
+        // flit accounting (counts, windows, power), per mode
+        for mode in [StatMode::PerStream, StatMode::AggregateExact] {
+            let mut sharded = StatsEngine::new(mode);
+            let mut direct = StatsEngine::new(mode);
+            let mut core = CoreStatShard::default();
+            let mut part = PartitionStatShard::default();
+            for stream in [1u64, 2, 1, 1, 2] {
+                let slot = sharded.intern_stream(stream);
+                direct.intern_stream(stream);
+                core.inc_icnt_to_mem(slot);
+                direct.inc_icnt(IcntDir::ToMem, stream);
+            }
+            for stream in [2u64, 2, 1] {
+                let slot = sharded.intern_stream(stream);
+                part.inc_icnt_to_core(slot);
+                direct.inc_icnt(IcntDir::ToCore, stream);
+            }
+            part.note_dropped_response();
+            direct.note_dropped_response();
+            sharded.absorb_core_shard(&mut core);
+            sharded.absorb_partition_shard(&mut part);
+            assert_eq!(sharded.per_stream(StatDomain::Icnt),
+                       direct.per_stream(StatDomain::Icnt),
+                       "mode {mode:?}");
+            assert_eq!(sharded.per_stream_pw(StatDomain::Icnt),
+                       direct.per_stream_pw(StatDomain::Icnt));
+            for s in [1u64, 2, StatsEngine::AGG_KEY] {
+                assert_eq!(sharded.icnt_flits(IcntDir::ToMem, s),
+                           direct.icnt_flits(IcntDir::ToMem, s));
+                assert_eq!(sharded.icnt_flits(IcntDir::ToCore, s),
+                           direct.icnt_flits(IcntDir::ToCore, s));
+            }
+            assert_eq!(sharded.domain_total(StatDomain::Power),
+                       direct.domain_total(StatDomain::Power));
+            assert_eq!(sharded.dropped_responses(),
+                       direct.dropped_responses());
+            assert!(!core.is_dirty() && !part.is_dirty());
         }
     }
 

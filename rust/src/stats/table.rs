@@ -40,6 +40,19 @@ impl StatTable {
         }
     }
 
+    /// Add a flattened `[type * OUTCOMES + outcome]` cell block — the
+    /// layout of the shard fast path
+    /// ([`crate::stats::CoreStatShard`]) — cell-wise.
+    pub fn add_cells(&mut self, cells: &[u64]) {
+        debug_assert_eq!(cells.len(),
+                         AccessType::COUNT * AccessOutcome::COUNT);
+        for t in 0..AccessType::COUNT {
+            for o in 0..AccessOutcome::COUNT {
+                self.counts[t][o] += cells[t * AccessOutcome::COUNT + o];
+            }
+        }
+    }
+
     /// Sum of every cell.
     pub fn total(&self) -> u64 {
         self.counts.iter().flatten().sum()

@@ -1,7 +1,9 @@
 //! Determinism suite: the parallel sharded core/partition loop must be
-//! **bit-identical** to the sequential path. The same workload runs at
-//! `--sim-threads` 1/2/4/8 and the full exported stats JSON — every
-//! domain (L1/L2/DRAM/icnt/power), every stream, per-kernel windows and
+//! **bit-identical** to the sequential path, and the sharded
+//! double-buffered interconnect exchange must be bit-identical to the
+//! PR-2 central exchange. The same workload runs at `--sim-threads`
+//! 1/2/4/8 and the full exported stats JSON — every domain
+//! (L1/L2/DRAM/icnt/power), every stream, per-kernel windows and
 //! total cycle counts — must match byte for byte across thread counts,
 //! for the paper's per-stream (`tip`) and `exact` modes. Clean mode is
 //! pinned to one worker by design (its under-count is an inc-time
@@ -23,13 +25,15 @@ const THREAD_MATRIX: [u32; 4] = [1, 2, 4, 8];
 /// Run `bench` and export the full stats document plus the exit log
 /// (per-kernel per-stream window prints — merge-ordering bugs surface
 /// here as count diffs even when totals accidentally agree).
-fn run_fingerprint(bench: &str, preset: &str, mode: StatMode,
-                   serialize: bool, threads: u32) -> String {
+fn run_fingerprint_on(bench: &str, preset: &str, mode: StatMode,
+                      serialize: bool, threads: u32, sharded: bool)
+    -> String {
     let g = workloads::generate(bench).unwrap();
     let mut cfg = SimConfig::preset(preset).unwrap();
     cfg.stat_mode = mode;
     cfg.serialize_streams = serialize;
     cfg.sim_threads = threads;
+    cfg.icnt_sharded = sharded;
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(&g.workload).unwrap();
     sim.run().unwrap();
@@ -39,6 +43,11 @@ fn run_fingerprint(bench: &str, preset: &str, mode: StatMode,
         doc.push_str(entry);
     }
     doc
+}
+
+fn run_fingerprint(bench: &str, preset: &str, mode: StatMode,
+                   serialize: bool, threads: u32) -> String {
+    run_fingerprint_on(bench, preset, mode, serialize, threads, true)
 }
 
 fn assert_thread_matrix_identical(bench: &str, preset: &str,
@@ -92,6 +101,33 @@ fn l2_lat_bit_identical_across_thread_counts() {
     for mode in [StatMode::PerStream, StatMode::AggregateExact] {
         assert_thread_matrix_identical("l2_lat", "sm7_titanv_mini",
                                        mode, false);
+    }
+}
+
+#[test]
+fn sharded_exchange_bit_identical_to_central_exchange() {
+    // the tentpole's semantic anchor: the sharded double-buffered
+    // exchange reproduces the central crossbar byte for byte — same
+    // entries, same global-id order, same drain cycles — at every
+    // thread count, per mode and workload
+    for (bench, mode) in [
+        ("bench1_mini", StatMode::PerStream),
+        ("bench3", StatMode::PerStream),
+        ("bench3", StatMode::AggregateExact),
+        ("l2_lat", StatMode::PerStream),
+        ("bench1_mini", StatMode::AggregateBuggy),
+    ] {
+        let central = run_fingerprint_on(bench, "sm7_titanv_mini",
+                                         mode, false, 1, false);
+        for &t in &THREAD_MATRIX {
+            let sharded = run_fingerprint_on(
+                bench, "sm7_titanv_mini", mode, false, t, true);
+            assert_eq!(
+                central, sharded,
+                "{bench} mode={}: sharded exchange at --sim-threads \
+                 {t} diverged from the central exchange",
+                mode.label());
+        }
     }
 }
 

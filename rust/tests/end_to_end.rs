@@ -1,47 +1,49 @@
 //! Integration: full-size paper workloads through the complete stack
 //! (trace generation → simulation → stats → timeline), on the mini GPU
-//! preset. These are the heavyweight runs; `cargo test --release`
-//! keeps them in seconds.
+//! preset — driven entirely through the `streamsim::api` facade
+//! (`SimBuilder` → `SimSession` → `Snapshot`), the single supported
+//! way to run the simulator. These are the heavyweight runs;
+//! `cargo test --release` keeps them in seconds.
 
-use streamsim::cache::access::AccessType;
-use streamsim::config::SimConfig;
-use streamsim::sim::GpuSim;
-use streamsim::stats::StatDomain;
+use streamsim::api::{AccessType, SimBuilder, Snapshot, StatDomain,
+                     StatMode};
 use streamsim::workloads;
 
-fn run(bench: &str, preset: &str) -> GpuSim {
-    let g = workloads::generate(bench).unwrap();
-    let cfg = SimConfig::preset(preset).unwrap();
-    let mut sim = GpuSim::new(cfg).unwrap();
-    sim.enqueue_workload(&g.workload).unwrap();
-    sim.run().unwrap();
-    sim
+/// Run a built-in bench to idle and take the final snapshot.
+fn run(bench: &str, preset: &str) -> Snapshot {
+    let mut session = SimBuilder::preset(preset)
+        .bench(bench)
+        .build()
+        .unwrap_or_else(|e| panic!("{bench}/{preset}: {e}"));
+    session.run_to_idle().unwrap();
+    session.into_snapshot()
 }
 
 #[test]
 fn benchmark_1_stream_full_size() {
     // the paper's N = 1<<20, 256 thr/blk — 4096 TBs per kernel
     let g = workloads::generate("bench1").unwrap();
-    let cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
-    let mut sim = GpuSim::new(cfg).unwrap();
-    sim.enqueue_workload(&g.workload).unwrap();
-    sim.run().unwrap();
-    let stats = sim.stats();
-    assert_eq!(stats.kernels_done, 4);
+    let mut session = SimBuilder::preset("sm7_titanv_mini")
+        .workload(g.workload.clone())
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+    let snap = session.into_snapshot();
+    assert_eq!(snap.kernels_done(), 4);
     // analytic L1 totals hold at full size
     for (s, want) in &g.expected.l1_reads {
-        let got = stats.l1().stream_table(*s).unwrap()
+        let got = snap.l1().stream_table(*s).unwrap()
             .total_serviced_for_type(AccessType::GlobalAccR);
         assert_eq!(got, *want, "stream {s} reads");
     }
     for (s, want) in &g.expected.l1_writes {
-        let got = stats.l1().stream_table(*s).unwrap()
+        let got = snap.l1().stream_table(*s).unwrap()
             .total_serviced_for_type(AccessType::GlobalAccW);
         assert_eq!(got, *want, "stream {s} writes");
     }
     // L2 write-through totals
     for (s, want) in &g.expected.l2_writes {
-        let got = stats.l2().stream_table(*s).unwrap()
+        let got = snap.l2().stream_table(*s).unwrap()
             .total_serviced_for_type(AccessType::GlobalAccW);
         assert_eq!(got, *want, "stream {s} L2 writes");
     }
@@ -49,13 +51,12 @@ fn benchmark_1_stream_full_size() {
 
 #[test]
 fn deepbench_full_trace_runs() {
-    let sim = run("deepbench", "sm7_titanv_mini");
-    let stats = sim.stats();
-    assert_eq!(stats.kernels_done, 4); // 2 streams x (gemm + bias)
-    assert!(stats.total_cycles > 0);
+    let snap = run("deepbench", "sm7_titanv_mini");
+    assert_eq!(snap.kernels_done(), 4); // 2 streams x (gemm + bias)
+    assert!(snap.total_cycles() > 0);
     // the bias kernel depends on the gemm within each stream
     for s in [1u64, 2] {
-        let f: Vec<_> = stats.kernel_times.finished().into_iter()
+        let f: Vec<_> = snap.kernel_times().finished().into_iter()
             .filter(|(st, _, _)| *st == s).collect();
         assert_eq!(f.len(), 2);
         assert!(f[0].2.end_cycle <= f[1].2.start_cycle);
@@ -65,11 +66,10 @@ fn deepbench_full_trace_runs() {
 #[test]
 fn titanv_full_preset_runs_l2_lat() {
     // the real 80-SM TITAN V geometry on the small workload
-    let sim = run("l2_lat", "sm7_titanv");
-    let stats = sim.stats();
-    assert_eq!(stats.kernels_done, 4);
+    let snap = run("l2_lat", "sm7_titanv");
+    assert_eq!(snap.kernels_done(), 4);
     for s in 1..=4u64 {
-        let t = stats.l2().stream_table(s).unwrap();
+        let t = snap.l2().stream_table(s).unwrap();
         assert_eq!(t.total_serviced_for_type(AccessType::GlobalAccR), 1);
         assert_eq!(t.total_serviced_for_type(AccessType::GlobalAccW), 1);
     }
@@ -92,20 +92,19 @@ fn cli_end_to_end_validate_all_benches() {
 
 #[test]
 fn timeline_renders_for_full_runs() {
-    let sim = run("bench1_mini", "sm7_titanv_mini");
-    let gantt = sim.render_timeline(64);
+    let snap = run("bench1_mini", "sm7_titanv_mini");
+    let gantt = snap.render_timeline(64);
     assert!(gantt.contains("stream   0"));
     assert!(gantt.contains("stream   1"));
-    let csv = streamsim::timeline::to_csv(&sim.stats().kernel_times);
+    let csv = streamsim::timeline::to_csv(snap.kernel_times());
     assert_eq!(csv.lines().count(), 5); // header + 4 kernels
 }
 
 #[test]
 fn per_stream_dram_icnt_extensions_end_to_end() {
-    let sim = run("deepbench_mini", "sm7_titanv_mini");
-    let engine = &sim.stats().engine;
-    let dram = engine.per_stream(StatDomain::Dram);
-    let icnt = engine.per_stream(StatDomain::Icnt);
+    let snap = run("deepbench_mini", "sm7_titanv_mini");
+    let dram = snap.per_stream(StatDomain::Dram);
+    let icnt = snap.per_stream(StatDomain::Icnt);
     assert!(dram.iter().any(|(s, _)| *s == 1)
             && dram.iter().any(|(s, _)| *s == 2),
             "both streams must reach DRAM: {dram:?}");
@@ -113,27 +112,54 @@ fn per_stream_dram_icnt_extensions_end_to_end() {
             && icnt.iter().any(|(s, n)| *s == 2 && *n > 0),
             "both streams must cross the icnt: {icnt:?}");
     // the power domain is fed by the same engine, per stream
-    let power = sim.stats().engine.power_stats();
+    let power = snap.power_stats();
     assert!(power.per_stream[&1].total_pj() > 0.0);
     assert!(power.per_stream[&2].total_pj() > 0.0);
-    assert_eq!(engine.dropped_responses(), 0);
+    assert_eq!(snap.losses().dropped_responses, 0);
 }
 
 #[test]
 fn sum_invariant_every_domain_full_workload() {
     // Σ_streams per_stream == exact, for DRAM / interconnect / power
     // (the L1/L2 cases are covered by the validation harness)
-    let tip = run("bench1_mini", "sm7_titanv_mini");
-    let mut cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
-    cfg.stat_mode = streamsim::stats::StatMode::AggregateExact;
     let g = workloads::generate("bench1_mini").unwrap();
-    let mut exact = GpuSim::new(cfg).unwrap();
-    exact.enqueue_workload(&g.workload).unwrap();
-    exact.run().unwrap();
+    let mut tip = SimBuilder::preset("sm7_titanv_mini")
+        .workload(g.workload.clone())
+        .build()
+        .unwrap();
+    tip.run_to_idle().unwrap();
+    let tip = tip.into_snapshot();
+    let mut exact = SimBuilder::preset("sm7_titanv_mini")
+        .stat_mode(StatMode::AggregateExact)
+        .workload(g.workload.clone())
+        .build()
+        .unwrap();
+    exact.run_to_idle().unwrap();
+    let exact = exact.into_snapshot();
     for d in [StatDomain::Dram, StatDomain::Icnt, StatDomain::Power] {
-        let t = tip.stats().engine.domain_total(d);
-        let e = exact.stats().engine.domain_total(d);
+        let t = tip.domain_total(d);
+        let e = exact.domain_total(d);
         assert_eq!(t, e, "domain {}", d.name());
         assert!(t > 0, "domain {} empty", d.name());
     }
+}
+
+#[test]
+fn central_exchange_full_size_matches_sharded() {
+    // end-to-end anchor on a full-size workload: the `icnt_sharded`
+    // toggle is invisible in the results (the per-cycle matrix lives
+    // in tests/determinism.rs)
+    let g = workloads::generate("bench1_mini").unwrap();
+    let json = |sharded: bool| {
+        let mut s = SimBuilder::preset("sm7_titanv_mini")
+            .set("icnt_sharded", if sharded { "1" } else { "0" })
+            .sim_threads(4)
+            .workload(g.workload.clone())
+            .build()
+            .unwrap();
+        s.run_to_idle().unwrap();
+        // labels match so the exported documents are comparable
+        s.into_snapshot().to_json()
+    };
+    assert_eq!(json(true), json(false));
 }

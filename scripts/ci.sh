@@ -12,9 +12,17 @@
 #                              #   drift check against the committed
 #                              #   tests/golden/schema_v2_keys.txt
 #   scripts/ci.sh bench        # + record BENCH_stats.json (fast mode):
-#                              #   seq-vs-parallel throughput and the
-#                              #   ABL-1 per_stream_slot_indexed vs
+#                              #   seq-vs-parallel throughput, the
+#                              #   central-vs-sharded icnt exchange
+#                              #   (sharded_icnt), and the ABL-1
+#                              #   per_stream_slot_indexed vs
 #                              #   per_stream_by_id comparison
+#   scripts/ci.sh perf         # + perf regression gate: rerun the
+#                              #   parallel/sharded_icnt benches and
+#                              #   fail on >15% throughput regression
+#                              #   vs the BENCH_stats.json baseline
+#                              #   (skips cleanly when no baseline
+#                              #   has been recorded yet)
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -92,6 +100,49 @@ print("schema_version %d + key set match the committed golden"
 EOF
 fi
 
+if [[ "${1:-}" == "perf" ]]; then
+    echo "== perf gate: throughput vs BENCH_stats.json baseline =="
+    TMP="$(mktemp -d)"
+    trap 'rm -rf "$TMP"' EXIT
+    STREAMSIM_BENCH_FAST=1 \
+    STREAMSIM_BENCH_JSON="$TMP/perf.json" \
+        cargo bench --bench perf_sim_throughput
+    python3 - "$ROOT/BENCH_stats.json" "$TMP/perf.json" <<'EOF'
+import json, sys
+base = json.load(open(sys.argv[1]))
+new = json.load(open(sys.argv[2]))
+GATE_SECTIONS = ["parallel", "sharded_icnt"]
+THRESHOLD = 0.85  # fail below 85% of baseline (>15% regression)
+checked, failures = 0, []
+for sec in GATE_SECTIONS:
+    baseline = {e["name"]: e
+                for e in (base.get("sections", {}).get(sec) or [])}
+    for e in (new.get("sections", {}).get(sec) or []):
+        b = baseline.get(e["name"])
+        if (not b or not b.get("throughput_per_s")
+                or not e.get("throughput_per_s")):
+            continue
+        checked += 1
+        if e["throughput_per_s"] < THRESHOLD * b["throughput_per_s"]:
+            failures.append(
+                "%s/%s: %.0f cycles/s vs baseline %.0f (-%.0f%%)" % (
+                    sec, e["name"], e["throughput_per_s"],
+                    b["throughput_per_s"],
+                    100 * (1 - e["throughput_per_s"]
+                           / b["throughput_per_s"])))
+if checked == 0:
+    print("no recorded baseline in BENCH_stats.json — perf gate "
+          "skipped (run scripts/ci.sh bench first)")
+    sys.exit(0)
+if failures:
+    print("PERF REGRESSION (>15% vs baseline):")
+    for f in failures:
+        print("  " + f)
+    sys.exit(1)
+print("perf gate OK: %d case(s) within 15%% of baseline" % checked)
+EOF
+fi
+
 if [[ "${1:-}" == "bench" ]]; then
     echo "== perf baseline -> BENCH_stats.json =="
     STREAMSIM_BENCH_FAST=1 \
@@ -113,8 +164,12 @@ doc.setdefault("sections", {}).update(abl.get("sections", {}))
 doc["note"] = ("Recorded by scripts/ci.sh bench (fast mode). "
                "Sections: cycles / accesses_by_mode / titanv_full / "
                "parallel (seq vs --sim-threads 2/4 on the 80-SM "
-               "preset) / abl1 (per_stream_slot_indexed vs "
-               "per_stream_by_id).")
+               "preset) / sharded_icnt (central PR-2 exchange vs "
+               "sharded double-buffered exchange, bench3/sm7_titanv "
+               "at --sim-threads 1/2/4/8) / abl1 "
+               "(per_stream_slot_indexed vs per_stream_by_id). "
+               "scripts/ci.sh perf gates >15% regressions against "
+               "the parallel + sharded_icnt sections.")
 with open(main_path, "w") as f:
     json.dump(doc, f, indent=2)
     f.write("\n")
