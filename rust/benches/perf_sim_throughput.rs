@@ -23,11 +23,18 @@ fn sim_once_threaded(bench: &str, preset: &str, mode: StatMode,
 
 fn sim_once_exchange(bench: &str, preset: &str, mode: StatMode,
                      threads: u32, sharded: bool) -> (u64, u64) {
+    sim_once_idle(bench, preset, mode, threads, sharded, true)
+}
+
+fn sim_once_idle(bench: &str, preset: &str, mode: StatMode,
+                 threads: u32, sharded: bool, idle_skip: bool)
+    -> (u64, u64) {
     let g = workloads::generate(bench).unwrap();
     let mut cfg = SimConfig::preset(preset).unwrap();
     cfg.stat_mode = mode;
     cfg.sim_threads = threads;
     cfg.icnt_sharded = sharded;
+    cfg.idle_skip = idle_skip;
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(&g.workload).unwrap();
     sim.run().unwrap();
@@ -124,7 +131,30 @@ fn main() {
     b5.report("PERF-L3: central vs sharded icnt exchange (items = \
                GPU cycles)");
 
+    // the PR-6 before/after: always-tick (idle_skip=0) vs the
+    // idle-aware active set (idle_skip=1, the default). Same stats
+    // byte for byte (determinism suite); only the wall clock moves.
+    // idle_tail is the adversarial scenario — one serialized
+    // straggler keeps the GPU >95% idle for most of the run.
+    let idle_tail = if fast { "idle_tail_mini" } else { "idle_tail" };
+    let mut b6 = Bencher::from_env();
+    for &(skip, label) in &[(false, "off"), (true, "on")] {
+        for bench in [bench1, "bench3", idle_tail] {
+            for threads in [1u32, 4, 8] {
+                b6.bench(&format!(
+                    "{bench}/sm7_titanv t={threads} idle_skip={label}"),
+                    || {
+                    sim_once_idle(bench, "sm7_titanv",
+                                  StatMode::PerStream, threads, true,
+                                  skip).0
+                });
+            }
+        }
+    }
+    b6.report("PERF-L3: always-tick vs idle-aware active set (items = \
+               GPU cycles)");
+
     write_json(&[("cycles", &b), ("accesses_by_mode", &b2),
                  ("titanv_full", &b3), ("parallel", &b4),
-                 ("sharded_icnt", &b5)]);
+                 ("sharded_icnt", &b5), ("idle_skip", &b6)]);
 }

@@ -1,0 +1,103 @@
+//! Cheap per-component activity summaries for the idle-skip
+//! active-set scheduler in [`crate::sim::parallel`].
+//!
+//! Every tickable component ([`crate::core::SimtCore`],
+//! [`crate::mem::partition::MemPartition`], [`crate::mem::dram::Dram`])
+//! reports an [`Activity`] describing everything that could make its
+//! next `cycle()` call do observable work. The scheduler puts a
+//! component to sleep **iff** [`Activity::is_idle`] — and the
+//! byte-identity guarantee of `idle_skip` rests on the invariant that
+//! an idle component's tick is a provable no-op: no stat deltas, no
+//! queue movement, no outbound fetches (pinned by
+//! `tests/activity.rs`).
+//!
+//! `is_idle()` is intentionally *at least as strict* as the
+//! component's `busy()` predicate: a component may be reported active
+//! while `busy()` is false (e.g. undrained outbound buffers mid-phase),
+//! but never the reverse — sleeping a busy component would skip real
+//! work.
+
+/// Snapshot of everything that could make a component's next tick a
+/// non-no-op. All-zero means the tick would be a no-op.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Activity {
+    /// Warps resident in TB slots (cores; 0 for memory components).
+    pub resident_warps: u32,
+    /// Occupied TB slots (cores; 0 for memory components).
+    pub resident_tbs: u32,
+    /// Fetches waiting in input queues (core ldst queue; partition
+    /// incoming + replay).
+    pub queued: usize,
+    /// Timed returns still in flight (core hit queue; partition hit
+    /// queue + DRAM queue).
+    pub pending_fills: usize,
+    /// MSHR entries with fills outstanding (L1 for cores, L2 for
+    /// partitions).
+    pub mshr_entries: usize,
+    /// Sector accesses parked on those MSHR entries awaiting fills.
+    pub mshr_waiting: usize,
+    /// Fetches produced but not yet handed to the interconnect (core
+    /// `to_icnt`; partition outgoing responses + L2 miss queue).
+    pub outbound: usize,
+}
+
+impl Activity {
+    /// True when the component's next tick would be a no-op and it is
+    /// safe to drop it from the active set (until a wake edge fires).
+    #[inline]
+    pub fn is_idle(&self) -> bool {
+        *self == Activity::default()
+    }
+
+    /// Sum of two summaries (e.g. a partition folding in its DRAM
+    /// channel's view).
+    pub fn merge(mut self, other: Activity) -> Activity {
+        self.resident_warps += other.resident_warps;
+        self.resident_tbs += other.resident_tbs;
+        self.queued += other.queued;
+        self.pending_fills += other.pending_fills;
+        self.mshr_entries += other.mshr_entries;
+        self.mshr_waiting += other.mshr_waiting;
+        self.outbound += other.outbound;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_idle() {
+        assert!(Activity::default().is_idle());
+    }
+
+    #[test]
+    fn any_nonzero_field_is_active() {
+        let probes = [
+            Activity { resident_warps: 1, ..Default::default() },
+            Activity { resident_tbs: 1, ..Default::default() },
+            Activity { queued: 1, ..Default::default() },
+            Activity { pending_fills: 1, ..Default::default() },
+            Activity { mshr_entries: 1, ..Default::default() },
+            Activity { mshr_waiting: 1, ..Default::default() },
+            Activity { outbound: 1, ..Default::default() },
+        ];
+        for a in probes {
+            assert!(!a.is_idle(), "{a:?} should be active");
+        }
+    }
+
+    #[test]
+    fn merge_sums_fields() {
+        let a = Activity { queued: 2, mshr_entries: 1,
+                           ..Default::default() };
+        let b = Activity { queued: 3, pending_fills: 4,
+                           ..Default::default() };
+        let m = a.merge(b);
+        assert_eq!(m.queued, 5);
+        assert_eq!(m.pending_fills, 4);
+        assert_eq!(m.mshr_entries, 1);
+        assert!(!m.is_idle());
+    }
+}

@@ -121,6 +121,13 @@ impl Snapshot {
         &self.stats.exit_log
     }
 
+    /// Per-phase main-thread wall-clock from [`crate::sim::profile`].
+    /// Empty unless the crate was built with `--features profile`
+    /// (default builds carry no timers at all).
+    pub fn profile(&self) -> &[crate::sim::profile::PhaseStat] {
+        &self.stats.profile
+    }
+
     /// Total cache accesses (incl. fail-table re-probes).
     pub fn total_accesses(&self) -> u64 {
         self.stats.total_accesses()

@@ -126,6 +126,14 @@ impl SimBuilder {
         self
     }
 
+    /// Idle-aware active-set scheduling in the clock loop (default
+    /// on). `false` ticks every core/partition every cycle — the
+    /// measured baseline; results are byte-identical either way
+    /// (pinned by the determinism suite).
+    pub fn idle_skip(self, on: bool) -> Self {
+        self.set("idle_skip", if on { "1" } else { "0" })
+    }
+
     /// One `-key value` override (applied after preset, config file
     /// and the typed knobs, in key order — the CLI's semantics).
     pub fn set(mut self, key: &str, value: &str) -> Self {

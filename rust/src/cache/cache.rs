@@ -379,6 +379,12 @@ impl Cache {
         self.mshr.len()
     }
 
+    /// Accesses parked on in-flight MSHR entries (O(1); feeds the
+    /// idle-skip [`crate::activity::Activity`] probe).
+    pub fn mshr_waiting(&self) -> usize {
+        self.mshr.waiting_accesses()
+    }
+
     /// Kernel-boundary invalidate (L1 flush).
     pub fn flush(&mut self) {
         debug_assert!(self.mshr.is_empty(),

@@ -48,6 +48,10 @@ pub struct MshrTable {
     /// Recycles retired entries' waiting buffers: steady-state misses
     /// allocate no per-fetch storage.
     pool: FetchBufPool,
+    /// Undrained accesses across all entries — kept incrementally so
+    /// the activity probe ([`MshrTable::waiting_accesses`]) is O(1)
+    /// per cycle instead of a per-entry sum.
+    parked: usize,
 }
 
 impl MshrTable {
@@ -58,6 +62,7 @@ impl MshrTable {
             max_entries,
             max_merge,
             pool: FetchBufPool::default(),
+            parked: 0,
         }
     }
 
@@ -88,6 +93,7 @@ impl MshrTable {
     /// must send the fill request down). Panics if `probe` was not
     /// consulted (structural hazard).
     pub fn add(&mut self, key: MshrKey, fetch: MemFetch) -> bool {
+        self.parked += 1;
         match self.probe(key) {
             MshrProbe::Available => {
                 let entry = MshrEntry {
@@ -130,6 +136,7 @@ impl MshrTable {
         let e = self.entries.get_mut(&key).unwrap();
         let fetch = e.waiting[e.next];
         e.next += 1;
+        self.parked -= 1;
         if e.next == e.waiting.len() {
             let e = self.entries.remove(&key).unwrap();
             self.pool.release(e.waiting);
@@ -147,12 +154,17 @@ impl MshrTable {
         self.entries.is_empty()
     }
 
-    /// Total accesses parked in the table.
+    /// Total accesses parked in the table. O(1): maintained
+    /// incrementally by `add`/`next_ready` (the idle-skip activity
+    /// probe reads this every cycle).
     pub fn waiting_accesses(&self) -> usize {
-        self.entries
-            .values()
-            .map(|e| e.waiting.len() - e.next)
-            .sum()
+        debug_assert_eq!(
+            self.parked,
+            self.entries.values()
+                .map(|e| e.waiting.len() - e.next)
+                .sum::<usize>(),
+            "incremental parked count drifted from the entry sum");
+        self.parked
     }
 }
 

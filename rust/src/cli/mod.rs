@@ -153,7 +153,12 @@ pub const COMMANDS: &[CommandSpec] = &[
             FlagSpec { flags: "--config", value: "FILE",
                        help: "gpgpusim.config-style overrides file" },
             FlagSpec { flags: "-o", value: "KEY VALUE",
-                       help: "single config override (repeatable)" },
+                       help: "single config override (repeatable); \
+                              notably '-o idle_skip 0' disables the \
+                              idle-aware active-set scheduling \
+                              (default 1; stats byte-identical either \
+                              way — 0 is the measured always-tick \
+                              baseline)" },
             FlagSpec { flags: "--timeline", value: "",
                        help: "append the per-stream kernel gantt" },
             FlagSpec { flags: "--power", value: "",
@@ -489,6 +494,12 @@ pub fn execute(cmd: Command) -> Result<String> {
             }
             if a.power {
                 out.push_str(&snap.power_stats().render());
+            }
+            // non-empty only in `--features profile` builds
+            if let Some(table) =
+                crate::sim::profile::render_table(snap.profile())
+            {
+                out.push_str(&table);
             }
             if let Some(csv) = &a.csv {
                 emit_doc(&mut out, csv, &snap.to_csv(StatDomain::L2))?;

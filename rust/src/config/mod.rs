@@ -75,6 +75,15 @@ pub struct SimConfig {
     /// O(fetches/cycle) serialized routing) — kept as the measured
     /// "before" baseline.
     pub icnt_sharded: bool,
+    /// Idle-skip active-set scheduling (default): each worker chunk
+    /// keeps dense active-id lists and the core/partition phases tick
+    /// only components whose [`crate::activity::Activity`] is
+    /// non-idle; wake edges (TB dispatch, inbound exchange delivery)
+    /// re-insert sleepers before the cycle that would observe them, so
+    /// stats stay byte-identical at every `sim_threads` value. `0`
+    /// ticks every component every cycle — kept as the measured
+    /// "before" baseline, like `icnt_sharded`.
+    pub idle_skip: bool,
     /// DRAM access latency on top of L2 miss (cycles).
     pub dram_latency: u32,
     /// DRAM serviced requests per partition per cycle (throughput cap).
@@ -173,6 +182,7 @@ impl SimConfig {
                 self.icnt_flit_per_cycle = val.parse()?;
             }
             "icnt_sharded" => self.icnt_sharded = b(val)?,
+            "idle_skip" => self.idle_skip = b(val)?,
             "dram_latency" => self.dram_latency = val.parse()?,
             "dram_per_cycle" => self.dram_per_cycle = val.parse()?,
             "max_cycles" => self.max_cycles = val.parse()?,
@@ -241,7 +251,7 @@ impl SimConfig {
         format!(
             "preset={} cores={} l2_parts={} concurrent_kernel_sm={} \
              serialize_streams={} stat_mode={} sim_threads={} icnt={} \
-             l1d={} l2_capacity={}KiB",
+             idle_skip={} l1d={} l2_capacity={}KiB",
             self.preset,
             self.num_cores,
             self.num_l2_partitions,
@@ -254,6 +264,7 @@ impl SimConfig {
                 self.sim_threads.to_string()
             },
             if self.icnt_sharded { "sharded" } else { "central" },
+            self.idle_skip as u8,
             self.l1d.as_ref().map_or("none".into(),
                 |c| format!("{}KiB", c.capacity() / 1024)),
             self.l2.capacity() * self.num_l2_partitions as u64 / 1024,
@@ -320,6 +331,7 @@ pub mod presets {
             icnt_latency: 8,
             icnt_flit_per_cycle: 32,
             icnt_sharded: true,
+            idle_skip: true,
             dram_latency: 160,
             dram_per_cycle: 2,
             max_cycles: 200_000_000,
@@ -456,6 +468,22 @@ l2_latency 99   # trailing comment
         c.apply_overrides(&kv).unwrap();
         assert!(!c.icnt_sharded);
         assert!(c.summary().contains("icnt=central"));
+    }
+
+    #[test]
+    fn idle_skip_knob_defaults_on_and_overrides() {
+        for name in PRESETS {
+            assert!(SimConfig::preset(name).unwrap().idle_skip,
+                    "{name}: idle-skip scheduling must be the default");
+        }
+        let mut c = SimConfig::default();
+        assert!(c.summary().contains("idle_skip=1"));
+        let kv = parse_config_text("-idle_skip 0\n").unwrap();
+        c.apply_overrides(&kv).unwrap();
+        assert!(!c.idle_skip);
+        assert!(c.summary().contains("idle_skip=0"));
+        assert!(c.apply_overrides(&parse_config_text(
+            "-idle_skip maybe\n").unwrap()).is_err());
     }
 
     #[test]

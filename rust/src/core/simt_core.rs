@@ -20,6 +20,7 @@
 
 use std::collections::VecDeque;
 
+use crate::activity::Activity;
 use crate::cache::access::{AccessOutcome, AccessType};
 use crate::cache::Cache;
 use crate::config::SimConfig;
@@ -68,8 +69,19 @@ impl ResidentTb {
     }
 }
 
-/// A finished TB notification: `(kernel_uid, tb_index)`.
-pub type FinishedTb = (KernelUid, usize);
+/// A finished TB notification: which kernel's TB retired, plus the
+/// core/warp footprint the retirement released — the credit the
+/// dispatch free-slot ledger ([`crate::sim::dispatch`]) applies at the
+/// absorb point instead of re-scanning every core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FinishedTb {
+    pub kernel_uid: KernelUid,
+    pub tb_index: usize,
+    /// Core the TB retired from.
+    pub core: u32,
+    /// Warps the retirement freed on that core.
+    pub warps: u32,
+}
 
 /// One SIMT core (SM).
 #[derive(Debug)]
@@ -199,12 +211,18 @@ impl SimtCore {
         self.issue_cycle(now, ids);
 
         // 4. Retire finished TBs.
+        let core_id = self.id;
         for slot in &mut self.slots {
             if slot.as_ref().is_some_and(|tb| tb.finished()) {
                 let tb = slot.take().unwrap();
                 self.resident -= tb.warps.len() as u32;
                 self.warp_refs_dirty = true;
-                self.finished.push((tb.kernel_uid, tb.tb_index));
+                self.finished.push(FinishedTb {
+                    kernel_uid: tb.kernel_uid,
+                    tb_index: tb.tb_index,
+                    core: core_id,
+                    warps: tb.warps.len() as u32,
+                });
             }
         }
     }
@@ -383,6 +401,25 @@ impl SimtCore {
             || !self.to_icnt.is_empty()
             || self.l1.as_ref().is_some_and(|l1| l1.mshr_len() > 0)
     }
+
+    /// Cheap activity summary for the idle-skip active set.
+    /// `activity().is_idle()` is exactly `!self.busy()` (every `busy`
+    /// term maps to a field; pinned by `tests/activity.rs`), and an
+    /// idle core's [`SimtCore::cycle_with`] takes the resident==0 fast
+    /// path — a provable no-op.
+    pub fn activity(&self) -> Activity {
+        Activity {
+            resident_warps: self.resident,
+            resident_tbs: self.slots.iter()
+                .filter(|s| s.is_some()).count() as u32,
+            queued: self.ldst_queue.len(),
+            pending_fills: self.hit_queue.len(),
+            mshr_entries: self.l1.as_ref().map_or(0, |l| l.mshr_len()),
+            mshr_waiting: self.l1.as_ref()
+                .map_or(0, |l| l.mshr_waiting()),
+            outbound: self.to_icnt.len(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -456,8 +493,10 @@ mod tests {
         ]));
         assert_eq!(core.resident_warps(), 1);
         run_to_idle(&mut core, &mut e);
-        assert_eq!(core.take_finished(), vec![(1, 0)]);
+        assert_eq!(core.take_finished(), vec![FinishedTb {
+            kernel_uid: 1, tb_index: 0, core: 0, warps: 1 }]);
         assert_eq!(core.resident_warps(), 0);
+        assert!(core.activity().is_idle());
     }
 
     #[test]
@@ -518,7 +557,8 @@ mod tests {
         assert_eq!(e.cache(L1).stream_table(5).unwrap()
                     .total_for_type(AccessType::GlobalAccW), 4);
         // TB retired without any response
-        assert_eq!(core.take_finished(), vec![(1, 0)]);
+        assert_eq!(core.take_finished(), vec![FinishedTb {
+            kernel_uid: 1, tb_index: 0, core: 0, warps: 1 }]);
     }
 
     #[test]

@@ -63,8 +63,13 @@
 //! * [`timeline`] — per-stream kernel timelines (the paper's figures).
 //! * [`sim`] — the [`sim::GpuSim`] clock loop and the
 //!   [`sim::parallel`] sharded worker pool behind `--sim-threads`
-//!   (per-stream/exact stats bit-identical for any thread count).
-//!   Application code drives it through [`api`], not directly.
+//!   (per-stream/exact stats bit-identical for any thread count),
+//!   with the `idle_skip` active-set scheduler that ticks only
+//!   non-idle components, plus the feature-gated [`sim::profile`]
+//!   phase timers. Application code drives it through [`api`], not
+//!   directly.
+//! * [`activity`] — the per-component [`activity::Activity`] summary
+//!   the active-set scheduler's sleep decision is based on.
 //! * [`harness`] — tip / clean / tip_serialized comparison harness,
 //!   built on the facade (also re-exported from [`api`]).
 //! * [`cli`] — the `streamsim` command-line surface, a thin shell over
@@ -73,6 +78,7 @@
 //!   JAX/Pallas artifacts (functional layer; Python never runs here).
 //! * [`util`] — offline-friendly helpers (PRNG, micro-bench, proptest-lite).
 
+pub mod activity;
 pub mod api;
 pub mod cache;
 pub mod cli;

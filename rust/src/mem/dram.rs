@@ -14,6 +14,7 @@
 
 use std::collections::VecDeque;
 
+use crate::activity::Activity;
 use crate::mem::fetch::MemFetch;
 use crate::stats::PartitionSink;
 use crate::Cycle;
@@ -88,6 +89,17 @@ impl Dram {
     /// Requests still queued.
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Activity view of this channel for the idle-skip active set:
+    /// queued requests count as pending fills (writes retire silently
+    /// but still occupy service slots). All-zero ⇔ `pending() == 0` ⇔
+    /// the next [`Dram::cycle_into`] is a no-op.
+    pub fn activity(&self) -> Activity {
+        Activity {
+            pending_fills: self.queue.len(),
+            ..Activity::default()
+        }
     }
 }
 

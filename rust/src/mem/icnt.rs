@@ -84,6 +84,17 @@ impl<T> DelayQueue<T> {
 /// drained entries after any cycle is exactly `seq <
 /// drained_total()` — the **drain horizon** consumers compare
 /// against.
+///
+/// Two properties of this ledger are load-bearing for the `idle_skip`
+/// empty-swap early-out in [`crate::sim::parallel::swap_lane`]:
+/// [`FlitSchedule::publish`] with `count == 0` is a no-op (so a cycle
+/// that published nothing leaves the ledger byte-identical whether or
+/// not `publish` ran), and [`FlitSchedule::drain`] with nothing in
+/// flight returns the unchanged horizon (so skipping the drain while
+/// `!busy()` cannot move the horizon any consumer would observe).
+/// Delivery of a drained entry is also one of the active set's wake
+/// edges: a sleeping core/partition is woken *before* the fetch is
+/// handed over, at the start of the phase that delivers it.
 #[derive(Debug, Clone)]
 pub struct FlitSchedule {
     latency: u32,

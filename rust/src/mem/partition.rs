@@ -18,6 +18,7 @@
 
 use std::collections::VecDeque;
 
+use crate::activity::Activity;
 use crate::cache::access::AccessOutcome;
 use crate::cache::Cache;
 use crate::config::SimConfig;
@@ -169,6 +170,25 @@ impl MemPartition {
     /// live in the engine's DRAM domain).
     pub fn dram_stats(&self) -> &crate::mem::dram::DramStats {
         &self.dram.stats
+    }
+
+    /// Cheap activity summary for the idle-skip active set, folding in
+    /// the DRAM channel's view. `activity().is_idle()` implies
+    /// `!self.busy()` *and* no undrained outgoing responses — strictly
+    /// safe to sleep on (pinned by `tests/activity.rs`); an idle
+    /// partition's [`MemPartition::cycle`] moves nothing and records
+    /// no stats.
+    pub fn activity(&self) -> Activity {
+        Activity {
+            resident_warps: 0,
+            resident_tbs: 0,
+            queued: self.incoming.len() + self.replay.len(),
+            pending_fills: self.hit_queue.len(),
+            mshr_entries: self.l2.mshr_len(),
+            mshr_waiting: self.l2.mshr_waiting(),
+            outbound: self.outgoing.len() + self.l2.miss_queue_len(),
+        }
+        .merge(self.dram.activity())
     }
 }
 

@@ -1,0 +1,219 @@
+//! Main-thread TB dispatch ledger: an O(threads)-per-no-fit mirror of
+//! per-core occupancy.
+//!
+//! The old dispatch loop locked **every** chunk and asked each core
+//! `can_accept(warps)` in round-robin order — one full O(cores) scan
+//! per probed TB, even when the GPU was saturated and the answer was
+//! "no" all cycle. The ledger keeps the two numbers `can_accept`
+//! actually reads — free TB slots and free warp capacity per core —
+//! on the main thread, updated at the only two points occupancy
+//! changes:
+//!
+//! * [`DispatchLedger::note_dispatch`] right after `accept_tb`
+//!   (dispatch runs on the main thread, so this is exact), and
+//! * [`DispatchLedger::note_retire`] in `retire_tbs`, from the
+//!   [`crate::core::FinishedTb`] records collected at the barrier —
+//!   i.e. at end of cycle `T`, first observable by dispatch at `T+1`,
+//!   exactly when the old direct `can_accept` probe would first have
+//!   seen the freed slot.
+//!
+//! Invariant (pinned by `debug_assert!` at the accept site):
+//! `free_slots[c] > 0 && free_warps[c] >= warps` ⟺
+//! `cores[c].can_accept(warps)`.
+//!
+//! To make a full no-fit scan cost O(threads) instead of O(cores),
+//! cores are grouped by their [`split_starts`] chunk and each chunk
+//! carries a lazily recomputed summary: the max `free_warps` among its
+//! slot-having cores. A probe for `warps` skips a whole chunk when its
+//! summary says no core inside can fit — so a saturated GPU answers
+//! "full" after `threads` comparisons and zero per-core probes. The
+//! summary is recomputed (O(chunk) once) only after a dispatch or
+//! retire dirtied that chunk. Scan order within and across chunks is
+//! the same wrapped round-robin as the old loop, so the chosen core —
+//! and therefore every downstream stat — is byte-identical.
+
+use crate::sim::parallel::chunk_of;
+
+/// Main-thread mirror of per-core dispatch capacity. See the module
+/// docs for the update protocol and the `can_accept` invariant.
+#[derive(Debug)]
+pub struct DispatchLedger {
+    /// Free TB slots per core (`max_tbs - resident TBs`).
+    free_slots: Vec<u32>,
+    /// Free warp capacity per core (`max_warps - resident warps`).
+    free_warps: Vec<u32>,
+    /// Chunk boundaries over core ids (`threads + 1` entries, same
+    /// vector the clock loop routes with).
+    core_starts: Vec<usize>,
+    /// Per chunk: max `free_warps` among cores with a free slot
+    /// (0 when no core in the chunk has a slot). Valid only where
+    /// `dirty` is false.
+    chunk_best: Vec<u32>,
+    /// Chunks whose `chunk_best` needs recomputing.
+    dirty: Vec<bool>,
+    /// Per-core probes performed by [`DispatchLedger::find_core`] —
+    /// test/bench observability for the O(threads) no-fit claim.
+    pub probes: u64,
+}
+
+impl DispatchLedger {
+    /// Ledger for `ncores` identical cores with `max_tbs` TB slots and
+    /// `max_warps` warp capacity each. `core_starts` is the clock
+    /// loop's chunk split (from [`crate::sim::parallel::split_starts`]).
+    pub fn new(max_tbs: u32, max_warps: u32, ncores: usize,
+               core_starts: Vec<usize>) -> Self {
+        debug_assert!(!core_starts.is_empty());
+        debug_assert_eq!(*core_starts.last().unwrap(), ncores);
+        let chunks = core_starts.len() - 1;
+        Self {
+            free_slots: vec![max_tbs; ncores],
+            free_warps: vec![max_warps; ncores],
+            core_starts,
+            chunk_best: vec![0; chunks],
+            dirty: vec![true; chunks],
+            probes: 0,
+        }
+    }
+
+    /// Recompute-if-dirty and return chunk `ci`'s summary.
+    fn best(&mut self, ci: usize) -> u32 {
+        if self.dirty[ci] {
+            let (lo, hi) =
+                (self.core_starts[ci], self.core_starts[ci + 1]);
+            self.chunk_best[ci] = (lo..hi)
+                .filter(|&c| self.free_slots[c] > 0)
+                .map(|c| self.free_warps[c])
+                .max()
+                .unwrap_or(0);
+            self.dirty[ci] = false;
+        }
+        self.chunk_best[ci]
+    }
+
+    /// First core from `start` (wrapping) that can accept a TB of
+    /// `warps` warps, or `None` if the GPU is full for that shape this
+    /// cycle. Visits chunk summaries before per-core entries, so a
+    /// full no-fit answer costs O(threads) comparisons.
+    pub fn find_core(&mut self, start: usize, warps: u32)
+        -> Option<usize> {
+        let n = self.free_slots.len();
+        if n == 0 {
+            return None;
+        }
+        let mut pos = start % n;
+        let mut remaining = n;
+        while remaining > 0 {
+            let ci = chunk_of(&self.core_starts, pos);
+            let end = self.core_starts[ci + 1];
+            let span = (end - pos).min(remaining);
+            if self.best(ci) >= warps {
+                for c in pos..pos + span {
+                    self.probes += 1;
+                    if self.free_slots[c] > 0
+                        && self.free_warps[c] >= warps
+                    {
+                        return Some(c);
+                    }
+                }
+            }
+            remaining -= span;
+            pos = (pos + span) % n;
+        }
+        None
+    }
+
+    /// A TB of `warps` warps was just accepted by `core`.
+    pub fn note_dispatch(&mut self, core: usize, warps: u32) {
+        debug_assert!(self.free_slots[core] > 0);
+        debug_assert!(self.free_warps[core] >= warps);
+        self.free_slots[core] -= 1;
+        self.free_warps[core] -= warps;
+        self.dirty[chunk_of(&self.core_starts, core)] = true;
+    }
+
+    /// A TB of `warps` warps just retired from `core`.
+    pub fn note_retire(&mut self, core: usize, warps: u32) {
+        self.free_slots[core] += 1;
+        self.free_warps[core] += warps;
+        self.dirty[chunk_of(&self.core_starts, core)] = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::parallel::split_starts;
+
+    fn ledger(ncores: usize, threads: usize, max_tbs: u32,
+              max_warps: u32) -> DispatchLedger {
+        DispatchLedger::new(max_tbs, max_warps, ncores,
+                            split_starts(ncores, threads))
+    }
+
+    /// Fill `core` completely with TBs of `warps` warps.
+    fn fill(l: &mut DispatchLedger, core: usize, max_tbs: u32,
+            warps: u32) {
+        for _ in 0..max_tbs {
+            l.note_dispatch(core, warps);
+        }
+    }
+
+    #[test]
+    fn round_robin_wraps_past_full_cores() {
+        // 6 cores over 2 chunks: [0,3,6]; 2 slots × 8 warps each
+        let mut l = ledger(6, 2, 2, 8);
+        fill(&mut l, 4, 2, 4);
+        fill(&mut l, 5, 2, 4);
+        // scan from 4: cores 4,5 full → wraps into chunk 0
+        assert_eq!(l.find_core(4, 4), Some(0));
+        assert_eq!(l.find_core(1, 4), Some(1));
+        // retiring one 4-warp TB re-opens core 5 for the wrap scan
+        l.note_retire(5, 4);
+        assert_eq!(l.find_core(4, 4), Some(5));
+    }
+
+    #[test]
+    fn no_fit_scan_skips_chunks_without_per_core_probes() {
+        // 8 cores over 4 chunks: [0,2,4,6,8]; 2 slots × 8 warps
+        let mut l = ledger(8, 4, 2, 8);
+        for c in 0..8 {
+            fill(&mut l, c, 2, 4);
+        }
+        l.probes = 0;
+        // saturated GPU: every chunk summary is 0, so the full
+        // wrapped scan from an interior start touches no core at all
+        assert_eq!(l.find_core(3, 1), None);
+        assert_eq!(l.probes, 0);
+
+        // partially full: one 7-warp TB per core leaves 1 free warp
+        // and 1 free slot everywhere
+        let mut l = ledger(8, 4, 2, 8);
+        for c in 0..8 {
+            l.note_dispatch(c, 7);
+        }
+        l.probes = 0;
+        // 2-warp probe: chunk summaries (all 1) reject every chunk
+        assert_eq!(l.find_core(5, 2), None);
+        assert_eq!(l.probes, 0);
+        // 1-warp probe fits at the scan start itself
+        assert_eq!(l.find_core(5, 1), Some(5));
+    }
+
+    #[test]
+    fn dispatch_retire_roundtrip_tracks_capacity() {
+        // 3 cores, single chunk, 1 slot × 8 warps each
+        let mut l = ledger(3, 1, 1, 8);
+        assert_eq!(l.find_core(0, 8), Some(0));
+        l.note_dispatch(0, 8);
+        assert_eq!(l.find_core(1, 8), Some(1));
+        l.note_dispatch(1, 8);
+        // 16-warp shape exceeds every core's capacity outright
+        assert_eq!(l.find_core(2, 16), None);
+        assert_eq!(l.find_core(2, 8), Some(2));
+        l.note_dispatch(2, 8);
+        assert_eq!(l.find_core(0, 1), None);
+        // core 1 frees; a scan from 2 wraps 2 → 0 → 1 to find it
+        l.note_retire(1, 8);
+        assert_eq!(l.find_core(2, 8), Some(1));
+    }
+}

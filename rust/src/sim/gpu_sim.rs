@@ -35,7 +35,7 @@
 //! [`GpuStats::exit_log`], then clears that stream's per-window
 //! counters in **every** domain.
 
-use std::sync::{Mutex, MutexGuard};
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
@@ -43,7 +43,9 @@ use crate::config::SimConfig;
 use crate::core::SimtCore;
 use crate::kernel::{KernelInfo, KernelQueue};
 use crate::mem::{partition_of, FlitSchedule, Icnt, MemPartition};
+use crate::sim::dispatch::DispatchLedger;
 use crate::sim::parallel::{self, WorkerChunk};
+use crate::sim::profile::{self, PhaseProfile};
 use crate::sim::GpuStats;
 use crate::stats::print as stat_print;
 use crate::stats::StatMode;
@@ -87,6 +89,14 @@ pub struct GpuSim {
     now: Cycle,
     stats: GpuStats,
     dispatch_rr: usize,
+    /// Main-thread mirror of every core's free TB slots / warp
+    /// capacity, maintained at dispatch and retire — the dispatcher
+    /// scans this instead of locking chunks and probing cores, so a
+    /// full no-fit scan costs O(threads) chunk summaries.
+    ledger: DispatchLedger,
+    /// Feature-gated wall-clock phase timers (`sim::profile`) — a
+    /// zero-sized no-op in default builds.
+    profile: PhaseProfile,
     /// TBs retired during the last core phase (chunk/core-id order).
     finished_scratch: Vec<crate::core::FinishedTb>,
     /// Echo kernel launch/exit lines to stdout
@@ -114,11 +124,14 @@ impl GpuSim {
         };
         let chunks = parallel::build_chunks(
             cores, partitions, threads, cfg.l2.line_size,
-            cfg.icnt_sharded);
+            cfg.icnt_sharded, cfg.idle_skip);
         let core_starts =
             parallel::split_starts(cfg.num_cores as usize, threads);
         let part_starts = parallel::split_starts(
             cfg.num_l2_partitions as usize, threads);
+        let ledger = DispatchLedger::new(
+            cfg.max_tbs_per_core, cfg.max_warps_per_core,
+            cfg.num_cores as usize, core_starts.clone());
         let icnt = Icnt::new(cfg.icnt_latency, cfg.icnt_flit_per_cycle);
         let sched_req =
             FlitSchedule::new(cfg.icnt_latency, cfg.icnt_flit_per_cycle);
@@ -141,6 +154,8 @@ impl GpuSim {
             now: 0,
             stats,
             dispatch_rr: 0,
+            ledger,
+            profile: PhaseProfile::default(),
             finished_scratch: Vec::new(),
             verbose: false,
         })
@@ -231,6 +246,7 @@ impl GpuSim {
         result?;
         self.absorb_resident_shards();
         self.stats.total_cycles = self.now;
+        self.stats.profile = self.profile.snapshot();
         Ok(&self.stats)
     }
 
@@ -296,13 +312,18 @@ impl GpuSim {
     /// fixed global-id order, byte-identical stats.
     fn step_on(&mut self, chunks: &[Mutex<WorkerChunk>],
                ctrl: Option<&parallel::PoolCtrl>) -> Result<()> {
+        let t = self.profile.start();
         self.launch_kernels();
         self.dispatch_tbs(chunks);
+        self.profile.record(profile::PH_LAUNCH_DISPATCH, t);
 
         // parallel core phase: issue + L1 (and, sharded: response
         // delivery + request routing/publishing), stats into shards
+        let t = self.profile.start();
         self.phase(chunks, ctrl, parallel::CMD_CORES)?;
+        self.profile.record(profile::PH_CORE, t);
 
+        let t = self.profile.start();
         if self.cfg.icnt_sharded {
             // request swap barrier: O(threads) — collect retired TBs,
             // assign sequence bases, step the ledger, swap buffers
@@ -312,7 +333,8 @@ impl GpuSim {
             }
             parallel::swap_lane(chunks, parallel::LaneKind::Request,
                                 &mut self.sched_req, self.now,
-                                &mut self.lane_bases);
+                                &mut self.lane_bases,
+                                self.cfg.idle_skip);
         } else {
             // central exchange, core side: per-worker queues drain
             // into the crossbar in core-id order, then ready requests
@@ -335,18 +357,23 @@ impl GpuSim {
                     .push((local, f));
             }
         }
+        self.profile.record(profile::PH_SWAP_REQ, t);
 
         // parallel partition phase: L2 + DRAM (and, sharded: request
         // delivery + response routing/publishing), stats into shards
+        let t = self.profile.start();
         self.phase(chunks, ctrl, parallel::CMD_PARTS)?;
+        self.profile.record(profile::PH_PARTITION, t);
 
+        let t = self.profile.start();
         if self.cfg.icnt_sharded {
             // response swap barrier: delivered at the start of the
             // next core phase with this cycle number — observationally
             // identical to in-cycle delivery
             parallel::swap_lane(chunks, parallel::LaneKind::Response,
                                 &mut self.sched_resp, self.now,
-                                &mut self.lane_bases);
+                                &mut self.lane_bases,
+                                self.cfg.idle_skip);
         } else {
             // central exchange, mem side: responses in partition-id
             // order, then route ready responses to core inboxes. A
@@ -382,8 +409,11 @@ impl GpuSim {
                     .push((self.now, local, f));
             }
         }
+        self.profile.record(profile::PH_SWAP_RESP, t);
 
+        let t = self.profile.start();
         self.retire_tbs(chunks);
+        self.profile.record(profile::PH_RETIRE_ABSORB, t);
         self.now += 1;
         Ok(())
     }
@@ -460,14 +490,22 @@ impl GpuSim {
     /// the collision behind the paper's Fig. 1 under-count). Runs on
     /// the main thread between phases; workers are parked, so the
     /// chunk locks are uncontended.
+    ///
+    /// Probing goes through the [`DispatchLedger`] — the main thread's
+    /// O(threads)-per-no-fit mirror of core occupancy — instead of
+    /// locking every chunk and asking each core `can_accept` in turn.
+    /// Only the destination chunk is locked, and only after the ledger
+    /// already committed to a core; the accepted core is woken so the
+    /// active set sees its new TB this cycle. The round-robin pointer
+    /// advances exactly as the direct scan did (`core + 1` after a
+    /// fit, unchanged after a full no-fit pass), so dispatch order —
+    /// and therefore every downstream stat — is byte-identical.
     fn dispatch_tbs(&mut self, chunks: &[Mutex<WorkerChunk>]) {
         let ncores = self.cfg.num_cores as usize;
         let nkernels = self.running.len();
         if nkernels == 0 {
             return;
         }
-        let mut guards: Vec<MutexGuard<'_, WorkerChunk>> =
-            chunks.iter().map(parallel::lock_chunk).collect();
         let core_starts = &self.core_starts;
         let mut kernel_rr = 0usize;
         loop {
@@ -480,32 +518,39 @@ impl GpuSim {
             };
             let ki = (kernel_rr + koff) % nkernels;
             let warps = self.running[ki].trace.warps_per_tb();
-            let Some(coff) = (0..ncores).find(|off| {
-                let g = (self.dispatch_rr + off) % ncores;
-                let ci = parallel::chunk_of(core_starts, g);
-                guards[ci].cores[g - core_starts[ci]].can_accept(warps)
-            }) else {
+            let Some(core) = self.ledger.find_core(self.dispatch_rr,
+                                                   warps) else {
                 return; // GPU full this cycle
             };
-            let core = (self.dispatch_rr + coff) % ncores;
             let k = &mut self.running[ki];
             let (uid, stream) = (k.uid, k.stream_id);
             let (tb_idx, trace) = k.dispatch_tb().unwrap();
             let slot = self.stats.engine.intern_stream(stream);
             let ci = parallel::chunk_of(core_starts, core);
-            guards[ci].cores[core - core_starts[ci]]
-                .accept_tb(uid, stream, slot, tb_idx, trace);
+            let local = core - core_starts[ci];
+            let mut g = parallel::lock_chunk(&chunks[ci]);
+            debug_assert!(g.cores[local].can_accept(warps),
+                          "dispatch ledger out of sync with core {core} \
+                           occupancy");
+            g.wake_core(local);
+            g.cores[local].accept_tb(uid, stream, slot, tb_idx, trace);
+            drop(g);
+            self.ledger.note_dispatch(core, warps);
             self.dispatch_rr = (core + 1) % ncores;
             kernel_rr = (ki + 1) % nkernels;
         }
     }
 
     /// Apply the TBs the core phase retired; retire kernels whose TBs
-    /// all completed.
+    /// all completed. Each retirement credits the dispatch ledger, so
+    /// the freed slot is visible to `dispatch_tbs` next cycle —
+    /// exactly when the old direct `can_accept` probe would first have
+    /// observed it.
     fn retire_tbs(&mut self, chunks: &[Mutex<WorkerChunk>]) {
-        for (uid, _tb) in self.finished_scratch.drain(..) {
+        for f in self.finished_scratch.drain(..) {
+            self.ledger.note_retire(f.core as usize, f.warps);
             if let Some(k) =
-                self.running.iter_mut().find(|k| k.uid == uid)
+                self.running.iter_mut().find(|k| k.uid == f.kernel_uid)
             {
                 k.tb_done();
             }
@@ -595,6 +640,7 @@ impl GpuSim {
     pub fn snapshot_stats(&mut self) -> &GpuStats {
         self.absorb_resident_shards();
         self.stats.total_cycles = self.now;
+        self.stats.profile = self.profile.snapshot();
         &self.stats
     }
 

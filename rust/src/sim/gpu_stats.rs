@@ -4,6 +4,7 @@
 //! adds the simulation-level bookkeeping (cycles, kernel counts, the
 //! §3.1 exit log, §3.2 kernel windows).
 
+use crate::sim::profile::PhaseStat;
 use crate::stats::{CacheView, KernelTimeTracker, StatDomain, StatMode,
                    StatsEngine};
 use crate::Cycle;
@@ -27,6 +28,9 @@ pub struct GpuStats {
     /// Per-kernel-exit printed output, in exit order (the paper's §3.1
     /// print-behaviour change is observable here).
     pub exit_log: Vec<String>,
+    /// Per-phase main-thread wall-clock (`--features profile` only;
+    /// empty — and absent from exported JSON — in default builds).
+    pub profile: Vec<PhaseStat>,
 }
 
 impl GpuStats {
@@ -39,6 +43,7 @@ impl GpuStats {
             kernels_launched: 0,
             kernels_done: 0,
             exit_log: Vec::new(),
+            profile: Vec::new(),
         }
     }
 

@@ -4,14 +4,21 @@
 //!   → request swap → partition phase → response swap →
 //!   retire/merge).
 //! * [`parallel`] — the sharded parallel stepping subsystem: worker
-//!   chunks owning their crossbar slices, the two phase functions,
-//!   the O(threads) double-buffered exchange swap, and the
-//!   barrier-synchronized worker pool behind `--sim-threads`.
+//!   chunks owning their crossbar slices, the idle-aware active sets
+//!   behind `idle_skip`, the two phase functions, the O(threads)
+//!   double-buffered exchange swap, and the barrier-synchronized
+//!   worker pool behind `--sim-threads`.
+//! * [`dispatch`] — the main thread's O(threads)-per-no-fit TB
+//!   dispatch ledger mirroring per-core occupancy.
+//! * [`profile`] — zero-dep per-phase wall-clock timers, compiled to
+//!   no-ops unless built with `--features profile`.
 //! * [`gpu_stats`] — simulation-level stat aggregation.
 
+pub mod dispatch;
 pub mod gpu_sim;
 pub mod gpu_stats;
 pub mod parallel;
+pub mod profile;
 
 pub use gpu_sim::GpuSim;
 pub use gpu_stats::GpuStats;

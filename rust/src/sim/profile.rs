@@ -1,0 +1,192 @@
+//! Zero-dependency phase profiler for the clock loop.
+//!
+//! Compiled to no-ops unless the crate is built with
+//! `--features profile` — the default build carries no `Instant`
+//! calls, no fields that change layout behaviour, and (crucially for
+//! the determinism suite) no timing-dependent state anywhere near the
+//! simulation. With the feature on, `GpuSim::step_on` brackets its six
+//! main-thread segments with [`PhaseProfile::start`] /
+//! [`PhaseProfile::record`] pairs and the accumulated wall-clock per
+//! phase is exported as the `profile` section of `--stats-json` (and
+//! printed as a table by the CLI / `scripts/ci.sh profile`).
+//!
+//! The six phases mirror the barrier structure documented in
+//! [`crate::sim::parallel`]:
+//!
+//! | id | name | covers |
+//! |----|------|--------|
+//! | [`PH_LAUNCH_DISPATCH`] | `launch_dispatch` | kernel launch window + ledger-guided TB dispatch |
+//! | [`PH_CORE`] | `core_phase` | parallel core phase (issue + L1 + request publish) |
+//! | [`PH_SWAP_REQ`] | `swap_req` | request exchange barrier (sharded swap or central push/route) |
+//! | [`PH_PARTITION`] | `partition_phase` | parallel partition phase (L2 + DRAM + response publish) |
+//! | [`PH_SWAP_RESP`] | `swap_resp` | response exchange barrier |
+//! | [`PH_RETIRE_ABSORB`] | `retire_absorb` | TB/kernel retirement + shard absorption on kernel exit |
+//!
+//! Main-thread wall-clock per phase is the number that matters for
+//! the idle-skip work: the core/partition phase buckets shrink when
+//! the active sets shrink, and the swap buckets shrink when the
+//! empty-swap early-out fires.
+
+/// Phase ids — indices into [`PhaseProfile`]'s accumulators and
+/// [`PHASE_NAMES`].
+pub const PH_LAUNCH_DISPATCH: usize = 0;
+pub const PH_CORE: usize = 1;
+pub const PH_SWAP_REQ: usize = 2;
+pub const PH_PARTITION: usize = 3;
+pub const PH_SWAP_RESP: usize = 4;
+pub const PH_RETIRE_ABSORB: usize = 5;
+
+/// Stable wire names for the six phases, indexed by the `PH_*` ids.
+pub const PHASE_NAMES: [&str; 6] = [
+    "launch_dispatch",
+    "core_phase",
+    "swap_req",
+    "partition_phase",
+    "swap_resp",
+    "retire_absorb",
+];
+
+/// One phase's accumulated wall-clock, as exported in the stats JSON
+/// `profile` section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseStat {
+    pub name: &'static str,
+    pub total_ns: u64,
+    pub calls: u64,
+}
+
+/// Opaque start-of-segment marker returned by [`PhaseProfile::start`].
+/// Zero-sized in default builds.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseTimer {
+    #[cfg(feature = "profile")]
+    at: std::time::Instant,
+}
+
+/// Per-[`crate::sim::GpuSim`] accumulator. Default-constructed; all
+/// methods are no-ops without `--features profile`.
+#[derive(Debug, Default)]
+pub struct PhaseProfile {
+    #[cfg(feature = "profile")]
+    total_ns: [u64; PHASE_NAMES.len()],
+    #[cfg(feature = "profile")]
+    calls: [u64; PHASE_NAMES.len()],
+}
+
+#[cfg(feature = "profile")]
+impl PhaseProfile {
+    /// Mark the start of a segment.
+    #[inline]
+    pub fn start(&self) -> PhaseTimer {
+        PhaseTimer { at: std::time::Instant::now() }
+    }
+
+    /// Credit the time since `t` to phase `ph`.
+    #[inline]
+    pub fn record(&mut self, ph: usize, t: PhaseTimer) {
+        self.total_ns[ph] +=
+            u64::try_from(t.at.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        self.calls[ph] += 1;
+    }
+
+    /// Snapshot for export: one [`PhaseStat`] per phase. Empty in
+    /// default builds, which is what keeps the `profile` JSON section
+    /// (and the schema goldens) absent unless the feature is on.
+    pub fn snapshot(&self) -> Vec<PhaseStat> {
+        PHASE_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, &name)| PhaseStat {
+                name,
+                total_ns: self.total_ns[i],
+                calls: self.calls[i],
+            })
+            .collect()
+    }
+}
+
+#[cfg(not(feature = "profile"))]
+impl PhaseProfile {
+    /// No-op marker (feature off).
+    #[inline]
+    pub fn start(&self) -> PhaseTimer {
+        PhaseTimer {}
+    }
+
+    /// No-op (feature off).
+    #[inline]
+    pub fn record(&mut self, _ph: usize, _t: PhaseTimer) {}
+
+    /// Empty (feature off) — the `profile` stats section is omitted.
+    pub fn snapshot(&self) -> Vec<PhaseStat> {
+        Vec::new()
+    }
+}
+
+/// Render a `PhaseStat` slice as an aligned text table with per-phase
+/// shares — the CLI's end-of-run profile summary. Returns `None` when
+/// the slice is empty or all-zero (feature off or nothing ran).
+pub fn render_table(profile: &[PhaseStat]) -> Option<String> {
+    let total: u64 = profile.iter().map(|p| p.total_ns).sum();
+    if profile.is_empty() || total == 0 {
+        return None;
+    }
+    let mut out = String::from(
+        "phase profile (main-thread wall-clock):\n");
+    for p in profile {
+        let pct = p.total_ns as f64 * 100.0 / total as f64;
+        out.push_str(&format!(
+            "  {:<16} {:>12} ns  {:>10} calls  {:>5.1}%\n",
+            p.name, p.total_ns, p.calls, pct));
+    }
+    out.push_str(&format!("  {:<16} {:>12} ns\n", "total", total));
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_cover_every_phase_id() {
+        // the PH_* ids must be dense indices into PHASE_NAMES
+        let ids = [PH_LAUNCH_DISPATCH, PH_CORE, PH_SWAP_REQ,
+                   PH_PARTITION, PH_SWAP_RESP, PH_RETIRE_ABSORB];
+        let mut sorted = ids;
+        sorted.sort_unstable();
+        assert_eq!(sorted, [0, 1, 2, 3, 4, 5]);
+        assert_eq!(PHASE_NAMES.len(), ids.len());
+    }
+
+    #[test]
+    fn default_build_snapshot_matches_feature_state() {
+        let mut p = PhaseProfile::default();
+        let t = p.start();
+        p.record(PH_CORE, t);
+        let snap = p.snapshot();
+        if cfg!(feature = "profile") {
+            assert_eq!(snap.len(), PHASE_NAMES.len());
+            assert_eq!(snap[PH_CORE].name, "core_phase");
+            assert_eq!(snap[PH_CORE].calls, 1);
+        } else {
+            assert!(snap.is_empty());
+        }
+    }
+
+    #[test]
+    fn render_table_shows_shares_and_hides_empty() {
+        assert!(render_table(&[]).is_none());
+        let zero = vec![PhaseStat {
+            name: "core_phase", total_ns: 0, calls: 0 }];
+        assert!(render_table(&zero).is_none());
+        let stats = vec![
+            PhaseStat { name: "core_phase", total_ns: 750, calls: 3 },
+            PhaseStat { name: "swap_req", total_ns: 250, calls: 3 },
+        ];
+        let table = render_table(&stats).unwrap();
+        assert!(table.contains("core_phase"));
+        assert!(table.contains("75.0%"));
+        assert!(table.contains("25.0%"));
+        assert!(table.contains("total"));
+    }
+}

@@ -143,6 +143,12 @@ pub fn to_json(label: &str, stats: &GpuStats) -> String {
 /// `schema_version`, `kernels_launched`, and the unified `losses`
 /// object (dropped responses, clean-mode guard drops and fail-table
 /// totals, all read from one [`LossReport`]).
+///
+/// A `profile` array (per-phase main-thread wall-clock from
+/// [`crate::sim::profile`]) is appended **only** when the stats carry
+/// one — i.e. only in `--features profile` builds. Default builds
+/// emit the exact schema-v2 key set pinned by the golden, and the
+/// determinism suite never sees timing-dependent bytes.
 pub fn to_json_versioned(label: &str, stats: &GpuStats) -> String {
     let losses = stats.engine.loss_report();
     let mut out = String::from("{");
@@ -157,6 +163,19 @@ pub fn to_json_versioned(label: &str, stats: &GpuStats) -> String {
          \"fail_l1\":{},\"fail_l2\":{}}}",
         losses.dropped_responses, losses.guard_dropped_l1,
         losses.guard_dropped_l2, losses.fail_l1, losses.fail_l2);
+    if !stats.profile.is_empty() {
+        out.push_str(",\"profile\":[");
+        for (i, p) in stats.profile.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"total_ns\":{},\"calls\":{}}}",
+                p.name, p.total_ns, p.calls);
+        }
+        out.push(']');
+    }
     out.push('}');
     out
 }
@@ -320,6 +339,25 @@ mod tests {
                    format!("# schema_version={SCHEMA_VERSION}"));
         assert_eq!(lines.next().unwrap(),
                    "stream,access_type,outcome,count");
+    }
+
+    #[test]
+    fn profile_section_appears_only_when_populated() {
+        use crate::sim::profile::PhaseStat;
+        let (sim, _) = run();
+        let mut stats = sim.stats().clone();
+        stats.profile.clear();
+        let bare = to_json_versioned("tip", &stats);
+        // default builds: schema-v2 key set exactly, no timing bytes
+        assert!(!bare.contains("\"profile\""), "{bare}");
+        assert_eq!(top_level_keys(&bare).last().unwrap(), "losses");
+        stats.profile = vec![PhaseStat {
+            name: "core_phase", total_ns: 42, calls: 7 }];
+        let doc = to_json_versioned("tip", &stats);
+        assert!(doc.contains(
+            "\"profile\":[{\"name\":\"core_phase\",\
+             \"total_ns\":42,\"calls\":7}]"), "{doc}");
+        assert_eq!(top_level_keys(&doc).last().unwrap(), "profile");
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Idle-tail scenario for the `idle_skip` active-set work: a wide,
+//! short burst followed by one long serialized straggler.
+//!
+//! Two streams:
+//!
+//! * stream 0, `ramp` — `ramp_tbs` thread blocks of one fully
+//!   coalesced warp each. Every TB issues a single full-mask stride-4
+//!   load of its own 128 B line (4 sector accesses at L1; all lines
+//!   distinct, so there is no reuse anywhere). The ramp floods every
+//!   core, then drains quickly.
+//! * stream 1, `tail` — one TB, one thread, `chain` *dependent*
+//!   `ld.global.cg` loads (L1 bypassed, one sector each, distinct
+//!   lines), the same serialized pointer-chase shape as
+//!   [`crate::workloads::l2_lat`]: the warp blocks on each load, so
+//!   the kernel runs for `chain` L2 round-trips while every other
+//!   core — and most partitions — sit idle.
+//!
+//! That long tail is precisely the regime where always-ticking every
+//! component wastes the clock loop's time, and where the active set
+//! should collapse to one core plus the partitions its chase touches.
+//! The `idle_skip` section of `BENCH_stats.json` measures this
+//! workload on/off; `tests/determinism.rs` pins that the stats are
+//! byte-identical regardless.
+//!
+//! Expected counts are analytic like `l2_lat`'s: the tail's bypass
+//! loads are exactly `chain` L2 read accesses; the ramp's L1 read
+//! sectors are exactly `4 × ramp_tbs` (its L2 read traffic is left
+//! unasserted — it depends on sector-miss merging, not on anything
+//! this scenario validates).
+
+use crate::trace::{Dim3, KernelTrace, MemInstr, MemSpace, TbTrace,
+                   TraceOp, Workload};
+use crate::workloads::{Expected, GeneratedWorkload};
+
+/// Base of the ramp's lines (one 128 B line per TB).
+const RAMP_BASE: u64 = 0x7f20_0000_0000;
+/// Base of the tail's chase array (one 128 B line per link).
+const TAIL_BASE: u64 = 0x7f30_0000_0000;
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub name: &'static str,
+    /// One-warp TBs in the stream-0 burst.
+    pub ramp_tbs: u32,
+    /// Dependent bypass loads in the stream-1 straggler.
+    pub chain: u32,
+}
+
+impl Params {
+    /// Full-size scenario (bench runs): an 80-core Titan V gets two
+    /// full dispatch waves of ramp, then a ~96-round-trip tail.
+    pub fn idle_tail() -> Self {
+        Self { name: "idle_tail", ramp_tbs: 160, chain: 96 }
+    }
+
+    /// Scaled-down variant for fast tests.
+    pub fn mini() -> Self {
+        Self { name: "idle_tail_mini", ramp_tbs: 8, chain: 12 }
+    }
+}
+
+/// Build the two-kernel workload + expectations.
+pub fn generate(p: &Params) -> GeneratedWorkload {
+    let kernels = vec![ramp_kernel(p), tail_kernel(p)];
+    let mut expected = Expected::default();
+    // ramp: one coalesced 128 B load per TB = 4 L1 read sectors
+    expected.l1_reads.insert(0, 4 * p.ramp_tbs as u64);
+    // tail: L1 bypassed entirely
+    expected.l1_reads.insert(1, 0);
+    expected.l2_reads.insert(1, p.chain as u64);
+    // no writes anywhere
+    expected.l1_writes.insert(0, 0);
+    expected.l1_writes.insert(1, 0);
+    expected.l2_writes.insert(0, 0);
+    expected.l2_writes.insert(1, 0);
+    // every address is touched exactly once; no reuse, no sharing —
+    // gating cannot change what reaches L2
+    expected.deterministic_l2_traffic = true;
+    expected.check_hit_shift = false;
+    GeneratedWorkload {
+        name: p.name.to_string(),
+        workload: Workload {
+            kernels,
+            memcpys: vec![
+                (RAMP_BASE, p.ramp_tbs as u64 * 128),
+                (TAIL_BASE, p.chain as u64 * 128),
+            ],
+        },
+        expected,
+    }
+}
+
+/// Stream-0 burst: `ramp_tbs` one-warp TBs, one coalesced line each.
+fn ramp_kernel(p: &Params) -> KernelTrace {
+    let tbs = (0..p.ramp_tbs)
+        .map(|tb| TbTrace {
+            warps: vec![vec![
+                TraceOp::Alu { count: 2 }, // index math
+                TraceOp::Mem(MemInstr {
+                    pc: 0,
+                    space: MemSpace::Global,
+                    is_write: false,
+                    size: 4,
+                    base_addr: RAMP_BASE + tb as u64 * 128,
+                    stride: 4,
+                    active_mask: u32::MAX,
+                    l1_bypass: false,
+                }),
+            ]],
+        })
+        .collect();
+    KernelTrace {
+        name: "ramp".into(),
+        kernel_id: 0,
+        grid: Dim3::linear(p.ramp_tbs),
+        block: Dim3::linear(32),
+        stream_id: 0,
+        shared_mem_bytes: 0,
+        tbs,
+    }
+}
+
+/// Stream-1 straggler: one thread chasing `chain` dependent `.cg`
+/// loads, one line apart (one sector per load at L2).
+fn tail_kernel(p: &Params) -> KernelTrace {
+    let mut ops = vec![TraceOp::Alu { count: 2 }]; // loop setup
+    for i in 0..p.chain {
+        ops.push(TraceOp::Mem(MemInstr {
+            pc: 1 + i,
+            space: MemSpace::Global,
+            is_write: false,
+            size: 4,
+            base_addr: TAIL_BASE + i as u64 * 128,
+            stride: 0,
+            active_mask: 0x1,
+            l1_bypass: true, // ld.global.cg
+        }));
+        ops.push(TraceOp::Alu { count: 1 }); // ptr swap
+    }
+    KernelTrace {
+        name: "tail".into(),
+        kernel_id: 1,
+        grid: Dim3::linear(1),
+        block: Dim3::linear(1),
+        stream_id: 1,
+        shared_mem_bytes: 0,
+        tbs: vec![TbTrace { warps: vec![ops] }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_streams() {
+        let g = generate(&Params::idle_tail());
+        assert_eq!(g.workload.kernels.len(), 2);
+        let (ramp, tail) = (&g.workload.kernels[0],
+                            &g.workload.kernels[1]);
+        assert_eq!(ramp.stream_id, 0);
+        assert_eq!(ramp.grid.count(), 160);
+        assert_eq!(ramp.warps_per_tb(), 1);
+        assert_eq!(tail.stream_id, 1);
+        assert_eq!(tail.grid.count(), 1);
+        for k in &g.workload.kernels {
+            k.validate().unwrap();
+        }
+        assert_eq!(g.workload.streams(), vec![0, 1]);
+    }
+
+    #[test]
+    fn tail_is_a_serialized_bypass_chain_on_distinct_lines() {
+        let g = generate(&Params::mini());
+        let tail = &g.workload.kernels[1];
+        let mut addrs = Vec::new();
+        for op in &tail.tbs[0].warps[0] {
+            if let TraceOp::Mem(m) = op {
+                assert!(m.l1_bypass);
+                assert_eq!(m.active_mask, 0x1);
+                assert!(!m.is_write);
+                addrs.push(m.base_addr);
+            }
+        }
+        assert_eq!(addrs.len(), 12);
+        // every link on its own line — no merging, one sector each
+        for w in addrs.windows(2) {
+            assert_eq!(w[1] - w[0], 128);
+        }
+    }
+
+    #[test]
+    fn expected_counts_are_analytic() {
+        let p = Params::mini();
+        let g = generate(&p);
+        assert_eq!(g.expected.l1_reads[&0], 4 * p.ramp_tbs as u64);
+        assert_eq!(g.expected.l2_reads[&1], p.chain as u64);
+        assert_eq!(g.expected.total_l2_writes(), 0);
+        assert!(g.expected.deterministic_l2_traffic);
+        assert!(!g.expected.check_hit_shift);
+        // ramp lines never collide with the tail's chase array
+        assert!(RAMP_BASE + 160 * 128 < TAIL_BASE);
+    }
+}

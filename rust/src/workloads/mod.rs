@@ -7,8 +7,12 @@
 //!   `benchmark_3_stream.cu` (saxpy → scale ∥ saxpy → add).
 //! * [`deepbench`] — §5.3 `inference_half_35_1500_2560_0_0` as a
 //!   multi-stream tiled-GEMM trace mirroring the Pallas kernel's tiling.
+//! * [`idle_tail`] — wide burst + one serialized straggler: the
+//!   idle-tail scenario behind the `idle_skip` bench section
+//!   (analytic counts like `l2_lat`'s).
 
 pub mod deepbench;
+pub mod idle_tail;
 pub mod l2_lat;
 pub mod stream_bench;
 
@@ -74,6 +78,8 @@ pub fn canonical_name(bench: &str) -> Option<&'static str> {
         "bench1_mini" => Some("bench1_mini"),
         "deepbench" | "deepbench_inference" => Some("deepbench"),
         "deepbench_mini" => Some("deepbench_mini"),
+        "idle_tail" => Some("idle_tail"),
+        "idle_tail_mini" => Some("idle_tail_mini"),
         _ => None,
     }
 }
@@ -97,6 +103,12 @@ pub fn generate(bench: &str) -> anyhow::Result<GeneratedWorkload> {
         Some("deepbench_mini") => {
             Ok(deepbench::generate(&deepbench::Params::mini()))
         }
+        Some("idle_tail") => {
+            Ok(idle_tail::generate(&idle_tail::Params::idle_tail()))
+        }
+        Some("idle_tail_mini") => {
+            Ok(idle_tail::generate(&idle_tail::Params::mini()))
+        }
         _ => anyhow::bail!(
             "unknown benchmark '{bench}' (have: {})",
             BENCHES.join(", ")),
@@ -104,9 +116,9 @@ pub fn generate(bench: &str) -> anyhow::Result<GeneratedWorkload> {
 }
 
 /// All benchmark names (for `--help` and sweep drivers).
-pub const BENCHES: [&str; 6] = [
+pub const BENCHES: [&str; 8] = [
     "l2_lat", "bench1", "bench3", "bench1_mini", "deepbench",
-    "deepbench_mini",
+    "deepbench_mini", "idle_tail", "idle_tail_mini",
 ];
 
 #[cfg(test)]

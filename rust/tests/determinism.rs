@@ -13,7 +13,11 @@
 //! `benchmark_3_stream` at full size and `benchmark_1_stream` at the
 //! suite-speed mini size (the full-size bench1 run lives in
 //! `tests/end_to_end.rs`), plus `l2_lat` for the bypass/MSHR-merge
-//! path.
+//! path and `idle_tail_mini` for the idle-skip active-set path.
+//!
+//! PR-6 adds an `idle_skip` axis: the idle-aware active-set loop
+//! (default on) must be byte-identical to the always-tick loop
+//! (`idle_skip 0`) across the same thread matrix.
 
 use streamsim::config::SimConfig;
 use streamsim::sim::GpuSim;
@@ -26,7 +30,8 @@ const THREAD_MATRIX: [u32; 4] = [1, 2, 4, 8];
 /// (per-kernel per-stream window prints — merge-ordering bugs surface
 /// here as count diffs even when totals accidentally agree).
 fn run_fingerprint_on(bench: &str, preset: &str, mode: StatMode,
-                      serialize: bool, threads: u32, sharded: bool)
+                      serialize: bool, threads: u32, sharded: bool,
+                      idle_skip: bool)
     -> String {
     let g = workloads::generate(bench).unwrap();
     let mut cfg = SimConfig::preset(preset).unwrap();
@@ -34,6 +39,7 @@ fn run_fingerprint_on(bench: &str, preset: &str, mode: StatMode,
     cfg.serialize_streams = serialize;
     cfg.sim_threads = threads;
     cfg.icnt_sharded = sharded;
+    cfg.idle_skip = idle_skip;
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(&g.workload).unwrap();
     sim.run().unwrap();
@@ -47,7 +53,8 @@ fn run_fingerprint_on(bench: &str, preset: &str, mode: StatMode,
 
 fn run_fingerprint(bench: &str, preset: &str, mode: StatMode,
                    serialize: bool, threads: u32) -> String {
-    run_fingerprint_on(bench, preset, mode, serialize, threads, true)
+    run_fingerprint_on(bench, preset, mode, serialize, threads, true,
+                       true)
 }
 
 fn assert_thread_matrix_identical(bench: &str, preset: &str,
@@ -118,16 +125,55 @@ fn sharded_exchange_bit_identical_to_central_exchange() {
         ("bench1_mini", StatMode::AggregateBuggy),
     ] {
         let central = run_fingerprint_on(bench, "sm7_titanv_mini",
-                                         mode, false, 1, false);
+                                         mode, false, 1, false, true);
         for &t in &THREAD_MATRIX {
             let sharded = run_fingerprint_on(
-                bench, "sm7_titanv_mini", mode, false, t, true);
+                bench, "sm7_titanv_mini", mode, false, t, true, true);
             assert_eq!(
                 central, sharded,
                 "{bench} mode={}: sharded exchange at --sim-threads \
                  {t} diverged from the central exchange",
                 mode.label());
         }
+    }
+}
+
+#[test]
+fn idle_skip_bit_identical_to_always_tick() {
+    // the PR-6 tentpole's semantic anchor: the idle-aware active set
+    // (sleep/wake + ledger dispatch + empty-swap early-out) must be a
+    // pure scheduling optimization — stats, kernel windows and exit
+    // logs byte-identical to ticking every component every cycle, at
+    // every thread count, sharded and central, per mode and workload.
+    // idle_tail_mini is the adversarial case: most components sleep
+    // for most of the run.
+    for (bench, mode) in [
+        ("bench1_mini", StatMode::PerStream),
+        ("bench3", StatMode::PerStream),
+        ("bench3", StatMode::AggregateExact),
+        ("idle_tail_mini", StatMode::PerStream),
+        ("bench1_mini", StatMode::AggregateBuggy),
+    ] {
+        let baseline = run_fingerprint_on(
+            bench, "sm7_titanv_mini", mode, false, 1, true, false);
+        for &t in &THREAD_MATRIX {
+            for skip in [false, true] {
+                let got = run_fingerprint_on(
+                    bench, "sm7_titanv_mini", mode, false, t, true,
+                    skip);
+                assert_eq!(
+                    baseline, got,
+                    "{bench} mode={}: idle_skip={} at --sim-threads \
+                     {t} diverged from the always-tick baseline",
+                    mode.label(), skip as u8);
+            }
+        }
+        // central-exchange spot check: the inbox delivery wakes
+        let central = run_fingerprint_on(
+            bench, "sm7_titanv_mini", mode, false, 1, false, true);
+        assert_eq!(baseline, central,
+                   "{bench} mode={}: central idle_skip run diverged",
+                   mode.label());
     }
 }
 

@@ -3,10 +3,13 @@
 # matrix, and a fast perf-baseline record.
 #
 #   scripts/ci.sh              # fmt + clippy + build + tests
-#   scripts/ci.sh determinism  # + the --sim-threads 1/2/4/8 matrix:
+#   scripts/ci.sh determinism  # + the --sim-threads 1/2/4/8 matrix
+#                              #   crossed with idle_skip 1/0:
 #                              #   byte-compares exported stats JSON
-#                              #   across thread counts and stat modes,
-#                              #   then runs the determinism test suite
+#                              #   across thread counts, stat modes and
+#                              #   the idle-aware active-set loop vs
+#                              #   the always-tick baseline, then runs
+#                              #   the determinism test suite
 #   scripts/ci.sh api          # + build all examples (the facade's
 #                              #   consumers) and run the JSON-schema
 #                              #   drift check against the committed
@@ -18,11 +21,16 @@
 #                              #   per_stream_slot_indexed vs
 #                              #   per_stream_by_id comparison
 #   scripts/ci.sh perf         # + perf regression gate: rerun the
-#                              #   parallel/sharded_icnt benches and
-#                              #   fail on >15% throughput regression
-#                              #   vs the BENCH_stats.json baseline
-#                              #   (skips cleanly when no baseline
-#                              #   has been recorded yet)
+#                              #   parallel/sharded_icnt/idle_skip
+#                              #   benches and fail on >15% throughput
+#                              #   regression vs the BENCH_stats.json
+#                              #   baseline (skips cleanly when no
+#                              #   baseline has been recorded yet)
+#   scripts/ci.sh profile      # + rebuild with --features profile and
+#                              #   print the per-phase wall-clock table
+#                              #   for the idle_tail scenario (where
+#                              #   the active-set win should show up
+#                              #   as a shrunken core_phase share)
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -52,21 +60,27 @@ if [[ "${1:-}" == "determinism" ]]; then
         for mode in tip exact; do
             ref=""
             for t in 1 2 4 8; do
-                out="$TMP/${bench}_${mode}_${t}.json"
-                "$BIN" run --bench "$bench" --preset sm7_titanv_mini \
-                    --stat-mode "$mode" --sim-threads "$t" \
-                    --stats-json "$out" >/dev/null
-                if [[ -z "$ref" ]]; then
-                    ref="$out"
-                else
-                    cmp "$ref" "$out" || {
-                        echo "DETERMINISM FAILURE: $bench/$mode" \
-                             "diverged at --sim-threads $t"
-                        exit 1
-                    }
-                fi
+                for skip in 1 0; do
+                    out="$TMP/${bench}_${mode}_${t}_${skip}.json"
+                    "$BIN" run --bench "$bench" \
+                        --preset sm7_titanv_mini \
+                        --stat-mode "$mode" --sim-threads "$t" \
+                        -o idle_skip "$skip" \
+                        --stats-json "$out" >/dev/null
+                    if [[ -z "$ref" ]]; then
+                        ref="$out"
+                    else
+                        cmp "$ref" "$out" || {
+                            echo "DETERMINISM FAILURE: $bench/$mode" \
+                                 "diverged at --sim-threads $t" \
+                                 "idle_skip $skip"
+                            exit 1
+                        }
+                    fi
+                done
             done
-            echo "  $bench/$mode: byte-identical across threads 1/2/4/8"
+            echo "  $bench/$mode: byte-identical across threads" \
+                 "1/2/4/8 x idle_skip 1/0"
         done
     done
     # (the determinism *test suite* already ran as part of the
@@ -111,7 +125,7 @@ if [[ "${1:-}" == "perf" ]]; then
 import json, sys
 base = json.load(open(sys.argv[1]))
 new = json.load(open(sys.argv[2]))
-GATE_SECTIONS = ["parallel", "sharded_icnt"]
+GATE_SECTIONS = ["parallel", "sharded_icnt", "idle_skip"]
 THRESHOLD = 0.85  # fail below 85% of baseline (>15% regression)
 checked, failures = 0, []
 for sec in GATE_SECTIONS:
@@ -143,6 +157,19 @@ print("perf gate OK: %d case(s) within 15%% of baseline" % checked)
 EOF
 fi
 
+if [[ "${1:-}" == "profile" ]]; then
+    echo "== profile: per-phase timers (--features profile) =="
+    cargo build --release --features profile
+    BIN=target/release/streamsim
+    for skip in 1 0; do
+        echo "-- idle_tail / sm7_titanv, idle_skip=$skip --"
+        # grep fails the script (set -e) if the table is missing —
+        # i.e. if the profile feature silently stopped compiling in
+        "$BIN" run --bench idle_tail --preset sm7_titanv \
+            -o idle_skip "$skip" | grep -A 8 'phase profile'
+    done
+fi
+
 if [[ "${1:-}" == "bench" ]]; then
     echo "== perf baseline -> BENCH_stats.json =="
     STREAMSIM_BENCH_FAST=1 \
@@ -166,10 +193,12 @@ doc["note"] = ("Recorded by scripts/ci.sh bench (fast mode). "
                "parallel (seq vs --sim-threads 2/4 on the 80-SM "
                "preset) / sharded_icnt (central PR-2 exchange vs "
                "sharded double-buffered exchange, bench3/sm7_titanv "
-               "at --sim-threads 1/2/4/8) / abl1 "
-               "(per_stream_slot_indexed vs per_stream_by_id). "
+               "at --sim-threads 1/2/4/8) / idle_skip (always-tick "
+               "vs the idle-aware active set, bench1/bench3/"
+               "idle_tail on sm7_titanv at --sim-threads 1/4/8) / "
+               "abl1 (per_stream_slot_indexed vs per_stream_by_id). "
                "scripts/ci.sh perf gates >15% regressions against "
-               "the parallel + sharded_icnt sections.")
+               "the parallel + sharded_icnt + idle_skip sections.")
 with open(main_path, "w") as f:
     json.dump(doc, f, indent=2)
     f.write("\n")
