@@ -1,29 +1,23 @@
 //! [`BatchRunner`] — run many independent sessions across a bounded
 //! worker pool.
 //!
-//! The "serve heavy traffic" stepping stone: N scenario builders go
-//! in, N results come out (in input order), with at most `threads`
-//! simulations resident at once. The pool is plain scoped threads
-//! pulling job indices off one atomic counter — the same
-//! stdlib-only approach as [`crate::sim::parallel`], whose
-//! [`crate::sim::parallel::resolve_threads`] sizing rule (0 = auto,
-//! capped at the job count) is reused verbatim.
+//! Since the service PR this is a thin convenience wrapper over
+//! [`crate::api::SimService`]: the runner spins up a service sized by
+//! [`crate::sim::parallel::resolve_threads`] (0 = auto, capped at the
+//! job count), submits every builder, waits for the replies in input
+//! order, and shuts the service down. Everything the service
+//! guarantees carries over — per-job error *and panic* isolation
+//! (one scenario panicking or tripping its cycle limit never takes
+//! the batch down), and warm-session reuse between jobs that share a
+//! resolved configuration, with byte-identical results to cold runs.
 //!
-//! Each job runs `build → run_to_idle → snapshot` and reports per-job
-//! as `Result<Snapshot, ApiError>` — one scenario failing (bad
-//! config, cycle-limit trip) never takes the batch down. Inner
-//! sessions honour their own `sim_threads` setting; for large
+//! Inner sessions honour their own `sim_threads` setting; for large
 //! batches, leave jobs at `sim_threads = 1` and let the batch pool
 //! provide the parallelism.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
+use crate::api::service::SimService;
 use crate::api::{ApiError, SimBuilder, Snapshot};
 use crate::sim::parallel;
-
-/// One job's parked result slot.
-type BatchSlot = Mutex<Option<Result<Snapshot, ApiError>>>;
 
 /// Bounded-concurrency executor for independent simulations.
 #[derive(Debug, Clone)]
@@ -52,48 +46,26 @@ impl BatchRunner {
             return Vec::new();
         }
         let workers = self.threads_for(n);
-        if workers <= 1 {
-            return jobs.into_iter().map(run_one).collect();
-        }
-        let next = AtomicUsize::new(0);
-        let jobs: Vec<Mutex<Option<SimBuilder>>> =
-            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
-        let slots: Vec<BatchSlot> =
-            (0..n).map(|_| Mutex::new(None)).collect();
-        let (next_ref, jobs_ref, slots_ref) = (&next, &jobs, &slots);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(move || loop {
-                    let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let job = jobs_ref[i]
-                        .lock()
-                        .unwrap()
-                        .take()
-                        .expect("each job index is claimed once");
-                    let result = run_one(job);
-                    *slots_ref[i].lock().unwrap() = Some(result);
-                });
-            }
-        });
-        slots
+        // the queue holds the whole batch, so blocking submit never
+        // actually blocks and ServiceError cannot occur mid-loop
+        let service =
+            SimService::with_queue_bound(workers as u32, n);
+        let handles: Vec<_> = jobs
             .into_iter()
-            .map(|m| {
-                m.into_inner()
-                    .unwrap()
-                    .expect("every slot filled by the pool")
+            .map(|job| service.submit(job))
+            .collect();
+        let results = handles
+            .into_iter()
+            .map(|h| match h {
+                Ok(handle) => handle.wait(),
+                Err(e) => Err(ApiError::Runtime {
+                    message: format!("batch submission failed: {e}"),
+                }),
             })
-            .collect()
+            .collect();
+        service.shutdown();
+        results
     }
-}
-
-/// One job: build the session, run it to idle, move the stats out.
-fn run_one(job: SimBuilder) -> Result<Snapshot, ApiError> {
-    let mut session = job.build()?;
-    session.run_to_idle()?;
-    Ok(session.into_snapshot())
 }
 
 #[cfg(test)]
@@ -153,6 +125,33 @@ mod tests {
         assert_eq!(results[1].as_ref().unwrap_err().kind(),
                    "unknown_bench");
         assert!(results[2].is_ok());
+    }
+
+    #[test]
+    fn one_panicking_job_does_not_poison_the_batch() {
+        // the satellite bugfix: a panic inside one job's build/run
+        // used to unwind through the pool thread and abort the whole
+        // batch — now it degrades to that job's typed runtime error
+        let jobs = vec![
+            job("l2_lat", StatMode::PerStream),
+            job("l2_lat", StatMode::AggregateExact).panic_for_test(),
+            job("l2_lat", StatMode::PerStream),
+        ];
+        let results = BatchRunner::new(2).run(jobs);
+        assert!(results[0].is_ok());
+        let err = results[1].as_ref().unwrap_err();
+        assert_eq!(err.kind(), "runtime");
+        assert!(err.to_string().contains("job panicked"), "{err}");
+        assert!(results[2].is_ok());
+        // a single-worker pool survives it too (the worker that
+        // caught the panic keeps serving)
+        let jobs = vec![
+            job("l2_lat", StatMode::PerStream).panic_for_test(),
+            job("l2_lat", StatMode::PerStream),
+        ];
+        let results = BatchRunner::new(1).run(jobs);
+        assert_eq!(results[0].as_ref().unwrap_err().kind(), "runtime");
+        assert!(results[1].is_ok());
     }
 
     #[test]

@@ -12,8 +12,11 @@
 
 use std::fmt;
 
+use crate::api::query::Snapshot;
+use crate::Cycle;
+
 /// Failure classes of the `streamsim::api` surface.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone)]
 pub enum ApiError {
     /// The requested configuration preset does not exist.
     UnknownPreset {
@@ -51,10 +54,22 @@ pub enum ApiError {
         /// The underlying error.
         message: String,
     },
-    /// The simulation tripped the `max_cycles` safety valve.
+    /// The simulation tripped the `max_cycles` safety valve (or a
+    /// per-job cycle budget). The stats accumulated up to the stop
+    /// ride along instead of being discarded — exactly what a user
+    /// debugging a runaway stream needs (the session is resumable,
+    /// and the partial counts are valid snapshot-at-cycle reads).
     CycleLimit {
         /// The limit diagnostic (queue/running counts at the trip).
         message: String,
+        /// Simulation cycle at the stop (0 when unknown — e.g. a
+        /// limit error surfaced from a raw `anyhow` chain).
+        cycles: Cycle,
+        /// The partial snapshot at the stop, attached by the session
+        /// layer (`None` only when the error was mapped without
+        /// session access). Ignored by `PartialEq` — equality is
+        /// about the failure class and diagnostic, not the payload.
+        snapshot: Option<Box<Snapshot>>,
     },
     /// `Snapshot::diff` was asked to subtract snapshots out of order
     /// (the "earlier" snapshot holds counts the later one lacks, or
@@ -99,12 +114,119 @@ impl ApiError {
             .any(|m| m.starts_with(crate::sim::gpu_sim::MAX_CYCLES_ERR));
         let message = format!("{e:#}");
         if limit {
-            ApiError::CycleLimit { message }
+            ApiError::CycleLimit { message, cycles: 0, snapshot: None }
         } else {
             ApiError::Runtime { message }
         }
     }
+
+    /// Map a caught panic payload (from `catch_unwind`) onto the
+    /// typed surface — the per-job isolation path of
+    /// [`crate::api::SimService`] / [`crate::api::BatchRunner`]: one
+    /// panicking scenario degrades to its own `runtime` error instead
+    /// of tearing down the whole pool.
+    pub(crate) fn from_panic(payload: Box<dyn std::any::Any + Send>)
+        -> ApiError {
+        let message = if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        };
+        ApiError::Runtime {
+            message: format!("job panicked: {message}"),
+        }
+    }
+
+    /// The partial [`Snapshot`] a [`ApiError::CycleLimit`] carries,
+    /// if the session layer attached one.
+    pub fn partial_snapshot(&self) -> Option<&Snapshot> {
+        match self {
+            ApiError::CycleLimit { snapshot, .. } => {
+                snapshot.as_deref()
+            }
+            _ => None,
+        }
+    }
 }
+
+/// Equality ignores the `CycleLimit` snapshot payload: two limit
+/// errors with the same diagnostic are the same failure, whether or
+/// not a partial snapshot rode along (snapshots themselves have no
+/// equality — they are deep stat copies).
+impl PartialEq for ApiError {
+    fn eq(&self, other: &Self) -> bool {
+        use ApiError::*;
+        match (self, other) {
+            (UnknownPreset { name: a }, UnknownPreset { name: b })
+            | (UnknownBench { name: a }, UnknownBench { name: b }) => {
+                a == b
+            }
+            (InvalidOption { key: ka, message: ma },
+             InvalidOption { key: kb, message: mb }) => {
+                ka == kb && ma == mb
+            }
+            (InvalidConfig { message: a }, InvalidConfig { message: b })
+            | (InvalidWorkload { message: a },
+               InvalidWorkload { message: b })
+            | (SnapshotOrder { message: a },
+               SnapshotOrder { message: b })
+            | (Runtime { message: a }, Runtime { message: b }) => a == b,
+            (Io { path: pa, message: ma },
+             Io { path: pb, message: mb }) => pa == pb && ma == mb,
+            (CycleLimit { message: a, cycles: ca, .. },
+             CycleLimit { message: b, cycles: cb, .. }) => {
+                a == b && ca == cb
+            }
+            _ => false,
+        }
+    }
+}
+
+impl Eq for ApiError {}
+
+/// Failure classes of the [`crate::api::SimService`] submission
+/// boundary — distinct from [`ApiError`] because these reject the
+/// *submission*, not the job: the job never ran and holds no partial
+/// result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The bounded job queue is full (`try_submit` only — blocking
+    /// `submit` waits for a slot instead).
+    QueueFull {
+        /// The configured queue bound that was hit.
+        capacity: usize,
+    },
+    /// The service has been shut down; no further jobs are accepted.
+    ShutDown,
+}
+
+impl ServiceError {
+    /// Stable machine-readable tag for the variant.
+    pub const fn kind(&self) -> &'static str {
+        match self {
+            ServiceError::QueueFull { .. } => "queue_full",
+            ServiceError::ShutDown => "shut_down",
+        }
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::QueueFull { capacity } => {
+                write!(f, "service queue full (bound {capacity}); \
+                           retry later or use blocking submit")
+            }
+            ServiceError::ShutDown => {
+                write!(f, "service is shut down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 impl fmt::Display for ApiError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -129,8 +251,12 @@ impl fmt::Display for ApiError {
             ApiError::Io { path, message } => {
                 write!(f, "io error on {path}: {message}")
             }
-            ApiError::CycleLimit { message } => {
-                write!(f, "cycle limit: {message}")
+            ApiError::CycleLimit { message, cycles, .. } => {
+                write!(f, "cycle limit: {message}")?;
+                if *cycles > 0 {
+                    write!(f, " (stopped at cycle {cycles})")?;
+                }
+                Ok(())
             }
             ApiError::SnapshotOrder { message } => {
                 write!(f, "snapshots out of order: {message}")
@@ -247,7 +373,8 @@ mod tests {
              "invalid_workload"),
             (ApiError::Io { path: "p".into(), message: "m".into() },
              "io"),
-            (ApiError::CycleLimit { message: "m".into() },
+            (ApiError::CycleLimit { message: "m".into(), cycles: 7,
+                                    snapshot: None },
              "cycle_limit"),
             (ApiError::Runtime { message: "m".into() }, "runtime"),
         ];
@@ -262,9 +389,56 @@ mod tests {
         let limit = ApiError::from_run(anyhow::anyhow!(
             "simulation exceeded max_cycles = 3 (queue=0, running=1)"));
         assert_eq!(limit.kind(), "cycle_limit");
+        // a raw-chain mapping has no session access: no snapshot yet
+        assert!(limit.partial_snapshot().is_none());
         let other = ApiError::from_run(anyhow::anyhow!(
             "a simulation worker thread panicked during a phase"));
         assert_eq!(other.kind(), "runtime");
+    }
+
+    #[test]
+    fn cycle_limit_equality_ignores_the_snapshot_payload() {
+        let bare = ApiError::CycleLimit {
+            message: "m".into(), cycles: 3, snapshot: None,
+        };
+        let mut session = crate::api::SimBuilder::preset("minimal")
+            .bench("l2_lat").build().unwrap();
+        session.run_to_idle().unwrap();
+        let loaded = ApiError::CycleLimit {
+            message: "m".into(), cycles: 3,
+            snapshot: Some(Box::new(session.snapshot())),
+        };
+        assert_eq!(bare, loaded);
+        let different = ApiError::CycleLimit {
+            message: "m".into(), cycles: 4, snapshot: None,
+        };
+        assert_ne!(bare, different);
+    }
+
+    #[test]
+    fn panic_payloads_map_to_runtime_with_the_message() {
+        let from_str = std::panic::catch_unwind(|| {
+            panic!("deliberate &str panic")
+        })
+        .unwrap_err();
+        let e = ApiError::from_panic(from_str);
+        assert_eq!(e.kind(), "runtime");
+        assert!(e.to_string().contains("deliberate &str panic"), "{e}");
+        let from_string = std::panic::catch_unwind(|| {
+            panic!("formatted {} panic", 42)
+        })
+        .unwrap_err();
+        let e2 = ApiError::from_panic(from_string);
+        assert!(e2.to_string().contains("formatted 42 panic"), "{e2}");
+    }
+
+    #[test]
+    fn service_error_kinds_and_display_are_stable() {
+        let full = ServiceError::QueueFull { capacity: 4 };
+        assert_eq!(full.kind(), "queue_full");
+        assert!(full.to_string().contains("bound 4"), "{full}");
+        assert_eq!(ServiceError::ShutDown.kind(), "shut_down");
+        assert!(!ServiceError::ShutDown.to_string().is_empty());
     }
 
     #[test]

@@ -18,10 +18,44 @@
 //!   of per-stream increments — cheap periodic sampling.
 //! * [`ConfigNote`] — typed non-fatal advisories recorded at build
 //!   time ([`SimSession::notes`]), e.g. the clean-mode thread pin.
-//! * [`BatchRunner`] — N independent sessions over a bounded worker
-//!   pool (input-order results, per-job error isolation).
+//! * [`SimService`] — the long-lived serving layer: a resident
+//!   worker pool behind a **bounded** job queue
+//!   ([`ServiceError::QueueFull`] backpressure), warm-session reuse
+//!   with byte-identical results, per-job panic/cycle-budget
+//!   isolation, graceful draining [`SimService::shutdown`], and
+//!   [`ServiceStats`] counters for the `service` stats-JSON section.
+//! * [`BatchRunner`] — "run these N scenarios" convenience over the
+//!   service (input-order results, same isolation guarantees).
 //!
-//! # Quickstart
+//! # Quickstart: serving scenarios
+//!
+//! ```no_run
+//! use streamsim::api::{SimBuilder, SimJob, SimService, StatMode};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     // 2 resident workers, at most 16 queued jobs
+//!     let service = SimService::with_queue_bound(2, 16);
+//!     let fast = service.submit(
+//!         SimBuilder::preset("minimal").bench("l2_lat"))?;
+//!     // budgeted job: cancelled (with partial stats) after 10k cycles
+//!     let capped = service.submit(
+//!         SimJob::new(SimBuilder::preset("minimal")
+//!                 .stat_mode(StatMode::PerStream)
+//!                 .bench("bench3"))
+//!             .cycle_budget(10_000))?;
+//!     println!("{}", fast.wait()?.to_json());
+//!     if let Err(e) = capped.wait() {
+//!         if let Some(partial) = e.partial_snapshot() {
+//!             println!("stopped early: {}", partial.to_json());
+//!         }
+//!     }
+//!     let counters = service.shutdown();
+//!     println!("warm hits: {}", counters.warm_hits);
+//!     Ok(())
+//! }
+//! ```
+//!
+//! # Quickstart: one session
 //!
 //! ```no_run
 //! use streamsim::api::{SimBuilder, StatDomain, StatMode};
@@ -41,6 +75,11 @@
 //! }
 //! ```
 //!
+//! Sessions are reusable: [`SimSession::reset_for_reuse`] returns a
+//! built session to its exact post-construction state (capacity
+//! kept), after which enqueueing and running is byte-identical to a
+//! cold build — the contract the service's warm pool is built on.
+//!
 //! Everything a facade consumer needs is re-exported here: the
 //! vocabulary types ([`StatMode`], [`StatDomain`], [`AccessType`],
 //! [`AccessOutcome`], …), the configuration system ([`SimConfig`]),
@@ -53,17 +92,21 @@
 pub mod batch;
 pub mod error;
 pub mod query;
+pub mod service;
 pub mod session;
 
 pub use batch::BatchRunner;
-pub use error::{ApiError, ConfigNote, ConfigNoteKind};
+pub use error::{ApiError, ConfigNote, ConfigNoteKind, ServiceError};
 pub use query::{QueryRow, Snapshot, SnapshotDiff, StatsQuery};
+pub use service::{JobHandle, SimJob, SimService,
+                  DEFAULT_QUEUE_BOUND};
 pub use session::{SimBuilder, SimSession};
 
 // The versioned result-document schema (one serializer for JSON, CSV
-// and snapshots).
+// and snapshots), plus the service-counter section.
 pub use crate::stats::export::{to_csv_versioned, to_json_versioned,
-                               top_level_keys, SCHEMA_VERSION};
+                               top_level_keys, ServiceStats,
+                               SCHEMA_VERSION, SERVICE_SECTION_KEYS};
 
 // Vocabulary types facade consumers select/match on.
 pub use crate::cache::access::{AccessOutcome, AccessType, FailOutcome};

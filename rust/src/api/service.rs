@@ -1,0 +1,593 @@
+//! [`SimService`] — a long-lived simulation service on top of the
+//! session facade.
+//!
+//! [`crate::api::BatchRunner`] answers "run these N scenarios"; the
+//! service answers "keep serving scenarios". A resident worker pool
+//! (sized by [`crate::sim::parallel::resolve_threads`], the same rule
+//! as the clock-loop pool) pulls jobs off one **bounded** queue:
+//!
+//! * **Jobs** are a [`SimBuilder`] plus an optional cycle budget
+//!   ([`SimJob`]); submitting returns a [`JobHandle`] to wait on.
+//! * **Backpressure** is explicit: [`SimService::try_submit`] fails
+//!   fast with [`ServiceError::QueueFull`] at the configured bound,
+//!   [`SimService::submit`] blocks until a slot frees.
+//! * **Warm reuse**: each worker keeps a small pool of built sessions
+//!   keyed by their resolved [`SimConfig`]. A job whose configuration
+//!   matches recycles a session via
+//!   [`SimSession::reset_for_reuse`] instead of rebuilding — with
+//!   **byte-identical** results to a cold build (the reuse contract,
+//!   pinned by `tests/service.rs`).
+//! * **Per-job isolation**: a panicking job maps to
+//!   [`ApiError::Runtime`], a cycle-budget trip to
+//!   [`ApiError::CycleLimit`] carrying the partial [`Snapshot`] —
+//!   neither disturbs other jobs or the service itself.
+//! * **Graceful end**: [`SimService::shutdown`] closes the queue,
+//!   drains every job already accepted, joins the workers and
+//!   returns the final [`ServiceStats`] counters (also exported as
+//!   the `service` stats-JSON section by the CLI `batch`
+//!   subcommand).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender,
+                      TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::error::{ApiError, ServiceError};
+use crate::api::query::Snapshot;
+use crate::api::session::{SimBuilder, SimSession};
+use crate::config::SimConfig;
+use crate::sim::parallel;
+use crate::stats::export::ServiceStats;
+use crate::Cycle;
+
+/// Warm sessions each worker keeps around, oldest evicted first.
+const WARM_POOL_CAP: usize = 4;
+
+/// Submission-queue capacity when none is given.
+pub const DEFAULT_QUEUE_BOUND: usize = 32;
+
+/// One unit of work: a scenario builder plus optional limits.
+#[derive(Debug, Clone)]
+pub struct SimJob {
+    builder: SimBuilder,
+    cycle_budget: Option<Cycle>,
+}
+
+impl SimJob {
+    /// Job that runs the builder's scenario to idle.
+    pub fn new(builder: SimBuilder) -> Self {
+        Self { builder, cycle_budget: None }
+    }
+
+    /// Cancel the job after at most `cycles` simulated cycles. A
+    /// tripped budget replies [`ApiError::CycleLimit`] carrying the
+    /// partial [`Snapshot`] accumulated so far
+    /// ([`ApiError::partial_snapshot`]) — the work is cancelled, not
+    /// discarded. Budgeted jobs are stepped inline (sequentially) so
+    /// the budget is enforced cycle-exactly.
+    pub fn cycle_budget(mut self, cycles: Cycle) -> Self {
+        self.cycle_budget = Some(cycles);
+        self
+    }
+}
+
+impl From<SimBuilder> for SimJob {
+    fn from(builder: SimBuilder) -> Self {
+        Self::new(builder)
+    }
+}
+
+/// Receipt for a submitted job.
+pub struct JobHandle {
+    rx: Receiver<Result<Snapshot, ApiError>>,
+}
+
+impl JobHandle {
+    /// Block until the job's result arrives.
+    pub fn wait(self) -> Result<Snapshot, ApiError> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(ApiError::Runtime {
+                message: "service dropped the job before replying"
+                    .to_string(),
+            })
+        })
+    }
+
+    /// Non-blocking poll; `None` while the job is still queued or
+    /// running.
+    pub fn try_wait(&self) -> Option<Result<Snapshot, ApiError>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Shared live counters (lock-free; snapshotted into
+/// [`ServiceStats`]).
+#[derive(Default)]
+struct Counters {
+    jobs_run: AtomicU64,
+    warm_hits: AtomicU64,
+    cold_builds: AtomicU64,
+    job_errors: AtomicU64,
+    budget_stops: AtomicU64,
+    rejected_full: AtomicU64,
+    // submit and dequeue race, so the transient value can dip below
+    // zero; clamped at read
+    queue_depth: AtomicI64,
+    queue_peak: AtomicU64,
+}
+
+impl Counters {
+    fn note_enqueue(&self) {
+        let depth =
+            self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_peak
+            .fetch_max(depth.max(0) as u64, Ordering::Relaxed);
+    }
+
+    fn note_dequeue(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self, threads: usize, queue_bound: usize)
+        -> ServiceStats {
+        ServiceStats {
+            threads: threads as u64,
+            queue_bound: queue_bound as u64,
+            jobs_run: self.jobs_run.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            cold_builds: self.cold_builds.load(Ordering::Relaxed),
+            job_errors: self.job_errors.load(Ordering::Relaxed),
+            budget_stops: self.budget_stops.load(Ordering::Relaxed),
+            rejected_full: self.rejected_full.load(Ordering::Relaxed),
+            queue_depth: self
+                .queue_depth
+                .load(Ordering::Relaxed)
+                .max(0) as u64,
+            queue_peak: self.queue_peak.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Start gate: workers of a [`SimService::paused`] service park here
+/// until [`SimService::resume`] (or shutdown) opens it.
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(open: bool) -> Self {
+        Self { open: Mutex::new(open), cv: Condvar::new() }
+    }
+
+    fn wait_open(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+struct WorkItem {
+    job: SimJob,
+    reply: SyncSender<Result<Snapshot, ApiError>>,
+}
+
+/// The long-lived service. Dropping it shuts down gracefully
+/// (equivalent to [`SimService::shutdown`] minus the returned
+/// counters).
+pub struct SimService {
+    tx: Option<SyncSender<WorkItem>>,
+    workers: Vec<JoinHandle<()>>,
+    gate: Arc<Gate>,
+    counters: Arc<Counters>,
+    threads: usize,
+    queue_bound: usize,
+}
+
+impl SimService {
+    /// Service with `threads` resident workers (`0` = available
+    /// parallelism) and the default queue bound.
+    pub fn new(threads: u32) -> Self {
+        Self::with_queue_bound(threads, DEFAULT_QUEUE_BOUND)
+    }
+
+    /// Service with an explicit submission-queue bound (clamped to at
+    /// least 1): at most `queue_bound` accepted-but-unstarted jobs.
+    pub fn with_queue_bound(threads: u32, queue_bound: usize) -> Self {
+        Self::build_service(threads, queue_bound, true)
+    }
+
+    /// Service whose workers stay parked until
+    /// [`SimService::resume`]. Submissions are accepted (and the
+    /// bound enforced) while paused — this is how tests fill the
+    /// queue deterministically.
+    pub fn paused(threads: u32, queue_bound: usize) -> Self {
+        Self::build_service(threads, queue_bound, false)
+    }
+
+    fn build_service(threads: u32, queue_bound: usize, running: bool)
+        -> Self {
+        let threads = parallel::resolve_threads(threads, u32::MAX);
+        let queue_bound = queue_bound.max(1);
+        let (tx, rx) = sync_channel::<WorkItem>(queue_bound);
+        let rx = Arc::new(Mutex::new(rx));
+        let gate = Arc::new(Gate::new(running));
+        let counters = Arc::new(Counters::default());
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let gate = Arc::clone(&gate);
+                let counters = Arc::clone(&counters);
+                std::thread::spawn(move || {
+                    worker_loop(&rx, &gate, &counters)
+                })
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+            gate,
+            counters,
+            threads,
+            queue_bound,
+        }
+    }
+
+    /// Release the workers of a [`SimService::paused`] service.
+    pub fn resume(&self) {
+        self.gate.open();
+    }
+
+    /// Resident worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Submission-queue capacity.
+    pub fn queue_bound(&self) -> usize {
+        self.queue_bound
+    }
+
+    /// Submit a job, **blocking** while the queue is at its bound.
+    pub fn submit(&self, job: impl Into<SimJob>)
+        -> Result<JobHandle, ServiceError> {
+        let (item, handle) = package(job.into());
+        let tx = self.tx.as_ref().expect("queue open until shutdown");
+        match tx.send(item) {
+            Ok(()) => {
+                self.counters.note_enqueue();
+                Ok(handle)
+            }
+            Err(_) => Err(ServiceError::ShutDown),
+        }
+    }
+
+    /// Submit a job without blocking: at the bound, fail fast with
+    /// [`ServiceError::QueueFull`] so the caller sheds load instead
+    /// of stalling.
+    pub fn try_submit(&self, job: impl Into<SimJob>)
+        -> Result<JobHandle, ServiceError> {
+        let (item, handle) = package(job.into());
+        let tx = self.tx.as_ref().expect("queue open until shutdown");
+        match tx.try_send(item) {
+            Ok(()) => {
+                self.counters.note_enqueue();
+                Ok(handle)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.counters
+                    .rejected_full
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(ServiceError::QueueFull {
+                    capacity: self.queue_bound,
+                })
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(ServiceError::ShutDown)
+            }
+        }
+    }
+
+    /// Live counter snapshot (the `service` stats-JSON section).
+    pub fn stats(&self) -> ServiceStats {
+        self.counters.snapshot(self.threads, self.queue_bound)
+    }
+
+    /// Close the queue, **drain every accepted job** (replies are
+    /// still delivered through their [`JobHandle`]s), join the
+    /// workers, and return the final counters.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.shutdown_inner();
+        self.stats()
+    }
+
+    fn shutdown_inner(&mut self) {
+        // dropping the sender closes the queue; workers drain what
+        // was already accepted, then exit on the disconnect
+        self.tx.take();
+        // parked workers must be released to drain
+        self.gate.open();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SimService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn package(job: SimJob) -> (WorkItem, JobHandle) {
+    // capacity 1: the worker's single reply send can never block
+    let (reply, rx) = sync_channel(1);
+    (WorkItem { job, reply }, JobHandle { rx })
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<WorkItem>>,
+    gate: &Gate,
+    counters: &Counters,
+) {
+    let mut pool: Vec<(SimConfig, SimSession)> = Vec::new();
+    loop {
+        gate.wait_open();
+        // the receiver lock is held only while blocked in recv — the
+        // statement ends (and releases it) before the job runs
+        let item = match rx.lock().unwrap().recv() {
+            Ok(item) => item,
+            Err(_) => break,
+        };
+        counters.note_dequeue();
+        let result = run_job(&mut pool, item.job, counters);
+        counters.jobs_run.fetch_add(1, Ordering::Relaxed);
+        if result.is_err() {
+            counters.job_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        // the handle may have been dropped; the job still ran
+        let _ = item.reply.send(result);
+    }
+}
+
+/// One job, panic-isolated: whatever unwinds out of the build or the
+/// run becomes a typed [`ApiError::Runtime`] for *this* job only.
+/// A session that was mid-job when the panic hit has already been
+/// taken out of the warm pool, so the pool never holds poisoned
+/// state.
+fn run_job(
+    pool: &mut Vec<(SimConfig, SimSession)>,
+    job: SimJob,
+    counters: &Counters,
+) -> Result<Snapshot, ApiError> {
+    match catch_unwind(AssertUnwindSafe(|| {
+        run_job_inner(pool, job, counters)
+    })) {
+        Ok(result) => result,
+        Err(payload) => Err(ApiError::from_panic(payload)),
+    }
+}
+
+fn run_job_inner(
+    pool: &mut Vec<(SimConfig, SimSession)>,
+    job: SimJob,
+    counters: &Counters,
+) -> Result<Snapshot, ApiError> {
+    let SimJob { builder, cycle_budget } = job;
+    if builder.panics_for_test() {
+        panic!("injected test panic (SimBuilder::panic_for_test)");
+    }
+    let (cfg, notes) = builder.build_config_with_notes()?;
+    let warm = pool.iter().position(|(c, _)| *c == cfg);
+    let mut session = match warm {
+        Some(i) => {
+            // resolve the workload *before* touching the pooled
+            // session so a bad trace path leaves the pool intact
+            let workload = builder.resolve_workload()?;
+            let label = builder.label_for(&cfg);
+            let (_, mut s) = pool.swap_remove(i);
+            s.reset_for_reuse();
+            s.set_label(&label);
+            s.set_notes(notes);
+            s.set_verbose(builder.verbose_flag());
+            if let Some(w) = &workload {
+                s.enqueue(w)?;
+            }
+            counters.warm_hits.fetch_add(1, Ordering::Relaxed);
+            s
+        }
+        None => {
+            let s = builder.build()?;
+            // counted only on success: a job that failed to build
+            // neither built cold nor reused warm
+            counters.cold_builds.fetch_add(1, Ordering::Relaxed);
+            s
+        }
+    };
+    let run = match cycle_budget {
+        None => session.run_to_idle(),
+        Some(budget) => run_with_budget(&mut session, budget, counters),
+    };
+    // a cycle-limited session is still structurally sound — the next
+    // reuse resets it — so it goes back to the pool either way
+    let result = match run {
+        Ok(()) => Ok(session.snapshot()),
+        Err(err) => Err(err),
+    };
+    stash(pool, cfg, session);
+    result
+}
+
+/// Step the session until idle or until `budget` cycles elapse; a
+/// trip cancels the job with the partial snapshot attached.
+fn run_with_budget(
+    session: &mut SimSession,
+    budget: Cycle,
+    counters: &Counters,
+) -> Result<(), ApiError> {
+    let stop_at = session.cycle().saturating_add(budget);
+    while !session.idle() {
+        if session.cycle() >= stop_at {
+            counters.budget_stops.fetch_add(1, Ordering::Relaxed);
+            return Err(ApiError::CycleLimit {
+                message: format!(
+                    "job cycle budget exhausted = {budget}"),
+                cycles: session.cycle(),
+                snapshot: Some(Box::new(session.snapshot())),
+            });
+        }
+        session.step()?;
+    }
+    Ok(())
+}
+
+fn stash(
+    pool: &mut Vec<(SimConfig, SimSession)>,
+    cfg: SimConfig,
+    session: SimSession,
+) {
+    if pool.len() >= WARM_POOL_CAP {
+        pool.remove(0);
+    }
+    pool.push((cfg, session));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::StatMode;
+
+    fn job(bench: &str, mode: StatMode) -> SimBuilder {
+        SimBuilder::preset("minimal")
+            .stat_mode(mode)
+            .sim_threads(1)
+            .bench(bench)
+    }
+
+    #[test]
+    fn submitted_jobs_run_and_reply() {
+        let service = SimService::with_queue_bound(2, 8);
+        let h = service.submit(job("l2_lat", StatMode::PerStream))
+            .unwrap();
+        let snap = h.wait().unwrap();
+        assert_eq!(snap.kernels_done(), 4);
+        let stats = service.shutdown();
+        assert_eq!(stats.jobs_run, 1);
+        assert_eq!(stats.cold_builds, 1);
+        assert_eq!(stats.job_errors, 0);
+    }
+
+    #[test]
+    fn warm_reuse_is_byte_identical_and_counted() {
+        let cold_json = {
+            let mut s =
+                job("l2_lat", StatMode::PerStream).build().unwrap();
+            s.run_to_idle().unwrap();
+            s.snapshot().to_json()
+        };
+        // one worker → the second submission must hit its warm pool
+        let service = SimService::with_queue_bound(1, 8);
+        let a = service.submit(job("l2_lat", StatMode::PerStream))
+            .unwrap().wait().unwrap();
+        let b = service.submit(job("l2_lat", StatMode::PerStream))
+            .unwrap().wait().unwrap();
+        assert_eq!(a.to_json(), cold_json);
+        assert_eq!(b.to_json(), cold_json,
+                   "warm-reused run drifted from the cold one");
+        let stats = service.shutdown();
+        assert_eq!(stats.jobs_run, 2);
+        assert_eq!(stats.cold_builds, 1);
+        assert_eq!(stats.warm_hits, 1);
+    }
+
+    #[test]
+    fn queue_full_fires_at_the_configured_bound() {
+        // parked workers: nothing is dequeued, so the bound is exact
+        let service = SimService::paused(1, 2);
+        let h1 = service
+            .try_submit(job("l2_lat", StatMode::PerStream)).unwrap();
+        let h2 = service
+            .try_submit(job("l2_lat", StatMode::PerStream)).unwrap();
+        let err = service
+            .try_submit(job("l2_lat", StatMode::PerStream))
+            .unwrap_err();
+        assert_eq!(err, ServiceError::QueueFull { capacity: 2 });
+        assert_eq!(err.kind(), "queue_full");
+        service.resume();
+        assert!(h1.wait().is_ok());
+        assert!(h2.wait().is_ok());
+        let stats = service.shutdown();
+        assert_eq!(stats.rejected_full, 1);
+        assert_eq!(stats.jobs_run, 2);
+        assert_eq!(stats.queue_peak, 2);
+        assert_eq!(stats.queue_depth, 0);
+    }
+
+    #[test]
+    fn cycle_budget_cancels_with_partial_snapshot() {
+        let service = SimService::with_queue_bound(1, 4);
+        let h = service
+            .submit(SimJob::new(job("l2_lat", StatMode::PerStream))
+                .cycle_budget(50))
+            .unwrap();
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.kind(), "cycle_limit");
+        let snap = err.partial_snapshot()
+            .expect("budget trip keeps the partial stats");
+        assert!(snap.total_cycles() >= 50);
+        assert!(snap.kernels_done() < 4);
+        // the service keeps serving — and the recycled session shows
+        // no trace of the cancelled job
+        let full = service.submit(job("l2_lat", StatMode::PerStream))
+            .unwrap().wait().unwrap();
+        assert_eq!(full.kernels_done(), 4);
+        let stats = service.shutdown();
+        assert_eq!(stats.budget_stops, 1);
+        assert_eq!(stats.job_errors, 1);
+    }
+
+    #[test]
+    fn panicking_job_is_isolated() {
+        let service = SimService::with_queue_bound(1, 4);
+        let bad = service
+            .submit(job("l2_lat", StatMode::PerStream)
+                .panic_for_test())
+            .unwrap();
+        let good = service.submit(job("l2_lat", StatMode::PerStream))
+            .unwrap();
+        let err = bad.wait().unwrap_err();
+        assert_eq!(err.kind(), "runtime");
+        assert!(err.to_string().contains("job panicked"), "{err}");
+        assert!(good.wait().is_ok(),
+                "a panicking job must not take the worker down");
+        let stats = service.shutdown();
+        assert_eq!(stats.jobs_run, 2);
+        assert_eq!(stats.job_errors, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_jobs() {
+        let service = SimService::paused(2, 16);
+        let handles: Vec<JobHandle> = (0..6)
+            .map(|_| {
+                service.submit(job("l2_lat", StatMode::PerStream))
+                    .unwrap()
+            })
+            .collect();
+        // nothing has started yet; shutdown must still run them all
+        let stats = service.shutdown();
+        assert_eq!(stats.jobs_run, 6);
+        assert_eq!(stats.queue_depth, 0);
+        for h in handles {
+            assert!(h.wait().is_ok(), "accepted job lost in shutdown");
+        }
+    }
+}

@@ -56,6 +56,7 @@ pub struct SimBuilder {
     source: Option<WorkloadSource>,
     verbose: bool,
     label: Option<String>,
+    panic_for_test: bool,
 }
 
 impl Default for SimBuilder {
@@ -83,6 +84,7 @@ impl SimBuilder {
             source: None,
             verbose: false,
             label: None,
+            panic_for_test: false,
         }
     }
 
@@ -181,6 +183,16 @@ impl SimBuilder {
         self
     }
 
+    /// Test hook: make [`SimBuilder::build`] panic instead of
+    /// building. Exercises the panic-isolation paths of
+    /// [`crate::api::BatchRunner`] and [`crate::api::SimService`]
+    /// without a contrived workload.
+    #[doc(hidden)]
+    pub fn panic_for_test(mut self) -> Self {
+        self.panic_for_test = true;
+        self
+    }
+
     /// Resolve and validate the configuration only (no simulator).
     /// Layering order matches the CLI: preset → config file →
     /// stat-mode/serialize/threads knobs → `-key value` overrides →
@@ -240,24 +252,37 @@ impl SimBuilder {
     /// step, typed errors. Non-fatal advisories ride along on
     /// [`SimSession::notes`].
     pub fn build(self) -> Result<SimSession, ApiError> {
+        if self.panic_for_test {
+            panic!("injected test panic (SimBuilder::panic_for_test)");
+        }
         let (cfg, notes) = self.build_config_with_notes()?;
-        let label = self
-            .label
-            .clone()
-            .unwrap_or_else(|| cfg.stat_mode.label().to_string());
+        let label = self.label_for(&cfg);
         let sim = GpuSim::new(cfg).map_err(|e| {
             ApiError::InvalidConfig { message: format!("{e:#}") }
         })?;
         let mut session = SimSession { sim, label, notes };
         session.sim.set_verbose(self.verbose);
-        match self.source {
-            None => {}
-            Some(WorkloadSource::Inline(w)) => session.enqueue(&w)?,
+        if let Some(w) = self.resolve_workload()? {
+            session.enqueue(&w)?;
+        }
+        Ok(session)
+    }
+
+    /// Resolve the workload source into a concrete [`Workload`]
+    /// without touching a simulator — the piece of
+    /// [`SimBuilder::build`] the warm-reuse path of
+    /// [`crate::api::SimService`] replays onto a reset session.
+    /// `None` when no source was given.
+    pub(crate) fn resolve_workload(&self)
+        -> Result<Option<Workload>, ApiError> {
+        match &self.source {
+            None => Ok(None),
+            Some(WorkloadSource::Inline(w)) => Ok(Some(w.clone())),
             Some(WorkloadSource::Bench(name)) => {
-                let g = workloads::generate(&name).map_err(|_| {
+                let g = workloads::generate(name).map_err(|_| {
                     ApiError::UnknownBench { name: name.clone() }
                 })?;
-                session.enqueue(&g.workload)?;
+                Ok(Some(g.workload))
             }
             Some(WorkloadSource::Trace(path)) => {
                 // one open() probe classifies filesystem problems
@@ -265,20 +290,37 @@ impl SimBuilder {
                 // error; residual load failures — malformed traces,
                 // or I/O on files the list references — surface as
                 // InvalidWorkload with the cause in the message
-                if let Err(e) = std::fs::File::open(&path) {
+                if let Err(e) = std::fs::File::open(path) {
                     return Err(ApiError::Io {
                         path: path.display().to_string(),
                         message: e.to_string(),
                     });
                 }
-                let w = crate::trace::io::load_workload(&path)
+                let w = crate::trace::io::load_workload(path)
                     .map_err(|e| ApiError::InvalidWorkload {
                         message: format!("{}: {e:#}", path.display()),
                     })?;
-                session.enqueue(&w)?;
+                Ok(Some(w))
             }
         }
-        Ok(session)
+    }
+
+    /// Export label the built session will carry for a resolved
+    /// config.
+    pub(crate) fn label_for(&self, cfg: &SimConfig) -> String {
+        self.label
+            .clone()
+            .unwrap_or_else(|| cfg.stat_mode.label().to_string())
+    }
+
+    /// Whether the built session echoes kernel launch/exit lines.
+    pub(crate) fn verbose_flag(&self) -> bool {
+        self.verbose
+    }
+
+    /// Whether [`SimBuilder::panic_for_test`] armed the test hook.
+    pub(crate) fn panics_for_test(&self) -> bool {
+        self.panic_for_test
     }
 }
 
@@ -341,10 +383,44 @@ impl SimSession {
         })
     }
 
+    /// Reset the session to the exact state of a freshly built one
+    /// with the same configuration: every cache, queue, crossbar
+    /// lane, scheduler cursor and statistic returns to its
+    /// post-construction value, while the allocated capacity
+    /// (cache arrays, worker chunks, exchange buffers) is kept.
+    ///
+    /// **Reuse contract:** after `reset_for_reuse`, enqueueing a
+    /// workload and running produces **byte-identical** versioned
+    /// stats JSON to building a new session from the same
+    /// [`SimBuilder`] and running it cold — across thread counts and
+    /// stat modes (pinned by `tests/service.rs`). Verbose echo is
+    /// switched off, matching a fresh build without
+    /// [`SimBuilder::verbose`]. The label and notes are kept; callers
+    /// re-targeting the session to a new job can override the label
+    /// via [`SimSession::set_label`].
+    pub fn reset_for_reuse(&mut self) {
+        self.sim.reset_for_reuse();
+    }
+
+    /// Replace the export label carried on snapshots (the warm-reuse
+    /// path re-labels a recycled session for its new job).
+    pub fn set_label(&mut self, label: &str) {
+        self.label = label.to_string();
+    }
+
+    /// Replace the build-time advisories (warm reuse adopts the notes
+    /// of the job's builder so `notes()` matches a cold build).
+    pub(crate) fn set_notes(&mut self, notes: Vec<ConfigNote>) {
+        self.notes = notes;
+    }
+
     /// One clock tick (inline, sequential execution of the phased
     /// loop).
     pub fn step(&mut self) -> Result<(), ApiError> {
-        self.sim.step().map_err(ApiError::from_run)
+        match self.sim.step() {
+            Ok(()) => Ok(()),
+            Err(e) => Err(self.enrich(ApiError::from_run(e))),
+        }
     }
 
     /// Step until at least `n` kernels have retired (the kernel-exit
@@ -367,8 +443,32 @@ impl SimSession {
 
     /// Run until all queued work drains (pooled when
     /// `sim_threads > 1`). Resumable: enqueue more and call again.
+    ///
+    /// Hitting the `max_cycles` safety valve does **not** discard the
+    /// work done so far: the returned
+    /// [`ApiError::CycleLimit`] carries the cycle count at stop and a
+    /// partial [`Snapshot`] of everything accumulated up to it
+    /// (retrieve with [`ApiError::partial_snapshot`]).
     pub fn run_to_idle(&mut self) -> Result<(), ApiError> {
-        self.sim.run().map(|_| ()).map_err(ApiError::from_run)
+        match self.sim.run() {
+            Ok(_) => Ok(()),
+            Err(e) => Err(self.enrich(ApiError::from_run(e))),
+        }
+    }
+
+    /// Attach the cycles-at-stop and the partial snapshot to a
+    /// [`ApiError::CycleLimit`] (other variants pass through).
+    fn enrich(&mut self, err: ApiError) -> ApiError {
+        match err {
+            ApiError::CycleLimit { message, .. } => {
+                ApiError::CycleLimit {
+                    message,
+                    cycles: self.sim.now(),
+                    snapshot: Some(Box::new(self.snapshot())),
+                }
+            }
+            other => other,
+        }
     }
 
     /// Everything drained?
@@ -551,6 +651,31 @@ mod tests {
     }
 
     #[test]
+    fn cycle_limit_keeps_the_partial_stats() {
+        // the satellite bugfix: hitting max_cycles used to discard
+        // everything accumulated so far — now the typed error carries
+        // the cycles-at-stop and a partial snapshot
+        let mut s = SimBuilder::preset("minimal")
+            .set("max_cycles", "50")
+            .bench("l2_lat")
+            .build()
+            .unwrap();
+        let err = s.run_to_idle().unwrap_err();
+        let ApiError::CycleLimit { cycles, .. } = &err else {
+            panic!("expected CycleLimit, got {err:?}");
+        };
+        assert!(*cycles >= 50, "cycles-at-stop recorded: {cycles}");
+        let snap = err.partial_snapshot()
+            .expect("partial snapshot attached");
+        assert_eq!(snap.total_cycles(), *cycles);
+        assert!(snap.kernels_done() < 4,
+                "the bench was genuinely cut short");
+        // the partial snapshot matches a live mid-run snapshot taken
+        // at the same point
+        assert_eq!(snap.to_json(), s.snapshot().to_json());
+    }
+
+    #[test]
     fn oversized_tb_is_an_invalid_workload() {
         let g = workloads::generate("bench3").unwrap();
         // bench3 uses 1024-thread TBs; minimal allows 32 warps -> ok,
@@ -561,6 +686,30 @@ mod tests {
             .build()
             .unwrap_err();
         assert_eq!(err.kind(), "invalid_workload");
+    }
+
+    #[test]
+    fn reset_for_reuse_matches_a_cold_build() {
+        let g = workloads::generate("l2_lat").unwrap();
+        let b = SimBuilder::preset("minimal")
+            .workload(g.workload.clone());
+
+        let mut cold = b.clone().build().unwrap();
+        cold.run_to_idle().unwrap();
+        let cold_json = cold.snapshot().to_json();
+
+        // run something *different* first so the recycled state is
+        // genuinely dirty, then reset and replay the same job
+        let mut warm = SimBuilder::preset("minimal")
+            .bench("bench3")
+            .build()
+            .unwrap();
+        warm.run_to_idle().unwrap();
+        warm.reset_for_reuse();
+        warm.enqueue(&g.workload).unwrap();
+        warm.run_to_idle().unwrap();
+        assert_eq!(warm.snapshot().to_json(), cold_json,
+                   "reuse contract: byte-identical to a cold session");
     }
 
     #[test]

@@ -391,6 +391,20 @@ impl Cache {
                       "flush with fills in flight");
         self.tags.flush();
     }
+
+    /// Warm-session reuse: return to the exact post-construction
+    /// state even with fills in flight. Unlike [`Cache::flush`] this
+    /// also empties the MSHR table, the outgoing miss queue, the
+    /// dirty-refetch set and the writeback counter — a reset cache is
+    /// indistinguishable from `Cache::new(name, cfg)`.
+    pub fn reset(&mut self) {
+        self.tags.flush();
+        self.mshr = MshrTable::new(self.cfg.mshr_entries as usize,
+                                   self.cfg.mshr_max_merge as usize);
+        self.miss_queue.clear();
+        self.dirty_refetch.clear();
+        self.writebacks = 0;
+    }
 }
 
 #[cfg(test)]

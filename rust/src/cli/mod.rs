@@ -8,7 +8,14 @@
 //! from the one [`COMMANDS`] table.
 //!
 //! `--stats-json -` and `--csv -` write the document to stdout
-//! instead of a file.
+//! instead of a file; when one invocation emits several stdout
+//! documents, a `# ---` sentinel line separates them so consumers
+//! can split the stream.
+//!
+//! `batch` drives a [`crate::api::SimService`] from a scenario list
+//! file: one `run`-style flag line per job, a resident worker pool,
+//! per-job result lines, and the service counters as the `service`
+//! section of the batch stats-JSON document.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -16,7 +23,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::api::{SimBuilder, StatDomain};
+use crate::api::{ApiError, ServiceStats, SimBuilder, SimJob,
+                 SimService, Snapshot, StatDomain, SCHEMA_VERSION};
 use crate::config::SimConfig;
 use crate::harness;
 use crate::stats::print as stat_print;
@@ -26,6 +34,7 @@ use crate::workloads;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Command {
     Run(RunArgs),
+    Batch(BatchArgs),
     Validate { bench: String, preset: String, figure: bool },
     TraceGen { bench: String, out: PathBuf },
     Functional { artifacts: PathBuf },
@@ -107,6 +116,40 @@ impl RunArgs {
     }
 }
 
+/// Arguments of `streamsim batch` — the CLI face of
+/// [`crate::api::SimService`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchArgs {
+    /// Scenario list file: one `run`-style flag line per job
+    /// (`--bench l2_lat --stat-mode exact …`); blank lines and
+    /// `#` comments are skipped.
+    pub jobs: PathBuf,
+    /// Resident service workers (`--threads`; 0 = auto).
+    pub threads: u32,
+    /// Submission-queue bound (`--queue`); submissions block at the
+    /// bound, exercising the service's backpressure.
+    pub queue: usize,
+    /// Per-job cycle budget (`--cycle-budget`); tripped jobs report
+    /// their partial stats.
+    pub cycle_budget: Option<u64>,
+    /// Write the batch result document (`--stats-json` / `--json`;
+    /// `-` = stdout): schema-versioned, with the `service` counter
+    /// section and one entry per job.
+    pub json: Option<PathBuf>,
+}
+
+impl Default for BatchArgs {
+    fn default() -> Self {
+        Self {
+            jobs: PathBuf::new(),
+            threads: 0,
+            queue: crate::api::DEFAULT_QUEUE_BOUND,
+            cycle_budget: None,
+            json: None,
+        }
+    }
+}
+
 /// One CLI flag: spelling(s), value placeholder (empty = switch), and
 /// the help line. This table is the **single source** of all help
 /// text.
@@ -171,6 +214,32 @@ pub const COMMANDS: &[CommandSpec] = &[
                               ('-' = stdout)" },
             FlagSpec { flags: "--verbose", value: "",
                        help: "echo kernel launch/exit lines" },
+        ],
+    },
+    CommandSpec {
+        name: "batch",
+        synopsis: "--jobs FILE [--threads N] [--queue N] [FLAGS]",
+        about: "Serve a scenario list through the resident \
+                simulation service",
+        flags: &[
+            FlagSpec { flags: "--jobs", value: "FILE",
+                       help: "scenario list: one run-style flag line \
+                              per job ('--bench l2_lat --stat-mode \
+                              exact ...'); '#' comments and blank \
+                              lines skipped" },
+            FlagSpec { flags: "--threads", value: "N",
+                       help: "resident service workers (0 = \
+                              available parallelism)" },
+            FlagSpec { flags: "--queue", value: "N",
+                       help: "submission-queue bound; submissions \
+                              block at the bound (backpressure)" },
+            FlagSpec { flags: "--cycle-budget", value: "N",
+                       help: "cancel each job after N cycles; \
+                              tripped jobs report partial stats" },
+            FlagSpec { flags: "--stats-json | --json", value: "PATH",
+                       help: "write the batch result document with \
+                              the 'service' counter section ('-' = \
+                              stdout)" },
         ],
     },
     CommandSpec {
@@ -368,6 +437,51 @@ pub fn parse(args: &[String]) -> Result<Command> {
             }
             Ok(Command::Run(a))
         }
+        "batch" => {
+            let mut a = BatchArgs::default();
+            let mut jobs = None;
+            while let Some(flag) = it.next() {
+                match flag.as_str() {
+                    "--help" | "-h" => {
+                        return Ok(Command::HelpFor("batch".into()));
+                    }
+                    "--jobs" => {
+                        jobs =
+                            Some(next_val("--jobs", &mut it)?.into());
+                    }
+                    "--threads" => {
+                        a.threads = next_val("--threads", &mut it)?
+                            .parse()
+                            .context("--threads must be an unsigned \
+                                      integer")?;
+                    }
+                    "--queue" => {
+                        let q: usize = next_val("--queue", &mut it)?
+                            .parse()
+                            .context("--queue must be a positive \
+                                      integer")?;
+                        if q == 0 {
+                            bail!("--queue must be at least 1");
+                        }
+                        a.queue = q;
+                    }
+                    "--cycle-budget" => {
+                        a.cycle_budget = Some(
+                            next_val("--cycle-budget", &mut it)?
+                                .parse()
+                                .context("--cycle-budget must be an \
+                                          unsigned integer")?);
+                    }
+                    "--stats-json" | "--json" => {
+                        a.json = Some(
+                            next_val(flag.as_str(), &mut it)?.into());
+                    }
+                    other => bail!("unknown flag '{other}' for batch"),
+                }
+            }
+            a.jobs = jobs.context("--jobs is required")?;
+            Ok(Command::Batch(a))
+        }
         "validate" | "report" => {
             let mut bench = None;
             let mut preset = "sm7_titanv_mini".to_string();
@@ -436,8 +550,18 @@ pub fn parse(args: &[String]) -> Result<Command> {
 }
 
 /// Append a document to the report (for `-`) or write it to `path`.
-fn emit_doc(out: &mut String, path: &Path, doc: &str) -> Result<()> {
+/// `stdout_docs` counts the `-` documents already emitted this
+/// invocation: from the second one on, a `# ---` sentinel line is
+/// written first, so two documents on one stdout (e.g.
+/// `--stats-json - --csv -`) never interleave without a boundary —
+/// the satellite bugfix for the previously unlabeled concatenation.
+fn emit_doc(out: &mut String, path: &Path, doc: &str,
+            stdout_docs: &mut u32) -> Result<()> {
     if path.as_os_str() == "-" {
+        if *stdout_docs > 0 {
+            out.push_str("# ---\n");
+        }
+        *stdout_docs += 1;
         out.push_str(doc);
         if !doc.ends_with('\n') {
             out.push('\n');
@@ -462,13 +586,25 @@ pub fn execute(cmd: Command) -> Result<String> {
             // clean-mode thread pin) before any output
             let notes: Vec<String> =
                 session.notes().iter().map(|n| n.to_string()).collect();
-            session.run_to_idle()?;
+            // a cycle-limit trip no longer discards the stats: the
+            // partial breakdowns are printed (and exported) like a
+            // finished run, then the command still fails
+            let limit = match session.run_to_idle() {
+                Ok(()) => None,
+                Err(e @ ApiError::CycleLimit { .. }) => Some(e),
+                Err(e) => return Err(e.into()),
+            };
             let summary = session.config().summary();
             // finished — move the stats out instead of cloning them
             let snap = session.into_snapshot();
             let mut out = String::new();
             for note in &notes {
                 let _ = writeln!(out, "{note}");
+            }
+            if let Some(e) = &limit {
+                let _ = writeln!(
+                    out,
+                    "WARNING: {e}; partial stats follow");
             }
             let _ = writeln!(out, "config: {summary}");
             let _ = writeln!(out, "cycles: {}", snap.total_cycles());
@@ -501,14 +637,21 @@ pub fn execute(cmd: Command) -> Result<String> {
             {
                 out.push_str(&table);
             }
+            let mut stdout_docs = 0u32;
             if let Some(csv) = &a.csv {
-                emit_doc(&mut out, csv, &snap.to_csv(StatDomain::L2))?;
+                emit_doc(&mut out, csv, &snap.to_csv(StatDomain::L2),
+                         &mut stdout_docs)?;
             }
             if let Some(json) = &a.json {
-                emit_doc(&mut out, json, &snap.to_json())?;
+                emit_doc(&mut out, json, &snap.to_json(),
+                         &mut stdout_docs)?;
+            }
+            if let Some(e) = limit {
+                bail!("{out}\nrun aborted: {e}");
             }
             Ok(out)
         }
+        Command::Batch(a) => execute_batch(&a),
         Command::Validate { bench, preset, figure } => {
             let g = workloads::generate(&bench)?;
             let cfg = SimConfig::preset(&preset)?;
@@ -565,6 +708,141 @@ pub fn execute(cmd: Command) -> Result<String> {
             Ok(out)
         }
     }
+}
+
+/// Parse a scenario list file into one builder per job line. Each
+/// non-blank, non-`#` line is a `run`-style flag list, validated by
+/// the same parser as the `run` subcommand (so a bad line names its
+/// line number and the familiar flag error).
+fn parse_jobs_file(path: &Path)
+    -> Result<Vec<(String, SimBuilder)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut jobs = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut argv = vec!["run".to_string()];
+        argv.extend(line.split_whitespace().map(String::from));
+        let cmd = parse(&argv).with_context(|| {
+            format!("{} line {}", path.display(), idx + 1)
+        })?;
+        let Command::Run(a) = cmd else {
+            bail!("{} line {}: not a run scenario", path.display(),
+                  idx + 1);
+        };
+        jobs.push((line.to_string(), a.to_builder()));
+    }
+    if jobs.is_empty() {
+        bail!("no jobs in {}", path.display());
+    }
+    Ok(jobs)
+}
+
+/// The `batch` subcommand: feed every scenario through one
+/// [`SimService`], print per-job result lines plus the service
+/// counters, optionally export the versioned batch document.
+fn execute_batch(a: &BatchArgs) -> Result<String> {
+    let jobs = parse_jobs_file(&a.jobs)?;
+    let service = SimService::with_queue_bound(a.threads, a.queue);
+    // blocking submit: at the queue bound this stalls until a worker
+    // frees a slot — the service's backpressure, exercised end to end
+    let handles: Vec<_> = jobs
+        .iter()
+        .map(|(_, b)| {
+            let job = SimJob::new(b.clone());
+            let job = match a.cycle_budget {
+                Some(c) => job.cycle_budget(c),
+                None => job,
+            };
+            service.submit(job)
+        })
+        .collect();
+    let results: Vec<Result<Snapshot, ApiError>> = handles
+        .into_iter()
+        .map(|h| match h {
+            Ok(handle) => handle.wait(),
+            Err(e) => Err(ApiError::Runtime {
+                message: format!("submission failed: {e}"),
+            }),
+        })
+        .collect();
+    let stats = service.shutdown();
+    let mut out = String::new();
+    for ((spec, _), result) in jobs.iter().zip(&results) {
+        match result {
+            Ok(snap) => {
+                let _ = writeln!(
+                    out, "ok   [{spec}] cycles={} kernels={}",
+                    snap.total_cycles(), snap.kernels_done());
+            }
+            Err(e) => {
+                let _ = writeln!(out, "err  [{spec}] {}: {e}",
+                                 e.kind());
+                if let Some(p) = e.partial_snapshot() {
+                    let _ = writeln!(
+                        out,
+                        "     partial: cycles={} kernels={}",
+                        p.total_cycles(), p.kernels_done());
+                }
+            }
+        }
+    }
+    let failed =
+        results.iter().filter(|r| r.is_err()).count();
+    let _ = writeln!(
+        out,
+        "service: jobs={} ok={} err={} warm_hits={} cold_builds={} \
+         queue_peak={} threads={}",
+        stats.jobs_run, results.len() - failed, failed,
+        stats.warm_hits, stats.cold_builds, stats.queue_peak,
+        stats.threads);
+    if let Some(json) = &a.json {
+        let mut stdout_docs = 0u32;
+        emit_doc(&mut out, json, &batch_doc(&stats, &results),
+                 &mut stdout_docs)?;
+    }
+    Ok(out)
+}
+
+/// The versioned batch result document:
+/// `{"schema_version":…,"service":{…},"jobs":[…]}`. The `service`
+/// section bytes come from [`ServiceStats::to_json`], whose key set
+/// is pinned by `tests/golden/schema_service_keys.txt` and checked
+/// by `scripts/ci.sh api`.
+fn batch_doc(stats: &ServiceStats,
+             results: &[Result<Snapshot, ApiError>]) -> String {
+    let mut doc = format!(
+        "{{\"schema_version\":{SCHEMA_VERSION},\"service\":{},\
+         \"jobs\":[",
+        stats.to_json());
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            doc.push(',');
+        }
+        match r {
+            Ok(s) => {
+                let _ = write!(
+                    doc,
+                    "{{\"ok\":true,\"config\":\"{}\",\
+                     \"total_cycles\":{},\"kernels_done\":{}}}",
+                    s.label(), s.total_cycles(), s.kernels_done());
+            }
+            Err(e) => {
+                let _ = write!(
+                    doc,
+                    "{{\"ok\":false,\"kind\":\"{}\",\
+                     \"cycles_at_stop\":{}}}",
+                    e.kind(),
+                    e.partial_snapshot()
+                        .map_or(0, |p| p.total_cycles()));
+            }
+        }
+    }
+    doc.push_str("]}");
+    doc
 }
 
 #[cfg(test)]
@@ -813,6 +1091,131 @@ mod tests {
         assert!(out.contains(
             &format!("# schema_version={SCHEMA_VERSION}\n\
                       stream,access_type,outcome,count")));
+        // satellite bugfix: two stdout documents are no longer an
+        // unlabeled concatenation — the CSV (emitted first) and the
+        // JSON are separated by the `# ---` sentinel line
+        assert!(out.contains("\n# ---\n{\"schema_version\":"),
+                "missing document sentinel in: {out}");
+        assert_eq!(out.matches("# ---").count(), 1, "{out}");
+        // a single stdout document gets no sentinel
+        let single = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "minimal".into(),
+            json: Some(PathBuf::from("-")),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(!single.contains("# ---"), "{single}");
+    }
+
+    #[test]
+    fn cycle_limited_run_prints_partial_stats_then_fails() {
+        // satellite bugfix: hitting max_cycles used to discard every
+        // accumulated stat; now the partial breakdowns are surfaced
+        // and the command still exits nonzero
+        let mut overrides = BTreeMap::new();
+        overrides.insert("max_cycles".to_string(), "50".to_string());
+        let err = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "minimal".into(),
+            overrides,
+            ..RunArgs::default()
+        }))
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("WARNING:"), "{msg}");
+        assert!(msg.contains("partial stats follow"), "{msg}");
+        assert!(msg.contains("L2_cache_stats_breakdown"), "{msg}");
+        assert!(msg.contains("stopped at cycle"), "{msg}");
+        assert!(msg.contains("run aborted:"), "{msg}");
+    }
+
+    #[test]
+    fn parses_batch_flags() {
+        let cmd = parse(&sv(&["batch", "--jobs", "/tmp/jobs.txt",
+                              "--threads", "3", "--queue", "5",
+                              "--cycle-budget", "1000",
+                              "--stats-json", "-"])).unwrap();
+        let Command::Batch(a) = cmd else { panic!("{cmd:?}") };
+        assert_eq!(a.jobs, PathBuf::from("/tmp/jobs.txt"));
+        assert_eq!(a.threads, 3);
+        assert_eq!(a.queue, 5);
+        assert_eq!(a.cycle_budget, Some(1000));
+        assert_eq!(a.json, Some(PathBuf::from("-")));
+        // required/validated flags
+        assert!(parse(&sv(&["batch"])).is_err());
+        assert!(parse(&sv(&["batch", "--jobs", "f", "--queue", "0"]))
+            .is_err());
+        assert_eq!(parse(&sv(&["batch", "--help"])).unwrap(),
+                   Command::HelpFor("batch".into()));
+    }
+
+    #[test]
+    fn execute_batch_serves_a_scenario_list() {
+        let dir = std::env::temp_dir().join("streamsim_cli_batch");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.txt");
+        std::fs::write(
+            &jobs,
+            "# scenario list\n\
+             --bench l2_lat --preset minimal\n\
+             \n\
+             --bench l2_lat --preset minimal --stat-mode exact\n\
+             --bench no_such_bench --preset minimal\n\
+             --bench l2_lat --preset minimal\n")
+            .unwrap();
+        let out = execute(Command::Batch(BatchArgs {
+            jobs: jobs.clone(),
+            threads: 2,
+            queue: 2, // smaller than the job count: submit blocks
+            json: Some(PathBuf::from("-")),
+            ..BatchArgs::default()
+        }))
+        .unwrap();
+        assert_eq!(out.matches("ok   [").count(), 3, "{out}");
+        assert_eq!(out.matches("err  [").count(), 1, "{out}");
+        assert!(out.contains("unknown_bench"), "{out}");
+        assert!(out.contains("service: jobs=4 ok=3 err=1"), "{out}");
+        // the versioned batch document with the service section
+        assert!(out.contains(
+            &format!("{{\"schema_version\":{SCHEMA_VERSION},\
+                      \"service\":{{\"threads\":2,")), "{out}");
+        assert!(out.contains("\"jobs_run\":4"), "{out}");
+        assert!(out.contains("\"jobs\":[{\"ok\":true,"), "{out}");
+        assert!(out.contains("\"ok\":false,\"kind\":\
+                              \"unknown_bench\""), "{out}");
+        // a bad line is rejected with its line number
+        std::fs::write(&jobs, "--bench l2_lat --bogus\n").unwrap();
+        let err = execute(Command::Batch(BatchArgs {
+            jobs: jobs.clone(),
+            ..BatchArgs::default()
+        }))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn batch_cycle_budget_reports_partial_jobs() {
+        let dir =
+            std::env::temp_dir().join("streamsim_cli_batch_budget");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.txt");
+        std::fs::write(&jobs, "--bench l2_lat --preset minimal\n")
+            .unwrap();
+        let out = execute(Command::Batch(BatchArgs {
+            jobs,
+            threads: 1,
+            cycle_budget: Some(50),
+            ..BatchArgs::default()
+        }))
+        .unwrap();
+        assert!(out.contains("err  ["), "{out}");
+        assert!(out.contains("cycle_limit"), "{out}");
+        assert!(out.contains("partial: cycles="), "{out}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

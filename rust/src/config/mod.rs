@@ -20,7 +20,7 @@ pub use cache_cfg::{
 use crate::stats::StatMode;
 
 /// Full simulator configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SimConfig {
     /// Preset name this config was derived from.
     pub preset: String,

@@ -393,6 +393,28 @@ impl SimtCore {
         std::mem::take(&mut self.finished)
     }
 
+    /// Warm-session reuse: evict all resident TBs, empty every queue
+    /// and reset the L1 — the exact post-construction state (slot
+    /// count, latencies and the L1 geometry are config, untouched;
+    /// buffer capacities are kept).
+    pub fn reset(&mut self) {
+        for slot in &mut self.slots {
+            *slot = None;
+        }
+        if let Some(l1) = self.l1.as_mut() {
+            l1.reset();
+        }
+        self.ldst_queue.clear();
+        self.hit_queue.clear();
+        self.to_icnt.clear();
+        self.finished.clear();
+        self.fill_scratch.clear();
+        self.rr = 0;
+        self.resident = 0;
+        self.warp_refs.clear();
+        self.warp_refs_dirty = true;
+    }
+
     /// Any work left on this core?
     pub fn busy(&self) -> bool {
         self.slots.iter().any(|s| s.is_some())

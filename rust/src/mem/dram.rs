@@ -91,6 +91,14 @@ impl Dram {
         self.queue.len()
     }
 
+    /// Warm-session reuse: drop queued requests and zero the local
+    /// traffic totals — exactly the post-construction state
+    /// (`latency`/`per_cycle` are config, untouched).
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.stats = DramStats::default();
+    }
+
     /// Activity view of this channel for the idle-skip active set:
     /// queued requests count as pending fills (writes retire silently
     /// but still occupy service slots). All-zero ⇔ `pending() == 0` ⇔

@@ -72,6 +72,12 @@ impl<T> DelayQueue<T> {
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
     }
+
+    /// Drop everything in flight (warm-session reuse: restores the
+    /// exact post-construction state while keeping the capacity).
+    pub fn clear(&mut self) {
+        self.q.clear();
+    }
 }
 
 /// Count-only central ledger of one crossbar direction for the
@@ -217,6 +223,12 @@ impl CrossbarSlice {
     /// True when nothing is in flight.
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Drop everything in flight (warm-session reuse: restores the
+    /// exact post-construction state while keeping the capacity).
+    pub fn clear(&mut self) {
+        self.pending.clear();
     }
 }
 

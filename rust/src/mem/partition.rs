@@ -144,6 +144,20 @@ impl MemPartition {
         }
     }
 
+    /// Warm-session reuse: empty every queue and reset the L2 slice
+    /// and DRAM channel to their exact post-construction state
+    /// (capacities kept; config fields untouched).
+    pub fn reset(&mut self) {
+        self.l2.reset();
+        self.dram.reset();
+        self.incoming.clear();
+        self.replay.clear();
+        self.hit_queue.clear();
+        self.outgoing.clear();
+        self.dram_scratch.clear();
+        self.fill_scratch.clear();
+    }
+
     /// Take responses for the interconnect.
     pub fn drain_responses(&mut self) -> Vec<MemFetch> {
         std::mem::take(&mut self.outgoing)

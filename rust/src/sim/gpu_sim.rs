@@ -181,6 +181,39 @@ impl GpuSim {
         self.verbose = verbose;
     }
 
+    /// Warm-session reuse: rewind the simulator to the state
+    /// [`GpuSim::new`] produced, **without** rebuilding cores,
+    /// partitions, caches or exchange buffers (their capacity is the
+    /// point of reuse). Every chunk is reset in place, the crossbar
+    /// ledgers and kernel/stream tables are rebuilt from the config,
+    /// the clock returns to 0 and the stats are replaced wholesale —
+    /// afterwards a run is byte-identical to one on a freshly built
+    /// simulator (pinned by `tests/service.rs`).
+    pub fn reset_for_reuse(&mut self) {
+        for ch in &self.chunks {
+            parallel::lock_chunk(ch).reset_for_reuse();
+        }
+        self.icnt =
+            Icnt::new(self.cfg.icnt_latency, self.cfg.icnt_flit_per_cycle);
+        self.sched_req = FlitSchedule::new(self.cfg.icnt_latency,
+                                           self.cfg.icnt_flit_per_cycle);
+        self.sched_resp = FlitSchedule::new(self.cfg.icnt_latency,
+                                            self.cfg.icnt_flit_per_cycle);
+        self.lane_bases.clear();
+        self.queue = KernelQueue::new();
+        self.streams = StreamTable::new();
+        self.running.clear();
+        self.now = 0;
+        self.stats = GpuStats::new(self.cfg.stat_mode);
+        self.dispatch_rr = 0;
+        self.ledger = DispatchLedger::new(
+            self.cfg.max_tbs_per_core, self.cfg.max_warps_per_core,
+            self.cfg.num_cores as usize, self.core_starts.clone());
+        self.profile = PhaseProfile::default();
+        self.finished_scratch.clear();
+        self.verbose = false;
+    }
+
     /// Clean mode needs inc-time central admission (ordered guard).
     fn central_stats(&self) -> bool {
         self.cfg.stat_mode == StatMode::AggregateBuggy

@@ -247,6 +247,22 @@ impl ExchangeLane {
             || self.out.iter().any(|b| !b.is_empty())
             || self.inbox.iter().any(|b| !b.is_empty())
     }
+
+    /// Warm-session reuse: drop every in-flight fetch and rewind the
+    /// sequence/horizon counters to zero — the exact
+    /// post-construction state (buffer capacities kept).
+    pub fn reset(&mut self) {
+        for b in &mut self.out {
+            b.clear();
+        }
+        for b in &mut self.inbox {
+            b.clear();
+        }
+        self.inbox_base.iter_mut().for_each(|b| *b = 0);
+        self.published = 0;
+        self.horizon = 0;
+        self.slice.clear();
+    }
 }
 
 /// One worker's exclusively-owned slice of the GPU: a contiguous run
@@ -355,6 +371,46 @@ impl WorkerChunk {
             || self.resp.busy()
             || self.cores.iter().any(|c| c.busy())
             || self.parts.iter().any(|p| p.busy())
+    }
+
+    /// Warm-session reuse: return the chunk to the state
+    /// [`build_chunks`] produced — every core/partition reset, stat
+    /// shards and fetch-id allocators rebuilt, exchange lanes
+    /// rewound, all components awake with dense ascending active
+    /// lists (the first cycle's sleep pass compacts the idle ones
+    /// out, exactly as on a cold start). The `idle_skip`/`sharded`
+    /// flags and the route table are config, untouched.
+    pub fn reset_for_reuse(&mut self) {
+        for (i, core) in self.cores.iter_mut().enumerate() {
+            core.reset();
+            self.core_shards[i] = CoreStatShard::default();
+            self.core_ids[i] =
+                FetchIdAlloc::for_core(core.id, self.route.ncores);
+        }
+        self.finished.clear();
+        for (i, part) in self.parts.iter_mut().enumerate() {
+            part.reset();
+            self.part_shards[i] = PartitionStatShard::default();
+        }
+        for awake in &mut self.core_awake {
+            *awake = true;
+        }
+        self.active_cores.clear();
+        self.active_cores
+            .extend(0..self.cores.len() as u32);
+        for awake in &mut self.part_awake {
+            *awake = true;
+        }
+        self.active_parts.clear();
+        self.active_parts
+            .extend(0..self.parts.len() as u32);
+        self.req.reset();
+        self.resp.reset();
+        self.route_scratch.clear();
+        self.core_inbox.clear();
+        self.out_fetches.clear();
+        self.part_inbox.clear();
+        self.out_responses.clear();
     }
 }
 

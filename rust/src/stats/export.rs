@@ -180,6 +180,61 @@ pub fn to_json_versioned(label: &str, stats: &GpuStats) -> String {
     out
 }
 
+/// Aggregate counters of a [`crate::api::SimService`], serialized as
+/// the `service` section of the CLI `batch` stats-JSON document.
+/// Lives next to the schema writer so the section's key set is
+/// pinned by the same golden machinery
+/// (`rust/tests/golden/schema_service_keys.txt`, `scripts/ci.sh
+/// api`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Resident worker threads.
+    pub threads: u64,
+    /// Submission-queue capacity.
+    pub queue_bound: u64,
+    /// Jobs executed (successes and per-job failures alike).
+    pub jobs_run: u64,
+    /// Jobs served by recycling a warm session.
+    pub warm_hits: u64,
+    /// Jobs that built a session from scratch.
+    pub cold_builds: u64,
+    /// Jobs that replied with a typed error.
+    pub job_errors: u64,
+    /// Jobs cancelled by their per-job cycle budget.
+    pub budget_stops: u64,
+    /// `try_submit` calls rejected at the queue bound.
+    pub rejected_full: u64,
+    /// Jobs queued right now (0 after a drain/shutdown).
+    pub queue_depth: u64,
+    /// High-water mark of the queue depth.
+    pub queue_peak: u64,
+}
+
+/// Keys of the `service` JSON section, in document order — the
+/// golden-file contract ([`ServiceStats::to_json`] emits exactly
+/// these).
+pub const SERVICE_SECTION_KEYS: &[&str] = &[
+    "threads", "queue_bound", "jobs_run", "warm_hits", "cold_builds",
+    "job_errors", "budget_stops", "rejected_full", "queue_depth",
+    "queue_peak",
+];
+
+impl ServiceStats {
+    /// The `service` section object (field order pinned by
+    /// [`SERVICE_SECTION_KEYS`]).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"threads\":{},\"queue_bound\":{},\"jobs_run\":{},\
+             \"warm_hits\":{},\"cold_builds\":{},\"job_errors\":{},\
+             \"budget_stops\":{},\"rejected_full\":{},\
+             \"queue_depth\":{},\"queue_peak\":{}}}",
+            self.threads, self.queue_bound, self.jobs_run,
+            self.warm_hits, self.cold_builds, self.job_errors,
+            self.budget_stops, self.rejected_full, self.queue_depth,
+            self.queue_peak)
+    }
+}
+
 /// CSV export of a cache domain with the schema header comment —
 /// the CSV counterpart of [`to_json_versioned`] (same version
 /// constant, same view).
@@ -358,6 +413,29 @@ mod tests {
             "\"profile\":[{\"name\":\"core_phase\",\
              \"total_ns\":42,\"calls\":7}]"), "{doc}");
         assert_eq!(top_level_keys(&doc).last().unwrap(), "profile");
+    }
+
+    #[test]
+    fn service_section_matches_its_key_contract() {
+        let stats = ServiceStats {
+            threads: 2,
+            queue_bound: 8,
+            jobs_run: 5,
+            warm_hits: 3,
+            cold_builds: 2,
+            job_errors: 1,
+            budget_stops: 1,
+            rejected_full: 4,
+            queue_depth: 0,
+            queue_peak: 6,
+        };
+        let json = stats.to_json();
+        let keys = top_level_keys(&json);
+        assert_eq!(keys,
+                   SERVICE_SECTION_KEYS.iter().map(|s| s.to_string())
+                       .collect::<Vec<_>>());
+        assert!(json.contains("\"warm_hits\":3"), "{json}");
+        assert!(json.contains("\"queue_peak\":6"), "{json}");
     }
 
     #[test]

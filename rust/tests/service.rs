@@ -1,0 +1,170 @@
+//! Integration suite for the `SimService` layer: the warm-reuse
+//! byte-identity contract across the thread/mode matrix (cold
+//! session vs. warm-reused service vs. batch), bounded-queue
+//! backpressure, shutdown-under-load draining, and the `service`
+//! stats-JSON section's key golden.
+
+use streamsim::api::{top_level_keys, BatchRunner, ServiceError,
+                     SimBuilder, SimJob, SimService, StatMode,
+                     SCHEMA_VERSION, SERVICE_SECTION_KEYS};
+
+fn scenario(sim_threads: u32, mode: StatMode) -> SimBuilder {
+    SimBuilder::preset("sm7_titanv_mini")
+        .stat_mode(mode)
+        .sim_threads(sim_threads)
+        .bench("l2_lat")
+        .label("matrix")
+}
+
+/// The acceptance matrix: one scenario through (a) a fresh cold
+/// `SimSession`, (b) a `SimService` whose single worker warm-reuses
+/// its session, and (c) a `BatchRunner` — byte-identical versioned
+/// stats JSON, across `sim_threads` 1/4 × tip/exact.
+#[test]
+fn warm_cold_and_batch_runs_are_byte_identical() {
+    for mode in [StatMode::PerStream, StatMode::AggregateExact] {
+        for sim_threads in [1u32, 4] {
+            let tag = format!("{} threads={sim_threads}",
+                              mode.label());
+            let b = scenario(sim_threads, mode);
+
+            // (a) cold session
+            let mut cold = b.clone().build().unwrap();
+            cold.run_to_idle().unwrap();
+            let want = cold.snapshot().to_json();
+
+            // (b) service: one worker, so the second submission must
+            // recycle the first one's session
+            let service = SimService::with_queue_bound(1, 4);
+            let first = service.submit(b.clone()).unwrap()
+                .wait().unwrap();
+            let second = service.submit(b.clone()).unwrap()
+                .wait().unwrap();
+            assert_eq!(first.to_json(), want, "cold service [{tag}]");
+            assert_eq!(second.to_json(), want,
+                       "warm-reused run drifted [{tag}]");
+            let stats = service.shutdown();
+            assert_eq!(stats.cold_builds, 1, "[{tag}]");
+            assert_eq!(stats.warm_hits, 1,
+                       "second job missed the warm pool [{tag}]");
+
+            // (c) batch (which itself rides on the service)
+            for r in BatchRunner::new(2)
+                .run(vec![b.clone(), b.clone()])
+            {
+                assert_eq!(r.unwrap().to_json(), want,
+                           "batch run drifted [{tag}]");
+            }
+        }
+    }
+}
+
+/// The bounded queue enforces backpressure: with parked workers the
+/// bound is exact, `try_submit` fails fast with the typed
+/// `QueueFull`, and nothing that was accepted is lost.
+#[test]
+fn queue_full_fires_at_the_configured_bound() {
+    let job = || SimBuilder::preset("minimal").bench("l2_lat");
+    let service = SimService::paused(1, 3);
+    let accepted: Vec<_> = (0..3)
+        .map(|_| service.try_submit(job()).unwrap())
+        .collect();
+    let err = service
+        .try_submit(job())
+        .err()
+        .expect("the submission past the bound must be rejected");
+    assert_eq!(err, ServiceError::QueueFull { capacity: 3 });
+    service.resume();
+    // blocking submit rides out the backpressure instead
+    let extra = service.submit(job()).unwrap();
+    for h in accepted {
+        h.wait().unwrap();
+    }
+    extra.wait().unwrap();
+    let stats = service.shutdown();
+    assert_eq!(stats.rejected_full, 1);
+    assert_eq!(stats.jobs_run, 4);
+    assert_eq!(stats.queue_peak, 3);
+}
+
+/// Shutdown under load drains without loss: every accepted job —
+/// including ones no worker has even started — still runs and
+/// replies before `shutdown` returns.
+#[test]
+fn shutdown_under_load_drains_without_loss() {
+    let service = SimService::paused(2, 32);
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            let job = SimBuilder::preset("minimal")
+                .bench("l2_lat")
+                .label(&format!("job-{i}"));
+            service.submit(job).unwrap()
+        })
+        .collect();
+    // release the workers and immediately shut down: the queue is
+    // still nearly full, so the drain guarantee does the work
+    service.resume();
+    let stats = service.shutdown();
+    assert_eq!(stats.jobs_run, 10, "accepted jobs lost in shutdown");
+    assert_eq!(stats.queue_depth, 0);
+    for (i, h) in handles.into_iter().enumerate() {
+        let snap = h.wait().unwrap_or_else(|e| {
+            panic!("job {i} lost its reply: {e}")
+        });
+        assert_eq!(snap.label(), format!("job-{i}"));
+    }
+}
+
+/// Per-job cycle budgets cancel with the partial snapshot attached,
+/// and the cancelled job never disturbs its neighbours.
+#[test]
+fn cycle_budget_cancels_only_the_budgeted_job() {
+    let service = SimService::with_queue_bound(2, 8);
+    let capped = service
+        .submit(SimJob::new(
+            SimBuilder::preset("minimal").bench("l2_lat"))
+            .cycle_budget(40))
+        .unwrap();
+    let free = service
+        .submit(SimBuilder::preset("minimal").bench("l2_lat"))
+        .unwrap();
+    let err = capped.wait().unwrap_err();
+    assert_eq!(err.kind(), "cycle_limit");
+    let partial = err.partial_snapshot().expect("partial stats kept");
+    assert!(partial.total_cycles() >= 40);
+    let full = free.wait().unwrap();
+    assert_eq!(full.kernels_done(), 4);
+    let stats = service.shutdown();
+    assert_eq!(stats.budget_stops, 1);
+    assert_eq!(stats.job_errors, 1);
+}
+
+/// The `service` stats-JSON section matches its committed key golden
+/// (`tests/golden/schema_service_keys.txt`) — the same drift
+/// contract as the main document schema.
+#[test]
+fn service_section_matches_committed_golden() {
+    let service = SimService::with_queue_bound(1, 2);
+    service.submit(SimBuilder::preset("minimal").bench("l2_lat"))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let section = service.shutdown().to_json();
+    let mut got = vec![format!("schema_version={SCHEMA_VERSION}")];
+    got.extend(top_level_keys(&section));
+    let got = got.join("\n") + "\n";
+
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/schema_service_keys.txt");
+    let want = std::fs::read_to_string(&path).unwrap_or_else(|_| {
+        panic!("missing committed golden {}", path.display())
+    });
+    assert_eq!(got, want,
+               "service section schema drifted: rebless \
+                tests/golden/schema_service_keys.txt only for an \
+                intended change");
+    // and the constant the writer advertises agrees
+    assert_eq!(top_level_keys(&section),
+               SERVICE_SECTION_KEYS.iter().map(|s| s.to_string())
+                   .collect::<Vec<_>>());
+}

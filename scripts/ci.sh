@@ -12,8 +12,16 @@
 #                              #   the determinism test suite
 #   scripts/ci.sh api          # + build all examples (the facade's
 #                              #   consumers) and run the JSON-schema
-#                              #   drift check against the committed
-#                              #   tests/golden/schema_v2_keys.txt
+#                              #   drift checks against the committed
+#                              #   tests/golden/schema_v2_keys.txt and
+#                              #   tests/golden/schema_service_keys.txt
+#                              #   (the batch document's 'service'
+#                              #   section)
+#   scripts/ci.sh service      # + the service test group by name and
+#                              #   a 50-job smoke batch through the
+#                              #   CLI 'batch' serve path (warm reuse,
+#                              #   bounded queue, per-job isolation,
+#                              #   one deliberately failing job)
 #   scripts/ci.sh bench        # + record BENCH_stats.json (fast mode):
 #                              #   seq-vs-parallel throughput, the
 #                              #   central-vs-sharded icnt exchange
@@ -111,6 +119,75 @@ if got != want:
     sys.exit(1)
 print("schema_version %d + key set match the committed golden"
       % doc["schema_version"])
+EOF
+
+    echo "== api: 'service' section drift check (batch document) =="
+    printf -- '--bench l2_lat --preset minimal\n' > "$TMP/jobs.txt"
+    "$BIN" batch --jobs "$TMP/jobs.txt" --threads 1 --stats-json - \
+        | grep '^{' > "$TMP/batch.json"
+    python3 - "$TMP/batch.json" tests/golden/schema_service_keys.txt \
+        <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+got = (["schema_version=%d" % doc["schema_version"]]
+       + list(doc["service"].keys()))
+want = open(sys.argv[2]).read().split()
+if got != want:
+    print("SERVICE SECTION DRIFT (rebless "
+          "tests/golden/schema_service_keys.txt for intended changes)")
+    print(" got:", got)
+    print("want:", want)
+    sys.exit(1)
+print("service section key set matches the committed golden")
+EOF
+fi
+
+if [[ "${1:-}" == "service" ]]; then
+    echo "== service: test group =="
+    cargo test -q --test service
+    cargo test -q service:: --lib
+
+    echo "== service: 50-job smoke batch through the CLI serve path =="
+    BIN=target/release/streamsim
+    TMP="$(mktemp -d)"
+    trap 'rm -rf "$TMP"' EXIT
+    {
+        echo "# 50-job smoke batch: warm reuse across repeats,"
+        echo "# one bad job that must fail in isolation"
+        for i in $(seq 1 24); do
+            echo "--bench l2_lat --preset minimal"
+            echo "--bench l2_lat --preset minimal --stat-mode exact"
+        done
+        echo "--bench bench3 --preset minimal"
+        echo "--bench no_such_bench --preset minimal"
+    } > "$TMP/jobs.txt"
+    "$BIN" batch --jobs "$TMP/jobs.txt" --threads 4 --queue 8 \
+        --stats-json "$TMP/batch.json" > "$TMP/batch.out"
+    cat "$TMP/batch.out"
+    grep -q 'service: jobs=50 ok=49 err=1' "$TMP/batch.out" || {
+        echo "SERVICE SMOKE FAILURE: unexpected job tally"
+        exit 1
+    }
+    python3 - "$TMP/batch.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+svc = doc["service"]
+assert svc["jobs_run"] == 50, svc
+assert svc["job_errors"] == 1, svc
+assert svc["queue_depth"] == 0, svc
+assert svc["warm_hits"] > 0, "no warm reuse across 50 repeat jobs"
+assert svc["warm_hits"] + svc["cold_builds"] + 1 == 50, svc
+oks = [j for j in doc["jobs"] if j["ok"]]
+assert len(oks) == 49, len(oks)
+# repeat scenarios must agree with each other: the 24 identical
+# l2_lat jobs per mode land on one cycle count each (the 'tip'
+# label also covers the lone bench3 job, hence most-common == 24)
+from collections import Counter
+for label in ("tip", "exact"):
+    cyc = Counter(j["total_cycles"] for j in oks
+                  if j["config"] == label)
+    assert max(cyc.values()) == 24, (label, cyc)
+print("service smoke OK: 50 jobs, 1 isolated failure, warm reuse hit")
 EOF
 fi
 
