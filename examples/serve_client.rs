@@ -1,0 +1,128 @@
+//! Serve-client tour: drive the `streamsim::server` wire protocol
+//! end to end — hello, submit/wait, a memoized resubmission,
+//! streaming per-stream stat deltas, and a graceful shutdown.
+//!
+//! Self-contained: the example spins up a [`SimServer`] on an
+//! ephemeral loopback port in a background thread and then talks to
+//! it exactly the way an external client would — one JSON request
+//! per line, one JSON response frame per line. Swap the in-process
+//! server for `streamsim serve --port 7878` and the client half of
+//! this file works unchanged.
+//!
+//! ```bash
+//! cargo run --release --example serve_client
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+
+use streamsim::server::proto::{JobSpec, Request, Response,
+                               PROTO_VERSION};
+use streamsim::server::{ServerConfig, SimServer};
+
+/// One blocking request/response exchange over the line protocol.
+fn call(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream,
+        req: &Request) -> anyhow::Result<Response> {
+    writeln!(writer, "{}", req.to_json())?;
+    writer.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Response::parse(line.trim_end()).map_err(anyhow::Error::msg)
+}
+
+fn main() -> anyhow::Result<()> {
+    // 1. A server, as `streamsim serve --port 0` would start one:
+    //    two workers, bounded lanes, result memoization on.
+    let server =
+        SimServer::bind("127.0.0.1:0", ServerConfig::default())?;
+    let addr = server.local_addr()?;
+    let server = thread::spawn(move || server.serve());
+    println!("server listening on {addr}\n");
+
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+
+    // 2. Version handshake. The server refuses mismatched
+    //    `proto_version`s with a typed error + goodbye rather than
+    //    misinterpreting frames.
+    let hello = call(&mut reader, &mut writer, &Request::Hello {
+        proto_version: PROTO_VERSION,
+    })?;
+    println!("handshake: {}", hello.to_json());
+
+    // 3. Submit the paper's 4-stream L2 microbenchmark and block on
+    //    the result. The reply's `doc` is byte-identical to what a
+    //    direct in-process `SimSession` run would serialize.
+    let spec = JobSpec::bench("l2_lat");
+    let Response::Submitted { job_id, .. } =
+        call(&mut reader, &mut writer,
+             &Request::Submit { spec: spec.clone() })?
+    else {
+        anyhow::bail!("submit was refused");
+    };
+    let Response::JobDone { doc, memo_hit, .. } =
+        call(&mut reader, &mut writer, &Request::Wait { job_id })?
+    else {
+        anyhow::bail!("job {job_id} failed");
+    };
+    println!("job {job_id}: {} bytes of stats JSON \
+              (memo_hit={memo_hit})", doc.len());
+
+    // 4. Resubmit the identical spec: the server recognises the
+    //    resolved config + workload pair and replays the stored
+    //    document without re-simulating.
+    let Response::Submitted { job_id, memo_hit } =
+        call(&mut reader, &mut writer,
+             &Request::Submit { spec })?
+    else {
+        anyhow::bail!("resubmit was refused");
+    };
+    let warm =
+        call(&mut reader, &mut writer, &Request::Wait { job_id })?;
+    let Response::JobDone { doc: warm_doc, .. } = warm else {
+        anyhow::bail!("memo replay failed");
+    };
+    println!("job {job_id}: memo_hit={memo_hit}, replay is \
+              byte-identical: {}\n", warm_doc == doc);
+
+    // 5. Stream a fresh run: `Delta` frames every 64 cycles carrying
+    //    only the per-stream counters that changed, then the final
+    //    document — the wire form of mid-run snapshots.
+    writeln!(writer, "{}", Request::Stream {
+        spec: JobSpec::bench("l2_lat"),
+        interval: 64,
+    }.to_json())?;
+    writer.flush()?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        reader.read_line(&mut line)?;
+        match Response::parse(line.trim_end())
+            .map_err(anyhow::Error::msg)?
+        {
+            Response::Delta { seq, cycles, domains, .. } => {
+                let cells: usize =
+                    domains.iter().map(|(_, c)| c.len()).sum();
+                println!("delta #{seq} @ cycle {cycles}: \
+                          {cells} per-stream cells changed");
+            }
+            Response::JobDone { job_id, .. } => {
+                println!("stream job {job_id} finished\n");
+                break;
+            }
+            other => anyhow::bail!("unexpected frame {other:?}"),
+        }
+    }
+
+    // 6. Graceful shutdown: the server stops accepting, finishes
+    //    in-flight work, says goodbye on every connection, and
+    //    `serve()` returns the final versioned stats document with
+    //    the `server` and `service` sections.
+    let bye = call(&mut reader, &mut writer, &Request::Shutdown)?;
+    println!("shutdown: {}", bye.to_json());
+    let final_doc = server.join().expect("server thread")?;
+    println!("final stats document:\n{final_doc}");
+    Ok(())
+}

@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Line-protocol client for `streamsim serve` — the CI smoke driver.
+
+Connects to a running server on loopback and walks the whole verb
+surface the way an external tool would:
+
+  hello -> submit(busy) -> submit(victim) -> cancel(victim)
+        -> wait(victim)=cancelled -> wait(busy)=done
+        -> submit/wait (cold)  [byte-compared to --expect-doc]
+        -> submit/wait (memo hit, byte-identical replay)
+        -> stream (ordered deltas, terminal doc byte-identical)
+        -> service_stats -> shutdown -> goodbye
+
+Run the server with `--threads 1` so the cancel target is
+deterministically still queued behind the busy job when the cancel
+lands (mirrors rust/tests/server.rs).
+
+Usage: serve_client.py PORT [--expect-doc FILE]
+
+Exits nonzero with a diagnostic on the first protocol violation.
+"""
+
+import argparse
+import json
+import socket
+import sys
+
+PROTO_VERSION = 1
+
+
+class Client:
+    """One blocking request/response line-frame connection."""
+
+    def __init__(self, port):
+        self.sock = socket.create_connection(("127.0.0.1", port),
+                                             timeout=120)
+        self.rfile = self.sock.makefile("r", encoding="utf-8")
+
+    def send(self, **req):
+        line = json.dumps(req, separators=(",", ":"))
+        self.sock.sendall((line + "\n").encode("utf-8"))
+
+    def recv_raw(self):
+        line = self.rfile.readline()
+        if not line:
+            sys.exit("FAIL: server closed the connection early")
+        return line.rstrip("\n")
+
+    def recv(self, want_verb=None):
+        raw = self.recv_raw()
+        frame = json.loads(raw)
+        if want_verb is not None and frame.get("verb") != want_verb:
+            sys.exit("FAIL: wanted %r, got frame %s" % (want_verb, raw))
+        return frame
+
+
+def raw_doc(line):
+    """The embedded result document exactly as framed (`doc` is the
+    final field of job_done frames, spliced verbatim by the server)."""
+    marker = '"doc":'
+    i = line.index(marker)
+    return line[i + len(marker):-1]
+
+
+def submit_and_wait(c, spec):
+    """Submit `spec`, wait, return (memo_hit, raw document bytes)."""
+    c.send(verb="submit", spec=spec)
+    sub = c.recv("submitted")
+    c.send(verb="wait", job_id=sub["job_id"])
+    raw = c.recv_raw()
+    frame = json.loads(raw)
+    if frame.get("verb") != "job_done":
+        sys.exit("FAIL: job %d did not finish: %s"
+                 % (sub["job_id"], raw))
+    return sub["memo_hit"], frame["memo_hit"], raw_doc(raw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("port", type=int)
+    ap.add_argument("--expect-doc", metavar="FILE",
+                    help="stats JSON from a direct CLI run of "
+                         "`--bench l2_lat --preset minimal`; the "
+                         "wire document must byte-agree")
+    args = ap.parse_args()
+    c = Client(args.port)
+
+    # 1. version handshake
+    c.send(verb="hello", proto_version=PROTO_VERSION)
+    hello = c.recv("hello_ok")
+    assert hello["proto_version"] == PROTO_VERSION, hello
+
+    # 2. a slow job occupies the single worker, so the next one is
+    #    still queued when the cancel arrives
+    c.send(verb="submit",
+           spec={"bench": "bench3",
+                 "overrides": {"l2_latency": "400"}})
+    busy = c.recv("submitted")["job_id"]
+    c.send(verb="submit", spec={"bench": "l2_lat"})
+    victim = c.recv("submitted")["job_id"]
+    c.send(verb="cancel", job_id=victim)
+    assert c.recv("cancel_ok")["job_id"] == victim
+    c.send(verb="wait", job_id=victim)
+    failed = c.recv("job_failed")
+    assert failed["kind"] == "cancelled", failed
+    c.send(verb="wait", job_id=busy)
+    c.recv("job_done")
+    print("cancel: queued job reported kind=cancelled; busy job "
+          "finished")
+
+    # 3. cold run, byte-compared against the direct CLI document
+    spec = {"bench": "l2_lat", "preset": "minimal"}
+    sub_hit, done_hit, cold = submit_and_wait(c, spec)
+    assert not sub_hit and not done_hit, "unexpected memo hit"
+    if args.expect_doc:
+        with open(args.expect_doc, encoding="utf-8") as f:
+            want = f.read().strip()
+        if cold.strip() != want:
+            sys.exit("FAIL: wire document drifted from the direct "
+                     "CLI run\n got: %s\nwant: %s" % (cold, want))
+        print("submit/wait: document byte-agrees with the direct "
+              "CLI run (%d bytes)" % len(want))
+
+    # 4. identical resubmission: declared memo hit, identical bytes
+    sub_hit, done_hit, warm = submit_and_wait(c, spec)
+    assert sub_hit and done_hit, "expected a memo hit"
+    assert warm == cold, "memo replay drifted from the cold run"
+    print("memo: replay byte-identical to the cold run")
+
+    # 5. stream the same scenario: ordered deltas, then a terminal
+    #    document identical to the cold run
+    c.send(verb="stream", interval=64, spec=spec)
+    deltas = 0
+    while True:
+        raw = c.recv_raw()
+        frame = json.loads(raw)
+        if frame["verb"] == "delta":
+            deltas += 1
+            assert frame["seq"] == deltas, frame
+            assert frame["domains"], "empty delta frame"
+        elif frame["verb"] == "job_done":
+            assert raw_doc(raw) == cold, \
+                "stream terminal document drifted"
+            break
+        else:
+            sys.exit("FAIL: unexpected stream frame %s" % raw)
+    assert deltas >= 1, "stream produced no delta frames"
+    print("stream: %d ordered delta frame(s), terminal document "
+          "byte-identical" % deltas)
+
+    # 6. live counters, then graceful shutdown
+    c.send(verb="service_stats")
+    stats = c.recv("stats")["doc"]
+    assert "server" in stats and "service" in stats, stats
+    srv = stats["server"]
+    assert srv["memo_hits"] == 1, srv
+    assert srv["streams"] == 1, srv
+    print("service_stats: server counters live "
+          "(memo_hits=%d memo_misses=%d deltas_sent=%d)"
+          % (srv["memo_hits"], srv["memo_misses"],
+             srv["deltas_sent"]))
+
+    c.send(verb="shutdown")
+    c.recv("goodbye")
+    print("serve client OK: hello/submit/wait/cancel/memo/stream/"
+          "service_stats/shutdown all verified")
+
+
+if __name__ == "__main__":
+    main()

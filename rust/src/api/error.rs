@@ -71,6 +71,21 @@ pub enum ApiError {
         /// about the failure class and diagnostic, not the payload.
         snapshot: Option<Box<Snapshot>>,
     },
+    /// The job was cancelled through its cancel token (service
+    /// [`crate::api::SimJob::cancel_token`] / server `cancel` verb).
+    /// Like [`ApiError::CycleLimit`], the stats accumulated up to the
+    /// stop ride along instead of being discarded.
+    Cancelled {
+        /// The cancellation diagnostic.
+        message: String,
+        /// Simulation cycle at the stop (0 = cancelled before the
+        /// job started).
+        cycles: Cycle,
+        /// The partial snapshot at the stop (`None` when the job was
+        /// cancelled before it built a session). Ignored by
+        /// `PartialEq`, like the `CycleLimit` payload.
+        snapshot: Option<Box<Snapshot>>,
+    },
     /// `Snapshot::diff` was asked to subtract snapshots out of order
     /// (the "earlier" snapshot holds counts the later one lacks, or
     /// the snapshots come from different sessions).
@@ -96,6 +111,7 @@ impl ApiError {
             ApiError::InvalidWorkload { .. } => "invalid_workload",
             ApiError::Io { .. } => "io",
             ApiError::CycleLimit { .. } => "cycle_limit",
+            ApiError::Cancelled { .. } => "cancelled",
             ApiError::SnapshotOrder { .. } => "snapshot_order",
             ApiError::Runtime { .. } => "runtime",
         }
@@ -139,11 +155,13 @@ impl ApiError {
         }
     }
 
-    /// The partial [`Snapshot`] a [`ApiError::CycleLimit`] carries,
-    /// if the session layer attached one.
+    /// The partial [`Snapshot`] a [`ApiError::CycleLimit`] or
+    /// [`ApiError::Cancelled`] carries, if the session layer attached
+    /// one.
     pub fn partial_snapshot(&self) -> Option<&Snapshot> {
         match self {
-            ApiError::CycleLimit { snapshot, .. } => {
+            ApiError::CycleLimit { snapshot, .. }
+            | ApiError::Cancelled { snapshot, .. } => {
                 snapshot.as_deref()
             }
             _ => None,
@@ -176,7 +194,9 @@ impl PartialEq for ApiError {
             (Io { path: pa, message: ma },
              Io { path: pb, message: mb }) => pa == pb && ma == mb,
             (CycleLimit { message: a, cycles: ca, .. },
-             CycleLimit { message: b, cycles: cb, .. }) => {
+             CycleLimit { message: b, cycles: cb, .. })
+            | (Cancelled { message: a, cycles: ca, .. },
+               Cancelled { message: b, cycles: cb, .. }) => {
                 a == b && ca == cb
             }
             _ => false,
@@ -193,9 +213,13 @@ impl Eq for ApiError {}
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServiceError {
     /// The bounded job queue is full (`try_submit` only — blocking
-    /// `submit` waits for a slot instead).
+    /// `submit` waits for a slot instead). Backpressure is per lane:
+    /// a full `batch` lane does not reject `interactive` jobs, and
+    /// vice versa.
     QueueFull {
-        /// The configured queue bound that was hit.
+        /// The priority lane whose bound was hit.
+        lane: crate::api::service::Priority,
+        /// The configured per-lane queue bound that was hit.
         capacity: usize,
     },
     /// The service has been shut down; no further jobs are accepted.
@@ -215,9 +239,10 @@ impl ServiceError {
 impl fmt::Display for ServiceError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            ServiceError::QueueFull { capacity } => {
-                write!(f, "service queue full (bound {capacity}); \
-                           retry later or use blocking submit")
+            ServiceError::QueueFull { lane, capacity } => {
+                write!(f, "service {} lane full (bound {capacity}); \
+                           retry later or use blocking submit",
+                       lane.as_str())
             }
             ServiceError::ShutDown => {
                 write!(f, "service is shut down")
@@ -253,6 +278,13 @@ impl fmt::Display for ApiError {
             }
             ApiError::CycleLimit { message, cycles, .. } => {
                 write!(f, "cycle limit: {message}")?;
+                if *cycles > 0 {
+                    write!(f, " (stopped at cycle {cycles})")?;
+                }
+                Ok(())
+            }
+            ApiError::Cancelled { message, cycles, .. } => {
+                write!(f, "cancelled: {message}")?;
                 if *cycles > 0 {
                     write!(f, " (stopped at cycle {cycles})")?;
                 }
@@ -357,7 +389,7 @@ mod tests {
 
     #[test]
     fn kinds_are_stable() {
-        let cases: [(ApiError, &str); 9] = [
+        let cases: [(ApiError, &str); 10] = [
             (ApiError::SnapshotOrder { message: "m".into() },
              "snapshot_order"),
             (ApiError::UnknownPreset { name: "x".into() },
@@ -376,6 +408,9 @@ mod tests {
             (ApiError::CycleLimit { message: "m".into(), cycles: 7,
                                     snapshot: None },
              "cycle_limit"),
+            (ApiError::Cancelled { message: "m".into(), cycles: 7,
+                                   snapshot: None },
+             "cancelled"),
             (ApiError::Runtime { message: "m".into() }, "runtime"),
         ];
         for (e, kind) in cases {
@@ -434,11 +469,45 @@ mod tests {
 
     #[test]
     fn service_error_kinds_and_display_are_stable() {
-        let full = ServiceError::QueueFull { capacity: 4 };
+        use crate::api::service::Priority;
+        let full = ServiceError::QueueFull {
+            lane: Priority::Batch, capacity: 4,
+        };
         assert_eq!(full.kind(), "queue_full");
         assert!(full.to_string().contains("bound 4"), "{full}");
+        assert!(full.to_string().contains("batch lane"), "{full}");
+        let fast = ServiceError::QueueFull {
+            lane: Priority::Interactive, capacity: 2,
+        };
+        assert!(fast.to_string().contains("interactive lane"),
+                "{fast}");
         assert_eq!(ServiceError::ShutDown.kind(), "shut_down");
         assert!(!ServiceError::ShutDown.to_string().is_empty());
+    }
+
+    #[test]
+    fn cancelled_mirrors_the_cycle_limit_contract() {
+        let before_start = ApiError::Cancelled {
+            message: "cancelled before start".into(),
+            cycles: 0,
+            snapshot: None,
+        };
+        assert_eq!(before_start.kind(), "cancelled");
+        assert!(before_start.partial_snapshot().is_none());
+        // cycles=0 omits the "stopped at" suffix
+        assert!(!before_start.to_string().contains("stopped at"),
+                "{before_start}");
+        let mid_run = ApiError::Cancelled {
+            message: "m".into(), cycles: 9, snapshot: None,
+        };
+        assert!(mid_run.to_string().contains("stopped at cycle 9"),
+                "{mid_run}");
+        // equality ignores the snapshot payload, like CycleLimit
+        assert_eq!(
+            mid_run,
+            ApiError::Cancelled { message: "m".into(), cycles: 9,
+                                  snapshot: None });
+        assert_ne!(before_start, mid_run);
     }
 
     #[test]

@@ -19,11 +19,15 @@
 //! * [`ConfigNote`] — typed non-fatal advisories recorded at build
 //!   time ([`SimSession::notes`]), e.g. the clean-mode thread pin.
 //! * [`SimService`] — the long-lived serving layer: a resident
-//!   worker pool behind a **bounded** job queue
-//!   ([`ServiceError::QueueFull`] backpressure), warm-session reuse
+//!   worker pool behind a **bounded** two-lane job queue
+//!   ([`Priority`] interactive/batch lanes with per-lane
+//!   [`ServiceError::QueueFull`] backpressure), warm-session reuse
 //!   with byte-identical results, per-job panic/cycle-budget
-//!   isolation, graceful draining [`SimService::shutdown`], and
+//!   isolation plus cooperative [`CancelToken`] cancellation,
+//!   graceful draining [`SimService::shutdown`], and
 //!   [`ServiceStats`] counters for the `service` stats-JSON section.
+//!   The network front-end over the service lives in
+//!   [`crate::server`].
 //! * [`BatchRunner`] — "run these N scenarios" convenience over the
 //!   service (input-order results, same isolation guarantees).
 //!
@@ -98,15 +102,17 @@ pub mod session;
 pub use batch::BatchRunner;
 pub use error::{ApiError, ConfigNote, ConfigNoteKind, ServiceError};
 pub use query::{QueryRow, Snapshot, SnapshotDiff, StatsQuery};
-pub use service::{JobHandle, SimJob, SimService,
-                  DEFAULT_QUEUE_BOUND};
+pub use service::{CancelToken, JobHandle, Priority, SimJob,
+                  SimService, DEFAULT_QUEUE_BOUND};
 pub use session::{SimBuilder, SimSession};
 
 // The versioned result-document schema (one serializer for JSON, CSV
-// and snapshots), plus the service-counter section.
+// and snapshots), plus the service/server counter sections.
 pub use crate::stats::export::{to_csv_versioned, to_json_versioned,
-                               top_level_keys, ServiceStats,
-                               SCHEMA_VERSION, SERVICE_SECTION_KEYS};
+                               top_level_keys, ServerStats,
+                               ServiceStats, SCHEMA_VERSION,
+                               SERVER_SECTION_KEYS,
+                               SERVICE_SECTION_KEYS};
 
 // Vocabulary types facade consumers select/match on.
 pub use crate::cache::access::{AccessOutcome, AccessType, FailOutcome};

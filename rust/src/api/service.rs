@@ -6,11 +6,18 @@
 //! (sized by [`crate::sim::parallel::resolve_threads`], the same rule
 //! as the clock-loop pool) pulls jobs off one **bounded** queue:
 //!
-//! * **Jobs** are a [`SimBuilder`] plus an optional cycle budget
-//!   ([`SimJob`]); submitting returns a [`JobHandle`] to wait on.
-//! * **Backpressure** is explicit: [`SimService::try_submit`] fails
-//!   fast with [`ServiceError::QueueFull`] at the configured bound,
-//!   [`SimService::submit`] blocks until a slot frees.
+//! * **Jobs** are a [`SimBuilder`] plus optional limits
+//!   ([`SimJob`]: cycle budget, [`CancelToken`], [`Priority`] lane);
+//!   submitting returns a [`JobHandle`] to wait on.
+//! * **Two-level priority**: the queue has an `interactive` and a
+//!   `batch` lane ([`Priority`], default batch), each bounded
+//!   separately. Workers always drain the interactive lane first, so
+//!   a deep batch backlog cannot starve interactive submissions.
+//! * **Backpressure** is explicit and per lane:
+//!   [`SimService::try_submit`] fails fast with
+//!   [`ServiceError::QueueFull`] (naming the lane) at the configured
+//!   bound, [`SimService::submit`] blocks until a slot frees in the
+//!   job's lane.
 //! * **Warm reuse**: each worker keeps a small pool of built sessions
 //!   keyed by their resolved [`SimConfig`]. A job whose configuration
 //!   matches recycles a session via
@@ -19,18 +26,20 @@
 //!   pinned by `tests/service.rs`).
 //! * **Per-job isolation**: a panicking job maps to
 //!   [`ApiError::Runtime`], a cycle-budget trip to
-//!   [`ApiError::CycleLimit`] carrying the partial [`Snapshot`] —
-//!   neither disturbs other jobs or the service itself.
+//!   [`ApiError::CycleLimit`], a tripped [`CancelToken`] to
+//!   [`ApiError::Cancelled`] — the latter two carrying the partial
+//!   [`Snapshot`] — and none disturbs other jobs or the service
+//!   itself.
 //! * **Graceful end**: [`SimService::shutdown`] closes the queue,
 //!   drains every job already accepted, joins the workers and
 //!   returns the final [`ServiceStats`] counters (also exported as
 //!   the `service` stats-JSON section by the CLI `batch`
 //!   subcommand).
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender,
-                      TrySendError};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -45,20 +54,103 @@ use crate::Cycle;
 /// Warm sessions each worker keeps around, oldest evicted first.
 const WARM_POOL_CAP: usize = 4;
 
-/// Submission-queue capacity when none is given.
+/// Submission-queue capacity (per lane) when none is given.
 pub const DEFAULT_QUEUE_BOUND: usize = 32;
+
+/// Priority lane of a [`SimJob`]. Two levels only, on purpose: the
+/// scheduling contract ("interactive never waits behind batch") stays
+/// trivially auditable, and each lane keeps its own bound so
+/// backpressure is typed per lane ([`ServiceError::QueueFull`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive lane: always dequeued before batch work.
+    /// The server front-end submits client jobs here.
+    Interactive,
+    /// Throughput lane (the default): scenario sweeps, batch files.
+    #[default]
+    Batch,
+}
+
+impl Priority {
+    /// Stable machine-readable lane name (protocol, stats, errors).
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a lane name (the inverse of [`Priority::as_str`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    const fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    const fn from_index(i: usize) -> Self {
+        match i {
+            0 => Priority::Interactive,
+            _ => Priority::Batch,
+        }
+    }
+}
+
+/// Cooperative cancellation handle: clone it, attach it to a
+/// [`SimJob`] ([`SimJob::cancel_token`]), keep the clone, and
+/// [`CancelToken::cancel`] at any time. A job cancelled before it
+/// started replies [`ApiError::Cancelled`] with `cycles: 0`; a job
+/// cancelled mid-run stops at the next cycle boundary and attaches
+/// the partial [`Snapshot`], exactly like a cycle-budget trip.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// Fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    /// Has [`CancelToken::cancel`] been called?
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+}
 
 /// One unit of work: a scenario builder plus optional limits.
 #[derive(Debug, Clone)]
 pub struct SimJob {
     builder: SimBuilder,
     cycle_budget: Option<Cycle>,
+    priority: Priority,
+    cancel: Option<CancelToken>,
 }
 
 impl SimJob {
-    /// Job that runs the builder's scenario to idle.
+    /// Job that runs the builder's scenario to idle, on the default
+    /// [`Priority::Batch`] lane.
     pub fn new(builder: SimBuilder) -> Self {
-        Self { builder, cycle_budget: None }
+        Self {
+            builder,
+            cycle_budget: None,
+            priority: Priority::default(),
+            cancel: None,
+        }
     }
 
     /// Cancel the job after at most `cycles` simulated cycles. A
@@ -69,6 +161,20 @@ impl SimJob {
     /// the budget is enforced cycle-exactly.
     pub fn cycle_budget(mut self, cycles: Cycle) -> Self {
         self.cycle_budget = Some(cycles);
+        self
+    }
+
+    /// Put the job on an explicit [`Priority`] lane.
+    pub fn priority(mut self, lane: Priority) -> Self {
+        self.priority = lane;
+        self
+    }
+
+    /// Attach a [`CancelToken`]; jobs with a token are stepped inline
+    /// (like budgeted jobs) so cancellation lands at a cycle
+    /// boundary.
+    pub fn cancel_token(mut self, token: &CancelToken) -> Self {
+        self.cancel = Some(token.clone());
         self
     }
 }
@@ -107,10 +213,13 @@ impl JobHandle {
 #[derive(Default)]
 struct Counters {
     jobs_run: AtomicU64,
+    interactive_jobs: AtomicU64,
+    batch_jobs: AtomicU64,
     warm_hits: AtomicU64,
     cold_builds: AtomicU64,
     job_errors: AtomicU64,
     budget_stops: AtomicU64,
+    cancelled: AtomicU64,
     rejected_full: AtomicU64,
     // submit and dequeue race, so the transient value can dip below
     // zero; clamped at read
@@ -119,7 +228,12 @@ struct Counters {
 }
 
 impl Counters {
-    fn note_enqueue(&self) {
+    fn note_enqueue(&self, lane: Priority) {
+        match lane {
+            Priority::Interactive => &self.interactive_jobs,
+            Priority::Batch => &self.batch_jobs,
+        }
+        .fetch_add(1, Ordering::Relaxed);
         let depth =
             self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
         self.queue_peak
@@ -136,10 +250,15 @@ impl Counters {
             threads: threads as u64,
             queue_bound: queue_bound as u64,
             jobs_run: self.jobs_run.load(Ordering::Relaxed),
+            interactive_jobs: self
+                .interactive_jobs
+                .load(Ordering::Relaxed),
+            batch_jobs: self.batch_jobs.load(Ordering::Relaxed),
             warm_hits: self.warm_hits.load(Ordering::Relaxed),
             cold_builds: self.cold_builds.load(Ordering::Relaxed),
             job_errors: self.job_errors.load(Ordering::Relaxed),
             budget_stops: self.budget_stops.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
             rejected_full: self.rejected_full.load(Ordering::Relaxed),
             queue_depth: self
                 .queue_depth
@@ -180,11 +299,112 @@ struct WorkItem {
     reply: SyncSender<Result<Snapshot, ApiError>>,
 }
 
+/// The bounded two-lane job queue. Replaces the PR-7 `sync_channel`:
+/// a channel is one FIFO, but the scheduling contract here is "the
+/// interactive lane is always drained first", which needs both lanes
+/// visible to one pop. Each lane is bounded separately (`bound`
+/// slots each) so a deep batch backlog cannot consume the
+/// interactive lane's admission slots.
+struct LaneQueue {
+    state: Mutex<LaneState>,
+    /// Workers park here when both lanes are empty.
+    not_empty: Condvar,
+    /// Blocking producers park here, one condvar per lane, so a
+    /// batch-lane slot freeing up only wakes batch producers.
+    not_full: [Condvar; 2],
+    bound: usize,
+}
+
+struct LaneState {
+    lanes: [VecDeque<WorkItem>; 2],
+    closed: bool,
+}
+
+impl LaneQueue {
+    fn new(bound: usize) -> Self {
+        Self {
+            state: Mutex::new(LaneState {
+                lanes: [VecDeque::new(), VecDeque::new()],
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: [Condvar::new(), Condvar::new()],
+            bound,
+        }
+    }
+
+    /// Blocking push: waits for a slot in the item's lane.
+    fn push(&self, item: WorkItem) -> Result<(), ServiceError> {
+        let lane = item.job.priority.index();
+        let mut state = self.state.lock().unwrap();
+        while !state.closed && state.lanes[lane].len() >= self.bound {
+            state = self.not_full[lane].wait(state).unwrap();
+        }
+        if state.closed {
+            return Err(ServiceError::ShutDown);
+        }
+        state.lanes[lane].push_back(item);
+        drop(state);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Fail-fast push: at the lane's bound, reject with the typed
+    /// per-lane backpressure error instead of waiting.
+    fn try_push(&self, item: WorkItem) -> Result<(), ServiceError> {
+        let lane = item.job.priority.index();
+        let mut state = self.state.lock().unwrap();
+        if state.closed {
+            return Err(ServiceError::ShutDown);
+        }
+        if state.lanes[lane].len() >= self.bound {
+            return Err(ServiceError::QueueFull {
+                lane: Priority::from_index(lane),
+                capacity: self.bound,
+            });
+        }
+        state.lanes[lane].push_back(item);
+        drop(state);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Worker pop: interactive lane strictly first; `None` once the
+    /// queue is closed **and** fully drained (the graceful-shutdown
+    /// contract — accepted jobs always run).
+    fn pop(&self) -> Option<WorkItem> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            for lane in 0..2 {
+                if let Some(item) = state.lanes[lane].pop_front() {
+                    drop(state);
+                    self.not_full[lane].notify_one();
+                    return Some(item);
+                }
+            }
+            if state.closed {
+                return None;
+            }
+            state = self.not_empty.wait(state).unwrap();
+        }
+    }
+
+    /// Close the queue: producers blocked in [`LaneQueue::push`] get
+    /// [`ServiceError::ShutDown`], workers drain what was accepted.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        for cv in &self.not_full {
+            cv.notify_all();
+        }
+    }
+}
+
 /// The long-lived service. Dropping it shuts down gracefully
 /// (equivalent to [`SimService::shutdown`] minus the returned
 /// counters).
 pub struct SimService {
-    tx: Option<SyncSender<WorkItem>>,
+    queue: Arc<LaneQueue>,
     workers: Vec<JoinHandle<()>>,
     gate: Arc<Gate>,
     counters: Arc<Counters>,
@@ -217,28 +437,20 @@ impl SimService {
         -> Self {
         let threads = parallel::resolve_threads(threads, u32::MAX);
         let queue_bound = queue_bound.max(1);
-        let (tx, rx) = sync_channel::<WorkItem>(queue_bound);
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(LaneQueue::new(queue_bound));
         let gate = Arc::new(Gate::new(running));
         let counters = Arc::new(Counters::default());
         let workers = (0..threads)
             .map(|_| {
-                let rx = Arc::clone(&rx);
+                let queue = Arc::clone(&queue);
                 let gate = Arc::clone(&gate);
                 let counters = Arc::clone(&counters);
                 std::thread::spawn(move || {
-                    worker_loop(&rx, &gate, &counters)
+                    worker_loop(&queue, &gate, &counters)
                 })
             })
             .collect();
-        Self {
-            tx: Some(tx),
-            workers,
-            gate,
-            counters,
-            threads,
-            queue_bound,
-        }
+        Self { queue, workers, gate, counters, threads, queue_bound }
     }
 
     /// Release the workers of a [`SimService::paused`] service.
@@ -251,47 +463,41 @@ impl SimService {
         self.threads
     }
 
-    /// Submission-queue capacity.
+    /// Submission-queue capacity (per lane).
     pub fn queue_bound(&self) -> usize {
         self.queue_bound
     }
 
-    /// Submit a job, **blocking** while the queue is at its bound.
+    /// Submit a job, **blocking** while the job's lane is at its
+    /// bound.
     pub fn submit(&self, job: impl Into<SimJob>)
         -> Result<JobHandle, ServiceError> {
         let (item, handle) = package(job.into());
-        let tx = self.tx.as_ref().expect("queue open until shutdown");
-        match tx.send(item) {
-            Ok(()) => {
-                self.counters.note_enqueue();
-                Ok(handle)
-            }
-            Err(_) => Err(ServiceError::ShutDown),
-        }
+        let lane = item.job.priority;
+        self.queue.push(item)?;
+        self.counters.note_enqueue(lane);
+        Ok(handle)
     }
 
-    /// Submit a job without blocking: at the bound, fail fast with
-    /// [`ServiceError::QueueFull`] so the caller sheds load instead
-    /// of stalling.
+    /// Submit a job without blocking: at the job's lane bound, fail
+    /// fast with [`ServiceError::QueueFull`] (naming the lane) so the
+    /// caller sheds load instead of stalling.
     pub fn try_submit(&self, job: impl Into<SimJob>)
         -> Result<JobHandle, ServiceError> {
         let (item, handle) = package(job.into());
-        let tx = self.tx.as_ref().expect("queue open until shutdown");
-        match tx.try_send(item) {
+        let lane = item.job.priority;
+        match self.queue.try_push(item) {
             Ok(()) => {
-                self.counters.note_enqueue();
+                self.counters.note_enqueue(lane);
                 Ok(handle)
             }
-            Err(TrySendError::Full(_)) => {
-                self.counters
-                    .rejected_full
-                    .fetch_add(1, Ordering::Relaxed);
-                Err(ServiceError::QueueFull {
-                    capacity: self.queue_bound,
-                })
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                Err(ServiceError::ShutDown)
+            Err(e) => {
+                if matches!(e, ServiceError::QueueFull { .. }) {
+                    self.counters
+                        .rejected_full
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
             }
         }
     }
@@ -310,9 +516,10 @@ impl SimService {
     }
 
     fn shutdown_inner(&mut self) {
-        // dropping the sender closes the queue; workers drain what
-        // was already accepted, then exit on the disconnect
-        self.tx.take();
+        // closing the queue rejects new submissions; workers drain
+        // what was already accepted, then exit on the empty+closed
+        // state
+        self.queue.close();
         // parked workers must be released to drain
         self.gate.open();
         for h in self.workers.drain(..) {
@@ -334,19 +541,14 @@ fn package(job: SimJob) -> (WorkItem, JobHandle) {
 }
 
 fn worker_loop(
-    rx: &Mutex<Receiver<WorkItem>>,
+    queue: &LaneQueue,
     gate: &Gate,
     counters: &Counters,
 ) {
     let mut pool: Vec<(SimConfig, SimSession)> = Vec::new();
     loop {
         gate.wait_open();
-        // the receiver lock is held only while blocked in recv — the
-        // statement ends (and releases it) before the job runs
-        let item = match rx.lock().unwrap().recv() {
-            Ok(item) => item,
-            Err(_) => break,
-        };
+        let Some(item) = queue.pop() else { break };
         counters.note_dequeue();
         let result = run_job(&mut pool, item.job, counters);
         counters.jobs_run.fetch_add(1, Ordering::Relaxed);
@@ -381,9 +583,19 @@ fn run_job_inner(
     job: SimJob,
     counters: &Counters,
 ) -> Result<Snapshot, ApiError> {
-    let SimJob { builder, cycle_budget } = job;
+    let SimJob { builder, cycle_budget, priority: _, cancel } = job;
     if builder.panics_for_test() {
         panic!("injected test panic (SimBuilder::panic_for_test)");
+    }
+    // a token tripped while the job sat in the queue cancels it
+    // before any session work
+    if cancel.as_ref().is_some_and(CancelToken::is_cancelled) {
+        counters.cancelled.fetch_add(1, Ordering::Relaxed);
+        return Err(ApiError::Cancelled {
+            message: "job cancelled before start".to_string(),
+            cycles: 0,
+            snapshot: None,
+        });
     }
     let (cfg, notes) = builder.build_config_with_notes()?;
     let warm = pool.iter().position(|(c, _)| *c == cfg);
@@ -412,9 +624,11 @@ fn run_job_inner(
             s
         }
     };
-    let run = match cycle_budget {
-        None => session.run_to_idle(),
-        Some(budget) => run_with_budget(&mut session, budget, counters),
+    let run = if cycle_budget.is_none() && cancel.is_none() {
+        session.run_to_idle()
+    } else {
+        run_managed(&mut session, cycle_budget, cancel.as_ref(),
+                    counters)
     };
     // a cycle-limited session is still structurally sound — the next
     // reuse resets it — so it goes back to the pool either way
@@ -426,23 +640,37 @@ fn run_job_inner(
     result
 }
 
-/// Step the session until idle or until `budget` cycles elapse; a
-/// trip cancels the job with the partial snapshot attached.
-fn run_with_budget(
+/// Step the session until idle, until `budget` cycles elapse, or
+/// until the cancel token trips; a stop cancels the job with the
+/// partial snapshot attached.
+fn run_managed(
     session: &mut SimSession,
-    budget: Cycle,
+    budget: Option<Cycle>,
+    cancel: Option<&CancelToken>,
     counters: &Counters,
 ) -> Result<(), ApiError> {
-    let stop_at = session.cycle().saturating_add(budget);
+    let stop_at =
+        budget.map(|b| session.cycle().saturating_add(b));
     while !session.idle() {
-        if session.cycle() >= stop_at {
-            counters.budget_stops.fetch_add(1, Ordering::Relaxed);
-            return Err(ApiError::CycleLimit {
-                message: format!(
-                    "job cycle budget exhausted = {budget}"),
+        if cancel.is_some_and(|t| t.is_cancelled()) {
+            counters.cancelled.fetch_add(1, Ordering::Relaxed);
+            return Err(ApiError::Cancelled {
+                message: "job cancelled mid-run".to_string(),
                 cycles: session.cycle(),
                 snapshot: Some(Box::new(session.snapshot())),
             });
+        }
+        if let Some(stop) = stop_at {
+            if session.cycle() >= stop {
+                counters.budget_stops.fetch_add(1, Ordering::Relaxed);
+                return Err(ApiError::CycleLimit {
+                    message: format!(
+                        "job cycle budget exhausted = {}",
+                        budget.unwrap_or(0)),
+                    cycles: session.cycle(),
+                    snapshot: Some(Box::new(session.snapshot())),
+                });
+            }
         }
         session.step()?;
     }
@@ -519,16 +747,96 @@ mod tests {
         let err = service
             .try_submit(job("l2_lat", StatMode::PerStream))
             .unwrap_err();
-        assert_eq!(err, ServiceError::QueueFull { capacity: 2 });
+        assert_eq!(err, ServiceError::QueueFull {
+            lane: Priority::Batch, capacity: 2 });
         assert_eq!(err.kind(), "queue_full");
+        // per-lane bounds: the full batch lane does not reject an
+        // interactive submission
+        let h3 = service
+            .try_submit(SimJob::new(job("l2_lat",
+                                        StatMode::PerStream))
+                .priority(Priority::Interactive))
+            .unwrap();
         service.resume();
         assert!(h1.wait().is_ok());
         assert!(h2.wait().is_ok());
+        assert!(h3.wait().is_ok());
         let stats = service.shutdown();
         assert_eq!(stats.rejected_full, 1);
-        assert_eq!(stats.jobs_run, 2);
-        assert_eq!(stats.queue_peak, 2);
+        assert_eq!(stats.jobs_run, 3);
+        assert_eq!(stats.queue_peak, 3);
         assert_eq!(stats.queue_depth, 0);
+        assert_eq!(stats.interactive_jobs, 1);
+        assert_eq!(stats.batch_jobs, 2);
+    }
+
+    #[test]
+    fn interactive_lane_is_dequeued_first() {
+        // direct LaneQueue check: three batch items queued before one
+        // interactive item, yet the interactive one pops first
+        let q = LaneQueue::new(8);
+        let tag = |queue: &LaneQueue, label: &str, lane: Priority| {
+            let (item, _handle) = package(
+                SimJob::new(SimBuilder::preset("minimal")
+                    .bench("l2_lat")
+                    .label(label))
+                    .priority(lane));
+            queue.try_push(item).unwrap();
+        };
+        tag(&q, "b0", Priority::Batch);
+        tag(&q, "b1", Priority::Batch);
+        tag(&q, "i0", Priority::Interactive);
+        tag(&q, "b2", Priority::Batch);
+        let order: Vec<String> = (0..4)
+            .map(|_| {
+                q.pop().unwrap().job.builder
+                    .label_for(&SimConfig::preset("minimal").unwrap())
+            })
+            .collect();
+        assert_eq!(order, ["i0", "b0", "b1", "b2"]);
+        q.close();
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn cancel_token_cancels_queued_and_running_jobs() {
+        // queued: parked workers, token tripped before resume →
+        // cancelled before start, no partial snapshot
+        let service = SimService::paused(1, 8);
+        let queued = CancelToken::new();
+        let h = service
+            .submit(SimJob::new(job("l2_lat", StatMode::PerStream))
+                .cancel_token(&queued))
+            .unwrap();
+        queued.cancel();
+        assert!(queued.is_cancelled());
+        service.resume();
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.kind(), "cancelled");
+        assert!(err.partial_snapshot().is_none());
+        assert!(err.to_string().contains("before start"), "{err}");
+        let stats = service.shutdown();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.job_errors, 1);
+
+        // running: a token job is stepped inline, so a token tripped
+        // mid-run stops at a cycle boundary with the partial attached
+        let service = SimService::with_queue_bound(1, 8);
+        let running = CancelToken::new();
+        // the first job holds the single worker long enough for the
+        // cancel to land while the second is still queued or stepping
+        let _slow = service
+            .submit(job("bench3", StatMode::PerStream))
+            .unwrap();
+        let h = service
+            .submit(SimJob::new(job("l2_lat", StatMode::PerStream))
+                .cancel_token(&running))
+            .unwrap();
+        running.cancel();
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.kind(), "cancelled");
+        let stats = service.shutdown();
+        assert_eq!(stats.cancelled, 1);
     }
 
     #[test]

@@ -15,7 +15,16 @@
 //! `batch` drives a [`crate::api::SimService`] from a scenario list
 //! file: one `run`-style flag line per job, a resident worker pool,
 //! per-job result lines, and the service counters as the `service`
-//! section of the batch stats-JSON document.
+//! section of the batch stats-JSON document. A batch with any failed
+//! job exits nonzero, after printing every per-job line and a
+//! failure tally by error kind.
+//!
+//! `serve` exposes the service over the [`crate::server`] wire
+//! protocol — `--port N` for the TCP front-end (prints
+//! `listening on ADDR` once bound, serving until a client issues
+//! `shutdown`), `--stdio` for a single-connection server on
+//! stdin/stdout. The final `server`+`service` stats document goes
+//! to `--stats-json`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -27,6 +36,7 @@ use crate::api::{ApiError, ServiceStats, SimBuilder, SimJob,
                  SimService, Snapshot, StatDomain, SCHEMA_VERSION};
 use crate::config::SimConfig;
 use crate::harness;
+use crate::server::{ServerConfig, SimServer};
 use crate::stats::print as stat_print;
 use crate::workloads;
 
@@ -35,6 +45,7 @@ use crate::workloads;
 pub enum Command {
     Run(RunArgs),
     Batch(BatchArgs),
+    Serve(ServeArgs),
     Validate { bench: String, preset: String, figure: bool },
     TraceGen { bench: String, out: PathBuf },
     Functional { artifacts: PathBuf },
@@ -150,6 +161,39 @@ impl Default for BatchArgs {
     }
 }
 
+/// Arguments of `streamsim serve` — the CLI face of
+/// [`crate::server`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeArgs {
+    /// TCP port to bind on 127.0.0.1 (`--port`; 0 = ephemeral —
+    /// the real port is in the printed `listening on` line).
+    pub port: Option<u16>,
+    /// Serve one connection on stdin/stdout instead (`--stdio`).
+    pub stdio: bool,
+    /// Resident service workers (`--threads`; 0 = auto).
+    pub threads: u32,
+    /// Per-lane submission-queue bound (`--queue`).
+    pub queue: usize,
+    /// Memo-cache capacity in documents (`--memo`; 0 disables).
+    pub memo: usize,
+    /// Write the final `server`+`service` stats document after the
+    /// drain (`--stats-json` / `--json`; `-` = stdout, TCP only).
+    pub json: Option<PathBuf>,
+}
+
+impl Default for ServeArgs {
+    fn default() -> Self {
+        Self {
+            port: None,
+            stdio: false,
+            threads: 2,
+            queue: crate::api::DEFAULT_QUEUE_BOUND,
+            memo: crate::server::memo::DEFAULT_MEMO_CAPACITY,
+            json: None,
+        }
+    }
+}
+
 /// One CLI flag: spelling(s), value placeholder (empty = switch), and
 /// the help line. This table is the **single source** of all help
 /// text.
@@ -240,6 +284,37 @@ pub const COMMANDS: &[CommandSpec] = &[
                        help: "write the batch result document with \
                               the 'service' counter section ('-' = \
                               stdout)" },
+        ],
+    },
+    CommandSpec {
+        name: "serve",
+        synopsis: "--port N | --stdio [--threads N] [--queue N] \
+                   [--memo N] [FLAGS]",
+        about: "Serve the wire protocol over TCP or stdio (see \
+                module docs for the verb set)",
+        flags: &[
+            FlagSpec { flags: "--port", value: "N",
+                       help: "bind 127.0.0.1:N (0 = ephemeral; the \
+                              bound address is printed as 'listening \
+                              on ADDR'); serves until a client sends \
+                              the shutdown verb" },
+            FlagSpec { flags: "--stdio", value: "",
+                       help: "serve a single connection on \
+                              stdin/stdout instead of TCP" },
+            FlagSpec { flags: "--threads", value: "N",
+                       help: "resident service workers (0 = \
+                              available parallelism)" },
+            FlagSpec { flags: "--queue", value: "N",
+                       help: "per-lane submission-queue bound; a \
+                              full lane is reported to the client \
+                              as a queue_full error frame" },
+            FlagSpec { flags: "--memo", value: "N",
+                       help: "result memo-cache capacity in \
+                              documents (0 disables caching)" },
+            FlagSpec { flags: "--stats-json | --json", value: "PATH",
+                       help: "write the final server+service stats \
+                              document after the drain ('-' = \
+                              stdout, TCP only)" },
         ],
     },
     CommandSpec {
@@ -482,6 +557,55 @@ pub fn parse(args: &[String]) -> Result<Command> {
             a.jobs = jobs.context("--jobs is required")?;
             Ok(Command::Batch(a))
         }
+        "serve" => {
+            let mut a = ServeArgs::default();
+            while let Some(flag) = it.next() {
+                match flag.as_str() {
+                    "--help" | "-h" => {
+                        return Ok(Command::HelpFor("serve".into()));
+                    }
+                    "--port" => {
+                        a.port = Some(
+                            next_val("--port", &mut it)?
+                                .parse()
+                                .context("--port must be a port \
+                                          number")?);
+                    }
+                    "--stdio" => a.stdio = true,
+                    "--threads" => {
+                        a.threads = next_val("--threads", &mut it)?
+                            .parse()
+                            .context("--threads must be an unsigned \
+                                      integer")?;
+                    }
+                    "--queue" => {
+                        let q: usize = next_val("--queue", &mut it)?
+                            .parse()
+                            .context("--queue must be a positive \
+                                      integer")?;
+                        if q == 0 {
+                            bail!("--queue must be at least 1");
+                        }
+                        a.queue = q;
+                    }
+                    "--memo" => {
+                        a.memo = next_val("--memo", &mut it)?
+                            .parse()
+                            .context("--memo must be an unsigned \
+                                      integer")?;
+                    }
+                    "--stats-json" | "--json" => {
+                        a.json = Some(
+                            next_val(flag.as_str(), &mut it)?.into());
+                    }
+                    other => bail!("unknown flag '{other}' for serve"),
+                }
+            }
+            if a.port.is_some() == a.stdio {
+                bail!("serve needs exactly one of --port or --stdio");
+            }
+            Ok(Command::Serve(a))
+        }
         "validate" | "report" => {
             let mut bench = None;
             let mut preset = "sm7_titanv_mini".to_string();
@@ -652,6 +776,7 @@ pub fn execute(cmd: Command) -> Result<String> {
             Ok(out)
         }
         Command::Batch(a) => execute_batch(&a),
+        Command::Serve(a) => execute_serve(&a),
         Command::Validate { bench, preset, figure } => {
             let g = workloads::generate(&bench)?;
             let cfg = SimConfig::preset(&preset)?;
@@ -741,6 +866,45 @@ fn parse_jobs_file(path: &Path)
     Ok(jobs)
 }
 
+/// The `serve` subcommand: run the wire protocol until drained,
+/// then optionally export the final `server`+`service` stats
+/// document. The TCP path prints `listening on ADDR` (and flushes)
+/// as soon as the socket is bound, so scripts using `--port 0` can
+/// read the real port before the first client connects.
+fn execute_serve(a: &ServeArgs) -> Result<String> {
+    let config = ServerConfig {
+        threads: a.threads,
+        queue_bound: a.queue,
+        memo_capacity: a.memo,
+    };
+    if a.stdio
+        && a.json.as_deref()
+            == Some(std::path::Path::new("-"))
+    {
+        bail!("serve --stdio owns stdout for the protocol; give \
+               --stats-json a file path");
+    }
+    let doc = if a.stdio {
+        crate::server::serve_stdio(config)
+            .context("serving on stdio")?
+    } else {
+        let port = a.port.unwrap_or(0);
+        let server =
+            SimServer::bind(&format!("127.0.0.1:{port}"), config)
+                .with_context(|| format!("binding port {port}"))?;
+        println!("listening on {}", server.local_addr()?);
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        server.serve().context("serving")?
+    };
+    let mut out = String::new();
+    if let Some(json) = &a.json {
+        let mut stdout_docs = 0u32;
+        emit_doc(&mut out, json, &doc, &mut stdout_docs)?;
+    }
+    Ok(out)
+}
+
 /// The `batch` subcommand: feed every scenario through one
 /// [`SimService`], print per-job result lines plus the service
 /// counters, optionally export the versioned batch document.
@@ -799,10 +963,32 @@ fn execute_batch(a: &BatchArgs) -> Result<String> {
         stats.jobs_run, results.len() - failed, failed,
         stats.warm_hits, stats.cold_builds, stats.queue_peak,
         stats.threads);
+    if failed > 0 {
+        // per-kind failure tally, so a sweep's errors are countable
+        // without re-grepping the per-job lines
+        let mut by_kind: BTreeMap<&str, usize> = BTreeMap::new();
+        for r in &results {
+            if let Err(e) = r {
+                *by_kind.entry(e.kind()).or_default() += 1;
+            }
+        }
+        let tally: Vec<String> = by_kind
+            .iter()
+            .map(|(kind, n)| format!("{kind}={n}"))
+            .collect();
+        let _ = writeln!(out, "failures: {}", tally.join(" "));
+    }
     if let Some(json) = &a.json {
         let mut stdout_docs = 0u32;
         emit_doc(&mut out, json, &batch_doc(&stats, &results),
                  &mut stdout_docs)?;
+    }
+    // a batch with failed jobs exits nonzero (previously it
+    // reported errors in the text but still exited 0, so CI sweeps
+    // silently passed); the full report stays in the error message
+    if failed > 0 {
+        bail!("{out}\nbatch failed: {failed} of {} jobs failed",
+              results.len());
     }
     Ok(out)
 }
@@ -1165,18 +1351,25 @@ mod tests {
              --bench no_such_bench --preset minimal\n\
              --bench l2_lat --preset minimal\n")
             .unwrap();
-        let out = execute(Command::Batch(BatchArgs {
+        // satellite bugfix: a batch with a failed job now exits
+        // nonzero; the full report (per-job lines, tally, document)
+        // lives in the error message
+        let err = execute(Command::Batch(BatchArgs {
             jobs: jobs.clone(),
             threads: 2,
             queue: 2, // smaller than the job count: submit blocks
             json: Some(PathBuf::from("-")),
             ..BatchArgs::default()
         }))
-        .unwrap();
+        .unwrap_err();
+        let out = format!("{err:#}");
         assert_eq!(out.matches("ok   [").count(), 3, "{out}");
         assert_eq!(out.matches("err  [").count(), 1, "{out}");
         assert!(out.contains("unknown_bench"), "{out}");
         assert!(out.contains("service: jobs=4 ok=3 err=1"), "{out}");
+        assert!(out.contains("failures: unknown_bench=1"), "{out}");
+        assert!(out.contains("batch failed: 1 of 4 jobs failed"),
+                "{out}");
         // the versioned batch document with the service section
         assert!(out.contains(
             &format!("{{\"schema_version\":{SCHEMA_VERSION},\
@@ -1185,6 +1378,17 @@ mod tests {
         assert!(out.contains("\"jobs\":[{\"ok\":true,"), "{out}");
         assert!(out.contains("\"ok\":false,\"kind\":\
                               \"unknown_bench\""), "{out}");
+        // an all-ok list still exits zero, with no failure tally
+        std::fs::write(&jobs, "--bench l2_lat --preset minimal\n")
+            .unwrap();
+        let ok = execute(Command::Batch(BatchArgs {
+            jobs: jobs.clone(),
+            threads: 1,
+            ..BatchArgs::default()
+        }))
+        .unwrap();
+        assert!(ok.contains("service: jobs=1 ok=1 err=0"), "{ok}");
+        assert!(!ok.contains("failures:"), "{ok}");
         // a bad line is rejected with its line number
         std::fs::write(&jobs, "--bench l2_lat --bogus\n").unwrap();
         let err = execute(Command::Batch(BatchArgs {
@@ -1205,17 +1409,58 @@ mod tests {
         let jobs = dir.join("jobs.txt");
         std::fs::write(&jobs, "--bench l2_lat --preset minimal\n")
             .unwrap();
-        let out = execute(Command::Batch(BatchArgs {
+        // a budget-tripped job is a failed job: nonzero exit, with
+        // the partial stats still reported
+        let err = execute(Command::Batch(BatchArgs {
             jobs,
             threads: 1,
             cycle_budget: Some(50),
             ..BatchArgs::default()
         }))
-        .unwrap();
+        .unwrap_err();
+        let out = format!("{err:#}");
         assert!(out.contains("err  ["), "{out}");
         assert!(out.contains("cycle_limit"), "{out}");
         assert!(out.contains("partial: cycles="), "{out}");
+        assert!(out.contains("failures: cycle_limit=1"), "{out}");
+        assert!(out.contains("batch failed: 1 of 1 jobs failed"),
+                "{out}");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn parses_serve_flags() {
+        let cmd = parse(&sv(&["serve", "--port", "0", "--threads",
+                              "3", "--queue", "5", "--memo", "8",
+                              "--stats-json", "/tmp/s.json"]))
+            .unwrap();
+        let Command::Serve(a) = cmd else { panic!("{cmd:?}") };
+        assert_eq!(a.port, Some(0));
+        assert!(!a.stdio);
+        assert_eq!(a.threads, 3);
+        assert_eq!(a.queue, 5);
+        assert_eq!(a.memo, 8);
+        assert_eq!(a.json, Some(PathBuf::from("/tmp/s.json")));
+        let cmd = parse(&sv(&["serve", "--stdio"])).unwrap();
+        let Command::Serve(a) = cmd else { panic!("{cmd:?}") };
+        assert!(a.stdio);
+        // exactly one transport must be chosen
+        assert!(parse(&sv(&["serve"])).is_err());
+        assert!(parse(&sv(&["serve", "--port", "0", "--stdio"]))
+            .is_err());
+        assert!(parse(&sv(&["serve", "--queue", "0", "--stdio"]))
+            .is_err());
+        assert_eq!(parse(&sv(&["serve", "--help"])).unwrap(),
+                   Command::HelpFor("serve".into()));
+        // --stdio owns stdout: the stats doc cannot go there too
+        let err = execute(Command::Serve(ServeArgs {
+            stdio: true,
+            json: Some(PathBuf::from("-")),
+            ..ServeArgs::default()
+        }))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("owns stdout"),
+                "{err:#}");
     }
 
     #[test]

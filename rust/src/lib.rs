@@ -72,6 +72,10 @@
 //!   the active-set scheduler's sleep decision is based on.
 //! * [`harness`] — tip / clean / tip_serialized comparison harness,
 //!   built on the facade (also re-exported from [`api`]).
+//! * [`server`] — the framed-protocol network front-end over
+//!   [`api::SimService`]: line-framed versioned JSON over TCP or
+//!   stdio, streaming per-stream stat deltas, cross-job result
+//!   memoization (`cli serve`).
 //! * [`cli`] — the `streamsim` command-line surface, a thin shell over
 //!   [`api`] (per-subcommand help is generated from one flag table).
 //! * [`runtime`], [`functional`] — PJRT execution of the AOT-compiled
@@ -89,6 +93,7 @@ pub mod harness;
 pub mod kernel;
 pub mod mem;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod stats;
 pub mod stream;

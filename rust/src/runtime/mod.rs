@@ -181,7 +181,8 @@ impl Runtime {
             .executables
             .get(name)
             .with_context(|| format!("artifact '{name}' not loaded \
-                                      (have: {:?})", self.names()))?;
+                                      (have: {})",
+                                     self.names().join(", ")))?;
         let literals: Vec<Literal> = inputs
             .iter()
             .map(|t| t.to_literal())

@@ -1,0 +1,507 @@
+//! `server::conn` — the per-connection protocol loop.
+//!
+//! One instance of [`serve_connection`] runs per client, generic
+//! over the transport (a TCP stream pair, stdio, or an in-memory
+//! cursor in tests). It owns the connection's job table — job ids
+//! are process-global (from [`ServerCtx`]) but results are claimed
+//! through the connection that submitted them — and maps each
+//! request line onto the shared [`ServerCtx`] (service, memo cache,
+//! counters).
+//!
+//! Reads are expected to time out periodically on multi-connection
+//! transports (the TCP front-end sets a 100 ms read timeout): the
+//! loop treats `WouldBlock`/`TimedOut` as "check the drain flag and
+//! keep listening", which is how a connection blocked in `read`
+//! notices a `shutdown` issued on a *different* connection. Partial
+//! lines are accumulated across timeouts by [`read_frame`]
+//! (`BufRead::read_line` would discard them on error).
+
+use std::collections::HashMap;
+use std::io::{self, BufRead, ErrorKind, Write};
+use std::sync::atomic::Ordering::Relaxed;
+
+use crate::api::service::CancelToken;
+use crate::api::{ApiError, JobHandle, Snapshot};
+use crate::server::memo::MemoKey;
+use crate::server::proto::{JobSpec, Request, Response,
+                           PROTO_VERSION};
+use crate::server::ServerCtx;
+use crate::stats::export::SCHEMA_VERSION;
+use crate::stats::StatDomain;
+
+/// A job the connection has submitted and not yet claimed.
+enum ConnJob {
+    /// Running (or queued) in the service.
+    Pending {
+        handle: JobHandle,
+        memo_key: Option<MemoKey>,
+        cancel: CancelToken,
+    },
+    /// Served from the memo cache at submit time; `wait` replays the
+    /// cached document.
+    Memo { doc: String },
+}
+
+/// One `read_frame` outcome.
+enum ReadOutcome {
+    /// A complete line (without its terminator).
+    Line(String),
+    /// The peer closed its write side.
+    Eof,
+    /// Read timeout — no complete line yet; any partial input is
+    /// preserved in the caller's buffer.
+    TimedOut,
+}
+
+/// Read one `\n`-terminated frame, carrying partial input across
+/// read timeouts in `partial`. An unterminated final line before EOF
+/// is delivered as a normal line.
+fn read_frame(
+    reader: &mut dyn BufRead,
+    partial: &mut Vec<u8>,
+) -> io::Result<ReadOutcome> {
+    loop {
+        let (newline_at, used) = {
+            let available = match reader.fill_buf() {
+                Ok(b) => b,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {
+                    continue
+                }
+                Err(e) if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut
+                ) => return Ok(ReadOutcome::TimedOut),
+                Err(e) => return Err(e),
+            };
+            if available.is_empty() {
+                if partial.is_empty() {
+                    return Ok(ReadOutcome::Eof);
+                }
+                let line =
+                    String::from_utf8_lossy(partial).into_owned();
+                partial.clear();
+                return Ok(ReadOutcome::Line(line));
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(idx) => {
+                    partial.extend_from_slice(&available[..idx]);
+                    (true, idx + 1)
+                }
+                None => {
+                    partial.extend_from_slice(available);
+                    (false, available.len())
+                }
+            }
+        };
+        reader.consume(used);
+        if newline_at {
+            let line = String::from_utf8_lossy(partial).into_owned();
+            partial.clear();
+            return Ok(ReadOutcome::Line(line));
+        }
+    }
+}
+
+fn send(
+    writer: &mut dyn Write,
+    resp: &Response,
+) -> io::Result<()> {
+    writeln!(writer, "{}", resp.to_json())?;
+    writer.flush()
+}
+
+fn error(code: &str, message: String) -> Response {
+    Response::Error { code: code.to_string(), message }
+}
+
+/// The terminal frame for a finished job: `job_done` carrying the
+/// result document (memoizing it when eligible), or `job_failed`
+/// carrying the stable error kind, human message, stop cycle, and
+/// partial document when the stop kept one.
+fn final_response(
+    ctx: &ServerCtx,
+    job_id: u64,
+    memo_key: Option<MemoKey>,
+    result: Result<Snapshot, ApiError>,
+) -> Response {
+    match result {
+        Ok(snap) => {
+            let doc = snap.to_json();
+            if let Some(key) = memo_key {
+                ctx.memo.insert(key, doc.clone());
+            }
+            Response::JobDone { job_id, memo_hit: false, doc }
+        }
+        Err(e) => Response::JobFailed {
+            job_id,
+            kind: e.kind().to_string(),
+            message: e.to_string(),
+            cycles_at_stop: match &e {
+                ApiError::CycleLimit { cycles, .. }
+                | ApiError::Cancelled { cycles, .. } => *cycles,
+                _ => 0,
+            },
+            partial: e.partial_snapshot().map(Snapshot::to_json),
+        },
+    }
+}
+
+fn do_submit(
+    ctx: &ServerCtx,
+    jobs: &mut HashMap<u64, ConnJob>,
+    spec: JobSpec,
+    writer: &mut dyn Write,
+) -> io::Result<()> {
+    if ctx.draining() {
+        return send(writer, &error(
+            "draining",
+            "server is draining; not accepting new jobs"
+                .to_string()));
+    }
+    let job_id = ctx.next_job_id();
+    // memo key = resolved config + workload identity; a spec whose
+    // config does not validate is never cacheable (the failure will
+    // be reported by wait, through the service)
+    let memo_key = spec.memo_identity().and_then(|identity| {
+        spec.to_builder()
+            .build_config()
+            .ok()
+            .map(|cfg| (cfg, identity))
+    });
+    if let Some(key) = &memo_key {
+        if let Some(doc) = ctx.memo.get(key) {
+            jobs.insert(job_id, ConnJob::Memo { doc });
+            return send(writer, &Response::Submitted {
+                job_id,
+                memo_hit: true,
+            });
+        }
+    }
+    let cancel = CancelToken::new();
+    let job = spec.to_job().cancel_token(&cancel);
+    match ctx.service.try_submit(job) {
+        Ok(handle) => {
+            jobs.insert(job_id, ConnJob::Pending {
+                handle,
+                memo_key,
+                cancel,
+            });
+            send(writer, &Response::Submitted {
+                job_id,
+                memo_hit: false,
+            })
+        }
+        // typed per-lane backpressure, verbatim onto the wire
+        Err(e) => send(writer,
+                       &error(e.kind(), e.to_string())),
+    }
+}
+
+fn do_wait(
+    ctx: &ServerCtx,
+    jobs: &mut HashMap<u64, ConnJob>,
+    job_id: u64,
+    writer: &mut dyn Write,
+) -> io::Result<()> {
+    match jobs.remove(&job_id) {
+        None => send(writer, &error(
+            "unknown_job",
+            format!("no job {job_id} awaitable on this \
+                     connection"))),
+        Some(ConnJob::Memo { doc }) => {
+            send(writer, &Response::JobDone {
+                job_id,
+                memo_hit: true,
+                doc,
+            })
+        }
+        Some(ConnJob::Pending { handle, memo_key, .. }) => {
+            let resp = final_response(ctx, job_id, memo_key,
+                                      handle.wait());
+            send(writer, &resp)
+        }
+    }
+}
+
+fn do_try_wait(
+    ctx: &ServerCtx,
+    jobs: &mut HashMap<u64, ConnJob>,
+    job_id: u64,
+    writer: &mut dyn Write,
+) -> io::Result<()> {
+    match jobs.remove(&job_id) {
+        None => send(writer, &error(
+            "unknown_job",
+            format!("no job {job_id} awaitable on this \
+                     connection"))),
+        Some(ConnJob::Memo { doc }) => {
+            send(writer, &Response::JobDone {
+                job_id,
+                memo_hit: true,
+                doc,
+            })
+        }
+        Some(ConnJob::Pending { handle, memo_key, cancel }) => {
+            match handle.try_wait() {
+                Some(result) => {
+                    let resp = final_response(ctx, job_id, memo_key,
+                                              result);
+                    send(writer, &resp)
+                }
+                None => {
+                    jobs.insert(job_id, ConnJob::Pending {
+                        handle,
+                        memo_key,
+                        cancel,
+                    });
+                    send(writer, &Response::Pending { job_id })
+                }
+            }
+        }
+    }
+}
+
+fn do_cancel(
+    jobs: &mut HashMap<u64, ConnJob>,
+    job_id: u64,
+    writer: &mut dyn Write,
+) -> io::Result<()> {
+    match jobs.get(&job_id) {
+        Some(ConnJob::Pending { cancel, .. }) => {
+            cancel.cancel();
+            send(writer, &Response::CancelOk { job_id })
+        }
+        Some(ConnJob::Memo { .. }) => send(writer, &error(
+            "already_done",
+            format!("job {job_id} already finished"))),
+        None => send(writer, &error(
+            "unknown_job",
+            format!("no job {job_id} cancellable on this \
+                     connection"))),
+    }
+}
+
+/// Run a spec inline on the connection thread, emitting one `delta`
+/// frame per `interval` simulated cycles (per-domain, per-stream
+/// increments since the previous frame; zero-delta streams and
+/// domains omitted), then the terminal `job_done`/`job_failed`.
+fn do_stream(
+    ctx: &ServerCtx,
+    spec: JobSpec,
+    interval: u64,
+    writer: &mut dyn Write,
+) -> io::Result<()> {
+    if ctx.draining() {
+        return send(writer, &error(
+            "draining",
+            "server is draining; not accepting new jobs"
+                .to_string()));
+    }
+    if interval == 0 {
+        return send(writer, &error(
+            "bad_interval",
+            "stream interval must be at least 1 cycle".to_string()));
+    }
+    let job_id = ctx.next_job_id();
+    let budget = spec.cycle_budget;
+    let mut session = match spec.to_builder().build() {
+        Ok(s) => s,
+        Err(e) => {
+            let resp = final_response(ctx, job_id, None, Err(e));
+            return send(writer, &resp);
+        }
+    };
+    let mut prev = session.snapshot();
+    let mut seq: u64 = 0;
+    while !session.idle() {
+        let target = session.cycle() + interval;
+        while !session.idle() && session.cycle() < target {
+            if let Err(e) = session.step() {
+                let resp = final_response(ctx, job_id, None, Err(e));
+                return send(writer, &resp);
+            }
+            if budget.is_some_and(|b| session.cycle() >= b) {
+                break;
+            }
+        }
+        let snap = session.snapshot();
+        let diff = match snap.diff(&prev) {
+            Ok(d) => d,
+            Err(e) => {
+                let resp = final_response(ctx, job_id, None, Err(e));
+                return send(writer, &resp);
+            }
+        };
+        seq += 1;
+        let mut domains = Vec::new();
+        for d in StatDomain::ALL {
+            let cells: Vec<(String, u64)> = diff
+                .per_stream(d)
+                .iter()
+                .filter(|(_, n)| *n > 0)
+                .map(|(s, n)| (s.to_string(), *n))
+                .collect();
+            if !cells.is_empty() {
+                domains.push((d.name().to_string(), cells));
+            }
+        }
+        send(writer, &Response::Delta {
+            job_id,
+            seq,
+            cycles: snap.total_cycles(),
+            delta_cycles: diff.cycles(),
+            kernels_done: u64::from(snap.kernels_done()),
+            domains,
+        })?;
+        ctx.counters.deltas_sent.fetch_add(1, Relaxed);
+        if budget.is_some_and(|b| session.cycle() >= b)
+            && !session.idle()
+        {
+            let cycles = session.cycle();
+            let resp = final_response(ctx, job_id, None, Err(
+                ApiError::CycleLimit {
+                    message: format!(
+                        "stream cycle budget exhausted = {}",
+                        budget.unwrap_or(0)),
+                    cycles,
+                    snapshot: Some(Box::new(snap)),
+                }));
+            return send(writer, &resp);
+        }
+        prev = snap;
+    }
+    // streamed runs are never memoized: the stepping cadence is
+    // client-chosen, so the cache stays a pure function of the spec
+    let resp = final_response(ctx, job_id, None,
+                              Ok(session.into_snapshot()));
+    send(writer, &resp)
+}
+
+/// Handle one parsed request line. Returns `true` when the
+/// connection must close (version mismatch, shutdown).
+fn handle_line(
+    ctx: &ServerCtx,
+    line: &str,
+    jobs: &mut HashMap<u64, ConnJob>,
+    writer: &mut dyn Write,
+) -> io::Result<bool> {
+    let req = match Request::parse(line) {
+        Ok(r) => r,
+        Err(message) => {
+            ctx.counters.proto_errors.fetch_add(1, Relaxed);
+            send(writer, &error("bad_request", message))?;
+            return Ok(false);
+        }
+    };
+    match req {
+        Request::Hello { proto_version } => {
+            if proto_version != PROTO_VERSION {
+                ctx.counters.proto_errors.fetch_add(1, Relaxed);
+                send(writer, &error("proto_version", format!(
+                    "server speaks proto_version {PROTO_VERSION}, \
+                     client sent {proto_version}")))?;
+                send(writer, &Response::Goodbye {
+                    reason: "protocol version mismatch".to_string(),
+                })?;
+                return Ok(true);
+            }
+            send(writer, &Response::HelloOk {
+                proto_version: PROTO_VERSION,
+                schema_version: u64::from(SCHEMA_VERSION),
+            })?;
+        }
+        Request::Submit { spec } => {
+            ctx.counters.submits.fetch_add(1, Relaxed);
+            do_submit(ctx, jobs, spec, writer)?;
+        }
+        Request::Wait { job_id } => {
+            ctx.counters.waits.fetch_add(1, Relaxed);
+            do_wait(ctx, jobs, job_id, writer)?;
+        }
+        Request::TryWait { job_id } => {
+            ctx.counters.waits.fetch_add(1, Relaxed);
+            do_try_wait(ctx, jobs, job_id, writer)?;
+        }
+        Request::Cancel { job_id } => {
+            ctx.counters.cancels.fetch_add(1, Relaxed);
+            do_cancel(jobs, job_id, writer)?;
+        }
+        Request::Stream { spec, interval } => {
+            ctx.counters.streams.fetch_add(1, Relaxed);
+            do_stream(ctx, spec, interval, writer)?;
+        }
+        Request::ServiceStats => {
+            send(writer, &Response::Stats {
+                doc: ctx.stats_doc(),
+            })?;
+        }
+        Request::Shutdown => {
+            ctx.begin_drain();
+            flush_and_goodbye(ctx, jobs, writer, "shutdown")?;
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Drain this connection: deliver a terminal frame for every
+/// still-pending job (blocking on in-flight ones — the drain
+/// contract is finish-in-flight, not abandon), then say goodbye.
+fn flush_and_goodbye(
+    ctx: &ServerCtx,
+    jobs: &mut HashMap<u64, ConnJob>,
+    writer: &mut dyn Write,
+    reason: &str,
+) -> io::Result<()> {
+    let mut pending: Vec<(u64, ConnJob)> = jobs.drain().collect();
+    pending.sort_by_key(|(id, _)| *id);
+    for (job_id, job) in pending {
+        let resp = match job {
+            ConnJob::Memo { doc } => Response::JobDone {
+                job_id,
+                memo_hit: true,
+                doc,
+            },
+            ConnJob::Pending { handle, memo_key, .. } => {
+                final_response(ctx, job_id, memo_key, handle.wait())
+            }
+        };
+        send(writer, &resp)?;
+    }
+    send(writer, &Response::Goodbye {
+        reason: reason.to_string(),
+    })
+}
+
+/// The per-connection loop: read frames, dispatch verbs, exit on
+/// EOF, `shutdown`, a protocol-version mismatch, or a server drain
+/// observed at a read timeout (pending results are flushed and a
+/// `goodbye` sent in the latter two cases).
+pub(crate) fn serve_connection(
+    ctx: &ServerCtx,
+    reader: &mut dyn BufRead,
+    writer: &mut dyn Write,
+) -> io::Result<()> {
+    ctx.counters.connections.fetch_add(1, Relaxed);
+    let mut jobs: HashMap<u64, ConnJob> = HashMap::new();
+    let mut partial = Vec::new();
+    loop {
+        if ctx.draining() {
+            return flush_and_goodbye(ctx, &mut jobs, writer,
+                                     "server draining");
+        }
+        match read_frame(reader, &mut partial)? {
+            ReadOutcome::TimedOut => continue,
+            ReadOutcome::Eof => return Ok(()),
+            ReadOutcome::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                ctx.counters.requests.fetch_add(1, Relaxed);
+                if handle_line(ctx, &line, &mut jobs, writer)? {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}

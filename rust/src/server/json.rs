@@ -1,0 +1,406 @@
+//! Minimal JSON reader for the wire protocol — the parsing
+//! counterpart of the hand-rolled writers in [`crate::stats::export`]
+//! (serde is unavailable offline, DESIGN.md §7).
+//!
+//! Deliberately restricted to what the protocol emits: `null`,
+//! booleans, **unsigned integers** (every protocol number is a
+//! counter, cycle or id — floats and negatives are rejected with a
+//! typed parse error rather than silently truncated), strings with
+//! the standard escapes, arrays, and objects. Objects preserve key
+//! order, so a parse → serialize round trip of any document our
+//! writers produced is byte-identical — the property the proto
+//! round-trip tests and the byte-agreement integration tests lean
+//! on.
+
+use std::fmt::Write as _;
+
+/// A parsed JSON value (object keys keep their document order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Unsigned integer — the only number shape the protocol uses.
+    Num(u64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (first match; our writers never repeat a
+    /// key).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as an unsigned integer, if it is one.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The value as a bool, if it is one.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The value as an array slice, if it is one.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                let _ = write!(out, "{n}");
+            }
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&crate::stats::export::esc(s));
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&crate::stats::export::esc(k));
+                    out.push_str("\":");
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Serialization, byte-compatible with the `stats::export` writer
+/// style: no whitespace, object keys in stored order — so
+/// `parse(doc).to_string() == doc` for any document our writers
+/// emitted.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+        -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
+    }
+}
+
+/// Parse one JSON document; trailing non-whitespace is an error (a
+/// protocol line is exactly one object).
+pub fn parse(text: &str) -> Result<Json, String> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!(
+            "trailing bytes after the document at offset {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at offset {}", b as char,
+                        self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.keyword("true", Json::Bool(true)),
+            Some(b'f') => self.keyword("false", Json::Bool(false)),
+            Some(b'n') => self.keyword("null", Json::Null),
+            Some(b'0'..=b'9') => self.number(),
+            Some(b'-') => Err(format!(
+                "negative number at offset {} (protocol numbers are \
+                 unsigned)", self.pos)),
+            Some(c) => Err(format!(
+                "unexpected byte '{}' at offset {}", c as char,
+                self.pos)),
+            None => Err("unexpected end of document".to_string()),
+        }
+    }
+
+    fn keyword(&mut self, word: &str, v: Json)
+        -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad keyword at offset {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        if matches!(self.peek(), Some(b'.' | b'e' | b'E')) {
+            return Err(format!(
+                "non-integer number at offset {start} (protocol \
+                 numbers are unsigned integers)"));
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("digits are ascii")
+            .parse::<u64>()
+            .map(Json::Num)
+            .map_err(|_| {
+                format!("number at offset {start} overflows u64")
+            })
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => {
+                    return Err("unterminated string".to_string());
+                }
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated \
+                                                 escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err("short \\u escape"
+                                    .to_string());
+                            }
+                            let hex = std::str::from_utf8(
+                                &self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| "bad \\u escape")?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape")?;
+                            self.pos += 4;
+                            // surrogate pairs never appear in our
+                            // writers' output (esc() only emits
+                            // \u00xx control escapes)
+                            out.push(char::from_u32(code).ok_or(
+                                "bad \\u code point")?);
+                        }
+                        other => {
+                            return Err(format!(
+                                "unknown escape '\\{}'",
+                                other as char));
+                        }
+                    }
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar (multi-byte safe)
+                    let rest = std::str::from_utf8(
+                        &self.bytes[self.pos..])
+                        .map_err(|_| "invalid utf-8")?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => {
+                    return Err(format!(
+                        "expected ',' or ']' at offset {}", self.pos));
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => {
+                    return Err(format!(
+                        "expected ',' or '}}' at offset {}", self.pos));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_protocol_value_shapes() {
+        let doc = "{\"verb\":\"submit\",\"n\":42,\"on\":true,\
+                   \"off\":false,\"nil\":null,\"arr\":[1,2],\
+                   \"nested\":{\"k\":\"v\"}}";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("verb").unwrap().as_str(), Some("submit"));
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(42));
+        assert_eq!(v.get("on").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("off").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("nil"), Some(&Json::Null));
+        assert_eq!(v.get("arr").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            v.get("nested").unwrap().get("k").unwrap().as_str(),
+            Some("v"));
+    }
+
+    #[test]
+    fn parse_serialize_round_trip_is_byte_identical() {
+        // key order and number formatting survive, so any document
+        // our writers emit round-trips byte-identically
+        for doc in [
+            "{\"b\":1,\"a\":2}",
+            "{\"s\":\"he said \\\"hi\\\"\\n\",\"e\":{},\"l\":[]}",
+            "[{\"x\":0},null,true,\"\\u0007\"]",
+            "{\"big\":18446744073709551615}",
+        ] {
+            let v = parse(doc).unwrap();
+            assert_eq!(v.to_string(), doc, "round trip drifted");
+        }
+    }
+
+    #[test]
+    fn rejects_what_the_protocol_never_sends() {
+        assert!(parse("1.5").is_err());
+        assert!(parse("-3").is_err());
+        assert!(parse("1e9").is_err());
+        assert!(parse("{\"a\":1} extra").is_err());
+        assert!(parse("{\"a\"").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("18446744073709551616").is_err()); // u64::MAX+1
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn whitespace_tolerant_on_input() {
+        // other clients (the python driver) may pretty-space their
+        // requests; parsing accepts it even though we never emit it
+        let v = parse(" { \"a\" : [ 1 , 2 ] , \"b\" : \"x\" } ")
+            .unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.to_string(), "{\"a\":[1,2],\"b\":\"x\"}");
+    }
+
+    #[test]
+    fn escapes_round_trip_through_the_export_writer() {
+        // the writer side reuses stats::export::esc — a value with
+        // every escape class survives parse → serialize → parse
+        let original = Json::Str("a\"b\\c\nd\te\u{7}".to_string());
+        let text = original.to_string();
+        assert_eq!(parse(&text).unwrap(), original);
+    }
+}

@@ -1,0 +1,202 @@
+//! `server::memo` — the cross-job result memoization cache.
+//!
+//! Two clients sweeping overlapping scenario grids should pay for
+//! each distinct scenario once. A scenario is identified by its
+//! **resolved** [`SimConfig`] (preset + overrides + mode flags, after
+//! validation) plus a workload identity string — so `-o l2_latency
+//! 100` and a preset whose `l2_latency` is already 100 memoize to the
+//! same entry, while any knob that could change the numbers splits
+//! them apart. Only deterministic, replayable workloads are eligible
+//! (see `JobSpec::memo_identity`: built-in benchmarks, no cycle
+//! budget).
+//!
+//! The cached value is the **final result document string**, not a
+//! snapshot — a memo hit therefore replays byte-identical `doc`
+//! bytes, which is what the byte-agreement tests pin. Replacement is
+//! LRU over a small bounded list (scenario counts here are dozens,
+//! not millions; a `Vec` scan under the lock is simpler than an
+//! intrusive list and never the bottleneck next to a simulation).
+
+use std::sync::Mutex;
+
+use crate::config::SimConfig;
+
+/// Default number of cached scenario results per server.
+pub const DEFAULT_MEMO_CAPACITY: usize = 32;
+
+/// Cache key: resolved config + workload identity.
+pub type MemoKey = (SimConfig, String);
+
+struct Entry {
+    key: MemoKey,
+    doc: String,
+}
+
+struct State {
+    /// Most-recently-used last.
+    entries: Vec<Entry>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Bounded LRU of `scenario → result document` (thread-safe).
+pub struct MemoCache {
+    state: Mutex<State>,
+    capacity: usize,
+}
+
+impl MemoCache {
+    /// An empty cache holding at most `capacity` documents.
+    /// `capacity == 0` disables caching (every probe is a miss and
+    /// nothing is stored).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(State {
+                entries: Vec::new(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            capacity,
+        }
+    }
+
+    /// Look up a scenario; a hit refreshes its LRU position and
+    /// returns a clone of the cached document.
+    pub fn get(&self, key: &MemoKey) -> Option<String> {
+        let mut st = self.state.lock().unwrap();
+        match st.entries.iter().position(|e| &e.key == key) {
+            Some(idx) => {
+                st.hits += 1;
+                let entry = st.entries.remove(idx);
+                let doc = entry.doc.clone();
+                st.entries.push(entry);
+                Some(doc)
+            }
+            None => {
+                st.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Record a finished scenario's document, evicting the
+    /// least-recently-used entry when full. Re-inserting an existing
+    /// key refreshes it (documents for the same key are identical by
+    /// construction — determinism is the premise of the cache).
+    pub fn insert(&self, key: MemoKey, doc: String) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(idx) =
+            st.entries.iter().position(|e| e.key == key)
+        {
+            st.entries.remove(idx);
+        } else if st.entries.len() >= self.capacity {
+            st.entries.remove(0);
+            st.evictions += 1;
+        }
+        st.entries.push(Entry { key, doc });
+    }
+
+    /// `(hits, misses, evictions)` since construction.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.hits, st.misses, st.evictions)
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::session::SimBuilder;
+
+    fn key(l2_latency: u32) -> MemoKey {
+        let cfg = SimBuilder::preset("minimal")
+            .set("l2_latency", &l2_latency.to_string())
+            .build_config()
+            .unwrap();
+        (cfg, "bench:l2_lat".to_string())
+    }
+
+    #[test]
+    fn hit_returns_the_exact_bytes_stored() {
+        let cache = MemoCache::new(4);
+        assert_eq!(cache.get(&key(10)), None);
+        cache.insert(key(10), "{\"doc\":1}".to_string());
+        assert_eq!(cache.get(&key(10)).as_deref(),
+                   Some("{\"doc\":1}"));
+        assert_eq!(cache.counters(), (1, 1, 0));
+    }
+
+    #[test]
+    fn resolved_config_is_the_key_not_the_flag_spelling() {
+        // an override that matches the preset default resolves to
+        // the same SimConfig, hence the same cache line
+        let base = SimBuilder::preset("minimal")
+            .build_config()
+            .unwrap();
+        let spelled = SimBuilder::preset("minimal")
+            .set("l2_latency", &base.l2_latency.to_string())
+            .build_config()
+            .unwrap();
+        assert_eq!(base, spelled);
+        let cache = MemoCache::new(4);
+        cache.insert((base, "bench:l2_lat".to_string()),
+                     "cached".to_string());
+        assert_eq!(
+            cache
+                .get(&(spelled, "bench:l2_lat".to_string()))
+                .as_deref(),
+            Some("cached"));
+    }
+
+    #[test]
+    fn distinct_workloads_do_not_collide() {
+        let cache = MemoCache::new(4);
+        let cfg = SimBuilder::preset("minimal")
+            .build_config()
+            .unwrap();
+        cache.insert((cfg.clone(), "bench:l2_lat".to_string()),
+                     "a".to_string());
+        assert_eq!(
+            cache.get(&(cfg, "bench:bench3".to_string())),
+            None);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_at_capacity() {
+        let cache = MemoCache::new(2);
+        cache.insert(key(10), "a".to_string());
+        cache.insert(key(20), "b".to_string());
+        // touch 10 so 20 becomes the LRU victim
+        assert!(cache.get(&key(10)).is_some());
+        cache.insert(key(30), "c".to_string());
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.get(&key(20)), None, "LRU entry survived");
+        assert_eq!(cache.get(&key(10)).as_deref(), Some("a"));
+        assert_eq!(cache.get(&key(30)).as_deref(), Some("c"));
+        let (_, _, evictions) = cache.counters();
+        assert_eq!(evictions, 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_cache() {
+        let cache = MemoCache::new(0);
+        cache.insert(key(10), "a".to_string());
+        assert!(cache.is_empty());
+        assert_eq!(cache.get(&key(10)), None);
+    }
+}

@@ -1,0 +1,464 @@
+//! `streamsim::server` — a framed-protocol network front-end over
+//! [`SimService`], with streaming stat deltas and cross-job result
+//! memoization.
+//!
+//! The facade ([`crate::api`]) answers per-stream questions
+//! in-process; this module answers them **over a socket**, so sweep
+//! drivers, notebooks and CI harnesses in any language can submit
+//! scenarios to one long-lived simulator process and read the same
+//! versioned result documents a direct [`SimSession`] run would
+//! print — byte-identically (pinned by `tests/server.rs`).
+//!
+//! # Framing
+//!
+//! The wire protocol is line-framed JSON: **one JSON object per
+//! `\n`-terminated line, in both directions**. No length prefixes,
+//! no binary, nothing a `telnet`/`nc` session or a ten-line Python
+//! client can't speak (see `python/serve_client.py`). Numbers are
+//! unsigned 64-bit integers; the parser ([`json`]) deliberately
+//! rejects floats and negatives — the schema never emits them.
+//!
+//! Every request carries a `"verb"` field. Malformed lines get an
+//! `error` frame with code `bad_request` and do **not** close the
+//! connection. Blank lines are ignored.
+//!
+//! # Versioning
+//!
+//! Two version numbers appear on the wire and they version different
+//! things:
+//!
+//! * [`proto::PROTO_VERSION`] — the framing and verb shapes in this
+//!   module. A client should open with
+//!   `{"verb":"hello","proto_version":1}`; any other version is
+//!   answered with an `error` (code `proto_version`) plus a
+//!   `goodbye`, and the connection closes. `hello` is optional —
+//!   a version-matched client may skip it.
+//! * [`SCHEMA_VERSION`](crate::stats::export::SCHEMA_VERSION) — the
+//!   result-document schema carried *inside* `doc`/`partial`
+//!   fields, unchanged from the CLI/facade. `hello_ok` reports both
+//!   so a client can bail before submitting anything.
+//!
+//! # Verbs
+//!
+//! | request | reply | notes |
+//! |---|---|---|
+//! | `hello {proto_version}` | `hello_ok {proto_version, schema_version}` | version gate |
+//! | `submit {spec}` | `submitted {job_id, memo_hit}` | enqueue on the service |
+//! | `wait {job_id}` | `job_done` \| `job_failed` | blocks; claims the result |
+//! | `try_wait {job_id}` | `pending` \| `job_done` \| `job_failed` | non-blocking poll |
+//! | `cancel {job_id}` | `cancel_ok` | trips the job's [`CancelToken`] |
+//! | `stream {spec, interval}` | `delta`* then `job_done`/`job_failed` | inline run, one `delta` per `interval` cycles |
+//! | `service_stats` | `stats {doc}` | live `server` + `service` counter document |
+//! | `shutdown` | pending results, then `goodbye` | global graceful drain |
+//!
+//! A `spec` is [`proto::JobSpec`]: the protocol twin of the CLI
+//! `run` flag set (`bench`/`trace`, `preset`, `stat_mode`,
+//! `serialize`, `sim_threads`, `overrides`, `label`,
+//! `cycle_budget`), plus `priority` — the service lane. Server
+//! submissions default to the `interactive` lane (a client is
+//! waiting on the socket); bulk sweeps should say
+//! `"priority":"batch"` so they queue behind interactive work. A
+//! full lane is reported as an `error` frame with code `queue_full`
+//! naming the lane and bound — typed backpressure, not a hang.
+//!
+//! Job ids are process-global, but a result can only be claimed on
+//! the connection that submitted it. `wait`/`try_wait` **consume**
+//! the result: a second `wait` on the same id is `unknown_job`.
+//!
+//! `job_failed` carries the stable [`ApiError::kind`] tag
+//! (`cycle_limit`, `cancelled`, `unknown_bench`, ...), the human
+//! message, `cycles_at_stop`, and — for budget trips and mid-run
+//! cancellations — the partial result document under `partial`.
+//!
+//! # Streaming deltas
+//!
+//! `stream` runs the spec inline on the connection and emits a
+//! `delta` frame every `interval` simulated cycles: totals so far
+//! (`cycles`, `kernels_done`) plus per-domain, per-stream counter
+//! increments since the previous frame (via [`Snapshot::diff`];
+//! zero-delta streams and domains are omitted). The increments sum
+//! exactly to the final document's per-stream totals — the property
+//! `tests/server.rs` pins. The terminal frame is the same
+//! `job_done`/`job_failed` a submitted job would get.
+//!
+//! # Memoization
+//!
+//! The server keeps a bounded LRU cache ([`memo::MemoCache`]) of
+//! finished result documents keyed by **resolved** [`SimConfig`]
+//! plus workload identity. Only deterministic, replayable scenarios
+//! are eligible (built-in benchmark, no cycle budget — see
+//! [`proto::JobSpec::memo_identity`]). A hit is visible as
+//! `memo_hit: true` on `submitted` (and on the `job_done`), and the
+//! replayed `doc` is byte-identical to the cold run that populated
+//! the entry. Hit/miss/eviction counts surface in the `server`
+//! stats section.
+//!
+//! # Graceful drain
+//!
+//! `shutdown` (from any connection) flips a global drain flag:
+//! * new `submit`/`stream` requests are rejected with code
+//!   `draining`;
+//! * every connection — including ones blocked in `read` (the TCP
+//!   front-end uses a 100 ms read timeout precisely so they notice)
+//!   — delivers a terminal frame for each of its still-pending jobs
+//!   (blocking until in-flight work finishes), then a `goodbye`,
+//!   then closes;
+//! * the accept loop stops, joins the connection threads, shuts the
+//!   service down, and [`SimServer::serve`] returns the final
+//!   stats document (`{"schema_version":…,"server":…,"service":…}`).
+//!
+//! # Transports
+//!
+//! * TCP — [`SimServer::bind`] + [`SimServer::serve`]; one handler
+//!   thread per connection (`cli serve --port N`).
+//! * stdio — [`serve_stdio`] / [`serve_io`]; a single-connection
+//!   server over any `BufRead`/`Write` pair (`cli serve --stdio`),
+//!   which is also how the integration tests and `scripts/ci.sh`
+//!   drive the protocol without opening sockets.
+//!
+//! ```text
+//! C: {"verb":"hello","proto_version":1}
+//! S: {"verb":"hello_ok","proto_version":1,"schema_version":3}
+//! C: {"verb":"submit","spec":{"preset":"minimal","priority":"interactive","bench":"l2_lat"}}
+//! S: {"verb":"submitted","job_id":1,"memo_hit":false}
+//! C: {"verb":"wait","job_id":1}
+//! S: {"verb":"job_done","job_id":1,"memo_hit":false,"doc":{...}}
+//! C: {"verb":"shutdown"}
+//! S: {"verb":"goodbye","reason":"shutdown"}
+//! ```
+//!
+//! [`SimService`]: crate::api::SimService
+//! [`SimSession`]: crate::api::SimSession
+//! [`CancelToken`]: crate::api::CancelToken
+//! [`ApiError::kind`]: crate::api::ApiError::kind
+//! [`Snapshot::diff`]: crate::api::Snapshot::diff
+//! [`SimConfig`]: crate::config::SimConfig
+
+pub mod json;
+pub mod memo;
+pub mod proto;
+
+mod conn;
+
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::api::SimService;
+use crate::server::memo::{MemoCache, DEFAULT_MEMO_CAPACITY};
+use crate::server::proto::PROTO_VERSION;
+use crate::stats::export::{ServerStats, SCHEMA_VERSION};
+
+/// How long a TCP connection blocks in `read` before re-checking
+/// the drain flag.
+const READ_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// Accept-loop poll period while no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Server construction knobs (CLI `serve` flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Resident service worker threads (`--threads`).
+    pub threads: u32,
+    /// Per-lane service queue bound (`--queue`).
+    pub queue_bound: usize,
+    /// Memo-cache capacity in documents; 0 disables (`--memo`).
+    pub memo_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            threads: 2,
+            queue_bound: crate::api::DEFAULT_QUEUE_BOUND,
+            memo_capacity: DEFAULT_MEMO_CAPACITY,
+        }
+    }
+}
+
+/// Lifetime request counters (lock-free; snapshotted into the
+/// `server` stats section).
+#[derive(Default)]
+pub(crate) struct ServerCounters {
+    pub connections: AtomicU64,
+    pub requests: AtomicU64,
+    pub submits: AtomicU64,
+    pub waits: AtomicU64,
+    pub cancels: AtomicU64,
+    pub streams: AtomicU64,
+    pub deltas_sent: AtomicU64,
+    pub proto_errors: AtomicU64,
+}
+
+/// Everything the connection handlers share: the service, the memo
+/// cache, the counters, the drain flag, and the job-id well.
+pub(crate) struct ServerCtx {
+    pub service: SimService,
+    pub memo: MemoCache,
+    pub counters: ServerCounters,
+    draining: AtomicBool,
+    next_job_id: AtomicU64,
+}
+
+impl ServerCtx {
+    fn new(config: &ServerConfig) -> Self {
+        Self {
+            service: SimService::with_queue_bound(
+                config.threads, config.queue_bound),
+            memo: MemoCache::new(config.memo_capacity),
+            counters: ServerCounters::default(),
+            draining: AtomicBool::new(false),
+            next_job_id: AtomicU64::new(0),
+        }
+    }
+
+    /// True once a `shutdown` has been received anywhere.
+    pub fn draining(&self) -> bool {
+        self.draining.load(Relaxed)
+    }
+
+    /// Flip the global drain flag (idempotent).
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Relaxed);
+    }
+
+    /// Allocate the next process-global job id (ids start at 1).
+    pub fn next_job_id(&self) -> u64 {
+        self.next_job_id.fetch_add(1, Relaxed) + 1
+    }
+
+    /// Snapshot the `server` counter section.
+    pub fn server_stats(&self) -> ServerStats {
+        let (memo_hits, memo_misses, _evictions) =
+            self.memo.counters();
+        ServerStats {
+            proto_version: PROTO_VERSION,
+            connections: self.counters.connections.load(Relaxed),
+            requests: self.counters.requests.load(Relaxed),
+            submits: self.counters.submits.load(Relaxed),
+            waits: self.counters.waits.load(Relaxed),
+            cancels: self.counters.cancels.load(Relaxed),
+            streams: self.counters.streams.load(Relaxed),
+            deltas_sent: self.counters.deltas_sent.load(Relaxed),
+            memo_hits,
+            memo_misses,
+            proto_errors: self.counters.proto_errors.load(Relaxed),
+        }
+    }
+
+    /// The live stats document (`service_stats` reply): schema
+    /// version plus the `server` and `service` sections, written by
+    /// the same section writers the CLI golden tests pin.
+    pub fn stats_doc(&self) -> String {
+        format!(
+            "{{\"schema_version\":{SCHEMA_VERSION},\
+             \"server\":{},\"service\":{}}}",
+            self.server_stats().to_json(),
+            self.service.stats().to_json())
+    }
+
+    /// Tear down: shut the service down (joining its workers) and
+    /// return the final stats document.
+    fn finalize(self) -> String {
+        let server = self.server_stats();
+        let service = self.service.shutdown();
+        format!(
+            "{{\"schema_version\":{SCHEMA_VERSION},\
+             \"server\":{},\"service\":{}}}",
+            server.to_json(),
+            service.to_json())
+    }
+}
+
+/// The TCP front-end: an accept loop spawning one
+/// [`conn::serve_connection`] thread per client.
+pub struct SimServer {
+    listener: TcpListener,
+    ctx: Arc<ServerCtx>,
+}
+
+impl SimServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// build the shared service/cache state.
+    pub fn bind(
+        addr: &str,
+        config: ServerConfig,
+    ) -> io::Result<SimServer> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(SimServer {
+            listener,
+            ctx: Arc::new(ServerCtx::new(&config)),
+        })
+    }
+
+    /// The bound address (the real port when `:0` was requested).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Run until a client issues `shutdown`, then drain (finish
+    /// in-flight jobs, goodbye every connection, join handler
+    /// threads, shut the service down) and return the final stats
+    /// document.
+    pub fn serve(self) -> io::Result<String> {
+        self.listener.set_nonblocking(true)?;
+        let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+        loop {
+            if self.ctx.draining() {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let ctx = Arc::clone(&self.ctx);
+                    handlers.push(thread::spawn(move || {
+                        if let Err(e) = handle_tcp(&ctx, stream) {
+                            eprintln!(
+                                "server: connection error: {e}");
+                        }
+                    }));
+                }
+                Err(e) if e.kind()
+                    == io::ErrorKind::WouldBlock =>
+                {
+                    thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        let Ok(ctx) = Arc::try_unwrap(self.ctx) else {
+            unreachable!("all connection threads joined")
+        };
+        Ok(ctx.finalize())
+    }
+}
+
+fn handle_tcp(
+    ctx: &ServerCtx,
+    stream: TcpStream,
+) -> io::Result<()> {
+    // the accept loop runs the listener nonblocking; undo the flag
+    // the accepted socket inherits on some platforms, then use a
+    // short read timeout so a blocked connection still notices a
+    // drain started elsewhere
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    conn::serve_connection(ctx, &mut reader, &mut writer)
+}
+
+/// A single-connection server over any transport pair — the stdio
+/// front-end and the harness the integration tests drive. Serves
+/// until EOF or `shutdown`, then returns the final stats document.
+pub fn serve_io<R: BufRead, W: Write>(
+    config: ServerConfig,
+    mut reader: R,
+    mut writer: W,
+) -> io::Result<String> {
+    let ctx = ServerCtx::new(&config);
+    conn::serve_connection(&ctx, &mut reader, &mut writer)?;
+    Ok(ctx.finalize())
+}
+
+/// Serve one client on stdin/stdout (`cli serve --stdio`).
+pub fn serve_stdio(config: ServerConfig) -> io::Result<String> {
+    let stdin = io::stdin();
+    let stdout = io::stdout();
+    serve_io(config, stdin.lock(), stdout.lock())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::proto::{JobSpec, Request, Response};
+    use std::io::Cursor;
+
+    fn run_lines(
+        config: ServerConfig,
+        requests: &[Request],
+    ) -> (Vec<Response>, String) {
+        let mut input = String::new();
+        for r in requests {
+            input.push_str(&r.to_json());
+            input.push('\n');
+        }
+        let mut out: Vec<u8> = Vec::new();
+        let doc = serve_io(config, Cursor::new(input), &mut out)
+            .unwrap();
+        let responses = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Response::parse(l).unwrap())
+            .collect();
+        (responses, doc)
+    }
+
+    #[test]
+    fn hello_submit_wait_shutdown_over_stdio() {
+        let (responses, doc) = run_lines(
+            ServerConfig::default(),
+            &[
+                Request::Hello { proto_version: PROTO_VERSION },
+                Request::Submit { spec: JobSpec::bench("l2_lat") },
+                Request::Wait { job_id: 1 },
+                Request::Shutdown,
+            ],
+        );
+        assert_eq!(responses.len(), 4);
+        assert_eq!(responses[0], Response::HelloOk {
+            proto_version: PROTO_VERSION,
+            schema_version: u64::from(SCHEMA_VERSION),
+        });
+        assert_eq!(responses[1], Response::Submitted {
+            job_id: 1,
+            memo_hit: false,
+        });
+        let Response::JobDone { job_id: 1, memo_hit: false, doc:
+                                ref result } = responses[2]
+        else {
+            panic!("expected job_done, got {:?}", responses[2]);
+        };
+        assert!(result.contains("\"schema_version\""));
+        assert_eq!(responses[3], Response::Goodbye {
+            reason: "shutdown".to_string(),
+        });
+        // the final document carries both counter sections
+        assert!(doc.contains("\"server\":{\"proto_version\":1"));
+        assert!(doc.contains("\"service\":{\"threads\":2"));
+    }
+
+    #[test]
+    fn version_mismatch_is_refused_with_a_goodbye() {
+        let (responses, _doc) = run_lines(
+            ServerConfig::default(),
+            &[
+                Request::Hello { proto_version: PROTO_VERSION + 1 },
+                // never reached: the connection closes above
+                Request::Submit { spec: JobSpec::bench("l2_lat") },
+            ],
+        );
+        assert_eq!(responses.len(), 2);
+        let Response::Error { ref code, .. } = responses[0] else {
+            panic!("expected error, got {:?}", responses[0]);
+        };
+        assert_eq!(code, "proto_version");
+        assert!(matches!(responses[1], Response::Goodbye { .. }));
+    }
+
+    #[test]
+    fn eof_without_shutdown_still_finalizes() {
+        let (responses, doc) =
+            run_lines(ServerConfig::default(), &[]);
+        assert!(responses.is_empty());
+        assert!(doc.starts_with(&format!(
+            "{{\"schema_version\":{SCHEMA_VERSION},")));
+    }
+}

@@ -1,0 +1,757 @@
+//! `server::proto` — the typed, versioned wire vocabulary.
+//!
+//! One JSON object per `\n`-terminated line in both directions (see
+//! the [`crate::server`] module docs for the full framing and verb
+//! spec). Every shape here has a writer and a parser, and the two
+//! round-trip: `Request::parse(&req.to_json())` returns the same
+//! request, likewise for [`Response`]. Embedded result documents
+//! (`doc`/`partial` fields) are spliced in as **raw JSON** produced
+//! by the one schema writer in [`crate::stats::export`], not
+//! re-encoded strings — so a client reads exactly the bytes a direct
+//! `SimSession` run would have produced (the byte-agreement
+//! contract, pinned by `tests/server.rs`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::api::service::Priority;
+use crate::api::session::SimBuilder;
+use crate::api::SimJob;
+use crate::server::json::{self, Json};
+use crate::stats::export::esc;
+
+/// Wire-protocol version. Bump on any request/response shape change;
+/// the server rejects a `hello` carrying any other version (see the
+/// compat rules in the [`crate::server`] docs).
+pub const PROTO_VERSION: u64 = 1;
+
+/// A scenario description as submitted over the wire — the protocol
+/// twin of the CLI `run` flag set, resolved through the same
+/// [`SimBuilder`] knobs (`JobSpec::to_builder`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Built-in benchmark name (`--bench`).
+    pub bench: Option<String>,
+    /// `kernelslist.g` trace path on the **server's** filesystem
+    /// (`--trace`).
+    pub trace: Option<String>,
+    /// Config preset (`--preset`).
+    pub preset: String,
+    /// Stat semantics label: `tip`/`clean`/`exact` (`--stat-mode`).
+    pub stat_mode: Option<String>,
+    /// The paper's busy-streams launch gate (`--serialize`).
+    pub serialize: bool,
+    /// Clock-loop worker threads (`--sim-threads`).
+    pub sim_threads: Option<u32>,
+    /// `-o KEY VALUE` config overrides.
+    pub overrides: BTreeMap<String, String>,
+    /// Result-document label (`config` field) override.
+    pub label: Option<String>,
+    /// Per-job cycle budget; a trip replies `job_failed` with kind
+    /// `cycle_limit` and the partial document attached.
+    pub cycle_budget: Option<u64>,
+    /// Service lane; server submissions default to
+    /// [`Priority::Interactive`] (a human is waiting), batch sweeps
+    /// should say `"priority":"batch"`.
+    pub priority: Priority,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            bench: None,
+            trace: None,
+            preset: "sm7_titanv_mini".to_string(),
+            stat_mode: None,
+            serialize: false,
+            sim_threads: None,
+            overrides: BTreeMap::new(),
+            label: None,
+            cycle_budget: None,
+            priority: Priority::Interactive,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Spec for a built-in benchmark (the common client case).
+    pub fn bench(name: &str) -> Self {
+        Self { bench: Some(name.to_string()), ..Self::default() }
+    }
+
+    /// The wire → facade conversion, mirroring the CLI's
+    /// `RunArgs::to_builder` layering order (preset → mode/serialize/
+    /// threads → overrides → workload source → label).
+    pub fn to_builder(&self) -> SimBuilder {
+        let mut b = SimBuilder::preset(&self.preset);
+        if let Some(m) = &self.stat_mode {
+            b = b.stat_mode_label(m);
+        }
+        if self.serialize {
+            b = b.serialize_streams(true);
+        }
+        if let Some(t) = self.sim_threads {
+            b = b.sim_threads(t);
+        }
+        b = b.overrides(&self.overrides);
+        if let Some(bench) = &self.bench {
+            b = b.bench(bench);
+        } else if let Some(trace) = &self.trace {
+            b = b.trace(trace);
+        }
+        if let Some(l) = &self.label {
+            b = b.label(l);
+        }
+        b
+    }
+
+    /// The full service job: builder plus lane and budget.
+    pub fn to_job(&self) -> SimJob {
+        let mut job =
+            SimJob::new(self.to_builder()).priority(self.priority);
+        if let Some(c) = self.cycle_budget {
+            job = job.cycle_budget(c);
+        }
+        job
+    }
+
+    /// Workload-identity half of the memo key, or `None` if the spec
+    /// must not be memoized: only complete (un-budgeted) runs of
+    /// built-in benchmarks are cacheable — a trace file can change
+    /// on disk between submissions, a budgeted run is a prefix, and
+    /// both would poison a cache keyed only by the resolved config.
+    pub fn memo_identity(&self) -> Option<String> {
+        match (&self.bench, &self.trace, self.cycle_budget) {
+            (Some(bench), None, None) => Some(format!("bench:{bench}")),
+            _ => None,
+        }
+    }
+
+    fn write_json(&self, out: &mut String) {
+        let _ = write!(out, "{{\"preset\":\"{}\"", esc(&self.preset));
+        let _ = write!(out, ",\"priority\":\"{}\"",
+                       self.priority.as_str());
+        if let Some(b) = &self.bench {
+            let _ = write!(out, ",\"bench\":\"{}\"", esc(b));
+        }
+        if let Some(t) = &self.trace {
+            let _ = write!(out, ",\"trace\":\"{}\"", esc(t));
+        }
+        if let Some(m) = &self.stat_mode {
+            let _ = write!(out, ",\"stat_mode\":\"{}\"", esc(m));
+        }
+        if self.serialize {
+            out.push_str(",\"serialize\":true");
+        }
+        if let Some(t) = self.sim_threads {
+            let _ = write!(out, ",\"sim_threads\":{t}");
+        }
+        if let Some(l) = &self.label {
+            let _ = write!(out, ",\"label\":\"{}\"", esc(l));
+        }
+        if let Some(c) = self.cycle_budget {
+            let _ = write!(out, ",\"cycle_budget\":{c}");
+        }
+        if !self.overrides.is_empty() {
+            out.push_str(",\"overrides\":{");
+            for (i, (k, v)) in self.overrides.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "\"{}\":\"{}\"", esc(k), esc(v));
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+
+    fn parse(v: &Json) -> Result<Self, String> {
+        let mut spec = JobSpec::default();
+        if let Some(p) = v.get("preset") {
+            spec.preset = need_str(p, "preset")?;
+        }
+        if let Some(p) = v.get("priority") {
+            let name = need_str(p, "priority")?;
+            spec.priority = Priority::parse(&name).ok_or(format!(
+                "unknown priority '{name}' (interactive|batch)"))?;
+        }
+        if let Some(b) = v.get("bench") {
+            spec.bench = Some(need_str(b, "bench")?);
+        }
+        if let Some(t) = v.get("trace") {
+            spec.trace = Some(need_str(t, "trace")?);
+        }
+        if let Some(m) = v.get("stat_mode") {
+            spec.stat_mode = Some(need_str(m, "stat_mode")?);
+        }
+        if let Some(s) = v.get("serialize") {
+            spec.serialize =
+                s.as_bool().ok_or("serialize must be a bool")?;
+        }
+        if let Some(t) = v.get("sim_threads") {
+            let n = need_u64(t, "sim_threads")?;
+            spec.sim_threads = Some(u32::try_from(n).map_err(|_| {
+                "sim_threads does not fit u32".to_string()
+            })?);
+        }
+        if let Some(l) = v.get("label") {
+            spec.label = Some(need_str(l, "label")?);
+        }
+        if let Some(c) = v.get("cycle_budget") {
+            spec.cycle_budget = Some(need_u64(c, "cycle_budget")?);
+        }
+        if let Some(Json::Obj(fields)) = v.get("overrides") {
+            for (k, val) in fields {
+                spec.overrides
+                    .insert(k.clone(), need_str(val, "override")?);
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// Client → server messages, one per line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Version negotiation (optional but recommended first line).
+    Hello { proto_version: u64 },
+    /// Enqueue a job; replies `submitted` (with `memo_hit`).
+    Submit { spec: JobSpec },
+    /// Block until the job finishes; replies `job_done`/`job_failed`.
+    Wait { job_id: u64 },
+    /// Poll; replies `pending` or the final result.
+    TryWait { job_id: u64 },
+    /// Trip the job's cancel token; replies `cancel_ok`.
+    Cancel { job_id: u64 },
+    /// Run the spec inline, emitting a `delta` frame per `interval`
+    /// cycles, then the final `job_done`.
+    Stream { spec: JobSpec, interval: u64 },
+    /// Reply one `stats` frame with the live server+service counters.
+    ServiceStats,
+    /// Graceful drain: reject new work, finish in-flight jobs, send
+    /// every connection a `goodbye`.
+    Shutdown,
+}
+
+impl Request {
+    /// Serialize as one protocol line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        match self {
+            Request::Hello { proto_version } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"hello\",\"proto_version\":{}}}",
+                    proto_version);
+            }
+            Request::Submit { spec } => {
+                out.push_str("{\"verb\":\"submit\",\"spec\":");
+                spec.write_json(&mut out);
+                out.push('}');
+            }
+            Request::Wait { job_id } => {
+                let _ = write!(
+                    out, "{{\"verb\":\"wait\",\"job_id\":{job_id}}}");
+            }
+            Request::TryWait { job_id } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"try_wait\",\"job_id\":{job_id}}}");
+            }
+            Request::Cancel { job_id } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"cancel\",\"job_id\":{job_id}}}");
+            }
+            Request::Stream { spec, interval } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"stream\",\"interval\":{interval},\
+                     \"spec\":");
+                spec.write_json(&mut out);
+                out.push('}');
+            }
+            Request::ServiceStats => {
+                out.push_str("{\"verb\":\"service_stats\"}");
+            }
+            Request::Shutdown => {
+                out.push_str("{\"verb\":\"shutdown\"}");
+            }
+        }
+        out
+    }
+
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let v = json::parse(line)?;
+        let verb = v
+            .get("verb")
+            .and_then(Json::as_str)
+            .ok_or("missing string field 'verb'")?
+            .to_string();
+        match verb.as_str() {
+            "hello" => Ok(Request::Hello {
+                proto_version: field_u64(&v, "proto_version")?,
+            }),
+            "submit" => Ok(Request::Submit {
+                spec: JobSpec::parse(
+                    v.get("spec").ok_or("submit needs 'spec'")?)?,
+            }),
+            "wait" => Ok(Request::Wait {
+                job_id: field_u64(&v, "job_id")?,
+            }),
+            "try_wait" => Ok(Request::TryWait {
+                job_id: field_u64(&v, "job_id")?,
+            }),
+            "cancel" => Ok(Request::Cancel {
+                job_id: field_u64(&v, "job_id")?,
+            }),
+            "stream" => Ok(Request::Stream {
+                spec: JobSpec::parse(
+                    v.get("spec").ok_or("stream needs 'spec'")?)?,
+                interval: field_u64(&v, "interval")?,
+            }),
+            "service_stats" => Ok(Request::ServiceStats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown verb '{other}'")),
+        }
+    }
+}
+
+/// Server → client messages, one per line. `doc`/`partial` carry the
+/// schema-versioned result document **verbatim**.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// `hello` accepted.
+    HelloOk { proto_version: u64, schema_version: u64 },
+    /// `submit` accepted (`memo_hit`: the result is already cached —
+    /// `wait` will return instantly).
+    Submitted { job_id: u64, memo_hit: bool },
+    /// Terminal success; `doc` is the full result document.
+    JobDone { job_id: u64, memo_hit: bool, doc: String },
+    /// Terminal failure; `kind` is the stable `ApiError::kind` tag,
+    /// `partial` the partial document when the stop kept one
+    /// (cycle-limit trips, mid-run cancellations).
+    JobFailed {
+        job_id: u64,
+        kind: String,
+        message: String,
+        cycles_at_stop: u64,
+        partial: Option<String>,
+    },
+    /// `try_wait`: not finished yet.
+    Pending { job_id: u64 },
+    /// `cancel` delivered (the job replies `job_failed` with kind
+    /// `cancelled` once it observes the token).
+    CancelOk { job_id: u64 },
+    /// One `stream` increment: totals at this sample plus the
+    /// per-domain, per-stream deltas since the previous frame
+    /// (zero-delta streams omitted).
+    Delta {
+        job_id: u64,
+        seq: u64,
+        cycles: u64,
+        delta_cycles: u64,
+        kernels_done: u64,
+        /// `(domain name, per-stream deltas)`, in
+        /// [`crate::stats::StatDomain::ALL`] order; zero-delta
+        /// domains omitted.
+        domains: Vec<(String, Vec<(String, u64)>)>,
+    },
+    /// `service_stats` reply; `doc` is the server+service counter
+    /// document.
+    Stats { doc: String },
+    /// Connection farewell (drain or client-requested shutdown).
+    Goodbye { reason: String },
+    /// Protocol-level rejection (parse failure, unknown job id,
+    /// version mismatch, draining server, ...).
+    Error { code: String, message: String },
+}
+
+impl Response {
+    /// Serialize as one protocol line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        match self {
+            Response::HelloOk { proto_version, schema_version } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"hello_ok\",\"proto_version\":{},\
+                     \"schema_version\":{}}}",
+                    proto_version, schema_version);
+            }
+            Response::Submitted { job_id, memo_hit } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"submitted\",\"job_id\":{job_id},\
+                     \"memo_hit\":{memo_hit}}}");
+            }
+            Response::JobDone { job_id, memo_hit, doc } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"job_done\",\"job_id\":{job_id},\
+                     \"memo_hit\":{memo_hit},\"doc\":{doc}}}");
+            }
+            Response::JobFailed {
+                job_id, kind, message, cycles_at_stop, partial,
+            } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"job_failed\",\"job_id\":{job_id},\
+                     \"kind\":\"{}\",\"message\":\"{}\",\
+                     \"cycles_at_stop\":{cycles_at_stop}",
+                    esc(kind), esc(message));
+                if let Some(p) = partial {
+                    let _ = write!(out, ",\"partial\":{p}");
+                }
+                out.push('}');
+            }
+            Response::Pending { job_id } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"pending\",\"job_id\":{job_id}}}");
+            }
+            Response::CancelOk { job_id } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"cancel_ok\",\"job_id\":{job_id}}}");
+            }
+            Response::Delta {
+                job_id, seq, cycles, delta_cycles, kernels_done,
+                domains,
+            } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"delta\",\"job_id\":{job_id},\
+                     \"seq\":{seq},\"cycles\":{cycles},\
+                     \"delta_cycles\":{delta_cycles},\
+                     \"kernels_done\":{kernels_done},\"domains\":{{");
+                for (i, (domain, streams)) in
+                    domains.iter().enumerate()
+                {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "\"{}\":{{", esc(domain));
+                    for (j, (stream, n)) in streams.iter().enumerate()
+                    {
+                        if j > 0 {
+                            out.push(',');
+                        }
+                        let _ =
+                            write!(out, "\"{}\":{n}", esc(stream));
+                    }
+                    out.push('}');
+                }
+                out.push_str("}}");
+            }
+            Response::Stats { doc } => {
+                let _ = write!(
+                    out, "{{\"verb\":\"stats\",\"doc\":{doc}}}");
+            }
+            Response::Goodbye { reason } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"goodbye\",\"reason\":\"{}\"}}",
+                    esc(reason));
+            }
+            Response::Error { code, message } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"error\",\"code\":\"{}\",\
+                     \"message\":\"{}\"}}",
+                    esc(code), esc(message));
+            }
+        }
+        out
+    }
+
+    /// Parse one response line (the client side; also how the tests
+    /// pull embedded documents back out byte-identically).
+    pub fn parse(line: &str) -> Result<Response, String> {
+        let v = json::parse(line)?;
+        let verb = v
+            .get("verb")
+            .and_then(Json::as_str)
+            .ok_or("missing string field 'verb'")?
+            .to_string();
+        match verb.as_str() {
+            "hello_ok" => Ok(Response::HelloOk {
+                proto_version: field_u64(&v, "proto_version")?,
+                schema_version: field_u64(&v, "schema_version")?,
+            }),
+            "submitted" => Ok(Response::Submitted {
+                job_id: field_u64(&v, "job_id")?,
+                memo_hit: field_bool(&v, "memo_hit")?,
+            }),
+            "job_done" => Ok(Response::JobDone {
+                job_id: field_u64(&v, "job_id")?,
+                memo_hit: field_bool(&v, "memo_hit")?,
+                doc: v
+                    .get("doc")
+                    .ok_or("job_done needs 'doc'")?
+                    .to_string(),
+            }),
+            "job_failed" => Ok(Response::JobFailed {
+                job_id: field_u64(&v, "job_id")?,
+                kind: field_str(&v, "kind")?,
+                message: field_str(&v, "message")?,
+                cycles_at_stop: field_u64(&v, "cycles_at_stop")?,
+                partial: v.get("partial").map(Json::to_string),
+            }),
+            "pending" => Ok(Response::Pending {
+                job_id: field_u64(&v, "job_id")?,
+            }),
+            "cancel_ok" => Ok(Response::CancelOk {
+                job_id: field_u64(&v, "job_id")?,
+            }),
+            "delta" => {
+                let mut domains = Vec::new();
+                if let Some(Json::Obj(fields)) = v.get("domains") {
+                    for (domain, streams) in fields {
+                        let Json::Obj(cells) = streams else {
+                            return Err("delta domain must be an \
+                                        object".to_string());
+                        };
+                        let mut per_stream = Vec::new();
+                        for (stream, n) in cells {
+                            per_stream.push((
+                                stream.clone(),
+                                n.as_u64().ok_or("delta cells are \
+                                                  u64")?,
+                            ));
+                        }
+                        domains.push((domain.clone(), per_stream));
+                    }
+                }
+                Ok(Response::Delta {
+                    job_id: field_u64(&v, "job_id")?,
+                    seq: field_u64(&v, "seq")?,
+                    cycles: field_u64(&v, "cycles")?,
+                    delta_cycles: field_u64(&v, "delta_cycles")?,
+                    kernels_done: field_u64(&v, "kernels_done")?,
+                    domains,
+                })
+            }
+            "stats" => Ok(Response::Stats {
+                doc: v
+                    .get("doc")
+                    .ok_or("stats needs 'doc'")?
+                    .to_string(),
+            }),
+            "goodbye" => Ok(Response::Goodbye {
+                reason: field_str(&v, "reason")?,
+            }),
+            "error" => Ok(Response::Error {
+                code: field_str(&v, "code")?,
+                message: field_str(&v, "message")?,
+            }),
+            other => Err(format!("unknown verb '{other}'")),
+        }
+    }
+}
+
+fn need_str(v: &Json, what: &str) -> Result<String, String> {
+    v.as_str()
+        .map(str::to_string)
+        .ok_or(format!("field '{what}' must be a string"))
+}
+
+fn need_u64(v: &Json, what: &str) -> Result<u64, String> {
+    v.as_u64()
+        .ok_or(format!("field '{what}' must be an unsigned integer"))
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64, String> {
+    need_u64(v.get(key).ok_or(format!("missing field '{key}'"))?, key)
+}
+
+fn field_str(v: &Json, key: &str) -> Result<String, String> {
+    need_str(v.get(key).ok_or(format!("missing field '{key}'"))?, key)
+}
+
+fn field_bool(v: &Json, key: &str) -> Result<bool, String> {
+    v.get(key)
+        .and_then(Json::as_bool)
+        .ok_or(format!("field '{key}' must be a bool"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_full() -> JobSpec {
+        let mut overrides = BTreeMap::new();
+        overrides.insert("num_cores".to_string(), "2".to_string());
+        overrides.insert("l2_latency".to_string(), "99".to_string());
+        JobSpec {
+            bench: Some("l2_lat".to_string()),
+            trace: None,
+            preset: "minimal".to_string(),
+            stat_mode: Some("exact".to_string()),
+            serialize: true,
+            sim_threads: Some(2),
+            overrides,
+            label: Some("wire".to_string()),
+            cycle_budget: Some(500),
+            priority: Priority::Batch,
+        }
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        let cases = vec![
+            Request::Hello { proto_version: PROTO_VERSION },
+            Request::Submit { spec: spec_full() },
+            Request::Submit { spec: JobSpec::bench("bench3") },
+            Request::Wait { job_id: 7 },
+            Request::TryWait { job_id: 8 },
+            Request::Cancel { job_id: 9 },
+            Request::Stream {
+                spec: JobSpec::bench("l2_lat"),
+                interval: 64,
+            },
+            Request::ServiceStats,
+            Request::Shutdown,
+        ];
+        for req in cases {
+            let line = req.to_json();
+            assert!(!line.contains('\n'), "framing broken: {line}");
+            let back = Request::parse(&line).unwrap();
+            assert_eq!(back, req, "round trip drifted for {line}");
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let doc = "{\"schema_version\":3,\"config\":\"x\",\
+                   \"total_cycles\":12}";
+        let cases = vec![
+            Response::HelloOk {
+                proto_version: PROTO_VERSION,
+                schema_version: 3,
+            },
+            Response::Submitted { job_id: 1, memo_hit: false },
+            Response::Submitted { job_id: 2, memo_hit: true },
+            Response::JobDone {
+                job_id: 1,
+                memo_hit: true,
+                doc: doc.to_string(),
+            },
+            Response::JobFailed {
+                job_id: 3,
+                kind: "cancelled".to_string(),
+                message: "job cancelled mid-run".to_string(),
+                cycles_at_stop: 41,
+                partial: Some(doc.to_string()),
+            },
+            Response::JobFailed {
+                job_id: 4,
+                kind: "unknown_bench".to_string(),
+                message: "unknown benchmark 'x'".to_string(),
+                cycles_at_stop: 0,
+                partial: None,
+            },
+            Response::Pending { job_id: 5 },
+            Response::CancelOk { job_id: 6 },
+            Response::Delta {
+                job_id: 7,
+                seq: 2,
+                cycles: 128,
+                delta_cycles: 64,
+                kernels_done: 1,
+                domains: vec![
+                    ("l2".to_string(),
+                     vec![("1".to_string(), 10),
+                          ("2".to_string(), 3)]),
+                    ("dram".to_string(),
+                     vec![("1".to_string(), 4)]),
+                ],
+            },
+            Response::Stats { doc: doc.to_string() },
+            Response::Goodbye { reason: "shutdown".to_string() },
+            Response::Error {
+                code: "proto_version".to_string(),
+                message: "server speaks v1".to_string(),
+            },
+        ];
+        for resp in cases {
+            let line = resp.to_json();
+            assert!(!line.contains('\n'), "framing broken: {line}");
+            let back = Response::parse(&line).unwrap();
+            assert_eq!(back, resp, "round trip drifted for {line}");
+        }
+    }
+
+    #[test]
+    fn embedded_documents_survive_byte_identically() {
+        // the byte-agreement contract at the proto layer: a doc
+        // spliced into job_done comes back out exactly
+        let mut session = SimBuilder::preset("minimal")
+            .bench("l2_lat")
+            .build()
+            .unwrap();
+        session.run_to_idle().unwrap();
+        let doc = session.snapshot().to_json();
+        let resp = Response::JobDone {
+            job_id: 1,
+            memo_hit: false,
+            doc: doc.clone(),
+        };
+        let Response::JobDone { doc: back, .. } =
+            Response::parse(&resp.to_json()).unwrap()
+        else {
+            panic!("wrong verb")
+        };
+        assert_eq!(back, doc, "embedded document bytes drifted");
+    }
+
+    #[test]
+    fn job_spec_resolves_like_the_cli() {
+        let spec = spec_full();
+        let cfg = spec.to_builder().build_config().unwrap();
+        assert_eq!(cfg.preset, "minimal");
+        assert_eq!(cfg.stat_mode,
+                   crate::stats::StatMode::AggregateExact);
+        assert!(cfg.serialize_streams);
+        assert_eq!(cfg.sim_threads, 2);
+        assert_eq!(cfg.num_cores, 2);
+        assert_eq!(cfg.l2_latency, 99);
+    }
+
+    #[test]
+    fn memo_identity_gates_on_bench_and_budget() {
+        assert_eq!(JobSpec::bench("l2_lat").memo_identity().as_deref(),
+                   Some("bench:l2_lat"));
+        // budgeted runs are prefixes — not cacheable
+        let budgeted = JobSpec {
+            cycle_budget: Some(10),
+            ..JobSpec::bench("l2_lat")
+        };
+        assert_eq!(budgeted.memo_identity(), None);
+        // trace files can change on disk — not cacheable
+        let traced = JobSpec {
+            bench: None,
+            trace: Some("/tmp/kernelslist.g".to_string()),
+            ..JobSpec::default()
+        };
+        assert_eq!(traced.memo_identity(), None);
+    }
+
+    #[test]
+    fn bad_requests_name_the_problem() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("{\"no_verb\":1}").is_err());
+        assert!(Request::parse("{\"verb\":\"bogus\"}")
+            .unwrap_err()
+            .contains("unknown verb"));
+        assert!(Request::parse("{\"verb\":\"wait\"}")
+            .unwrap_err()
+            .contains("job_id"));
+        let bad_lane = "{\"verb\":\"submit\",\"spec\":\
+                        {\"priority\":\"urgent\"}}";
+        assert!(Request::parse(bad_lane)
+            .unwrap_err()
+            .contains("priority"));
+    }
+}

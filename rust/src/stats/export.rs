@@ -27,11 +27,16 @@ use crate::StreamId;
 
 /// Version of the machine-readable result document. Bump on any
 /// top-level key addition/removal/retyping and update the committed
-/// golden key set (`rust/tests/golden/schema_v2_keys.txt`).
-pub const SCHEMA_VERSION: u32 = 2;
+/// golden key set (`rust/tests/golden/schema_v2_keys.txt`). v3 =
+/// the `service` section gained the priority-lane and cancellation
+/// counters (`interactive_jobs`/`batch_jobs`/`cancelled`) and the
+/// `server` section was introduced; the core result-document keys
+/// are unchanged from v2.
+pub const SCHEMA_VERSION: u32 = 3;
 
-/// Escape a JSON string value.
-fn esc(s: &str) -> String {
+/// Escape a JSON string value (shared with the `server::json` wire
+/// writer so both sides escape identically).
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -194,6 +199,10 @@ pub struct ServiceStats {
     pub queue_bound: u64,
     /// Jobs executed (successes and per-job failures alike).
     pub jobs_run: u64,
+    /// Jobs accepted on the interactive priority lane.
+    pub interactive_jobs: u64,
+    /// Jobs accepted on the batch priority lane.
+    pub batch_jobs: u64,
     /// Jobs served by recycling a warm session.
     pub warm_hits: u64,
     /// Jobs that built a session from scratch.
@@ -202,7 +211,9 @@ pub struct ServiceStats {
     pub job_errors: u64,
     /// Jobs cancelled by their per-job cycle budget.
     pub budget_stops: u64,
-    /// `try_submit` calls rejected at the queue bound.
+    /// Jobs cancelled through their cancel token.
+    pub cancelled: u64,
+    /// `try_submit` calls rejected at their lane's queue bound.
     pub rejected_full: u64,
     /// Jobs queued right now (0 after a drain/shutdown).
     pub queue_depth: u64,
@@ -214,8 +225,9 @@ pub struct ServiceStats {
 /// golden-file contract ([`ServiceStats::to_json`] emits exactly
 /// these).
 pub const SERVICE_SECTION_KEYS: &[&str] = &[
-    "threads", "queue_bound", "jobs_run", "warm_hits", "cold_builds",
-    "job_errors", "budget_stops", "rejected_full", "queue_depth",
+    "threads", "queue_bound", "jobs_run", "interactive_jobs",
+    "batch_jobs", "warm_hits", "cold_builds", "job_errors",
+    "budget_stops", "cancelled", "rejected_full", "queue_depth",
     "queue_peak",
 ];
 
@@ -225,13 +237,73 @@ impl ServiceStats {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"threads\":{},\"queue_bound\":{},\"jobs_run\":{},\
+             \"interactive_jobs\":{},\"batch_jobs\":{},\
              \"warm_hits\":{},\"cold_builds\":{},\"job_errors\":{},\
-             \"budget_stops\":{},\"rejected_full\":{},\
-             \"queue_depth\":{},\"queue_peak\":{}}}",
+             \"budget_stops\":{},\"cancelled\":{},\
+             \"rejected_full\":{},\"queue_depth\":{},\
+             \"queue_peak\":{}}}",
             self.threads, self.queue_bound, self.jobs_run,
-            self.warm_hits, self.cold_builds, self.job_errors,
-            self.budget_stops, self.rejected_full, self.queue_depth,
+            self.interactive_jobs, self.batch_jobs, self.warm_hits,
+            self.cold_builds, self.job_errors, self.budget_stops,
+            self.cancelled, self.rejected_full, self.queue_depth,
             self.queue_peak)
+    }
+}
+
+/// Aggregate counters of a [`crate::server::SimServer`], serialized
+/// as the `server` section of the CLI `serve` stats-JSON document —
+/// the network-layer counterpart of [`ServiceStats`], key-golden'd
+/// the same way (`rust/tests/golden/schema_server_keys.txt`,
+/// `scripts/ci.sh api`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Protocol version the server speaks.
+    pub proto_version: u64,
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+    /// Protocol requests handled (all verbs).
+    pub requests: u64,
+    /// `submit` requests accepted (memo hits included).
+    pub submits: u64,
+    /// `wait`/`try_wait` requests handled.
+    pub waits: u64,
+    /// `cancel` requests handled.
+    pub cancels: u64,
+    /// `stream` requests handled.
+    pub streams: u64,
+    /// Delta frames emitted by `stream` requests.
+    pub deltas_sent: u64,
+    /// `submit` requests answered from the memo cache.
+    pub memo_hits: u64,
+    /// Memoizable `submit` requests that missed the cache.
+    pub memo_misses: u64,
+    /// Lines that failed to parse as a protocol request.
+    pub proto_errors: u64,
+}
+
+/// Keys of the `server` JSON section, in document order — the
+/// golden-file contract ([`ServerStats::to_json`] emits exactly
+/// these).
+pub const SERVER_SECTION_KEYS: &[&str] = &[
+    "proto_version", "connections", "requests", "submits", "waits",
+    "cancels", "streams", "deltas_sent", "memo_hits", "memo_misses",
+    "proto_errors",
+];
+
+impl ServerStats {
+    /// The `server` section object (field order pinned by
+    /// [`SERVER_SECTION_KEYS`]).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"proto_version\":{},\"connections\":{},\
+             \"requests\":{},\"submits\":{},\"waits\":{},\
+             \"cancels\":{},\"streams\":{},\"deltas_sent\":{},\
+             \"memo_hits\":{},\"memo_misses\":{},\
+             \"proto_errors\":{}}}",
+            self.proto_version, self.connections, self.requests,
+            self.submits, self.waits, self.cancels, self.streams,
+            self.deltas_sent, self.memo_hits, self.memo_misses,
+            self.proto_errors)
     }
 }
 
@@ -421,10 +493,13 @@ mod tests {
             threads: 2,
             queue_bound: 8,
             jobs_run: 5,
+            interactive_jobs: 2,
+            batch_jobs: 3,
             warm_hits: 3,
             cold_builds: 2,
             job_errors: 1,
             budget_stops: 1,
+            cancelled: 1,
             rejected_full: 4,
             queue_depth: 0,
             queue_peak: 6,
@@ -435,7 +510,34 @@ mod tests {
                    SERVICE_SECTION_KEYS.iter().map(|s| s.to_string())
                        .collect::<Vec<_>>());
         assert!(json.contains("\"warm_hits\":3"), "{json}");
+        assert!(json.contains("\"interactive_jobs\":2"), "{json}");
+        assert!(json.contains("\"cancelled\":1"), "{json}");
         assert!(json.contains("\"queue_peak\":6"), "{json}");
+    }
+
+    #[test]
+    fn server_section_matches_its_key_contract() {
+        let stats = ServerStats {
+            proto_version: 1,
+            connections: 3,
+            requests: 12,
+            submits: 4,
+            waits: 4,
+            cancels: 1,
+            streams: 1,
+            deltas_sent: 9,
+            memo_hits: 2,
+            memo_misses: 2,
+            proto_errors: 0,
+        };
+        let json = stats.to_json();
+        let keys = top_level_keys(&json);
+        assert_eq!(keys,
+                   SERVER_SECTION_KEYS.iter().map(|s| s.to_string())
+                       .collect::<Vec<_>>());
+        assert!(json.contains("\"proto_version\":1"), "{json}");
+        assert!(json.contains("\"deltas_sent\":9"), "{json}");
+        assert!(json.contains("\"memo_hits\":2"), "{json}");
     }
 
     #[test]

@@ -4,9 +4,10 @@
 //! backpressure, shutdown-under-load draining, and the `service`
 //! stats-JSON section's key golden.
 
-use streamsim::api::{top_level_keys, BatchRunner, ServiceError,
-                     SimBuilder, SimJob, SimService, StatMode,
-                     SCHEMA_VERSION, SERVICE_SECTION_KEYS};
+use streamsim::api::{top_level_keys, BatchRunner, Priority,
+                     ServiceError, SimBuilder, SimJob, SimService,
+                     StatMode, SCHEMA_VERSION,
+                     SERVICE_SECTION_KEYS};
 
 fn scenario(sim_threads: u32, mode: StatMode) -> SimBuilder {
     SimBuilder::preset("sm7_titanv_mini")
@@ -73,7 +74,10 @@ fn queue_full_fires_at_the_configured_bound() {
         .try_submit(job())
         .err()
         .expect("the submission past the bound must be rejected");
-    assert_eq!(err, ServiceError::QueueFull { capacity: 3 });
+    assert_eq!(err, ServiceError::QueueFull {
+        lane: Priority::Batch,
+        capacity: 3,
+    });
     service.resume();
     // blocking submit rides out the backpressure instead
     let extra = service.submit(job()).unwrap();

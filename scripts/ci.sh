@@ -13,15 +13,27 @@
 #   scripts/ci.sh api          # + build all examples (the facade's
 #                              #   consumers) and run the JSON-schema
 #                              #   drift checks against the committed
-#                              #   tests/golden/schema_v2_keys.txt and
+#                              #   tests/golden/schema_v2_keys.txt,
 #                              #   tests/golden/schema_service_keys.txt
 #                              #   (the batch document's 'service'
-#                              #   section)
+#                              #   section) and
+#                              #   tests/golden/schema_server_keys.txt
+#                              #   (the serve document's 'server'
+#                              #   section, via the stdio transport)
 #   scripts/ci.sh service      # + the service test group by name and
 #                              #   a 50-job smoke batch through the
 #                              #   CLI 'batch' serve path (warm reuse,
 #                              #   bounded queue, per-job isolation,
-#                              #   one deliberately failing job)
+#                              #   one deliberately failing job — the
+#                              #   batch must exit NONZERO and print
+#                              #   the per-kind failure tally)
+#   scripts/ci.sh serve        # + the server test group, then a live
+#                              #   wire smoke: 'serve --port 0' driven
+#                              #   by python/serve_client.py through
+#                              #   hello/submit/wait/cancel/memo/
+#                              #   stream/service_stats/shutdown, with
+#                              #   the wire document byte-compared to
+#                              #   a direct CLI run
 #   scripts/ci.sh bench        # + record BENCH_stats.json (fast mode):
 #                              #   seq-vs-parallel throughput, the
 #                              #   central-vs-sharded icnt exchange
@@ -140,6 +152,28 @@ if got != want:
     sys.exit(1)
 print("service section key set matches the committed golden")
 EOF
+
+    echo "== api: 'server' section drift check (serve --stdio) =="
+    printf '%s\n%s\n' \
+        '{"verb":"hello","proto_version":1}' \
+        '{"verb":"shutdown"}' \
+        | "$BIN" serve --stdio --stats-json "$TMP/serve.json" \
+        > /dev/null
+    python3 - "$TMP/serve.json" tests/golden/schema_server_keys.txt \
+        <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+got = (["schema_version=%d" % doc["schema_version"]]
+       + list(doc["server"].keys()))
+want = open(sys.argv[2]).read().split()
+if got != want:
+    print("SERVER SECTION DRIFT (rebless "
+          "tests/golden/schema_server_keys.txt for intended changes)")
+    print(" got:", got)
+    print("want:", want)
+    sys.exit(1)
+print("server section key set matches the committed golden")
+EOF
 fi
 
 if [[ "${1:-}" == "service" ]]; then
@@ -161,11 +195,26 @@ if [[ "${1:-}" == "service" ]]; then
         echo "--bench bench3 --preset minimal"
         echo "--bench no_such_bench --preset minimal"
     } > "$TMP/jobs.txt"
-    "$BIN" batch --jobs "$TMP/jobs.txt" --threads 4 --queue 8 \
-        --stats-json "$TMP/batch.json" > "$TMP/batch.out"
+    # one job fails, so the batch must exit NONZERO (the satellite
+    # bugfix this smoke gates on); the full report — per-job lines,
+    # failure tally, document — rides in the error output
+    if "$BIN" batch --jobs "$TMP/jobs.txt" --threads 4 --queue 8 \
+        --stats-json "$TMP/batch.json" > "$TMP/batch.out" 2>&1; then
+        echo "SERVICE SMOKE FAILURE: a batch with a failing job" \
+             "exited zero"
+        exit 1
+    fi
     cat "$TMP/batch.out"
     grep -q 'service: jobs=50 ok=49 err=1' "$TMP/batch.out" || {
         echo "SERVICE SMOKE FAILURE: unexpected job tally"
+        exit 1
+    }
+    grep -q 'failures: unknown_bench=1' "$TMP/batch.out" || {
+        echo "SERVICE SMOKE FAILURE: missing per-kind failure tally"
+        exit 1
+    }
+    grep -q 'batch failed: 1 of 50 jobs failed' "$TMP/batch.out" || {
+        echo "SERVICE SMOKE FAILURE: missing nonzero-exit summary"
         exit 1
     }
     python3 - "$TMP/batch.json" <<'EOF'
@@ -188,6 +237,57 @@ for label in ("tip", "exact"):
                   if j["config"] == label)
     assert max(cyc.values()) == 24, (label, cyc)
 print("service smoke OK: 50 jobs, 1 isolated failure, warm reuse hit")
+EOF
+fi
+
+if [[ "${1:-}" == "serve" ]]; then
+    echo "== serve: server test group =="
+    cargo test -q --test server
+    cargo test -q server:: --lib
+
+    echo "== serve: live wire smoke via python/serve_client.py =="
+    BIN=target/release/streamsim
+    TMP="$(mktemp -d)"
+    SERVER_PID=""
+    trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -rf "$TMP"' EXIT
+    # reference document: a direct CLI run of the scenario the
+    # client submits — the wire bytes must agree with these
+    "$BIN" run --bench l2_lat --preset minimal \
+        --stats-json "$TMP/direct.json" > /dev/null
+    # ephemeral port; --threads 1 makes the client's cancel target
+    # deterministically queued behind its busy job
+    "$BIN" serve --port 0 --threads 1 \
+        --stats-json "$TMP/serve_stats.json" > "$TMP/serve.out" &
+    SERVER_PID=$!
+    for _ in $(seq 1 100); do
+        grep -q 'listening on' "$TMP/serve.out" 2>/dev/null && break
+        sleep 0.1
+    done
+    PORT="$(sed -n \
+        's/^listening on 127\.0\.0\.1:\([0-9]*\)$/\1/p' \
+        "$TMP/serve.out")"
+    if [[ -z "$PORT" ]]; then
+        echo "SERVE SMOKE FAILURE: server never reported its port"
+        exit 1
+    fi
+    python3 "$ROOT/python/serve_client.py" "$PORT" \
+        --expect-doc "$TMP/direct.json"
+    # the client's shutdown drains the server; serve exits zero and
+    # writes the final stats document
+    wait "$SERVER_PID"
+    SERVER_PID=""
+    python3 - "$TMP/serve_stats.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+srv, svc = doc["server"], doc["service"]
+assert srv["connections"] == 1, srv
+assert srv["memo_hits"] == 1, srv
+assert srv["memo_misses"] == 3, srv
+assert srv["streams"] == 1 and srv["deltas_sent"] >= 1, srv
+assert srv["proto_errors"] == 0, srv
+assert svc["cancelled"] == 1, svc
+print("serve smoke OK: wire byte-agreement, memo hit, stream "
+      "deltas, cancel, graceful drain")
 EOF
 fi
 
