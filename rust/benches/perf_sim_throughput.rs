@@ -29,12 +29,20 @@ fn sim_once_exchange(bench: &str, preset: &str, mode: StatMode,
 fn sim_once_idle(bench: &str, preset: &str, mode: StatMode,
                  threads: u32, sharded: bool, idle_skip: bool)
     -> (u64, u64) {
+    sim_once_ff(bench, preset, mode, threads, sharded, idle_skip,
+                true)
+}
+
+fn sim_once_ff(bench: &str, preset: &str, mode: StatMode,
+               threads: u32, sharded: bool, idle_skip: bool,
+               fast_forward: bool) -> (u64, u64) {
     let g = workloads::generate(bench).unwrap();
     let mut cfg = SimConfig::preset(preset).unwrap();
     cfg.stat_mode = mode;
     cfg.sim_threads = threads;
     cfg.icnt_sharded = sharded;
     cfg.idle_skip = idle_skip;
+    cfg.fast_forward = fast_forward;
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(&g.workload).unwrap();
     sim.run().unwrap();
@@ -154,7 +162,32 @@ fn main() {
     b6.report("PERF-L3: always-tick vs idle-aware active set (items = \
                GPU cycles)");
 
+    // the PR-9 before/after: always-tick (fast_forward=0) vs
+    // event-horizon clock jumps (fast_forward=1, the default). Same
+    // stats byte for byte (determinism suite); only the wall clock
+    // moves. idle_tail is again the adversarial scenario — its
+    // straggler tail is one long provably-quiet stretch the jump
+    // loop crosses in a handful of iterations.
+    let mut b7 = Bencher::from_env();
+    for &(ff, label) in &[(false, "off"), (true, "on")] {
+        for bench in [bench1, "bench3", idle_tail] {
+            for threads in [1u32, 4, 8] {
+                b7.bench(&format!(
+                    "{bench}/sm7_titanv t={threads} \
+                     fast_forward={label}"),
+                    || {
+                    sim_once_ff(bench, "sm7_titanv",
+                                StatMode::PerStream, threads, true,
+                                true, ff).0
+                });
+            }
+        }
+    }
+    b7.report("PERF-L3: always-tick vs event-horizon fast-forward \
+               (items = GPU cycles)");
+
     write_json(&[("cycles", &b), ("accesses_by_mode", &b2),
                  ("titanv_full", &b3), ("parallel", &b4),
-                 ("sharded_icnt", &b5), ("idle_skip", &b6)]);
+                 ("sharded_icnt", &b5), ("idle_skip", &b6),
+                 ("fast_forward", &b7)]);
 }

@@ -16,6 +16,36 @@
 //! while `busy()` is false (e.g. undrained outbound buffers mid-phase),
 //! but never the reverse — sleeping a busy component would skip real
 //! work.
+//!
+//! # The event-horizon (`next_event_in`) contract
+//!
+//! The `Activity` summary answers "could the next tick do work?";
+//! the fast-forward jump (`fast_forward`, see [`crate::sim::parallel`])
+//! needs the stronger question "how many ticks are *provably* no-ops?"
+//! Every tickable component therefore also implements
+//!
+//! ```text
+//! next_event_in(&self, now: Cycle) -> Cycle
+//! ```
+//!
+//! returning `h >= 1` such that ticks at cycles `now+1 ..= now+h-1`
+//! are guaranteed no-ops and the component can next change state at
+//! `now + h`; `Cycle::MAX` when only an external input (a delivered
+//! fetch, a dispatched TB) can create work — such inputs are produced
+//! by some *other* component whose own horizon (or wake edge) bounds
+//! the jump. The bound must be **conservative** (under-estimating `h`
+//! costs a wasted tick, never correctness) and **exact on the jump
+//! range**: for any `1 <= j <= h`, jumping the clock by `j` and
+//! ticking once at `now + j` must leave the component byte-identical
+//! to ticking it at each of `now+1, ..., now+j`. Absolute-cycle
+//! timestamps (DRAM ready cycles, `DelayQueue` heads, `busy_until`
+//! stamps, `FlitSchedule` arrival cycles) make this hold for free —
+//! a jump is just `now += j`, no timer is rewritten. A
+//! ready-but-rate-capped head (DRAM `per_cycle`, flit budgets) pins
+//! `h = 1`: it must be serviced next cycle. The contract is pinned by
+//! the proptest in `tests/activity.rs`; `Activity::is_idle` and
+//! `next_event_in` relate as `is_idle() ⇒ next_event_in() == MAX` for
+//! settled (between-cycle) component states.
 
 /// Snapshot of everything that could make a component's next tick a
 /// non-no-op. All-zero means the tick would be a no-op.

@@ -672,7 +672,12 @@ fn run_managed(
                 });
             }
         }
-        session.step()?;
+        // clamp fast-forward jumps at the budget ceiling so a
+        // budget stop lands on exactly `stop`, never past it
+        match stop_at {
+            Some(stop) => session.step_until(stop)?,
+            None => session.step()?,
+        }
     }
     Ok(())
 }

@@ -136,6 +136,15 @@ impl SimBuilder {
         self.set("idle_skip", if on { "1" } else { "0" })
     }
 
+    /// Event-horizon fast-forward in the clock loop (default on):
+    /// when every component proves the next `k - 1` cycles quiet, the
+    /// clock jumps by `k` in one step. `false` ticks every cycle —
+    /// the measured baseline; results are byte-identical either way
+    /// (pinned by the determinism suite).
+    pub fn fast_forward(self, on: bool) -> Self {
+        self.set("fast_forward", if on { "1" } else { "0" })
+    }
+
     /// One `-key value` override (applied after preset, config file
     /// and the typed knobs, in key order — the CLI's semantics).
     pub fn set(mut self, key: &str, value: &str) -> Self {
@@ -415,12 +424,33 @@ impl SimSession {
     }
 
     /// One clock tick (inline, sequential execution of the phased
-    /// loop).
+    /// loop). With `fast_forward` the tick may cover several cycles;
+    /// use [`SimSession::step_until`] when an exact cycle boundary
+    /// must be observed.
     pub fn step(&mut self) -> Result<(), ApiError> {
         match self.sim.step() {
             Ok(()) => Ok(()),
             Err(e) => Err(self.enrich(ApiError::from_run(e))),
         }
+    }
+
+    /// One clock tick whose fast-forward jump (if any) is clamped so
+    /// [`SimSession::cycle`] never passes `ceiling` — the server
+    /// `stream` verb uses this to land delta frames on their exact
+    /// interval cycle. Always advances by at least one cycle.
+    pub fn step_until(&mut self, ceiling: Cycle)
+        -> Result<(), ApiError> {
+        match self.sim.step_until(ceiling) {
+            Ok(()) => Ok(()),
+            Err(e) => Err(self.enrich(ApiError::from_run(e))),
+        }
+    }
+
+    /// The fast-forward counters accumulated so far (loop iterations,
+    /// jumps, skipped cycles, jump-length histogram). Not part of any
+    /// exported stats document.
+    pub fn jump_stats(&self) -> &crate::sim::profile::JumpStats {
+        self.sim.jump_stats()
     }
 
     /// Step until at least `n` kernels have retired (the kernel-exit

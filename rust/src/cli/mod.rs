@@ -176,6 +176,9 @@ pub struct ServeArgs {
     pub queue: usize,
     /// Memo-cache capacity in documents (`--memo`; 0 disables).
     pub memo: usize,
+    /// Memo-cache bound on total cached document bytes
+    /// (`--memo-bytes`; 0 disables caching).
+    pub memo_bytes: usize,
     /// Write the final `server`+`service` stats document after the
     /// drain (`--stats-json` / `--json`; `-` = stdout, TCP only).
     pub json: Option<PathBuf>,
@@ -189,6 +192,7 @@ impl Default for ServeArgs {
             threads: 2,
             queue: crate::api::DEFAULT_QUEUE_BOUND,
             memo: crate::server::memo::DEFAULT_MEMO_CAPACITY,
+            memo_bytes: crate::server::memo::DEFAULT_MEMO_BYTES,
             json: None,
         }
     }
@@ -242,10 +246,11 @@ pub const COMMANDS: &[CommandSpec] = &[
             FlagSpec { flags: "-o", value: "KEY VALUE",
                        help: "single config override (repeatable); \
                               notably '-o idle_skip 0' disables the \
-                              idle-aware active-set scheduling \
-                              (default 1; stats byte-identical either \
-                              way — 0 is the measured always-tick \
-                              baseline)" },
+                              idle-aware active-set scheduling and \
+                              '-o fast_forward 0' the event-horizon \
+                              multi-cycle clock jumps (both default \
+                              1; stats byte-identical either way — 0 \
+                              is the measured always-tick baseline)" },
             FlagSpec { flags: "--timeline", value: "",
                        help: "append the per-stream kernel gantt" },
             FlagSpec { flags: "--power", value: "",
@@ -257,7 +262,8 @@ pub const COMMANDS: &[CommandSpec] = &[
                        help: "write the versioned result document \
                               ('-' = stdout)" },
             FlagSpec { flags: "--verbose", value: "",
-                       help: "echo kernel launch/exit lines" },
+                       help: "echo kernel launch/exit lines and the \
+                              fast-forward jump histogram" },
         ],
     },
     CommandSpec {
@@ -289,7 +295,7 @@ pub const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "serve",
         synopsis: "--port N | --stdio [--threads N] [--queue N] \
-                   [--memo N] [FLAGS]",
+                   [--memo N] [--memo-bytes N] [FLAGS]",
         about: "Serve the wire protocol over TCP or stdio (see \
                 module docs for the verb set)",
         flags: &[
@@ -311,6 +317,10 @@ pub const COMMANDS: &[CommandSpec] = &[
             FlagSpec { flags: "--memo", value: "N",
                        help: "result memo-cache capacity in \
                               documents (0 disables caching)" },
+            FlagSpec { flags: "--memo-bytes", value: "N",
+                       help: "result memo-cache bound on total \
+                              cached document bytes (0 disables \
+                              caching)" },
             FlagSpec { flags: "--stats-json | --json", value: "PATH",
                        help: "write the final server+service stats \
                               document after the drain ('-' = \
@@ -594,6 +604,13 @@ pub fn parse(args: &[String]) -> Result<Command> {
                             .context("--memo must be an unsigned \
                                       integer")?;
                     }
+                    "--memo-bytes" => {
+                        a.memo_bytes =
+                            next_val("--memo-bytes", &mut it)?
+                                .parse()
+                                .context("--memo-bytes must be an \
+                                          unsigned integer")?;
+                    }
                     "--stats-json" | "--json" => {
                         a.json = Some(
                             next_val(flag.as_str(), &mut it)?.into());
@@ -719,6 +736,15 @@ pub fn execute(cmd: Command) -> Result<String> {
                 Err(e) => return Err(e.into()),
             };
             let summary = session.config().summary();
+            // fast-forward jump counters live on the session, not
+            // in the exported stats (byte-identity) — read them
+            // before the snapshot move
+            let jump_table = if a.verbose {
+                crate::sim::profile::render_jump_table(
+                    session.jump_stats())
+            } else {
+                None
+            };
             // finished — move the stats out instead of cloning them
             let snap = session.into_snapshot();
             let mut out = String::new();
@@ -759,6 +785,9 @@ pub fn execute(cmd: Command) -> Result<String> {
             if let Some(table) =
                 crate::sim::profile::render_table(snap.profile())
             {
+                out.push_str(&table);
+            }
+            if let Some(table) = jump_table {
                 out.push_str(&table);
             }
             let mut stdout_docs = 0u32;
@@ -876,6 +905,7 @@ fn execute_serve(a: &ServeArgs) -> Result<String> {
         threads: a.threads,
         queue_bound: a.queue,
         memo_capacity: a.memo,
+        memo_bytes: a.memo_bytes,
     };
     if a.stdio
         && a.json.as_deref()
@@ -1432,6 +1462,7 @@ mod tests {
     fn parses_serve_flags() {
         let cmd = parse(&sv(&["serve", "--port", "0", "--threads",
                               "3", "--queue", "5", "--memo", "8",
+                              "--memo-bytes", "4096",
                               "--stats-json", "/tmp/s.json"]))
             .unwrap();
         let Command::Serve(a) = cmd else { panic!("{cmd:?}") };
@@ -1440,10 +1471,13 @@ mod tests {
         assert_eq!(a.threads, 3);
         assert_eq!(a.queue, 5);
         assert_eq!(a.memo, 8);
+        assert_eq!(a.memo_bytes, 4096);
         assert_eq!(a.json, Some(PathBuf::from("/tmp/s.json")));
         let cmd = parse(&sv(&["serve", "--stdio"])).unwrap();
         let Command::Serve(a) = cmd else { panic!("{cmd:?}") };
         assert!(a.stdio);
+        assert_eq!(a.memo_bytes,
+                   crate::server::memo::DEFAULT_MEMO_BYTES);
         // exactly one transport must be chosen
         assert!(parse(&sv(&["serve"])).is_err());
         assert!(parse(&sv(&["serve", "--port", "0", "--stdio"]))

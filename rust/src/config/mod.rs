@@ -84,6 +84,16 @@ pub struct SimConfig {
     /// ticks every component every cycle — kept as the measured
     /// "before" baseline, like `icnt_sharded`.
     pub idle_skip: bool,
+    /// Event-horizon fast-forward (default): every tickable component
+    /// reports a conservative `next_event_in(now)` lower bound; when
+    /// the global minimum horizon is `k > 1` the clock loop advances
+    /// by `k` in one step instead of ticking through `k - 1`
+    /// provably-quiet cycles. Jumps are clamped at `max_cycles`,
+    /// external step ceilings (server `stream` delta boundaries,
+    /// cycle budgets) and kernel-exit merge points, so stats stay
+    /// byte-identical to the always-tick loop. `0` ticks every cycle
+    /// — kept as the measured "before" baseline, like `idle_skip`.
+    pub fast_forward: bool,
     /// DRAM access latency on top of L2 miss (cycles).
     pub dram_latency: u32,
     /// DRAM serviced requests per partition per cycle (throughput cap).
@@ -183,6 +193,7 @@ impl SimConfig {
             }
             "icnt_sharded" => self.icnt_sharded = b(val)?,
             "idle_skip" => self.idle_skip = b(val)?,
+            "fast_forward" => self.fast_forward = b(val)?,
             "dram_latency" => self.dram_latency = val.parse()?,
             "dram_per_cycle" => self.dram_per_cycle = val.parse()?,
             "max_cycles" => self.max_cycles = val.parse()?,
@@ -251,7 +262,7 @@ impl SimConfig {
         format!(
             "preset={} cores={} l2_parts={} concurrent_kernel_sm={} \
              serialize_streams={} stat_mode={} sim_threads={} icnt={} \
-             idle_skip={} l1d={} l2_capacity={}KiB",
+             idle_skip={} fast_forward={} l1d={} l2_capacity={}KiB",
             self.preset,
             self.num_cores,
             self.num_l2_partitions,
@@ -265,6 +276,7 @@ impl SimConfig {
             },
             if self.icnt_sharded { "sharded" } else { "central" },
             self.idle_skip as u8,
+            self.fast_forward as u8,
             self.l1d.as_ref().map_or("none".into(),
                 |c| format!("{}KiB", c.capacity() / 1024)),
             self.l2.capacity() * self.num_l2_partitions as u64 / 1024,
@@ -332,6 +344,7 @@ pub mod presets {
             icnt_flit_per_cycle: 32,
             icnt_sharded: true,
             idle_skip: true,
+            fast_forward: true,
             dram_latency: 160,
             dram_per_cycle: 2,
             max_cycles: 200_000_000,
@@ -484,6 +497,22 @@ l2_latency 99   # trailing comment
         assert!(c.summary().contains("idle_skip=0"));
         assert!(c.apply_overrides(&parse_config_text(
             "-idle_skip maybe\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn fast_forward_knob_defaults_on_and_overrides() {
+        for name in PRESETS {
+            assert!(SimConfig::preset(name).unwrap().fast_forward,
+                    "{name}: event-horizon jumps must be the default");
+        }
+        let mut c = SimConfig::default();
+        assert!(c.summary().contains("fast_forward=1"));
+        let kv = parse_config_text("-fast_forward 0\n").unwrap();
+        c.apply_overrides(&kv).unwrap();
+        assert!(!c.fast_forward);
+        assert!(c.summary().contains("fast_forward=0"));
+        assert!(c.apply_overrides(&parse_config_text(
+            "-fast_forward maybe\n").unwrap()).is_err());
     }
 
     #[test]

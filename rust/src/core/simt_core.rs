@@ -424,6 +424,49 @@ impl SimtCore {
             || self.l1.as_ref().is_some_and(|l1| l1.mshr_len() > 0)
     }
 
+    /// Event-horizon lower bound (the fast-forward contract, see
+    /// [`crate::activity`]): ticks at `now+1 ..= now + h - 1` are
+    /// guaranteed no-ops. Queued LDST transactions, undrained
+    /// outbound fetches and unretired TB notifications pin the
+    /// horizon to 1; otherwise it is the earliest of the hit-queue
+    /// head ready cycle and the soonest `busy_until` among warps
+    /// that are neither load-blocked nor finished. Load-blocked
+    /// warps (`pending_loads > 0`) contribute nothing: their wake is
+    /// a response delivery, and the response is in flight somewhere
+    /// whose own horizon (icnt/partition/exchange) bounds the jump.
+    /// A fully-finished resident TB pins the horizon to 1 — its
+    /// retirement is the next tick's work.
+    pub fn next_event_in(&self, now: Cycle) -> Cycle {
+        if !self.ldst_queue.is_empty()
+            || !self.to_icnt.is_empty()
+            || !self.finished.is_empty()
+        {
+            return 1;
+        }
+        let mut h = self
+            .hit_queue
+            .next_ready()
+            .map_or(Cycle::MAX, |r| r.saturating_sub(now).max(1));
+        for tb in self.slots.iter().flatten() {
+            let mut tb_done = true;
+            for w in &tb.warps {
+                if w.pending_loads > 0 {
+                    tb_done = false;
+                    continue;
+                }
+                if w.ops.is_empty() {
+                    continue;
+                }
+                tb_done = false;
+                h = h.min(w.busy_until.saturating_sub(now).max(1));
+            }
+            if tb_done {
+                return 1;
+            }
+        }
+        h
+    }
+
     /// Cheap activity summary for the idle-skip active set.
     /// `activity().is_idle()` is exactly `!self.busy()` (every `busy`
     /// term maps to a field; pinned by `tests/activity.rs`), and an

@@ -91,6 +91,21 @@ impl Dram {
         self.queue.len()
     }
 
+    /// Event-horizon lower bound (the fast-forward contract, see
+    /// [`crate::activity`]): ticks at `now+1 ..= now + h - 1` are
+    /// guaranteed no-ops; the channel can next service a request at
+    /// `now + h`. FCFS makes this exact: the head-of-queue ready
+    /// cycle *is* the next event (a ready-but-rate-capped head
+    /// returns 1 — it must be serviced next cycle).
+    /// [`Cycle::MAX`] when the queue is empty (event-driven: only a
+    /// `push` can create work, and pushes wake the owner).
+    pub fn next_event_in(&self, now: Cycle) -> Cycle {
+        match self.queue.front() {
+            None => Cycle::MAX,
+            Some((ready, _)) => (*ready).saturating_sub(now).max(1),
+        }
+    }
+
     /// Warm-session reuse: drop queued requests and zero the local
     /// traffic totals — exactly the post-construction state
     /// (`latency`/`per_cycle` are config, untouched).

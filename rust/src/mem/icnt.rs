@@ -63,6 +63,12 @@ impl<T> DelayQueue<T> {
         }
     }
 
+    /// Ready cycle of the head entry, if any — the queue's next
+    /// event. FIFO + constant latency make the head the earliest.
+    pub fn next_ready(&self) -> Option<Cycle> {
+        self.q.front().map(|(ready, _)| *ready)
+    }
+
     /// Entries in flight.
     pub fn len(&self) -> usize {
         self.q.len()
@@ -177,6 +183,20 @@ impl FlitSchedule {
     /// Anything still inside the crossbar?
     pub fn busy(&self) -> bool {
         self.in_flight() > 0
+    }
+
+    /// Event-horizon lower bound (the fast-forward contract, see
+    /// [`crate::activity`]): drain calls at `now+1 ..= now + h - 1`
+    /// cannot move the horizon; the earliest arrival batch becomes
+    /// ready at `now + h`. A batch already ready (budget-capped
+    /// leftover) returns 1. [`Cycle::MAX`] with nothing in flight —
+    /// new publishes only come from active producers, whose own
+    /// horizons bound the jump.
+    pub fn next_event_in(&self, now: Cycle) -> Cycle {
+        match self.arrivals.front() {
+            None => Cycle::MAX,
+            Some((ready, _)) => (*ready).saturating_sub(now).max(1),
+        }
     }
 }
 
@@ -311,6 +331,23 @@ impl Icnt {
     /// Anything still in flight?
     pub fn busy(&self) -> bool {
         !self.to_mem.is_empty() || !self.to_core.is_empty()
+    }
+
+    /// Event-horizon lower bound over both directions (the
+    /// fast-forward contract, see [`crate::activity`]): the earliest
+    /// head-of-queue ready cycle, as an offset from `now` (min 1);
+    /// [`Cycle::MAX`] when both directions are empty.
+    pub fn next_event_in(&self, now: Cycle) -> Cycle {
+        let h = self
+            .to_mem
+            .next_ready()
+            .unwrap_or(Cycle::MAX)
+            .min(self.to_core.next_ready().unwrap_or(Cycle::MAX));
+        if h == Cycle::MAX {
+            Cycle::MAX
+        } else {
+            h.saturating_sub(now).max(1)
+        }
     }
 }
 

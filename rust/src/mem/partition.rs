@@ -186,6 +186,31 @@ impl MemPartition {
         &self.dram.stats
     }
 
+    /// Event-horizon lower bound (the fast-forward contract, see
+    /// [`crate::activity`]): ticks at `now+1 ..= now + h - 1` are
+    /// guaranteed no-ops. Queued probes, replays, undrained miss
+    /// traffic and undrained responses pin the horizon to 1 (any of
+    /// them can act — or must be exchanged — next cycle); otherwise
+    /// the partition is purely waiting on timers, and the horizon is
+    /// the earlier of the DRAM head-of-queue ready cycle and the
+    /// hit-queue head ready cycle. MSHR entries with no DRAM traffic
+    /// in flight need no term of their own: the only fill source is
+    /// [`Dram::cycle_into`], so the DRAM term covers every release.
+    pub fn next_event_in(&self, now: Cycle) -> Cycle {
+        if !self.incoming.is_empty()
+            || !self.replay.is_empty()
+            || self.l2.miss_queue_len() > 0
+            || !self.outgoing.is_empty()
+        {
+            return 1;
+        }
+        self.dram.next_event_in(now).min(
+            self.hit_queue
+                .next_ready()
+                .map_or(Cycle::MAX,
+                        |r| r.saturating_sub(now).max(1)))
+    }
+
     /// Cheap activity summary for the idle-skip active set, folding in
     /// the DRAM channel's view. `activity().is_idle()` implies
     /// `!self.busy()` *and* no undrained outgoing responses — strictly

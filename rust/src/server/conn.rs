@@ -315,8 +315,12 @@ fn do_stream(
     let mut seq: u64 = 0;
     while !session.idle() {
         let target = session.cycle() + interval;
+        // clamp fast-forward jumps at the delta boundary (and the
+        // cycle budget, if nearer) so every interval frame is emitted
+        // on its exact cycle even across provably-quiet stretches
+        let ceiling = budget.map_or(target, |b| target.min(b));
         while !session.idle() && session.cycle() < target {
-            if let Err(e) = session.step() {
+            if let Err(e) = session.step_until(ceiling) {
                 let resp = final_response(ctx, job_id, None, Err(e));
                 return send(writer, &resp);
             }

@@ -16,6 +16,13 @@
 //! LRU over a small bounded list (scenario counts here are dozens,
 //! not millions; a `Vec` scan under the lock is simpler than an
 //! intrusive list and never the bottleneck next to a simulation).
+//!
+//! The cache is bounded **two ways**: by entry count (`capacity`) and
+//! by total cached document bytes (`max_bytes`, the `memo_bytes`
+//! server knob). The byte bound is what keeps a handful of huge
+//! 80-SM documents from pinning the whole cache while dozens of small
+//! scenarios thrash; eviction is LRU either way, and the counters
+//! split evictions into a count and the bytes they released.
 
 use std::sync::Mutex;
 
@@ -23,6 +30,10 @@ use crate::config::SimConfig;
 
 /// Default number of cached scenario results per server.
 pub const DEFAULT_MEMO_CAPACITY: usize = 32;
+
+/// Default total cached document bytes per server (16 MiB — roomy
+/// next to mini-preset documents, small next to the host).
+pub const DEFAULT_MEMO_BYTES: usize = 16 * 1024 * 1024;
 
 /// Cache key: resolved config + workload identity.
 pub type MemoKey = (SimConfig, String);
@@ -35,30 +46,48 @@ struct Entry {
 struct State {
     /// Most-recently-used last.
     entries: Vec<Entry>,
+    /// Sum of `doc.len()` over `entries`.
+    bytes: usize,
     hits: u64,
     misses: u64,
     evictions: u64,
+    evicted_bytes: u64,
 }
 
-/// Bounded LRU of `scenario → result document` (thread-safe).
+impl State {
+    /// Evict the LRU entry, crediting the eviction counters.
+    fn evict_front(&mut self) {
+        let victim = self.entries.remove(0);
+        self.bytes -= victim.doc.len();
+        self.evictions += 1;
+        self.evicted_bytes += victim.doc.len() as u64;
+    }
+}
+
+/// Bounded LRU of `scenario → result document` (thread-safe), capped
+/// by entry count **and** total document bytes.
 pub struct MemoCache {
     state: Mutex<State>,
     capacity: usize,
+    max_bytes: usize,
 }
 
 impl MemoCache {
-    /// An empty cache holding at most `capacity` documents.
-    /// `capacity == 0` disables caching (every probe is a miss and
-    /// nothing is stored).
-    pub fn new(capacity: usize) -> Self {
+    /// An empty cache holding at most `capacity` documents totalling
+    /// at most `max_bytes` bytes. Either limit at 0 disables caching
+    /// (every probe is a miss and nothing is stored).
+    pub fn new(capacity: usize, max_bytes: usize) -> Self {
         Self {
             state: Mutex::new(State {
                 entries: Vec::new(),
+                bytes: 0,
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                evicted_bytes: 0,
             }),
             capacity,
+            max_bytes,
         }
     }
 
@@ -81,35 +110,50 @@ impl MemoCache {
         }
     }
 
-    /// Record a finished scenario's document, evicting the
-    /// least-recently-used entry when full. Re-inserting an existing
-    /// key refreshes it (documents for the same key are identical by
-    /// construction — determinism is the premise of the cache).
+    /// Record a finished scenario's document, evicting
+    /// least-recently-used entries until both bounds hold.
+    /// Re-inserting an existing key refreshes it (documents for the
+    /// same key are identical by construction — determinism is the
+    /// premise of the cache). A document larger than `max_bytes` on
+    /// its own is never stored (it would evict everything and still
+    /// not fit).
     pub fn insert(&self, key: MemoKey, doc: String) {
-        if self.capacity == 0 {
+        if self.capacity == 0
+            || self.max_bytes == 0
+            || doc.len() > self.max_bytes
+        {
             return;
         }
         let mut st = self.state.lock().unwrap();
         if let Some(idx) =
             st.entries.iter().position(|e| e.key == key)
         {
-            st.entries.remove(idx);
-        } else if st.entries.len() >= self.capacity {
-            st.entries.remove(0);
-            st.evictions += 1;
+            let old = st.entries.remove(idx);
+            st.bytes -= old.doc.len();
         }
+        while st.entries.len() >= self.capacity
+            || st.bytes + doc.len() > self.max_bytes
+        {
+            st.evict_front();
+        }
+        st.bytes += doc.len();
         st.entries.push(Entry { key, doc });
     }
 
-    /// `(hits, misses, evictions)` since construction.
-    pub fn counters(&self) -> (u64, u64, u64) {
+    /// `(hits, misses, evictions, evicted_bytes)` since construction.
+    pub fn counters(&self) -> (u64, u64, u64, u64) {
         let st = self.state.lock().unwrap();
-        (st.hits, st.misses, st.evictions)
+        (st.hits, st.misses, st.evictions, st.evicted_bytes)
     }
 
     /// Entries currently held.
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().entries.len()
+    }
+
+    /// Total cached document bytes currently held.
+    pub fn bytes(&self) -> usize {
+        self.state.lock().unwrap().bytes
     }
 
     /// True when nothing is cached.
@@ -133,12 +177,12 @@ mod tests {
 
     #[test]
     fn hit_returns_the_exact_bytes_stored() {
-        let cache = MemoCache::new(4);
+        let cache = MemoCache::new(4, DEFAULT_MEMO_BYTES);
         assert_eq!(cache.get(&key(10)), None);
         cache.insert(key(10), "{\"doc\":1}".to_string());
         assert_eq!(cache.get(&key(10)).as_deref(),
                    Some("{\"doc\":1}"));
-        assert_eq!(cache.counters(), (1, 1, 0));
+        assert_eq!(cache.counters(), (1, 1, 0, 0));
     }
 
     #[test]
@@ -153,7 +197,7 @@ mod tests {
             .build_config()
             .unwrap();
         assert_eq!(base, spelled);
-        let cache = MemoCache::new(4);
+        let cache = MemoCache::new(4, DEFAULT_MEMO_BYTES);
         cache.insert((base, "bench:l2_lat".to_string()),
                      "cached".to_string());
         assert_eq!(
@@ -165,7 +209,7 @@ mod tests {
 
     #[test]
     fn distinct_workloads_do_not_collide() {
-        let cache = MemoCache::new(4);
+        let cache = MemoCache::new(4, DEFAULT_MEMO_BYTES);
         let cfg = SimBuilder::preset("minimal")
             .build_config()
             .unwrap();
@@ -178,7 +222,7 @@ mod tests {
 
     #[test]
     fn evicts_least_recently_used_at_capacity() {
-        let cache = MemoCache::new(2);
+        let cache = MemoCache::new(2, DEFAULT_MEMO_BYTES);
         cache.insert(key(10), "a".to_string());
         cache.insert(key(20), "b".to_string());
         // touch 10 so 20 becomes the LRU victim
@@ -188,15 +232,59 @@ mod tests {
         assert_eq!(cache.get(&key(20)), None, "LRU entry survived");
         assert_eq!(cache.get(&key(10)).as_deref(), Some("a"));
         assert_eq!(cache.get(&key(30)).as_deref(), Some("c"));
-        let (_, _, evictions) = cache.counters();
+        let (_, _, evictions, evicted_bytes) = cache.counters();
         assert_eq!(evictions, 1);
+        assert_eq!(evicted_bytes, 1, "\"b\" is one byte");
+    }
+
+    #[test]
+    fn byte_bound_evicts_before_entry_count_fills() {
+        // room for 10 entries by count but only 10 bytes total: three
+        // 4-byte documents can never coexist
+        let cache = MemoCache::new(10, 10);
+        cache.insert(key(10), "aaaa".to_string());
+        cache.insert(key(20), "bbbb".to_string());
+        assert_eq!(cache.bytes(), 8);
+        cache.insert(key(30), "cccc".to_string());
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.bytes(), 8);
+        assert_eq!(cache.get(&key(10)), None,
+                   "LRU victim of the byte bound");
+        let (_, _, evictions, evicted_bytes) = cache.counters();
+        assert_eq!((evictions, evicted_bytes), (1, 4));
+    }
+
+    #[test]
+    fn oversized_document_is_never_stored() {
+        let cache = MemoCache::new(4, 8);
+        cache.insert(key(10), "tiny".to_string());
+        // larger than max_bytes on its own: rejected, nothing evicted
+        cache.insert(key(20), "waaaay too big".to_string());
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.get(&key(20)), None);
+        assert_eq!(cache.get(&key(10)).as_deref(), Some("tiny"));
+        let (_, _, evictions, _) = cache.counters();
+        assert_eq!(evictions, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_bytes_not_duplicates() {
+        let cache = MemoCache::new(4, DEFAULT_MEMO_BYTES);
+        cache.insert(key(10), "aaaa".to_string());
+        cache.insert(key(10), "bb".to_string());
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.bytes(), 2);
+        assert_eq!(cache.get(&key(10)).as_deref(), Some("bb"));
     }
 
     #[test]
     fn zero_capacity_disables_the_cache() {
-        let cache = MemoCache::new(0);
-        cache.insert(key(10), "a".to_string());
-        assert!(cache.is_empty());
-        assert_eq!(cache.get(&key(10)), None);
+        for cache in [MemoCache::new(0, DEFAULT_MEMO_BYTES),
+                      MemoCache::new(4, 0)] {
+            cache.insert(key(10), "a".to_string());
+            assert!(cache.is_empty());
+            assert_eq!(cache.get(&key(10)), None);
+            assert_eq!(cache.bytes(), 0);
+        }
     }
 }

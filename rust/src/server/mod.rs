@@ -85,13 +85,15 @@
 //!
 //! The server keeps a bounded LRU cache ([`memo::MemoCache`]) of
 //! finished result documents keyed by **resolved** [`SimConfig`]
-//! plus workload identity. Only deterministic, replayable scenarios
-//! are eligible (built-in benchmark, no cycle budget — see
+//! plus workload identity, capped both by entry count (`--memo`)
+//! and by total cached document bytes (`--memo-bytes`). Only
+//! deterministic, replayable scenarios are eligible (built-in
+//! benchmark, no cycle budget — see
 //! [`proto::JobSpec::memo_identity`]). A hit is visible as
 //! `memo_hit: true` on `submitted` (and on the `job_done`), and the
 //! replayed `doc` is byte-identical to the cold run that populated
-//! the entry. Hit/miss/eviction counts surface in the `server`
-//! stats section.
+//! the entry. Hit/miss counts and the eviction count/bytes split
+//! surface in the `server` stats section.
 //!
 //! # Graceful drain
 //!
@@ -118,7 +120,7 @@
 //!
 //! ```text
 //! C: {"verb":"hello","proto_version":1}
-//! S: {"verb":"hello_ok","proto_version":1,"schema_version":3}
+//! S: {"verb":"hello_ok","proto_version":1,"schema_version":4}
 //! C: {"verb":"submit","spec":{"preset":"minimal","priority":"interactive","bench":"l2_lat"}}
 //! S: {"verb":"submitted","job_id":1,"memo_hit":false}
 //! C: {"verb":"wait","job_id":1}
@@ -149,7 +151,8 @@ use std::thread;
 use std::time::Duration;
 
 use crate::api::SimService;
-use crate::server::memo::{MemoCache, DEFAULT_MEMO_CAPACITY};
+use crate::server::memo::{MemoCache, DEFAULT_MEMO_BYTES,
+                          DEFAULT_MEMO_CAPACITY};
 use crate::server::proto::PROTO_VERSION;
 use crate::stats::export::{ServerStats, SCHEMA_VERSION};
 
@@ -169,6 +172,10 @@ pub struct ServerConfig {
     pub queue_bound: usize,
     /// Memo-cache capacity in documents; 0 disables (`--memo`).
     pub memo_capacity: usize,
+    /// Memo-cache bound on total cached document bytes; 0 disables
+    /// (`--memo-bytes`). Keeps a few huge 80-SM documents from
+    /// pinning the cache regardless of the entry-count cap.
+    pub memo_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -177,6 +184,7 @@ impl Default for ServerConfig {
             threads: 2,
             queue_bound: crate::api::DEFAULT_QUEUE_BOUND,
             memo_capacity: DEFAULT_MEMO_CAPACITY,
+            memo_bytes: DEFAULT_MEMO_BYTES,
         }
     }
 }
@@ -210,7 +218,8 @@ impl ServerCtx {
         Self {
             service: SimService::with_queue_bound(
                 config.threads, config.queue_bound),
-            memo: MemoCache::new(config.memo_capacity),
+            memo: MemoCache::new(config.memo_capacity,
+                                 config.memo_bytes),
             counters: ServerCounters::default(),
             draining: AtomicBool::new(false),
             next_job_id: AtomicU64::new(0),
@@ -234,8 +243,8 @@ impl ServerCtx {
 
     /// Snapshot the `server` counter section.
     pub fn server_stats(&self) -> ServerStats {
-        let (memo_hits, memo_misses, _evictions) =
-            self.memo.counters();
+        let (memo_hits, memo_misses, memo_evictions,
+             memo_evicted_bytes) = self.memo.counters();
         ServerStats {
             proto_version: PROTO_VERSION,
             connections: self.counters.connections.load(Relaxed),
@@ -247,6 +256,8 @@ impl ServerCtx {
             deltas_sent: self.counters.deltas_sent.load(Relaxed),
             memo_hits,
             memo_misses,
+            memo_evictions,
+            memo_evicted_bytes,
             proto_errors: self.counters.proto_errors.load(Relaxed),
         }
     }

@@ -45,7 +45,7 @@ use crate::kernel::{KernelInfo, KernelQueue};
 use crate::mem::{partition_of, FlitSchedule, Icnt, MemPartition};
 use crate::sim::dispatch::DispatchLedger;
 use crate::sim::parallel::{self, WorkerChunk};
-use crate::sim::profile::{self, PhaseProfile};
+use crate::sim::profile::{self, JumpStats, PhaseProfile};
 use crate::sim::GpuStats;
 use crate::stats::print as stat_print;
 use crate::stats::StatMode;
@@ -97,6 +97,11 @@ pub struct GpuSim {
     /// Feature-gated wall-clock phase timers (`sim::profile`) — a
     /// zero-sized no-op in default builds.
     profile: PhaseProfile,
+    /// Always-compiled fast-forward counters: loop iterations, jumps
+    /// taken, skipped cycles, jump-length histogram. Exposed via
+    /// [`GpuSim::jump_stats`], never exported into the byte-compared
+    /// stats JSON (`fast_forward 0/1` differ here by construction).
+    jump: JumpStats,
     /// TBs retired during the last core phase (chunk/core-id order).
     finished_scratch: Vec<crate::core::FinishedTb>,
     /// Echo kernel launch/exit lines to stdout
@@ -156,6 +161,7 @@ impl GpuSim {
             dispatch_rr: 0,
             ledger,
             profile: PhaseProfile::default(),
+            jump: JumpStats::default(),
             finished_scratch: Vec::new(),
             verbose: false,
         })
@@ -210,6 +216,7 @@ impl GpuSim {
             self.cfg.max_tbs_per_core, self.cfg.max_warps_per_core,
             self.cfg.num_cores as usize, self.core_starts.clone());
         self.profile = PhaseProfile::default();
+        self.jump.reset();
         self.finished_scratch.clear();
         self.verbose = false;
     }
@@ -288,7 +295,7 @@ impl GpuSim {
     fn drive(&mut self, chunks: &[Mutex<WorkerChunk>],
              ctrl: Option<&parallel::PoolCtrl>) -> Result<()> {
         while !self.work_drained(chunks) {
-            self.step_on(chunks, ctrl)?;
+            self.step_on(chunks, ctrl, Cycle::MAX)?;
             // same guard as GpuSim::step: a run whose work drains
             // exactly at the limit completes, stepped or pooled
             if self.now >= self.cfg.max_cycles
@@ -323,10 +330,23 @@ impl GpuSim {
     /// loop — [`GpuSim::run`] drives the same function with a pool).
     /// Enforces the same `max_cycles` safety valve as the drive loop,
     /// so externally-stepped simulations cannot spin forever on a
-    /// wedged workload.
+    /// wedged workload. With `fast_forward` the tick may cover more
+    /// than one cycle; use [`GpuSim::step_until`] when an exact cycle
+    /// boundary must be observed.
     pub fn step(&mut self) -> Result<()> {
+        self.step_until(Cycle::MAX)
+    }
+
+    /// One clock tick whose fast-forward jump (if any) is clamped so
+    /// the clock never passes `ceiling` — external cycle boundaries
+    /// (the server `stream` verb's delta intervals, cycle budgets)
+    /// observe their exact cycle even across provably-quiet stretches.
+    /// Always advances by at least one cycle (a `ceiling` at or below
+    /// the current cycle only suppresses the jump, it cannot stall
+    /// the clock).
+    pub fn step_until(&mut self, ceiling: Cycle) -> Result<()> {
         let chunks = std::mem::take(&mut self.chunks);
-        let r = self.step_on(&chunks, None);
+        let r = self.step_on(&chunks, None, ceiling);
         self.chunks = chunks;
         r?;
         if self.now >= self.cfg.max_cycles && !self.idle() {
@@ -344,7 +364,8 @@ impl GpuSim {
     /// is the PR-2 central O(fetches/cycle) crossbar routing — both in
     /// fixed global-id order, byte-identical stats.
     fn step_on(&mut self, chunks: &[Mutex<WorkerChunk>],
-               ctrl: Option<&parallel::PoolCtrl>) -> Result<()> {
+               ctrl: Option<&parallel::PoolCtrl>, ceiling: Cycle)
+        -> Result<()> {
         let t = self.profile.start();
         self.launch_kernels();
         self.dispatch_tbs(chunks);
@@ -447,8 +468,78 @@ impl GpuSim {
         let t = self.profile.start();
         self.retire_tbs(chunks);
         self.profile.record(profile::PH_RETIRE_ABSORB, t);
-        self.now += 1;
+        self.advance_clock(chunks, ceiling);
         Ok(())
+    }
+
+    /// Advance the clock past the tick that just ran: by 1 in the
+    /// always-tick loop (`fast_forward = 0`), or by the global event
+    /// horizon `k` when every component proves the next `k - 1`
+    /// cycles quiet. Absolute-cycle timestamps everywhere make the
+    /// jump literally `now += k` — no timer is rewritten, and the
+    /// post-jump state is byte-identical to `k - 1` no-op ticks.
+    /// Clamped so the `max_cycles` safety valve and the caller's
+    /// `ceiling` (stream-delta boundaries, cycle budgets) fire on
+    /// their exact cycle; an infinite horizon (`Cycle::MAX` — the
+    /// machine is drained, or wedged waiting on input that will never
+    /// come) falls back to a plain tick so drain-out and the
+    /// safety valve behave exactly as in the always-tick loop.
+    fn advance_clock(&mut self, chunks: &[Mutex<WorkerChunk>],
+                     ceiling: Cycle) {
+        self.jump.record_tick();
+        if self.cfg.fast_forward {
+            let h = self.global_horizon(chunks);
+            if h > 1 && h != Cycle::MAX {
+                let cap = self
+                    .cfg
+                    .max_cycles
+                    .min(ceiling)
+                    .saturating_sub(self.now);
+                let k = h.min(cap).max(1);
+                if k > 1 {
+                    self.jump.record_jump(k);
+                    self.now += k;
+                    return;
+                }
+            }
+        }
+        self.now += 1;
+    }
+
+    /// The global event horizon at `now` (after the tick at `now` has
+    /// fully run): the minimum of every chunk's component horizon and
+    /// the crossbar drain horizons, with pending kernel launches or
+    /// undispatched TBs pinning the whole machine to 1 (launch gating
+    /// and ledger-guided dispatch run every cycle while they have
+    /// work). Early-outs end the scan as soon as any term proves 1.
+    fn global_horizon(&self, chunks: &[Mutex<WorkerChunk>]) -> Cycle {
+        if !self.queue.is_empty()
+            || self.running.iter().any(|k| k.remaining_tbs() > 0)
+        {
+            return 1;
+        }
+        let mut h = if self.cfg.icnt_sharded {
+            self.sched_req
+                .next_event_in(self.now)
+                .min(self.sched_resp.next_event_in(self.now))
+        } else {
+            self.icnt.next_event_in(self.now)
+        };
+        for ch in chunks {
+            if h <= 1 {
+                return 1;
+            }
+            h = h.min(parallel::lock_chunk(ch).next_event_in(self.now));
+        }
+        h.max(1)
+    }
+
+    /// The fast-forward counters accumulated so far (valid mid-run
+    /// and after [`GpuSim::run`]). Deliberately not part of the
+    /// exported stats document: `fast_forward 0` and `1` are
+    /// byte-identical there and differ here by construction.
+    pub fn jump_stats(&self) -> &JumpStats {
+        &self.jump
     }
 
     /// Run one phase on every chunk: pooled (workers park on barriers)

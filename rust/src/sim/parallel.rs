@@ -44,6 +44,12 @@
 //!     response lane; retire TBs (crediting the dispatch ledger); on
 //!     kernel exit absorb ALL shards in fixed core-id then
 //!     partition-id order                           (sequential)
+//!   main: HORIZON REDUCE + JUMP (`fast_forward = 1`, the default) —
+//!     reduce every chunk's conservative event horizon
+//!     [`WorkerChunk::next_event_in`] with the two FlitSchedule drain
+//!     horizons and the launch/dispatch pin; when the global minimum
+//!     `k` exceeds 1, advance the clock by `k` in one step instead of
+//!     ticking through `k - 1` provably-quiet cycles (sequential)
 //! ```
 //!
 //! **The double-buffer swap protocol:** each chunk's
@@ -131,6 +137,37 @@
 //! the bookkeeping runs — that path is the measured before-baseline
 //! (`BENCH_stats.json`, `idle_skip` section), exactly as
 //! `icnt_sharded = 0` is for the exchange.
+//!
+//! **The event-horizon fast-forward (`fast_forward = 1`, the
+//! default):** the active set removes per-*component* work but the
+//! clock loop still executes one full barrier round per simulated
+//! cycle, even when every remaining component is merely counting down
+//! a latency timer (a DRAM round-trip, a long scoreboard stall, the
+//! serialized straggler tail). Every tickable component therefore
+//! reports, alongside its `Activity` summary, a conservative event
+//! horizon `next_event_in(now) -> h`: ticks at `now+1 ..= now+h-1`
+//! are *guaranteed* no-ops and the component can next change state at
+//! `now + h` (`Cycle::MAX` when only an external input — a delivered
+//! fetch, a dispatched TB — can create work; those inputs are
+//! produced by some *other* component whose own horizon bounds the
+//! jump). After the response swap the main thread reduces
+//! [`WorkerChunk::next_event_in`] over the chunks (in-flight exchange
+//! traffic pins a chunk to 1), takes the min with the two
+//! [`FlitSchedule`] drain horizons and the launch/dispatch pin
+//! (pending kernels or undispatched TBs pin the whole machine to 1),
+//! and advances the clock by the global minimum `k` in one step —
+//! every timer is an *absolute* cycle stamp, so the jump is literally
+//! `now += k`: no timer rewriting, and the state after the jump is
+//! byte-identical to the state after `k - 1` no-op ticks. Jumps are
+//! clamped so `max_cycles` budgets, external step ceilings (the
+//! server `stream` verb's delta boundaries), and kernel-exit merge
+//! points still fire on their exact cycle. `fast_forward = 0` runs
+//! the always-tick loop — the measured before-baseline
+//! (`BENCH_stats.json`, `fast_forward` section) and the reference the
+//! determinism suite compares the jump loop against; jump counts and
+//! a skipped-cycles histogram land in [`crate::sim::profile`]'s
+//! always-compiled `JumpStats` (deliberately *not* exported into the
+//! byte-compared stats JSON).
 //!
 //! **Clean mode is exempt** from parallel stepping: its under-count is
 //! an inc-time shared-counter artifact (the engine's `CycleGuard` must
@@ -359,6 +396,43 @@ impl WorkerChunk {
         if self.idle_skip {
             wake(&mut self.part_awake, &mut self.active_parts, local);
         }
+    }
+
+    /// Event-horizon lower bound over everything this chunk owns (the
+    /// fast-forward contract, see [`crate::activity`]): ticks at
+    /// `now+1 ..= now + h - 1` are guaranteed no-ops for every core
+    /// and partition in the chunk. In-flight exchange traffic —
+    /// undrained lane buffers or crossbar-slice entries, central
+    /// inboxes/outboxes — pins the horizon to 1: those fetches are
+    /// delivered under drain horizons the main thread owns, so the
+    /// chunk cannot locally prove the next cycle quiet. Early-outs
+    /// keep the reduce cheap on busy cycles (the first component that
+    /// proves `h == 1` ends the scan); on quiet cycles the scan is
+    /// what buys the multi-cycle jump.
+    pub fn next_event_in(&self, now: Cycle) -> Cycle {
+        if !self.core_inbox.is_empty()
+            || !self.part_inbox.is_empty()
+            || !self.out_fetches.is_empty()
+            || !self.out_responses.is_empty()
+            || self.req.busy()
+            || self.resp.busy()
+        {
+            return 1;
+        }
+        let mut h = Cycle::MAX;
+        for c in &self.cores {
+            h = h.min(c.next_event_in(now));
+            if h <= 1 {
+                return 1;
+            }
+        }
+        for p in &self.parts {
+            h = h.min(p.next_event_in(now));
+            if h <= 1 {
+                return 1;
+            }
+        }
+        h
     }
 
     /// Any work outstanding in this chunk?

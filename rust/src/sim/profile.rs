@@ -123,6 +123,84 @@ impl PhaseProfile {
     }
 }
 
+/// Number of power-of-two buckets in the skipped-cycles histogram:
+/// bucket `i` counts jumps of length `2^(i+1) ..= 2^(i+2) - 1`
+/// (bucket 0 = jumps of 2–3 cycles); the last bucket saturates.
+pub const JUMP_BUCKETS: usize = 8;
+
+/// Always-compiled fast-forward counters (unlike [`PhaseProfile`],
+/// which is feature-gated): the determinism acceptance bar asserts
+/// *measurably fewer loop iterations than simulated cycles* on quiet
+/// workloads, so these must exist in every build. They are exposed
+/// through a `GpuSim` accessor and deliberately **not** exported into
+/// the byte-compared stats JSON — `fast_forward 0` and `1` produce
+/// identical stats but different jump counts by construction.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct JumpStats {
+    /// Clock-loop iterations executed (each covers ≥ 1 cycle).
+    pub ticks: u64,
+    /// Iterations that advanced the clock by `k > 1`.
+    pub jumps: u64,
+    /// Total cycles skipped (the sum of `k - 1` over all jumps):
+    /// `ticks + skipped_cycles` = cycles simulated.
+    pub skipped_cycles: u64,
+    /// Jump-length histogram in power-of-two buckets (see
+    /// [`JUMP_BUCKETS`]).
+    pub histogram: [u64; JUMP_BUCKETS],
+}
+
+impl JumpStats {
+    /// One clock-loop iteration ran (jump or plain tick).
+    #[inline]
+    pub fn record_tick(&mut self) {
+        self.ticks += 1;
+    }
+
+    /// The iteration advanced the clock by `k` cycles, `k >= 2`.
+    #[inline]
+    pub fn record_jump(&mut self, k: u64) {
+        debug_assert!(k >= 2);
+        self.jumps += 1;
+        self.skipped_cycles += k - 1;
+        // floor(log2(k)) >= 1 for k >= 2; bucket 0 starts at length 2
+        let bits = 63 - k.leading_zeros() as usize;
+        self.histogram[(bits - 1).min(JUMP_BUCKETS - 1)] += 1;
+    }
+
+    /// Warm-session reuse: back to the post-construction zeros.
+    pub fn reset(&mut self) {
+        *self = JumpStats::default();
+    }
+}
+
+/// Render the jump counters as an aligned text table — the CLI's
+/// end-of-run fast-forward summary. `None` when no jump ever fired
+/// (always-tick baseline, or nothing was quiet enough to skip).
+pub fn render_jump_table(j: &JumpStats) -> Option<String> {
+    if j.jumps == 0 {
+        return None;
+    }
+    let cycles = j.ticks + j.skipped_cycles;
+    let mut out = format!(
+        "fast-forward: {} iterations covered {} cycles \
+         ({} jumps skipped {} cycles)\n",
+        j.ticks, cycles, j.jumps, j.skipped_cycles);
+    for (i, &n) in j.histogram.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        let lo = 1u64 << (i + 1);
+        let hi = (1u64 << (i + 2)) - 1;
+        if i + 1 == JUMP_BUCKETS {
+            out.push_str(&format!("  jump length >= {lo:>5}: {n}\n"));
+        } else {
+            out.push_str(&format!(
+                "  jump length {lo:>5}-{hi:<5}: {n}\n"));
+        }
+    }
+    Some(out)
+}
+
 /// Render a `PhaseStat` slice as an aligned text table with per-phase
 /// shares — the CLI's end-of-run profile summary. Returns `None` when
 /// the slice is empty or all-zero (feature off or nothing ran).
@@ -171,6 +249,30 @@ mod tests {
         } else {
             assert!(snap.is_empty());
         }
+    }
+
+    #[test]
+    fn jump_stats_bucket_and_totals() {
+        let mut j = JumpStats::default();
+        assert!(render_jump_table(&j).is_none());
+        j.record_tick();
+        j.record_tick();
+        j.record_jump(2); // bucket 0 (2-3)
+        j.record_tick();
+        j.record_jump(3); // bucket 0
+        j.record_jump(4); // bucket 1 (4-7)
+        j.record_jump(1024); // saturates into the last bucket
+        assert_eq!(j.ticks, 3);
+        assert_eq!(j.jumps, 4);
+        assert_eq!(j.skipped_cycles, 1 + 2 + 3 + 1023);
+        assert_eq!(j.histogram[0], 2);
+        assert_eq!(j.histogram[1], 1);
+        assert_eq!(j.histogram[JUMP_BUCKETS - 1], 1);
+        let table = render_jump_table(&j).unwrap();
+        assert!(table.contains("4 jumps"));
+        assert!(table.contains("2-3"));
+        j.reset();
+        assert_eq!(j, JumpStats::default());
     }
 
     #[test]

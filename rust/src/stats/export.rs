@@ -30,9 +30,11 @@ use crate::StreamId;
 /// golden key set (`rust/tests/golden/schema_v2_keys.txt`). v3 =
 /// the `service` section gained the priority-lane and cancellation
 /// counters (`interactive_jobs`/`batch_jobs`/`cancelled`) and the
-/// `server` section was introduced; the core result-document keys
-/// are unchanged from v2.
-pub const SCHEMA_VERSION: u32 = 3;
+/// `server` section was introduced. v4 = the `server` section split
+/// its memo-eviction accounting into `memo_evictions` /
+/// `memo_evicted_bytes` (the byte-bounded memo cache); the core
+/// result-document keys are unchanged from v2.
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// Escape a JSON string value (shared with the `server::json` wire
 /// writer so both sides escape identically).
@@ -277,6 +279,10 @@ pub struct ServerStats {
     pub memo_hits: u64,
     /// Memoizable `submit` requests that missed the cache.
     pub memo_misses: u64,
+    /// Memo-cache entries evicted (LRU, either bound).
+    pub memo_evictions: u64,
+    /// Total document bytes released by those evictions.
+    pub memo_evicted_bytes: u64,
     /// Lines that failed to parse as a protocol request.
     pub proto_errors: u64,
 }
@@ -287,7 +293,7 @@ pub struct ServerStats {
 pub const SERVER_SECTION_KEYS: &[&str] = &[
     "proto_version", "connections", "requests", "submits", "waits",
     "cancels", "streams", "deltas_sent", "memo_hits", "memo_misses",
-    "proto_errors",
+    "memo_evictions", "memo_evicted_bytes", "proto_errors",
 ];
 
 impl ServerStats {
@@ -299,10 +305,12 @@ impl ServerStats {
              \"requests\":{},\"submits\":{},\"waits\":{},\
              \"cancels\":{},\"streams\":{},\"deltas_sent\":{},\
              \"memo_hits\":{},\"memo_misses\":{},\
+             \"memo_evictions\":{},\"memo_evicted_bytes\":{},\
              \"proto_errors\":{}}}",
             self.proto_version, self.connections, self.requests,
             self.submits, self.waits, self.cancels, self.streams,
             self.deltas_sent, self.memo_hits, self.memo_misses,
+            self.memo_evictions, self.memo_evicted_bytes,
             self.proto_errors)
     }
 }
@@ -528,6 +536,8 @@ mod tests {
             deltas_sent: 9,
             memo_hits: 2,
             memo_misses: 2,
+            memo_evictions: 1,
+            memo_evicted_bytes: 512,
             proto_errors: 0,
         };
         let json = stats.to_json();
@@ -538,6 +548,8 @@ mod tests {
         assert!(json.contains("\"proto_version\":1"), "{json}");
         assert!(json.contains("\"deltas_sent\":9"), "{json}");
         assert!(json.contains("\"memo_hits\":2"), "{json}");
+        assert!(json.contains("\"memo_evictions\":1"), "{json}");
+        assert!(json.contains("\"memo_evicted_bytes\":512"), "{json}");
     }
 
     #[test]

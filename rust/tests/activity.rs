@@ -5,6 +5,14 @@
 //! on randomized scenarios (proptest-lite), and pins the end-to-end
 //! consequence: `idle_skip` on/off is byte-identical on random
 //! multi-stream workloads.
+//!
+//! PR-9 adds the stronger event-horizon (`next_event_in`) contract
+//! (see `streamsim::activity` module docs): for any `j` no larger
+//! than a component's reported horizon, jumping the clock by `j` and
+//! ticking once must be byte-identical to ticking through every
+//! intermediate cycle — pinned here by driving identical random
+//! scenarios with and without horizon-bounded jumps and comparing
+//! full `Debug` state.
 
 use streamsim::config::SimConfig;
 use streamsim::core::SimtCore;
@@ -150,6 +158,117 @@ fn idle_component_tick_is_a_noop() {
                 || engine.cache(StatDomain::L2).total_table()
                     .total() > 0,
                 "degenerate scenario: no memory traffic at all");
+    });
+}
+
+/// The `next_event_in` jump contract (PR-9): drive the same random
+/// scenario once tick-by-tick and once with clock jumps of `j <= h`
+/// cycles (where `h` is the minimum of the components' reported
+/// horizons, clamped at the next scheduled dispatch exactly like the
+/// clock loop's launch/dispatch pin). The two runs must end with
+/// byte-identical component state (full `Debug` formatting),
+/// identical stats and the same simulated-cycle count — while the
+/// jumping run executes strictly fewer loop iterations.
+#[test]
+fn horizon_jumps_are_byte_identical_to_always_ticking() {
+    let cases = (default_cases() / 4).max(8);
+    run_cases("next_event_horizon", 0xfa57_f0a4, cases, |g| {
+        let n_tbs = 1 + g.index(4);
+        let mut at = 0u64;
+        let tbs: Vec<(u64, u64, TbTrace)> = (0..n_tbs)
+            .map(|i| {
+                // long quiet gaps between dispatches are the point:
+                // they are what the jump loop must leap over
+                if i > 0 {
+                    at += 64 + g.below(256);
+                }
+                let stream = g.below(3);
+                (at, stream, random_tb(g, i as u64))
+            })
+            .collect();
+        let run = |jumping: bool| -> (String, u64, u64) {
+            let cfg = cfg();
+            let mut core = SimtCore::new(0, &cfg);
+            let mut part = MemPartition::new(0, &cfg);
+            let mut engine = StatsEngine::new(StatMode::PerStream);
+            let mut ids = FetchIdAlloc::default();
+            let mut next_tb = 0usize;
+            let mut now = 0u64;
+            let mut iters = 0u64;
+            let mut retired = 0usize;
+            let mut guard = 0;
+            while next_tb < tbs.len() || core.busy() || part.busy() {
+                guard += 1;
+                assert!(guard < 200_000, "scenario deadlocked");
+                if next_tb < tbs.len() && now >= tbs[next_tb].0 {
+                    let (_, stream, tb) = &tbs[next_tb];
+                    if core.can_accept(tb.warps.len() as u32) {
+                        let slot = engine.intern_stream(*stream);
+                        core.accept_tb(1, *stream, slot, next_tb, tb);
+                        next_tb += 1;
+                    }
+                }
+                core.cycle(now, &mut engine, &mut ids);
+                retired += core.take_finished().len();
+                for f in core.drain_to_icnt() {
+                    part.push_request(f);
+                }
+                part.cycle(now,
+                           &mut PartitionSink::Central(&mut engine));
+                for f in part.drain_responses() {
+                    core.receive_response(f, now);
+                }
+                iters += 1;
+                if !jumping {
+                    now += 1;
+                    continue;
+                }
+                let mut h = core
+                    .next_event_in(now)
+                    .min(part.next_event_in(now));
+                // the dispatch pin: a TB due (or overdue) bounds the
+                // jump exactly like the clock loop's launch/dispatch
+                // clamp in GpuSim::global_horizon
+                if next_tb < tbs.len() {
+                    let due = tbs[next_tb].0;
+                    h = if now >= due { 1 } else { h.min(due - now) };
+                }
+                if h == u64::MAX {
+                    h = 1; // drain-out: nothing pending anywhere
+                }
+                // any j <= h must be equivalent, not just j == h:
+                // land on deterministic interior cycles too
+                let j = 1 + now
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .rotate_right(17)
+                    % h;
+                now += j;
+            }
+            let state = format!(
+                "{core:?}\n{part:?}\n{:?}|{:?}|{:?}|l1={} l1f={} \
+                 l2={} l2f={} retired={retired}",
+                engine.per_stream(StatDomain::Dram),
+                engine.per_stream(StatDomain::Icnt),
+                engine.per_stream(StatDomain::Power),
+                engine.cache(StatDomain::L1).total_table().total(),
+                engine.cache(StatDomain::L1).total_fail_table()
+                    .total(),
+                engine.cache(StatDomain::L2).total_table().total(),
+                engine.cache(StatDomain::L2).total_fail_table()
+                    .total());
+            (state, now, iters)
+        };
+        let (tick_state, tick_now, tick_iters) = run(false);
+        let (jump_state, jump_now, jump_iters) = run(true);
+        assert_eq!(tick_iters, tick_now,
+                   "always-tick must run one iteration per cycle");
+        assert_eq!(jump_state, tick_state,
+                   "horizon-jumped run diverged from always-tick");
+        assert_eq!(jump_now, tick_now,
+                   "jumped run simulated a different cycle count");
+        assert!(jump_iters < tick_iters,
+                "horizon jumps saved no iterations \
+                 (iters={jump_iters}, cycles={jump_now})");
     });
 }
 

@@ -18,6 +18,13 @@
 //! PR-6 adds an `idle_skip` axis: the idle-aware active-set loop
 //! (default on) must be byte-identical to the always-tick loop
 //! (`idle_skip 0`) across the same thread matrix.
+//!
+//! PR-9 adds a `fast_forward` axis: the event-horizon jump loop
+//! (default on) must be byte-identical to ticking every cycle
+//! (`fast_forward 0`) across the thread matrix, per mode, crossed
+//! with `idle_skip` — and on the idle-tail workload it must execute
+//! measurably fewer loop iterations than it simulates cycles
+//! (asserted through `sim::profile::JumpStats`).
 
 use streamsim::config::SimConfig;
 use streamsim::sim::GpuSim;
@@ -31,7 +38,7 @@ const THREAD_MATRIX: [u32; 4] = [1, 2, 4, 8];
 /// here as count diffs even when totals accidentally agree).
 fn run_fingerprint_on(bench: &str, preset: &str, mode: StatMode,
                       serialize: bool, threads: u32, sharded: bool,
-                      idle_skip: bool)
+                      idle_skip: bool, fast_forward: bool)
     -> String {
     let g = workloads::generate(bench).unwrap();
     let mut cfg = SimConfig::preset(preset).unwrap();
@@ -40,6 +47,7 @@ fn run_fingerprint_on(bench: &str, preset: &str, mode: StatMode,
     cfg.sim_threads = threads;
     cfg.icnt_sharded = sharded;
     cfg.idle_skip = idle_skip;
+    cfg.fast_forward = fast_forward;
     let mut sim = GpuSim::new(cfg).unwrap();
     sim.enqueue_workload(&g.workload).unwrap();
     sim.run().unwrap();
@@ -54,7 +62,7 @@ fn run_fingerprint_on(bench: &str, preset: &str, mode: StatMode,
 fn run_fingerprint(bench: &str, preset: &str, mode: StatMode,
                    serialize: bool, threads: u32) -> String {
     run_fingerprint_on(bench, preset, mode, serialize, threads, true,
-                       true)
+                       true, true)
 }
 
 fn assert_thread_matrix_identical(bench: &str, preset: &str,
@@ -125,10 +133,12 @@ fn sharded_exchange_bit_identical_to_central_exchange() {
         ("bench1_mini", StatMode::AggregateBuggy),
     ] {
         let central = run_fingerprint_on(bench, "sm7_titanv_mini",
-                                         mode, false, 1, false, true);
+                                         mode, false, 1, false, true,
+                                         true);
         for &t in &THREAD_MATRIX {
             let sharded = run_fingerprint_on(
-                bench, "sm7_titanv_mini", mode, false, t, true, true);
+                bench, "sm7_titanv_mini", mode, false, t, true, true,
+                true);
             assert_eq!(
                 central, sharded,
                 "{bench} mode={}: sharded exchange at --sim-threads \
@@ -155,12 +165,13 @@ fn idle_skip_bit_identical_to_always_tick() {
         ("bench1_mini", StatMode::AggregateBuggy),
     ] {
         let baseline = run_fingerprint_on(
-            bench, "sm7_titanv_mini", mode, false, 1, true, false);
+            bench, "sm7_titanv_mini", mode, false, 1, true, false,
+            true);
         for &t in &THREAD_MATRIX {
             for skip in [false, true] {
                 let got = run_fingerprint_on(
                     bench, "sm7_titanv_mini", mode, false, t, true,
-                    skip);
+                    skip, true);
                 assert_eq!(
                     baseline, got,
                     "{bench} mode={}: idle_skip={} at --sim-threads \
@@ -170,11 +181,85 @@ fn idle_skip_bit_identical_to_always_tick() {
         }
         // central-exchange spot check: the inbox delivery wakes
         let central = run_fingerprint_on(
-            bench, "sm7_titanv_mini", mode, false, 1, false, true);
+            bench, "sm7_titanv_mini", mode, false, 1, false, true,
+            true);
         assert_eq!(baseline, central,
                    "{bench} mode={}: central idle_skip run diverged",
                    mode.label());
     }
+}
+
+#[test]
+fn fast_forward_bit_identical_to_always_tick() {
+    // the PR-9 tentpole's semantic anchor: multi-cycle clock jumps
+    // over provably-quiet stretches must be a pure scheduling
+    // optimization — stats, kernel windows and exit logs
+    // byte-identical to ticking every cycle, across the full
+    // --sim-threads x mode x idle_skip matrix. idle_tail_mini is the
+    // adversarial case: its straggler tail is one long quiet stretch.
+    for (bench, mode) in [
+        ("bench1_mini", StatMode::PerStream),
+        ("bench3", StatMode::PerStream),
+        ("bench3", StatMode::AggregateExact),
+        ("idle_tail_mini", StatMode::PerStream),
+        ("l2_lat", StatMode::AggregateExact),
+    ] {
+        let baseline = run_fingerprint_on(
+            bench, "sm7_titanv_mini", mode, false, 1, true, true,
+            false);
+        for &t in &THREAD_MATRIX {
+            for skip in [false, true] {
+                for ff in [false, true] {
+                    let got = run_fingerprint_on(
+                        bench, "sm7_titanv_mini", mode, false, t,
+                        true, skip, ff);
+                    assert_eq!(
+                        baseline, got,
+                        "{bench} mode={}: fast_forward={} \
+                         idle_skip={} at --sim-threads {t} diverged \
+                         from the always-tick baseline",
+                        mode.label(), ff as u8, skip as u8);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_forward_jumps_over_the_idle_tail() {
+    // the perf acceptance bar: on the straggler-tail workload the
+    // jump loop must execute measurably fewer loop iterations than
+    // it simulates cycles, and every simulated cycle must be
+    // accounted for as either a real tick or a skipped one
+    let run = |ff: bool| {
+        let g = workloads::generate("idle_tail_mini").unwrap();
+        let mut cfg = SimConfig::preset("sm7_titanv_mini").unwrap();
+        cfg.fast_forward = ff;
+        let mut sim = GpuSim::new(cfg).unwrap();
+        sim.enqueue_workload(&g.workload).unwrap();
+        sim.run().unwrap();
+        let total = sim.stats().total_cycles;
+        let j = sim.jump_stats().clone();
+        (total, j)
+    };
+    let (base_total, base_jumps) = run(false);
+    assert_eq!(base_jumps.jumps, 0,
+               "fast_forward 0 must never jump");
+    assert_eq!(base_jumps.skipped_cycles, 0);
+    assert_eq!(base_jumps.ticks, base_total,
+               "always-tick runs one iteration per cycle");
+    let (total, jumps) = run(true);
+    assert_eq!(total, base_total,
+               "fast_forward changed the simulated cycle count");
+    assert_eq!(jumps.ticks + jumps.skipped_cycles, total,
+               "every cycle must be a tick or a skip");
+    assert!(jumps.jumps > 0,
+            "idle tail produced no jumps: {jumps:?}");
+    assert!(jumps.ticks < total,
+            "jump loop iterations ({}) not measurably fewer than \
+             simulated cycles ({total})", jumps.ticks);
+    assert_eq!(jumps.histogram.iter().sum::<u64>(), jumps.jumps,
+               "histogram buckets must sum to the jump count");
 }
 
 #[test]

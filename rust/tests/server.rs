@@ -95,6 +95,7 @@ fn concurrent_tcp_clients_byte_agree_with_direct_sessions() {
         threads: 2,
         queue_bound: 16,
         memo_capacity: 0, // cold runs only: memo has its own test
+        ..ServerConfig::default()
     });
     let lanes = [Priority::Interactive, Priority::Batch,
                  Priority::Interactive];
@@ -289,6 +290,67 @@ fn stream_deltas_sum_to_the_final_totals() {
                 run");
 }
 
+/// Fast-forward clock jumps (`fast_forward`, default-on) must be
+/// clamped at the `stream` delta boundary: with a long-latency spec
+/// whose provably-quiet stretches dwarf a small interval, every
+/// non-terminal delta frame still lands on its exact interval cycle
+/// (an unclamped jump would overshoot the boundary and emit frames
+/// at jump-dependent cycles).
+#[test]
+fn stream_deltas_land_on_exact_interval_boundaries() {
+    const INTERVAL: u64 = 16;
+    // l2_latency 400 on the minimal preset: each miss parks in a
+    // timed queue for hundreds of cycles, so the event horizon
+    // repeatedly exceeds the interval by an order of magnitude
+    let mut overrides = BTreeMap::new();
+    overrides.insert("l2_latency".to_string(), "400".to_string());
+    let spec = JobSpec {
+        preset: "minimal".to_string(),
+        overrides,
+        ..JobSpec::bench("l2_lat")
+    };
+    let requests = [
+        Request::Stream { spec, interval: INTERVAL },
+        Request::Shutdown,
+    ];
+    let mut input = String::new();
+    for r in &requests {
+        input.push_str(&r.to_json());
+        input.push('\n');
+    }
+    let mut out: Vec<u8> = Vec::new();
+    serve_io(ServerConfig::default(), Cursor::new(input), &mut out)
+        .unwrap();
+    let frames: Vec<Response> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Response::parse(l).unwrap())
+        .collect();
+    let deltas: Vec<(u64, u64)> = frames
+        .iter()
+        .filter_map(|f| match f {
+            Response::Delta { cycles, delta_cycles, .. } => {
+                Some((*cycles, *delta_cycles))
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(deltas.len() >= 4,
+            "long-latency run should span several intervals, got \
+             {deltas:?}");
+    // every frame except the terminal (idle-triggered) one sits on
+    // an exact interval boundary with an exact interval-wide window
+    for (cycles, delta_cycles) in
+        &deltas[..deltas.len() - 1]
+    {
+        assert_eq!(cycles % INTERVAL, 0,
+                   "delta frame off its interval boundary: \
+                    cycles={cycles} interval={INTERVAL}");
+        assert_eq!(*delta_cycles, INTERVAL,
+                   "delta window drifted: {delta_cycles}");
+    }
+}
+
 /// Cancelling a queued job over the wire reports `cancel_ok` and a
 /// terminal `job_failed` with the stable `cancelled` kind.
 #[test]
@@ -297,6 +359,7 @@ fn cancel_over_the_wire_reports_the_cancelled_kind() {
         threads: 1, // one worker: the second job stays queued
         queue_bound: 8,
         memo_capacity: 0,
+        ..ServerConfig::default()
     });
     let mut c = Client::connect(addr);
     // a longer job occupies the single worker (slowed further so the
@@ -354,6 +417,7 @@ fn drain_flushes_pending_results_to_other_connections() {
         threads: 2,
         queue_bound: 8,
         memo_capacity: 0,
+        ..ServerConfig::default()
     });
     let mut waiter = Client::connect(addr);
     waiter.send(&Request::Submit {
@@ -387,6 +451,7 @@ fn lane_backpressure_reaches_the_wire() {
         threads: 1,
         queue_bound: 1,
         memo_capacity: 0,
+        ..ServerConfig::default()
     });
     let mut c = Client::connect(addr);
     let batch = JobSpec {

@@ -4,11 +4,13 @@
 #
 #   scripts/ci.sh              # fmt + clippy + build + tests
 #   scripts/ci.sh determinism  # + the --sim-threads 1/2/4/8 matrix
-#                              #   crossed with idle_skip 1/0:
-#                              #   byte-compares exported stats JSON
-#                              #   across thread counts, stat modes and
-#                              #   the idle-aware active-set loop vs
-#                              #   the always-tick baseline, then runs
+#                              #   crossed with idle_skip 1/0 and
+#                              #   fast_forward 1/0: byte-compares
+#                              #   exported stats JSON across thread
+#                              #   counts, stat modes, the idle-aware
+#                              #   active-set loop and the
+#                              #   event-horizon jump loop vs the
+#                              #   always-tick baseline, then runs
 #                              #   the determinism test suite
 #   scripts/ci.sh api          # + build all examples (the facade's
 #                              #   consumers) and run the JSON-schema
@@ -37,15 +39,18 @@
 #   scripts/ci.sh bench        # + record BENCH_stats.json (fast mode):
 #                              #   seq-vs-parallel throughput, the
 #                              #   central-vs-sharded icnt exchange
-#                              #   (sharded_icnt), and the ABL-1
+#                              #   (sharded_icnt), the always-tick vs
+#                              #   fast_forward jump loop before/after
+#                              #   (fast_forward), and the ABL-1
 #                              #   per_stream_slot_indexed vs
 #                              #   per_stream_by_id comparison
 #   scripts/ci.sh perf         # + perf regression gate: rerun the
-#                              #   parallel/sharded_icnt/idle_skip
-#                              #   benches and fail on >15% throughput
-#                              #   regression vs the BENCH_stats.json
-#                              #   baseline (skips cleanly when no
-#                              #   baseline has been recorded yet)
+#                              #   parallel/sharded_icnt/idle_skip/
+#                              #   fast_forward benches and fail on
+#                              #   >15% throughput regression vs the
+#                              #   BENCH_stats.json baseline (skips
+#                              #   cleanly when no baseline has been
+#                              #   recorded yet)
 #   scripts/ci.sh profile      # + rebuild with --features profile and
 #                              #   print the per-phase wall-clock table
 #                              #   for the idle_tail scenario (where
@@ -81,26 +86,31 @@ if [[ "${1:-}" == "determinism" ]]; then
             ref=""
             for t in 1 2 4 8; do
                 for skip in 1 0; do
-                    out="$TMP/${bench}_${mode}_${t}_${skip}.json"
-                    "$BIN" run --bench "$bench" \
-                        --preset sm7_titanv_mini \
-                        --stat-mode "$mode" --sim-threads "$t" \
-                        -o idle_skip "$skip" \
-                        --stats-json "$out" >/dev/null
-                    if [[ -z "$ref" ]]; then
-                        ref="$out"
-                    else
-                        cmp "$ref" "$out" || {
-                            echo "DETERMINISM FAILURE: $bench/$mode" \
-                                 "diverged at --sim-threads $t" \
-                                 "idle_skip $skip"
-                            exit 1
-                        }
-                    fi
+                    for ff in 1 0; do
+                        out="$TMP/${bench}_${mode}_${t}_${skip}_${ff}.json"
+                        "$BIN" run --bench "$bench" \
+                            --preset sm7_titanv_mini \
+                            --stat-mode "$mode" --sim-threads "$t" \
+                            -o idle_skip "$skip" \
+                            -o fast_forward "$ff" \
+                            --stats-json "$out" >/dev/null
+                        if [[ -z "$ref" ]]; then
+                            ref="$out"
+                        else
+                            cmp "$ref" "$out" || {
+                                echo "DETERMINISM FAILURE:" \
+                                     "$bench/$mode diverged at" \
+                                     "--sim-threads $t" \
+                                     "idle_skip $skip" \
+                                     "fast_forward $ff"
+                                exit 1
+                            }
+                        fi
+                    done
                 done
             done
             echo "  $bench/$mode: byte-identical across threads" \
-                 "1/2/4/8 x idle_skip 1/0"
+                 "1/2/4/8 x idle_skip 1/0 x fast_forward 1/0"
         done
     done
     # (the determinism *test suite* already ran as part of the
@@ -302,7 +312,8 @@ if [[ "${1:-}" == "perf" ]]; then
 import json, sys
 base = json.load(open(sys.argv[1]))
 new = json.load(open(sys.argv[2]))
-GATE_SECTIONS = ["parallel", "sharded_icnt", "idle_skip"]
+GATE_SECTIONS = ["parallel", "sharded_icnt", "idle_skip",
+                 "fast_forward"]
 THRESHOLD = 0.85  # fail below 85% of baseline (>15% regression)
 checked, failures = 0, []
 for sec in GATE_SECTIONS:
@@ -373,9 +384,14 @@ doc["note"] = ("Recorded by scripts/ci.sh bench (fast mode). "
                "at --sim-threads 1/2/4/8) / idle_skip (always-tick "
                "vs the idle-aware active set, bench1/bench3/"
                "idle_tail on sm7_titanv at --sim-threads 1/4/8) / "
+               "fast_forward (always-tick vs the event-horizon jump "
+               "loop, same workloads and thread counts — the PR-9 "
+               "before/after, with fast_forward 0 as the measured "
+               "baseline) / "
                "abl1 (per_stream_slot_indexed vs per_stream_by_id). "
                "scripts/ci.sh perf gates >15% regressions against "
-               "the parallel + sharded_icnt + idle_skip sections.")
+               "the parallel + sharded_icnt + idle_skip + "
+               "fast_forward sections.")
 with open(main_path, "w") as f:
     json.dump(doc, f, indent=2)
     f.write("\n")
