@@ -1,0 +1,49 @@
+//! Observability tour: record a run with `obs_enabled`, export the
+//! Chrome `trace_event` document (load it at <https://ui.perfetto.dev>
+//! or `chrome://tracing`), rebuild the per-stream Gantt chart from
+//! the very same event stream, and print one interval-metrics
+//! exposition — all through the `streamsim::api` facade.
+//!
+//! ```bash
+//! cargo run --release --example obs_trace > trace.json
+//! ```
+//!
+//! The CLI equivalent is `streamsim run --bench l2_lat --trace-out
+//! trace.json --metrics-interval 500`; over the wire it is the
+//! `trace` and `metrics` verbs (see docs/PROTOCOL.md).
+
+use streamsim::api::{SimBuilder, StatMode};
+use streamsim::obs::trace::kernel_spans;
+use streamsim::timeline;
+
+fn main() -> anyhow::Result<()> {
+    let mut session = SimBuilder::preset("sm7_titanv_mini")
+        .stat_mode(StatMode::PerStream)
+        .obs_enabled(true) // off by default; recording is opt-in
+        .bench("l2_lat")
+        .build()?;
+
+    // sample a mid-run interval the way --metrics-interval does
+    let before = session.snapshot();
+    session.run_to_idle()?;
+    let after = session.snapshot();
+    let diff = after.diff(&before)?;
+    eprintln!("{}", streamsim::obs::metrics::render_interval(
+        after.total_cycles(), &diff));
+
+    // the recorded kernel spans are the gpu_kernel_time windows
+    for (stream, uid, name, start, end) in
+        kernel_spans(session.events())
+    {
+        eprintln!("stream {stream} kernel {uid} ({name}): \
+                   cycles {start}..{end}");
+    }
+
+    // the event stream alone is enough to redraw the timeline
+    let tracker = timeline::tracker_from_events(session.events());
+    eprintln!("{}", timeline::render_gantt(&tracker, 72));
+
+    // stdout gets the Perfetto-loadable document
+    println!("{}", session.trace_json());
+    Ok(())
+}

@@ -102,8 +102,8 @@ pub mod session;
 pub use batch::BatchRunner;
 pub use error::{ApiError, ConfigNote, ConfigNoteKind, ServiceError};
 pub use query::{QueryRow, Snapshot, SnapshotDiff, StatsQuery};
-pub use service::{CancelToken, JobHandle, Priority, SimJob,
-                  SimService, DEFAULT_QUEUE_BOUND};
+pub use service::{CancelToken, JobHandle, Priority, ServiceObserver,
+                  SimJob, SimService, DEFAULT_QUEUE_BOUND};
 pub use session::{SimBuilder, SimSession};
 
 // The versioned result-document schema (one serializer for JSON, CSV

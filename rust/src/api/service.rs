@@ -47,9 +47,17 @@ use crate::api::error::{ApiError, ServiceError};
 use crate::api::query::Snapshot;
 use crate::api::session::{SimBuilder, SimSession};
 use crate::config::SimConfig;
+use crate::obs::{EventKind, Recorder};
 use crate::sim::parallel;
 use crate::stats::export::ServiceStats;
 use crate::Cycle;
+
+/// Shared service-side event recorder: the worker pool stamps
+/// job-lifecycle events into it ([`EventKind::JobStart`] /
+/// [`EventKind::JobFinish`]), the server front-end adds
+/// [`EventKind::MemoHit`]s. A plain mutex is fine — events are a few
+/// per *job*, not per cycle.
+pub type ServiceObserver = Arc<Mutex<Recorder>>;
 
 /// Warm sessions each worker keeps around, oldest evicted first.
 const WARM_POOL_CAP: usize = 4;
@@ -422,7 +430,7 @@ impl SimService {
     /// Service with an explicit submission-queue bound (clamped to at
     /// least 1): at most `queue_bound` accepted-but-unstarted jobs.
     pub fn with_queue_bound(threads: u32, queue_bound: usize) -> Self {
-        Self::build_service(threads, queue_bound, true)
+        Self::build_service(threads, queue_bound, true, None)
     }
 
     /// Service whose workers stay parked until
@@ -430,23 +438,34 @@ impl SimService {
     /// bound enforced) while paused — this is how tests fill the
     /// queue deterministically.
     pub fn paused(threads: u32, queue_bound: usize) -> Self {
-        Self::build_service(threads, queue_bound, false)
+        Self::build_service(threads, queue_bound, false, None)
     }
 
-    fn build_service(threads: u32, queue_bound: usize, running: bool)
-        -> Self {
+    /// Service whose workers stamp job-lifecycle events into a shared
+    /// [`ServiceObserver`] (the server front-end's `trace` verb reads
+    /// it back). Workers spawn in the constructor, so the observer
+    /// must be supplied here, not attached later.
+    pub fn with_observer(threads: u32, queue_bound: usize,
+                         observer: ServiceObserver) -> Self {
+        Self::build_service(threads, queue_bound, true, Some(observer))
+    }
+
+    fn build_service(threads: u32, queue_bound: usize, running: bool,
+                     observer: Option<ServiceObserver>) -> Self {
         let threads = parallel::resolve_threads(threads, u32::MAX);
         let queue_bound = queue_bound.max(1);
         let queue = Arc::new(LaneQueue::new(queue_bound));
         let gate = Arc::new(Gate::new(running));
         let counters = Arc::new(Counters::default());
         let workers = (0..threads)
-            .map(|_| {
+            .map(|worker| {
                 let queue = Arc::clone(&queue);
                 let gate = Arc::clone(&gate);
                 let counters = Arc::clone(&counters);
+                let obs = observer.clone();
                 std::thread::spawn(move || {
-                    worker_loop(&queue, &gate, &counters)
+                    worker_loop(&queue, &gate, &counters, worker,
+                                obs.as_ref())
                 })
             })
             .collect();
@@ -544,17 +563,39 @@ fn worker_loop(
     queue: &LaneQueue,
     gate: &Gate,
     counters: &Counters,
+    worker: usize,
+    obs: Option<&ServiceObserver>,
 ) {
     let mut pool: Vec<(SimConfig, SimSession)> = Vec::new();
+    let mut jobno = 0u64;
     loop {
         gate.wait_open();
         let Some(item) = queue.pop() else { break };
         counters.note_dequeue();
+        if let Some(o) = obs {
+            o.lock().unwrap().record(
+                0, EventKind::JobStart { worker, job: jobno });
+        }
         let result = run_job(&mut pool, item.job, counters);
         counters.jobs_run.fetch_add(1, Ordering::Relaxed);
         if result.is_err() {
             counters.job_errors.fetch_add(1, Ordering::Relaxed);
         }
+        if let Some(o) = obs {
+            let cycles = match &result {
+                Ok(snap) => snap.total_cycles(),
+                Err(e) => e
+                    .partial_snapshot()
+                    .map_or(0, |s| s.total_cycles()),
+            };
+            o.lock().unwrap().record(cycles, EventKind::JobFinish {
+                worker,
+                job: jobno,
+                cycles,
+                ok: result.is_ok(),
+            });
+        }
+        jobno += 1;
         // the handle may have been dropped; the job still ran
         let _ = item.reply.send(result);
     }
@@ -884,6 +925,39 @@ mod tests {
         let stats = service.shutdown();
         assert_eq!(stats.jobs_run, 2);
         assert_eq!(stats.job_errors, 1);
+    }
+
+    #[test]
+    fn observer_records_the_job_lifecycle() {
+        let observer: ServiceObserver =
+            Arc::new(Mutex::new(Recorder::new()));
+        let service = SimService::with_observer(
+            1, 8, Arc::clone(&observer));
+        let ok = service.submit(job("l2_lat", StatMode::PerStream))
+            .unwrap();
+        let bad = service
+            .submit(job("l2_lat", StatMode::PerStream)
+                .panic_for_test())
+            .unwrap();
+        let snap = ok.wait().unwrap();
+        assert!(bad.wait().is_err());
+        service.shutdown();
+        let r = observer.lock().unwrap();
+        let finishes: Vec<(u64, Cycle, bool)> = r.events().iter()
+            .filter_map(|e| match e.kind {
+                EventKind::JobFinish { job, cycles, ok, .. } => {
+                    Some((job, cycles, ok))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(finishes.len(), 2);
+        assert_eq!(finishes[0], (0, snap.total_cycles(), true));
+        assert_eq!(finishes[1], (1, 0, false));
+        let starts = r.events().iter()
+            .filter(|e| matches!(e.kind, EventKind::JobStart { .. }))
+            .count();
+        assert_eq!(starts, 2);
     }
 
     #[test]

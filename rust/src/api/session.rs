@@ -145,6 +145,15 @@ impl SimBuilder {
         self.set("fast_forward", if on { "1" } else { "0" })
     }
 
+    /// Cycle-stamped event recording ([`crate::obs`], default off).
+    /// `true` attaches a bounded recorder to the clock loop; read the
+    /// events via [`SimSession::events`] or export with
+    /// [`SimSession::trace_json`]. Stats are byte-identical either
+    /// way (pinned by `tests/obs.rs`).
+    pub fn obs_enabled(self, on: bool) -> Self {
+        self.set("obs_enabled", if on { "1" } else { "0" })
+    }
+
     /// One `-key value` override (applied after preset, config file
     /// and the typed knobs, in key order — the CLI's semantics).
     pub fn set(mut self, key: &str, value: &str) -> Self {
@@ -533,6 +542,20 @@ impl SimSession {
     /// ASCII timeline of the kernels finished so far.
     pub fn render_timeline(&self, width: usize) -> String {
         self.sim.render_timeline(width)
+    }
+
+    /// The recorded observability events ([`crate::obs`]), in
+    /// emission order — empty unless the session was built with
+    /// [`SimBuilder::obs_enabled`] (or `-obs_enabled 1`).
+    pub fn events(&self) -> &[crate::obs::Event] {
+        self.sim.obs_events()
+    }
+
+    /// The recorded events as a Chrome `trace_event` JSON document
+    /// (loadable in Perfetto / `chrome://tracing`) — see
+    /// [`crate::obs::trace::chrome_trace_json`].
+    pub fn trace_json(&self) -> String {
+        crate::obs::trace::chrome_trace_json(self.events())
     }
 
     /// Consume the session and produce its final [`Snapshot`] by

@@ -76,6 +76,13 @@ pub struct RunArgs {
     /// Write a machine-readable result document
     /// (`--stats-json` / `--json`; `-` = stdout).
     pub json: Option<PathBuf>,
+    /// Write the run's Chrome trace-event document (`--trace-out`;
+    /// `-` = stdout). Implies `obs_enabled 1`.
+    pub trace_out: Option<PathBuf>,
+    /// Print a Prometheus-style interval exposition every N simulated
+    /// cycles (`--metrics-interval`; snapshot-diff based, so the
+    /// exported stats are unchanged).
+    pub metrics_interval: Option<u64>,
 }
 
 impl Default for RunArgs {
@@ -94,6 +101,8 @@ impl Default for RunArgs {
             verbose: false,
             power: false,
             json: None,
+            trace_out: None,
+            metrics_interval: None,
         }
     }
 }
@@ -122,6 +131,10 @@ impl RunArgs {
             b = b.bench(bench);
         } else if let Some(trace) = &self.trace {
             b = b.trace(trace);
+        }
+        // a requested trace export needs the event recorder on
+        if self.trace_out.is_some() {
+            b = b.obs_enabled(true);
         }
         b.verbose(self.verbose)
     }
@@ -261,6 +274,16 @@ pub const COMMANDS: &[CommandSpec] = &[
             FlagSpec { flags: "--stats-json | --json", value: "PATH",
                        help: "write the versioned result document \
                               ('-' = stdout)" },
+            FlagSpec { flags: "--trace-out", value: "PATH",
+                       help: "write the run's cycle-stamped event \
+                              trace as Chrome trace_event JSON, \
+                              loadable in Perfetto ('-' = stdout); \
+                              implies '-o obs_enabled 1'" },
+            FlagSpec { flags: "--metrics-interval", value: "N",
+                       help: "print a Prometheus-style per-stream \
+                              metrics exposition every N simulated \
+                              cycles (snapshot-diff based; the \
+                              exported stats are unchanged)" },
             FlagSpec { flags: "--verbose", value: "",
                        help: "echo kernel launch/exit lines and the \
                               fast-forward jump histogram" },
@@ -513,6 +536,22 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     "--csv" => {
                         a.csv = Some(next_val("--csv", &mut it)?.into());
                     }
+                    "--trace-out" => {
+                        a.trace_out = Some(
+                            next_val("--trace-out", &mut it)?.into());
+                    }
+                    "--metrics-interval" => {
+                        let n: u64 =
+                            next_val("--metrics-interval", &mut it)?
+                                .parse()
+                                .context("--metrics-interval must be \
+                                          a positive integer")?;
+                        if n == 0 {
+                            bail!("--metrics-interval must be at \
+                                   least 1");
+                        }
+                        a.metrics_interval = Some(n);
+                    }
                     "--verbose" => a.verbose = true,
                     other => bail!("unknown flag '{other}' for run"),
                 }
@@ -715,6 +754,44 @@ fn emit_doc(out: &mut String, path: &Path, doc: &str,
     Ok(())
 }
 
+/// Step the session to idle in `interval`-cycle slices, appending
+/// one Prometheus-style interval exposition
+/// ([`crate::obs::metrics::render_interval`]) per slice to
+/// `metrics_out`. Returns the cycle-limit error (like the plain run
+/// path) so the partial stats still print; other errors abort.
+fn run_with_metrics(
+    session: &mut crate::api::SimSession,
+    interval: u64,
+    metrics_out: &mut String,
+) -> Result<Option<ApiError>> {
+    let mut prev = session.snapshot();
+    while !session.idle() {
+        let target = session.cycle() + interval;
+        // step_until is one clamped tick — loop it to the interval
+        // boundary (the same cadence the server `stream` verb uses)
+        let mut limit = None;
+        while !session.idle() && session.cycle() < target {
+            match session.step_until(target) {
+                Ok(()) => {}
+                Err(e @ ApiError::CycleLimit { .. }) => {
+                    limit = Some(e);
+                    break;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let snap = session.snapshot();
+        let diff = snap.diff(&prev)?;
+        metrics_out.push_str(&crate::obs::metrics::render_interval(
+            snap.total_cycles(), &diff));
+        prev = snap;
+        if limit.is_some() {
+            return Ok(limit);
+        }
+    }
+    Ok(None)
+}
+
 /// Execute a parsed command; returns the text to print.
 pub fn execute(cmd: Command) -> Result<String> {
     match cmd {
@@ -730,10 +807,15 @@ pub fn execute(cmd: Command) -> Result<String> {
             // a cycle-limit trip no longer discards the stats: the
             // partial breakdowns are printed (and exported) like a
             // finished run, then the command still fails
-            let limit = match session.run_to_idle() {
-                Ok(()) => None,
-                Err(e @ ApiError::CycleLimit { .. }) => Some(e),
-                Err(e) => return Err(e.into()),
+            let mut metrics_out = String::new();
+            let limit = match a.metrics_interval {
+                Some(interval) => run_with_metrics(
+                    &mut session, interval, &mut metrics_out)?,
+                None => match session.run_to_idle() {
+                    Ok(()) => None,
+                    Err(e @ ApiError::CycleLimit { .. }) => Some(e),
+                    Err(e) => return Err(e.into()),
+                },
             };
             let summary = session.config().summary();
             // fast-forward jump counters live on the session, not
@@ -745,6 +827,10 @@ pub fn execute(cmd: Command) -> Result<String> {
             } else {
                 None
             };
+            // the trace document must be rendered while the session
+            // (and its recorder) is still alive
+            let trace_doc =
+                a.trace_out.as_ref().map(|_| session.trace_json());
             // finished — move the stats out instead of cloning them
             let snap = session.into_snapshot();
             let mut out = String::new();
@@ -790,6 +876,9 @@ pub fn execute(cmd: Command) -> Result<String> {
             if let Some(table) = jump_table {
                 out.push_str(&table);
             }
+            if !metrics_out.is_empty() {
+                out.push_str(&metrics_out);
+            }
             let mut stdout_docs = 0u32;
             if let Some(csv) = &a.csv {
                 emit_doc(&mut out, csv, &snap.to_csv(StatDomain::L2),
@@ -798,6 +887,11 @@ pub fn execute(cmd: Command) -> Result<String> {
             if let Some(json) = &a.json {
                 emit_doc(&mut out, json, &snap.to_json(),
                          &mut stdout_docs)?;
+            }
+            if let (Some(path), Some(doc)) =
+                (&a.trace_out, &trace_doc)
+            {
+                emit_doc(&mut out, path, doc, &mut stdout_docs)?;
             }
             if let Some(e) = limit {
                 bail!("{out}\nrun aborted: {e}");
@@ -1232,10 +1326,84 @@ mod tests {
         for flag in ["--bench", "--trace", "--preset", "--stat-mode",
                      "--serialize", "--sim-threads", "--config", "-o",
                      "--timeline", "--power", "--csv", "--stats-json",
-                     "--json", "--verbose"] {
+                     "--json", "--trace-out", "--metrics-interval",
+                     "--verbose"] {
             assert!(table.contains(flag),
                     "parser flag {flag} missing from COMMANDS table");
         }
+    }
+
+    #[test]
+    fn parses_trace_out_and_metrics_interval() {
+        let cmd = parse(&sv(&["run", "--bench", "l2_lat",
+                              "--trace-out", "/tmp/t.json",
+                              "--metrics-interval", "64"])).unwrap();
+        let Command::Run(a) = cmd else { panic!("{cmd:?}") };
+        assert_eq!(a.trace_out, Some(PathBuf::from("/tmp/t.json")));
+        assert_eq!(a.metrics_interval, Some(64));
+        // --trace-out implies the recorder knob on the builder
+        let cfg = a.to_builder().build_config().unwrap();
+        assert!(cfg.obs_enabled);
+        // without it the knob stays off
+        let plain = RunArgs {
+            bench: Some("l2_lat".into()),
+            ..RunArgs::default()
+        };
+        assert!(!plain.to_builder().build_config().unwrap()
+            .obs_enabled);
+        // interval 0 is rejected at parse time
+        assert!(parse(&sv(&["run", "--bench", "l2_lat",
+                            "--metrics-interval", "0"])).is_err());
+    }
+
+    #[test]
+    fn execute_run_writes_a_trace_document() {
+        let path = std::env::temp_dir()
+            .join("streamsim_cli_trace.json");
+        let _ = std::fs::remove_file(&path);
+        let out = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "minimal".into(),
+            trace_out: Some(path.clone()),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(out.contains("wrote"), "{out}");
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let v = crate::server::json::parse(&doc)
+            .expect("trace document parses as JSON");
+        let events = v.get("traceEvents")
+            .and_then(crate::server::json::Json::as_arr)
+            .expect("traceEvents array");
+        assert!(!events.is_empty(), "{doc}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn metrics_interval_prints_expositions() {
+        let out = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "minimal".into(),
+            metrics_interval: Some(64),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        assert!(out.contains("# TYPE streamsim_cycle gauge"), "{out}");
+        assert!(out.contains("streamsim_stream_increment{domain="),
+                "{out}");
+        // the interval loop must not change the simulation itself
+        let plain = execute(Command::Run(RunArgs {
+            bench: Some("l2_lat".into()),
+            preset: "minimal".into(),
+            ..RunArgs::default()
+        }))
+        .unwrap();
+        let cycles_line = |s: &str| {
+            s.lines()
+                .find(|l| l.starts_with("cycles:"))
+                .map(str::to_string)
+        };
+        assert_eq!(cycles_line(&out), cycles_line(&plain));
     }
 
     #[test]

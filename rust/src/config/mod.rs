@@ -99,6 +99,14 @@ pub struct SimConfig {
     /// DRAM serviced requests per partition per cycle (throughput cap).
     pub dram_per_cycle: u32,
 
+    // ---- observability ---------------------------------------------------
+    /// Cycle-stamped event recording ([`crate::obs`]). Off by default
+    /// so the byte-compared determinism paths run with zero recording
+    /// overhead; `1` attaches a bounded [`crate::obs::Recorder`] to
+    /// the clock loop (stats stay byte-identical either way — the
+    /// recorder never touches a counter).
+    pub obs_enabled: bool,
+
     // ---- limits ----------------------------------------------------------
     /// Safety valve for runaway simulations.
     pub max_cycles: u64,
@@ -194,6 +202,7 @@ impl SimConfig {
             "icnt_sharded" => self.icnt_sharded = b(val)?,
             "idle_skip" => self.idle_skip = b(val)?,
             "fast_forward" => self.fast_forward = b(val)?,
+            "obs_enabled" => self.obs_enabled = b(val)?,
             "dram_latency" => self.dram_latency = val.parse()?,
             "dram_per_cycle" => self.dram_per_cycle = val.parse()?,
             "max_cycles" => self.max_cycles = val.parse()?,
@@ -345,6 +354,7 @@ pub mod presets {
             icnt_sharded: true,
             idle_skip: true,
             fast_forward: true,
+            obs_enabled: false,
             dram_latency: 160,
             dram_per_cycle: 2,
             max_cycles: 200_000_000,
@@ -513,6 +523,20 @@ l2_latency 99   # trailing comment
         assert!(c.summary().contains("fast_forward=0"));
         assert!(c.apply_overrides(&parse_config_text(
             "-fast_forward maybe\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn obs_knob_defaults_off_and_overrides() {
+        for name in PRESETS {
+            assert!(!SimConfig::preset(name).unwrap().obs_enabled,
+                    "{name}: event recording must default off");
+        }
+        let mut c = SimConfig::default();
+        let kv = parse_config_text("-obs_enabled 1\n").unwrap();
+        c.apply_overrides(&kv).unwrap();
+        assert!(c.obs_enabled);
+        assert!(c.apply_overrides(&parse_config_text(
+            "-obs_enabled maybe\n").unwrap()).is_err());
     }
 
     #[test]

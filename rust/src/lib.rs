@@ -42,7 +42,10 @@
 //! [`api::BatchRunner`] fans N independent sessions over a bounded
 //! worker pool. See `examples/quickstart.rs` for the narrated tour.
 //!
-//! Layout (see DESIGN.md for the full inventory):
+//! Layout (see DESIGN.md for the full inventory, and
+//! `docs/ARCHITECTURE.md` for a guided tour of the clock loop, the
+//! shard-merge determinism contract, fast-forward, and the
+//! service/server stack):
 //!
 //! * [`api`] — **the facade**: `SimBuilder`/`SimSession` lifecycle,
 //!   typed `ApiError`, live `Snapshot`/`StatsQuery` reads, the
@@ -70,6 +73,11 @@
 //!   directly.
 //! * [`activity`] — the per-component [`activity::Activity`] summary
 //!   the active-set scheduler's sleep decision is based on.
+//! * [`obs`] — the observability layer: a bounded, cycle-stamped
+//!   per-stream event recorder (off by default, `-o obs_enabled 1`),
+//!   the Chrome trace-event / Perfetto exporter behind `--trace-out`
+//!   and the server `trace` verb, and the Prometheus-style text
+//!   metrics behind `--metrics-interval` and the `metrics` verb.
 //! * [`harness`] — tip / clean / tip_serialized comparison harness,
 //!   built on the facade (also re-exported from [`api`]).
 //! * [`server`] — the framed-protocol network front-end over
@@ -82,6 +90,8 @@
 //!   JAX/Pallas artifacts (functional layer; Python never runs here).
 //! * [`util`] — offline-friendly helpers (PRNG, micro-bench, proptest-lite).
 
+#![warn(missing_docs)]
+
 pub mod activity;
 pub mod api;
 pub mod cache;
@@ -92,6 +102,7 @@ pub mod functional;
 pub mod harness;
 pub mod kernel;
 pub mod mem;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sim;

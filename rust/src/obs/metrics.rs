@@ -1,0 +1,257 @@
+//! Prometheus-style text exposition of the simulator's counters —
+//! the `metrics` server verb and the CLI `--metrics-interval`
+//! renderer.
+//!
+//! Three families:
+//!
+//! * [`render_interval`] — periodic per-stream increments built on
+//!   [`crate::api::Snapshot::diff`]: one sample per
+//!   `(domain, stream)` pair plus interval progress, emitted every N
+//!   cycles by `run --metrics-interval N`.
+//! * [`render_service`] — the [`ServiceStats`] counters (the
+//!   `service` stats-JSON section), one metric per field.
+//! * [`render_server`] — the [`ServerStats`] counters (the `server`
+//!   stats-JSON section), one metric per field.
+//!
+//! Every value is read from the same structs the JSON sections
+//! serialize, so the exposition can never disagree with the stats
+//! documents (pinned by `tests/obs.rs`). The output follows the
+//! Prometheus text format (`# HELP`/`# TYPE` headers, one
+//! `name{labels} value` sample per line).
+
+use std::fmt::Write as _;
+
+use crate::api::query::SnapshotDiff;
+use crate::stats::export::{ServerStats, ServiceStats};
+use crate::stats::{StatDomain, StatsEngine};
+use crate::Cycle;
+
+/// Write one metric family: headers plus a single unlabelled sample.
+fn family(out: &mut String, name: &str, kind: &str, help: &str,
+          value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Periodic interval sample: the per-stream increments of every stat
+/// domain between two snapshots, plus the interval's cycle/kernel
+/// progress. `cycle` is the simulation cycle the sample was taken
+/// at.
+pub fn render_interval(cycle: Cycle, diff: &SnapshotDiff) -> String {
+    let mut out = String::new();
+    family(&mut out, "streamsim_cycle", "gauge",
+           "Simulation cycle of this sample", cycle);
+    family(&mut out, "streamsim_interval_cycles", "gauge",
+           "Cycles covered by this interval", diff.cycles());
+    family(&mut out, "streamsim_interval_kernels_done", "gauge",
+           "Kernels retired during this interval",
+           diff.kernels_done().into());
+    let name = "streamsim_stream_increment";
+    let _ = writeln!(
+        out,
+        "# HELP {name} Per-stream counter increments over the \
+         interval, by stat domain");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    for d in StatDomain::ALL {
+        for (s, n) in diff.per_stream(d) {
+            let _ = writeln!(
+                out, "{name}{{domain=\"{}\",stream=\"{}\"}} {n}",
+                d.name(), StatsEngine::stream_label(*s));
+        }
+    }
+    out
+}
+
+/// The [`ServiceStats`] counters as an exposition — field for field
+/// the `service` stats-JSON section.
+pub fn render_service(s: &ServiceStats) -> String {
+    let mut out = String::new();
+    let fields: [(&str, &str, &str, u64); 13] = [
+        ("threads", "gauge", "Resident worker threads", s.threads),
+        ("queue_bound", "gauge", "Submission-queue capacity",
+         s.queue_bound),
+        ("jobs_run", "counter", "Jobs executed", s.jobs_run),
+        ("interactive_jobs", "counter",
+         "Jobs accepted on the interactive lane",
+         s.interactive_jobs),
+        ("batch_jobs", "counter", "Jobs accepted on the batch lane",
+         s.batch_jobs),
+        ("warm_hits", "counter",
+         "Jobs served by recycling a warm session", s.warm_hits),
+        ("cold_builds", "counter",
+         "Jobs that built a session from scratch", s.cold_builds),
+        ("job_errors", "counter", "Jobs that replied with an error",
+         s.job_errors),
+        ("budget_stops", "counter",
+         "Jobs cancelled by their cycle budget", s.budget_stops),
+        ("cancelled", "counter",
+         "Jobs cancelled through their cancel token", s.cancelled),
+        ("rejected_full", "counter",
+         "Submissions rejected at the queue bound", s.rejected_full),
+        ("queue_depth", "gauge", "Jobs queued right now",
+         s.queue_depth),
+        ("queue_peak", "counter",
+         "High-water mark of the queue depth", s.queue_peak),
+    ];
+    for (key, kind, help, value) in fields {
+        family(&mut out, &format!("streamsim_service_{key}"), kind,
+               help, value);
+    }
+    out
+}
+
+/// The [`ServerStats`] counters as an exposition — field for field
+/// the `server` stats-JSON section.
+pub fn render_server(s: &ServerStats) -> String {
+    let mut out = String::new();
+    let fields: [(&str, &str, &str, u64); 13] = [
+        ("proto_version", "gauge",
+         "Protocol version the server speaks", s.proto_version),
+        ("connections", "counter", "Connections accepted",
+         s.connections),
+        ("requests", "counter", "Protocol requests handled",
+         s.requests),
+        ("submits", "counter", "submit requests accepted",
+         s.submits),
+        ("waits", "counter", "wait/try_wait requests handled",
+         s.waits),
+        ("cancels", "counter", "cancel requests handled",
+         s.cancels),
+        ("streams", "counter", "stream requests handled",
+         s.streams),
+        ("deltas_sent", "counter", "Delta frames emitted",
+         s.deltas_sent),
+        ("memo_hits", "counter",
+         "submit requests answered from the memo cache",
+         s.memo_hits),
+        ("memo_misses", "counter",
+         "Memoizable submits that missed the cache", s.memo_misses),
+        ("memo_evictions", "counter", "Memo-cache entries evicted",
+         s.memo_evictions),
+        ("memo_evicted_bytes", "counter",
+         "Document bytes released by memo evictions",
+         s.memo_evicted_bytes),
+        ("proto_errors", "counter",
+         "Lines that failed to parse as a request", s.proto_errors),
+    ];
+    for (key, kind, help, value) in fields {
+        family(&mut out, &format!("streamsim_server_{key}"), kind,
+               help, value);
+    }
+    out
+}
+
+/// Extract one sample's value from an exposition (exact
+/// name-with-labels match) — the parsing aid the consistency tests
+/// and client examples use.
+pub fn sample_value(exposition: &str, name: &str) -> Option<u64> {
+    exposition.lines().find_map(|l| {
+        let rest = l.strip_prefix(name)?;
+        let rest = rest.strip_prefix(' ')?;
+        rest.parse().ok()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_exposition_matches_the_struct() {
+        let s = ServiceStats {
+            threads: 2,
+            queue_bound: 8,
+            jobs_run: 5,
+            interactive_jobs: 2,
+            batch_jobs: 3,
+            warm_hits: 3,
+            cold_builds: 2,
+            job_errors: 1,
+            budget_stops: 1,
+            cancelled: 1,
+            rejected_full: 4,
+            queue_depth: 0,
+            queue_peak: 6,
+        };
+        let text = render_service(&s);
+        assert_eq!(sample_value(&text, "streamsim_service_jobs_run"),
+                   Some(5));
+        assert_eq!(sample_value(&text, "streamsim_service_warm_hits"),
+                   Some(3));
+        assert_eq!(
+            sample_value(&text, "streamsim_service_queue_peak"),
+            Some(6));
+        // every sample line has a HELP and TYPE header
+        let samples = text.lines()
+            .filter(|l| !l.starts_with('#')).count();
+        let helps = text.lines()
+            .filter(|l| l.starts_with("# HELP")).count();
+        let types = text.lines()
+            .filter(|l| l.starts_with("# TYPE")).count();
+        assert_eq!(samples, 13);
+        assert_eq!(helps, 13);
+        assert_eq!(types, 13);
+    }
+
+    #[test]
+    fn server_exposition_matches_the_struct() {
+        let s = ServerStats {
+            proto_version: 2,
+            connections: 3,
+            requests: 12,
+            submits: 4,
+            waits: 4,
+            cancels: 1,
+            streams: 1,
+            deltas_sent: 9,
+            memo_hits: 2,
+            memo_misses: 2,
+            memo_evictions: 1,
+            memo_evicted_bytes: 512,
+            proto_errors: 0,
+        };
+        let text = render_server(&s);
+        assert_eq!(
+            sample_value(&text, "streamsim_server_proto_version"),
+            Some(2));
+        assert_eq!(sample_value(&text, "streamsim_server_requests"),
+                   Some(12));
+        assert_eq!(
+            sample_value(&text, "streamsim_server_memo_evicted_bytes"),
+            Some(512));
+        assert_eq!(sample_value(&text, "streamsim_server_nope"),
+                   None);
+    }
+
+    #[test]
+    fn interval_exposition_covers_every_domain() {
+        use crate::api::{SimBuilder, StatsQuery};
+        let _ = StatsQuery::new(); // facade import sanity
+        let mut s = SimBuilder::preset("minimal")
+            .bench("l2_lat")
+            .build()
+            .unwrap();
+        s.run_until_kernels_done(1).unwrap();
+        let base = s.snapshot();
+        s.run_to_idle().unwrap();
+        let later = s.snapshot();
+        let diff = later.diff(&base).unwrap();
+        let text = render_interval(later.total_cycles(), &diff);
+        assert_eq!(sample_value(&text, "streamsim_cycle"),
+                   Some(later.total_cycles()));
+        assert_eq!(
+            sample_value(&text, "streamsim_interval_cycles"),
+            Some(diff.cycles()));
+        for d in StatDomain::ALL {
+            for (stream, n) in diff.per_stream(d) {
+                let name = format!(
+                    "streamsim_stream_increment{{domain=\"{}\",\
+                     stream=\"{}\"}}",
+                    d.name(), StatsEngine::stream_label(*stream));
+                assert_eq!(sample_value(&text, &name), Some(*n),
+                           "domain {} stream {stream}", d.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! `streamsim::obs` — the per-stream observability layer: a bounded,
+//! **cycle-stamped** event recorder fed from the simulator's existing
+//! merge/launch/exit points, plus renderers over the recorded store
+//! (the Chrome `trace_event` exporter in [`trace`], the
+//! Prometheus-style text exposition in [`metrics`], and the ASCII
+//! Gantt in [`crate::timeline`]).
+//!
+//! # Determinism contract
+//!
+//! Events are stamped with **simulation cycles, never wall-clock**,
+//! and the recorder lives entirely outside the statistics engine:
+//! recording an event touches no counter, guard or window, so the
+//! exported stats JSON is byte-identical with observability on or
+//! off, at every `--sim-threads` value (pinned by `tests/obs.rs`).
+//! Every emission point runs on the main thread of the clock loop
+//! (launch, dispatch, kernel exit, clock jumps), so the event stream
+//! itself is also byte-identical across thread counts.
+//!
+//! Recording is off by default (`obs_enabled 0`) and is enabled via
+//! the config knob (`-obs_enabled 1`), the
+//! [`crate::api::SimBuilder::obs_enabled`] setter, the CLI
+//! `run --trace-out` flag, or the server `trace` verb.
+//!
+//! # Bounding
+//!
+//! The recorder is a fixed-capacity append-only log
+//! ([`DEFAULT_EVENT_CAP`] events unless overridden). Once full,
+//! further events are counted in [`Recorder::dropped`] and discarded
+//! — a long simulation degrades to a truncated trace, never to
+//! unbounded memory.
+
+pub mod metrics;
+pub mod trace;
+
+use std::collections::BTreeSet;
+
+use crate::{Cycle, KernelUid, StreamId, StreamSlot};
+
+/// Default recorder capacity (events). Chosen so a full trace costs a
+/// few MiB at most; override with [`Recorder::with_capacity`].
+pub const DEFAULT_EVENT_CAP: usize = 65_536;
+
+/// What happened. Simulator-side kinds are emitted from the clock
+/// loop's existing launch/dispatch/exit/jump points; service-side
+/// kinds from the [`crate::api::SimService`] worker loop and the
+/// server's memo probe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// A kernel left the launch queue for the GPU
+    /// (`GpuSim::launch_kernels`, the §3.2 `record_launch` point).
+    KernelLaunch {
+        /// CUDA stream the kernel runs on.
+        stream: StreamId,
+        /// Kernel launch uid.
+        uid: KernelUid,
+        /// Kernel name from the trace.
+        name: String,
+    },
+    /// A kernel retired (`GpuSim::on_kernel_exit`, the shard merge
+    /// point — the §3.2 `record_done` point).
+    KernelFinish {
+        /// CUDA stream the kernel ran on.
+        stream: StreamId,
+        /// Kernel launch uid.
+        uid: KernelUid,
+    },
+    /// One thread block was placed on a core
+    /// (`GpuSim::dispatch_tbs`).
+    TbDispatch {
+        /// CUDA stream of the owning kernel.
+        stream: StreamId,
+        /// Owning kernel's launch uid.
+        uid: KernelUid,
+        /// Destination core id.
+        core: u32,
+    },
+    /// A stream id was interned to a dense stat slot — the "interned
+    /// once" moment; recorded once per stream.
+    StreamIntern {
+        /// The interned stream id.
+        stream: StreamId,
+        /// The dense slot it maps to.
+        slot: StreamSlot,
+    },
+    /// The event-horizon fast-forward jumped the clock
+    /// (`GpuSim::advance_clock`); the event's cycle is the jump's
+    /// origin.
+    Jump {
+        /// Cycles covered by the jump (`now += skipped`).
+        skipped: Cycle,
+    },
+    /// A service worker picked up a job
+    /// ([`crate::api::SimService`]).
+    JobStart {
+        /// Worker index within the service pool.
+        worker: usize,
+        /// Worker-local job sequence number.
+        job: u64,
+    },
+    /// A service worker finished a job; the event's cycle is the
+    /// job's final simulated cycle count.
+    JobFinish {
+        /// Worker index within the service pool.
+        worker: usize,
+        /// Worker-local job sequence number.
+        job: u64,
+        /// Simulated cycles the job covered.
+        cycles: Cycle,
+        /// Whether the job succeeded (false = typed error).
+        ok: bool,
+    },
+    /// A server `submit` was answered from the memo cache without
+    /// running anything.
+    MemoHit {
+        /// The job id assigned to the memoized submission.
+        job: u64,
+    },
+}
+
+impl EventKind {
+    /// Stable machine-readable tag (used as the Chrome event
+    /// category and in debug listings).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EventKind::KernelLaunch { .. } => "kernel_launch",
+            EventKind::KernelFinish { .. } => "kernel_finish",
+            EventKind::TbDispatch { .. } => "tb_dispatch",
+            EventKind::StreamIntern { .. } => "stream_intern",
+            EventKind::Jump { .. } => "jump",
+            EventKind::JobStart { .. } => "job_start",
+            EventKind::JobFinish { .. } => "job_finish",
+            EventKind::MemoHit { .. } => "memo_hit",
+        }
+    }
+}
+
+/// One recorded event: a [`EventKind`] stamped with the simulation
+/// cycle it happened at (service-side events use the job-relative
+/// cycle described on each kind).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// Simulation cycle of the event.
+    pub cycle: Cycle,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+/// Bounded, cycle-stamped event log. Append-only while recording;
+/// renderers read the slice via [`Recorder::events`].
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    events: Vec<Event>,
+    cap: usize,
+    dropped: u64,
+    interned: BTreeSet<StreamId>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    /// Recorder with the default capacity.
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_EVENT_CAP)
+    }
+
+    /// Recorder bounded at `cap` events (`cap = 0` records nothing
+    /// and counts every event as dropped).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            events: Vec::new(),
+            cap,
+            dropped: 0,
+            interned: BTreeSet::new(),
+        }
+    }
+
+    /// Append one event; over capacity it is counted and discarded.
+    pub fn record(&mut self, cycle: Cycle, kind: EventKind) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push(Event { cycle, kind });
+    }
+
+    /// Record a stream-slot intern exactly once per stream (the
+    /// intern point is re-hit on every dispatch; only the first
+    /// observation is an event).
+    pub fn record_intern(&mut self, cycle: Cycle, stream: StreamId,
+                         slot: StreamSlot) {
+        if self.interned.insert(stream) {
+            self.record(cycle,
+                        EventKind::StreamIntern { stream, slot });
+        }
+    }
+
+    /// The recorded events, in emission order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The capacity bound this recorder was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events discarded because the recorder was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Forget everything (warm-reuse resets go through this so a
+    /// recycled session starts with an empty trace, like a cold one).
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.dropped = 0;
+        self.interned.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_and_bounds_at_capacity() {
+        let mut r = Recorder::with_capacity(2);
+        r.record(5, EventKind::Jump { skipped: 10 });
+        r.record(15, EventKind::KernelFinish { stream: 0, uid: 1 });
+        r.record(20, EventKind::Jump { skipped: 3 });
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.events()[0].cycle, 5);
+        assert_eq!(r.events()[1].kind.tag(), "kernel_finish");
+    }
+
+    #[test]
+    fn intern_events_dedupe_per_stream() {
+        let mut r = Recorder::new();
+        r.record_intern(0, 7, 0);
+        r.record_intern(3, 7, 0);
+        r.record_intern(4, 9, 1);
+        assert_eq!(r.len(), 2);
+        assert!(matches!(
+            r.events()[1].kind,
+            EventKind::StreamIntern { stream: 9, slot: 1 }));
+    }
+
+    #[test]
+    fn clear_resets_everything_including_intern_dedup() {
+        let mut r = Recorder::with_capacity(1);
+        r.record_intern(0, 1, 0);
+        r.record(1, EventKind::Jump { skipped: 2 });
+        assert_eq!(r.dropped(), 1);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+        // the same stream interns again after a reset
+        r.record_intern(0, 1, 0);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_records_nothing() {
+        let mut r = Recorder::with_capacity(0);
+        r.record(0, EventKind::Jump { skipped: 1 });
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 1);
+    }
+}

@@ -1,0 +1,321 @@
+//! Chrome `trace_event`-format JSON export of a recorded event log —
+//! loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`.
+//!
+//! Track layout:
+//!
+//! * **pid 1 `streams`** — one track (`tid`) per CUDA stream: kernel
+//!   execution windows as complete (`"ph":"X"`) events whose
+//!   `ts`/`dur` are **simulation cycles** (rendered as microseconds
+//!   by the viewers — the scale is arbitrary but consistent), plus
+//!   thread-block dispatches and the stream-slot intern moment as
+//!   instant (`"ph":"i"`) events.
+//! * **pid 2 `service`** — one track per service worker: each job as
+//!   a complete event whose duration is the job's simulated cycle
+//!   count, placed end-to-end in completion order (per-worker
+//!   utilization in simulated work). Memo hits land on a dedicated
+//!   `memo` track.
+//! * **pid 3 `clock`** — fast-forward jumps as instant events at
+//!   their origin cycle, `skipped` cycles in the args.
+//!
+//! The export is a pure function of the event slice: same events,
+//! same bytes (the cross-thread trace-identity test leans on this).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+use crate::obs::{Event, EventKind};
+use crate::stats::export::esc;
+use crate::{Cycle, KernelUid, StreamId};
+
+/// Track (`pid`) hosting the per-stream rows.
+pub const PID_STREAMS: u64 = 1;
+/// Track (`pid`) hosting the per-service-worker rows.
+pub const PID_SERVICE: u64 = 2;
+/// Track (`pid`) hosting the clock/fast-forward row.
+pub const PID_CLOCK: u64 = 3;
+/// `tid` of the memo-hit row inside [`PID_SERVICE`].
+pub const MEMO_TID: u64 = 1_000_000;
+
+/// Kernel execution spans recoverable from an event log: launch and
+/// finish events paired by `(stream, uid)`, as
+/// `(stream, uid, name, start_cycle, end_cycle)` in finish order.
+/// Unfinished kernels (launch without finish) are omitted — the same
+/// rule as [`crate::stats::KernelTimeTracker::finished`], which the
+/// span-agreement test pins.
+pub fn kernel_spans(events: &[Event])
+    -> Vec<(StreamId, KernelUid, String, Cycle, Cycle)> {
+    let mut launches: BTreeMap<(StreamId, KernelUid),
+                               (Cycle, String)> = BTreeMap::new();
+    let mut spans = Vec::new();
+    for e in events {
+        match &e.kind {
+            EventKind::KernelLaunch { stream, uid, name } => {
+                launches.insert((*stream, *uid),
+                                (e.cycle, name.clone()));
+            }
+            EventKind::KernelFinish { stream, uid } => {
+                if let Some((start, name)) =
+                    launches.remove(&(*stream, *uid))
+                {
+                    spans.push((*stream, *uid, name, start, e.cycle));
+                }
+            }
+            _ => {}
+        }
+    }
+    spans
+}
+
+fn meta(out: &mut String, pid: u64, tid: Option<u64>, name: &str) {
+    if !out.is_empty() {
+        out.push(',');
+    }
+    match tid {
+        None => {
+            let _ = write!(
+                out,
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\
+                 \"pid\":{pid},\"args\":{{\"name\":\"{}\"}}}}",
+                esc(name));
+        }
+        Some(tid) => {
+            let _ = write!(
+                out,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\
+                 \"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                esc(name));
+        }
+    }
+}
+
+fn complete(out: &mut String, name: &str, cat: &str, ts: Cycle,
+            dur: Cycle, pid: u64, tid: u64, args: &str) {
+    if !out.is_empty() {
+        out.push(',');
+    }
+    let _ = write!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"{cat}\",\"ph\":\"X\",\
+         \"ts\":{ts},\"dur\":{dur},\"pid\":{pid},\"tid\":{tid},\
+         \"args\":{{{args}}}}}",
+        esc(name));
+}
+
+fn instant(out: &mut String, name: &str, cat: &str, ts: Cycle,
+           pid: u64, tid: u64, args: &str) {
+    if !out.is_empty() {
+        out.push(',');
+    }
+    let _ = write!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"{cat}\",\"ph\":\"i\",\
+         \"ts\":{ts},\"s\":\"t\",\"pid\":{pid},\"tid\":{tid},\
+         \"args\":{{{args}}}}}",
+        esc(name));
+}
+
+/// Serialize an event log as one Chrome `trace_event` JSON document
+/// (`{"traceEvents":[...],"displayTimeUnit":"ms"}`). Metadata events
+/// naming every present process/track come first, then the data
+/// events in recorded order.
+pub fn chrome_trace_json(events: &[Event]) -> String {
+    let mut streams: BTreeSet<StreamId> = BTreeSet::new();
+    let mut workers: BTreeSet<usize> = BTreeSet::new();
+    let mut has_clock = false;
+    let mut has_memo = false;
+    for e in events {
+        match &e.kind {
+            EventKind::KernelLaunch { stream, .. }
+            | EventKind::KernelFinish { stream, .. }
+            | EventKind::TbDispatch { stream, .. }
+            | EventKind::StreamIntern { stream, .. } => {
+                streams.insert(*stream);
+            }
+            EventKind::Jump { .. } => has_clock = true,
+            EventKind::JobStart { worker, .. }
+            | EventKind::JobFinish { worker, .. } => {
+                workers.insert(*worker);
+            }
+            EventKind::MemoHit { .. } => has_memo = true,
+        }
+    }
+
+    let mut out = String::new();
+    if !streams.is_empty() {
+        meta(&mut out, PID_STREAMS, None, "streams");
+        for s in &streams {
+            meta(&mut out, PID_STREAMS, Some(*s),
+                 &format!("stream {s}"));
+        }
+    }
+    if !workers.is_empty() || has_memo {
+        meta(&mut out, PID_SERVICE, None, "service");
+        for w in &workers {
+            meta(&mut out, PID_SERVICE, Some(*w as u64),
+                 &format!("worker {w}"));
+        }
+        if has_memo {
+            meta(&mut out, PID_SERVICE, Some(MEMO_TID), "memo");
+        }
+    }
+    if has_clock {
+        meta(&mut out, PID_CLOCK, None, "clock");
+        meta(&mut out, PID_CLOCK, Some(0), "fast-forward");
+    }
+
+    // kernel spans (paired launch/finish), then the rest in recorded
+    // order — per-worker job spans are laid end-to-end by a cursor so
+    // each worker row reads as utilization in simulated cycles
+    for (stream, uid, name, start, end) in kernel_spans(events) {
+        complete(&mut out, &name, "kernel", start,
+                 end.saturating_sub(start), PID_STREAMS, stream,
+                 &format!("\"stream\":{stream},\"uid\":{uid}"));
+    }
+    let mut worker_cursor: BTreeMap<usize, Cycle> = BTreeMap::new();
+    let mut memo_cursor: Cycle = 0;
+    for e in events {
+        match &e.kind {
+            EventKind::TbDispatch { stream, uid, core } => {
+                instant(&mut out, "tb", "dispatch", e.cycle,
+                        PID_STREAMS, *stream,
+                        &format!("\"uid\":{uid},\"core\":{core}"));
+            }
+            EventKind::StreamIntern { stream, slot } => {
+                instant(&mut out, "intern", "intern", e.cycle,
+                        PID_STREAMS, *stream,
+                        &format!("\"slot\":{slot}"));
+            }
+            EventKind::Jump { skipped } => {
+                instant(&mut out, "jump", "fast_forward", e.cycle,
+                        PID_CLOCK, 0,
+                        &format!("\"skipped\":{skipped}"));
+            }
+            EventKind::JobFinish { worker, job, cycles, ok } => {
+                let cursor =
+                    worker_cursor.entry(*worker).or_insert(0);
+                let dur = (*cycles).max(1);
+                complete(&mut out, &format!("job {job}"), "job",
+                         *cursor, dur, PID_SERVICE, *worker as u64,
+                         &format!("\"job\":{job},\"cycles\":{cycles},\
+                                   \"ok\":{ok}"));
+                *cursor += dur;
+            }
+            EventKind::MemoHit { job } => {
+                instant(&mut out, "memo hit", "memo", memo_cursor,
+                        PID_SERVICE, MEMO_TID,
+                        &format!("\"job\":{job}"));
+                memo_cursor += 1;
+            }
+            EventKind::KernelLaunch { .. }
+            | EventKind::KernelFinish { .. }
+            | EventKind::JobStart { .. } => {}
+        }
+    }
+    format!("{{\"traceEvents\":[{out}],\"displayTimeUnit\":\"ms\"}}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::json;
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event { cycle: 0,
+                    kind: EventKind::StreamIntern { stream: 0,
+                                                    slot: 0 } },
+            Event { cycle: 0,
+                    kind: EventKind::KernelLaunch {
+                        stream: 0, uid: 1, name: "k_a".into() } },
+            Event { cycle: 2,
+                    kind: EventKind::TbDispatch {
+                        stream: 0, uid: 1, core: 3 } },
+            Event { cycle: 10, kind: EventKind::Jump { skipped: 5 } },
+            Event { cycle: 40,
+                    kind: EventKind::KernelFinish { stream: 0,
+                                                    uid: 1 } },
+            Event { cycle: 0,
+                    kind: EventKind::KernelLaunch {
+                        stream: 2, uid: 2, name: "k_b".into() } },
+            // uid 2 never finishes -> no span
+            Event { cycle: 0,
+                    kind: EventKind::JobStart { worker: 0, job: 1 } },
+            Event { cycle: 40,
+                    kind: EventKind::JobFinish {
+                        worker: 0, job: 1, cycles: 40, ok: true } },
+            Event { cycle: 40,
+                    kind: EventKind::JobFinish {
+                        worker: 0, job: 2, cycles: 10, ok: false } },
+            Event { cycle: 0, kind: EventKind::MemoHit { job: 3 } },
+        ]
+    }
+
+    #[test]
+    fn kernel_spans_pair_launch_and_finish() {
+        let spans = kernel_spans(&sample());
+        assert_eq!(spans.len(), 1, "unfinished kernels are omitted");
+        assert_eq!(spans[0],
+                   (0, 1, "k_a".to_string(), 0, 40));
+    }
+
+    #[test]
+    fn export_is_valid_json_with_expected_tracks() {
+        let doc = chrome_trace_json(&sample());
+        let v = json::parse(&doc).expect("trace parses");
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        // every entry carries ph + pid
+        for e in evs {
+            assert!(e.get("ph").is_some(), "{e}");
+            assert!(e.get("pid").is_some(), "{e}");
+        }
+        // the kernel span: ts 0, dur 40 on the stream-0 track
+        assert!(evs.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("k_a")
+                && e.get("ph").and_then(|p| p.as_str()) == Some("X")
+                && e.get("dur").and_then(|d| d.as_u64()) == Some(40)
+                && e.get("pid").and_then(|p| p.as_u64())
+                    == Some(PID_STREAMS)
+        }));
+        // the jump instant on the clock track
+        assert!(evs.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("jump")
+                && e.get("pid").and_then(|p| p.as_u64())
+                    == Some(PID_CLOCK)
+        }));
+        // track names for both streams
+        for want in ["stream 0", "stream 2", "worker 0", "memo"] {
+            assert!(evs.iter().any(|e| {
+                e.get("args").and_then(|a| a.get("name"))
+                    .and_then(|n| n.as_str()) == Some(want)
+            }), "missing track {want}");
+        }
+    }
+
+    #[test]
+    fn worker_jobs_lay_end_to_end() {
+        let doc = chrome_trace_json(&sample());
+        let v = json::parse(&doc).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let jobs: Vec<_> = evs.iter().filter(|e| {
+            e.get("cat").and_then(|c| c.as_str()) == Some("job")
+        }).collect();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get("ts").unwrap().as_u64(), Some(0));
+        assert_eq!(jobs[0].get("dur").unwrap().as_u64(), Some(40));
+        assert_eq!(jobs[1].get("ts").unwrap().as_u64(), Some(40),
+                   "second job starts where the first ended");
+        assert_eq!(jobs[1].get("args").unwrap().get("ok")
+                       .unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn empty_log_exports_an_empty_trace() {
+        let doc = chrome_trace_json(&[]);
+        assert_eq!(doc,
+                   "{\"traceEvents\":[],\"displayTimeUnit\":\"ms\"}");
+        json::parse(&doc).unwrap();
+    }
+}

@@ -22,9 +22,10 @@ use std::sync::atomic::Ordering::Relaxed;
 
 use crate::api::service::CancelToken;
 use crate::api::{ApiError, JobHandle, Snapshot};
+use crate::obs::EventKind;
 use crate::server::memo::MemoKey;
 use crate::server::proto::{JobSpec, Request, Response,
-                           PROTO_VERSION};
+                           MIN_PROTO_VERSION, PROTO_VERSION};
 use crate::server::ServerCtx;
 use crate::stats::export::SCHEMA_VERSION;
 use crate::stats::StatDomain;
@@ -171,6 +172,11 @@ fn do_submit(
     if let Some(key) = &memo_key {
         if let Some(doc) = ctx.memo.get(key) {
             jobs.insert(job_id, ConnJob::Memo { doc });
+            // the job never reaches a worker, so the service-side
+            // observer would miss it; record the short-circuit here
+            if let Ok(mut rec) = ctx.observer.lock() {
+                rec.record(0, EventKind::MemoHit { job: job_id });
+            }
             return send(writer, &Response::Submitted {
                 job_id,
                 memo_hit: true,
@@ -381,6 +387,76 @@ fn do_stream(
     send(writer, &resp)
 }
 
+/// `trace` with a spec: run it inline on the connection thread with
+/// observability forced on and reply with the Chrome trace-event
+/// document. A `cycle_budget` bounds the traced window (the trace
+/// covers whatever ran; no error). `trace` without a spec: render the
+/// server's own lifetime trace (service job lanes + memo hits) from
+/// the shared observer.
+fn do_trace(
+    ctx: &ServerCtx,
+    spec: Option<JobSpec>,
+    writer: &mut dyn Write,
+) -> io::Result<()> {
+    let Some(spec) = spec else {
+        let doc = match ctx.observer.lock() {
+            Ok(rec) => {
+                crate::obs::trace::chrome_trace_json(rec.events())
+            }
+            Err(_) => return send(writer, &error(
+                "internal",
+                "server observer poisoned".to_string())),
+        };
+        return send(writer, &Response::TraceDoc { doc });
+    };
+    if ctx.draining() {
+        return send(writer, &error(
+            "draining",
+            "server is draining; not accepting new jobs"
+                .to_string()));
+    }
+    let budget = spec.cycle_budget;
+    let mut session =
+        match spec.to_builder().obs_enabled(true).build() {
+            Ok(s) => s,
+            Err(e) => return send(
+                writer, &error(e.kind(), e.to_string())),
+        };
+    let run = match budget {
+        // step_until is one clamped tick — loop it to the budget
+        Some(b) => {
+            let mut r = Ok(());
+            while !session.idle() && session.cycle() < b {
+                r = session.step_until(b);
+                if r.is_err() {
+                    break;
+                }
+            }
+            r
+        }
+        None => session.run_to_idle(),
+    };
+    if let Err(e) = run {
+        return send(writer, &error(e.kind(), e.to_string()));
+    }
+    send(writer, &Response::TraceDoc { doc: session.trace_json() })
+}
+
+/// `metrics`: the live counters as Prometheus-style text — the
+/// `service` section families followed by the `server` section
+/// families, rendered from the same structs the `service_stats`
+/// document serializes (so the two views always agree).
+fn do_metrics(
+    ctx: &ServerCtx,
+    writer: &mut dyn Write,
+) -> io::Result<()> {
+    let text = format!(
+        "{}{}",
+        crate::obs::metrics::render_service(&ctx.service.stats()),
+        crate::obs::metrics::render_server(&ctx.server_stats()));
+    send(writer, &Response::MetricsText { text })
+}
+
 /// Handle one parsed request line. Returns `true` when the
 /// connection must close (version mismatch, shutdown).
 fn handle_line(
@@ -399,18 +475,24 @@ fn handle_line(
     };
     match req {
         Request::Hello { proto_version } => {
-            if proto_version != PROTO_VERSION {
+            let supported =
+                MIN_PROTO_VERSION..=PROTO_VERSION;
+            if !supported.contains(&proto_version) {
                 ctx.counters.proto_errors.fetch_add(1, Relaxed);
                 send(writer, &error("proto_version", format!(
-                    "server speaks proto_version {PROTO_VERSION}, \
+                    "server speaks proto_version \
+                     {MIN_PROTO_VERSION}..={PROTO_VERSION}, \
                      client sent {proto_version}")))?;
                 send(writer, &Response::Goodbye {
                     reason: "protocol version mismatch".to_string(),
                 })?;
                 return Ok(true);
             }
+            // echo the client's version: the verb set is additive
+            // across supported versions, so the negotiated dialect
+            // is simply what the client asked for
             send(writer, &Response::HelloOk {
-                proto_version: PROTO_VERSION,
+                proto_version,
                 schema_version: u64::from(SCHEMA_VERSION),
             })?;
         }
@@ -433,6 +515,12 @@ fn handle_line(
         Request::Stream { spec, interval } => {
             ctx.counters.streams.fetch_add(1, Relaxed);
             do_stream(ctx, spec, interval, writer)?;
+        }
+        Request::Trace { spec } => {
+            do_trace(ctx, spec, writer)?;
+        }
+        Request::Metrics => {
+            do_metrics(ctx, writer)?;
         }
         Request::ServiceStats => {
             send(writer, &Response::Stats {

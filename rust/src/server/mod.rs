@@ -28,11 +28,16 @@
 //! things:
 //!
 //! * [`proto::PROTO_VERSION`] — the framing and verb shapes in this
-//!   module. A client should open with
-//!   `{"verb":"hello","proto_version":1}`; any other version is
+//!   module. A client opens with
+//!   `{"verb":"hello","proto_version":N}`; the server accepts any
+//!   version in [`proto::MIN_PROTO_VERSION`]`..=`
+//!   [`proto::PROTO_VERSION`] (the verb set is additive, so a v1
+//!   client simply never sends the newer verbs) and echoes the
+//!   client's version in `hello_ok`. Anything outside the range is
 //!   answered with an `error` (code `proto_version`) plus a
-//!   `goodbye`, and the connection closes. `hello` is optional —
-//!   a version-matched client may skip it.
+//!   `goodbye`, and the connection closes. `hello` is optional — a
+//!   version-compatible client may skip it. The full version
+//!   history is in `docs/PROTOCOL.md`.
 //! * [`SCHEMA_VERSION`](crate::stats::export::SCHEMA_VERSION) — the
 //!   result-document schema carried *inside* `doc`/`partial`
 //!   fields, unchanged from the CLI/facade. `hello_ok` reports both
@@ -48,6 +53,8 @@
 //! | `try_wait {job_id}` | `pending` \| `job_done` \| `job_failed` | non-blocking poll |
 //! | `cancel {job_id}` | `cancel_ok` | trips the job's [`CancelToken`] |
 //! | `stream {spec, interval}` | `delta`* then `job_done`/`job_failed` | inline run, one `delta` per `interval` cycles |
+//! | `trace {spec?}` | `trace_doc {doc}` | v2; Chrome trace-event JSON — inline run with a spec, server lifetime trace without |
+//! | `metrics` | `metrics {text}` | v2; live counters, Prometheus text exposition |
 //! | `service_stats` | `stats {doc}` | live `server` + `service` counter document |
 //! | `shutdown` | pending results, then `goodbye` | global graceful drain |
 //!
@@ -146,11 +153,12 @@ use std::io::{self, BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::atomic::{AtomicBool, AtomicU64};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
-use crate::api::SimService;
+use crate::api::{ServiceObserver, SimService};
+use crate::obs::Recorder;
 use crate::server::memo::{MemoCache, DEFAULT_MEMO_BYTES,
                           DEFAULT_MEMO_CAPACITY};
 use crate::server::proto::PROTO_VERSION;
@@ -207,6 +215,10 @@ pub(crate) struct ServerCounters {
 /// cache, the counters, the drain flag, and the job-id well.
 pub(crate) struct ServerCtx {
     pub service: SimService,
+    /// The lifetime event recorder behind the spec-less `trace`
+    /// verb: service workers stamp job start/finish lanes into it,
+    /// and `submit` records memo short-circuits.
+    pub observer: ServiceObserver,
     pub memo: MemoCache,
     pub counters: ServerCounters,
     draining: AtomicBool,
@@ -215,9 +227,13 @@ pub(crate) struct ServerCtx {
 
 impl ServerCtx {
     fn new(config: &ServerConfig) -> Self {
+        let observer: ServiceObserver =
+            Arc::new(Mutex::new(Recorder::new()));
         Self {
-            service: SimService::with_queue_bound(
-                config.threads, config.queue_bound),
+            service: SimService::with_observer(
+                config.threads, config.queue_bound,
+                Arc::clone(&observer)),
+            observer,
             memo: MemoCache::new(config.memo_capacity,
                                  config.memo_bytes),
             counters: ServerCounters::default(),
@@ -442,8 +458,100 @@ mod tests {
             reason: "shutdown".to_string(),
         });
         // the final document carries both counter sections
-        assert!(doc.contains("\"server\":{\"proto_version\":1"));
+        assert!(doc.contains("\"server\":{\"proto_version\":2"));
         assert!(doc.contains("\"service\":{\"threads\":2"));
+    }
+
+    #[test]
+    fn v1_hello_is_still_accepted_and_echoed() {
+        let (responses, _doc) = run_lines(
+            ServerConfig::default(),
+            &[
+                Request::Hello { proto_version: 1 },
+                Request::Shutdown,
+            ],
+        );
+        assert_eq!(responses[0], Response::HelloOk {
+            proto_version: 1,
+            schema_version: u64::from(SCHEMA_VERSION),
+        });
+    }
+
+    #[test]
+    fn trace_verb_returns_a_chrome_document_for_a_spec() {
+        let (responses, _doc) = run_lines(
+            ServerConfig::default(),
+            &[
+                Request::Trace {
+                    spec: Some(JobSpec::bench("l2_lat")),
+                },
+                Request::Shutdown,
+            ],
+        );
+        let Response::TraceDoc { ref doc } = responses[0] else {
+            panic!("expected trace_doc, got {:?}", responses[0]);
+        };
+        let v = crate::server::json::parse(doc).unwrap();
+        let events = v.get("traceEvents")
+            .and_then(crate::server::json::Json::as_arr)
+            .expect("traceEvents array");
+        // at least one kernel span made it into the trace
+        assert!(events.iter().any(|e| {
+            e.get("ph").and_then(crate::server::json::Json::as_str)
+                == Some("X")
+        }));
+    }
+
+    #[test]
+    fn specless_trace_covers_the_service_job_lanes() {
+        let (responses, _doc) = run_lines(
+            ServerConfig::default(),
+            &[
+                Request::Submit { spec: JobSpec::bench("l2_lat") },
+                Request::Wait { job_id: 1 },
+                // the memoized resubmit shows up as a memo_hit event
+                Request::Submit { spec: JobSpec::bench("l2_lat") },
+                Request::Wait { job_id: 2 },
+                Request::Trace { spec: None },
+                Request::Shutdown,
+            ],
+        );
+        let Response::TraceDoc { ref doc } = responses[4] else {
+            panic!("expected trace_doc, got {:?}", responses[4]);
+        };
+        assert!(doc.contains("\"cat\":\"job\""),
+                "job lane span missing: {doc}");
+        assert!(doc.contains("\"name\":\"memo hit\""),
+                "memo instant missing: {doc}");
+    }
+
+    #[test]
+    fn metrics_verb_agrees_with_the_stats_document() {
+        let (responses, _doc) = run_lines(
+            ServerConfig::default(),
+            &[
+                Request::Submit { spec: JobSpec::bench("l2_lat") },
+                Request::Wait { job_id: 1 },
+                Request::Metrics,
+                Request::Shutdown,
+            ],
+        );
+        let Response::MetricsText { ref text } = responses[2] else {
+            panic!("expected metrics, got {:?}", responses[2]);
+        };
+        let sample = |name: &str| {
+            crate::obs::metrics::sample_value(text, name)
+                .unwrap_or_else(|| panic!("no sample {name}"))
+        };
+        // the metrics exposition and the stats document are rendered
+        // from the same counter structs; spot-check the join
+        assert_eq!(sample("streamsim_service_jobs_run"), 1);
+        assert_eq!(sample("streamsim_server_submits"), 1);
+        assert_eq!(sample("streamsim_server_proto_version"),
+                   PROTO_VERSION);
+        // requests counted so far when `metrics` was handled:
+        // submit, wait, metrics
+        assert_eq!(sample("streamsim_server_requests"), 3);
     }
 
     #[test]

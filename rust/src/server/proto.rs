@@ -21,9 +21,29 @@ use crate::server::json::{self, Json};
 use crate::stats::export::esc;
 
 /// Wire-protocol version. Bump on any request/response shape change;
-/// the server rejects a `hello` carrying any other version (see the
-/// compat rules in the [`crate::server`] docs).
-pub const PROTO_VERSION: u64 = 1;
+/// the server accepts a `hello` carrying any version in
+/// `MIN_PROTO_VERSION..=PROTO_VERSION` (verbs added since the
+/// client's version simply go unused) and rejects anything else —
+/// see the compat rules in [`crate::server`] and `docs/PROTOCOL.md`.
+///
+/// History: v1 = the PR-8 verb set (hello/submit/wait/try_wait/
+/// cancel/stream/service_stats/shutdown); v2 adds `trace` and
+/// `metrics`.
+pub const PROTO_VERSION: u64 = 2;
+
+/// Oldest protocol version the server still accepts in `hello`. Every
+/// v1 verb kept its exact v1 shape, so v1 clients interoperate
+/// unchanged.
+pub const MIN_PROTO_VERSION: u64 = 1;
+
+/// Every request verb, in the order `docs/PROTOCOL.md` documents
+/// them. One entry per [`Request`] variant — the protocol-doc drift
+/// test (`tests/protocol_doc.rs`) asserts the spec's verb headings
+/// match this list exactly.
+pub const VERBS: [&str; 10] = [
+    "hello", "submit", "wait", "try_wait", "cancel", "stream",
+    "trace", "metrics", "service_stats", "shutdown",
+];
 
 /// A scenario description as submitted over the wire — the protocol
 /// twin of the CLI `run` flag set, resolved through the same
@@ -226,6 +246,14 @@ pub enum Request {
     /// Run the spec inline, emitting a `delta` frame per `interval`
     /// cycles, then the final `job_done`.
     Stream { spec: JobSpec, interval: u64 },
+    /// With a spec: run it inline with event recording on and reply
+    /// one `trace_doc` frame carrying the Chrome `trace_event` JSON.
+    /// Without: reply the server-level trace (service job lifecycle
+    /// + memo hits). (v2)
+    Trace { spec: Option<JobSpec> },
+    /// Reply one `metrics` frame: the live server+service counters as
+    /// a Prometheus-style text exposition. (v2)
+    Metrics,
     /// Reply one `stats` frame with the live server+service counters.
     ServiceStats,
     /// Graceful drain: reject new work, finish in-flight jobs, send
@@ -271,6 +299,17 @@ impl Request {
                 spec.write_json(&mut out);
                 out.push('}');
             }
+            Request::Trace { spec } => match spec {
+                Some(spec) => {
+                    out.push_str("{\"verb\":\"trace\",\"spec\":");
+                    spec.write_json(&mut out);
+                    out.push('}');
+                }
+                None => out.push_str("{\"verb\":\"trace\"}"),
+            },
+            Request::Metrics => {
+                out.push_str("{\"verb\":\"metrics\"}");
+            }
             Request::ServiceStats => {
                 out.push_str("{\"verb\":\"service_stats\"}");
             }
@@ -311,6 +350,10 @@ impl Request {
                     v.get("spec").ok_or("stream needs 'spec'")?)?,
                 interval: field_u64(&v, "interval")?,
             }),
+            "trace" => Ok(Request::Trace {
+                spec: v.get("spec").map(JobSpec::parse).transpose()?,
+            }),
+            "metrics" => Ok(Request::Metrics),
             "service_stats" => Ok(Request::ServiceStats),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!("unknown verb '{other}'")),
@@ -358,6 +401,12 @@ pub enum Response {
         /// domains omitted.
         domains: Vec<(String, Vec<(String, u64)>)>,
     },
+    /// `trace` reply; `doc` is a Chrome `trace_event` JSON document
+    /// **verbatim** (loadable in Perfetto / `chrome://tracing`). (v2)
+    TraceDoc { doc: String },
+    /// `metrics` reply; `text` is a Prometheus-style exposition
+    /// (multi-line; newlines escaped inside the JSON string). (v2)
+    MetricsText { text: String },
     /// `service_stats` reply; `doc` is the server+service counter
     /// document.
     Stats { doc: String },
@@ -444,6 +493,16 @@ impl Response {
                     out.push('}');
                 }
                 out.push_str("}}");
+            }
+            Response::TraceDoc { doc } => {
+                let _ = write!(
+                    out, "{{\"verb\":\"trace_doc\",\"doc\":{doc}}}");
+            }
+            Response::MetricsText { text } => {
+                let _ = write!(
+                    out,
+                    "{{\"verb\":\"metrics\",\"text\":\"{}\"}}",
+                    esc(text));
             }
             Response::Stats { doc } => {
                 let _ = write!(
@@ -533,6 +592,15 @@ impl Response {
                     domains,
                 })
             }
+            "trace_doc" => Ok(Response::TraceDoc {
+                doc: v
+                    .get("doc")
+                    .ok_or("trace_doc needs 'doc'")?
+                    .to_string(),
+            }),
+            "metrics" => Ok(Response::MetricsText {
+                text: field_str(&v, "text")?,
+            }),
             "stats" => Ok(Response::Stats {
                 doc: v
                     .get("doc")
@@ -611,6 +679,9 @@ mod tests {
                 spec: JobSpec::bench("l2_lat"),
                 interval: 64,
             },
+            Request::Trace { spec: None },
+            Request::Trace { spec: Some(JobSpec::bench("l2_lat")) },
+            Request::Metrics,
             Request::ServiceStats,
             Request::Shutdown,
         ];
@@ -667,6 +738,16 @@ mod tests {
                     ("dram".to_string(),
                      vec![("1".to_string(), 4)]),
                 ],
+            },
+            Response::TraceDoc {
+                doc: "{\"traceEvents\":[],\"displayTimeUnit\":\"ms\"}"
+                    .to_string(),
+            },
+            Response::MetricsText {
+                text: "# HELP streamsim_server_requests Protocol \
+                       requests handled\n\
+                       streamsim_server_requests 3\n"
+                    .to_string(),
             },
             Response::Stats { doc: doc.to_string() },
             Response::Goodbye { reason: "shutdown".to_string() },
@@ -736,6 +817,22 @@ mod tests {
             ..JobSpec::default()
         };
         assert_eq!(traced.memo_identity(), None);
+    }
+
+    #[test]
+    fn verbs_const_matches_the_parser() {
+        // every documented verb is known to the parser (a missing
+        // payload field is fine — "unknown verb" is not), and the
+        // parser knows no verb the const omits (round-trip test
+        // covers the other direction variant by variant)
+        for verb in VERBS {
+            if let Err(e) =
+                Request::parse(&format!("{{\"verb\":\"{verb}\"}}"))
+            {
+                assert!(!e.contains("unknown verb"), "{verb}: {e}");
+            }
+        }
+        assert_eq!(VERBS.len(), 10);
     }
 
     #[test]

@@ -43,6 +43,7 @@ use crate::config::SimConfig;
 use crate::core::SimtCore;
 use crate::kernel::{KernelInfo, KernelQueue};
 use crate::mem::{partition_of, FlitSchedule, Icnt, MemPartition};
+use crate::obs::{EventKind, Recorder};
 use crate::sim::dispatch::DispatchLedger;
 use crate::sim::parallel::{self, WorkerChunk};
 use crate::sim::profile::{self, JumpStats, PhaseProfile};
@@ -104,6 +105,12 @@ pub struct GpuSim {
     jump: JumpStats,
     /// TBs retired during the last core phase (chunk/core-id order).
     finished_scratch: Vec<crate::core::FinishedTb>,
+    /// Cycle-stamped event recorder (`obs_enabled 1`); `None` means
+    /// zero recording overhead on the byte-compared default paths.
+    /// Every emission point runs on the main thread of the clock
+    /// loop, so the event stream is as thread-count-deterministic as
+    /// the stats it shadows.
+    obs: Option<Recorder>,
     /// Echo kernel launch/exit lines to stdout
     /// ([`GpuSim::set_verbose`]).
     verbose: bool,
@@ -143,6 +150,7 @@ impl GpuSim {
         let sched_resp =
             FlitSchedule::new(cfg.icnt_latency, cfg.icnt_flit_per_cycle);
         let stats = GpuStats::new(cfg.stat_mode);
+        let obs = cfg.obs_enabled.then(Recorder::new);
         Ok(Self {
             cfg,
             chunks,
@@ -163,6 +171,7 @@ impl GpuSim {
             profile: PhaseProfile::default(),
             jump: JumpStats::default(),
             finished_scratch: Vec::new(),
+            obs,
             verbose: false,
         })
     }
@@ -218,6 +227,9 @@ impl GpuSim {
         self.profile = PhaseProfile::default();
         self.jump.reset();
         self.finished_scratch.clear();
+        if let Some(r) = &mut self.obs {
+            r.clear();
+        }
         self.verbose = false;
     }
 
@@ -498,6 +510,10 @@ impl GpuSim {
                 let k = h.min(cap).max(1);
                 if k > 1 {
                     self.jump.record_jump(k);
+                    if let Some(r) = &mut self.obs {
+                        r.record(self.now,
+                                 EventKind::Jump { skipped: k });
+                    }
                     self.now += k;
                     return;
                 }
@@ -591,12 +607,20 @@ impl GpuSim {
             };
             k.launched = true;
             k.launch_cycle = self.now;
-            self.stats.engine.intern_stream(k.stream_id);
+            let slot = self.stats.engine.intern_stream(k.stream_id);
             self.streams.launch(k.stream_id, k.uid);
             self.stats
                 .kernel_times
                 .record_launch(k.stream_id, k.uid, self.now);
             self.stats.kernels_launched += 1;
+            if let Some(r) = &mut self.obs {
+                r.record_intern(self.now, k.stream_id, slot);
+                r.record(self.now, EventKind::KernelLaunch {
+                    stream: k.stream_id,
+                    uid: k.uid,
+                    name: k.name.clone(),
+                });
+            }
             if self.verbose {
                 println!("launching kernel name: {} uid: {} stream: {} \
                           cycle: {}",
@@ -660,6 +684,13 @@ impl GpuSim {
             g.cores[local].accept_tb(uid, stream, slot, tb_idx, trace);
             drop(g);
             self.ledger.note_dispatch(core, warps);
+            if let Some(r) = &mut self.obs {
+                r.record(self.now, EventKind::TbDispatch {
+                    stream,
+                    uid,
+                    core: core as u32,
+                });
+            }
             self.dispatch_rr = (core + 1) % ncores;
             kernel_rr = (ki + 1) % nkernels;
         }
@@ -701,6 +732,12 @@ impl GpuSim {
             .kernel_times
             .record_done(k.stream_id, k.uid, self.now);
         self.stats.kernels_done += 1;
+        if let Some(r) = &mut self.obs {
+            r.record(self.now, EventKind::KernelFinish {
+                stream: k.stream_id,
+                uid: k.uid,
+            });
+        }
 
         self.absorb_shards(chunks);
         let log = stat_print::kernel_exit_block(
@@ -771,6 +808,18 @@ impl GpuSim {
     /// ASCII timeline of the finished simulation.
     pub fn render_timeline(&self, width: usize) -> String {
         timeline::render_gantt(&self.stats.kernel_times, width)
+    }
+
+    /// The recorded observability events, in emission order — empty
+    /// when recording is off (`obs_enabled 0`).
+    pub fn obs_events(&self) -> &[crate::obs::Event] {
+        self.obs.as_ref().map_or(&[], |r| r.events())
+    }
+
+    /// The event recorder itself (capacity / drop-count probes), when
+    /// recording is on.
+    pub fn obs_recorder(&self) -> Option<&Recorder> {
+        self.obs.as_ref()
     }
 }
 
@@ -1118,6 +1167,39 @@ mod tests {
                        "exchange diverged (sharded={sharded}, \
                         threads={threads})");
         }
+    }
+
+    #[test]
+    fn obs_recorder_captures_the_kernel_lifecycle() {
+        let mut cfg = mini_cfg(StatMode::PerStream, false);
+        cfg.obs_enabled = true;
+        let mut sim = GpuSim::new(cfg).unwrap();
+        let w = Workload { kernels: vec![kernel(0, 0x1000, 2)],
+                           memcpys: vec![] };
+        sim.enqueue_workload(&w).unwrap();
+        sim.run().unwrap();
+        let ev = sim.obs_events();
+        let tags: Vec<&str> = ev.iter().map(|e| e.kind.tag()).collect();
+        for want in ["stream_intern", "kernel_launch", "tb_dispatch",
+                     "kernel_finish"] {
+            assert!(tags.contains(&want), "missing {want}: {tags:?}");
+        }
+        // the trace's kernel span is exactly the tracker's
+        let spans = crate::obs::trace::kernel_spans(ev);
+        assert_eq!(spans.len(), 1);
+        let kt = sim.stats().kernel_times.get(0, 1).unwrap();
+        assert_eq!((spans[0].3, spans[0].4),
+                   (kt.start_cycle, kt.end_cycle));
+        // warm reuse starts over with an empty trace
+        sim.reset_for_reuse();
+        assert!(sim.obs_events().is_empty());
+        // and the default config records nothing at all
+        let mut off =
+            GpuSim::new(mini_cfg(StatMode::PerStream, false)).unwrap();
+        off.enqueue_workload(&w).unwrap();
+        off.run().unwrap();
+        assert!(off.obs_recorder().is_none());
+        assert!(off.obs_events().is_empty());
     }
 
     #[test]

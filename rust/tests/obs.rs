@@ -1,0 +1,164 @@
+//! Observability suite: event recording must be a pure *observer* —
+//! turning it on must not change a single exported byte — and what it
+//! records must agree with the simulator's own ground truth.
+//!
+//! Three properties are pinned:
+//!
+//! 1. **Byte-identity.** The full exported stats JSON is identical
+//!    with `obs_enabled` on vs. off, across the `--sim-threads` 1/4 ×
+//!    `tip`/`exact` matrix (the same fingerprint discipline as
+//!    `tests/determinism.rs`).
+//! 2. **Trace validity.** The Chrome `trace_event` document parses
+//!    with the server's own strict JSON parser, has the expected
+//!    top-level shape, and every event carries the required fields.
+//! 3. **Span agreement.** The kernel spans reconstructed from the
+//!    event stream equal the session's `KernelTimeTracker`
+//!    (`gpu_kernel_time`) windows exactly.
+
+use streamsim::api::{SimBuilder, StatMode};
+use streamsim::obs::trace::kernel_spans;
+use streamsim::server::json::{self, Json};
+use streamsim::timeline;
+
+/// Full stats document for `bench` with the given knobs.
+fn fingerprint(bench: &str, mode: StatMode, threads: u32, obs: bool)
+    -> String {
+    let mut session = SimBuilder::preset("minimal")
+        .stat_mode(mode)
+        .sim_threads(threads)
+        .obs_enabled(obs)
+        .bench(bench)
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+    session.into_snapshot().to_json()
+}
+
+#[test]
+fn recording_never_changes_the_exported_bytes() {
+    for bench in ["l2_lat", "bench3"] {
+        for mode in [StatMode::PerStream, StatMode::AggregateExact] {
+            for threads in [1u32, 4] {
+                let off = fingerprint(bench, mode, threads, false);
+                let on = fingerprint(bench, mode, threads, true);
+                assert_eq!(
+                    off, on,
+                    "obs_enabled changed the document: {bench} \
+                     {} threads={threads}",
+                    mode.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn recording_is_off_by_default() {
+    let mut session = SimBuilder::preset("minimal")
+        .bench("l2_lat")
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+    assert!(session.events().is_empty());
+}
+
+#[test]
+fn trace_document_is_valid_and_cycle_stamped() {
+    let mut session = SimBuilder::preset("minimal")
+        .obs_enabled(true)
+        .bench("l2_lat")
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+    let total = session.cycle();
+    let doc = session.trace_json();
+
+    // parses with the server's own strict (no floats, no negatives)
+    // parser — the same bytes the `trace` verb would splice in
+    let v = json::parse(&doc).unwrap();
+    assert_eq!(v.get("displayTimeUnit").and_then(Json::as_str),
+               Some("ms"));
+    let events = v
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    let mut kernel_complete = 0;
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).unwrap();
+        assert!(matches!(ph, "X" | "i" | "M"), "unknown phase {ph}");
+        assert!(e.get("pid").and_then(Json::as_u64).is_some());
+        if ph != "M" {
+            // timestamps are simulated cycles: bounded by the run
+            let ts = e.get("ts").and_then(Json::as_u64).unwrap();
+            assert!(ts <= total, "ts {ts} past end of run {total}");
+        }
+        if ph == "X"
+            && e.get("cat").and_then(Json::as_str) == Some("kernel")
+        {
+            kernel_complete += 1;
+            assert!(e
+                .get("dur")
+                .and_then(Json::as_u64)
+                .is_some_and(|d| d >= 1));
+        }
+    }
+    // every finished kernel shows up as a complete event
+    let snap = session.snapshot();
+    assert_eq!(kernel_complete,
+               snap.kernel_times().finished().len());
+}
+
+#[test]
+fn event_spans_agree_with_the_kernel_time_tracker() {
+    let mut session = SimBuilder::preset("minimal")
+        .obs_enabled(true)
+        .bench("bench3")
+        .build()
+        .unwrap();
+    session.run_to_idle().unwrap();
+
+    let spans = kernel_spans(session.events());
+    let rebuilt = timeline::tracker_from_events(session.events());
+    let snap = session.snapshot();
+    let truth = snap.kernel_times();
+
+    // pairwise: every span matches the tracker's window exactly
+    assert_eq!(spans.len(), truth.finished().len());
+    for (stream, uid, _name, start, end) in &spans {
+        let w = truth
+            .get(*stream, *uid)
+            .unwrap_or_else(|| panic!("kernel {uid} untracked"));
+        assert_eq!((*start, *end), (w.start_cycle, w.end_cycle),
+                   "stream {stream} uid {uid}");
+    }
+    // and the rebuilt tracker is the tracker, wholesale
+    assert_eq!(rebuilt.finished(), truth.finished());
+    assert_eq!(rebuilt.cross_stream_overlaps(),
+               truth.cross_stream_overlaps());
+}
+
+#[test]
+fn interval_metrics_agree_with_the_snapshot_diff() {
+    let mut session = SimBuilder::preset("minimal")
+        .bench("l2_lat")
+        .build()
+        .unwrap();
+    let before = session.snapshot();
+    session.run_to_idle().unwrap();
+    let after = session.snapshot();
+    let diff = after.diff(&before).unwrap();
+    let text = streamsim::obs::metrics::render_interval(
+        after.total_cycles(), &diff);
+    assert_eq!(
+        streamsim::obs::metrics::sample_value(&text,
+                                              "streamsim_cycle"),
+        Some(after.total_cycles()));
+    assert_eq!(
+        streamsim::obs::metrics::sample_value(
+            &text, "streamsim_interval_cycles"),
+        Some(diff.cycles()));
+    assert_eq!(
+        streamsim::obs::metrics::sample_value(
+            &text, "streamsim_interval_kernels_done"),
+        Some(u64::from(diff.kernels_done())));
+}

@@ -1,0 +1,61 @@
+//! Protocol-spec drift guard: `docs/PROTOCOL.md` is the normative
+//! wire spec, and this test keeps it honest against the code. The
+//! spec's `` ### `verb` `` headings must list exactly the verbs in
+//! [`streamsim::server::proto::VERBS`], in the same order — add a
+//! verb without documenting it (or document one that doesn't exist)
+//! and this fails.
+
+use streamsim::server::proto::{Request, MIN_PROTO_VERSION,
+                               PROTO_VERSION, VERBS};
+
+const SPEC: &str = include_str!("../../docs/PROTOCOL.md");
+
+/// The verb headings, in document order.
+fn documented_verbs() -> Vec<String> {
+    SPEC.lines()
+        .filter_map(|l| {
+            let rest = l.strip_prefix("### `")?;
+            let (verb, tail) = rest.split_once('`')?;
+            tail.is_empty().then(|| verb.to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn spec_headings_match_the_verb_list_exactly() {
+    assert_eq!(documented_verbs(), VERBS.to_vec(),
+               "docs/PROTOCOL.md verb headings drifted from \
+                proto::VERBS");
+}
+
+#[test]
+fn every_verb_heading_is_parseable_as_a_verb() {
+    // the parser's error message enumerates nothing, so probe it:
+    // a bare line with only the verb must at least be *recognized*
+    // (it may still want more fields — that's a different error
+    // than "unknown verb")
+    for verb in VERBS {
+        let line = format!("{{\"verb\":\"{verb}\"}}");
+        if let Err(msg) = Request::parse(&line) {
+            assert!(!msg.contains("unknown verb"),
+                    "verb {verb} from VERBS not recognized: {msg}");
+        }
+    }
+}
+
+#[test]
+fn spec_states_the_current_versions() {
+    assert!(
+        SPEC.contains(&format!("protocol v{PROTO_VERSION}")),
+        "spec header must state the current protocol version");
+    assert!(
+        SPEC.contains(&format!(
+            "`{MIN_PROTO_VERSION} ..= {PROTO_VERSION}`",
+        )) || SPEC
+            .contains(&format!("`{MIN_PROTO_VERSION}..={PROTO_VERSION}`")),
+        "spec must state the accepted hello version range");
+    let schema = u64::from(streamsim::api::SCHEMA_VERSION);
+    assert!(
+        SPEC.contains(&format!("schema v{schema}")),
+        "spec header must state the current schema version");
+}

@@ -56,6 +56,14 @@
 #                              #   for the idle_tail scenario (where
 #                              #   the active-set win should show up
 #                              #   as a shrunken core_phase share)
+#   scripts/ci.sh docs         # + documentation gate: cargo doc with
+#                              #   warnings denied (missing_docs is
+#                              #   crate-level warn), every docs/*.md
+#                              #   and doc file referenced from the
+#                              #   README must exist, and the
+#                              #   protocol-spec drift test must pass
+#                              #   (docs/PROTOCOL.md verb headings ==
+#                              #   proto::VERBS)
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -356,6 +364,48 @@ if [[ "${1:-}" == "profile" ]]; then
         "$BIN" run --bench idle_tail --preset sm7_titanv \
             -o idle_skip "$skip" | grep -A 8 'phase profile'
     done
+fi
+
+if [[ "${1:-}" == "docs" ]]; then
+    echo "== docs: cargo doc --no-deps (warnings denied) =="
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+    echo "== docs: README / docs/ link integrity =="
+    python3 - "$ROOT" <<'EOF'
+import os, re, sys
+root = sys.argv[1]
+# every docs/*.md must be reachable from the README, and every
+# local .md the README (or a docs page) references must exist
+missing, pages = [], {}
+for base, name in [(root, "README.md")] + [
+        (os.path.join(root, "docs"), f)
+        for f in sorted(os.listdir(os.path.join(root, "docs")))
+        if f.endswith(".md")]:
+    path = os.path.join(base, name)
+    pages[path] = open(path).read()
+readme = pages[os.path.join(root, "README.md")]
+for f in sorted(os.listdir(os.path.join(root, "docs"))):
+    if f.endswith(".md") and ("docs/" + f) not in readme:
+        missing.append("docs/%s is not linked from README.md" % f)
+for path, text in pages.items():
+    for target in re.findall(r"\]\(([^)#]+\.md)\)", text):
+        if target.startswith("http"):
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            missing.append("%s links to missing %s"
+                           % (os.path.relpath(path, root), target))
+if missing:
+    print("DOC LINK FAILURES:")
+    for m in missing:
+        print("  " + m)
+    sys.exit(1)
+print("doc links OK (%d pages checked)" % len(pages))
+EOF
+
+    echo "== docs: protocol-spec drift test =="
+    cargo test -q --test protocol_doc
 fi
 
 if [[ "${1:-}" == "bench" ]]; then
